@@ -1,0 +1,54 @@
+//! The paper's Android scenario (§4.1, Table 2b): a mixed cohort checked
+//! out of an AWS-Device-Farm-style pool (Pixel 4/3/2, Galaxy Tab S6/S4)
+//! trains the Head model on top of a frozen Base model — the TFLite Model
+//! Personalization split of Figure 2. Only head parameters ever travel.
+//!
+//! Sweeps the cohort size C like Table 2b and prints the paper-style rows.
+//!
+//! ```bash
+//! cargo run --release --example android_devicefarm
+//! ```
+
+use flowrs::config::ExperimentConfig;
+use flowrs::device::DeviceFarm;
+use flowrs::metrics::{paper_row, Table};
+use flowrs::runtime::Runtime;
+use flowrs::sim;
+
+fn main() -> flowrs::Result<()> {
+    let runtime = Runtime::load_default()?;
+    let rounds: u64 = std::env::var("ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+
+    // Check devices out of the farm the way the paper did.
+    let mut farm = DeviceFarm::aws_android();
+    println!("# AWS device farm checkout order:");
+    for (i, d) in farm.checkout_n(10).iter().enumerate() {
+        println!("#   slot {i}: {} ({})", d.name, d.os);
+    }
+
+    let mut table = Table::new(
+        &format!("Android head-model training, E=5, {rounds} rounds (paper Table 2b shape)"),
+        &["Clients (C)", "Accuracy", "Time (min)", "Energy (kJ)"],
+    );
+    for c in [4usize, 7, 10] {
+        let cfg = ExperimentConfig::default()
+            .named(&format!("android_c{c}"))
+            .model("head") // devices default to the AWS farm mix
+            .clients(c)
+            .rounds(rounds)
+            .epochs(5)
+            .lr(0.1)
+            .data(160, 100)
+            .seed(20260710);
+        let report = sim::run_experiment(&cfg, &runtime)?;
+        table.row(paper_row(&c.to_string(), &report));
+    }
+    print!("{}", table.render());
+    println!(
+        "expected shape: accuracy rises with C (more data), energy rises ~linearly with C"
+    );
+    Ok(())
+}

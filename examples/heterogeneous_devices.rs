@@ -1,0 +1,91 @@
+//! Computational heterogeneity and the τ cutoff (paper §5, Table 3).
+//!
+//! Runs the same CIFAR workload on (a) TX2 GPUs, (b) TX2 CPUs (1.27×
+//! slower), and (c/d) CPUs under per-processor cutoffs — demonstrating the
+//! straggler problem and the paper's partial-results fix.
+//!
+//! ```bash
+//! cargo run --release --example heterogeneous_devices
+//! ```
+
+use flowrs::config::{ExperimentConfig, StrategyConfig};
+use flowrs::metrics::Table;
+use flowrs::runtime::Runtime;
+use flowrs::sim;
+
+fn main() -> flowrs::Result<()> {
+    let runtime = Runtime::load_default()?;
+    let rounds: u64 = std::env::var("ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(6);
+    let epochs = 4i64;
+
+    // τ chosen like the paper: the GPU's own round compute time becomes
+    // the CPU's deadline (plus a slightly looser variant).
+    let cost = flowrs::sim::cost::CostModel::default();
+    let gpu = flowrs::device::profiles::by_name("jetson_tx2_gpu")?;
+    let steps_per_epoch = (256 / 32) as u64;
+    let tau_gpu_equiv = cost.compute(gpu, epochs as u64 * steps_per_epoch).time_s;
+    let tau_loose = tau_gpu_equiv * 1.12;
+
+    let base = |name: &str| {
+        ExperimentConfig::default()
+            .named(name)
+            .model("cifar_cnn")
+            .clients(4)
+            .rounds(rounds)
+            .epochs(epochs)
+            .lr(0.06)
+            .data(256, 100)
+            .seed(20260710)
+    };
+
+    let configs: Vec<(String, ExperimentConfig)> = vec![
+        ("GPU (τ=0)".into(), base("gpu").devices(&["jetson_tx2_gpu"])),
+        ("CPU (τ=0)".into(), base("cpu").devices(&["jetson_tx2_cpu"])),
+        (
+            format!("CPU (τ={:.1}s)", tau_loose),
+            base("cpu_tau_loose")
+                .devices(&["jetson_tx2_cpu"])
+                .strategy(StrategyConfig::FedAvgCutoff {
+                    taus: vec![("jetson_tx2_cpu".into(), tau_loose)],
+                    default_tau_s: None,
+                }),
+        ),
+        (
+            format!("CPU (τ={:.1}s)", tau_gpu_equiv),
+            base("cpu_tau_gpu")
+                .devices(&["jetson_tx2_cpu"])
+                .strategy(StrategyConfig::FedAvgCutoff {
+                    taus: vec![("jetson_tx2_cpu".into(), tau_gpu_equiv)],
+                    default_tau_s: None,
+                }),
+        ),
+    ];
+
+    let mut table = Table::new(
+        &format!("Heterogeneity & τ cutoff, C=4, E={epochs}, {rounds} rounds (Table 3 shape)"),
+        &["config", "accuracy", "time (min)", "vs GPU", "truncated fits"],
+    );
+    let mut gpu_time = None;
+    for (label, cfg) in configs {
+        let report = sim::run_experiment(&cfg, &runtime)?;
+        let (acc, mins, _) = report.paper_metrics();
+        let truncated: usize = report.history.rounds.iter().map(|r| r.truncated_clients).sum();
+        let gpu_t = *gpu_time.get_or_insert(mins);
+        table.row(vec![
+            label,
+            format!("{acc:.3}"),
+            format!("{mins:.2}"),
+            format!("{:.2}x", mins / gpu_t),
+            truncated.to_string(),
+        ]);
+    }
+    print!("{}", table.render());
+    println!(
+        "expected shape: CPU 1.27x slower than GPU; τ = GPU-equivalent restores 1.0x\n\
+         at a small accuracy cost (partial local epochs)."
+    );
+    Ok(())
+}

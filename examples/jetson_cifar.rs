@@ -1,0 +1,86 @@
+//! **End-to-end driver** (DESIGN.md §5): the paper's Jetson CIFAR workload.
+//!
+//! Ten simulated Nvidia Jetson TX2 clients federated-train the CIFAR CNN
+//! for a configurable number of rounds (default 20 ≈ several hundred
+//! aggregate local steps), logging the full loss curve, accuracy, and the
+//! modeled system costs per round. The run recorded in EXPERIMENTS.md §E2E
+//! used the defaults.
+//!
+//! ```bash
+//! cargo run --release --example jetson_cifar            # full run
+//! ROUNDS=5 cargo run --release --example jetson_cifar   # shorter
+//! ```
+//! Writes the per-round history to `reports/jetson_cifar.csv`.
+
+use flowrs::config::ExperimentConfig;
+use flowrs::metrics::write_report;
+use flowrs::runtime::Runtime;
+use flowrs::sim;
+
+fn env_or<T: std::str::FromStr>(key: &str, default: T) -> T {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn main() -> flowrs::Result<()> {
+    let rounds: u64 = env_or("ROUNDS", 20);
+    let epochs: i64 = env_or("EPOCHS", 2);
+    let runtime = Runtime::load_default()?;
+
+    let cfg = ExperimentConfig::default()
+        .named("jetson_cifar_e2e")
+        .model("cifar_cnn")
+        .clients(10)
+        .rounds(rounds)
+        .epochs(epochs)
+        .lr(0.06)
+        .data(256, 100)
+        .devices(&["jetson_tx2_gpu"])
+        .seed(20260710);
+
+    println!(
+        "# jetson_cifar end-to-end: C=10 TX2 clients, E={epochs}, {rounds} rounds, \
+         {} train examples/client",
+        cfg.train_per_client
+    );
+    println!("# {} total local steps will execute through the PJRT runtime", {
+        let steps_per_epoch = (cfg.train_per_client / 32) as u64;
+        rounds * 10 * epochs as u64 * steps_per_epoch
+    });
+
+    let t0 = std::time::Instant::now();
+    let report = sim::run_experiment(&cfg, &runtime)?;
+    let wall = t0.elapsed();
+
+    println!("\n# loss curve (train / eval / accuracy per round)");
+    for r in &report.history.rounds {
+        let bar_len = (r.accuracy * 40.0) as usize;
+        println!(
+            "round {:>3}  train={:.4}  eval={:.4}  acc={:.4} |{}{}|",
+            r.round,
+            r.train_loss,
+            r.eval_loss,
+            r.accuracy,
+            "#".repeat(bar_len),
+            " ".repeat(40 - bar_len),
+        );
+    }
+
+    let (acc, mins, kj) = report.paper_metrics();
+    println!("\n# summary");
+    println!("final accuracy:        {acc:.4}");
+    println!("best accuracy:         {:.4}", report.history.best_accuracy());
+    println!("modeled time:          {mins:.2} min (paper-scale virtual clock)");
+    println!("modeled energy:        {kj:.2} kJ across the cohort");
+    println!("wallclock:             {:.1} s on this host", wall.as_secs_f64());
+    println!("PJRT executions:       {}", runtime.executions());
+
+    write_report(
+        std::path::Path::new("reports/jetson_cifar.csv"),
+        &report.history.to_csv(),
+    )?;
+    println!("wrote reports/jetson_cifar.csv");
+    Ok(())
+}

@@ -1,0 +1,182 @@
+"""AOT compiler: lower every L2 entry point to HLO text + manifest.
+
+This is the only place Python touches the pipeline. ``make artifacts`` runs
+it once; afterwards the Rust coordinator is self-contained — it loads the
+HLO text through the ``xla`` crate's PJRT CPU client and executes train /
+eval / feature-extraction / aggregation steps natively.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` 0.1.6 crate binds) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+AGG_SLOTS = 16  # fixed cohort width of the aggregation artifacts
+TRAIN_BATCH = 32
+EVAL_BATCH = 100
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned, 32-bit safe)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _shape_of(s):
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+def lower_entry(name, fn, in_specs, out_dir, manifest):
+    lowered = jax.jit(fn).lower(*in_specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    path = out_dir / fname
+    path.write_text(text)
+    outs = lowered.out_info
+    out_specs = jax.tree_util.tree_leaves(outs)
+    manifest["artifacts"][name] = {
+        "file": fname,
+        "inputs": [_shape_of(s) for s in in_specs],
+        "outputs": [_shape_of(s) for s in out_specs],
+        "sha256": hashlib.sha256(text.encode()).hexdigest(),
+    }
+    print(f"  {name}: {len(text)} chars -> {fname}")
+
+
+def export_model(model, out_dir, manifest):
+    layout = M.LAYOUTS[model]
+    p = M.param_count(layout)
+    if model == "cifar_cnn":
+        x_train = spec((TRAIN_BATCH,) + M.CIFAR_INPUT)
+        x_eval = spec((EVAL_BATCH,) + M.CIFAR_INPUT)
+    else:
+        x_train = spec((TRAIN_BATCH, M.HEAD_FEATURES))
+        x_eval = spec((EVAL_BATCH, M.HEAD_FEATURES))
+    ps = spec((p,))
+    y_train = spec((TRAIN_BATCH,), I32)
+    y_eval = spec((EVAL_BATCH,), I32)
+    scalar = spec(())
+
+    lower_entry(
+        f"{model}_train",
+        lambda pp, x, y, lr: M.train_step(model, pp, x, y, lr),
+        [ps, x_train, y_train, scalar],
+        out_dir,
+        manifest,
+    )
+    lower_entry(
+        f"{model}_train_prox",
+        lambda pp, gp, x, y, lr, mu: M.train_step_prox(model, pp, gp, x, y, lr, mu),
+        [ps, ps, x_train, y_train, scalar, scalar],
+        out_dir,
+        manifest,
+    )
+    lower_entry(
+        f"{model}_eval",
+        lambda pp, x, y: M.eval_step(model, pp, x, y),
+        [ps, x_eval, y_eval],
+        out_dir,
+        manifest,
+    )
+    from .kernels import fedavg_aggregate
+
+    lower_entry(
+        f"{model}_agg",
+        lambda s, w: (fedavg_aggregate(s, w),),
+        [spec((AGG_SLOTS, p)), spec((AGG_SLOTS,))],
+        out_dir,
+        manifest,
+    )
+
+    init = np.asarray(M.init_params(model, seed=20260710), np.float32)
+    init_file = f"{model}_init.bin"
+    (out_dir / init_file).write_bytes(init.tobytes())
+
+    entry = {
+        "param_count": p,
+        "layout": [[name, list(shape)] for name, shape in layout],
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "agg_slots": AGG_SLOTS,
+        "init_file": init_file,
+        "train": f"{model}_train.hlo.txt",
+        "train_prox": f"{model}_train_prox.hlo.txt",
+        "eval": f"{model}_eval.hlo.txt",
+        "agg": f"{model}_agg.hlo.txt",
+    }
+    if model == "cifar_cnn":
+        entry.update(input_shape=list(M.CIFAR_INPUT), num_classes=M.CIFAR_CLASSES)
+    else:
+        entry.update(
+            input_shape=[M.HEAD_FEATURES],
+            num_classes=M.HEAD_CLASSES,
+            base_input=M.BASE_INPUT,
+            feature_dim=M.HEAD_FEATURES,
+            features_train=f"base_features_b{TRAIN_BATCH}.hlo.txt",
+            features_eval=f"base_features_b{EVAL_BATCH}.hlo.txt",
+        )
+    manifest["models"][model] = entry
+
+
+def export_base(out_dir, manifest):
+    """Frozen base model artifacts (batch sizes for train + eval paths)."""
+    for b in (TRAIN_BATCH, EVAL_BATCH):
+        lower_entry(
+            f"base_features_b{b}",
+            lambda x, w, bb: (M.base_features(x, w, bb),),
+            [
+                spec((b, M.BASE_INPUT)),
+                spec((M.BASE_INPUT, M.HEAD_FEATURES)),
+                spec((M.HEAD_FEATURES,)),
+            ],
+            out_dir,
+            manifest,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=["cifar_cnn", "head"])
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"version": 1, "models": {}, "artifacts": {}}
+    for model in args.models:
+        print(f"exporting {model} ...")
+        export_model(model, out_dir, manifest)
+    print("exporting frozen base model ...")
+    export_base(out_dir, manifest)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

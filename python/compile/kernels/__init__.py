@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the on-device FL workloads (see DESIGN.md par.3, par.7).
+
+Public surface re-exported here; ``ref`` holds the pure-jnp oracles.
+"""
+
+from . import ref  # noqa: F401
+from .fedavg import fedavg_aggregate  # noqa: F401
+from .fused_linear import fused_linear, matmul  # noqa: F401
+from .sgd import sgd_update  # noqa: F401
+from .softmax_xent import softmax_xent  # noqa: F401

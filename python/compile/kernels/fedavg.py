@@ -1,0 +1,48 @@
+"""Pallas FedAvg aggregation kernel: weighted sum of K client parameter
+vectors.
+
+The Flower server's aggregation hot-path. Rather than materializing
+``weights[:, None] * stacked`` (a K×P temporary), each grid step streams a
+(K, block) panel of the stacked client updates through VMEM and contracts it
+against the K-vector of weights on the MXU path — the output block is the
+only thing written back.
+
+The caller (Rust coordinator via the AOT artifact, or the Python tests)
+pre-normalizes weights: clients that did not participate get weight 0, so a
+fixed K_MAX-slot artifact serves any cohort size ≤ K_MAX.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+_BLOCK = 32768  # f32 lanes per grid step; K_MAX * _BLOCK * 4B stays well under VMEM
+
+
+def _agg_kernel(w_ref, s_ref, o_ref):
+    # [K] . [K, block] -> [block]
+    o_ref[...] = jnp.dot(
+        w_ref[...], s_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def fedavg_aggregate(stacked, weights):
+    """stacked:[K,P] f32, weights:[K] f32 (pre-normalized) -> [P] f32."""
+    k, p = stacked.shape
+    pad = (-p) % _BLOCK
+    ss = jnp.pad(stacked, ((0, 0), (0, pad)))
+    n = ss.shape[1]
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(n // _BLOCK,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, _BLOCK), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=INTERPRET,
+    )(weights, ss)
+    return out[:p]

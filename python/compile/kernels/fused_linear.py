@@ -1,0 +1,192 @@
+"""Pallas fused dense layer: out = act(x @ w + b), with a custom VJP.
+
+This is the on-device compute hot-spot of the paper's workloads (the dense
+layers of the CIFAR CNN and the transfer-learning head model). The paper's
+clients ran these on mobile GPUs/CPUs via TFLite/PyTorch; here the layer is
+re-thought for a TPU-style memory hierarchy:
+
+  * the forward kernel tiles the (B, N) output into VMEM-resident blocks via
+    ``BlockSpec``; each grid step loads an (bm, K) activation panel and a
+    (K, bn) weight panel, runs the matmul on the MXU path
+    (``preferred_element_type=f32``), and fuses bias-add + ReLU into the
+    epilogue so the pre-activation never round-trips to HBM;
+  * the backward pass is three Pallas kernels (dx, dw, db) sharing a masked
+    cotangent, wired up through ``jax.custom_vjp`` so the layer is usable
+    inside ``jax.grad`` when the L2 train step is lowered.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin used by the
+Rust runtime cannot execute Mosaic custom-calls, and interpret mode lowers to
+plain HLO that compiles anywhere (see DESIGN.md §7).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+# VMEM budget heuristics (f32): keep one grid step's operand panels under
+# ~4 MiB so a double-buffered schedule fits the ~16 MiB VMEM of a TPU core.
+_DEF_BM = 128
+_DEF_BN = 256
+_VMEM_BUDGET = 4 * 1024 * 1024  # bytes per grid step
+
+
+def _block(dim, preferred):
+    """Largest divisor of `dim` that is <= preferred (keeps BlockSpecs exact)."""
+    if dim <= preferred:
+        return dim
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def _block_n(bm, k, n):
+    """Pick the output-column block: the largest divisor of `n` (≤ _DEF_BN)
+    whose grid step stays within the VMEM budget.
+
+    Perf note (EXPERIMENTS.md §Perf): the first cut used a flat
+    ``_block(n, 256)``, which put the (100, 3072)x(3072, 256) featurizer
+    tile at 4.27 MiB — over budget. Shrinking bn until the step fits costs
+    nothing on the MXU (k is the temporal axis) and restores double
+    buffering.
+    """
+    bn = _block(n, _DEF_BN)
+    while bn > 1:
+        step_bytes = 4 * (bm * k + k * bn + bn + bm * bn)
+        if step_bytes <= _VMEM_BUDGET:
+            break
+        # next smaller divisor of n
+        bn = _block(n, bn - 1)
+    return bn
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    if relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+def _colsum_kernel(g_ref, o_ref):
+    o_ref[...] = jnp.sum(g_ref[...], axis=0)
+
+
+def _mask_kernel(g_ref, pre_ref, o_ref):
+    o_ref[...] = g_ref[...] * (pre_ref[...] > 0.0).astype(g_ref.dtype)
+
+
+def _fwd_pallas(x, w, b, relu, save_pre):
+    bsz, k = x.shape
+    _, n = w.shape
+    bm = _block(bsz, _DEF_BM)
+    bn = _block_n(bm, k, n)
+    grid = (bsz // bm, n // bn)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, relu=relu and not save_pre),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w, b)
+    return out
+
+
+def matmul(a, b):
+    """Tiled Pallas matmul (f32 accumulate). Used by the backward kernels."""
+    m, k = a.shape
+    _, n = b.shape
+    bm = _block(m, _DEF_BM)
+    bn = _block_n(bm, k, n)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(a, b)
+
+
+def _masked_cotangent(g, pre, relu):
+    if not relu:
+        return g
+    bsz, n = g.shape
+    bm = _block(bsz, _DEF_BM)
+    bn = _block(n, _DEF_BN)
+    return pl.pallas_call(
+        _mask_kernel,
+        grid=(bsz // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
+        interpret=INTERPRET,
+    )(g, pre)
+
+
+def _colsum(g):
+    bsz, n = g.shape
+    bn = _block(n, _DEF_BN)
+    return pl.pallas_call(
+        _colsum_kernel,
+        grid=(n // bn,),
+        in_specs=[pl.BlockSpec((bsz, bn), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((bn,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=INTERPRET,
+    )(g)
+
+
+def _check_activation(activation):
+    if activation not in ("relu", "none"):
+        raise ValueError(f"unknown activation {activation!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_linear(x, w, b, activation="relu"):
+    """act(x @ w + b) with Pallas fwd/bwd. x:[B,K] w:[K,N] b:[N] -> [B,N]."""
+    _check_activation(activation)
+    relu = activation == "relu"
+    return _fwd_pallas(x, w, b, relu, save_pre=False)
+
+
+def _fused_linear_fwd(x, w, b, activation):
+    _check_activation(activation)
+    relu = activation == "relu"
+    # Forward saves the *pre-activation* so the ReLU mask is exact; the kernel
+    # emits pre (relu applied outside when saving residuals).
+    pre = _fwd_pallas(x, w, b, relu=False, save_pre=True)
+    out = jnp.maximum(pre, 0.0) if relu else pre
+    return out, (x, w, pre)
+
+
+def _fused_linear_bwd(activation, res, g):
+    x, w, pre = res
+    relu = activation == "relu"
+    gm = _masked_cotangent(g, pre, relu)
+    dx = matmul(gm, w.T)
+    dw = matmul(x.T, gm)
+    db = _colsum(gm)
+    return dx, dw, db
+
+
+fused_linear.defvjp(_fused_linear_fwd, _fused_linear_bwd)

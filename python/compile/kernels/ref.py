@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth the Pallas implementations
+are tested against (pytest + hypothesis in python/tests/). Keep these
+boring and obviously correct: no tiling, no fusion, no cleverness.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_linear(x, w, b, activation="relu"):
+    """out = act(x @ w + b). x:[B,K] w:[K,N] b:[N] -> [B,N]."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    elif activation != "none":
+        raise ValueError(f"unknown activation {activation!r}")
+    return out
+
+
+def fused_linear_vjp(x, w, b, g, activation="relu"):
+    """Reference gradients of fused_linear wrt (x, w, b) given cotangent g."""
+    pre = jnp.dot(x, w, preferred_element_type=jnp.float32) + b
+    if activation == "relu":
+        g = g * (pre > 0.0).astype(g.dtype)
+    dx = jnp.dot(g, w.T, preferred_element_type=jnp.float32)
+    dw = jnp.dot(x.T, g, preferred_element_type=jnp.float32)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+def matmul(a, b):
+    """Plain a @ b in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy. logits:[B,C], labels:[B] int32 -> scalar."""
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def softmax_xent_grad(logits, labels):
+    """d(mean xent)/d(logits) = (softmax - onehot) / B."""
+    b, c = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, c, dtype=logits.dtype)
+    return (probs - onehot) / b
+
+
+def sgd_update(params, grads, lr):
+    """params - lr * grads, elementwise over flat vectors."""
+    return params - lr * grads
+
+
+def fedavg_aggregate(stacked, weights):
+    """Weighted sum of K stacked parameter vectors.
+
+    stacked:[K,P], weights:[K] (pre-normalized by the caller) -> [P].
+    """
+    return jnp.einsum("k,kp->p", weights, stacked)

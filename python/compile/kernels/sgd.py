@@ -1,0 +1,42 @@
+"""Pallas elementwise SGD parameter update over the flat parameter vector.
+
+``p_new = p - lr * g`` streamed through VMEM in fixed-size blocks. The flat
+vector length is arbitrary (whatever the model's layout produces), so the
+wrapper pads to a block multiple and slices the result — the pad lanes
+compute garbage that is discarded, never read.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+_BLOCK = 65536  # 256 KiB of f32 per operand per grid step
+
+
+def _sgd_kernel(p_ref, g_ref, lr_ref, o_ref):
+    o_ref[...] = p_ref[...] - lr_ref[0] * g_ref[...]
+
+
+def sgd_update(params, grads, lr):
+    """params:[P] f32, grads:[P] f32, lr: scalar f32 -> [P]."""
+    (p,) = params.shape
+    lr_vec = jnp.asarray(lr, jnp.float32).reshape((1,))
+    pad = (-p) % _BLOCK
+    pp = jnp.pad(params, (0, pad))
+    gg = jnp.pad(grads, (0, pad))
+    n = pp.shape[0]
+    out = pl.pallas_call(
+        _sgd_kernel,
+        grid=(n // _BLOCK,),
+        in_specs=[
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((_BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=INTERPRET,
+    )(pp, gg, lr_vec)
+    return out[:p]

@@ -1,0 +1,73 @@
+"""Pallas fused softmax cross-entropy loss with a custom VJP.
+
+Forward computes the mean cross-entropy of logits [B, C] against integer
+labels [B] in one VMEM-resident pass (row max, exp, logsumexp, label pick via
+an iota comparison — no gather, which keeps the kernel TPU-friendly).
+Backward is the classic ``(softmax - onehot) / B`` as a second kernel.
+
+``interpret=True`` everywhere — see fused_linear.py for why.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _xent_fwd_kernel(logits_ref, labels_ref, loss_ref):
+    logits = logits_ref[...]
+    labels = labels_ref[...]
+    b, c = logits.shape
+    row_max = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - row_max
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + row_max[:, 0]
+    # onehot pick without gather: compare a column iota against the labels.
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1)
+    onehot = (cols == labels[:, None]).astype(jnp.float32)
+    picked = jnp.sum(logits * onehot, axis=-1)
+    loss_ref[...] = (lse - picked) / b
+
+
+def _xent_bwd_kernel(logits_ref, labels_ref, o_ref):
+    logits = logits_ref[...]
+    labels = labels_ref[...]
+    b, c = logits.shape
+    row_max = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - row_max)
+    probs = e / jnp.sum(e, axis=-1, keepdims=True)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (b, c), 1)
+    onehot = (cols == labels[:, None]).astype(jnp.float32)
+    o_ref[...] = (probs - onehot) / b
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy. logits:[B,C] f32, labels:[B] i32 -> scalar."""
+    b, c = logits.shape
+    per_row = pl.pallas_call(
+        _xent_fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=INTERPRET,
+    )(logits, labels)
+    return jnp.sum(per_row)
+
+
+def _softmax_xent_fwd(logits, labels):
+    return softmax_xent(logits, labels), (logits, labels)
+
+
+def _softmax_xent_bwd(res, g):
+    logits, labels = res
+    b, c = logits.shape
+    dlogits = pl.pallas_call(
+        _xent_bwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.float32),
+        interpret=INTERPRET,
+    )(logits, labels)
+    return dlogits * g, None
+
+
+softmax_xent.defvjp(_softmax_xent_fwd, _softmax_xent_bwd)

@@ -1,0 +1,197 @@
+"""L2: the paper's on-device training workloads as JAX fwd/bwd train steps.
+
+Two workloads, matching the paper's evaluation:
+
+* ``cifar_cnn`` — stands in for the ResNet-18-on-CIFAR-10 workload trained on
+  Nvidia Jetson TX2 clients (Tables 2a, 3). A compact conv net: two
+  conv+pool stages, then two Pallas ``fused_linear`` layers. (ResNet-18 at
+  11M params is not tractable under interpret-mode CPU XLA for the full
+  federated sweeps; see DESIGN.md §2 for the substitution note.)
+
+* ``head`` — the Android transfer-learning workload (Table 2b): a frozen
+  "MobileNetV2" base model producing 1280-d features (the base runs as its
+  own artifact, ``base_features``; its weights are inputs, supplied by the
+  Rust side) and a trainable 2-layer DNN head, exactly the paper's
+  Base/Head split from Figure 2.
+
+Every entry point here is a pure function over a *flat* f32 parameter
+vector — the Flower Protocol ships parameters as opaque byte tensors, so the
+Rust coordinator never needs to know the pytree structure. The layout
+(name, shape, offset) is emitted into ``artifacts/manifest.json`` by
+``aot.py``.
+
+All dense compute routes through the L1 Pallas kernels
+(``fused_linear``, ``softmax_xent``, ``sgd_update``).
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_linear, sgd_update, softmax_xent
+
+# ---------------------------------------------------------------------------
+# Parameter layouts
+# ---------------------------------------------------------------------------
+
+CIFAR_LAYOUT = (
+    ("conv1_w", (3, 3, 3, 16)),
+    ("conv1_b", (16,)),
+    ("conv2_w", (3, 3, 16, 32)),
+    ("conv2_b", (32,)),
+    ("dense1_w", (2048, 64)),
+    ("dense1_b", (64,)),
+    ("dense2_w", (64, 10)),
+    ("dense2_b", (10,)),
+)
+
+HEAD_LAYOUT = (
+    ("dense1_w", (1280, 64)),
+    ("dense1_b", (64,)),
+    ("dense2_w", (64, 31)),
+    ("dense2_b", (31,)),
+)
+
+CIFAR_INPUT = (32, 32, 3)
+CIFAR_CLASSES = 10
+HEAD_FEATURES = 1280
+HEAD_CLASSES = 31
+BASE_INPUT = 3072  # flattened "office" image fed to the frozen base model
+
+LAYOUTS = {"cifar_cnn": CIFAR_LAYOUT, "head": HEAD_LAYOUT}
+
+
+def param_count(layout):
+    return sum(math.prod(shape) for _, shape in layout)
+
+
+def unflatten(layout, flat):
+    """Split a flat [P] vector into the layout's named tensors."""
+    params = {}
+    off = 0
+    for name, shape in layout:
+        n = math.prod(shape)
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    assert off == flat.shape[0], (off, flat.shape)
+    return params
+
+
+def flatten(layout, params):
+    return jnp.concatenate([params[name].ravel() for name, _ in layout])
+
+
+def init_params(model, seed=0):
+    """He-init the trainable parameters; returns the flat vector."""
+    layout = LAYOUTS[model]
+    key = jax.random.PRNGKey(seed)
+    parts = []
+    for name, shape in layout:
+        key, sub = jax.random.split(key)
+        if name.endswith("_b"):
+            parts.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = math.prod(shape[:-1])
+            scale = math.sqrt(2.0 / fan_in)
+            parts.append(scale * jax.random.normal(sub, shape, jnp.float32).ravel())
+    return jnp.concatenate([p.ravel() for p in parts])
+
+
+# ---------------------------------------------------------------------------
+# cifar_cnn forward
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride=1):
+    out = jax.lax.conv_general_dilated(
+        x, w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b[None, None, None, :]
+
+
+def _max_pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cifar_logits(flat_params, x):
+    """x: [B, 32, 32, 3] -> logits [B, 10]."""
+    p = unflatten(CIFAR_LAYOUT, flat_params)
+    h = jax.nn.relu(_conv(x, p["conv1_w"], p["conv1_b"]))
+    h = _max_pool2(h)  # [B,16,16,16]
+    h = jax.nn.relu(_conv(h, p["conv2_w"], p["conv2_b"]))
+    h = _max_pool2(h)  # [B,8,8,32]
+    h = h.reshape(h.shape[0], -1)  # [B, 2048]
+    h = fused_linear(h, p["dense1_w"], p["dense1_b"], "relu")
+    return fused_linear(h, p["dense2_w"], p["dense2_b"], "none")
+
+
+# ---------------------------------------------------------------------------
+# head (Android transfer-learning) forward
+# ---------------------------------------------------------------------------
+
+
+def head_logits(flat_params, feats):
+    """feats: [B, 1280] (from the frozen base model) -> logits [B, 31]."""
+    p = unflatten(HEAD_LAYOUT, flat_params)
+    h = fused_linear(feats, p["dense1_w"], p["dense1_b"], "relu")
+    return fused_linear(h, p["dense2_w"], p["dense2_b"], "none")
+
+
+def base_features(x, base_w, base_b):
+    """Frozen "MobileNetV2" base: x:[B,3072] -> features [B,1280].
+
+    The base weights are *inputs* (frozen — never trained, never aggregated),
+    exactly the TFLite Model Personalization split of the paper's Figure 2.
+    """
+    return fused_linear(x, base_w, base_b, "relu")
+
+
+_LOGITS = {"cifar_cnn": cifar_logits, "head": head_logits}
+
+
+# ---------------------------------------------------------------------------
+# Train / eval steps (the AOT entry points)
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(model, flat_params, x, y):
+    logits = _LOGITS[model](flat_params, x)
+    return softmax_xent(logits, y)
+
+
+def train_step(model, flat_params, x, y, lr):
+    """One SGD step. Returns (new_flat_params, loss)."""
+    loss, grads = jax.value_and_grad(functools.partial(loss_fn, model))(
+        flat_params, x, y
+    )
+    return sgd_update(flat_params, grads, lr), loss
+
+
+def train_step_prox(model, flat_params, global_params, x, y, lr, mu):
+    """FedProx local step: adds the mu/2 * ||w - w_global||^2 proximal term.
+
+    Used by the FedProx strategy and by partial-result (tau-cutoff) runs where
+    clients may drift for different numbers of steps.
+    """
+
+    def prox_loss(p):
+        diff = p - global_params
+        return loss_fn(model, p, x, y) + 0.5 * mu * jnp.vdot(diff, diff)
+
+    loss, grads = jax.value_and_grad(prox_loss)(flat_params)
+    return sgd_update(flat_params, grads, lr), loss
+
+
+def eval_step(model, flat_params, x, y):
+    """Returns (mean_loss, correct_count) over the batch."""
+    logits = _LOGITS[model](flat_params, x)
+    loss = softmax_xent(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return loss, correct

@@ -1,0 +1,204 @@
+"""L1/L2 performance analysis (DESIGN.md §8, EXPERIMENTS.md §Perf).
+
+Interpret-mode Pallas gives CPU-numpy wallclock, which is *not* a TPU
+proxy — so the L1 kernels are profiled structurally:
+
+* VMEM footprint per grid step for every kernel/BlockSpec (the budget is
+  ~16 MiB/core; we target ≤4 MiB so a double-buffered schedule fits);
+* MXU-shape alignment: how close each matmul tile is to the 128×128
+  systolic array (and the 8×128 VREG lanes for elementwise ops);
+* arithmetic intensity (FLOPs/HBM byte) → roofline regime on a TPUv4-class
+  part (~275 TFLOP/s bf16, ~1.2 TB/s HBM → knee at ~229 FLOP/B).
+
+The L2 train steps are profiled through XLA's own cost analysis on the
+lowered module (FLOPs, transcendentals, bytes accessed), which is exact
+for the compiled graph.
+
+Usage: ``python -m compile.perf [--out ../reports/perf_l1l2.txt]``
+"""
+
+import argparse
+import io
+import math
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+TRAIN_BATCH = 32
+EVAL_BATCH = 100
+MXU = 128  # systolic array dimension
+VMEM_BUDGET = 4 * 1024 * 1024  # our per-step budget (bytes)
+
+
+def fmt_bytes(n):
+    if n < 1024:
+        return f"{n} B"
+    if n < 1024**2:
+        return f"{n / 1024:.1f} KiB"
+    return f"{n / 1024**2:.2f} MiB"
+
+
+def mxu_utilization(m, k, n):
+    """Fraction of MXU lanes doing useful work for an (m,k)x(k,n) tile."""
+    um = min(m, MXU) / MXU if m < MXU else 1.0
+    un = min(n, MXU) / MXU if n < MXU else 1.0
+    # k is the temporal dimension; padding waste only on m/n lanes
+    return um * un
+
+
+def analyze_fused_linear(out, name, b, k, n, bm, bn):
+    """One fused_linear grid step: x(bm,k) @ w(k,bn) + bias + relu."""
+    vmem = 4 * (bm * k + k * bn + bn + bm * bn)
+    flops = 2 * bm * k * bn
+    hbm = 4 * (bm * k + k * bn + bn + bm * bn)  # each operand touched once
+    ai = flops / hbm
+    util = mxu_utilization(bm, k, bn)
+    grid = (b // bm) * (n // bn)
+    status = "OK " if vmem <= VMEM_BUDGET else "OVER"
+    out.write(
+        f"  {name:<34} grid={grid:>3}  block=({bm:>3},{k:>5})x({k:>5},{bn:>4})  "
+        f"VMEM/step={fmt_bytes(vmem):>10} [{status}]  MXU-lane-util={util:5.1%}  "
+        f"AI={ai:6.1f} FLOP/B\n"
+    )
+    return vmem, util
+
+
+def block(dim, preferred):
+    if dim <= preferred:
+        return dim
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def block_n(bm, k, n, preferred=256, budget=VMEM_BUDGET):
+    """Mirror of kernels.fused_linear._block_n (budget-aware column block)."""
+    bn = block(n, preferred)
+    while bn > 1:
+        if 4 * (bm * k + k * bn + bn + bm * bn) <= budget:
+            break
+        bn = block(n, bn - 1)
+    return bn
+
+
+def l1_report(out):
+    out.write("== L1: Pallas kernel structural profile ==\n")
+    out.write(f"(VMEM budget {fmt_bytes(VMEM_BUDGET)}/grid step; MXU {MXU}x{MXU})\n\n")
+
+    out.write("fused_linear forward tiles (as instantiated by the models):\n")
+    cases = [
+        ("cifar dense1 (train)", TRAIN_BATCH, 2048, 64),
+        ("cifar dense2 (train)", TRAIN_BATCH, 64, 10),
+        ("cifar dense1 (eval)", EVAL_BATCH, 2048, 64),
+        ("head dense1 (train)", TRAIN_BATCH, 1280, 64),
+        ("head dense2 (train)", TRAIN_BATCH, 64, 31),
+        ("base featurizer b32", TRAIN_BATCH, 3072, 1280),
+        ("base featurizer b100", EVAL_BATCH, 3072, 1280),
+    ]
+    worst_vmem = 0
+    for name, b, k, n in cases:
+        bm = block(b, 128)
+        bn = block_n(bm, k, n)
+        vmem, _ = analyze_fused_linear(out, name, b, k, n, bm, bn)
+        worst_vmem = max(worst_vmem, vmem)
+
+    out.write("\nbackward tiles (dx = g.W^T, dW = x^T.g) reuse the same BlockSpecs;\n")
+    out.write("the largest is dW for the base featurizer path (frozen: never run).\n")
+
+    out.write("\nelementwise kernels:\n")
+    for name, blk, operands in [
+        ("sgd_update", 65536, 3),
+        ("fedavg_aggregate (K=16)", 32768, 2),
+    ]:
+        if "fedavg" in name:
+            vmem = 4 * (16 * blk + 16 + blk)
+        else:
+            vmem = 4 * (operands * blk + 1)
+        out.write(
+            f"  {name:<34} block={blk:>6} lanes   VMEM/step={fmt_bytes(vmem):>10} "
+            f"[{'OK ' if vmem <= VMEM_BUDGET else 'OVER'}]\n"
+        )
+    out.write(
+        f"\nworst-case VMEM/grid step = {fmt_bytes(worst_vmem)} — double-buffered fits "
+        f"in a 16 MiB core.\n"
+    )
+    out.write(
+        "roofline: every dense tile has AI < 229 FLOP/B -> all L1 kernels are\n"
+        "HBM-bandwidth-bound on TPUv4-class hardware at these batch sizes; the\n"
+        "fused epilogue (bias+ReLU in-register) and the streaming aggregation\n"
+        "avoid the extra HBM round-trips a naive lowering would pay.\n\n"
+    )
+
+
+def l2_report(out):
+    out.write("== L2: XLA cost analysis of the lowered train/eval steps ==\n\n")
+    entries = []
+    p_cifar = M.param_count(M.CIFAR_LAYOUT)
+    p_head = M.param_count(M.HEAD_LAYOUT)
+    specs = {
+        "cifar_train": (
+            lambda pp, x, y, lr: M.train_step("cifar_cnn", pp, x, y, lr),
+            [(p_cifar,), (TRAIN_BATCH, 32, 32, 3), (TRAIN_BATCH,), ()],
+            [jnp.float32, jnp.float32, jnp.int32, jnp.float32],
+        ),
+        "cifar_eval": (
+            lambda pp, x, y: M.eval_step("cifar_cnn", pp, x, y),
+            [(p_cifar,), (EVAL_BATCH, 32, 32, 3), (EVAL_BATCH,)],
+            [jnp.float32, jnp.float32, jnp.int32],
+        ),
+        "head_train": (
+            lambda pp, x, y, lr: M.train_step("head", pp, x, y, lr),
+            [(p_head,), (TRAIN_BATCH, M.HEAD_FEATURES), (TRAIN_BATCH,), ()],
+            [jnp.float32, jnp.float32, jnp.int32, jnp.float32],
+        ),
+        "base_features_b32": (
+            lambda x, w, b: (M.base_features(x, w, b),),
+            [(TRAIN_BATCH, M.BASE_INPUT), (M.BASE_INPUT, M.HEAD_FEATURES), (M.HEAD_FEATURES,)],
+            [jnp.float32, jnp.float32, jnp.float32],
+        ),
+    }
+    for name, (fn, shapes, dtypes) in specs.items():
+        args = [jax.ShapeDtypeStruct(s, d) for s, d in zip(shapes, dtypes)]
+        compiled = jax.jit(fn).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        flops = cost.get("flops", float("nan"))
+        bytes_accessed = cost.get("bytes accessed", float("nan"))
+        ai = flops / bytes_accessed if bytes_accessed else float("nan")
+        entries.append((name, flops, bytes_accessed, ai))
+        out.write(
+            f"  {name:<20} FLOPs={flops:>14,.0f}  bytes={bytes_accessed:>14,.0f}  "
+            f"AI={ai:6.2f} FLOP/B\n"
+        )
+    out.write(
+        "\nsanity: train ~= 3x eval-forward FLOPs (fwd+bwd), head step is pure\n"
+        "dense (two fused_linear layers + xent), no re-flattening inside the\n"
+        "step (params stay one flat vector end to end).\n\n"
+    )
+    return entries
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    buf = io.StringIO()
+    l1_report(buf)
+    l2_report(buf)
+    text = buf.getvalue()
+    sys.stdout.write(text)
+    if args.out:
+        path = pathlib.Path(args.out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(text)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+// leak probe: run head train_step in a loop, print RSS every 200 iters
+use flowrs::data::SyntheticSpec;
+use flowrs::runtime::Runtime;
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    for line in s.lines() {
+        if let Some(v) = line.strip_prefix("VmRSS:") {
+            return v.trim().trim_end_matches(" kB").trim().parse::<f64>().unwrap() / 1024.0;
+        }
+    }
+    0.0
+}
+
+fn main() {
+    let rt = Runtime::load_default().unwrap();
+    let params = rt.initial_parameters("head").unwrap();
+    let spec = SyntheticSpec::office_like(1);
+    let d = spec.generate(32, 0);
+    let feats: Vec<f32> = (0..32*1280).map(|i| (i % 7) as f32 * 0.1).collect();
+    let mut p = params;
+    for i in 0..2001 {
+        let (np, _loss) = rt.train_step("head", &p, &feats, &d.y, 0.01).unwrap();
+        p = np;
+        if i % 400 == 0 {
+            println!("iter {i}: RSS = {:.1} MB", rss_mb());
+        }
+    }
+}

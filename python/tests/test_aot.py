@@ -1,0 +1,103 @@
+"""AOT artifact / manifest consistency checks.
+
+Requires ``make artifacts`` to have run (skipped otherwise) — validates the
+contract the Rust runtime depends on: files exist, hashes match, declared
+shapes line up with the model layouts, init blobs have the right size.
+"""
+
+import hashlib
+import json
+import math
+import pathlib
+
+import pytest
+
+from compile import model as M
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ART / "manifest.json").exists(), reason="run `make artifacts` first"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    return json.loads((ART / "manifest.json").read_text())
+
+
+def test_manifest_version(manifest):
+    assert manifest["version"] == 1
+
+
+def test_all_artifact_files_exist_and_hash(manifest):
+    for name, art in manifest["artifacts"].items():
+        path = ART / art["file"]
+        assert path.exists(), name
+        text = path.read_text()
+        assert hashlib.sha256(text.encode()).hexdigest() == art["sha256"], name
+        assert text.lstrip().startswith("HloModule"), name
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_model_entries(manifest, model):
+    entry = manifest["models"][model]
+    layout = M.LAYOUTS[model]
+    assert entry["param_count"] == M.param_count(layout)
+    assert [(n, tuple(s)) for n, s in entry["layout"]] == [
+        (n, tuple(s)) for n, s in layout
+    ]
+    declared = sum(math.prod(s) for _, s in entry["layout"])
+    assert declared == entry["param_count"]
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_init_blob_size(manifest, model):
+    entry = manifest["models"][model]
+    blob = (ART / entry["init_file"]).read_bytes()
+    assert len(blob) == 4 * entry["param_count"]
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_train_artifact_signature(manifest, model):
+    entry = manifest["models"][model]
+    art = manifest["artifacts"][f"{model}_train"]
+    p = entry["param_count"]
+    b = entry["train_batch"]
+    ins = art["inputs"]
+    assert ins[0]["shape"] == [p]
+    assert ins[1]["shape"][0] == b
+    assert ins[2] == {"shape": [b], "dtype": "int32"}
+    assert ins[3]["shape"] == []  # lr scalar
+    outs = art["outputs"]
+    assert outs[0]["shape"] == [p]
+    assert outs[1]["shape"] == []  # loss
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_agg_artifact_signature(manifest, model):
+    entry = manifest["models"][model]
+    art = manifest["artifacts"][f"{model}_agg"]
+    k = entry["agg_slots"]
+    p = entry["param_count"]
+    assert art["inputs"][0]["shape"] == [k, p]
+    assert art["inputs"][1]["shape"] == [k]
+    assert art["outputs"][0]["shape"] == [p]
+
+
+def test_base_features_signatures(manifest):
+    head = manifest["models"]["head"]
+    for key, b in (("features_train", head["train_batch"]), ("features_eval", head["eval_batch"])):
+        name = head[key].removesuffix(".hlo.txt")
+        art = manifest["artifacts"][name]
+        assert art["inputs"][0]["shape"] == [b, head["base_input"]]
+        assert art["inputs"][1]["shape"] == [head["base_input"], head["feature_dim"]]
+        assert art["outputs"][0]["shape"] == [b, head["feature_dim"]]
+
+
+def test_eval_artifact_signature(manifest):
+    for model in ("cifar_cnn", "head"):
+        entry = manifest["models"][model]
+        art = manifest["artifacts"][f"{model}_eval"]
+        assert art["inputs"][1]["shape"][0] == entry["eval_batch"]
+        assert len(art["outputs"]) == 2  # (loss, correct)

@@ -1,0 +1,206 @@
+"""Pallas kernels vs pure-jnp oracle — the core L1 correctness signal.
+
+Hypothesis sweeps shapes; every kernel (fwd and bwd) must match ``ref.py``
+to FP32 tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+
+RTOL, ATOL = 1e-4, 1e-5
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+# ---------------------------------------------------------------------------
+# fused_linear
+# ---------------------------------------------------------------------------
+
+dims = st.sampled_from([1, 2, 3, 7, 8, 10, 16, 31, 32, 48, 64, 100, 128, 160, 257])
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=dims, k=dims, n=dims, act=st.sampled_from(["relu", "none"]), seed=st.integers(0, 2**16))
+def test_fused_linear_fwd_matches_ref(b, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = rand(rng, b, k), rand(rng, k, n), rand(rng, n)
+    got = K.fused_linear(x, w, bias, act)
+    want = ref.fused_linear(x, w, bias, act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=dims, k=dims, n=dims, act=st.sampled_from(["relu", "none"]), seed=st.integers(0, 2**16))
+def test_fused_linear_vjp_matches_ref(b, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias, g = rand(rng, b, k), rand(rng, k, n), rand(rng, n), rand(rng, b, n)
+
+    def scalar(x, w, bias):
+        return jnp.vdot(K.fused_linear(x, w, bias, act), g)
+
+    dx, dw, db = jax.grad(scalar, argnums=(0, 1, 2))(x, w, bias)
+    rdx, rdw, rdb = ref.fused_linear_vjp(x, w, bias, g, act)
+    np.testing.assert_allclose(dx, rdx, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(dw, rdw, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(db, rdb, rtol=RTOL, atol=ATOL)
+
+
+def test_fused_linear_relu_clamps_negative():
+    x = jnp.asarray([[1.0, -1.0]], jnp.float32)
+    w = jnp.eye(2, dtype=jnp.float32)
+    b = jnp.zeros(2, jnp.float32)
+    out = K.fused_linear(x, w, b, "relu")
+    assert out[0, 0] == 1.0 and out[0, 1] == 0.0
+
+
+def test_fused_linear_rejects_unknown_activation():
+    x = jnp.ones((2, 2), jnp.float32)
+    with pytest.raises(Exception):
+        jax.block_until_ready(K.fused_linear(x, x, jnp.ones(2), "gelu"))
+
+
+def test_matmul_matches_ref():
+    rng = np.random.default_rng(7)
+    a, b = rand(rng, 33, 65), rand(rng, 65, 129)
+    np.testing.assert_allclose(K.matmul(a, b), ref.matmul(a, b), rtol=RTOL, atol=ATOL)
+
+
+def test_fused_linear_relu_grad_zero_in_dead_region():
+    # grad through relu must be exactly zero where pre-activation < 0
+    x = jnp.asarray([[-5.0]], jnp.float32)
+    w = jnp.asarray([[1.0]], jnp.float32)
+    b = jnp.asarray([0.0], jnp.float32)
+    dx = jax.grad(lambda x: K.fused_linear(x, w, b, "relu").sum())(x)
+    assert dx[0, 0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 7, 32, 100]),
+    c=st.sampled_from([2, 10, 31, 100]),
+    seed=st.integers(0, 2**16),
+)
+def test_softmax_xent_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = rand(rng, b, c)
+    labels = jnp.asarray(rng.integers(0, c, b), jnp.int32)
+    np.testing.assert_allclose(
+        K.softmax_xent(logits, labels), ref.softmax_xent(logits, labels),
+        rtol=RTOL, atol=ATOL,
+    )
+    np.testing.assert_allclose(
+        jax.grad(K.softmax_xent)(logits, labels),
+        ref.softmax_xent_grad(logits, labels),
+        rtol=RTOL, atol=1e-6,
+    )
+
+
+def test_softmax_xent_uniform_logits_is_log_c():
+    logits = jnp.zeros((8, 10), jnp.float32)
+    labels = jnp.zeros((8,), jnp.int32)
+    got = float(K.softmax_xent(logits, labels))
+    assert abs(got - np.log(10.0)) < 1e-5
+
+
+def test_softmax_xent_shift_invariant():
+    rng = np.random.default_rng(3)
+    logits = rand(rng, 16, 10)
+    labels = jnp.asarray(rng.integers(0, 10, 16), jnp.int32)
+    a = float(K.softmax_xent(logits, labels))
+    b = float(K.softmax_xent(logits + 100.0, labels))
+    assert abs(a - b) < 1e-3
+
+
+def test_softmax_xent_grad_rows_sum_to_zero():
+    rng = np.random.default_rng(4)
+    logits = rand(rng, 12, 31)
+    labels = jnp.asarray(rng.integers(0, 31, 12), jnp.int32)
+    g = jax.grad(K.softmax_xent)(logits, labels)
+    np.testing.assert_allclose(jnp.sum(g, axis=-1), jnp.zeros(12), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# sgd_update
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p=st.sampled_from([1, 5, 1000, 65536, 65537, 131072, 136874]),
+    lr=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_sgd_matches_ref(p, lr, seed):
+    rng = np.random.default_rng(seed)
+    params, grads = rand(rng, p), rand(rng, p)
+    np.testing.assert_allclose(
+        K.sgd_update(params, grads, lr), ref.sgd_update(params, grads, lr),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_sgd_zero_lr_is_identity():
+    rng = np.random.default_rng(1)
+    params, grads = rand(rng, 70000), rand(rng, 70000)
+    np.testing.assert_array_equal(K.sgd_update(params, grads, 0.0), params)
+
+
+# ---------------------------------------------------------------------------
+# fedavg_aggregate
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.sampled_from([1, 2, 4, 16]),
+    p=st.sampled_from([1, 17, 32768, 32769, 84063]),
+    seed=st.integers(0, 2**16),
+)
+def test_fedavg_matches_ref(k, p, seed):
+    rng = np.random.default_rng(seed)
+    stacked = rand(rng, k, p)
+    w = jnp.asarray(rng.random(k, dtype=np.float32))
+    np.testing.assert_allclose(
+        K.fedavg_aggregate(stacked, w), ref.fedavg_aggregate(stacked, w),
+        rtol=RTOL, atol=ATOL,
+    )
+
+
+def test_fedavg_identity_single_client():
+    rng = np.random.default_rng(2)
+    stacked = rand(rng, 1, 1000)
+    out = K.fedavg_aggregate(stacked, jnp.ones(1, jnp.float32))
+    np.testing.assert_allclose(out, stacked[0], rtol=1e-6)
+
+
+def test_fedavg_zero_weight_clients_ignored():
+    rng = np.random.default_rng(5)
+    stacked = rand(rng, 4, 500)
+    w = jnp.asarray([0.5, 0.5, 0.0, 0.0], jnp.float32)
+    masked = K.fedavg_aggregate(stacked, w)
+    expect = 0.5 * stacked[0] + 0.5 * stacked[1]
+    np.testing.assert_allclose(masked, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_convexity_bounds():
+    # a convex combination must stay inside elementwise min/max of the inputs
+    rng = np.random.default_rng(6)
+    stacked = rand(rng, 4, 200)
+    w = jnp.asarray([0.25, 0.25, 0.25, 0.25], jnp.float32)
+    out = np.asarray(K.fedavg_aggregate(stacked, w))
+    lo = np.min(np.asarray(stacked), axis=0) - 1e-5
+    hi = np.max(np.asarray(stacked), axis=0) + 1e-5
+    assert (out >= lo).all() and (out <= hi).all()

@@ -1,0 +1,167 @@
+"""L2 model tests: shapes, training dynamics, FedProx semantics, eval."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def synthetic_batch(rng, model, b):
+    """Learnable synthetic batch mirroring rust/src/data/synthetic.rs."""
+    if model == "cifar_cnn":
+        c = M.CIFAR_CLASSES
+        y = rng.integers(0, c, b)
+        # class-conditional means pushed through the pixel space
+        means = rng.standard_normal((c, *M.CIFAR_INPUT)).astype(np.float32)
+        x = means[y] + 0.5 * rng.standard_normal((b, *M.CIFAR_INPUT)).astype(np.float32)
+    else:
+        c = M.HEAD_CLASSES
+        y = rng.integers(0, c, b)
+        means = rng.standard_normal((c, M.HEAD_FEATURES)).astype(np.float32)
+        x = means[y] + 0.5 * rng.standard_normal((b, M.HEAD_FEATURES)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y, jnp.int32)
+
+
+def test_param_counts():
+    assert M.param_count(M.CIFAR_LAYOUT) == (
+        3 * 3 * 3 * 16 + 16 + 3 * 3 * 16 * 32 + 32 + 2048 * 64 + 64 + 64 * 10 + 10
+    )
+    assert M.param_count(M.HEAD_LAYOUT) == 1280 * 64 + 64 + 64 * 31 + 31
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_flatten_unflatten_roundtrip(model):
+    layout = M.LAYOUTS[model]
+    flat = M.init_params(model, seed=3)
+    assert flat.shape == (M.param_count(layout),)
+    tree = M.unflatten(layout, flat)
+    again = M.flatten(layout, tree)
+    np.testing.assert_array_equal(flat, again)
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_logits_shape(model):
+    rng = np.random.default_rng(0)
+    x, _ = synthetic_batch(rng, model, 8)
+    params = M.init_params(model, seed=0)
+    fn = M.cifar_logits if model == "cifar_cnn" else M.head_logits
+    logits = fn(params, x)
+    classes = M.CIFAR_CLASSES if model == "cifar_cnn" else M.HEAD_CLASSES
+    assert logits.shape == (8, classes)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_train_step_decreases_loss(model):
+    rng = np.random.default_rng(1)
+    x, y = synthetic_batch(rng, model, 32)
+    params = M.init_params(model, seed=1)
+    step = jax.jit(lambda p: M.train_step(model, p, x, y, jnp.float32(0.05)))
+    losses = []
+    for _ in range(20):
+        params, loss = step(params)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_train_step_initial_loss_sane():
+    # He-init + unnormalized synthetic pixels -> loss above chance (log 10)
+    # but bounded; mostly a finiteness/scale guard on the fwd+loss path.
+    rng = np.random.default_rng(2)
+    x, y = synthetic_batch(rng, "cifar_cnn", 32)
+    params = M.init_params("cifar_cnn", seed=2)
+    _, loss = M.train_step("cifar_cnn", params, x, y, jnp.float32(0.0))
+    assert math.isfinite(float(loss))
+    assert 0.5 * math.log(10) < float(loss) < 20.0
+
+
+def test_train_step_zero_lr_keeps_params():
+    rng = np.random.default_rng(3)
+    x, y = synthetic_batch(rng, "head", 32)
+    params = M.init_params("head", seed=3)
+    new_params, _ = M.train_step("head", params, x, y, jnp.float32(0.0))
+    np.testing.assert_array_equal(params, new_params)
+
+
+def test_prox_term_pulls_toward_global():
+    """With huge mu the prox gradient dominates and the step moves toward
+    the global params; with mu=0 it must equal the plain train step."""
+    rng = np.random.default_rng(4)
+    x, y = synthetic_batch(rng, "head", 32)
+    params = M.init_params("head", seed=4)
+    global_params = params + 1.0
+
+    p_plain, _ = M.train_step("head", params, x, y, jnp.float32(0.01))
+    p_mu0, _ = M.train_step_prox(
+        "head", params, global_params, x, y, jnp.float32(0.01), jnp.float32(0.0)
+    )
+    np.testing.assert_allclose(p_plain, p_mu0, rtol=1e-5, atol=1e-6)
+
+    p_big, _ = M.train_step_prox(
+        "head", params, global_params, x, y, jnp.float32(0.01), jnp.float32(100.0)
+    )
+    # distance to global must shrink vs the plain step
+    d_plain = float(jnp.linalg.norm(p_plain - global_params))
+    d_big = float(jnp.linalg.norm(p_big - global_params))
+    assert d_big < d_plain
+
+
+@pytest.mark.parametrize("model", ["cifar_cnn", "head"])
+def test_eval_step_counts(model):
+    rng = np.random.default_rng(5)
+    x, y = synthetic_batch(rng, model, 100)
+    params = M.init_params(model, seed=5)
+    loss, correct = M.eval_step(model, params, x, y)
+    assert 0.0 <= float(correct) <= 100.0
+    assert float(correct) == int(float(correct))  # integral count
+    assert float(loss) > 0.0
+
+
+def test_eval_step_perfect_params():
+    """Hand-build head params that classify a separable batch perfectly."""
+    b, f, c = 100, M.HEAD_FEATURES, M.HEAD_CLASSES
+    rng = np.random.default_rng(6)
+    y = jnp.asarray(rng.integers(0, c, b), jnp.int32)
+    x = jax.nn.one_hot(y, f, dtype=jnp.float32) * 10.0  # class i -> feature i spike
+    params = {
+        "dense1_w": jnp.eye(f, 64, dtype=jnp.float32),
+        "dense1_b": jnp.zeros(64, jnp.float32),
+        "dense2_w": jnp.eye(64, c, dtype=jnp.float32),
+        "dense2_b": jnp.zeros(c, jnp.float32),
+    }
+    # classes < 64 map identity through both layers
+    flat = M.flatten(M.HEAD_LAYOUT, params)
+    _, correct = M.eval_step("head", flat, x, y)
+    mask = y < 31  # classes 31..63 don't exist; all labels are < 31 anyway
+    assert float(correct) == float(jnp.sum(mask))
+
+
+def test_base_features_frozen_and_shaped():
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.standard_normal((8, M.BASE_INPUT)), jnp.float32)
+    w = jnp.asarray(
+        rng.standard_normal((M.BASE_INPUT, M.HEAD_FEATURES)) * 0.02, jnp.float32
+    )
+    b = jnp.zeros(M.HEAD_FEATURES, jnp.float32)
+    feats = M.base_features(x, w, b)
+    assert feats.shape == (8, M.HEAD_FEATURES)
+    assert bool(jnp.all(feats >= 0.0))  # relu output
+
+
+def test_init_params_deterministic():
+    a = M.init_params("cifar_cnn", seed=42)
+    b = M.init_params("cifar_cnn", seed=42)
+    c = M.init_params("cifar_cnn", seed=43)
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_init_biases_zero():
+    flat = M.init_params("head", seed=0)
+    tree = M.unflatten(M.HEAD_LAYOUT, flat)
+    assert float(jnp.abs(tree["dense1_b"]).max()) == 0.0
+    assert float(jnp.abs(tree["dense2_b"]).max()) == 0.0

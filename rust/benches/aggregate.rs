@@ -1,0 +1,63 @@
+//! Aggregation benchmarks: the Rust f64-loop backend vs the Pallas/PJRT
+//! kernel, across cohort sizes, on the real model parameter counts.
+//!
+//! This is the server's per-round compute hot-spot. Skips the PJRT rows if
+//! `make artifacts` hasn't run.
+
+use flowrs::runtime::Runtime;
+use flowrs::strategy::Aggregator;
+use flowrs::util::bench::Bench;
+
+fn vectors(k: usize, p: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|i| (0..p).map(|j| ((i * p + j) as f32).sin()).collect())
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("aggregate");
+
+    let p_cifar = 136_874;
+    for k in [2usize, 8, 16] {
+        let vecs = vectors(k, p_cifar);
+        let inputs: Vec<(&[f32], f64)> = vecs
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v.as_slice(), 1.0 + i as f64))
+            .collect();
+        b.bench(&format!("rust_k{k}_cifar(137k)"), || {
+            Aggregator::Rust.weighted_average(&inputs).unwrap()
+        });
+    }
+
+    match Runtime::load_default() {
+        Ok(rt) => {
+            for k in [2usize, 8, 16] {
+                let vecs = vectors(k, p_cifar);
+                let inputs: Vec<(&[f32], f64)> = vecs
+                    .iter()
+                    .enumerate()
+                    .map(|(i, v)| (v.as_slice(), 1.0 + i as f64))
+                    .collect();
+                let agg = Aggregator::Pjrt { runtime: rt.clone(), model: "cifar_cnn".into() };
+                // warm the executable cache before timing
+                agg.weighted_average(&inputs).unwrap();
+                b.bench(&format!("pjrt_k{k}_cifar(137k)"), || {
+                    agg.weighted_average(&inputs).unwrap()
+                });
+            }
+            // chunked path: cohort larger than the artifact's 16 slots
+            let vecs = vectors(24, 83_999);
+            let inputs: Vec<(&[f32], f64)> =
+                vecs.iter().map(|v| (v.as_slice(), 1.0)).collect();
+            let agg = Aggregator::Pjrt { runtime: rt, model: "head".into() };
+            agg.weighted_average(&inputs).unwrap();
+            b.bench("pjrt_k24_head_chunked(84k)", || {
+                agg.weighted_average(&inputs).unwrap()
+            });
+        }
+        Err(e) => eprintln!("skipping PJRT aggregation rows: {e}"),
+    }
+
+    b.finish();
+}

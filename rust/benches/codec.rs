@@ -1,0 +1,88 @@
+//! Wire-codec benchmarks: encode/decode throughput for the messages that
+//! dominate FL traffic (FitIns/FitRes carrying the full parameter vector).
+//!
+//! The paper's round time is dominated by client compute; the codec must
+//! be (and is) orders of magnitude below that. These benches pin the L3
+//! serialization cost for EXPERIMENTS.md §Perf.
+
+use flowrs::proto::*;
+use flowrs::util::bench::Bench;
+
+fn params(n: usize) -> Parameters {
+    Parameters::from_flat((0..n).map(|i| (i as f32).sin()).collect())
+}
+
+fn fit_ins(n: usize) -> ServerMessage {
+    ServerMessage::FitIns(FitIns {
+        parameters: params(n),
+        config: flowrs::config! {
+            "epochs" => 10i64, "lr" => 0.06f64, "round" => 12i64, "cutoff_s" => 119.4f64,
+        },
+    })
+}
+
+fn fit_res(n: usize) -> ClientMessage {
+    ClientMessage::FitRes(FitRes {
+        status: Status::ok(),
+        parameters: params(n),
+        num_examples: 2560,
+        metrics: flowrs::config! {
+            "steps" => 80i64, "compute_time_s" => 118.4f64, "energy_j" => 1124.8f64,
+            "train_loss" => 1.234f64, "truncated" => false,
+        },
+    })
+}
+
+fn main() {
+    let mut b = Bench::new("codec");
+
+    // The CIFAR CNN payload: 136,874 f32 params ≈ 547 KB.
+    let msg = fit_ins(136_874);
+    let encoded = encode_server_message(&msg);
+    let bytes = encoded.len();
+    b.bench_bytes("encode_fit_ins_cifar(547KB)", bytes, || {
+        encode_server_message(&msg)
+    });
+    b.bench_bytes("decode_fit_ins_cifar(547KB)", bytes, || {
+        decode_server_message(&encoded).unwrap()
+    });
+
+    let res = fit_res(136_874);
+    let encoded_res = encode_client_message(&res);
+    let bytes_res = encoded_res.len();
+    b.bench_bytes("encode_fit_res_cifar(547KB)", bytes_res, || {
+        encode_client_message(&res)
+    });
+    b.bench_bytes("decode_fit_res_cifar(547KB)", bytes_res, || {
+        decode_client_message(&encoded_res).unwrap()
+    });
+
+    // The head-model payload: 83,999 params ≈ 336 KB.
+    let msg = fit_ins(83_999);
+    let encoded = encode_server_message(&msg);
+    b.bench_bytes("encode_fit_ins_head(336KB)", encoded.len(), || {
+        encode_server_message(&msg)
+    });
+
+    // Control-plane messages must be ~ns scale.
+    let small = ServerMessage::Reconnect { seconds: 5 };
+    let encoded_small = encode_server_message(&small);
+    b.bench("encode_reconnect", || encode_server_message(&small));
+    b.bench("decode_reconnect", || {
+        decode_server_message(&encoded_small).unwrap()
+    });
+
+    let eval = ClientMessage::EvaluateRes(EvaluateRes {
+        status: Status::ok(),
+        loss: 2.3,
+        num_examples: 100,
+        metrics: flowrs::config! { "accuracy" => 0.67f64 },
+    });
+    let encoded_eval = encode_client_message(&eval);
+    b.bench("encode_evaluate_res", || encode_client_message(&eval));
+    b.bench("decode_evaluate_res", || {
+        decode_client_message(&encoded_eval).unwrap()
+    });
+
+    b.finish();
+}

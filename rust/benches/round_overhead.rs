@@ -1,0 +1,119 @@
+//! L3 coordination overhead: a full FL round with zero-compute clients.
+//!
+//! Measures everything the coordinator adds around client compute —
+//! strategy configure/aggregate, thread fan-out, in-proc transport, codec
+//! both ways — on real parameter sizes. The paper's contribution *is* the
+//! coordinator, so its overhead is a first-class reported number: it must
+//! stay ≪ the modeled device compute (tens of seconds per round).
+
+use std::sync::Arc;
+
+use flowrs::client::Client;
+use flowrs::device::profiles;
+use flowrs::proto::*;
+use flowrs::server::{ClientManager, ClientProxy, Server, ServerConfig};
+use flowrs::sim::cost::CostModel;
+use flowrs::strategy::fedavg::TrainingPlan;
+use flowrs::strategy::{Aggregator, ClientHandle, FedAvg};
+use flowrs::transport::{inproc, Connection};
+use flowrs::util::bench::Bench;
+
+/// A client whose "training" is a single vector copy: all that remains is
+/// coordination cost.
+struct NoopClient {
+    params: Vec<f32>,
+}
+
+impl Client for NoopClient {
+    fn get_parameters(&mut self, _: GetParametersIns) -> flowrs::Result<GetParametersRes> {
+        Ok(GetParametersRes {
+            status: Status::ok(),
+            parameters: Parameters::from_flat(self.params.clone()),
+        })
+    }
+    fn fit(&mut self, ins: FitIns) -> flowrs::Result<FitRes> {
+        let p = ins.parameters.to_flat()?.to_vec();
+        let mut metrics = ConfigMap::new();
+        metrics.insert("steps".into(), Scalar::I64(0));
+        metrics.insert("compute_time_s".into(), Scalar::F64(0.0));
+        metrics.insert("energy_j".into(), Scalar::F64(0.0));
+        metrics.insert("train_loss".into(), Scalar::F64(1.0));
+        Ok(FitRes {
+            status: Status::ok(),
+            parameters: Parameters::from_flat(p),
+            num_examples: 256,
+            metrics,
+        })
+    }
+    fn evaluate(&mut self, ins: EvaluateIns) -> flowrs::Result<EvaluateRes> {
+        let _ = ins.parameters.to_flat()?;
+        let mut metrics = ConfigMap::new();
+        metrics.insert("accuracy".into(), Scalar::F64(0.5));
+        Ok(EvaluateRes {
+            status: Status::ok(),
+            loss: 1.0,
+            num_examples: 100,
+            metrics,
+        })
+    }
+}
+
+/// Run `rounds` rounds over `n` noop clients with `p` parameters; returns
+/// total wallclock.
+fn run_rounds(n: usize, p: usize, rounds: u64) -> std::time::Duration {
+    let manager = Arc::new(ClientManager::new());
+    let mut threads = Vec::new();
+    for i in 0..n {
+        let (server_end, client_end) = inproc::pair();
+        manager.register(Arc::new(ClientProxy::new(
+            ClientHandle {
+                id: format!("noop-{i}"),
+                device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+                num_examples: 256,
+            },
+            Connection::InProc(server_end),
+        )));
+        threads.push(std::thread::spawn(move || {
+            let mut c = NoopClient { params: vec![0.0; 4] };
+            let _ = flowrs::client::app::serve(Connection::InProc(client_end), &mut c);
+        }));
+    }
+    let mut server = Server::new(
+        Arc::clone(&manager),
+        Box::new(FedAvg::new(TrainingPlan::default(), Aggregator::Rust)),
+        CostModel::default(),
+        ServerConfig { num_rounds: rounds, quorum: n, ..Default::default() },
+    );
+    let t0 = std::time::Instant::now();
+    server
+        .run(Parameters::from_flat(vec![0.5; p]))
+        .expect("round runs");
+    let dt = t0.elapsed();
+    for t in threads {
+        t.join().unwrap();
+    }
+    dt
+}
+
+fn main() {
+    let mut b = Bench::new("round_overhead");
+    // one round end-to-end, parameters at the two real model sizes
+    for (label, n, p) in [
+        ("round_c4_head(84k)", 4usize, 83_999usize),
+        ("round_c10_cifar(137k)", 10, 136_874),
+        ("round_c16_cifar(137k)", 16, 136_874),
+    ] {
+        b.bench(label, || run_rounds(n, p, 1));
+    }
+    let stats = b.finish();
+    // Context: modeled device compute per round is ~12-120 s. Print the
+    // ratio the perf section tracks.
+    if let Some(s) = stats.iter().find(|s| s.name.contains("c10_cifar")) {
+        let overhead_ms = s.median_ns / 1e6;
+        println!(
+            "\ncoordination overhead for a 10-client CIFAR round: {overhead_ms:.2} ms \
+             ({:.4}% of the 118 s modeled E=10 round compute)",
+            overhead_ms / 118_400.0 * 100.0
+        );
+    }
+}

@@ -1,0 +1,70 @@
+//! PJRT runtime benchmarks: the on-device compute primitives as the Rust
+//! coordinator sees them (channel round-trip + literal conversion + XLA
+//! execution). These are the wallclock costs behind the virtual clock.
+//!
+//! Skips everything if `make artifacts` hasn't run.
+
+use flowrs::client::BaseModel;
+use flowrs::data::SyntheticSpec;
+use flowrs::runtime::Runtime;
+use flowrs::util::bench::Bench;
+
+fn main() {
+    let rt = match Runtime::load_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime benches: {e}");
+            return;
+        }
+    };
+    let mut b = Bench::new("runtime_exec");
+
+    // --- cifar_cnn -------------------------------------------------------
+    let cifar = rt.manifest().model("cifar_cnn").unwrap().clone();
+    let params = rt.initial_parameters("cifar_cnn").unwrap();
+    let spec = SyntheticSpec::cifar_like(1);
+    let train = spec.generate(cifar.train_batch, 0);
+    let test = spec.generate(cifar.eval_batch, 1);
+    // warm compile
+    rt.train_step("cifar_cnn", &params, &train.x, &train.y, 0.05).unwrap();
+    b.bench("cifar_train_step(b32)", || {
+        rt.train_step("cifar_cnn", &params, &train.x, &train.y, 0.05).unwrap()
+    });
+    rt.train_step_prox("cifar_cnn", &params, &params, &train.x, &train.y, 0.05, 0.01)
+        .unwrap();
+    b.bench("cifar_train_step_prox(b32)", || {
+        rt.train_step_prox("cifar_cnn", &params, &params, &train.x, &train.y, 0.05, 0.01)
+            .unwrap()
+    });
+    rt.eval_step("cifar_cnn", &params, &test.x, &test.y).unwrap();
+    b.bench("cifar_eval_step(b100)", || {
+        rt.eval_step("cifar_cnn", &params, &test.x, &test.y).unwrap()
+    });
+
+    // --- head + frozen base ----------------------------------------------
+    let head = rt.manifest().model("head").unwrap().clone();
+    let hparams = rt.initial_parameters("head").unwrap();
+    let ospec = SyntheticSpec::office_like(1);
+    let raw = ospec.generate(head.train_batch, 0);
+    let base = BaseModel::generate(1, head.base_input.unwrap(), head.feature_dim.unwrap());
+    let feats = rt
+        .base_features("head", &raw.x, &base.w, &base.b, true)
+        .unwrap();
+    b.bench("base_features(b32)", || {
+        rt.base_features("head", &raw.x, &base.w, &base.b, true).unwrap()
+    });
+    b.bench("head_train_step(b32)", || {
+        rt.train_step("head", &hparams, &feats, &raw.y, 0.1).unwrap()
+    });
+
+    // --- channel overhead: the smallest artifact, measuring the fixed cost
+    // of the executor round-trip vs raw XLA compute
+    let one = rt.aggregate("head", &[&hparams], &[1.0]).unwrap();
+    assert_eq!(one.len(), hparams.len());
+    b.bench("agg_identity_roundtrip(84k)", || {
+        rt.aggregate("head", &[&hparams], &[1.0]).unwrap()
+    });
+
+    b.finish();
+    println!("total PJRT executions during bench: {}", rt.executions());
+}

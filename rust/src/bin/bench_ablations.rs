@@ -1,0 +1,139 @@
+//! `bench_ablations` — ablation studies over the design space DESIGN.md
+//! calls out (extension experiments Ext-1..Ext-4):
+//!
+//! 1. **Wire compression** — f32 vs f16 parameter exchange: bytes moved,
+//!    modeled comm time/energy, accuracy delta.
+//! 2. **Data heterogeneity** — IID vs Dirichlet(0.5) vs Dirichlet(0.1) vs
+//!    2-shard splits, FedAvg vs FedProx.
+//! 3. **Dropout resilience** — accuracy vs client failure probability.
+//! 4. **Aggregation backend** — Rust loop vs Pallas/PJRT kernel agreement
+//!    and round-level throughput.
+//!
+//! All on the fast head-model workload so the whole suite stays a few
+//! minutes of wallclock.
+//!
+//! ```bash
+//! cargo run --release --bin bench_ablations
+//! ```
+
+use flowrs::config::{AggBackend, ExperimentConfig, StrategyConfig};
+use flowrs::data::Partitioner;
+use flowrs::metrics::Table;
+use flowrs::runtime::Runtime;
+use flowrs::sim;
+
+fn base(name: &str) -> ExperimentConfig {
+    ExperimentConfig::default()
+        .named(name)
+        .model("head")
+        .clients(4)
+        .rounds(5)
+        .epochs(2)
+        .lr(0.1)
+        .data(128, 100)
+        .seed(20260710)
+}
+
+fn main() -> flowrs::Result<()> {
+    let runtime = Runtime::load_default()?;
+    let t0 = std::time::Instant::now();
+
+    // --- Ext-1: wire compression ---------------------------------------
+    let mut t = Table::new(
+        "Ext-1: f16 wire compression (head, C=4, E=2, 5 rounds)",
+        &["wire", "accuracy", "fit MB moved", "comm time (s)", "energy (kJ)"],
+    );
+    for (label, quant) in [("f32", false), ("f16", true)] {
+        let cfg = base(&format!("abl_quant_{label}")).quantized(quant);
+        let r = sim::run_experiment(&cfg, &runtime)?;
+        let mb: f64 = r
+            .history
+            .rounds
+            .iter()
+            .map(|x| (x.down_bytes + x.up_bytes) as f64)
+            .sum::<f64>()
+            / 1e6;
+        let (acc, mins, kj) = r.paper_metrics();
+        t.row(vec![
+            label.into(),
+            format!("{acc:.4}"),
+            format!("{mb:.2}"),
+            format!("{:.1}", mins * 60.0),
+            format!("{kj:.3}"),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- Ext-2/3: heterogeneity × strategy -------------------------------
+    let mut t = Table::new(
+        "Ext-2: data heterogeneity x strategy (head, C=4, E=2, 5 rounds)",
+        &["partition", "strategy", "accuracy", "eval loss"],
+    );
+    let partitions: Vec<(&str, Partitioner)> = vec![
+        ("iid", Partitioner::Iid),
+        ("dirichlet:0.5", Partitioner::Dirichlet { alpha: 0.5 }),
+        ("dirichlet:0.1", Partitioner::Dirichlet { alpha: 0.1 }),
+        ("shards:2", Partitioner::Shards { shards_per_client: 2 }),
+    ];
+    for (plabel, partitioner) in &partitions {
+        for (slabel, strategy) in [
+            ("fedavg", StrategyConfig::FedAvg),
+            ("fedprox(0.1)", StrategyConfig::FedProx { mu: 0.1 }),
+        ] {
+            let cfg = base(&format!("abl_{plabel}_{slabel}"))
+                .partitioner(partitioner.clone())
+                .strategy(strategy);
+            let r = sim::run_experiment(&cfg, &runtime)?;
+            let last = r.history.rounds.last().unwrap();
+            t.row(vec![
+                plabel.to_string(),
+                slabel.into(),
+                format!("{:.4}", last.accuracy),
+                format!("{:.4}", last.eval_loss),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // --- Ext-3: dropout resilience ---------------------------------------
+    let mut t = Table::new(
+        "Ext-3: client dropout resilience (head, C=4, E=2, 5 rounds)",
+        &["dropout", "accuracy", "completed fits", "failures"],
+    );
+    for p in [0.0, 0.2, 0.4] {
+        let cfg = base(&format!("abl_drop_{p}")).dropout(p);
+        let r = sim::run_experiment(&cfg, &runtime)?;
+        let done: usize = r.history.rounds.iter().map(|x| x.fit_completed).sum();
+        let fail: usize = r.history.rounds.iter().map(|x| x.fit_failures).sum();
+        t.row(vec![
+            format!("{p:.1}"),
+            format!("{:.4}", r.history.final_accuracy()),
+            done.to_string(),
+            fail.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // --- Ext-4: aggregation backend ---------------------------------------
+    let mut t = Table::new(
+        "Ext-4: aggregation backend (head, C=4, E=2, 5 rounds)",
+        &["backend", "accuracy", "eval loss", "wallclock (s)"],
+    );
+    for (label, backend) in [("rust", AggBackend::Rust), ("pjrt", AggBackend::Pjrt)] {
+        let cfg = base(&format!("abl_agg_{label}")).agg(backend);
+        let w0 = std::time::Instant::now();
+        let r = sim::run_experiment(&cfg, &runtime)?;
+        let wall = w0.elapsed().as_secs_f64();
+        let last = r.history.rounds.last().unwrap();
+        t.row(vec![
+            label.into(),
+            format!("{:.4}", last.accuracy),
+            format!("{:.4}", last.eval_loss),
+            format!("{wall:.1}"),
+        ]);
+    }
+    print!("{}", t.render());
+
+    println!("\nablations total: {:.1}s wallclock", t0.elapsed().as_secs_f64());
+    Ok(())
+}

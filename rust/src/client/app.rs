@@ -1,0 +1,182 @@
+//! The client event loop: register, then serve fit/evaluate requests until
+//! the server says goodbye. This is the Rust analogue of the Android
+//! client's background `StreamObserver` thread (paper Figure 2): messages
+//! arrive, the appropriate on-device method runs, the result streams back.
+
+use crate::client::Client;
+use crate::error::{Error, Result};
+use crate::proto::{ClientInfo, ClientMessage, ServerMessage, Status, StatusCode};
+use crate::transport::Connection;
+
+/// Run a client against an established connection. Returns when the server
+/// sends `Reconnect` (clean shutdown) or the connection drops.
+pub fn run_client(
+    mut conn: Connection,
+    client: &mut dyn Client,
+    info: ClientInfo,
+) -> Result<()> {
+    conn.send_client_message(&ClientMessage::Register(info.clone()))?;
+    serve(conn, client)
+}
+
+/// Serve an already-registered connection (the simulator registers the
+/// proxy directly, so no `Register` message is sent here).
+pub fn serve(mut conn: Connection, client: &mut dyn Client) -> Result<()> {
+    loop {
+        let msg = match conn.recv_server_message() {
+            Ok(m) => m,
+            Err(Error::Transport(_)) => return Ok(()), // server went away
+            Err(e) => return Err(e),
+        };
+        match msg {
+            ServerMessage::GetParametersIns(ins) => {
+                let res = client.get_parameters(ins).unwrap_or_else(|e| {
+                    crate::proto::GetParametersRes {
+                        status: Status {
+                            code: StatusCode::FitError,
+                            message: e.to_string(),
+                        },
+                        parameters: Default::default(),
+                    }
+                });
+                conn.send_client_message(&ClientMessage::GetParametersRes(res))?;
+            }
+            ServerMessage::FitIns(ins) => {
+                let res = match client.fit(ins) {
+                    Ok(res) => res,
+                    Err(e) => crate::proto::FitRes {
+                        status: Status {
+                            code: StatusCode::FitError,
+                            message: e.to_string(),
+                        },
+                        parameters: Default::default(),
+                        num_examples: 0,
+                        metrics: Default::default(),
+                    },
+                };
+                conn.send_client_message(&ClientMessage::FitRes(res))?;
+            }
+            ServerMessage::EvaluateIns(ins) => {
+                let res = match client.evaluate(ins) {
+                    Ok(res) => res,
+                    Err(e) => crate::proto::EvaluateRes {
+                        status: Status {
+                            code: StatusCode::EvaluateError,
+                            message: e.to_string(),
+                        },
+                        loss: f64::NAN,
+                        num_examples: 0,
+                        metrics: Default::default(),
+                    },
+                };
+                conn.send_client_message(&ClientMessage::EvaluateRes(res))?;
+            }
+            ServerMessage::Reconnect { .. } => {
+                let _ = conn.send_client_message(&ClientMessage::Disconnect {
+                    reason: "server requested shutdown".into(),
+                });
+                return Ok(());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::*;
+    use crate::transport::{inproc, Connection};
+
+    /// Minimal in-memory client used to exercise the loop without PJRT.
+    struct EchoClient {
+        params: Vec<f32>,
+    }
+
+    impl Client for EchoClient {
+        fn get_parameters(&mut self, _: GetParametersIns) -> crate::Result<GetParametersRes> {
+            Ok(GetParametersRes {
+                status: Status::ok(),
+                parameters: Parameters::from_flat(self.params.clone()),
+            })
+        }
+        fn fit(&mut self, ins: FitIns) -> crate::Result<FitRes> {
+            // "training": add 1 to every parameter
+            let mut p = ins.parameters.to_flat()?.to_vec();
+            for v in &mut p {
+                *v += 1.0;
+            }
+            self.params = p.clone();
+            Ok(FitRes {
+                status: Status::ok(),
+                parameters: Parameters::from_flat(p),
+                num_examples: 10,
+                metrics: Default::default(),
+            })
+        }
+        fn evaluate(&mut self, _: EvaluateIns) -> crate::Result<EvaluateRes> {
+            Err(crate::Error::Client("no test data".into()))
+        }
+    }
+
+    #[test]
+    fn loop_handles_all_message_kinds() {
+        let (server_end, client_end) = inproc::pair();
+        let mut server = Connection::InProc(server_end);
+
+        let handle = std::thread::spawn(move || {
+            let mut client = EchoClient { params: vec![0.0; 4] };
+            run_client(
+                Connection::InProc(client_end),
+                &mut client,
+                ClientInfo {
+                    client_id: "c0".into(),
+                    device: "pixel4".into(),
+                    os: "Android 10".into(),
+                    num_examples: 10,
+                },
+            )
+        });
+
+        // registration first
+        let reg = server.recv_client_message().unwrap();
+        assert!(matches!(reg, ClientMessage::Register(_)));
+
+        // fit
+        server
+            .send_server_message(&ServerMessage::FitIns(FitIns {
+                parameters: Parameters::from_flat(vec![1.0, 2.0]),
+                config: Default::default(),
+            }))
+            .unwrap();
+        match server.recv_client_message().unwrap() {
+            ClientMessage::FitRes(res) => {
+                assert_eq!(res.parameters.to_flat().unwrap(), &[2.0, 3.0]);
+            }
+            other => panic!("expected FitRes, got {other:?}"),
+        }
+
+        // evaluate: client errors internally but must answer with a status
+        server
+            .send_server_message(&ServerMessage::EvaluateIns(EvaluateIns {
+                parameters: Parameters::from_flat(vec![0.0]),
+                config: Default::default(),
+            }))
+            .unwrap();
+        match server.recv_client_message().unwrap() {
+            ClientMessage::EvaluateRes(res) => {
+                assert_eq!(res.status.code, StatusCode::EvaluateError);
+            }
+            other => panic!("expected EvaluateRes, got {other:?}"),
+        }
+
+        // goodbye
+        server
+            .send_server_message(&ServerMessage::Reconnect { seconds: 0 })
+            .unwrap();
+        match server.recv_client_message().unwrap() {
+            ClientMessage::Disconnect { .. } => {}
+            other => panic!("expected Disconnect, got {other:?}"),
+        }
+        handle.join().unwrap().unwrap();
+    }
+}

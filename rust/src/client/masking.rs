@@ -1,0 +1,172 @@
+//! Secure aggregation masking (client side).
+//!
+//! FL's privacy promise (the paper's opening motivation) is stronger when
+//! the server never sees an individual update. Classic additive masking
+//! (Bonawitz et al. 2017, the protocol behind Flower's SecAgg): every
+//! pair of clients (a, b) derives a shared mask vector m_ab from a common
+//! seed; a adds it, b subtracts it, so Σ masked = Σ plain while each
+//! individual update is statistically noise to the server.
+//!
+//! This implementation is the honest "SecAgg0" core: pairwise masks from
+//! a per-round shared seed, no dropout recovery (all maskers must report,
+//! or the round fails — the full protocol adds secret-shared recovery;
+//! see the doc-test in `strategy::secagg` for how failures surface).
+
+use crate::client::keys;
+use crate::error::{Error, Result};
+use crate::proto::scalar::ConfigExt;
+use crate::proto::{
+    EvaluateIns, EvaluateRes, FitIns, FitRes, GetParametersIns, GetParametersRes, Parameters,
+};
+use crate::util::rng::Rng;
+
+use super::Client;
+
+/// Stable 64-bit FNV-1a over a client id string.
+pub fn id_hash(id: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in id.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The pairwise mask stream seed for (a, b) in a given round. Symmetric
+/// in (a, b) — both ends derive the same stream.
+fn pair_seed(base: u64, round: u64, a: &str, b: &str) -> u64 {
+    let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+    base ^ round.wrapping_mul(0x9E3779B97F4A7C15) ^ id_hash(lo).rotate_left(17)
+        ^ id_hash(hi).rotate_left(43)
+}
+
+/// Mask scale: large enough that an individual update is useless to an
+/// observer, small enough that f32 cancellation error stays ~1e-3.
+const MASK_SCALE: f32 = 8.0;
+
+/// Apply pairwise masks to a flat update. `peers` must include every
+/// cohort member of this round, *including* `my_id`.
+pub fn mask_update(
+    params: &mut [f32],
+    my_id: &str,
+    peers: &[&str],
+    round: u64,
+    base_seed: u64,
+) -> Result<()> {
+    if !peers.contains(&my_id) {
+        return Err(Error::Client(format!(
+            "secagg peer list does not contain self ({my_id})"
+        )));
+    }
+    for peer in peers {
+        if *peer == my_id {
+            continue;
+        }
+        let mut rng = Rng::seed_from(pair_seed(base_seed, round, my_id, peer));
+        // sign convention: the lexicographically smaller id adds
+        let sign = if my_id < *peer { 1.0f32 } else { -1.0f32 };
+        for p in params.iter_mut() {
+            *p += sign * MASK_SCALE * rng.normal_f32();
+        }
+    }
+    Ok(())
+}
+
+/// Client wrapper that masks outgoing fit updates when the server's
+/// config carries the SecAgg keys (set by `strategy::SecAgg`).
+pub struct MaskedClient<C: Client> {
+    inner: C,
+    client_id: String,
+}
+
+impl<C: Client> MaskedClient<C> {
+    pub fn new(inner: C, client_id: &str) -> Self {
+        MaskedClient { inner, client_id: client_id.to_string() }
+    }
+}
+
+impl<C: Client> Client for MaskedClient<C> {
+    fn get_parameters(&mut self, ins: GetParametersIns) -> Result<GetParametersRes> {
+        self.inner.get_parameters(ins)
+    }
+
+    fn fit(&mut self, ins: FitIns) -> Result<FitRes> {
+        let peers_csv = ins.config.get_str(keys::SECAGG_PEERS).map(str::to_string);
+        let seed = ins.config.get_i64(keys::SECAGG_SEED);
+        let round = ins.config.get_i64_or(keys::ROUND, 0) as u64;
+        let mut res = self.inner.fit(ins)?;
+        if let (Ok(peers_csv), Ok(seed)) = (peers_csv, seed) {
+            let peers: Vec<&str> = peers_csv.split(',').collect();
+            let mut flat = res.parameters.to_flat_vec()?;
+            mask_update(&mut flat, &self.client_id, &peers, round, seed as u64)?;
+            res.parameters = Parameters::from_flat(flat);
+        }
+        Ok(res)
+    }
+
+    fn evaluate(&mut self, ins: EvaluateIns) -> Result<EvaluateRes> {
+        self.inner.evaluate(ins)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks_cancel_over_cohort() {
+        let peers = ["a", "b", "c", "d"];
+        let p = 512;
+        let plain: Vec<Vec<f32>> = (0..4)
+            .map(|i| (0..p).map(|j| (i * p + j) as f32 * 1e-3).collect())
+            .collect();
+        let mut masked = plain.clone();
+        for (i, id) in peers.iter().enumerate() {
+            mask_update(&mut masked[i], id, &peers, 3, 42).unwrap();
+        }
+        // each individual update is far from the original...
+        for i in 0..4 {
+            let dist: f32 = masked[i]
+                .iter()
+                .zip(&plain[i])
+                .map(|(a, b)| (a - b).abs())
+                .sum::<f32>()
+                / p as f32;
+            assert!(dist > 1.0, "client {i} barely masked: {dist}");
+        }
+        // ...but the sums agree to f32 tolerance
+        for j in 0..p {
+            let sum_plain: f32 = plain.iter().map(|v| v[j]).sum();
+            let sum_masked: f32 = masked.iter().map(|v| v[j]).sum();
+            assert!(
+                (sum_plain - sum_masked).abs() < 1e-3,
+                "j={j}: {sum_plain} vs {sum_masked}"
+            );
+        }
+    }
+
+    #[test]
+    fn masks_differ_per_round_and_seed() {
+        let peers = ["a", "b"];
+        let mk = |round, seed| {
+            let mut v = vec![0f32; 16];
+            mask_update(&mut v, "a", &peers, round, seed).unwrap();
+            v
+        };
+        assert_ne!(mk(1, 42), mk(2, 42));
+        assert_ne!(mk(1, 42), mk(1, 43));
+        assert_eq!(mk(1, 42), mk(1, 42));
+    }
+
+    #[test]
+    fn missing_self_in_peers_is_error() {
+        let mut v = vec![0f32; 4];
+        assert!(mask_update(&mut v, "x", &["a", "b"], 1, 1).is_err());
+    }
+
+    #[test]
+    fn id_hash_stable_and_distinct() {
+        assert_eq!(id_hash("tx2-0"), id_hash("tx2-0"));
+        assert_ne!(id_hash("tx2-0"), id_hash("tx2-1"));
+    }
+}

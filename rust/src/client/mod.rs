@@ -1,0 +1,79 @@
+//! Flower clients: the on-device side of the protocol.
+//!
+//! [`Client`] is the user-facing trait (the paper's `get_weights` / `fit` /
+//! `evaluate` triple, §4.1). [`trainer::DeviceTrainer`] is the production
+//! implementation that trains through the PJRT runtime under a device cost
+//! profile; [`app::run_client`] is the event loop that speaks the Flower
+//! Protocol over any [`crate::transport::Connection`] (the Rust analogue
+//! of the Android `FLOWER CLIENT` background thread of Figure 2).
+
+pub mod app;
+pub mod masking;
+pub mod trainer;
+
+pub use masking::MaskedClient;
+pub use trainer::{BaseModel, DeviceTrainer};
+
+use crate::error::Result;
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, GetParametersIns, GetParametersRes};
+
+/// The three core methods required for federated training with Flower
+/// (paper §4.1). Implementations must be `Send` so a deployment can host
+/// the client behind its connection thread.
+pub trait Client: Send {
+    /// Current local model parameters (server-side aggregation requests).
+    fn get_parameters(&mut self, ins: GetParametersIns) -> Result<GetParametersRes>;
+    /// Update parameters by local training.
+    fn fit(&mut self, ins: FitIns) -> Result<FitRes>;
+    /// Compute test loss/accuracy on the local dataset.
+    fn evaluate(&mut self, ins: EvaluateIns) -> Result<EvaluateRes>;
+}
+
+/// Delegation so wrappers (masking, failure injection) can compose over
+/// boxed clients without generic explosion.
+impl Client for Box<dyn Client> {
+    fn get_parameters(&mut self, ins: GetParametersIns) -> Result<GetParametersRes> {
+        (**self).get_parameters(ins)
+    }
+    fn fit(&mut self, ins: FitIns) -> Result<FitRes> {
+        (**self).fit(ins)
+    }
+    fn evaluate(&mut self, ins: EvaluateIns) -> Result<EvaluateRes> {
+        (**self).evaluate(ins)
+    }
+}
+
+/// Well-known config keys the server sends (kept in one place so the
+/// strategies and trainer cannot drift apart).
+pub mod keys {
+    /// i64: number of local epochs E.
+    pub const EPOCHS: &str = "epochs";
+    /// f64: SGD learning rate.
+    pub const LR: &str = "lr";
+    /// f64: τ cutoff in seconds of *modeled device compute time*; 0 = none.
+    pub const CUTOFF_S: &str = "cutoff_s";
+    /// f64: FedProx μ; 0 = plain SGD.
+    pub const PROX_MU: &str = "prox_mu";
+    /// i64: current server round (informational, shows up in client logs).
+    pub const ROUND: &str = "round";
+    /// str: wire compression for the client's reply ("f16"); absent = f32.
+    pub const QUANTIZE: &str = "quantize";
+    /// str: comma-separated cohort ids for secure aggregation (incl. self).
+    pub const SECAGG_PEERS: &str = "secagg_peers";
+    /// i64: shared base seed for pairwise SecAgg masks.
+    pub const SECAGG_SEED: &str = "secagg_seed";
+
+    // Metrics reported back by the trainer:
+    /// i64: train steps actually executed.
+    pub const STEPS: &str = "steps";
+    /// f64: modeled on-device compute time (s).
+    pub const COMPUTE_TIME_S: &str = "compute_time_s";
+    /// f64: modeled on-device energy (J) for the compute phase.
+    pub const ENERGY_J: &str = "energy_j";
+    /// f64: mean training loss over executed steps.
+    pub const TRAIN_LOSS: &str = "train_loss";
+    /// bool: whether the τ cutoff truncated local training.
+    pub const TRUNCATED: &str = "truncated";
+    /// f64: fraction of correct predictions (evaluate only).
+    pub const ACCURACY: &str = "accuracy";
+}

@@ -1,0 +1,276 @@
+//! `DeviceTrainer`: the production on-device client.
+//!
+//! Local training runs *for real* through the PJRT runtime (the AOT train
+//! artifacts); time and energy are *modeled* from the device profile via
+//! the cost model — exactly the substitution DESIGN.md §2 documents for
+//! the paper's physical testbed.
+//!
+//! Supports the full strategy surface:
+//! * plain FedAvg local epochs (`epochs`, `lr`),
+//! * the paper's τ cutoff (`cutoff_s`): stop mid-epoch once the modeled
+//!   device compute time exceeds τ and return the partial result,
+//! * FedProx (`prox_mu` > 0): proximal local steps via the `*_train_prox`
+//!   artifact.
+//!
+//! For the Android transfer-learning workload (Figure 2) the trainer owns
+//! a frozen [`BaseModel`]; raw local data is pushed through the
+//! `base_features` artifact once at setup, then only the head trains.
+
+use crate::client::keys;
+use crate::data::Dataset;
+use crate::device::DeviceProfile;
+use crate::error::{Error, Result};
+use crate::proto::{
+    ConfigMap, EvaluateIns, EvaluateRes, FitIns, FitRes, GetParametersIns, GetParametersRes,
+    Parameters, Scalar, Status,
+};
+use crate::proto::scalar::ConfigExt;
+use crate::runtime::Runtime;
+use crate::sim::cost::CostModel;
+use crate::util::rng::Rng;
+
+use super::Client;
+
+/// The frozen "MobileNetV2" base model of the Android pipeline: a fixed
+/// random projection shared by the whole federation (the paper ships the
+/// same pre-trained TFLite base to every phone).
+#[derive(Debug, Clone)]
+pub struct BaseModel {
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl BaseModel {
+    /// Deterministically generate the shared base from a seed.
+    pub fn generate(seed: u64, in_dim: usize, out_dim: usize) -> Self {
+        let mut rng = Rng::seed_from(seed ^ 0xBA5E_0001);
+        let scale = (2.0 / in_dim as f64).sqrt() as f32;
+        let w = (0..in_dim * out_dim)
+            .map(|_| scale * rng.normal_f32())
+            .collect();
+        let b = vec![0f32; out_dim];
+        BaseModel { w, b, in_dim, out_dim }
+    }
+}
+
+/// Builder-ish bundle of everything a device needs to participate.
+pub struct DeviceTrainer {
+    runtime: Runtime,
+    model: String,
+    profile: &'static DeviceProfile,
+    cost: CostModel,
+    train: Dataset,
+    test: Dataset,
+    base: Option<BaseModel>,
+    rng: Rng,
+    /// last parameters seen (for `get_parameters`)
+    current: Vec<f32>,
+    default_lr: f64,
+}
+
+impl DeviceTrainer {
+    /// Create a trainer. For the `head` model, `train`/`test` must be raw
+    /// base-model inputs and `base` must be provided — features are
+    /// extracted through the AOT base artifact here (once, like the
+    /// paper's on-device TFLite feature extractor).
+    pub fn new(
+        runtime: Runtime,
+        model: &str,
+        profile: &'static DeviceProfile,
+        cost: CostModel,
+        mut train: Dataset,
+        mut test: Dataset,
+        base: Option<BaseModel>,
+        seed: u64,
+    ) -> Result<Self> {
+        let entry = runtime.manifest().model(model)?.clone();
+        let current = runtime.initial_parameters(model)?;
+        if let Some(base) = &base {
+            train = extract_features(&runtime, model, base, &train, true)?;
+            test = extract_features(&runtime, model, base, &test, false)?;
+        }
+        let expect = entry.example_elements();
+        for (what, d) in [("train", &train), ("test", &test)] {
+            if d.example_elements != expect {
+                return Err(Error::Client(format!(
+                    "{what} data has {} elems/example, model {model} wants {expect}",
+                    d.example_elements
+                )));
+            }
+        }
+        if train.num_batches(entry.train_batch) == 0 {
+            return Err(Error::Client(format!(
+                "train split of {} examples is smaller than one batch ({})",
+                train.len(),
+                entry.train_batch
+            )));
+        }
+        Ok(DeviceTrainer {
+            runtime,
+            model: model.to_string(),
+            profile,
+            cost,
+            train,
+            test,
+            base,
+            rng: Rng::seed_from(seed ^ TRAINER_SALT),
+            current,
+            default_lr: 0.05,
+        })
+    }
+
+    pub fn profile(&self) -> &'static DeviceProfile {
+        self.profile
+    }
+
+    pub fn num_train_examples(&self) -> usize {
+        self.train.len()
+    }
+
+    pub fn base(&self) -> Option<&BaseModel> {
+        self.base.as_ref()
+    }
+}
+
+/// Salt decorrelating the trainer's shuffle stream from the data seed.
+const TRAINER_SALT: u64 = 0x7A11_ED5A;
+
+fn extract_features(
+    runtime: &Runtime,
+    model: &str,
+    base: &BaseModel,
+    data: &Dataset,
+    train_path: bool,
+) -> Result<Dataset> {
+    let entry = runtime.manifest().model(model)?;
+    let batch = if train_path { entry.train_batch } else { entry.eval_batch };
+    let in_dim = base.in_dim;
+    if data.example_elements != in_dim {
+        return Err(Error::Client(format!(
+            "raw data has {} elems/example, base model wants {in_dim}",
+            data.example_elements
+        )));
+    }
+    let usable = data.num_batches(batch) * batch;
+    let mut feats = Vec::with_capacity(usable * base.out_dim);
+    for i in 0..data.num_batches(batch) {
+        let (x, _) = data.batch(i, batch);
+        let f = runtime.base_features(model, x, &base.w, &base.b, train_path)?;
+        feats.extend_from_slice(&f);
+    }
+    Dataset::new(feats, data.y[..usable].to_vec(), base.out_dim)
+}
+
+impl Client for DeviceTrainer {
+    fn get_parameters(&mut self, _ins: GetParametersIns) -> Result<GetParametersRes> {
+        Ok(GetParametersRes {
+            status: Status::ok(),
+            parameters: Parameters::from_flat(self.current.clone()),
+        })
+    }
+
+    fn fit(&mut self, ins: FitIns) -> Result<FitRes> {
+        let entry = self.runtime.manifest().model(&self.model)?.clone();
+        let global = ins.parameters.to_flat_vec()?;
+        if global.len() != entry.param_count {
+            return Err(Error::Client(format!(
+                "server sent {} params, model wants {}",
+                global.len(),
+                entry.param_count
+            )));
+        }
+        let epochs = ins.config.get_i64_or(keys::EPOCHS, 1).max(0) as u64;
+        let lr = ins.config.get_f64_or(keys::LR, self.default_lr) as f32;
+        let cutoff_s = ins.config.get_f64_or(keys::CUTOFF_S, 0.0);
+        let mu = ins.config.get_f64_or(keys::PROX_MU, 0.0) as f32;
+
+        let b = entry.train_batch;
+        let steps_per_epoch = self.train.num_batches(b) as u64;
+        let total_steps = epochs * steps_per_epoch;
+        let max_steps = if cutoff_s > 0.0 {
+            total_steps.min(self.cost.max_steps_within(self.profile, cutoff_s))
+        } else {
+            total_steps
+        };
+
+        let mut params = global.clone();
+        let mut steps_done = 0u64;
+        let mut loss_sum = 0f64;
+        'epochs: for _ in 0..epochs {
+            self.train.shuffle(&mut self.rng);
+            for i in 0..self.train.num_batches(b) {
+                if steps_done >= max_steps {
+                    break 'epochs;
+                }
+                let (x, y) = self.train.batch(i, b);
+                let (new_params, loss) = if mu > 0.0 {
+                    self.runtime
+                        .train_step_prox(&self.model, &params, &global, x, y, lr, mu)?
+                } else {
+                    self.runtime.train_step(&self.model, &params, x, y, lr)?
+                };
+                params = new_params;
+                loss_sum += loss as f64;
+                steps_done += 1;
+            }
+        }
+        let compute = self.cost.compute(self.profile, steps_done);
+        let truncated = steps_done < total_steps;
+        self.current = params.clone();
+
+        let reply_params = if matches!(ins.config.get_str(keys::QUANTIZE), Ok("f16")) {
+            Parameters::from_flat(params).quantize_f16()?
+        } else {
+            Parameters::from_flat(params)
+        };
+        let mut metrics = ConfigMap::new();
+        metrics.insert(keys::STEPS.into(), Scalar::I64(steps_done as i64));
+        metrics.insert(keys::COMPUTE_TIME_S.into(), Scalar::F64(compute.time_s));
+        metrics.insert(keys::ENERGY_J.into(), Scalar::F64(compute.energy_j));
+        metrics.insert(
+            keys::TRAIN_LOSS.into(),
+            Scalar::F64(if steps_done > 0 { loss_sum / steps_done as f64 } else { f64::NAN }),
+        );
+        metrics.insert(keys::TRUNCATED.into(), Scalar::Bool(truncated));
+        Ok(FitRes {
+            status: Status::ok(),
+            parameters: reply_params,
+            num_examples: steps_done * b as u64,
+            metrics,
+        })
+    }
+
+    fn evaluate(&mut self, ins: EvaluateIns) -> Result<EvaluateRes> {
+        let entry = self.runtime.manifest().model(&self.model)?.clone();
+        let params = ins.parameters.to_flat_vec()?;
+        let params = params.as_slice();
+        let b = entry.eval_batch;
+        let batches = self.test.num_batches(b);
+        if batches == 0 {
+            return Err(Error::Client(format!(
+                "test split of {} examples is smaller than one eval batch ({b})",
+                self.test.len()
+            )));
+        }
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for i in 0..batches {
+            let (x, y) = self.test.batch(i, b);
+            let (loss, c) = self.runtime.eval_step(&self.model, params, x, y)?;
+            loss_sum += loss as f64;
+            correct += c as f64;
+        }
+        let n = (batches * b) as u64;
+        let accuracy = correct / n as f64;
+        let mut metrics = ConfigMap::new();
+        metrics.insert(keys::ACCURACY.into(), Scalar::F64(accuracy));
+        Ok(EvaluateRes {
+            status: Status::ok(),
+            loss: loss_sum / batches as f64,
+            num_examples: n,
+            metrics,
+        })
+    }
+}

@@ -1,0 +1,424 @@
+//! Experiment configuration: one declarative struct drives the simulator,
+//! the CLI launcher and the bench harness. Loadable from JSON (parsed by
+//! the in-tree `util::json`), constructible via builder methods in code.
+
+use std::path::Path;
+
+use crate::data::Partitioner;
+use crate::error::{Error, Result};
+use crate::sim::cost::CostModel;
+use crate::util::json::Json;
+
+/// Which strategy drives the server.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StrategyConfig {
+    FedAvg,
+    /// The paper's τ-cutoff FedAvg: per-device cutoffs in seconds.
+    FedAvgCutoff {
+        taus: Vec<(String, f64)>,
+        default_tau_s: Option<f64>,
+    },
+    FedProx { mu: f64 },
+    FedAvgM { beta: f64, server_lr: f64 },
+    QFedAvg { q: f64 },
+}
+
+/// Parameter aggregation backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AggBackend {
+    Rust,
+    /// The Pallas FedAvg kernel through the PJRT runtime.
+    Pjrt,
+}
+
+/// A complete experiment description.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// "cifar_cnn" (Jetson workload) or "head" (Android transfer learning).
+    pub model: String,
+    pub num_clients: usize,
+    pub rounds: u64,
+    /// Local epochs E per round.
+    pub epochs: i64,
+    pub lr: f64,
+    pub strategy: StrategyConfig,
+    pub partitioner: Partitioner,
+    /// Device profile names assigned round-robin; empty = workload default
+    /// (TX2 GPU for cifar_cnn, the AWS phone farm for head).
+    pub devices: Vec<String>,
+    pub train_per_client: usize,
+    pub test_per_client: usize,
+    pub seed: u64,
+    /// Synthetic-task difficulty overrides (None = workload default).
+    pub signal: Option<f32>,
+    pub noise: Option<f32>,
+    pub agg_backend: AggBackend,
+    pub cost: CostModel,
+    pub count_idle_energy: bool,
+    pub target_accuracy: Option<f64>,
+    /// Sampling fraction per round (paper uses full participation).
+    pub fraction_fit: f64,
+    /// f16-quantize parameters on the wire (both directions).
+    pub quantize_f16: bool,
+    /// Probability a client fails a fit request (failure injection).
+    pub dropout: f64,
+    /// Secure aggregation (SecAgg0 pairwise masking; forces unweighted
+    /// mean aggregation and full participation).
+    pub secure_agg: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            model: "cifar_cnn".into(),
+            num_clients: 10,
+            rounds: 40,
+            epochs: 1,
+            lr: 0.05,
+            strategy: StrategyConfig::FedAvg,
+            partitioner: Partitioner::Iid,
+            devices: Vec::new(),
+            train_per_client: 256,
+            test_per_client: 100,
+            seed: 20260710,
+            signal: None,
+            noise: None,
+            agg_backend: AggBackend::Pjrt,
+            cost: CostModel::default(),
+            count_idle_energy: true,
+            target_accuracy: None,
+            fraction_fit: 1.0,
+            quantize_f16: false,
+            dropout: 0.0,
+            secure_agg: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    // -- builder helpers (used heavily by examples and benches) ----------
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.into();
+        self
+    }
+    pub fn model(mut self, model: &str) -> Self {
+        self.model = model.into();
+        self
+    }
+    pub fn clients(mut self, n: usize) -> Self {
+        self.num_clients = n;
+        self
+    }
+    pub fn rounds(mut self, n: u64) -> Self {
+        self.rounds = n;
+        self
+    }
+    pub fn epochs(mut self, e: i64) -> Self {
+        self.epochs = e;
+        self
+    }
+    pub fn lr(mut self, lr: f64) -> Self {
+        self.lr = lr;
+        self
+    }
+    pub fn strategy(mut self, s: StrategyConfig) -> Self {
+        self.strategy = s;
+        self
+    }
+    pub fn devices(mut self, names: &[&str]) -> Self {
+        self.devices = names.iter().map(|s| s.to_string()).collect();
+        self
+    }
+    pub fn data(mut self, train_per_client: usize, test_per_client: usize) -> Self {
+        self.train_per_client = train_per_client;
+        self.test_per_client = test_per_client;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn partitioner(mut self, p: Partitioner) -> Self {
+        self.partitioner = p;
+        self
+    }
+    pub fn difficulty(mut self, signal: f32, noise: f32) -> Self {
+        self.signal = Some(signal);
+        self.noise = Some(noise);
+        self
+    }
+    pub fn agg(mut self, backend: AggBackend) -> Self {
+        self.agg_backend = backend;
+        self
+    }
+    pub fn quantized(mut self, on: bool) -> Self {
+        self.quantize_f16 = on;
+        self
+    }
+    pub fn dropout(mut self, p: f64) -> Self {
+        self.dropout = p;
+        self
+    }
+    pub fn secure(mut self, on: bool) -> Self {
+        self.secure_agg = on;
+        self
+    }
+
+    /// Default device list for the workload, if none configured.
+    pub fn effective_devices(&self) -> Vec<String> {
+        if !self.devices.is_empty() {
+            return self.devices.clone();
+        }
+        if self.model == "head" {
+            crate::device::profiles::aws_device_farm_phones()
+                .iter()
+                .map(|p| p.name.to_string())
+                .collect()
+        } else {
+            vec!["jetson_tx2_gpu".into()]
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.num_clients == 0 {
+            return Err(Error::Config("num_clients must be > 0".into()));
+        }
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds must be > 0".into()));
+        }
+        if self.epochs < 0 {
+            return Err(Error::Config("epochs must be >= 0".into()));
+        }
+        if !(self.lr > 0.0) {
+            return Err(Error::Config("lr must be > 0".into()));
+        }
+        if !(0.0 < self.fraction_fit && self.fraction_fit <= 1.0) {
+            return Err(Error::Config("fraction_fit must be in (0, 1]".into()));
+        }
+        if !(0.0..1.0).contains(&self.dropout) {
+            return Err(Error::Config("dropout must be in [0, 1)".into()));
+        }
+        if self.secure_agg && self.dropout > 0.0 {
+            return Err(Error::Config(
+                "secure_agg requires full participation (SecAgg0 has no dropout                  recovery) — set dropout to 0".into(),
+            ));
+        }
+        if self.model != "cifar_cnn" && self.model != "head" {
+            return Err(Error::Config(format!("unknown model {:?}", self.model)));
+        }
+        for d in &self.devices {
+            crate::device::profiles::by_name(d)?;
+        }
+        if let StrategyConfig::FedAvgCutoff { taus, .. } = &self.strategy {
+            for (d, tau) in taus {
+                crate::device::profiles::by_name(d)?;
+                if *tau <= 0.0 {
+                    return Err(Error::Config(format!("tau for {d} must be > 0")));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // -- JSON loading -----------------------------------------------------
+
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        let get_str = |k: &str| -> Result<Option<String>> {
+            doc.opt(k).map(|v| v.as_str().map(str::to_string)).transpose()
+        };
+        if let Some(v) = get_str("name")? {
+            cfg.name = v;
+        }
+        if let Some(v) = get_str("model")? {
+            cfg.model = v;
+        }
+        if let Some(v) = doc.opt("num_clients") {
+            cfg.num_clients = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("rounds") {
+            cfg.rounds = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.opt("epochs") {
+            cfg.epochs = v.as_f64()? as i64;
+        }
+        if let Some(v) = doc.opt("lr") {
+            cfg.lr = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("fraction_fit") {
+            cfg.fraction_fit = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("partitioner") {
+            cfg.partitioner = Partitioner::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.opt("devices") {
+            cfg.devices = v
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_str().map(str::to_string))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = doc.opt("train_per_client") {
+            cfg.train_per_client = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("test_per_client") {
+            cfg.test_per_client = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("seed") {
+            cfg.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.opt("signal") {
+            cfg.signal = Some(v.as_f64()? as f32);
+        }
+        if let Some(v) = doc.opt("noise") {
+            cfg.noise = Some(v.as_f64()? as f32);
+        }
+        if let Some(v) = doc.opt("target_accuracy") {
+            cfg.target_accuracy = Some(v.as_f64()?);
+        }
+        if let Some(v) = doc.opt("count_idle_energy") {
+            cfg.count_idle_energy = v.as_bool()?;
+        }
+        if let Some(v) = doc.opt("t_step_ref_s") {
+            cfg.cost.t_step_ref_s = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("server_overhead_s") {
+            cfg.cost.server_overhead_s = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("agg_backend") {
+            cfg.agg_backend = match v.as_str()? {
+                "rust" => AggBackend::Rust,
+                "pjrt" => AggBackend::Pjrt,
+                other => {
+                    return Err(Error::Config(format!(
+                        "unknown agg_backend {other:?} (rust | pjrt)"
+                    )))
+                }
+            };
+        }
+        if let Some(v) = doc.opt("quantize_f16") {
+            cfg.quantize_f16 = v.as_bool()?;
+        }
+        if let Some(v) = doc.opt("dropout") {
+            cfg.dropout = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("secure_agg") {
+            cfg.secure_agg = v.as_bool()?;
+        }
+        if let Some(v) = doc.opt("strategy") {
+            cfg.strategy = parse_strategy(v)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+fn parse_strategy(v: &Json) -> Result<StrategyConfig> {
+    let kind = v.get("kind")?.as_str()?;
+    Ok(match kind {
+        "fedavg" => StrategyConfig::FedAvg,
+        "fedavg_cutoff" => {
+            let mut taus = Vec::new();
+            if let Some(map) = v.opt("taus") {
+                for (device, tau) in map.as_obj()? {
+                    taus.push((device.clone(), tau.as_f64()?));
+                }
+            }
+            let default_tau_s = v.opt("default_tau_s").map(Json::as_f64).transpose()?;
+            StrategyConfig::FedAvgCutoff { taus, default_tau_s }
+        }
+        "fedprox" => StrategyConfig::FedProx { mu: v.get("mu")?.as_f64()? },
+        "fedavgm" => StrategyConfig::FedAvgM {
+            beta: v.get("beta")?.as_f64()?,
+            server_lr: v.opt("server_lr").map(Json::as_f64).transpose()?.unwrap_or(1.0),
+        },
+        "qfedavg" => StrategyConfig::QFedAvg { q: v.get("q")?.as_f64()? },
+        other => {
+            return Err(Error::Config(format!("unknown strategy kind {other:?}")))
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn builder_chains() {
+        let cfg = ExperimentConfig::default()
+            .named("t2a")
+            .model("cifar_cnn")
+            .clients(10)
+            .rounds(40)
+            .epochs(10)
+            .lr(0.05)
+            .devices(&["jetson_tx2_gpu"]);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.epochs, 10);
+    }
+
+    #[test]
+    fn effective_devices_defaults() {
+        let cifar = ExperimentConfig::default().model("cifar_cnn");
+        assert_eq!(cifar.effective_devices(), vec!["jetson_tx2_gpu"]);
+        let head = ExperimentConfig::default().model("head");
+        assert_eq!(head.effective_devices().len(), 5);
+    }
+
+    #[test]
+    fn json_roundtrip_full() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{
+                "name": "table3",
+                "model": "cifar_cnn",
+                "num_clients": 10,
+                "rounds": 40,
+                "epochs": 10,
+                "lr": 0.05,
+                "partitioner": "dirichlet:0.5",
+                "devices": ["jetson_tx2_cpu"],
+                "strategy": {
+                    "kind": "fedavg_cutoff",
+                    "taus": {"jetson_tx2_cpu": 119.4}
+                },
+                "agg_backend": "rust",
+                "t_step_ref_s": 0.01
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "table3");
+        assert_eq!(cfg.partitioner, Partitioner::Dirichlet { alpha: 0.5 });
+        assert_eq!(cfg.agg_backend, AggBackend::Rust);
+        assert!(
+            matches!(cfg.strategy, StrategyConfig::FedAvgCutoff { ref taus, .. } if taus[0].1 == 119.4)
+        );
+        assert_eq!(cfg.cost.t_step_ref_s, 0.01);
+    }
+
+    #[test]
+    fn validation_catches_mistakes() {
+        assert!(ExperimentConfig::default().clients(0).validate().is_err());
+        assert!(ExperimentConfig::default().model("resnet152").validate().is_err());
+        assert!(ExperimentConfig::default()
+            .devices(&["nokia3310"])
+            .validate()
+            .is_err());
+        assert!(ExperimentConfig::from_json(r#"{"agg_backend": "gpu"}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"strategy": {"kind": "sgd"}}"#).is_err());
+    }
+}

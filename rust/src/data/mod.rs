@@ -1,0 +1,168 @@
+//! Datasets and partitioning for the FL workloads.
+//!
+//! The paper trains on CIFAR-10 (Jetson) and Office-31 (Android). Neither
+//! is downloadable in this environment, so [`synthetic`] generates
+//! class-conditional Gaussian tasks with the same shapes and a tunable
+//! difficulty — genuinely learnable, so accuracy responds to local epochs
+//! E, cohort size C and the τ cutoff the way the paper's curves do
+//! (substitution documented in DESIGN.md §2).
+//!
+//! [`partition`] splits a dataset across clients: IID, Dirichlet non-IID,
+//! or label shards (the classic pathological FedAvg split).
+
+pub mod partition;
+pub mod synthetic;
+
+pub use partition::Partitioner;
+pub use synthetic::{SyntheticSpec, TaskKind};
+
+use crate::error::{Error, Result};
+
+/// A flat, row-major dataset: `n` examples of `example_elements` f32s each
+/// plus one i32 label per example.
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub example_elements: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f32>, y: Vec<i32>, example_elements: usize) -> Result<Self> {
+        if example_elements == 0 || x.len() != y.len() * example_elements {
+            return Err(Error::Config(format!(
+                "dataset shape mismatch: {} features, {} labels, {} elems/example",
+                x.len(),
+                y.len(),
+                example_elements
+            )));
+        }
+        Ok(Dataset { x, y, example_elements })
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    /// Number of whole batches of size `b` (remainder dropped).
+    pub fn num_batches(&self, b: usize) -> usize {
+        self.len() / b
+    }
+
+    /// Borrow batch `i` of size `b`.
+    pub fn batch(&self, i: usize, b: usize) -> (&[f32], &[i32]) {
+        let lo = i * b;
+        let hi = lo + b;
+        (
+            &self.x[lo * self.example_elements..hi * self.example_elements],
+            &self.y[lo..hi],
+        )
+    }
+
+    /// Select a subset by example indices (used by partitioners).
+    pub fn select(&self, indices: &[usize]) -> Dataset {
+        let e = self.example_elements;
+        let mut x = Vec::with_capacity(indices.len() * e);
+        let mut y = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(&self.x[i * e..(i + 1) * e]);
+            y.push(self.y[i]);
+        }
+        Dataset { x, y, example_elements: e }
+    }
+
+    /// In-place example shuffle.
+    pub fn shuffle(&mut self, rng: &mut crate::util::rng::Rng) {
+        let n = self.len();
+        let e = self.example_elements;
+        for i in (1..n).rev() {
+            let j = rng.below(i + 1);
+            if i != j {
+                self.y.swap(i, j);
+                // swap rows i and j of x
+                let (lo, hi) = (i.min(j), i.max(j));
+                let (head, tail) = self.x.split_at_mut(hi * e);
+                head[lo * e..(lo + 1) * e].swap_with_slice(&mut tail[..e]);
+            }
+        }
+    }
+
+    /// Replace feature space (e.g. after frozen-base feature extraction).
+    pub fn with_features(&self, x: Vec<f32>, example_elements: usize) -> Result<Dataset> {
+        Dataset::new(x, self.y.clone(), example_elements)
+    }
+
+    /// Per-class histogram over `classes` labels.
+    pub fn label_histogram(&self, classes: usize) -> Vec<usize> {
+        let mut h = vec![0usize; classes];
+        for &y in &self.y {
+            if (y as usize) < classes {
+                h[y as usize] += 1;
+            }
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny() -> Dataset {
+        Dataset::new(
+            (0..20).map(|i| i as f32).collect(),
+            (0..10).map(|i| (i % 3) as i32).collect(),
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Dataset::new(vec![0.0; 6], vec![0; 3], 2).is_ok());
+        assert!(Dataset::new(vec![0.0; 5], vec![0; 3], 2).is_err());
+        assert!(Dataset::new(vec![], vec![], 0).is_err());
+    }
+
+    #[test]
+    fn batching() {
+        let d = tiny();
+        assert_eq!(d.num_batches(3), 3);
+        let (x, y) = d.batch(1, 3);
+        assert_eq!(x, &[6.0, 7.0, 8.0, 9.0, 10.0, 11.0]);
+        assert_eq!(y, &[0, 1, 2]);
+    }
+
+    #[test]
+    fn select_gathers_rows() {
+        let d = tiny();
+        let s = d.select(&[0, 9]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.x, vec![0.0, 1.0, 18.0, 19.0]);
+        assert_eq!(s.y, vec![0, 0]);
+    }
+
+    #[test]
+    fn shuffle_keeps_row_pairing() {
+        let mut d = tiny();
+        let before: std::collections::BTreeSet<(i64, i64, i32)> = (0..d.len())
+            .map(|i| (d.x[2 * i] as i64, d.x[2 * i + 1] as i64, d.y[i]))
+            .collect();
+        d.shuffle(&mut Rng::seed_from(1));
+        let after: std::collections::BTreeSet<(i64, i64, i32)> = (0..d.len())
+            .map(|i| (d.x[2 * i] as i64, d.x[2 * i + 1] as i64, d.y[i]))
+            .collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn histogram() {
+        let d = tiny();
+        assert_eq!(d.label_histogram(3), vec![4, 3, 3]);
+    }
+}

@@ -1,0 +1,211 @@
+//! Client partitioners: how the global training data is split across the
+//! federation. IID matches the paper's experiments; Dirichlet and shard
+//! splits are the standard non-IID stress tests (used by the ablation
+//! benches).
+
+use super::Dataset;
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// Partitioning policy.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Partitioner {
+    /// Shuffle, then equal contiguous chunks.
+    Iid,
+    /// Label distribution per client ~ Dirichlet(alpha): small alpha =
+    /// pathological heterogeneity, large alpha → IID.
+    Dirichlet { alpha: f64 },
+    /// Sort by label, split into `shards_per_client * n` shards, deal
+    /// each client that many shards (McMahan et al. 2017 style).
+    Shards { shards_per_client: usize },
+}
+
+impl Partitioner {
+    /// Parse from a config string: `iid`, `dirichlet:0.5`, `shards:2`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let mut it = s.splitn(2, ':');
+        match (it.next().unwrap_or(""), it.next()) {
+            ("iid", None) => Ok(Partitioner::Iid),
+            ("dirichlet", Some(a)) => a
+                .parse()
+                .map(|alpha| Partitioner::Dirichlet { alpha })
+                .map_err(|_| Error::Config(format!("bad dirichlet alpha in {s:?}"))),
+            ("shards", Some(k)) => k
+                .parse()
+                .map(|shards_per_client| Partitioner::Shards { shards_per_client })
+                .map_err(|_| Error::Config(format!("bad shard count in {s:?}"))),
+            _ => Err(Error::Config(format!(
+                "unknown partitioner {s:?} (iid | dirichlet:<alpha> | shards:<k>)"
+            ))),
+        }
+    }
+
+    /// Split `data` into `n_clients` local datasets.
+    pub fn split(&self, data: &Dataset, n_clients: usize, rng: &mut Rng) -> Result<Vec<Dataset>> {
+        if n_clients == 0 {
+            return Err(Error::Config("cannot partition to 0 clients".into()));
+        }
+        if data.len() < n_clients {
+            return Err(Error::Config(format!(
+                "{} examples cannot cover {n_clients} clients",
+                data.len()
+            )));
+        }
+        match self {
+            Partitioner::Iid => {
+                let mut idx: Vec<usize> = (0..data.len()).collect();
+                rng.shuffle(&mut idx);
+                let per = data.len() / n_clients;
+                Ok((0..n_clients)
+                    .map(|c| data.select(&idx[c * per..(c + 1) * per]))
+                    .collect())
+            }
+            Partitioner::Dirichlet { alpha } => {
+                if *alpha <= 0.0 {
+                    return Err(Error::Config("dirichlet alpha must be > 0".into()));
+                }
+                // bucket example indices by label
+                let classes = 1 + data.y.iter().copied().max().unwrap_or(0).max(0) as usize;
+                let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); classes];
+                for (i, &y) in data.y.iter().enumerate() {
+                    buckets[y as usize].push(i);
+                }
+                let mut assignments: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+                for bucket in &mut buckets {
+                    rng.shuffle(bucket);
+                    let props = rng.dirichlet(*alpha, n_clients);
+                    // convert proportions to contiguous cut points
+                    let mut start = 0usize;
+                    for (c, p) in props.iter().enumerate() {
+                        let take = if c + 1 == n_clients {
+                            bucket.len() - start
+                        } else {
+                            ((p * bucket.len() as f64).round() as usize)
+                                .min(bucket.len() - start)
+                        };
+                        assignments[c].extend_from_slice(&bucket[start..start + take]);
+                        start += take;
+                    }
+                }
+                for a in &mut assignments {
+                    rng.shuffle(a);
+                }
+                Ok(assignments.iter().map(|a| data.select(a)).collect())
+            }
+            Partitioner::Shards { shards_per_client } => {
+                let k = shards_per_client * n_clients;
+                if *shards_per_client == 0 || data.len() < k {
+                    return Err(Error::Config(format!(
+                        "cannot cut {} examples into {k} shards",
+                        data.len()
+                    )));
+                }
+                let mut idx: Vec<usize> = (0..data.len()).collect();
+                idx.sort_by_key(|&i| data.y[i]);
+                let shard_len = data.len() / k;
+                let mut shard_ids: Vec<usize> = (0..k).collect();
+                rng.shuffle(&mut shard_ids);
+                Ok((0..n_clients)
+                    .map(|c| {
+                        let mut rows = Vec::with_capacity(shards_per_client * shard_len);
+                        for s in 0..*shards_per_client {
+                            let shard = shard_ids[c * shards_per_client + s];
+                            rows.extend_from_slice(
+                                &idx[shard * shard_len..(shard + 1) * shard_len],
+                            );
+                        }
+                        data.select(&rows)
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::SyntheticSpec;
+
+    fn data() -> Dataset {
+        SyntheticSpec::cifar_like(11).generate(1000, 0)
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Partitioner::parse("iid").unwrap(), Partitioner::Iid);
+        assert_eq!(
+            Partitioner::parse("dirichlet:0.5").unwrap(),
+            Partitioner::Dirichlet { alpha: 0.5 }
+        );
+        assert_eq!(
+            Partitioner::parse("shards:2").unwrap(),
+            Partitioner::Shards { shards_per_client: 2 }
+        );
+        assert!(Partitioner::parse("nope").is_err());
+        assert!(Partitioner::parse("dirichlet:x").is_err());
+    }
+
+    #[test]
+    fn iid_covers_without_overlap() {
+        let d = data();
+        let parts = Partitioner::Iid.split(&d, 10, &mut Rng::seed_from(1)).unwrap();
+        assert_eq!(parts.len(), 10);
+        let total: usize = parts.iter().map(Dataset::len).sum();
+        assert_eq!(total, 1000);
+        // label distribution per part roughly uniform
+        for p in &parts {
+            let h = p.label_histogram(10);
+            assert!(h.iter().all(|&c| c > 0), "IID part missing a class: {h:?}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_skews_labels() {
+        let d = data();
+        let parts = Partitioner::Dirichlet { alpha: 0.1 }
+            .split(&d, 10, &mut Rng::seed_from(2))
+            .unwrap();
+        let total: usize = parts.iter().map(Dataset::len).sum();
+        assert_eq!(total, 1000);
+        // at alpha=0.1 most clients should be dominated by few classes
+        let dominated = parts
+            .iter()
+            .filter(|p| {
+                if p.is_empty() {
+                    return false;
+                }
+                let h = p.label_histogram(10);
+                let max = *h.iter().max().unwrap();
+                max as f64 / p.len() as f64 > 0.5
+            })
+            .count();
+        assert!(dominated >= 5, "only {dominated} clients dominated");
+    }
+
+    #[test]
+    fn shards_give_few_classes() {
+        let d = data();
+        let parts = Partitioner::Shards { shards_per_client: 2 }
+            .split(&d, 10, &mut Rng::seed_from(3))
+            .unwrap();
+        for p in &parts {
+            let classes_present = p.label_histogram(10).iter().filter(|&&c| c > 0).count();
+            assert!(classes_present <= 4, "{classes_present} classes in a 2-shard part");
+        }
+    }
+
+    #[test]
+    fn errors_on_degenerate_inputs() {
+        let d = data();
+        assert!(Partitioner::Iid.split(&d, 0, &mut Rng::seed_from(4)).is_err());
+        assert!(Partitioner::Dirichlet { alpha: 0.0 }
+            .split(&d, 4, &mut Rng::seed_from(4))
+            .is_err());
+        assert!(Partitioner::Shards { shards_per_client: 0 }
+            .split(&d, 4, &mut Rng::seed_from(4))
+            .is_err());
+        let tiny = SyntheticSpec::cifar_like(1).generate(3, 0);
+        assert!(Partitioner::Iid.split(&tiny, 10, &mut Rng::seed_from(4)).is_err());
+    }
+}

@@ -1,0 +1,72 @@
+//! AWS-Device-Farm-style allocator: check out N devices from an inventory,
+//! cycling through the available models the way the paper scaled "to a
+//! reasonably large number of Android clients with different OS versions".
+
+use super::DeviceProfile;
+use crate::error::{Error, Result};
+
+/// A pool of physical devices available for checkout.
+#[derive(Debug, Clone)]
+pub struct DeviceFarm {
+    inventory: Vec<&'static DeviceProfile>,
+    next: usize,
+}
+
+impl DeviceFarm {
+    pub fn new(inventory: Vec<&'static DeviceProfile>) -> Result<Self> {
+        if inventory.is_empty() {
+            return Err(Error::Config("device farm inventory is empty".into()));
+        }
+        Ok(DeviceFarm { inventory, next: 0 })
+    }
+
+    /// The paper's Android farm (Table 1).
+    pub fn aws_android() -> Self {
+        DeviceFarm::new(super::profiles::aws_device_farm_phones()).expect("non-empty")
+    }
+
+    /// A homogeneous farm of one device model (the Jetson experiments).
+    pub fn homogeneous(device: &str) -> Result<Self> {
+        DeviceFarm::new(vec![super::profiles::by_name(device)?])
+    }
+
+    /// Check out the next device (round-robin over the inventory, like
+    /// requesting "any available Pixel/Galaxy" from the real farm).
+    pub fn checkout(&mut self) -> &'static DeviceProfile {
+        let p = self.inventory[self.next % self.inventory.len()];
+        self.next += 1;
+        p
+    }
+
+    /// Check out `n` devices.
+    pub fn checkout_n(&mut self, n: usize) -> Vec<&'static DeviceProfile> {
+        (0..n).map(|_| self.checkout()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_inventory() {
+        let mut farm = DeviceFarm::aws_android();
+        let got = farm.checkout_n(7);
+        assert_eq!(got[0].name, "pixel4");
+        assert_eq!(got[4].name, "galaxy_tab_s4");
+        assert_eq!(got[5].name, "pixel4"); // wrapped
+        assert_eq!(got[6].name, "pixel3");
+    }
+
+    #[test]
+    fn homogeneous_farm() {
+        let mut farm = DeviceFarm::homogeneous("jetson_tx2_gpu").unwrap();
+        assert!(farm.checkout_n(10).iter().all(|p| p.name == "jetson_tx2_gpu"));
+        assert!(DeviceFarm::homogeneous("toaster").is_err());
+    }
+
+    #[test]
+    fn empty_inventory_rejected() {
+        assert!(DeviceFarm::new(vec![]).is_err());
+    }
+}

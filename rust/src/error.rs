@@ -1,0 +1,82 @@
+//! Unified error type for the flowrs stack.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All the ways the coordinator can fail.
+#[derive(Debug)]
+pub enum Error {
+    /// Wire-format encode/decode failures (bad magic, truncation, ...).
+    Codec(String),
+    /// Transport-level I/O (TCP, in-proc channel closed, frame too large).
+    Transport(String),
+    /// PJRT runtime: artifact loading, compilation, execution.
+    Runtime(String),
+    /// Manifest / artifact directory problems.
+    Artifact(String),
+    /// Configuration validation.
+    Config(String),
+    /// FL-protocol level: a client misbehaved or a round could not proceed.
+    Protocol(String),
+    /// Strategy-level aggregation failures (no results, shape mismatch, ...).
+    Aggregation(String),
+    /// Client-side training failures.
+    Client(String),
+    /// Timeouts waiting for clients.
+    Timeout(String),
+    /// Underlying std I/O error.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Aggregation(m) => write!(f, "aggregation error: {m}"),
+            Error::Client(m) => write!(f, "client error: {m}"),
+            Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category() {
+        let e = Error::Codec("bad magic".into());
+        assert!(e.to_string().contains("codec"));
+        let e = Error::Timeout("fit round 3".into());
+        assert!(e.to_string().contains("timeout"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::Other, "boom");
+        let e: Error = ioe.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

@@ -1,0 +1,39 @@
+//! # flowrs — On-device Federated Learning with Flower, in Rust
+//!
+//! A reproduction of *"On-device Federated Learning with Flower"* (Mathur et
+//! al., MLSys 2021 on-device workshop) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the Flower coordinator: the FL loop ([`server`]),
+//!   the RPC server and wire protocol ([`transport`], [`proto`]), the
+//!   pluggable [`strategy`] abstraction (FedAvg and the paper's τ-cutoff
+//!   variant among others), the on-device client runtime ([`client`]), and
+//!   the heterogeneous-device simulation substrate ([`device`], [`sim`]).
+//! * **L2 (JAX, build-time)** — the training workloads (CIFAR CNN, frozen
+//!   base + trainable head), lowered once to HLO text under `artifacts/`.
+//! * **L1 (Pallas, build-time)** — fused dense fwd/bwd, softmax-xent, SGD
+//!   and FedAvg-aggregation kernels inside those HLO modules.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads the
+//! AOT artifacts through the `xla` crate's PJRT CPU client and executes
+//! train / eval / feature-extraction / aggregation steps natively.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index,
+//! and `EXPERIMENTS.md` for paper-vs-measured numbers.
+
+pub mod client;
+pub mod config;
+pub mod data;
+pub mod device;
+pub mod error;
+pub mod metrics;
+pub mod proto;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod strategy;
+pub mod telemetry;
+pub mod transport;
+pub mod util;
+
+pub use error::{Error, Result};

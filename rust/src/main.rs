@@ -1,0 +1,443 @@
+//! `flowrs` — the launcher CLI.
+//!
+//! Subcommands:
+//! * `sim`       — run a federated experiment in the device-farm simulator
+//! * `server`    — start a Flower TCP server (cloud side of the paper)
+//! * `client`    — start one on-device TCP client
+//! * `devices`   — print the device inventory (paper Table 1)
+//! * `artifacts` — verify the AOT artifact bundle end-to-end
+//!
+//! Run `flowrs help` for flags.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+use std::time::Duration;
+
+use flowrs::client::{app, BaseModel, DeviceTrainer};
+use flowrs::config::{AggBackend, ExperimentConfig, StrategyConfig};
+use flowrs::data::{Partitioner, SyntheticSpec};
+use flowrs::device::profiles;
+use flowrs::error::{Error, Result};
+use flowrs::metrics::Table;
+use flowrs::proto::{ClientInfo, Parameters};
+use flowrs::runtime::Runtime;
+use flowrs::server::{serve_registrations, ClientManager, Server, ServerConfig};
+use flowrs::sim;
+use flowrs::strategy::fedavg::TrainingPlan;
+use flowrs::strategy::{Aggregator, FedAvg};
+use flowrs::telemetry::log;
+use flowrs::transport::tcp::{TcpConnection, TcpTransportListener};
+use flowrs::transport::Connection;
+
+/// Tiny flag parser: `--key value` pairs plus positional words.
+struct Args {
+    flags: BTreeMap<String, String>,
+    #[allow(dead_code)]
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Self> {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if key == "help" {
+                    flags.insert("help".into(), "true".into());
+                    i += 1;
+                    continue;
+                }
+                let val = argv
+                    .get(i + 1)
+                    .ok_or_else(|| Error::Config(format!("flag --{key} needs a value")))?;
+                flags.insert(key.to_string(), val.clone());
+                i += 2;
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(Args { flags, positional })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        self.get(key)
+            .map(|v| {
+                v.parse()
+                    .map_err(|_| Error::Config(format!("bad value for --{key}: {v:?}")))
+            })
+            .transpose()
+    }
+
+    fn has_help(&self) -> bool {
+        self.get("help").is_some()
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        print_usage();
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd {
+        "sim" => cmd_sim(&args),
+        "server" => cmd_server(&args),
+        "client" => cmd_client(&args),
+        "devices" => cmd_devices(),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown command {other:?}; try `flowrs help`"
+        ))),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "flowrs — On-device Federated Learning with Flower (Rust + JAX + Pallas)\n\
+         \n\
+         USAGE: flowrs <command> [flags]\n\
+         \n\
+         COMMANDS:\n\
+           sim        run an experiment in the device-farm simulator\n\
+                      --config <file.json> | --model --clients --rounds --epochs --lr\n\
+                      --devices a,b,c --partitioner iid|dirichlet:A|shards:K\n\
+                      --strategy fedavg|fedprox:MU|cutoff:DEV=TAU_S[,..]|fedavgm:BETA|qfedavg:Q\n\
+                      --quantize f16|off --dropout P --agg rust|pjrt\n\
+                      --t-step-ref <s> --out <csv> --artifacts <dir>\n\
+           server     start a Flower TCP server\n\
+                      --addr 127.0.0.1:9092 --model cifar_cnn --rounds 10 --epochs 1\n\
+                      --lr 0.05 --quorum 2 --artifacts <dir>\n\
+           client     start one on-device TCP client\n\
+                      --addr 127.0.0.1:9092 --model cifar_cnn --device jetson_tx2_gpu\n\
+                      --id c0 --train 256 --test 100 --seed 1 --stream 1 --artifacts <dir>\n\
+           devices    print the device inventory (paper Table 1)\n\
+           artifacts  verify the AOT bundle: load, compile, smoke-run\n"
+    );
+}
+
+fn artifact_dir(args: &Args) -> PathBuf {
+    args.get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(flowrs::runtime::default_artifact_dir)
+}
+
+fn parse_strategy_flag(s: &str) -> Result<StrategyConfig> {
+    if s == "fedavg" {
+        return Ok(StrategyConfig::FedAvg);
+    }
+    if let Some(rest) = s.strip_prefix("fedprox:") {
+        let mu = rest
+            .parse()
+            .map_err(|_| Error::Config(format!("bad mu in {s:?}")))?;
+        return Ok(StrategyConfig::FedProx { mu });
+    }
+    if let Some(rest) = s.strip_prefix("fedavgm:") {
+        let beta = rest
+            .parse()
+            .map_err(|_| Error::Config(format!("bad beta in {s:?}")))?;
+        return Ok(StrategyConfig::FedAvgM { beta, server_lr: 1.0 });
+    }
+    if let Some(rest) = s.strip_prefix("qfedavg:") {
+        let q = rest
+            .parse()
+            .map_err(|_| Error::Config(format!("bad q in {s:?}")))?;
+        return Ok(StrategyConfig::QFedAvg { q });
+    }
+    if let Some(rest) = s.strip_prefix("cutoff:") {
+        let mut taus = Vec::new();
+        let mut default_tau_s = None;
+        for part in rest.split(',') {
+            let (dev, tau) = part
+                .split_once('=')
+                .ok_or_else(|| Error::Config(format!("cutoff wants DEV=TAU, got {part:?}")))?;
+            let tau: f64 = tau
+                .parse()
+                .map_err(|_| Error::Config(format!("bad tau in {part:?}")))?;
+            if dev == "default" {
+                default_tau_s = Some(tau);
+            } else {
+                taus.push((dev.to_string(), tau));
+            }
+        }
+        return Ok(StrategyConfig::FedAvgCutoff { taus, default_tau_s });
+    }
+    Err(Error::Config(format!("unknown strategy {s:?}")))
+}
+
+fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ExperimentConfig::from_json_file(&PathBuf::from(path))?
+    } else {
+        ExperimentConfig::default()
+    };
+    if let Some(v) = args.get("model") {
+        cfg.model = v.into();
+    }
+    if let Some(v) = args.get_parsed("clients")? {
+        cfg.num_clients = v;
+    }
+    if let Some(v) = args.get_parsed("rounds")? {
+        cfg.rounds = v;
+    }
+    if let Some(v) = args.get_parsed("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.get_parsed("lr")? {
+        cfg.lr = v;
+    }
+    if let Some(v) = args.get_parsed("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_parsed("train-per-client")? {
+        cfg.train_per_client = v;
+    }
+    if let Some(v) = args.get_parsed("test-per-client")? {
+        cfg.test_per_client = v;
+    }
+    if let Some(v) = args.get_parsed("t-step-ref")? {
+        cfg.cost.t_step_ref_s = v;
+    }
+    if let Some(v) = args.get("devices") {
+        cfg.devices = v.split(',').map(str::to_string).collect();
+    }
+    if let Some(v) = args.get("partitioner") {
+        cfg.partitioner = Partitioner::parse(v)?;
+    }
+    if let Some(v) = args.get("strategy") {
+        cfg.strategy = parse_strategy_flag(v)?;
+    }
+    if let Some(v) = args.get("agg") {
+        cfg.agg_backend = match v {
+            "rust" => AggBackend::Rust,
+            "pjrt" => AggBackend::Pjrt,
+            other => return Err(Error::Config(format!("unknown agg backend {other:?}"))),
+        };
+    }
+    if let Some(v) = args.get("quantize") {
+        cfg.quantize_f16 = match v {
+            "f16" => true,
+            "off" => false,
+            other => return Err(Error::Config(format!("unknown quantize mode {other:?}"))),
+        };
+    }
+    if let Some(v) = args.get_parsed("dropout")? {
+        cfg.dropout = v;
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    if args.has_help() {
+        print_usage();
+        return Ok(());
+    }
+    let cfg = config_from_args(args)?;
+    let runtime = Runtime::load(&artifact_dir(args))?;
+    let report = sim::run_experiment(&cfg, &runtime)?;
+    let (acc, mins, kj) = report.paper_metrics();
+    let mut table = Table::new(
+        &format!("experiment {:?} ({} rounds)", report.name, report.rounds_run),
+        &["metric", "value"],
+    );
+    table.row(vec!["accuracy".into(), format!("{acc:.4}")]);
+    table.row(vec!["convergence time (min)".into(), format!("{mins:.2}")]);
+    table.row(vec!["energy (kJ)".into(), format!("{kj:.2}")]);
+    print!("{}", table.render());
+    if let Some(out) = args.get("out") {
+        flowrs::metrics::write_report(&PathBuf::from(out), &report.history.to_csv())?;
+        log::info(&format!("wrote per-round CSV to {out}"));
+    }
+    Ok(())
+}
+
+fn cmd_server(args: &Args) -> Result<()> {
+    if args.has_help() {
+        print_usage();
+        return Ok(());
+    }
+    let addr = args.get("addr").unwrap_or("127.0.0.1:9092").to_string();
+    let model = args.get("model").unwrap_or("cifar_cnn").to_string();
+    let rounds: u64 = args.get_parsed("rounds")?.unwrap_or(10);
+    let epochs: i64 = args.get_parsed("epochs")?.unwrap_or(1);
+    let lr: f64 = args.get_parsed("lr")?.unwrap_or(0.05);
+    let quorum: usize = args.get_parsed("quorum")?.unwrap_or(2);
+
+    let runtime = Runtime::load(&artifact_dir(args))?;
+    let listener = TcpTransportListener::bind(&addr)?;
+    log::info(&format!("flower server listening on {addr}"));
+    let manager = Arc::new(ClientManager::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let reg_thread = serve_registrations(listener, Arc::clone(&manager), Arc::clone(&stop));
+
+    let strategy = FedAvg::new(
+        TrainingPlan { epochs, lr },
+        Aggregator::Pjrt { runtime: runtime.clone(), model: model.clone() },
+    );
+    let mut server = Server::new(
+        Arc::clone(&manager),
+        Box::new(strategy),
+        Default::default(),
+        ServerConfig {
+            num_rounds: rounds,
+            quorum,
+            quorum_timeout: Duration::from_secs(120),
+            ..Default::default()
+        },
+    );
+    let initial = Parameters::from_flat(runtime.initial_parameters(&model)?);
+    let history = server.run(initial)?;
+    println!(
+        "final accuracy {:.4} after {} rounds ({:.1} min modeled, {:.1} kJ)",
+        history.final_accuracy(),
+        history.rounds.len(),
+        history.total_time_s() / 60.0,
+        history.total_energy_j() / 1e3,
+    );
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    // Nudge the blocking accept() so the registration thread can exit.
+    let _ = TcpConnection::connect(&addr);
+    let _ = reg_thread.join();
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    if args.has_help() {
+        print_usage();
+        return Ok(());
+    }
+    let addr = args.get("addr").unwrap_or("127.0.0.1:9092").to_string();
+    let model = args.get("model").unwrap_or("cifar_cnn").to_string();
+    let device_name = args.get("device").unwrap_or("jetson_tx2_gpu").to_string();
+    let id = args.get("id").unwrap_or("client-0").to_string();
+    let train_n: usize = args.get_parsed("train")?.unwrap_or(256);
+    let test_n: usize = args.get_parsed("test")?.unwrap_or(100);
+    let seed: u64 = args.get_parsed("seed")?.unwrap_or(20260710);
+    let stream: u64 = args.get_parsed("stream")?.unwrap_or(1);
+
+    let runtime = Runtime::load(&artifact_dir(args))?;
+    let device = profiles::by_name(&device_name)?;
+    let spec = if model == "head" {
+        SyntheticSpec::office_like(seed)
+    } else {
+        SyntheticSpec::cifar_like(seed)
+    };
+    let train = spec.generate(train_n, stream);
+    let test = spec.generate(test_n, 1000 + stream);
+    let base = if model == "head" {
+        let entry = runtime.manifest().model("head")?;
+        Some(BaseModel::generate(
+            seed ^ 0xBA5E,
+            entry.base_input.unwrap_or(3072),
+            entry.feature_dim.unwrap_or(1280),
+        ))
+    } else {
+        None
+    };
+    let mut trainer = DeviceTrainer::new(
+        runtime,
+        &model,
+        device,
+        Default::default(),
+        train,
+        test,
+        base,
+        seed ^ stream,
+    )?;
+    let info = ClientInfo {
+        client_id: id,
+        device: device_name,
+        os: device.os.to_string(),
+        num_examples: trainer.num_train_examples() as u64,
+    };
+    log::info(&format!("client {} connecting to {addr}", info.client_id));
+    let conn = Connection::Tcp(TcpConnection::connect(&addr)?);
+    app::run_client(conn, &mut trainer, info)?;
+    log::info("client done");
+    Ok(())
+}
+
+fn cmd_devices() -> Result<()> {
+    let mut table = Table::new(
+        "Device inventory (paper Table 1 + embedded devices)",
+        &["Device", "Type", "OS", "Proc", "Step factor", "P_train (W)", "BW (Mbps)"],
+    );
+    for p in profiles::ALL {
+        table.row(vec![
+            p.name.into(),
+            format!("{:?}", p.kind),
+            p.os.into(),
+            format!("{:?}", p.processor),
+            format!("{:.2}", p.compute_factor),
+            format!("{:.1}", p.train_power_w),
+            format!("{:.0}", p.bandwidth_mbps),
+        ]);
+    }
+    print!("{}", table.render());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = artifact_dir(args);
+    println!("checking artifact bundle in {} ...", dir.display());
+    let runtime = Runtime::load(&dir)?;
+    let manifest = runtime.manifest().clone();
+    for (name, model) in &manifest.models {
+        println!("model {name}: {} params", model.param_count);
+        let params = runtime.initial_parameters(name)?;
+        let spec = if name == "head" {
+            SyntheticSpec::office_like(1)
+        } else {
+            SyntheticSpec::cifar_like(1)
+        };
+        let (x, y) = if name == "head" {
+            let base = BaseModel::generate(
+                1,
+                model.base_input.unwrap_or(3072),
+                model.feature_dim.unwrap_or(1280),
+            );
+            let raw = spec.generate(model.train_batch, 0);
+            let feats = runtime.base_features(name, &raw.x, &base.w, &base.b, true)?;
+            (feats, raw.y)
+        } else {
+            let d = spec.generate(model.train_batch, 0);
+            (d.x, d.y)
+        };
+        let (new_params, loss) = runtime.train_step(name, &params, &x, &y, 0.05)?;
+        println!("  train_step OK: loss={loss:.4}");
+        let agg = runtime.aggregate(name, &[&new_params], &[1.0])?;
+        let drift = agg
+            .iter()
+            .zip(&new_params)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        println!("  aggregate OK: identity drift={drift:.2e}");
+    }
+    println!("artifact bundle OK ({} executions)", runtime.executions());
+    Ok(())
+}

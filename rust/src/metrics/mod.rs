@@ -1,0 +1,126 @@
+//! Experiment reporting: paper-style tables and CSV export.
+
+use crate::sim::SimReport;
+
+/// A simple text table with aligned columns (stdout-friendly, matching the
+/// layout of the paper's Tables 2 and 3).
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("\n{}\n", self.title));
+        let line_len: usize = widths.iter().sum::<usize>() + 3 * widths.len() + 1;
+        out.push_str(&"-".repeat(line_len));
+        out.push('\n');
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (cell, w) in cells.iter().zip(widths) {
+                s.push_str(&format!(" {cell:>w$} |", w = w));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&fmt_row(&self.headers, &widths));
+        out.push_str(&"-".repeat(line_len));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+        }
+        out.push_str(&"-".repeat(line_len));
+        out.push('\n');
+        out
+    }
+
+    /// CSV form of the same table.
+    pub fn to_csv(&self) -> String {
+        let mut out = self.headers.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a paper Table-2-style row from a sim report:
+/// (label, accuracy, convergence-time minutes, energy kJ).
+pub fn paper_row(label: &str, report: &SimReport) -> Vec<String> {
+    let (acc, mins, kj) = report.paper_metrics();
+    vec![
+        label.to_string(),
+        format!("{acc:.2}"),
+        format!("{mins:.2}"),
+        format!("{kj:.2}"),
+    ]
+}
+
+/// Write a string to a file, creating parent dirs.
+pub fn write_report(path: &std::path::Path, content: &str) -> crate::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("Table X", &["Local Epochs (E)", "Accuracy"]);
+        t.row(vec!["1".into(), "0.48".into()]);
+        t.row(vec!["10".into(), "0.67".into()]);
+        let s = t.render();
+        assert!(s.contains("Table X"));
+        assert!(s.contains("0.48 |")); // right-aligned within header width
+        // all data lines have equal width
+        let widths: Vec<usize> = s
+            .lines()
+            .filter(|l| l.starts_with('|'))
+            .map(str::len)
+            .collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_export() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+}

@@ -1,0 +1,625 @@
+//! Hand-rolled binary wire format for the Flower Protocol.
+//!
+//! The paper's framework achieves language-agnosticism "by offering
+//! protocol-level integration" (§3): any client that can speak the byte
+//! format participates, regardless of language or ML framework. This codec
+//! is that byte format, pinned precisely enough that a Java/Swift/C++
+//! implementation could be written from this file alone:
+//!
+//! ```text
+//! message   := magic:u16(0xF10E) version:u8(1) tag:u8 body
+//! ints      := little-endian
+//! bytes     := len:u32 data[len]
+//! string    := bytes (UTF-8)
+//! tensor    := dtype:u8 (0=f32, 1=i32) rank:u8 dims:u32[rank] raw-LE data
+//! params    := count:u16 tensor[count]
+//! scalar    := tag:u8 (0=bool,1=i64,2=f64,3=str,4=bytes) value
+//! configmap := count:u32 (string scalar)[count]
+//! status    := code:u8 string
+//! ```
+//!
+//! Framing (length prefix) is the transport's job — see `transport::frame`.
+
+use crate::error::{Error, Result};
+
+use super::message::*;
+use super::scalar::{ConfigMap, Scalar};
+use super::tensor::{Parameters, Tensor, TensorData};
+
+pub const MAGIC: u16 = 0xF10E;
+pub const VERSION: u8 = 1;
+
+// Server message tags.
+const TAG_GET_PARAMETERS_INS: u8 = 0x01;
+const TAG_FIT_INS: u8 = 0x02;
+const TAG_EVALUATE_INS: u8 = 0x03;
+const TAG_RECONNECT: u8 = 0x04;
+// Client message tags.
+const TAG_REGISTER: u8 = 0x81;
+const TAG_GET_PARAMETERS_RES: u8 = 0x82;
+const TAG_FIT_RES: u8 = 0x83;
+const TAG_EVALUATE_RES: u8 = 0x84;
+const TAG_DISCONNECT: u8 = 0x85;
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    fn with_header(tag: u8, capacity: usize) -> Self {
+        let mut w = Writer { buf: Vec::with_capacity(capacity + 4) };
+        w.u16(MAGIC);
+        w.u8(VERSION);
+        w.u8(tag);
+        w
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn bytes(&mut self, v: &[u8]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(v);
+    }
+
+    fn string(&mut self, v: &str) {
+        self.bytes(v.as_bytes());
+    }
+
+    fn tensor(&mut self, t: &Tensor) {
+        match &t.data {
+            TensorData::F32(v) => {
+                self.u8(0);
+                self.u8(t.shape.len() as u8);
+                for &d in &t.shape {
+                    self.u32(d as u32);
+                }
+                self.u32(v.len() as u32);
+                // bulk copy: f32 LE
+                self.buf.reserve(v.len() * 4);
+                for &x in v {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::I32(v) => {
+                self.u8(1);
+                self.u8(t.shape.len() as u8);
+                for &d in &t.shape {
+                    self.u32(d as u32);
+                }
+                self.u32(v.len() as u32);
+                self.buf.reserve(v.len() * 4);
+                for &x in v {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            TensorData::F16(v) => {
+                self.u8(2);
+                self.u8(t.shape.len() as u8);
+                for &d in &t.shape {
+                    self.u32(d as u32);
+                }
+                self.u32(v.len() as u32);
+                self.buf.reserve(v.len() * 2);
+                for &x in v {
+                    self.buf.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    fn parameters(&mut self, p: &Parameters) {
+        self.u16(p.tensors.len() as u16);
+        for t in &p.tensors {
+            self.tensor(t);
+        }
+    }
+
+    fn scalar(&mut self, s: &Scalar) {
+        match s {
+            Scalar::Bool(v) => {
+                self.u8(0);
+                self.u8(u8::from(*v));
+            }
+            Scalar::I64(v) => {
+                self.u8(1);
+                self.i64(*v);
+            }
+            Scalar::F64(v) => {
+                self.u8(2);
+                self.f64(*v);
+            }
+            Scalar::Str(v) => {
+                self.u8(3);
+                self.string(v);
+            }
+            Scalar::Bytes(v) => {
+                self.u8(4);
+                self.bytes(v);
+            }
+        }
+    }
+
+    fn config(&mut self, m: &ConfigMap) {
+        self.u32(m.len() as u32);
+        for (k, v) in m {
+            self.string(k);
+            self.scalar(v);
+        }
+    }
+
+    fn status(&mut self, s: &Status) {
+        let code = match s.code {
+            StatusCode::Ok => 0u8,
+            StatusCode::FitNotImplemented => 1,
+            StatusCode::FitError => 2,
+            StatusCode::EvaluateError => 3,
+        };
+        self.u8(code);
+        self.string(&s.message);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Codec(format!(
+                "truncated message: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let b = self.bytes()?;
+        String::from_utf8(b).map_err(|e| Error::Codec(format!("bad utf8 string: {e}")))
+    }
+
+    fn tensor(&mut self) -> Result<Tensor> {
+        let dtype = self.u8()?;
+        let rank = self.u8()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(self.u32()? as usize);
+        }
+        let n = self.u32()? as usize;
+        let expect: usize = shape.iter().product();
+        if expect != n {
+            return Err(Error::Codec(format!(
+                "tensor shape {shape:?} wants {expect} elements, wire says {n}"
+            )));
+        }
+        let data = match dtype {
+            0 => {
+                let raw = self.take(n * 4)?;
+                let mut v = Vec::with_capacity(n);
+                for c in raw.chunks_exact(4) {
+                    v.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                TensorData::F32(v)
+            }
+            1 => {
+                let raw = self.take(n * 4)?;
+                let mut v = Vec::with_capacity(n);
+                for c in raw.chunks_exact(4) {
+                    v.push(i32::from_le_bytes(c.try_into().unwrap()));
+                }
+                TensorData::I32(v)
+            }
+            2 => {
+                let raw = self.take(n * 2)?;
+                let mut v = Vec::with_capacity(n);
+                for c in raw.chunks_exact(2) {
+                    v.push(u16::from_le_bytes(c.try_into().unwrap()));
+                }
+                TensorData::F16(v)
+            }
+            other => return Err(Error::Codec(format!("unknown tensor dtype {other}"))),
+        };
+        Ok(Tensor { shape, data })
+    }
+
+    fn parameters(&mut self) -> Result<Parameters> {
+        let count = self.u16()? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        for _ in 0..count {
+            tensors.push(self.tensor()?);
+        }
+        Ok(Parameters { tensors })
+    }
+
+    fn scalar(&mut self) -> Result<Scalar> {
+        match self.u8()? {
+            0 => Ok(Scalar::Bool(self.u8()? != 0)),
+            1 => Ok(Scalar::I64(self.i64()?)),
+            2 => Ok(Scalar::F64(self.f64()?)),
+            3 => Ok(Scalar::Str(self.string()?)),
+            4 => Ok(Scalar::Bytes(self.bytes()?)),
+            other => Err(Error::Codec(format!("unknown scalar tag {other}"))),
+        }
+    }
+
+    fn config(&mut self) -> Result<ConfigMap> {
+        let count = self.u32()? as usize;
+        let mut m = ConfigMap::new();
+        for _ in 0..count {
+            let k = self.string()?;
+            let v = self.scalar()?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+
+    fn status(&mut self) -> Result<Status> {
+        let code = match self.u8()? {
+            0 => StatusCode::Ok,
+            1 => StatusCode::FitNotImplemented,
+            2 => StatusCode::FitError,
+            3 => StatusCode::EvaluateError,
+            other => return Err(Error::Codec(format!("unknown status code {other}"))),
+        };
+        Ok(Status { code, message: self.string()? })
+    }
+
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Codec(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn read_header(r: &mut Reader) -> Result<u8> {
+    let magic = r.u16()?;
+    if magic != MAGIC {
+        return Err(Error::Codec(format!("bad magic {magic:#06x}")));
+    }
+    let version = r.u8()?;
+    if version != VERSION {
+        return Err(Error::Codec(format!("unsupported protocol version {version}")));
+    }
+    r.u8()
+}
+
+// ---------------------------------------------------------------------------
+// Public encode/decode
+// ---------------------------------------------------------------------------
+
+/// Encode a server→client message to bytes.
+pub fn encode_server_message(msg: &ServerMessage) -> Vec<u8> {
+    match msg {
+        ServerMessage::GetParametersIns(ins) => {
+            let mut w = Writer::with_header(TAG_GET_PARAMETERS_INS, 64);
+            w.config(&ins.config);
+            w.buf
+        }
+        ServerMessage::FitIns(ins) => {
+            let mut w = Writer::with_header(TAG_FIT_INS, ins.parameters.byte_len() + 256);
+            w.parameters(&ins.parameters);
+            w.config(&ins.config);
+            w.buf
+        }
+        ServerMessage::EvaluateIns(ins) => {
+            let mut w = Writer::with_header(TAG_EVALUATE_INS, ins.parameters.byte_len() + 256);
+            w.parameters(&ins.parameters);
+            w.config(&ins.config);
+            w.buf
+        }
+        ServerMessage::Reconnect { seconds } => {
+            let mut w = Writer::with_header(TAG_RECONNECT, 8);
+            w.u64(*seconds);
+            w.buf
+        }
+    }
+}
+
+/// Decode a server→client message.
+pub fn decode_server_message(buf: &[u8]) -> Result<ServerMessage> {
+    let mut r = Reader::new(buf);
+    let tag = read_header(&mut r)?;
+    let msg = match tag {
+        TAG_GET_PARAMETERS_INS => {
+            ServerMessage::GetParametersIns(GetParametersIns { config: r.config()? })
+        }
+        TAG_FIT_INS => ServerMessage::FitIns(FitIns {
+            parameters: r.parameters()?,
+            config: r.config()?,
+        }),
+        TAG_EVALUATE_INS => ServerMessage::EvaluateIns(EvaluateIns {
+            parameters: r.parameters()?,
+            config: r.config()?,
+        }),
+        TAG_RECONNECT => ServerMessage::Reconnect { seconds: r.u64()? },
+        other => return Err(Error::Codec(format!("unknown server message tag {other:#04x}"))),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+/// Encode a client→server message to bytes.
+pub fn encode_client_message(msg: &ClientMessage) -> Vec<u8> {
+    match msg {
+        ClientMessage::Register(info) => {
+            let mut w = Writer::with_header(TAG_REGISTER, 128);
+            w.string(&info.client_id);
+            w.string(&info.device);
+            w.string(&info.os);
+            w.u64(info.num_examples);
+            w.buf
+        }
+        ClientMessage::GetParametersRes(res) => {
+            let mut w = Writer::with_header(TAG_GET_PARAMETERS_RES, res.parameters.byte_len() + 64);
+            w.status(&res.status);
+            w.parameters(&res.parameters);
+            w.buf
+        }
+        ClientMessage::FitRes(res) => {
+            let mut w = Writer::with_header(TAG_FIT_RES, res.parameters.byte_len() + 256);
+            w.status(&res.status);
+            w.parameters(&res.parameters);
+            w.u64(res.num_examples);
+            w.config(&res.metrics);
+            w.buf
+        }
+        ClientMessage::EvaluateRes(res) => {
+            let mut w = Writer::with_header(TAG_EVALUATE_RES, 256);
+            w.status(&res.status);
+            w.f64(res.loss);
+            w.u64(res.num_examples);
+            w.config(&res.metrics);
+            w.buf
+        }
+        ClientMessage::Disconnect { reason } => {
+            let mut w = Writer::with_header(TAG_DISCONNECT, reason.len() + 8);
+            w.string(reason);
+            w.buf
+        }
+    }
+}
+
+/// Decode a client→server message.
+pub fn decode_client_message(buf: &[u8]) -> Result<ClientMessage> {
+    let mut r = Reader::new(buf);
+    let tag = read_header(&mut r)?;
+    let msg = match tag {
+        TAG_REGISTER => ClientMessage::Register(ClientInfo {
+            client_id: r.string()?,
+            device: r.string()?,
+            os: r.string()?,
+            num_examples: r.u64()?,
+        }),
+        TAG_GET_PARAMETERS_RES => ClientMessage::GetParametersRes(GetParametersRes {
+            status: r.status()?,
+            parameters: r.parameters()?,
+        }),
+        TAG_FIT_RES => ClientMessage::FitRes(FitRes {
+            status: r.status()?,
+            parameters: r.parameters()?,
+            num_examples: r.u64()?,
+            metrics: r.config()?,
+        }),
+        TAG_EVALUATE_RES => ClientMessage::EvaluateRes(EvaluateRes {
+            status: r.status()?,
+            loss: r.f64()?,
+            num_examples: r.u64()?,
+            metrics: r.config()?,
+        }),
+        TAG_DISCONNECT => ClientMessage::Disconnect { reason: r.string()? },
+        other => return Err(Error::Codec(format!("unknown client message tag {other:#04x}"))),
+    };
+    r.finish()?;
+    Ok(msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn params(n: usize) -> Parameters {
+        Parameters::from_flat((0..n).map(|i| i as f32 * 0.5).collect())
+    }
+
+    #[test]
+    fn fit_ins_roundtrip() {
+        let msg = ServerMessage::FitIns(FitIns {
+            parameters: params(1000),
+            config: config! { "epochs" => 5i64, "lr" => 0.05f64, "model" => "cifar_cnn" },
+        });
+        let buf = encode_server_message(&msg);
+        assert_eq!(decode_server_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn evaluate_ins_roundtrip() {
+        let msg = ServerMessage::EvaluateIns(EvaluateIns {
+            parameters: params(7),
+            config: config! { "batches" => 2i64 },
+        });
+        let buf = encode_server_message(&msg);
+        assert_eq!(decode_server_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn reconnect_roundtrip() {
+        let msg = ServerMessage::Reconnect { seconds: 30 };
+        let buf = encode_server_message(&msg);
+        assert_eq!(decode_server_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn fit_res_roundtrip() {
+        let msg = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: params(64),
+            num_examples: 320,
+            metrics: config! {
+                "compute_time_s" => 12.5f64,
+                "energy_j" => 88.0f64,
+                "steps" => 80i64,
+                "truncated" => false,
+            },
+        });
+        let buf = encode_client_message(&msg);
+        assert_eq!(decode_client_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn evaluate_res_roundtrip() {
+        let msg = ClientMessage::EvaluateRes(EvaluateRes {
+            status: Status { code: StatusCode::EvaluateError, message: "oom".into() },
+            loss: 2.3,
+            num_examples: 100,
+            metrics: config! { "accuracy" => 0.67f64 },
+        });
+        let buf = encode_client_message(&msg);
+        assert_eq!(decode_client_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn register_roundtrip() {
+        let msg = ClientMessage::Register(ClientInfo {
+            client_id: "tx2-07".into(),
+            device: "jetson_tx2_gpu".into(),
+            os: "Linux tegra".into(),
+            num_examples: 320,
+        });
+        let buf = encode_client_message(&msg);
+        assert_eq!(decode_client_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn f16_tensor_roundtrip() {
+        let p = Parameters::from_flat(vec![0.5, -1.25, 3.0])
+            .quantize_f16()
+            .unwrap();
+        let msg = ServerMessage::FitIns(FitIns { parameters: p, config: ConfigMap::new() });
+        let buf = encode_server_message(&msg);
+        assert_eq!(decode_server_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn int_tensor_roundtrip() {
+        let msg = ClientMessage::GetParametersRes(GetParametersRes {
+            status: Status::ok(),
+            parameters: Parameters {
+                tensors: vec![Tensor::i32(vec![2, 2], vec![1, -2, 3, -4]).unwrap()],
+            },
+        });
+        let buf = encode_client_message(&msg);
+        assert_eq!(decode_client_message(&buf).unwrap(), msg);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let msg = ServerMessage::Reconnect { seconds: 1 };
+        let mut buf = encode_server_message(&msg);
+        buf[0] ^= 0xFF;
+        assert!(matches!(decode_server_message(&buf), Err(Error::Codec(_))));
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let msg = ServerMessage::Reconnect { seconds: 1 };
+        let mut buf = encode_server_message(&msg);
+        buf[2] = 99;
+        assert!(decode_server_message(&buf).is_err());
+    }
+
+    #[test]
+    fn truncation_rejected_everywhere() {
+        let msg = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: params(32),
+            num_examples: 1,
+            metrics: config! { "a" => 1i64 },
+        });
+        let buf = encode_client_message(&msg);
+        for cut in 1..buf.len() {
+            assert!(
+                decode_client_message(&buf[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let msg = ServerMessage::Reconnect { seconds: 1 };
+        let mut buf = encode_server_message(&msg);
+        buf.push(0);
+        assert!(decode_server_message(&buf).is_err());
+    }
+
+    #[test]
+    fn client_server_tags_disjoint() {
+        // A client message must never decode as a server message.
+        let msg = ClientMessage::Disconnect { reason: "done".into() };
+        let buf = encode_client_message(&msg);
+        assert!(decode_server_message(&buf).is_err());
+    }
+}

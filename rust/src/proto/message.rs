@@ -1,0 +1,169 @@
+//! The Flower Protocol message set.
+//!
+//! Server→client: `GetParametersIns`, `FitIns`, `EvaluateIns`, `Reconnect`.
+//! Client→server: `Register` (hello + device info), `GetParametersRes`,
+//! `FitRes`, `EvaluateRes`, `Disconnect`.
+//!
+//! `FitRes.metrics` is the system-cost side channel the paper's evaluation
+//! is built on: clients report modeled compute time, energy, steps executed
+//! and whether a τ cutoff truncated their local epochs.
+
+use super::scalar::ConfigMap;
+use super::tensor::Parameters;
+
+/// Outcome status attached to client responses (mirrors Flower's `Status`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StatusCode {
+    Ok,
+    /// Client had no data / declined to participate.
+    FitNotImplemented,
+    /// Local training failed.
+    FitError,
+    /// Evaluation failed.
+    EvaluateError,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Status {
+    pub code: StatusCode,
+    pub message: String,
+}
+
+impl Status {
+    pub fn ok() -> Self {
+        Status { code: StatusCode::Ok, message: String::new() }
+    }
+
+    pub fn is_ok(&self) -> bool {
+        self.code == StatusCode::Ok
+    }
+}
+
+/// Client self-description sent at registration. The server uses the
+/// device name to look up the profile for comm-cost accounting, and the
+/// strategy uses it to assign per-processor cutoffs (Table 3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientInfo {
+    /// Stable client identifier (e.g. "tx2-03", "pixel4-aws-1").
+    pub client_id: String,
+    /// Device profile name, resolvable via `device::profiles::by_name`.
+    pub device: String,
+    /// Operating system string (informational, Table 1 flavor).
+    pub os: String,
+    /// Number of local training examples the client holds.
+    pub num_examples: u64,
+}
+
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct GetParametersIns {
+    pub config: ConfigMap,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GetParametersRes {
+    pub status: Status,
+    pub parameters: Parameters,
+}
+
+/// Server→client: train locally starting from `parameters`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitIns {
+    pub parameters: Parameters,
+    pub config: ConfigMap,
+}
+
+/// Client→server: the locally updated parameters + metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitRes {
+    pub status: Status,
+    pub parameters: Parameters,
+    pub num_examples: u64,
+    pub metrics: ConfigMap,
+}
+
+/// Server→client: evaluate `parameters` on the local test split.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvaluateIns {
+    pub parameters: Parameters,
+    pub config: ConfigMap,
+}
+
+/// Client→server: local test loss (+ accuracy etc. in metrics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EvaluateRes {
+    pub status: Status,
+    pub loss: f64,
+    pub num_examples: u64,
+    pub metrics: ConfigMap,
+}
+
+/// All messages the server can send.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServerMessage {
+    GetParametersIns(GetParametersIns),
+    FitIns(FitIns),
+    EvaluateIns(EvaluateIns),
+    /// Ask the client to disconnect and reconnect after `seconds`.
+    Reconnect { seconds: u64 },
+}
+
+/// All messages a client can send.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClientMessage {
+    /// First message on a fresh connection.
+    Register(ClientInfo),
+    GetParametersRes(GetParametersRes),
+    FitRes(FitRes),
+    EvaluateRes(EvaluateRes),
+    Disconnect { reason: String },
+}
+
+impl ServerMessage {
+    /// Bytes of model parameters carried (for comm-cost accounting).
+    pub fn parameter_bytes(&self) -> usize {
+        match self {
+            ServerMessage::FitIns(ins) => ins.parameters.byte_len(),
+            ServerMessage::EvaluateIns(ins) => ins.parameters.byte_len(),
+            _ => 0,
+        }
+    }
+}
+
+impl ClientMessage {
+    /// Bytes of model parameters carried (for comm-cost accounting).
+    pub fn parameter_bytes(&self) -> usize {
+        match self {
+            ClientMessage::FitRes(res) => res.parameters.byte_len(),
+            ClientMessage::GetParametersRes(res) => res.parameters.byte_len(),
+            _ => 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_ok() {
+        assert!(Status::ok().is_ok());
+        let bad = Status { code: StatusCode::FitError, message: "x".into() };
+        assert!(!bad.is_ok());
+    }
+
+    #[test]
+    fn parameter_bytes_accounting() {
+        let p = Parameters::from_flat(vec![0.0; 100]);
+        let msg = ServerMessage::FitIns(FitIns { parameters: p.clone(), config: ConfigMap::new() });
+        assert_eq!(msg.parameter_bytes(), 400);
+        let msg = ServerMessage::Reconnect { seconds: 5 };
+        assert_eq!(msg.parameter_bytes(), 0);
+        let res = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: p,
+            num_examples: 10,
+            metrics: ConfigMap::new(),
+        });
+        assert_eq!(res.parameter_bytes(), 400);
+    }
+}

@@ -1,0 +1,22 @@
+//! The Flower Protocol: typed messages, parameter containers, and the
+//! language-agnostic binary wire format.
+//!
+//! The paper's server is deliberately unaware of the nature of connected
+//! clients (§3): it only speaks serialized tensors and scalar config maps.
+//! This module mirrors that contract — [`Parameters`] is an opaque list of
+//! shaped tensors, [`ConfigMap`] carries per-round hyper-parameters (e.g.
+//! the number of local epochs, or the τ cutoff in seconds), and the
+//! [`codec`] defines a byte-exact framing that a Java/Swift/C++ client
+//! could implement independently.
+
+pub mod codec;
+pub mod message;
+pub mod scalar;
+pub mod tensor;
+
+pub use codec::{decode_client_message, decode_server_message, encode_client_message,
+                encode_server_message};
+pub use message::{ClientInfo, ClientMessage, EvaluateIns, EvaluateRes, FitIns, FitRes,
+                  GetParametersIns, GetParametersRes, ServerMessage, Status, StatusCode};
+pub use scalar::{ConfigMap, Scalar};
+pub use tensor::{Parameters, Tensor, TensorData};

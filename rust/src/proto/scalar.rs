@@ -1,0 +1,149 @@
+//! Scalar config/metric values and the string-keyed maps that carry
+//! per-round hyper-parameters and client-reported metrics.
+//!
+//! The paper (§3): "Each message contains additional user-customizable
+//! metadata that allows the server to control on-device hyper-parameters,
+//! for example, the number of on-device training epochs." `ConfigMap` is
+//! that metadata channel; the τ-cutoff strategy also rides on it.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A single scalar config/metric value (mirrors Flower's `Scalar` proto).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Scalar {
+    Bool(bool),
+    I64(i64),
+    F64(f64),
+    Str(String),
+    Bytes(Vec<u8>),
+}
+
+impl From<bool> for Scalar {
+    fn from(v: bool) -> Self {
+        Scalar::Bool(v)
+    }
+}
+impl From<i64> for Scalar {
+    fn from(v: i64) -> Self {
+        Scalar::I64(v)
+    }
+}
+impl From<f64> for Scalar {
+    fn from(v: f64) -> Self {
+        Scalar::F64(v)
+    }
+}
+impl From<&str> for Scalar {
+    fn from(v: &str) -> Self {
+        Scalar::Str(v.to_string())
+    }
+}
+impl From<String> for Scalar {
+    fn from(v: String) -> Self {
+        Scalar::Str(v)
+    }
+}
+
+/// Ordered string-keyed map of scalars (BTreeMap for deterministic wire
+/// encoding — important for reproducible message hashes in tests).
+pub type ConfigMap = BTreeMap<String, Scalar>;
+
+/// Typed accessors with protocol-grade errors.
+pub trait ConfigExt {
+    fn get_i64(&self, key: &str) -> Result<i64>;
+    fn get_f64(&self, key: &str) -> Result<f64>;
+    fn get_str(&self, key: &str) -> Result<&str>;
+    fn get_i64_or(&self, key: &str, default: i64) -> i64;
+    fn get_f64_or(&self, key: &str, default: f64) -> f64;
+    fn get_bool_or(&self, key: &str, default: bool) -> bool;
+}
+
+impl ConfigExt for ConfigMap {
+    fn get_i64(&self, key: &str) -> Result<i64> {
+        match self.get(key) {
+            Some(Scalar::I64(v)) => Ok(*v),
+            Some(other) => Err(Error::Protocol(format!(
+                "config key {key:?}: expected i64, got {other:?}"
+            ))),
+            None => Err(Error::Protocol(format!("missing config key {key:?}"))),
+        }
+    }
+
+    fn get_f64(&self, key: &str) -> Result<f64> {
+        match self.get(key) {
+            Some(Scalar::F64(v)) => Ok(*v),
+            // be liberal: accept i64 where f64 is expected
+            Some(Scalar::I64(v)) => Ok(*v as f64),
+            Some(other) => Err(Error::Protocol(format!(
+                "config key {key:?}: expected f64, got {other:?}"
+            ))),
+            None => Err(Error::Protocol(format!("missing config key {key:?}"))),
+        }
+    }
+
+    fn get_str(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(Scalar::Str(v)) => Ok(v),
+            Some(other) => Err(Error::Protocol(format!(
+                "config key {key:?}: expected str, got {other:?}"
+            ))),
+            None => Err(Error::Protocol(format!("missing config key {key:?}"))),
+        }
+    }
+
+    fn get_i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get_i64(key).unwrap_or(default)
+    }
+
+    fn get_f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get_f64(key).unwrap_or(default)
+    }
+
+    fn get_bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some(Scalar::Bool(v)) => *v,
+            _ => default,
+        }
+    }
+}
+
+/// Convenience constructor: `config!{ "epochs" => 5i64, "lr" => 0.05f64 }`.
+#[macro_export]
+macro_rules! config {
+    ($($k:expr => $v:expr),* $(,)?) => {{
+        let mut m = $crate::proto::ConfigMap::new();
+        $( m.insert($k.to_string(), $crate::proto::Scalar::from($v)); )*
+        m
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_accessors() {
+        let m = crate::config! { "epochs" => 5i64, "lr" => 0.05f64, "model" => "cifar_cnn" };
+        assert_eq!(m.get_i64("epochs").unwrap(), 5);
+        assert_eq!(m.get_f64("lr").unwrap(), 0.05);
+        assert_eq!(m.get_str("model").unwrap(), "cifar_cnn");
+        assert!(m.get_i64("nope").is_err());
+        assert!(m.get_str("epochs").is_err());
+    }
+
+    #[test]
+    fn f64_accepts_i64() {
+        let m = crate::config! { "x" => 3i64 };
+        assert_eq!(m.get_f64("x").unwrap(), 3.0);
+    }
+
+    #[test]
+    fn defaults() {
+        let m = ConfigMap::new();
+        assert_eq!(m.get_i64_or("epochs", 1), 1);
+        assert_eq!(m.get_f64_or("lr", 0.1), 0.1);
+        assert!(m.get_bool_or("flag", true));
+    }
+}

@@ -1,0 +1,279 @@
+//! Shaped tensors and the opaque `Parameters` container shipped between
+//! server and clients.
+
+use crate::error::{Error, Result};
+
+/// Element storage for a [`Tensor`]. The FL payloads in this system are
+/// f32 parameters and i32 labels; `F16` is the quantized wire form used
+/// by the communication-compression path (half the bytes per round). The
+/// enum keeps the wire format honest about dtypes instead of punning
+/// everything through bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    /// IEEE binary16 bit patterns (see `util::f16`).
+    F16(Vec<u16>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::F16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+            TensorData::F16(_) => "float16",
+        }
+    }
+
+    /// Bytes per element on the wire.
+    pub fn element_bytes(&self) -> usize {
+        match self {
+            TensorData::F32(_) | TensorData::I32(_) => 4,
+            TensorData::F16(_) => 2,
+        }
+    }
+}
+
+/// A dense, row-major tensor: shape + typed data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    /// Build an f32 tensor, validating that the shape matches the data.
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = shape.iter().product();
+        if expect != data.len() {
+            return Err(Error::Protocol(format!(
+                "tensor shape {shape:?} wants {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data: TensorData::F32(data) })
+    }
+
+    /// Build an i32 tensor, validating that the shape matches the data.
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let expect: usize = shape.iter().product();
+        if expect != data.len() {
+            return Err(Error::Protocol(format!(
+                "tensor shape {shape:?} wants {expect} elements, got {}",
+                data.len()
+            )));
+        }
+        Ok(Tensor { shape, data: TensorData::I32(data) })
+    }
+
+    /// A scalar (rank-0) f32 tensor.
+    pub fn scalar_f32(v: f32) -> Self {
+        Tensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Payload size on the wire (element bytes only). f16 tensors carry
+    /// half the bytes — this is what the comm-cost model sees.
+    pub fn byte_len(&self) -> usize {
+        self.data.element_bytes() * self.data.len()
+    }
+
+    /// Quantize an f32 tensor to f16 (no-op on already-f16 data).
+    pub fn quantize_f16(&self) -> Result<Tensor> {
+        match &self.data {
+            TensorData::F32(v) => Ok(Tensor {
+                shape: self.shape.clone(),
+                data: TensorData::F16(crate::util::f16::quantize(v)),
+            }),
+            TensorData::F16(_) => Ok(self.clone()),
+            other => Err(Error::Protocol(format!(
+                "cannot f16-quantize {} tensor",
+                other.dtype_name()
+            ))),
+        }
+    }
+
+    /// Materialize as f32 values (dequantizing f16 if needed).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v.clone()),
+            TensorData::F16(v) => Ok(crate::util::f16::dequantize(v)),
+            other => Err(Error::Protocol(format!(
+                "expected float tensor, got {}",
+                other.dtype_name()
+            ))),
+        }
+    }
+
+    /// Borrow the f32 payload or fail with a protocol error.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            other => Err(Error::Protocol(format!(
+                "expected float32 tensor, got {}",
+                other.dtype_name()
+            ))),
+        }
+    }
+
+    /// Borrow the i32 payload or fail with a protocol error.
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            other => Err(Error::Protocol(format!(
+                "expected int32 tensor, got {}",
+                other.dtype_name()
+            ))),
+        }
+    }
+
+    /// Consume into the f32 payload or fail with a protocol error.
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            other => Err(Error::Protocol(format!(
+                "expected float32 tensor, got {}",
+                other.dtype_name()
+            ))),
+        }
+    }
+}
+
+/// The opaque model-parameter container of the Flower Protocol.
+///
+/// For both paper workloads this is a single flat f32 vector (the Rust
+/// coordinator never needs the pytree layout — that lives in the artifact
+/// manifest), but the container is a list so multi-tensor models work too.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct Parameters {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Parameters {
+    /// Wrap a single flat f32 parameter vector.
+    pub fn from_flat(flat: Vec<f32>) -> Self {
+        let n = flat.len();
+        Parameters {
+            tensors: vec![Tensor { shape: vec![n], data: TensorData::F32(flat) }],
+        }
+    }
+
+    /// Unwrap a single flat f32 parameter vector.
+    pub fn to_flat(&self) -> Result<&[f32]> {
+        match self.tensors.as_slice() {
+            [t] => t.as_f32(),
+            other => Err(Error::Protocol(format!(
+                "expected 1 parameter tensor, got {}",
+                other.len()
+            ))),
+        }
+    }
+
+    /// Total wire payload in bytes — drives the communication cost model.
+    pub fn byte_len(&self) -> usize {
+        self.tensors.iter().map(Tensor::byte_len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Quantize every tensor to f16 (the compressed wire form).
+    pub fn quantize_f16(&self) -> Result<Parameters> {
+        Ok(Parameters {
+            tensors: self
+                .tensors
+                .iter()
+                .map(Tensor::quantize_f16)
+                .collect::<Result<_>>()?,
+        })
+    }
+
+    /// Materialize a single flat f32 vector, dequantizing f16 if needed.
+    pub fn to_flat_vec(&self) -> Result<Vec<f32>> {
+        match self.tensors.as_slice() {
+            [t] => t.to_f32_vec(),
+            other => Err(Error::Protocol(format!(
+                "expected 1 parameter tensor, got {}",
+                other.len()
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_validation() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+        assert!(Tensor::i32(vec![4], vec![1]).is_err());
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = Tensor::scalar_f32(0.5);
+        assert_eq!(t.shape, Vec::<usize>::new());
+        assert_eq!(t.element_count(), 1);
+        assert_eq!(t.as_f32().unwrap(), &[0.5]);
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = Tensor::i32(vec![2], vec![1, 2]).unwrap();
+        assert!(t.as_f32().is_err());
+        assert!(t.as_i32().is_ok());
+    }
+
+    #[test]
+    fn parameters_flat_roundtrip() {
+        let p = Parameters::from_flat(vec![1.0, 2.0, 3.0]);
+        assert_eq!(p.to_flat().unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(p.byte_len(), 12);
+    }
+
+    #[test]
+    fn parameters_multi_tensor_to_flat_fails() {
+        let p = Parameters {
+            tensors: vec![Tensor::scalar_f32(1.0), Tensor::scalar_f32(2.0)],
+        };
+        assert!(p.to_flat().is_err());
+    }
+
+    #[test]
+    fn f16_quantization_halves_bytes() {
+        let p = Parameters::from_flat(vec![0.5; 1000]);
+        assert_eq!(p.byte_len(), 4000);
+        let q = p.quantize_f16().unwrap();
+        assert_eq!(q.byte_len(), 2000);
+        // exact roundtrip for values representable in f16
+        assert_eq!(q.to_flat_vec().unwrap(), vec![0.5; 1000]);
+        // and q.to_flat (strict f32 view) must refuse
+        assert!(q.to_flat().is_err());
+    }
+
+    #[test]
+    fn quantize_rejects_int_tensors() {
+        let t = Tensor::i32(vec![2], vec![1, 2]).unwrap();
+        assert!(t.quantize_f16().is_err());
+        assert!(t.to_f32_vec().is_err());
+    }
+}

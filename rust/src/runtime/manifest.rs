@@ -1,0 +1,299 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime: which HLO files exist, their input/output
+//! signatures, each model's flat-parameter layout and batch shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Input/output tensor signature of an artifact entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub sha256: String,
+}
+
+/// One trainable model (cifar_cnn, head) and its artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub param_count: usize,
+    pub layout: Vec<(String, Vec<usize>)>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub agg_slots: usize,
+    pub init_file: String,
+    pub train: String,
+    pub train_prox: String,
+    pub eval: String,
+    pub agg: String,
+    pub input_shape: Vec<usize>,
+    pub num_classes: usize,
+    /// Present only for the head model (frozen-base pipeline).
+    pub base_input: Option<usize>,
+    pub feature_dim: Option<usize>,
+    pub features_train: Option<String>,
+    pub features_eval: Option<String>,
+}
+
+fn io_spec(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        shape: v.get("shape")?.as_usize_vec()?,
+        dtype: v.get("dtype")?.as_str()?.to_string(),
+    })
+}
+
+fn artifact_entry(v: &Json) -> Result<ArtifactEntry> {
+    Ok(ArtifactEntry {
+        file: v.get("file")?.as_str()?.to_string(),
+        inputs: v.get("inputs")?.as_arr()?.iter().map(io_spec).collect::<Result<_>>()?,
+        outputs: v.get("outputs")?.as_arr()?.iter().map(io_spec).collect::<Result<_>>()?,
+        sha256: v.get("sha256")?.as_str()?.to_string(),
+    })
+}
+
+fn model_entry(v: &Json) -> Result<ModelEntry> {
+    let layout = v
+        .get("layout")?
+        .as_arr()?
+        .iter()
+        .map(|pair| {
+            let pair = pair.as_arr()?;
+            if pair.len() != 2 {
+                return Err(Error::Artifact("layout entry must be [name, shape]".into()));
+            }
+            Ok((pair[0].as_str()?.to_string(), pair[1].as_usize_vec()?))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let opt_usize = |key: &str| -> Result<Option<usize>> {
+        v.opt(key).map(Json::as_usize).transpose()
+    };
+    let opt_str = |key: &str| -> Result<Option<String>> {
+        v.opt(key).map(|j| j.as_str().map(str::to_string)).transpose()
+    };
+    Ok(ModelEntry {
+        param_count: v.get("param_count")?.as_usize()?,
+        layout,
+        train_batch: v.get("train_batch")?.as_usize()?,
+        eval_batch: v.get("eval_batch")?.as_usize()?,
+        agg_slots: v.get("agg_slots")?.as_usize()?,
+        init_file: v.get("init_file")?.as_str()?.to_string(),
+        train: v.get("train")?.as_str()?.to_string(),
+        train_prox: v.get("train_prox")?.as_str()?.to_string(),
+        eval: v.get("eval")?.as_str()?.to_string(),
+        agg: v.get("agg")?.as_str()?.to_string(),
+        input_shape: v.get("input_shape")?.as_usize_vec()?,
+        num_classes: v.get("num_classes")?.as_usize()?,
+        base_input: opt_usize("base_input")?,
+        feature_dim: opt_usize("feature_dim")?,
+        features_train: opt_str("features_train")?,
+        features_eval: opt_str("features_eval")?,
+    })
+}
+
+impl ModelEntry {
+    /// Per-example input element count for the *training* path
+    /// (raw pixels for cifar_cnn, extracted features for head).
+    pub fn example_elements(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            ))
+        })?;
+        let manifest = Self::parse(&text, dir)?;
+        manifest.validate()?;
+        Ok(manifest)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let doc =
+            Json::parse(text).map_err(|e| Error::Artifact(format!("manifest json: {e}")))?;
+        let mut models = BTreeMap::new();
+        for (name, v) in doc.get("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                model_entry(v)
+                    .map_err(|e| Error::Artifact(format!("model {name}: {e}")))?,
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, v) in doc.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                artifact_entry(v)
+                    .map_err(|e| Error::Artifact(format!("artifact {name}: {e}")))?,
+            );
+        }
+        Ok(Manifest {
+            version: doc.get("version")?.as_usize()? as u32,
+            models,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.version != 1 {
+            return Err(Error::Artifact(format!(
+                "unsupported manifest version {}",
+                self.version
+            )));
+        }
+        for (name, model) in &self.models {
+            let declared: usize = model
+                .layout
+                .iter()
+                .map(|(_, shape)| shape.iter().product::<usize>())
+                .sum();
+            if declared != model.param_count {
+                return Err(Error::Artifact(format!(
+                    "model {name}: layout sums to {declared}, param_count says {}",
+                    model.param_count
+                )));
+            }
+            for file in [&model.train, &model.train_prox, &model.eval, &model.agg] {
+                let stem = file.trim_end_matches(".hlo.txt");
+                if !self.artifacts.contains_key(stem) {
+                    return Err(Error::Artifact(format!(
+                        "model {name}: artifact {stem} missing from manifest"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown model {name:?}")))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| Error::Artifact(format!("unknown artifact {name:?}")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Read a model's initial (flat f32 LE) parameters.
+    pub fn initial_parameters(&self, model: &str) -> Result<Vec<f32>> {
+        let entry = self.model(model)?;
+        let path = self.dir.join(&entry.init_file);
+        let bytes = std::fs::read(&path)
+            .map_err(|e| Error::Artifact(format!("cannot read {}: {e}", path.display())))?;
+        if bytes.len() != 4 * entry.param_count {
+            return Err(Error::Artifact(format!(
+                "init blob {} has {} bytes, expected {}",
+                path.display(),
+                bytes.len(),
+                4 * entry.param_count
+            )));
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Default artifact directory: `$FLOWRS_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("FLOWRS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_artifacts() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(m) = repo_artifacts() else { return };
+        assert_eq!(m.version, 1);
+        assert!(m.models.contains_key("cifar_cnn"));
+        assert!(m.models.contains_key("head"));
+        let cnn = m.model("cifar_cnn").unwrap();
+        assert_eq!(cnn.input_shape, vec![32, 32, 3]);
+        assert_eq!(cnn.num_classes, 10);
+    }
+
+    #[test]
+    fn init_blob_round() {
+        let Some(m) = repo_artifacts() else { return };
+        let init = m.initial_parameters("head").unwrap();
+        assert_eq!(init.len(), m.model("head").unwrap().param_count);
+        assert!(init.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(m) = repo_artifacts() else { return };
+        assert!(m.model("resnet152").is_err());
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn validate_catches_bad_layout() {
+        let json = r#"{
+            "version": 1,
+            "models": {"m": {
+                "param_count": 5,
+                "layout": [["w", [2, 2]]],
+                "train_batch": 1, "eval_batch": 1, "agg_slots": 1,
+                "init_file": "x.bin",
+                "train": "t.hlo.txt", "train_prox": "t.hlo.txt",
+                "eval": "t.hlo.txt", "agg": "t.hlo.txt",
+                "input_shape": [2], "num_classes": 2
+            }},
+            "artifacts": {"t": {"file": "t.hlo.txt", "inputs": [], "outputs": [], "sha256": ""}}
+        }"#;
+        let m = Manifest::parse(json, &PathBuf::from(".")).unwrap();
+        assert!(m.validate().is_err());
+    }
+}

@@ -1,0 +1,483 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the Rust hot path.
+//!
+//! The `xla` crate's wrappers hold raw pointers and are `!Send`, so all
+//! PJRT state lives on one dedicated **executor thread**; the [`Runtime`]
+//! handle is a cheap, cloneable channel front-end that any thread or async
+//! task can call. Executables are compiled once (lazily, on first use) and
+//! cached for the life of the process — after that, a train step is a
+//! channel round-trip plus the XLA execution itself.
+//!
+//! Interchange with Python is HLO *text* (`HloModuleProto::from_text_file`),
+//! not serialized protos — see `python/compile/aot.py` for why.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+
+pub use manifest::{default_artifact_dir, ArtifactEntry, IoSpec, Manifest, ModelEntry};
+
+use crate::error::{Error, Result};
+use crate::proto::{Tensor, TensorData};
+
+struct Job {
+    artifact: String,
+    inputs: Vec<Tensor>,
+    resp: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Counters exposed for benches and the perf pass.
+#[derive(Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: AtomicU64,
+    pub compilations: AtomicU64,
+}
+
+/// Cloneable handle to the executor thread.
+#[derive(Clone)]
+pub struct Runtime {
+    tx: mpsc::Sender<Job>,
+    manifest: Arc<Manifest>,
+    stats: Arc<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Load the manifest from `dir` and spin up the executor thread.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Arc::new(Manifest::load(dir)?);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let stats = Arc::new(RuntimeStats::default());
+        let thread_manifest = Arc::clone(&manifest);
+        let thread_stats = Arc::clone(&stats);
+        std::thread::Builder::new()
+            .name("flowrs-pjrt".into())
+            .spawn(move || executor_thread(thread_manifest, rx, ready_tx, thread_stats))
+            .map_err(|e| Error::Runtime(format!("spawn executor thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Runtime("executor thread died during startup".into()))??;
+        Ok(Runtime { tx, manifest, stats })
+    }
+
+    /// Load from the default artifact directory (`$FLOWRS_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_artifact_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn executions(&self) -> u64 {
+        self.stats.executions.load(Ordering::Relaxed)
+    }
+
+    /// Execute an artifact by name. Blocking; validated against the
+    /// manifest signature before crossing the channel.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let spec = self.manifest.artifact(artifact)?;
+        if spec.inputs.len() != inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{artifact}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (want, got)) in spec.inputs.iter().zip(&inputs).enumerate() {
+            if want.shape != got.shape {
+                return Err(Error::Runtime(format!(
+                    "{artifact}: input {i} shape mismatch: manifest {:?}, got {:?}",
+                    want.shape, got.shape
+                )));
+            }
+            let dtype = got.data.dtype_name();
+            if want.dtype != dtype {
+                return Err(Error::Runtime(format!(
+                    "{artifact}: input {i} dtype mismatch: manifest {}, got {dtype}",
+                    want.dtype
+                )));
+            }
+        }
+        let (resp_tx, resp_rx) = mpsc::channel();
+        self.tx
+            .send(Job { artifact: artifact.to_string(), inputs, resp: resp_tx })
+            .map_err(|_| Error::Runtime("executor thread gone".into()))?;
+        resp_rx
+            .recv()
+            .map_err(|_| Error::Runtime("executor thread dropped response".into()))?
+    }
+
+    // -- Typed helpers over the model artifacts --------------------------
+
+    /// Initial (flat) global parameters for a model.
+    pub fn initial_parameters(&self, model: &str) -> Result<Vec<f32>> {
+        self.manifest.initial_parameters(model)
+    }
+
+    /// One local SGD step: returns (new_params, loss).
+    pub fn train_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let entry = self.manifest.model(model)?;
+        let b = entry.train_batch;
+        let mut x_shape = vec![b];
+        x_shape.extend_from_slice(&entry.input_shape);
+        let artifact = entry.train.trim_end_matches(".hlo.txt").to_string();
+        let outputs = self.execute(
+            &artifact,
+            vec![
+                Tensor::f32(vec![entry.param_count], params.to_vec())?,
+                Tensor::f32(x_shape, x.to_vec())?,
+                Tensor::i32(vec![b], y.to_vec())?,
+                Tensor::scalar_f32(lr),
+            ],
+        )?;
+        decode_train_outputs(outputs)
+    }
+
+    /// One FedProx local step (adds the μ/2‖w−w_global‖² proximal term).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step_prox(
+        &self,
+        model: &str,
+        params: &[f32],
+        global: &[f32],
+        x: &[f32],
+        y: &[i32],
+        lr: f32,
+        mu: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        let entry = self.manifest.model(model)?;
+        let b = entry.train_batch;
+        let mut x_shape = vec![b];
+        x_shape.extend_from_slice(&entry.input_shape);
+        let artifact = entry.train_prox.trim_end_matches(".hlo.txt").to_string();
+        let outputs = self.execute(
+            &artifact,
+            vec![
+                Tensor::f32(vec![entry.param_count], params.to_vec())?,
+                Tensor::f32(vec![entry.param_count], global.to_vec())?,
+                Tensor::f32(x_shape, x.to_vec())?,
+                Tensor::i32(vec![b], y.to_vec())?,
+                Tensor::scalar_f32(lr),
+                Tensor::scalar_f32(mu),
+            ],
+        )?;
+        decode_train_outputs(outputs)
+    }
+
+    /// Evaluate one batch: returns (mean_loss, correct_count).
+    pub fn eval_step(
+        &self,
+        model: &str,
+        params: &[f32],
+        x: &[f32],
+        y: &[i32],
+    ) -> Result<(f32, f32)> {
+        let entry = self.manifest.model(model)?;
+        let b = entry.eval_batch;
+        let mut x_shape = vec![b];
+        x_shape.extend_from_slice(&entry.input_shape);
+        let artifact = entry.eval.trim_end_matches(".hlo.txt").to_string();
+        let outputs = self.execute(
+            &artifact,
+            vec![
+                Tensor::f32(vec![entry.param_count], params.to_vec())?,
+                Tensor::f32(x_shape, x.to_vec())?,
+                Tensor::i32(vec![b], y.to_vec())?,
+            ],
+        )?;
+        let mut it = outputs.into_iter();
+        let loss = scalar_out(it.next(), "loss")?;
+        let correct = scalar_out(it.next(), "correct")?;
+        Ok((loss, correct))
+    }
+
+    /// Frozen base model: raw inputs [B, base_input] -> features [B, dim].
+    /// `train_path` selects the train-batch (true) or eval-batch artifact.
+    pub fn base_features(
+        &self,
+        model: &str,
+        x: &[f32],
+        base_w: &[f32],
+        base_b: &[f32],
+        train_path: bool,
+    ) -> Result<Vec<f32>> {
+        let entry = self.manifest.model(model)?;
+        let (file, b) = if train_path {
+            (entry.features_train.as_ref(), entry.train_batch)
+        } else {
+            (entry.features_eval.as_ref(), entry.eval_batch)
+        };
+        let file = file.ok_or_else(|| {
+            Error::Runtime(format!("model {model} has no frozen-base artifacts"))
+        })?;
+        let base_in = entry
+            .base_input
+            .ok_or_else(|| Error::Runtime(format!("model {model} has no base_input")))?;
+        let dim = entry
+            .feature_dim
+            .ok_or_else(|| Error::Runtime(format!("model {model} has no feature_dim")))?;
+        let artifact = file.trim_end_matches(".hlo.txt").to_string();
+        let outputs = self.execute(
+            &artifact,
+            vec![
+                Tensor::f32(vec![b, base_in], x.to_vec())?,
+                Tensor::f32(vec![base_in, dim], base_w.to_vec())?,
+                Tensor::f32(vec![dim], base_b.to_vec())?,
+            ],
+        )?;
+        outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("features artifact returned nothing".into()))?
+            .into_f32()
+    }
+
+    /// FedAvg aggregation on the PJRT path: weighted sum of client vectors.
+    ///
+    /// `weights` are pre-normalized by the caller; unused slots (up to the
+    /// artifact's fixed `agg_slots`) are zero-padded and contribute nothing.
+    pub fn aggregate(&self, model: &str, vectors: &[&[f32]], weights: &[f32]) -> Result<Vec<f32>> {
+        let entry = self.manifest.model(model)?;
+        let k = entry.agg_slots;
+        let p = entry.param_count;
+        if vectors.len() != weights.len() {
+            return Err(Error::Aggregation(format!(
+                "{} vectors but {} weights",
+                vectors.len(),
+                weights.len()
+            )));
+        }
+        if vectors.len() > k {
+            return Err(Error::Aggregation(format!(
+                "cohort of {} exceeds the aggregation artifact's {k} slots",
+                vectors.len()
+            )));
+        }
+        let mut stacked = vec![0f32; k * p];
+        for (i, v) in vectors.iter().enumerate() {
+            if v.len() != p {
+                return Err(Error::Aggregation(format!(
+                    "client vector {i} has {} params, expected {p}",
+                    v.len()
+                )));
+            }
+            stacked[i * p..(i + 1) * p].copy_from_slice(v);
+        }
+        let mut w = vec![0f32; k];
+        w[..weights.len()].copy_from_slice(weights);
+        let artifact = entry.agg.trim_end_matches(".hlo.txt").to_string();
+        let outputs = self.execute(
+            &artifact,
+            vec![Tensor::f32(vec![k, p], stacked)?, Tensor::f32(vec![k], w)?],
+        )?;
+        outputs
+            .into_iter()
+            .next()
+            .ok_or_else(|| Error::Runtime("agg artifact returned nothing".into()))?
+            .into_f32()
+    }
+}
+
+fn decode_train_outputs(outputs: Vec<Tensor>) -> Result<(Vec<f32>, f32)> {
+    let mut it = outputs.into_iter();
+    let params = it
+        .next()
+        .ok_or_else(|| Error::Runtime("train step returned nothing".into()))?
+        .into_f32()?;
+    let loss = scalar_out(it.next(), "loss")?;
+    Ok((params, loss))
+}
+
+fn scalar_out(t: Option<Tensor>, what: &str) -> Result<f32> {
+    let t = t.ok_or_else(|| Error::Runtime(format!("missing {what} output")))?;
+    let v = t.as_f32()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| Error::Runtime(format!("empty {what} output")))
+}
+
+// ---------------------------------------------------------------------------
+// Executor thread
+// ---------------------------------------------------------------------------
+
+fn executor_thread(
+    manifest: Arc<Manifest>,
+    rx: mpsc::Receiver<Job>,
+    ready: mpsc::Sender<Result<()>>,
+    stats: Arc<RuntimeStats>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::Runtime(format!("PjRtClient::cpu: {e}"))));
+            return;
+        }
+    };
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(job) = rx.recv() {
+        let result = run_job(&manifest, &client, &mut executables, &stats, &job);
+        let _ = job.resp.send(result);
+    }
+}
+
+fn run_job(
+    manifest: &Manifest,
+    client: &xla::PjRtClient,
+    executables: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    stats: &RuntimeStats,
+    job: &Job,
+) -> Result<Vec<Tensor>> {
+    if !executables.contains_key(&job.artifact) {
+        let path = manifest.artifact_path(&job.artifact)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        stats.compilations.fetch_add(1, Ordering::Relaxed);
+        executables.insert(job.artifact.clone(), exe);
+    }
+    let exe = executables.get(&job.artifact).expect("just inserted");
+
+    // Perf/leak note (EXPERIMENTS.md §Perf): `execute::<Literal>` goes
+    // through the C shim's `execute()`, which `.release()`s every
+    // host-transferred input buffer and never frees it (~0.5 MB leaked per
+    // train step — the original table run OOMed at 36 GB). Building the
+    // input buffers ourselves and calling `execute_b` keeps ownership on
+    // the Rust side, so inputs are freed on drop.
+    let buffers: Vec<xla::PjRtBuffer> = job
+        .inputs
+        .iter()
+        .map(|t| tensor_to_buffer(client, t))
+        .collect::<Result<_>>()?;
+    let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+    let tuple = result[0][0].to_literal_sync()?;
+    stats.executions.fetch_add(1, Ordering::Relaxed);
+    // aot.py lowers with return_tuple=True: output is always a tuple.
+    let parts = tuple
+        .to_tuple()
+        .map_err(|e| Error::Runtime(format!("expected tuple output: {e}")))?;
+    parts.into_iter().map(literal_to_tensor).collect()
+}
+
+fn tensor_to_buffer(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    // Host-to-device transfer with Rust-side ownership (freed on drop).
+    match &t.data {
+        TensorData::F32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
+        TensorData::I32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
+        TensorData::F16(_) => {
+            // f16 is a wire-compression format only; artifacts take f32.
+            Err(Error::Runtime(
+                "f16 tensors must be dequantized before execution".into(),
+            ))
+        }
+    }
+}
+
+fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = match shape.ty() {
+        xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+        xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+        other => {
+            return Err(Error::Runtime(format!(
+                "unsupported output element type {other:?}"
+            )))
+        }
+    };
+    Ok(Tensor { shape: dims, data })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime loads"))
+    }
+
+    #[test]
+    fn input_validation_rejects_bad_shapes() {
+        let Some(rt) = runtime() else { return };
+        let entry = rt.manifest().model("head").unwrap().clone();
+        // wrong param length
+        let err = rt
+            .train_step("head", &vec![0.0; 3], &vec![0.0; 10], &vec![0; 10], 0.1)
+            .unwrap_err();
+        assert!(err.to_string().contains("shape") || err.to_string().contains("elements"));
+        // sanity: entry knows its shapes
+        assert_eq!(entry.input_shape, vec![1280]);
+    }
+
+    #[test]
+    fn head_train_step_decreases_loss() {
+        let Some(rt) = runtime() else { return };
+        let entry = rt.manifest().model("head").unwrap().clone();
+        let b = entry.train_batch;
+        let mut params = rt.initial_parameters("head").unwrap();
+        // deterministic learnable batch: class spike features
+        let mut x = vec![0f32; b * 1280];
+        let mut y = vec![0i32; b];
+        for i in 0..b {
+            let cls = (i % 31) as i32;
+            y[i] = cls;
+            x[i * 1280 + cls as usize] = 5.0;
+        }
+        let (_, first_loss) = rt.train_step("head", &params, &x, &y, 0.0).unwrap();
+        for _ in 0..15 {
+            let (p, _) = rt.train_step("head", &params, &x, &y, 0.1).unwrap();
+            params = p;
+        }
+        let (_, last_loss) = rt.train_step("head", &params, &x, &y, 0.0).unwrap();
+        assert!(
+            last_loss < first_loss * 0.8,
+            "loss did not decrease: {first_loss} -> {last_loss}"
+        );
+    }
+
+    #[test]
+    fn aggregate_matches_cpu_reference() {
+        let Some(rt) = runtime() else { return };
+        let p = rt.manifest().model("head").unwrap().param_count;
+        let a: Vec<f32> = (0..p).map(|i| (i % 7) as f32).collect();
+        let b: Vec<f32> = (0..p).map(|i| (i % 5) as f32 * -1.0).collect();
+        let out = rt.aggregate("head", &[&a, &b], &[0.25, 0.75]).unwrap();
+        for i in (0..p).step_by(9173) {
+            let want = 0.25 * a[i] + 0.75 * b[i];
+            assert!((out[i] - want).abs() < 1e-5, "i={i}: {} vs {want}", out[i]);
+        }
+    }
+
+    #[test]
+    fn aggregate_rejects_oversized_cohort() {
+        let Some(rt) = runtime() else { return };
+        let entry = rt.manifest().model("head").unwrap().clone();
+        let v = vec![0f32; entry.param_count];
+        let refs: Vec<&[f32]> = (0..entry.agg_slots + 1).map(|_| v.as_slice()).collect();
+        let w = vec![0.1f32; entry.agg_slots + 1];
+        assert!(rt.aggregate("head", &refs, &w).is_err());
+    }
+}

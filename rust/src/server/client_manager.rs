@@ -1,0 +1,139 @@
+//! `ClientManager`: registration, lookup and cohort snapshots.
+//!
+//! Clients come and go (devices drop off the farm, phones lose signal);
+//! the manager is the server's always-consistent view. `wait_for` blocks
+//! the FL loop until the minimum cohort has dialed in — the paper's
+//! deployments start the server first, then check devices out of the AWS
+//! farm.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::proxy::ClientProxy;
+use crate::strategy::ClientHandle;
+
+/// Thread-safe registry of connected clients.
+#[derive(Default)]
+pub struct ClientManager {
+    clients: Mutex<Vec<Arc<ClientProxy>>>,
+    arrived: Condvar,
+}
+
+impl ClientManager {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a freshly connected client. Replaces any stale entry with
+    /// the same id (a device that reconnected).
+    pub fn register(&self, proxy: Arc<ClientProxy>) {
+        let mut clients = self.clients.lock().expect("manager lock");
+        clients.retain(|c| c.handle.id != proxy.handle.id);
+        clients.push(proxy);
+        self.arrived.notify_all();
+    }
+
+    /// Remove a client by id (connection dropped).
+    pub fn unregister(&self, id: &str) {
+        let mut clients = self.clients.lock().expect("manager lock");
+        clients.retain(|c| c.handle.id != id);
+    }
+
+    pub fn len(&self) -> usize {
+        self.clients.lock().expect("manager lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stable snapshot of the current cohort (proxies + handles).
+    pub fn snapshot(&self) -> Vec<Arc<ClientProxy>> {
+        self.clients.lock().expect("manager lock").clone()
+    }
+
+    /// Handles only (what strategies see).
+    pub fn handles(&self) -> Vec<ClientHandle> {
+        self.snapshot().iter().map(|p| p.handle.clone()).collect()
+    }
+
+    /// Block until at least `n` clients are registered or `timeout`
+    /// elapses. Returns whether the quorum was reached.
+    pub fn wait_for(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        let mut clients = self.clients.lock().expect("manager lock");
+        while clients.len() < n {
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, res) = self
+                .arrived
+                .wait_timeout(clients, deadline - now)
+                .expect("manager lock");
+            clients = guard;
+            if res.timed_out() && clients.len() < n {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::transport::{inproc, Connection};
+
+    fn proxy(id: &str) -> Arc<ClientProxy> {
+        let (server_end, _client_end) = inproc::pair();
+        std::mem::forget(_client_end); // keep channel alive for the test
+        Arc::new(ClientProxy::new(
+            ClientHandle {
+                id: id.into(),
+                device: profiles::by_name("pixel4").unwrap(),
+                num_examples: 1,
+            },
+            Connection::InProc(server_end),
+        ))
+    }
+
+    #[test]
+    fn register_unregister() {
+        let m = ClientManager::new();
+        assert!(m.is_empty());
+        m.register(proxy("a"));
+        m.register(proxy("b"));
+        assert_eq!(m.len(), 2);
+        m.unregister("a");
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.handles()[0].id, "b");
+    }
+
+    #[test]
+    fn reregistration_replaces() {
+        let m = ClientManager::new();
+        m.register(proxy("a"));
+        m.register(proxy("a"));
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn wait_for_quorum() {
+        let m = Arc::new(ClientManager::new());
+        let m2 = Arc::clone(&m);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            m2.register(proxy("late"));
+        });
+        assert!(m.wait_for(1, Duration::from_secs(2)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wait_for_times_out() {
+        let m = ClientManager::new();
+        assert!(!m.wait_for(1, Duration::from_millis(30)));
+    }
+}

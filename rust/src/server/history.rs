@@ -1,0 +1,159 @@
+//! Round-by-round experiment record: losses, accuracy, and the system
+//! costs (modeled time + energy) that the paper's evaluation tabulates.
+
+/// Everything the server learned in one round.
+#[derive(Debug, Clone, Default)]
+pub struct RoundRecord {
+    pub round: u64,
+    /// clients asked to fit / that answered successfully / that failed
+    pub fit_selected: usize,
+    pub fit_completed: usize,
+    pub fit_failures: usize,
+    /// mean client-reported training loss
+    pub train_loss: f64,
+    /// federated evaluation
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    /// modeled virtual time of this round (slowest client + server work)
+    pub round_time_s: f64,
+    pub cum_time_s: f64,
+    /// modeled energy across all participating clients this round
+    pub round_energy_j: f64,
+    pub cum_energy_j: f64,
+    /// total train steps executed across the cohort
+    pub steps: u64,
+    /// clients whose local training was truncated by a τ cutoff
+    pub truncated_clients: usize,
+    /// parameter bytes moved server→clients / clients→server
+    pub down_bytes: usize,
+    pub up_bytes: usize,
+}
+
+/// The full experiment history.
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub rounds: Vec<RoundRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, mut rec: RoundRecord) {
+        let (prev_t, prev_e) = self
+            .rounds
+            .last()
+            .map(|r| (r.cum_time_s, r.cum_energy_j))
+            .unwrap_or((0.0, 0.0));
+        rec.cum_time_s = prev_t + rec.round_time_s;
+        rec.cum_energy_j = prev_e + rec.round_energy_j;
+        self.rounds.push(rec);
+    }
+
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.accuracy).unwrap_or(f64::NAN)
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.accuracy)
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Total modeled wall time (the paper's "Convergence Time").
+    pub fn total_time_s(&self) -> f64 {
+        self.rounds.last().map(|r| r.cum_time_s).unwrap_or(0.0)
+    }
+
+    /// Total modeled energy (the paper's "Energy Consumed").
+    pub fn total_energy_j(&self) -> f64 {
+        self.rounds.last().map(|r| r.cum_energy_j).unwrap_or(0.0)
+    }
+
+    /// First round (1-based) at which accuracy reached `target`, if ever.
+    pub fn rounds_to_accuracy(&self, target: f64) -> Option<u64> {
+        self.rounds.iter().find(|r| r.accuracy >= target).map(|r| r.round)
+    }
+
+    /// Modeled time at which accuracy first reached `target`.
+    pub fn time_to_accuracy_s(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.accuracy >= target)
+            .map(|r| r.cum_time_s)
+    }
+
+    /// CSV export (header + one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,fit_selected,fit_completed,fit_failures,train_loss,eval_loss,\
+             accuracy,round_time_s,cum_time_s,round_energy_j,cum_energy_j,steps,\
+             truncated_clients,down_bytes,up_bytes\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3},{:.3},{},{},{},{}\n",
+                r.round,
+                r.fit_selected,
+                r.fit_completed,
+                r.fit_failures,
+                r.train_loss,
+                r.eval_loss,
+                r.accuracy,
+                r.round_time_s,
+                r.cum_time_s,
+                r.round_energy_j,
+                r.cum_energy_j,
+                r.steps,
+                r.truncated_clients,
+                r.down_bytes,
+                r.up_bytes,
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(round: u64, acc: f64, time: f64, energy: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            accuracy: acc,
+            round_time_s: time,
+            round_energy_j: energy,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cumulative_accounting() {
+        let mut h = History::default();
+        h.push(rec(1, 0.3, 100.0, 50.0));
+        h.push(rec(2, 0.5, 110.0, 60.0));
+        assert_eq!(h.total_time_s(), 210.0);
+        assert_eq!(h.total_energy_j(), 110.0);
+        assert_eq!(h.final_accuracy(), 0.5);
+        assert_eq!(h.best_accuracy(), 0.5);
+    }
+
+    #[test]
+    fn target_accuracy_lookup() {
+        let mut h = History::default();
+        h.push(rec(1, 0.3, 100.0, 0.0));
+        h.push(rec(2, 0.6, 100.0, 0.0));
+        h.push(rec(3, 0.55, 100.0, 0.0));
+        assert_eq!(h.rounds_to_accuracy(0.6), Some(2));
+        assert_eq!(h.time_to_accuracy_s(0.6), Some(200.0));
+        assert_eq!(h.rounds_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut h = History::default();
+        h.push(rec(1, 0.3, 1.0, 2.0));
+        let csv = h.to_csv();
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.starts_with("round,"));
+    }
+}

@@ -1,0 +1,510 @@
+//! The Flower server: RPC registration, the FL loop, and round accounting.
+//!
+//! Mirrors the paper's Figure 1: a `ClientManager` tracks connections, the
+//! FL loop orchestrates rounds, and every *decision* (who trains, with
+//! what config, how results merge) is delegated to the configured
+//! [`crate::strategy::Strategy`].
+//!
+//! The loop also produces the paper's evaluation currency: per-round
+//! modeled wall time (slowest participant + server overhead) and energy
+//! (compute + radio + optional idle-while-waiting), accumulated into a
+//! [`History`].
+
+pub mod client_manager;
+pub mod history;
+pub mod proxy;
+
+pub use client_manager::ClientManager;
+pub use history::{History, RoundRecord};
+pub use proxy::ClientProxy;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::client::keys;
+use crate::error::{Error, Result};
+use crate::proto::scalar::ConfigExt;
+use crate::proto::{ClientMessage, Parameters};
+use crate::sim::cost::CostModel;
+use crate::strategy::{fedavg, ClientHandle, Strategy};
+use crate::telemetry::log;
+use crate::transport::tcp::TcpTransportListener;
+use crate::transport::Connection;
+
+/// Server-side knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub num_rounds: u64,
+    /// Per-client deadline for one fit/evaluate exchange (wall clock).
+    pub round_timeout: Duration,
+    /// Wait for this many clients before round 1.
+    pub quorum: usize,
+    pub quorum_timeout: Duration,
+    /// Early-stop once federated accuracy reaches this.
+    pub target_accuracy: Option<f64>,
+    /// Charge idle power to fast clients while they wait for stragglers.
+    pub count_idle_energy: bool,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            num_rounds: 10,
+            round_timeout: Duration::from_secs(600),
+            quorum: 1,
+            quorum_timeout: Duration::from_secs(60),
+            target_accuracy: None,
+            count_idle_energy: true,
+        }
+    }
+}
+
+/// The FL server.
+pub struct Server {
+    pub manager: Arc<ClientManager>,
+    strategy: Box<dyn Strategy>,
+    cost: CostModel,
+    config: ServerConfig,
+}
+
+impl Server {
+    pub fn new(
+        manager: Arc<ClientManager>,
+        strategy: Box<dyn Strategy>,
+        cost: CostModel,
+        config: ServerConfig,
+    ) -> Self {
+        Server { manager, strategy, cost, config }
+    }
+
+    /// Run the configured number of rounds from `initial` parameters.
+    pub fn run(&mut self, initial: Parameters) -> Result<History> {
+        if !self
+            .manager
+            .wait_for(self.config.quorum, self.config.quorum_timeout)
+        {
+            return Err(Error::Timeout(format!(
+                "quorum of {} clients not reached ({} connected)",
+                self.config.quorum,
+                self.manager.len()
+            )));
+        }
+        let mut params = initial;
+        let mut history = History::default();
+        for round in 1..=self.config.num_rounds {
+            let record = self.run_round(round, &mut params)?;
+            log::info(&format!(
+                "round {round:>3}: acc={:.4} loss={:.4} t={:.1}s (cum {:.1} min) E={:.1} kJ (cum {:.1} kJ){}",
+                record.accuracy,
+                record.eval_loss,
+                record.round_time_s,
+                (history.total_time_s() + record.round_time_s) / 60.0,
+                record.round_energy_j / 1e3,
+                (history.total_energy_j() + record.round_energy_j) / 1e3,
+                if record.truncated_clients > 0 {
+                    format!(" truncated={}", record.truncated_clients)
+                } else {
+                    String::new()
+                },
+            ));
+            let acc = record.accuracy;
+            history.push(record);
+            if let Some(target) = self.config.target_accuracy {
+                if acc >= target {
+                    log::info(&format!("target accuracy {target} reached; stopping"));
+                    break;
+                }
+            }
+        }
+        // graceful shutdown
+        for proxy in self.manager.snapshot() {
+            let _ = proxy.reconnect(0);
+        }
+        Ok(history)
+    }
+
+    fn run_round(&mut self, round: u64, params: &mut Parameters) -> Result<RoundRecord> {
+        let proxies = self.manager.snapshot();
+        if proxies.is_empty() {
+            return Err(Error::Protocol("no clients connected".into()));
+        }
+        let handles: Vec<ClientHandle> = proxies.iter().map(|p| p.handle.clone()).collect();
+
+        // ---- fit phase -------------------------------------------------
+        let plan = self.strategy.configure_fit(round, params, &handles);
+        if plan.is_empty() {
+            return Err(Error::Protocol("strategy selected no clients".into()));
+        }
+        let fit_selected = plan.len();
+        let timeout = self.config.round_timeout;
+        let mut fit_results: Vec<(ClientHandle, crate::proto::FitRes)> = Vec::new();
+        let mut fit_failures = 0usize;
+        let mut down_bytes = 0usize;
+        let mut up_bytes = 0usize;
+        let mut client_times: Vec<(ClientHandle, f64, f64)> = Vec::new(); // (handle, t, energy)
+
+        let outcomes: Vec<(usize, usize, Result<crate::proto::FitRes>)> =
+            std::thread::scope(|scope| {
+                let mut tasks = Vec::new();
+                for (idx, ins) in &plan {
+                    let proxy = Arc::clone(&proxies[*idx]);
+                    let bytes_down = ins.parameters.byte_len();
+                    let ins = ins.clone();
+                    tasks.push((
+                        *idx,
+                        bytes_down,
+                        scope.spawn(move || proxy.fit(ins, timeout)),
+                    ));
+                }
+                tasks
+                    .into_iter()
+                    .map(|(idx, bytes_down, t)| {
+                        (
+                            idx,
+                            bytes_down,
+                            t.join().unwrap_or_else(|_| {
+                                Err(Error::Client("fit thread panicked".into()))
+                            }),
+                        )
+                    })
+                    .collect()
+            });
+
+        for (idx, bytes_down, outcome) in outcomes {
+            let handle = handles[idx].clone();
+            match outcome {
+                Ok(res) if res.status.is_ok() => {
+                    down_bytes += bytes_down;
+                    let bytes_up = res.parameters.byte_len();
+                    up_bytes += bytes_up;
+                    let down = self.cost.comm(handle.device, bytes_down);
+                    let up = self.cost.comm(handle.device, bytes_up);
+                    let compute_t = res.metrics.get_f64_or(keys::COMPUTE_TIME_S, 0.0);
+                    let compute_e = res.metrics.get_f64_or(keys::ENERGY_J, 0.0);
+                    let t = down.time_s + compute_t + up.time_s;
+                    let e = down.energy_j + compute_e + up.energy_j;
+                    client_times.push((handle.clone(), t, e));
+                    fit_results.push((handle, res));
+                }
+                Ok(res) => {
+                    log::warn(&format!(
+                        "client {} fit failed: {}",
+                        handle.id, res.status.message
+                    ));
+                    fit_failures += 1;
+                }
+                Err(e) => {
+                    log::warn(&format!("client {} fit error: {e}", handle.id));
+                    fit_failures += 1;
+                }
+            }
+        }
+
+        let round_fit_time = client_times
+            .iter()
+            .map(|(_, t, _)| *t)
+            .fold(0.0f64, f64::max);
+        let mut round_energy: f64 = client_times.iter().map(|(_, _, e)| e).sum();
+        if self.config.count_idle_energy {
+            for (handle, t, _) in &client_times {
+                round_energy += self
+                    .cost
+                    .idle(handle.device, (round_fit_time - t).max(0.0))
+                    .energy_j;
+            }
+        }
+
+        let train_loss = fedavg::mean_train_loss(&fit_results);
+        let truncated_clients = fedavg::truncated_count(&fit_results);
+        let steps: u64 = fit_results
+            .iter()
+            .map(|(_, res)| res.metrics.get_i64_or(keys::STEPS, 0).max(0) as u64)
+            .sum();
+
+        *params = self
+            .strategy
+            .aggregate_fit(round, &fit_results, fit_failures)?;
+
+        // ---- evaluate phase --------------------------------------------
+        let eval_plan = self.strategy.configure_evaluate(round, params, &handles);
+        let eval_outcomes: Vec<(usize, Result<crate::proto::EvaluateRes>)> =
+            std::thread::scope(|scope| {
+                let mut tasks = Vec::new();
+                for (idx, ins) in &eval_plan {
+                    let proxy = Arc::clone(&proxies[*idx]);
+                    let ins = ins.clone();
+                    tasks.push((*idx, scope.spawn(move || proxy.evaluate(ins, timeout))));
+                }
+                tasks
+                    .into_iter()
+                    .map(|(idx, t)| {
+                        (
+                            idx,
+                            t.join().unwrap_or_else(|_| {
+                                Err(Error::Client("evaluate thread panicked".into()))
+                            }),
+                        )
+                    })
+                    .collect()
+            });
+        let mut eval_results = Vec::new();
+        for (idx, outcome) in eval_outcomes {
+            match outcome {
+                Ok(res) => eval_results.push((handles[idx].clone(), res)),
+                Err(e) => log::warn(&format!("client {} evaluate error: {e}", handles[idx].id)),
+            }
+        }
+        let summary = self.strategy.aggregate_evaluate(round, &eval_results)?;
+
+        Ok(RoundRecord {
+            round,
+            fit_selected,
+            fit_completed: fit_results.len(),
+            fit_failures,
+            train_loss,
+            eval_loss: summary.loss,
+            accuracy: summary.accuracy,
+            round_time_s: round_fit_time + self.cost.server_overhead_s,
+            cum_time_s: 0.0,   // filled by History::push
+            round_energy_j: round_energy,
+            cum_energy_j: 0.0, // filled by History::push
+            steps,
+            truncated_clients,
+            down_bytes,
+            up_bytes,
+        })
+    }
+}
+
+/// Serve TCP registrations in a background thread until `stop` is set.
+/// Each accepted connection must open with a `Register` message; the
+/// resulting proxy is added to the manager.
+pub fn serve_registrations(
+    listener: TcpTransportListener,
+    manager: Arc<ClientManager>,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        // Nonblocking accept loop so `stop` is honored promptly.
+        let std_listener = listener;
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            match std_listener.accept() {
+                Ok(mut conn) => {
+                    match conn.recv_timeout(Duration::from_secs(5)) {
+                        Ok(frame) => match crate::proto::decode_client_message(&frame) {
+                            Ok(ClientMessage::Register(info)) => {
+                                match crate::device::profiles::by_name(&info.device) {
+                                    Ok(device) => {
+                                        log::info(&format!(
+                                            "registered client {} ({})",
+                                            info.client_id, info.device
+                                        ));
+                                        manager.register(Arc::new(ClientProxy::new(
+                                            ClientHandle {
+                                                id: info.client_id,
+                                                device,
+                                                num_examples: info.num_examples,
+                                            },
+                                            Connection::Tcp(conn),
+                                        )));
+                                    }
+                                    Err(e) => log::warn(&format!("rejecting client: {e}")),
+                                }
+                            }
+                            Ok(other) => log::warn(&format!(
+                                "expected Register as first message, got {other:?}"
+                            )),
+                            Err(e) => log::warn(&format!("bad registration frame: {e}")),
+                        },
+                        Err(e) => log::warn(&format!("registration read failed: {e}")),
+                    }
+                }
+                Err(e) => {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    log::warn(&format!("accept failed: {e}"));
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::Client;
+    use crate::device::profiles;
+    use crate::proto::*;
+    use crate::strategy::{fedavg::TrainingPlan, Aggregator, FedAvg};
+    use crate::transport::inproc;
+
+    /// A fake device: "training" adds +1 to every param; eval reports
+    /// accuracy = min(1, mean(params)/10).
+    struct FakeDevice;
+
+    impl Client for FakeDevice {
+        fn get_parameters(&mut self, _: GetParametersIns) -> Result<GetParametersRes> {
+            Ok(GetParametersRes {
+                status: Status::ok(),
+                parameters: Parameters::from_flat(vec![0.0; 4]),
+            })
+        }
+        fn fit(&mut self, ins: FitIns) -> Result<FitRes> {
+            let mut p = ins.parameters.to_flat()?.to_vec();
+            for v in &mut p {
+                *v += 1.0;
+            }
+            let mut metrics = ConfigMap::new();
+            metrics.insert(keys::STEPS.into(), Scalar::I64(8));
+            metrics.insert(keys::COMPUTE_TIME_S.into(), Scalar::F64(12.0));
+            metrics.insert(keys::ENERGY_J.into(), Scalar::F64(100.0));
+            metrics.insert(keys::TRAIN_LOSS.into(), Scalar::F64(1.0));
+            metrics.insert(keys::TRUNCATED.into(), Scalar::Bool(false));
+            Ok(FitRes {
+                status: Status::ok(),
+                parameters: Parameters::from_flat(p),
+                num_examples: 256,
+                metrics,
+            })
+        }
+        fn evaluate(&mut self, ins: EvaluateIns) -> Result<EvaluateRes> {
+            let p = ins.parameters.to_flat()?;
+            let mean = p.iter().sum::<f32>() as f64 / p.len() as f64;
+            let mut metrics = ConfigMap::new();
+            metrics.insert(
+                keys::ACCURACY.into(),
+                Scalar::F64((mean / 10.0).min(1.0)),
+            );
+            Ok(EvaluateRes {
+                status: Status::ok(),
+                loss: (10.0 - mean).max(0.0),
+                num_examples: 100,
+                metrics,
+            })
+        }
+    }
+
+    fn spawn_fake_cohort(manager: &Arc<ClientManager>, n: usize) -> Vec<std::thread::JoinHandle<()>> {
+        (0..n)
+            .map(|i| {
+                let (server_end, client_end) = inproc::pair();
+                manager.register(Arc::new(ClientProxy::new(
+                    ClientHandle {
+                        id: format!("fake-{i}"),
+                        device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+                        num_examples: 256,
+                    },
+                    Connection::InProc(server_end),
+                )));
+                std::thread::spawn(move || {
+                    let mut dev = FakeDevice;
+                    // client loop without the Register (already registered)
+                    let mut conn = Connection::InProc(client_end);
+                    loop {
+                        let Ok(msg) = conn.recv_server_message() else { return };
+                        match msg {
+                            ServerMessage::FitIns(ins) => {
+                                let res = dev.fit(ins).unwrap();
+                                conn.send_client_message(&ClientMessage::FitRes(res)).unwrap();
+                            }
+                            ServerMessage::EvaluateIns(ins) => {
+                                let res = dev.evaluate(ins).unwrap();
+                                conn.send_client_message(&ClientMessage::EvaluateRes(res))
+                                    .unwrap();
+                            }
+                            ServerMessage::GetParametersIns(ins) => {
+                                let res = dev.get_parameters(ins).unwrap();
+                                conn.send_client_message(&ClientMessage::GetParametersRes(res))
+                                    .unwrap();
+                            }
+                            ServerMessage::Reconnect { .. } => {
+                                let _ = conn.send_client_message(&ClientMessage::Disconnect {
+                                    reason: "bye".into(),
+                                });
+                                return;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fl_loop_converges_and_accounts_costs() {
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 4);
+        let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+        let mut server = Server::new(
+            Arc::clone(&manager),
+            Box::new(strategy),
+            CostModel::default(),
+            ServerConfig {
+                num_rounds: 5,
+                quorum: 4,
+                ..Default::default()
+            },
+        );
+        let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        assert_eq!(history.rounds.len(), 5);
+        // params grow by +1 per round -> accuracy mean/10 grows by 0.1
+        let acc: Vec<f64> = history.rounds.iter().map(|r| r.accuracy).collect();
+        assert!((acc[0] - 0.1).abs() < 1e-9, "{acc:?}");
+        assert!((acc[4] - 0.5).abs() < 1e-9, "{acc:?}");
+        // costs: 12s compute + comm + 1s overhead per round
+        let r = &history.rounds[0];
+        assert!(r.round_time_s > 13.0 && r.round_time_s < 14.0, "{}", r.round_time_s);
+        assert!(r.round_energy_j >= 400.0); // 4 clients × 100 J + comm
+        assert_eq!(r.steps, 32);
+        assert_eq!(r.fit_completed, 4);
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn early_stop_on_target_accuracy() {
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 2);
+        let strategy = FedAvg::new(TrainingPlan::default(), Aggregator::Rust);
+        let mut server = Server::new(
+            Arc::clone(&manager),
+            Box::new(strategy),
+            CostModel::default(),
+            ServerConfig {
+                num_rounds: 50,
+                quorum: 2,
+                target_accuracy: Some(0.3),
+                ..Default::default()
+            },
+        );
+        let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        assert_eq!(history.rounds.len(), 3); // acc 0.1, 0.2, 0.3 → stop
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn quorum_timeout_errors() {
+        let manager = Arc::new(ClientManager::new());
+        let strategy = FedAvg::new(TrainingPlan::default(), Aggregator::Rust);
+        let mut server = Server::new(
+            manager,
+            Box::new(strategy),
+            CostModel::default(),
+            ServerConfig {
+                quorum: 3,
+                quorum_timeout: Duration::from_millis(50),
+                ..Default::default()
+            },
+        );
+        assert!(server.run(Parameters::from_flat(vec![0.0])).is_err());
+    }
+}

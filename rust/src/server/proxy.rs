@@ -1,0 +1,173 @@
+//! `ClientProxy`: the server-side stand-in for one connected client.
+//!
+//! Owns the connection; every call is a strict request/response exchange
+//! with a deadline (the paper's RPC server "is responsible for monitoring
+//! these connections and for sending and receiving Flower Protocol
+//! messages").
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::proto::{
+    ClientMessage, EvaluateIns, EvaluateRes, FitIns, FitRes, GetParametersIns, GetParametersRes,
+    ServerMessage,
+};
+use crate::strategy::ClientHandle;
+use crate::transport::Connection;
+
+/// Server-side handle + channel to one client.
+pub struct ClientProxy {
+    pub handle: ClientHandle,
+    conn: Mutex<Connection>,
+}
+
+impl ClientProxy {
+    pub fn new(handle: ClientHandle, conn: Connection) -> Self {
+        ClientProxy { handle, conn: Mutex::new(conn) }
+    }
+
+    fn exchange(&self, msg: &ServerMessage, timeout: Duration) -> Result<ClientMessage> {
+        let mut conn = self
+            .conn
+            .lock()
+            .map_err(|_| Error::Transport("proxy connection poisoned".into()))?;
+        conn.send_server_message(msg)?;
+        conn.recv_client_message_timeout(timeout)
+    }
+
+    /// Ask for the client's current parameters.
+    pub fn get_parameters(
+        &self,
+        ins: GetParametersIns,
+        timeout: Duration,
+    ) -> Result<GetParametersRes> {
+        match self.exchange(&ServerMessage::GetParametersIns(ins), timeout)? {
+            ClientMessage::GetParametersRes(res) => Ok(res),
+            other => Err(Error::Protocol(format!(
+                "client {} answered get_parameters with {other:?}",
+                self.handle.id
+            ))),
+        }
+    }
+
+    /// Run a round of local training on the client.
+    pub fn fit(&self, ins: FitIns, timeout: Duration) -> Result<FitRes> {
+        match self.exchange(&ServerMessage::FitIns(ins), timeout)? {
+            ClientMessage::FitRes(res) => Ok(res),
+            other => Err(Error::Protocol(format!(
+                "client {} answered fit with {other:?}",
+                self.handle.id
+            ))),
+        }
+    }
+
+    /// Evaluate parameters on the client's local test split.
+    pub fn evaluate(&self, ins: EvaluateIns, timeout: Duration) -> Result<EvaluateRes> {
+        match self.exchange(&ServerMessage::EvaluateIns(ins), timeout)? {
+            ClientMessage::EvaluateRes(res) => Ok(res),
+            other => Err(Error::Protocol(format!(
+                "client {} answered evaluate with {other:?}",
+                self.handle.id
+            ))),
+        }
+    }
+
+    /// Tell the client to go away (end of the experiment).
+    pub fn reconnect(&self, seconds: u64) -> Result<()> {
+        let mut conn = self
+            .conn
+            .lock()
+            .map_err(|_| Error::Transport("proxy connection poisoned".into()))?;
+        conn.send_server_message(&ServerMessage::Reconnect { seconds })?;
+        // best-effort: the client answers Disconnect, but we don't insist
+        let _ = conn.recv_client_message_timeout(Duration::from_millis(200));
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+    use crate::proto::{Parameters, Status};
+    use crate::transport::inproc;
+
+    fn proxy_pair() -> (ClientProxy, Connection) {
+        let (server_end, client_end) = inproc::pair();
+        let handle = ClientHandle {
+            id: "c0".into(),
+            device: profiles::by_name("pixel4").unwrap(),
+            num_examples: 100,
+        };
+        (
+            ClientProxy::new(handle, Connection::InProc(server_end)),
+            Connection::InProc(client_end),
+        )
+    }
+
+    #[test]
+    fn fit_roundtrip() {
+        let (proxy, mut client) = proxy_pair();
+        let t = std::thread::spawn(move || {
+            let msg = client.recv_server_message().unwrap();
+            assert!(matches!(msg, ServerMessage::FitIns(_)));
+            client
+                .send_client_message(&ClientMessage::FitRes(FitRes {
+                    status: Status::ok(),
+                    parameters: Parameters::from_flat(vec![1.0]),
+                    num_examples: 10,
+                    metrics: Default::default(),
+                }))
+                .unwrap();
+        });
+        let res = proxy
+            .fit(
+                FitIns {
+                    parameters: Parameters::from_flat(vec![0.0]),
+                    config: Default::default(),
+                },
+                Duration::from_secs(1),
+            )
+            .unwrap();
+        assert_eq!(res.num_examples, 10);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn wrong_answer_is_protocol_error() {
+        let (proxy, mut client) = proxy_pair();
+        let t = std::thread::spawn(move || {
+            let _ = client.recv_server_message().unwrap();
+            client
+                .send_client_message(&ClientMessage::Disconnect { reason: "bye".into() })
+                .unwrap();
+        });
+        let err = proxy
+            .fit(
+                FitIns {
+                    parameters: Parameters::from_flat(vec![0.0]),
+                    config: Default::default(),
+                },
+                Duration::from_secs(1),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Protocol(_)));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn timeout_surfaces() {
+        let (proxy, _client) = proxy_pair();
+        let err = proxy
+            .fit(
+                FitIns {
+                    parameters: Parameters::from_flat(vec![0.0]),
+                    config: Default::default(),
+                },
+                Duration::from_millis(30),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)));
+    }
+}

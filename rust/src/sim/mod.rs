@@ -1,0 +1,253 @@
+//! The device-farm simulator: builds a whole federation in-process and
+//! runs it through the *real* server, protocol and PJRT runtime.
+//!
+//! This is the substrate standing in for the paper's physical deployment
+//! (AWS Device Farm phones, a rack of Jetsons). Per DESIGN.md §2:
+//! numerics are bit-for-bit real (every client trains through the AOT
+//! artifacts), while time and energy come from the calibrated
+//! [`cost::CostModel`] and the per-device profiles.
+
+pub mod cost;
+
+use std::sync::Arc;
+
+use crate::client::app;
+use crate::client::{BaseModel, DeviceTrainer};
+use crate::config::{AggBackend, ExperimentConfig, StrategyConfig};
+use crate::data::{Dataset, SyntheticSpec};
+use crate::error::{Error, Result};
+use crate::proto::Parameters;
+use crate::runtime::Runtime;
+use crate::server::{ClientManager, ClientProxy, History, Server, ServerConfig};
+use crate::strategy::{
+    fedavg::TrainingPlan, Aggregator, ClientHandle, FedAvg, FedAvgCutoff, FedAvgM, FedProx,
+    QFedAvg, Strategy,
+};
+use crate::telemetry::log;
+use crate::transport::{inproc, Connection};
+use crate::util::rng::Rng;
+
+/// Outcome of one simulated experiment.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub name: String,
+    pub model: String,
+    pub num_clients: usize,
+    pub epochs: i64,
+    pub rounds_run: usize,
+    pub history: History,
+}
+
+impl SimReport {
+    /// Paper metrics: (accuracy, convergence time in minutes, energy in kJ).
+    pub fn paper_metrics(&self) -> (f64, f64, f64) {
+        (
+            self.history.final_accuracy(),
+            self.history.total_time_s() / 60.0,
+            self.history.total_energy_j() / 1e3,
+        )
+    }
+}
+
+/// Build the strategy described by the config.
+pub fn build_strategy(cfg: &ExperimentConfig, runtime: &Runtime) -> Box<dyn Strategy> {
+    let aggregator = match cfg.agg_backend {
+        AggBackend::Rust => Aggregator::Rust,
+        AggBackend::Pjrt => Aggregator::Pjrt {
+            runtime: runtime.clone(),
+            model: cfg.model.clone(),
+        },
+    };
+    let plan = TrainingPlan { epochs: cfg.epochs, lr: cfg.lr };
+    let base = FedAvg::new(plan, aggregator)
+        .with_fraction(cfg.fraction_fit, 1)
+        .with_seed(cfg.seed ^ 0x57A7);
+    let strategy: Box<dyn Strategy> = match &cfg.strategy {
+        StrategyConfig::FedAvg => Box::new(base),
+        StrategyConfig::FedAvgCutoff { taus, default_tau_s } => {
+            let mut s = FedAvgCutoff::new(base);
+            for (device, tau) in taus {
+                s = s.with_tau(device, *tau);
+            }
+            if let Some(tau) = default_tau_s {
+                s = s.with_default_tau(*tau);
+            }
+            Box::new(s)
+        }
+        StrategyConfig::FedProx { mu } => Box::new(FedProx::new(base, *mu)),
+        StrategyConfig::FedAvgM { beta, server_lr } => {
+            Box::new(FedAvgM::new(base, *beta, *server_lr))
+        }
+        StrategyConfig::QFedAvg { q } => Box::new(QFedAvg::new(base, *q)),
+    };
+    let strategy = if cfg.quantize_f16 {
+        Box::new(crate::strategy::QuantizedComm::new(strategy)) as Box<dyn Strategy>
+    } else {
+        strategy
+    };
+    if cfg.secure_agg {
+        Box::new(crate::strategy::SecAgg::new(strategy, cfg.seed ^ 0x5EC_A66))
+    } else {
+        strategy
+    }
+}
+
+/// Failure injection: wraps a client so each fit fails with probability
+/// `drop_prob` (a phone leaving the farm mid-round, an OOM, a flaky link).
+/// The server's failure path — count it, aggregate without it — is the
+/// behavior under test.
+pub struct FlakyClient<C: crate::client::Client> {
+    inner: C,
+    drop_prob: f64,
+    rng: Rng,
+}
+
+impl<C: crate::client::Client> FlakyClient<C> {
+    pub fn new(inner: C, drop_prob: f64, seed: u64) -> Self {
+        FlakyClient { inner, drop_prob, rng: Rng::seed_from(seed ^ 0xF1A6) }
+    }
+}
+
+impl<C: crate::client::Client> crate::client::Client for FlakyClient<C> {
+    fn get_parameters(
+        &mut self,
+        ins: crate::proto::GetParametersIns,
+    ) -> Result<crate::proto::GetParametersRes> {
+        self.inner.get_parameters(ins)
+    }
+
+    fn fit(&mut self, ins: crate::proto::FitIns) -> Result<crate::proto::FitRes> {
+        if self.rng.f64() < self.drop_prob {
+            return Err(Error::Client("injected failure: device dropped".into()));
+        }
+        self.inner.fit(ins)
+    }
+
+    fn evaluate(&mut self, ins: crate::proto::EvaluateIns) -> Result<crate::proto::EvaluateRes> {
+        self.inner.evaluate(ins)
+    }
+}
+
+/// The synthetic task for a workload (difficulty overridable in config).
+pub fn task_spec(cfg: &ExperimentConfig) -> SyntheticSpec {
+    let mut spec = if cfg.model == "head" {
+        SyntheticSpec::office_like(cfg.seed)
+    } else {
+        SyntheticSpec::cifar_like(cfg.seed)
+    };
+    if let Some(s) = cfg.signal {
+        spec.signal = s;
+    }
+    if let Some(n) = cfg.noise {
+        spec.noise = n;
+    }
+    spec
+}
+
+/// Generate per-client (train, test) splits.
+pub fn client_datasets(cfg: &ExperimentConfig) -> Result<Vec<(Dataset, Dataset)>> {
+    let spec = task_spec(cfg);
+    let pool = spec.generate(cfg.num_clients * cfg.train_per_client, 1);
+    let mut rng = Rng::seed_from(cfg.seed ^ 0xDA7A);
+    let trains = cfg.partitioner.split(&pool, cfg.num_clients, &mut rng)?;
+    Ok(trains
+        .into_iter()
+        .enumerate()
+        .map(|(i, train)| {
+            let test = spec.generate(cfg.test_per_client, 1000 + i as u64);
+            (train, test)
+        })
+        .collect())
+}
+
+/// Run a full experiment in-process. Every client is a thread speaking the
+/// wire protocol over an in-proc connection; the server is the production
+/// [`Server`].
+pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimReport> {
+    cfg.validate()?;
+    log::info(&format!(
+        "experiment {:?}: model={} C={} E={} rounds={} strategy={:?}",
+        cfg.name, cfg.model, cfg.num_clients, cfg.epochs, cfg.rounds, cfg.strategy
+    ));
+    let datasets = client_datasets(cfg)?;
+    let device_names = cfg.effective_devices();
+    let base = if cfg.model == "head" {
+        let entry = runtime.manifest().model("head")?;
+        Some(BaseModel::generate(
+            cfg.seed ^ 0xBA5E,
+            entry.base_input.ok_or_else(|| Error::Config("head model missing base_input".into()))?,
+            entry.feature_dim.ok_or_else(|| Error::Config("head model missing feature_dim".into()))?,
+        ))
+    } else {
+        None
+    };
+
+    let manager = Arc::new(ClientManager::new());
+    let mut client_threads = Vec::new();
+    for (i, (train, test)) in datasets.into_iter().enumerate() {
+        let device = crate::device::profiles::by_name(
+            &device_names[i % device_names.len()],
+        )?;
+        let trainer = DeviceTrainer::new(
+            runtime.clone(),
+            &cfg.model,
+            device,
+            cfg.cost.clone(),
+            train,
+            test,
+            base.clone(),
+            cfg.seed ^ (i as u64) << 8,
+        )?;
+        let (server_end, client_end) = inproc::pair();
+        manager.register(Arc::new(ClientProxy::new(
+            ClientHandle {
+                id: format!("{}-{i}", device.name), // must match MaskedClient id below
+                device,
+                num_examples: trainer.num_train_examples() as u64,
+            },
+            Connection::InProc(server_end),
+        )));
+        let dropout = cfg.dropout;
+        let secure = cfg.secure_agg;
+        let client_id = format!("{}-{i}", device.name);
+        let flaky_seed = cfg.seed ^ (0xD0 + i as u64);
+        client_threads.push(std::thread::spawn(move || {
+            let mut client: Box<dyn crate::client::Client> = Box::new(trainer);
+            if secure {
+                client = Box::new(crate::client::MaskedClient::new(client, &client_id));
+            }
+            if dropout > 0.0 {
+                client = Box::new(FlakyClient::new(client, dropout, flaky_seed));
+            }
+            app::serve(Connection::InProc(client_end), &mut client)
+        }));
+    }
+
+    let strategy = build_strategy(cfg, runtime);
+    let mut server = Server::new(
+        Arc::clone(&manager),
+        strategy,
+        cfg.cost.clone(),
+        ServerConfig {
+            num_rounds: cfg.rounds,
+            quorum: cfg.num_clients,
+            target_accuracy: cfg.target_accuracy,
+            count_idle_energy: cfg.count_idle_energy,
+            ..Default::default()
+        },
+    );
+    let initial = Parameters::from_flat(runtime.initial_parameters(&cfg.model)?);
+    let history = server.run(initial)?;
+    for t in client_threads {
+        t.join()
+            .map_err(|_| Error::Client("client thread panicked".into()))??;
+    }
+    Ok(SimReport {
+        name: cfg.name.clone(),
+        model: cfg.model.clone(),
+        num_clients: cfg.num_clients,
+        epochs: cfg.epochs,
+        rounds_run: history.rounds.len(),
+        history,
+    })
+}

@@ -1,0 +1,158 @@
+//! Parameter aggregation backends.
+//!
+//! The weighted average at the core of FedAvg can run two ways:
+//! * [`Aggregator::Rust`] — portable f64-accumulated loop (default);
+//! * [`Aggregator::Pjrt`] — the Pallas `fedavg_aggregate` kernel via the
+//!   AOT artifact, streaming K client vectors through the XLA runtime.
+//!
+//! Both are exercised by tests and compared by `rust/benches/aggregate.rs`;
+//! the PJRT artifact has a fixed slot count, so larger cohorts are folded
+//! in linear chunks (weighted sums are associative).
+
+use crate::error::{Error, Result};
+use crate::runtime::Runtime;
+
+/// Which backend aggregates parameters.
+#[derive(Clone)]
+pub enum Aggregator {
+    /// Portable CPU loop, f64 accumulation.
+    Rust,
+    /// The AOT Pallas kernel for `model` through `runtime`.
+    Pjrt { runtime: Runtime, model: String },
+}
+
+impl std::fmt::Debug for Aggregator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Aggregator::Rust => write!(f, "Aggregator::Rust"),
+            Aggregator::Pjrt { model, .. } => write!(f, "Aggregator::Pjrt({model})"),
+        }
+    }
+}
+
+impl Aggregator {
+    /// Weighted average of `(vector, weight)` pairs. Weights need not be
+    /// normalized; they must be non-negative with a positive sum.
+    pub fn weighted_average(&self, inputs: &[(&[f32], f64)]) -> Result<Vec<f32>> {
+        if inputs.is_empty() {
+            return Err(Error::Aggregation("nothing to aggregate".into()));
+        }
+        let p = inputs[0].0.len();
+        for (i, (v, w)) in inputs.iter().enumerate() {
+            if v.len() != p {
+                return Err(Error::Aggregation(format!(
+                    "vector {i} has {} params, expected {p}",
+                    v.len()
+                )));
+            }
+            if *w < 0.0 || !w.is_finite() {
+                return Err(Error::Aggregation(format!("bad weight {w} at {i}")));
+            }
+        }
+        let total: f64 = inputs.iter().map(|(_, w)| w).sum();
+        if total <= 0.0 {
+            return Err(Error::Aggregation("weights sum to zero".into()));
+        }
+        match self {
+            Aggregator::Rust => Ok(rust_weighted_average(inputs, total)),
+            Aggregator::Pjrt { runtime, model } => {
+                pjrt_weighted_average(runtime, model, inputs, total)
+            }
+        }
+    }
+}
+
+fn rust_weighted_average(inputs: &[(&[f32], f64)], total: f64) -> Vec<f32> {
+    let p = inputs[0].0.len();
+    let mut acc = vec![0f64; p];
+    for (v, w) in inputs {
+        let wn = w / total;
+        for (a, &x) in acc.iter_mut().zip(v.iter()) {
+            *a += wn * x as f64;
+        }
+    }
+    acc.into_iter().map(|x| x as f32).collect()
+}
+
+fn pjrt_weighted_average(
+    runtime: &Runtime,
+    model: &str,
+    inputs: &[(&[f32], f64)],
+    total: f64,
+) -> Result<Vec<f32>> {
+    let slots = runtime.manifest().model(model)?.agg_slots;
+    // Fold in chunks of `slots`: weighted sums are associative, so each
+    // chunk contributes its partial sum with normalized weights.
+    let mut partials: Vec<Vec<f32>> = Vec::new();
+    for chunk in inputs.chunks(slots) {
+        let vectors: Vec<&[f32]> = chunk.iter().map(|(v, _)| *v).collect();
+        let weights: Vec<f32> = chunk.iter().map(|(_, w)| (*w / total) as f32).collect();
+        partials.push(runtime.aggregate(model, &vectors, &weights)?);
+    }
+    if partials.len() == 1 {
+        return Ok(partials.pop().unwrap());
+    }
+    // Sum the partials (already correctly scaled).
+    let refs: Vec<(&[f32], f64)> = partials.iter().map(|v| (v.as_slice(), 1.0)).collect();
+    Ok(rust_weighted_average(&refs, 1.0)
+        .into_iter()
+        .map(|x| x * partials.len() as f32) // undo the mean: we want the sum
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rust_weighted_average_basic() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 6.0];
+        let out = Aggregator::Rust
+            .weighted_average(&[(&a, 1.0), (&b, 3.0)])
+            .unwrap();
+        assert_eq!(out, vec![2.5, 5.0]);
+    }
+
+    #[test]
+    fn identity_single_input() {
+        let a = vec![1.5f32; 100];
+        let out = Aggregator::Rust.weighted_average(&[(&a, 42.0)]).unwrap();
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![1.0f32];
+        assert!(Aggregator::Rust.weighted_average(&[]).is_err());
+        assert!(Aggregator::Rust
+            .weighted_average(&[(&a, 1.0), (&b, 1.0)])
+            .is_err());
+        assert!(Aggregator::Rust
+            .weighted_average(&[(&a, -1.0)])
+            .is_err());
+        assert!(Aggregator::Rust
+            .weighted_average(&[(&a, 0.0)])
+            .is_err());
+        assert!(Aggregator::Rust
+            .weighted_average(&[(&a, f64::NAN)])
+            .is_err());
+    }
+
+    #[test]
+    fn permutation_invariant() {
+        let v1 = vec![1.0f32, -1.0, 0.5];
+        let v2 = vec![2.0f32, 3.0, -0.5];
+        let v3 = vec![0.0f32, 1.0, 1.0];
+        let fwd = Aggregator::Rust
+            .weighted_average(&[(&v1, 1.0), (&v2, 2.0), (&v3, 3.0)])
+            .unwrap();
+        let rev = Aggregator::Rust
+            .weighted_average(&[(&v3, 3.0), (&v1, 1.0), (&v2, 2.0)])
+            .unwrap();
+        for (a, b) in fwd.iter().zip(&rev) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

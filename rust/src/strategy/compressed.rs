@@ -1,0 +1,152 @@
+//! Communication compression: f16-quantized parameter exchange.
+//!
+//! FL's dominant system cost besides compute is moving the model (the
+//! paper's §2 cites communication-efficiency as FedAvg's original
+//! motivation). `QuantizedComm` wraps any inner strategy and:
+//!
+//! * quantizes outgoing global parameters (FitIns/EvaluateIns) to IEEE
+//!   binary16 — half the downlink bytes;
+//! * asks clients (via the `quantize` config key) to quantize their
+//!   updates — half the uplink bytes;
+//! * dequantizes client results before delegating aggregation to the
+//!   inner strategy, which keeps full f32 precision server-side.
+//!
+//! The comm-cost model sees the smaller payloads automatically (byte
+//! accounting follows tensor dtype), so the time/energy savings show up
+//! in the history without further plumbing.
+
+use crate::client::keys;
+use crate::error::Result;
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+
+use super::{ClientHandle, EvalSummary, Strategy};
+
+/// Wraps a strategy with f16 wire compression in both directions.
+pub struct QuantizedComm {
+    inner: Box<dyn Strategy>,
+}
+
+impl QuantizedComm {
+    pub fn new(inner: Box<dyn Strategy>) -> Self {
+        QuantizedComm { inner }
+    }
+}
+
+impl Strategy for QuantizedComm {
+    fn name(&self) -> &'static str {
+        "quantized_comm"
+    }
+
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)> {
+        let mut plan = self.inner.configure_fit(round, parameters, cohort);
+        for (_, ins) in &mut plan {
+            if let Ok(q) = ins.parameters.quantize_f16() {
+                ins.parameters = q;
+            }
+            ins.config
+                .insert(keys::QUANTIZE.into(), Scalar::Str("f16".into()));
+        }
+        plan
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, FitRes)],
+        failures: usize,
+    ) -> Result<Parameters> {
+        // Dequantize client updates so the inner strategy aggregates in f32.
+        let dequantized: Vec<(ClientHandle, FitRes)> = results
+            .iter()
+            .map(|(h, res)| {
+                let mut res = res.clone();
+                if let Ok(flat) = res.parameters.to_flat_vec() {
+                    res.parameters = Parameters::from_flat(flat);
+                }
+                (h.clone(), res)
+            })
+            .collect();
+        self.inner.aggregate_fit(round, &dequantized, failures)
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        let mut plan = self.inner.configure_evaluate(round, parameters, cohort);
+        for (_, ins) in &mut plan {
+            if let Ok(q) = ins.parameters.quantize_f16() {
+                ins.parameters = q;
+            }
+        }
+        plan
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(round, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{fedavg::TrainingPlan, Aggregator, FedAvg};
+    use super::*;
+    use crate::proto::scalar::ConfigExt;
+
+    fn quantized() -> QuantizedComm {
+        QuantizedComm::new(Box::new(FedAvg::new(
+            TrainingPlan::default(),
+            Aggregator::Rust,
+        )))
+    }
+
+    #[test]
+    fn downlink_is_quantized_and_flagged() {
+        let mut s = quantized();
+        let cohort = handles(2);
+        let params = Parameters::from_flat(vec![0.5; 100]);
+        let plan = s.configure_fit(1, &params, &cohort);
+        for (_, ins) in &plan {
+            assert_eq!(ins.parameters.byte_len(), 200); // half of 400
+            assert_eq!(ins.config.get_str(keys::QUANTIZE).unwrap(), "f16");
+        }
+    }
+
+    #[test]
+    fn aggregation_dequantizes_uplink() {
+        let mut s = quantized();
+        let h = handles(2);
+        let q1 = Parameters::from_flat(vec![1.0, 2.0]).quantize_f16().unwrap();
+        let q2 = Parameters::from_flat(vec![3.0, 4.0]).quantize_f16().unwrap();
+        let mk = |p: Parameters| FitRes {
+            status: crate::proto::Status::ok(),
+            parameters: p,
+            num_examples: 10,
+            metrics: Default::default(),
+        };
+        let results = vec![(h[0].clone(), mk(q1)), (h[1].clone(), mk(q2))];
+        let out = s.aggregate_fit(1, &results, 0).unwrap();
+        assert_eq!(out.to_flat().unwrap(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn evaluate_passthrough() {
+        let mut s = quantized();
+        let h = handles(1);
+        let results = vec![(h[0].clone(), eval_res(1.0, 0.8, 100))];
+        let sum = s.aggregate_evaluate(1, &results).unwrap();
+        assert!((sum.accuracy - 0.8).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,271 @@
+//! FedAvg (McMahan et al. 2017): sample a fraction of clients, run E local
+//! epochs each, average parameters weighted by examples processed. The
+//! baseline strategy for all of the paper's experiments.
+
+use crate::client::keys;
+use crate::config;
+use crate::error::Result;
+use crate::proto::scalar::ConfigExt;
+use crate::proto::{ConfigMap, EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+use crate::util::rng::Rng;
+
+use super::{
+    weighted_eval_summary, Aggregator, ClientHandle, EvalSummary, Strategy,
+};
+
+/// Per-round training hyper-parameters broadcast to clients.
+#[derive(Debug, Clone)]
+pub struct TrainingPlan {
+    pub epochs: i64,
+    pub lr: f64,
+}
+
+impl Default for TrainingPlan {
+    fn default() -> Self {
+        TrainingPlan { epochs: 1, lr: 0.05 }
+    }
+}
+
+impl TrainingPlan {
+    pub fn to_config(&self, round: u64) -> ConfigMap {
+        config! {
+            keys::EPOCHS => self.epochs,
+            keys::LR => self.lr,
+            keys::ROUND => round as i64,
+        }
+    }
+}
+
+/// The federated averaging strategy.
+pub struct FedAvg {
+    pub plan: TrainingPlan,
+    /// Fraction of available clients trained per round (paper uses 1.0).
+    pub fraction_fit: f64,
+    /// Lower bound on per-round cohort size.
+    pub min_fit_clients: usize,
+    pub aggregator: Aggregator,
+    rng: Rng,
+}
+
+impl FedAvg {
+    pub fn new(plan: TrainingPlan, aggregator: Aggregator) -> Self {
+        FedAvg {
+            plan,
+            fraction_fit: 1.0,
+            min_fit_clients: 1,
+            aggregator,
+            rng: Rng::seed_from(0x5A3D),
+        }
+    }
+
+    pub fn with_fraction(mut self, fraction_fit: f64, min_fit_clients: usize) -> Self {
+        self.fraction_fit = fraction_fit;
+        self.min_fit_clients = min_fit_clients;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.rng = Rng::seed_from(seed);
+        self
+    }
+
+    /// Sample the round's cohort indices.
+    fn sample(&mut self, n: usize) -> Vec<usize> {
+        let want = ((n as f64 * self.fraction_fit).ceil() as usize)
+            .clamp(self.min_fit_clients.min(n), n);
+        self.rng.sample_indices(n, want)
+    }
+
+    /// Weighted parameter average over successful results — the shared
+    /// heart of every FedAvg-family strategy in this crate.
+    pub(crate) fn average(
+        &self,
+        results: &[(ClientHandle, FitRes)],
+        weight_fn: impl Fn(&ClientHandle, &FitRes) -> f64,
+    ) -> Result<Parameters> {
+        let mut inputs: Vec<(&[f32], f64)> = Vec::with_capacity(results.len());
+        for (handle, res) in results {
+            if !res.status.is_ok() || res.num_examples == 0 {
+                continue;
+            }
+            let w = weight_fn(handle, res);
+            if w <= 0.0 {
+                continue;
+            }
+            inputs.push((res.parameters.to_flat()?, w));
+        }
+        let flat = self.aggregator.weighted_average(&inputs)?;
+        Ok(Parameters::from_flat(flat))
+    }
+}
+
+impl Strategy for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)> {
+        let config = self.plan.to_config(round);
+        self.sample(cohort.len())
+            .into_iter()
+            .map(|idx| {
+                (
+                    idx,
+                    FitIns { parameters: parameters.clone(), config: config.clone() },
+                )
+            })
+            .collect()
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        results: &[(ClientHandle, FitRes)],
+        _failures: usize,
+    ) -> Result<Parameters> {
+        self.average(results, |_, res| res.num_examples as f64)
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        let config = config! { keys::ROUND => round as i64 };
+        (0..cohort.len())
+            .map(|idx| {
+                (
+                    idx,
+                    EvaluateIns { parameters: parameters.clone(), config: config.clone() },
+                )
+            })
+            .collect()
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        _round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        weighted_eval_summary(results)
+    }
+}
+
+/// Mean client-reported training loss over successful results (used by the
+/// server history; not part of the Strategy trait).
+pub fn mean_train_loss(results: &[(ClientHandle, FitRes)]) -> f64 {
+    let mut sum = 0f64;
+    let mut n = 0usize;
+    for (_, res) in results {
+        if res.status.is_ok() {
+            let l = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
+            if l.is_finite() {
+                sum += l;
+                n += 1;
+            }
+        }
+    }
+    if n == 0 {
+        f64::NAN
+    } else {
+        sum / n as f64
+    }
+}
+
+/// Count of clients whose fit was truncated by a τ cutoff.
+pub fn truncated_count(results: &[(ClientHandle, FitRes)]) -> usize {
+    results
+        .iter()
+        .filter(|(_, res)| matches!(res.metrics.get(keys::TRUNCATED), Some(Scalar::Bool(true))))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    fn strategy() -> FedAvg {
+        FedAvg::new(TrainingPlan { epochs: 5, lr: 0.1 }, Aggregator::Rust)
+    }
+
+    #[test]
+    fn configure_fit_selects_all_by_default() {
+        let mut s = strategy();
+        let cohort = handles(10);
+        let plan = s.configure_fit(1, &Parameters::from_flat(vec![0.0; 4]), &cohort);
+        assert_eq!(plan.len(), 10);
+        let (_, ins) = &plan[0];
+        assert_eq!(ins.config.get_i64(keys::EPOCHS).unwrap(), 5);
+        assert_eq!(ins.config.get_f64(keys::LR).unwrap(), 0.1);
+        assert_eq!(ins.config.get_i64(keys::ROUND).unwrap(), 1);
+    }
+
+    #[test]
+    fn fraction_fit_subsamples() {
+        let mut s = strategy().with_fraction(0.4, 2);
+        let cohort = handles(10);
+        let plan = s.configure_fit(1, &Parameters::from_flat(vec![0.0]), &cohort);
+        assert_eq!(plan.len(), 4);
+        let mut idxs: Vec<usize> = plan.iter().map(|(i, _)| *i).collect();
+        idxs.sort_unstable();
+        idxs.dedup();
+        assert_eq!(idxs.len(), 4, "indices must be distinct");
+    }
+
+    #[test]
+    fn aggregate_weights_by_examples() {
+        let mut s = strategy();
+        let h = handles(2);
+        let results = vec![
+            (h[0].clone(), fit_res(vec![0.0, 0.0], 100, 1.0)),
+            (h[1].clone(), fit_res(vec![1.0, 2.0], 300, 1.0)),
+        ];
+        let p = s.aggregate_fit(1, &results, 0).unwrap();
+        assert_eq!(p.to_flat().unwrap(), &[0.75, 1.5]);
+    }
+
+    #[test]
+    fn aggregate_skips_failed_and_empty() {
+        use crate::proto::{Status, StatusCode};
+        let mut s = strategy();
+        let h = handles(3);
+        let mut bad = fit_res(vec![9.0, 9.0], 100, 1.0);
+        bad.status = Status { code: StatusCode::FitError, message: "oom".into() };
+        let empty = fit_res(vec![5.0, 5.0], 0, 1.0);
+        let results = vec![
+            (h[0].clone(), bad),
+            (h[1].clone(), empty),
+            (h[2].clone(), fit_res(vec![1.0, 1.0], 10, 1.0)),
+        ];
+        let p = s.aggregate_fit(1, &results, 0).unwrap();
+        assert_eq!(p.to_flat().unwrap(), &[1.0, 1.0]);
+    }
+
+    #[test]
+    fn aggregate_errors_with_no_results() {
+        let mut s = strategy();
+        assert!(s.aggregate_fit(1, &[], 3).is_err());
+    }
+
+    #[test]
+    fn train_loss_and_truncation_helpers() {
+        let h = handles(2);
+        let mut truncated = fit_res(vec![0.0], 10, 2.0);
+        truncated
+            .metrics
+            .insert(keys::TRUNCATED.into(), Scalar::Bool(true));
+        let results = vec![
+            (h[0].clone(), fit_res(vec![0.0], 10, 1.0)),
+            (h[1].clone(), truncated),
+        ];
+        assert!((mean_train_loss(&results) - 1.5).abs() < 1e-9);
+        assert_eq!(truncated_count(&results), 1);
+    }
+}

@@ -1,0 +1,160 @@
+//! FedAvgCutoff — the paper's contribution (§5, Table 3).
+//!
+//! "We implement a modified version of FedAvg where each client device is
+//! assigned a cutoff time (τ) after which it must send its model
+//! parameters to the server, irrespective of whether it has finished its
+//! local epochs or not. ... the key advantage of using Flower is that we
+//! can compute and assign a *processor-specific* cutoff time for each
+//! client."
+//!
+//! The strategy wraps [`FedAvg`] and injects a per-device `cutoff_s`
+//! config key; the trainer stops once the modeled device compute time
+//! crosses τ and returns the partial update, which aggregation weights by
+//! the examples actually processed.
+
+use std::collections::BTreeMap;
+
+use crate::client::keys;
+use crate::error::Result;
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+
+use super::{ClientHandle, EvalSummary, FedAvg, Strategy};
+
+/// FedAvg + per-processor τ cutoffs.
+pub struct FedAvgCutoff {
+    pub inner: FedAvg,
+    /// Device-profile name → τ in seconds of modeled compute time.
+    taus: BTreeMap<String, f64>,
+    /// Fallback τ for devices not in the map (None = no cutoff).
+    default_tau_s: Option<f64>,
+}
+
+impl FedAvgCutoff {
+    pub fn new(inner: FedAvg) -> Self {
+        FedAvgCutoff { inner, taus: BTreeMap::new(), default_tau_s: None }
+    }
+
+    /// Assign τ (seconds) for one device profile.
+    pub fn with_tau(mut self, device: &str, tau_s: f64) -> Self {
+        self.taus.insert(device.to_string(), tau_s);
+        self
+    }
+
+    /// Assign a τ for every device without an explicit entry.
+    pub fn with_default_tau(mut self, tau_s: f64) -> Self {
+        self.default_tau_s = Some(tau_s);
+        self
+    }
+
+    fn tau_for(&self, device: &str) -> Option<f64> {
+        self.taus.get(device).copied().or(self.default_tau_s)
+    }
+}
+
+impl Strategy for FedAvgCutoff {
+    fn name(&self) -> &'static str {
+        "fedavg_cutoff"
+    }
+
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)> {
+        let mut plan = self.inner.configure_fit(round, parameters, cohort);
+        for (idx, ins) in &mut plan {
+            if let Some(tau) = self.tau_for(cohort[*idx].device.name) {
+                ins.config
+                    .insert(keys::CUTOFF_S.into(), Scalar::F64(tau));
+            }
+        }
+        plan
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, FitRes)],
+        failures: usize,
+    ) -> Result<Parameters> {
+        // Partial results are first-class: weighting by examples processed
+        // (inner FedAvg behavior) is exactly what makes truncation safe.
+        self.inner.aggregate_fit(round, results, failures)
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        self.inner.configure_evaluate(round, parameters, cohort)
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(round, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{fedavg::TrainingPlan, Aggregator};
+    use super::*;
+    use crate::device::profiles;
+    use crate::proto::scalar::ConfigExt;
+
+    fn cutoff_strategy() -> FedAvgCutoff {
+        FedAvgCutoff::new(FedAvg::new(
+            TrainingPlan { epochs: 10, lr: 0.05 },
+            Aggregator::Rust,
+        ))
+        .with_tau("jetson_tx2_cpu", 1.99 * 60.0)
+    }
+
+    #[test]
+    fn injects_tau_only_for_mapped_devices() {
+        let mut s = cutoff_strategy();
+        let mut cohort = handles(2);
+        cohort[1].device = profiles::by_name("jetson_tx2_cpu").unwrap();
+        let plan = s.configure_fit(1, &Parameters::from_flat(vec![0.0]), &cohort);
+        let by_idx: std::collections::BTreeMap<usize, &FitIns> =
+            plan.iter().map(|(i, ins)| (*i, ins)).collect();
+        // GPU client: no cutoff key
+        assert!(by_idx[&0].config.get(keys::CUTOFF_S).is_none());
+        // CPU client: τ = 1.99 min
+        assert!(
+            (by_idx[&1].config.get_f64(keys::CUTOFF_S).unwrap() - 119.4).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn default_tau_applies_everywhere() {
+        let mut s = cutoff_strategy().with_default_tau(60.0);
+        let cohort = handles(3); // all TX2 GPU
+        let plan = s.configure_fit(1, &Parameters::from_flat(vec![0.0]), &cohort);
+        for (_, ins) in &plan {
+            assert_eq!(ins.config.get_f64(keys::CUTOFF_S).unwrap(), 60.0);
+        }
+    }
+
+    #[test]
+    fn partial_results_weighted_by_examples() {
+        let mut s = cutoff_strategy();
+        let h = handles(2);
+        // client 0 finished 80 steps (2560 ex), client 1 was cut at 63 (2016 ex)
+        let results = vec![
+            (h[0].clone(), fit_res(vec![1.0], 2560, 1.0)),
+            (h[1].clone(), fit_res(vec![0.0], 2016, 1.0)),
+        ];
+        let p = s.aggregate_fit(1, &results, 0).unwrap();
+        let got = p.to_flat().unwrap()[0];
+        let want = 2560.0 / (2560.0 + 2016.0);
+        assert!((got - want as f32).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,143 @@
+//! FedAvgM: server-side momentum over the aggregated pseudo-gradient
+//! (Hsu et al. 2019). An ablation strategy: shows how the coordinator's
+//! Strategy abstraction hosts server-state-carrying algorithms.
+
+use crate::error::{Error, Result};
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters};
+
+use super::{ClientHandle, EvalSummary, FedAvg, Strategy};
+
+/// FedAvg + server momentum:
+/// ```text
+/// Δ_t = avg(w_clients) − w_{t}
+/// v_t = β·v_{t−1} + Δ_t
+/// w_{t+1} = w_t + η_server · v_t
+/// ```
+pub struct FedAvgM {
+    pub inner: FedAvg,
+    pub beta: f64,
+    pub server_lr: f64,
+    velocity: Vec<f64>,
+    /// global params snapshot taken at configure_fit
+    current: Vec<f32>,
+}
+
+impl FedAvgM {
+    pub fn new(inner: FedAvg, beta: f64, server_lr: f64) -> Self {
+        FedAvgM { inner, beta, server_lr, velocity: Vec::new(), current: Vec::new() }
+    }
+}
+
+impl Strategy for FedAvgM {
+    fn name(&self) -> &'static str {
+        "fedavgm"
+    }
+
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)> {
+        self.current = parameters
+            .to_flat()
+            .map(<[f32]>::to_vec)
+            .unwrap_or_default();
+        self.inner.configure_fit(round, parameters, cohort)
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, FitRes)],
+        failures: usize,
+    ) -> Result<Parameters> {
+        let avg = self.inner.aggregate_fit(round, results, failures)?;
+        let avg = avg.to_flat()?;
+        if self.current.len() != avg.len() {
+            return Err(Error::Aggregation(
+                "FedAvgM: configure_fit was not called before aggregate_fit".into(),
+            ));
+        }
+        if self.velocity.len() != avg.len() {
+            self.velocity = vec![0f64; avg.len()];
+        }
+        let mut new = Vec::with_capacity(avg.len());
+        for i in 0..avg.len() {
+            let delta = avg[i] as f64 - self.current[i] as f64;
+            self.velocity[i] = self.beta * self.velocity[i] + delta;
+            new.push((self.current[i] as f64 + self.server_lr * self.velocity[i]) as f32);
+        }
+        Ok(Parameters::from_flat(new))
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        self.inner.configure_evaluate(round, parameters, cohort)
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(round, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{fedavg::TrainingPlan, Aggregator};
+    use super::*;
+
+    fn strategy(beta: f64, server_lr: f64) -> FedAvgM {
+        FedAvgM::new(
+            FedAvg::new(TrainingPlan::default(), Aggregator::Rust),
+            beta,
+            server_lr,
+        )
+    }
+
+    #[test]
+    fn beta_zero_lr_one_equals_fedavg() {
+        let mut s = strategy(0.0, 1.0);
+        let cohort = handles(2);
+        let global = Parameters::from_flat(vec![0.0, 0.0]);
+        s.configure_fit(1, &global, &cohort);
+        let results = vec![
+            (cohort[0].clone(), fit_res(vec![1.0, 2.0], 100, 1.0)),
+            (cohort[1].clone(), fit_res(vec![3.0, 4.0], 100, 1.0)),
+        ];
+        let p = s.aggregate_fit(1, &results, 0).unwrap();
+        assert_eq!(p.to_flat().unwrap(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn momentum_accumulates_across_rounds() {
+        let mut s = strategy(0.9, 1.0);
+        let cohort = handles(1);
+        let mut global = Parameters::from_flat(vec![0.0]);
+        // each round the client reports global+1
+        for round in 1..=3 {
+            s.configure_fit(round, &global, &cohort);
+            let client_w = global.to_flat().unwrap()[0] + 1.0;
+            let results = vec![(cohort[0].clone(), fit_res(vec![client_w], 10, 1.0))];
+            global = s.aggregate_fit(round, &results, 0).unwrap();
+        }
+        // with momentum the cumulative step exceeds the 3.0 of plain FedAvg
+        assert!(global.to_flat().unwrap()[0] > 3.0);
+    }
+
+    #[test]
+    fn aggregate_without_configure_errors() {
+        let mut s = strategy(0.9, 1.0);
+        let cohort = handles(1);
+        let results = vec![(cohort[0].clone(), fit_res(vec![1.0], 10, 1.0))];
+        assert!(s.aggregate_fit(1, &results, 0).is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! FedProx (Li et al. 2018): FedAvg plus a proximal term μ/2‖w−w_global‖²
+//! in the local objective, tolerant of partial work. The paper positions
+//! its τ-cutoff as having "parallels with the FedProx algorithm which also
+//! accepts partial results from clients" — this implementation lets the
+//! benches compare the two directly.
+
+use crate::client::keys;
+use crate::error::Result;
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+
+use super::{ClientHandle, EvalSummary, FedAvg, Strategy};
+
+/// FedAvg + proximal local objective (clients use the `*_train_prox`
+/// artifact when `prox_mu > 0`).
+pub struct FedProx {
+    pub inner: FedAvg,
+    pub mu: f64,
+}
+
+impl FedProx {
+    pub fn new(inner: FedAvg, mu: f64) -> Self {
+        FedProx { inner, mu }
+    }
+}
+
+impl Strategy for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)> {
+        let mut plan = self.inner.configure_fit(round, parameters, cohort);
+        for (_, ins) in &mut plan {
+            ins.config.insert(keys::PROX_MU.into(), Scalar::F64(self.mu));
+        }
+        plan
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, FitRes)],
+        failures: usize,
+    ) -> Result<Parameters> {
+        self.inner.aggregate_fit(round, results, failures)
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        self.inner.configure_evaluate(round, parameters, cohort)
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(round, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{fedavg::TrainingPlan, Aggregator};
+    use super::*;
+    use crate::proto::scalar::ConfigExt;
+
+    #[test]
+    fn mu_rides_on_config() {
+        let mut s = FedProx::new(
+            FedAvg::new(TrainingPlan::default(), Aggregator::Rust),
+            0.01,
+        );
+        let cohort = handles(3);
+        let plan = s.configure_fit(2, &Parameters::from_flat(vec![0.0]), &cohort);
+        assert_eq!(plan.len(), 3);
+        for (_, ins) in &plan {
+            assert_eq!(ins.config.get_f64(keys::PROX_MU).unwrap(), 0.01);
+            assert_eq!(ins.config.get_i64(keys::ROUND).unwrap(), 2);
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Federated strategies — the pluggable server-side brain of Flower.
+//!
+//! The paper (§3): "The FL loop is at the heart of the FL process: it
+//! orchestrates the learning process ... It does not, however, make
+//! decisions about *how* to proceed, those decisions are delegated to the
+//! currently configured *Strategy*."
+//!
+//! Implementations:
+//! * [`fedavg::FedAvg`] — McMahan et al. 2017, the paper's baseline.
+//! * [`fedavg_cutoff::FedAvgCutoff`] — the paper's contribution (Table 3):
+//!   per-processor cutoff time τ after which a client must return partial
+//!   results.
+//! * [`fedprox::FedProx`] — Li et al. 2018, the related partial-work
+//!   strategy the paper compares its idea to.
+//! * [`fedavgm::FedAvgM`] — server momentum on the aggregated update.
+//! * [`qfedavg::QFedAvg`] — fairness-reweighted aggregation (ablation).
+
+pub mod aggregate;
+pub mod compressed;
+pub mod fedavg;
+pub mod fedavg_cutoff;
+pub mod fedavgm;
+pub mod fedprox;
+pub mod qfedavg;
+pub mod secagg;
+
+pub use aggregate::Aggregator;
+pub use compressed::QuantizedComm;
+pub use fedavg::FedAvg;
+pub use fedavg_cutoff::FedAvgCutoff;
+pub use fedavgm::FedAvgM;
+pub use fedprox::FedProx;
+pub use qfedavg::QFedAvg;
+pub use secagg::SecAgg;
+
+use crate::device::DeviceProfile;
+use crate::error::Result;
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters};
+
+/// What a strategy knows about a connected client (identity + device
+/// class + data size). Cheap to clone; derived from the Register message.
+#[derive(Debug, Clone)]
+pub struct ClientHandle {
+    pub id: String,
+    pub device: &'static DeviceProfile,
+    pub num_examples: u64,
+}
+
+/// Aggregated federated-evaluation outcome for one round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalSummary {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub num_examples: u64,
+}
+
+/// The server delegates all *decisions* here; it owns only the mechanics.
+///
+/// `configure_*` returns `(cohort_index, instructions)` pairs — the subset
+/// of clients to contact this round and what to tell each one.
+pub trait Strategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Select and configure clients for a round of training.
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)>;
+
+    /// Fold successful fit results into new global parameters.
+    fn aggregate_fit(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, FitRes)],
+        failures: usize,
+    ) -> Result<Parameters>;
+
+    /// Select and configure clients for federated evaluation.
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)>;
+
+    /// Fold evaluation results into a round summary.
+    fn aggregate_evaluate(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary>;
+}
+
+/// Weighted mean of evaluation results (shared by every strategy here).
+pub fn weighted_eval_summary(results: &[(ClientHandle, EvaluateRes)]) -> Result<EvalSummary> {
+    use crate::client::keys;
+    use crate::proto::scalar::ConfigExt;
+
+    let mut loss = 0f64;
+    let mut acc = 0f64;
+    let mut n = 0u64;
+    for (_, res) in results {
+        if !res.status.is_ok() || res.num_examples == 0 {
+            continue;
+        }
+        let w = res.num_examples as f64;
+        loss += res.loss * w;
+        acc += res.metrics.get_f64_or(keys::ACCURACY, 0.0) * w;
+        n += res.num_examples;
+    }
+    if n == 0 {
+        return Err(crate::Error::Aggregation(
+            "no successful evaluation results".into(),
+        ));
+    }
+    Ok(EvalSummary {
+        loss: loss / n as f64,
+        accuracy: acc / n as f64,
+        num_examples: n,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::device::profiles;
+    use crate::proto::{ConfigMap, Scalar, Status};
+
+    pub fn handles(n: usize) -> Vec<ClientHandle> {
+        (0..n)
+            .map(|i| ClientHandle {
+                id: format!("c{i}"),
+                device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+                num_examples: 320,
+            })
+            .collect()
+    }
+
+    pub fn fit_res(params: Vec<f32>, num_examples: u64, train_loss: f64) -> FitRes {
+        let mut metrics = ConfigMap::new();
+        metrics.insert(
+            crate::client::keys::TRAIN_LOSS.into(),
+            Scalar::F64(train_loss),
+        );
+        FitRes {
+            status: Status::ok(),
+            parameters: Parameters::from_flat(params),
+            num_examples,
+            metrics,
+        }
+    }
+
+    pub fn eval_res(loss: f64, accuracy: f64, num_examples: u64) -> EvaluateRes {
+        let mut metrics = ConfigMap::new();
+        metrics.insert(crate::client::keys::ACCURACY.into(), Scalar::F64(accuracy));
+        EvaluateRes {
+            status: Status::ok(),
+            loss,
+            num_examples,
+            metrics,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    #[test]
+    fn eval_summary_weights_by_examples() {
+        let h = handles(2);
+        let results = vec![
+            (h[0].clone(), eval_res(1.0, 0.5, 100)),
+            (h[1].clone(), eval_res(3.0, 1.0, 300)),
+        ];
+        let s = weighted_eval_summary(&results).unwrap();
+        assert!((s.loss - 2.5).abs() < 1e-9);
+        assert!((s.accuracy - 0.875).abs() < 1e-9);
+        assert_eq!(s.num_examples, 400);
+    }
+
+    #[test]
+    fn eval_summary_skips_failures() {
+        use crate::proto::{Status, StatusCode};
+        let h = handles(2);
+        let mut bad = eval_res(9.0, 0.0, 100);
+        bad.status = Status { code: StatusCode::EvaluateError, message: "x".into() };
+        let results = vec![
+            (h[0].clone(), bad),
+            (h[1].clone(), eval_res(1.0, 0.9, 100)),
+        ];
+        let s = weighted_eval_summary(&results).unwrap();
+        assert!((s.loss - 1.0).abs() < 1e-9);
+        assert_eq!(s.num_examples, 100);
+    }
+
+    #[test]
+    fn eval_summary_errors_when_empty() {
+        assert!(weighted_eval_summary(&[]).is_err());
+    }
+}

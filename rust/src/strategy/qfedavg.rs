@@ -1,0 +1,108 @@
+//! q-FedAvg-style fairness reweighting (Li et al. 2020, simplified):
+//! clients with higher local loss get up-weighted by (loss + ε)^q, pushing
+//! the global model toward uniform per-client performance. q = 0 recovers
+//! plain FedAvg. Included as an ablation strategy for the benches.
+
+use crate::client::keys;
+use crate::error::Result;
+use crate::proto::scalar::ConfigExt;
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters};
+
+use super::{ClientHandle, EvalSummary, FedAvg, Strategy};
+
+/// FedAvg with loss-skewed aggregation weights.
+pub struct QFedAvg {
+    pub inner: FedAvg,
+    pub q: f64,
+}
+
+const EPS: f64 = 1e-10;
+
+impl QFedAvg {
+    pub fn new(inner: FedAvg, q: f64) -> Self {
+        QFedAvg { inner, q }
+    }
+}
+
+impl Strategy for QFedAvg {
+    fn name(&self) -> &'static str {
+        "qfedavg"
+    }
+
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)> {
+        self.inner.configure_fit(round, parameters, cohort)
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        results: &[(ClientHandle, FitRes)],
+        _failures: usize,
+    ) -> Result<Parameters> {
+        let q = self.q;
+        self.inner.average(results, |_, res| {
+            let loss = res.metrics.get_f64_or(keys::TRAIN_LOSS, 1.0).max(0.0);
+            res.num_examples as f64 * (loss + EPS).powf(q)
+        })
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        self.inner.configure_evaluate(round, parameters, cohort)
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(round, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{fedavg::TrainingPlan, Aggregator};
+    use super::*;
+
+    #[test]
+    fn q_zero_matches_fedavg() {
+        let mut s = QFedAvg::new(
+            FedAvg::new(TrainingPlan::default(), Aggregator::Rust),
+            0.0,
+        );
+        let h = handles(2);
+        let results = vec![
+            (h[0].clone(), fit_res(vec![0.0], 100, 5.0)),
+            (h[1].clone(), fit_res(vec![1.0], 300, 0.1)),
+        ];
+        let p = s.aggregate_fit(1, &results, 0).unwrap();
+        assert!((p.to_flat().unwrap()[0] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn higher_loss_gets_more_weight() {
+        let mut s = QFedAvg::new(
+            FedAvg::new(TrainingPlan::default(), Aggregator::Rust),
+            2.0,
+        );
+        let h = handles(2);
+        // equal examples; client 1 has much higher loss and params=1.0
+        let results = vec![
+            (h[0].clone(), fit_res(vec![0.0], 100, 0.1)),
+            (h[1].clone(), fit_res(vec![1.0], 100, 10.0)),
+        ];
+        let p = s.aggregate_fit(1, &results, 0).unwrap();
+        assert!(p.to_flat().unwrap()[0] > 0.99, "got {:?}", p.to_flat());
+    }
+}

@@ -1,0 +1,197 @@
+//! Secure aggregation (server side): the strategy wrapper pairing with
+//! `client::masking::MaskedClient`.
+//!
+//! The server broadcasts the round's cohort (peer ids) and a shared base
+//! seed; clients return pairwise-masked updates; the *unweighted mean*
+//! over the full cohort cancels every mask. Two protocol consequences,
+//! both enforced here:
+//!
+//! * aggregation must weight every client equally (weighted means would
+//!   scale masks asymmetrically and leak), so `aggregate_fit` uses the
+//!   plain mean — the classic SecAgg trade-off;
+//! * every masked participant must report (no dropout recovery in this
+//!   SecAgg0 core): missing results leave un-cancelled masks, so the
+//!   round fails loudly instead of aggregating noise.
+
+use std::collections::BTreeSet;
+
+use crate::client::keys;
+use crate::error::{Error, Result};
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+
+use super::{ClientHandle, EvalSummary, Strategy};
+
+/// Wraps an inner strategy with SecAgg0 masking coordination.
+pub struct SecAgg {
+    inner: Box<dyn Strategy>,
+    base_seed: u64,
+    /// cohort ids announced in the current round's configure_fit
+    current_cohort: BTreeSet<String>,
+}
+
+impl SecAgg {
+    pub fn new(inner: Box<dyn Strategy>, base_seed: u64) -> Self {
+        SecAgg { inner, base_seed, current_cohort: BTreeSet::new() }
+    }
+}
+
+impl Strategy for SecAgg {
+    fn name(&self) -> &'static str {
+        "secagg"
+    }
+
+    fn configure_fit(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, FitIns)> {
+        let mut plan = self.inner.configure_fit(round, parameters, cohort);
+        let peer_ids: Vec<String> = plan
+            .iter()
+            .map(|(idx, _)| cohort[*idx].id.clone())
+            .collect();
+        self.current_cohort = peer_ids.iter().cloned().collect();
+        let peers_csv = peer_ids.join(",");
+        for (_, ins) in &mut plan {
+            ins.config
+                .insert(keys::SECAGG_PEERS.into(), Scalar::Str(peers_csv.clone()));
+            ins.config
+                .insert(keys::SECAGG_SEED.into(), Scalar::I64(self.base_seed as i64));
+        }
+        plan
+    }
+
+    fn aggregate_fit(
+        &mut self,
+        _round: u64,
+        results: &[(ClientHandle, FitRes)],
+        failures: usize,
+    ) -> Result<Parameters> {
+        // every announced masker must have reported successfully
+        let reported: BTreeSet<String> = results
+            .iter()
+            .filter(|(_, res)| res.status.is_ok() && !res.parameters.is_empty())
+            .map(|(h, _)| h.id.clone())
+            .collect();
+        if reported != self.current_cohort || failures > 0 {
+            let missing: Vec<&String> =
+                self.current_cohort.difference(&reported).collect();
+            return Err(Error::Aggregation(format!(
+                "secagg round incomplete: masks cannot cancel \
+                 (missing {missing:?}, {failures} failures) — SecAgg0 has no \
+                 dropout recovery"
+            )));
+        }
+        // unweighted mean: the only aggregation masks survive
+        let mut acc: Vec<f64> = Vec::new();
+        let n = results.len() as f64;
+        for (_, res) in results {
+            let flat = res.parameters.to_flat_vec()?;
+            if acc.is_empty() {
+                acc = vec![0f64; flat.len()];
+            }
+            if acc.len() != flat.len() {
+                return Err(Error::Aggregation("secagg: parameter size mismatch".into()));
+            }
+            for (a, x) in acc.iter_mut().zip(&flat) {
+                *a += *x as f64 / n;
+            }
+        }
+        if acc.is_empty() {
+            return Err(Error::Aggregation("secagg: no results".into()));
+        }
+        Ok(Parameters::from_flat(acc.into_iter().map(|x| x as f32).collect()))
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        round: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        self.inner.configure_evaluate(round, parameters, cohort)
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(round, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::super::{fedavg::TrainingPlan, Aggregator, FedAvg};
+    use super::*;
+    use crate::client::masking::mask_update;
+    use crate::proto::scalar::ConfigExt;
+
+    fn secagg() -> SecAgg {
+        SecAgg::new(
+            Box::new(FedAvg::new(TrainingPlan::default(), Aggregator::Rust)),
+            777,
+        )
+    }
+
+    #[test]
+    fn announces_cohort_and_seed() {
+        let mut s = secagg();
+        let cohort = handles(3);
+        let plan = s.configure_fit(1, &Parameters::from_flat(vec![0.0]), &cohort);
+        for (_, ins) in &plan {
+            // plan order follows the inner strategy's sampling; compare as set
+            let mut peers: Vec<&str> = ins
+                .config
+                .get_str(keys::SECAGG_PEERS)
+                .unwrap()
+                .split(',')
+                .collect();
+            peers.sort_unstable();
+            assert_eq!(peers, vec!["c0", "c1", "c2"]);
+            assert_eq!(ins.config.get_i64(keys::SECAGG_SEED).unwrap(), 777);
+        }
+    }
+
+    #[test]
+    fn masked_mean_equals_plain_mean() {
+        let mut s = secagg();
+        let cohort = handles(3);
+        let plan = s.configure_fit(4, &Parameters::from_flat(vec![0.0; 64]), &cohort);
+        assert_eq!(plan.len(), 3);
+        let peers: Vec<&str> = vec!["c0", "c1", "c2"];
+        let plain: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..64).map(|j| (i + j) as f32 * 0.01).collect())
+            .collect();
+        let results: Vec<(ClientHandle, FitRes)> = (0..3)
+            .map(|i| {
+                let mut masked = plain[i].clone();
+                mask_update(&mut masked, &cohort[i].id, &peers, 4, 777).unwrap();
+                (cohort[i].clone(), fit_res(masked, 100, 1.0))
+            })
+            .collect();
+        let agg = s.aggregate_fit(4, &results, 0).unwrap();
+        let agg = agg.to_flat().unwrap();
+        for j in 0..64 {
+            let want: f32 = plain.iter().map(|v| v[j]).sum::<f32>() / 3.0;
+            assert!((agg[j] - want).abs() < 1e-3, "j={j}: {} vs {want}", agg[j]);
+        }
+    }
+
+    #[test]
+    fn missing_masker_fails_the_round() {
+        let mut s = secagg();
+        let cohort = handles(3);
+        let _ = s.configure_fit(1, &Parameters::from_flat(vec![0.0; 8]), &cohort);
+        // only 2 of 3 report
+        let results = vec![
+            (cohort[0].clone(), fit_res(vec![0.0; 8], 10, 1.0)),
+            (cohort[1].clone(), fit_res(vec![0.0; 8], 10, 1.0)),
+        ];
+        let err = s.aggregate_fit(1, &results, 1).unwrap_err();
+        assert!(err.to_string().contains("masks cannot cancel"), "{err}");
+    }
+}

@@ -1,0 +1,95 @@
+//! Length-prefixed framing over any `Read`/`Write`.
+//!
+//! ```text
+//! frame := len:u32-LE payload[len]
+//! ```
+//!
+//! `MAX_FRAME` bounds a single message at 256 MiB — far above any model
+//! this system ships (the CIFAR CNN is ~0.5 MiB of f32), but small enough
+//! that a corrupted length prefix cannot OOM the server.
+
+use std::io::{Read, Write};
+
+use crate::error::{Error, Result};
+
+/// Upper bound on a single frame's payload.
+pub const MAX_FRAME: usize = 256 * 1024 * 1024;
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(Error::Transport(format!(
+            "frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one whole frame; errors on EOF mid-frame or oversized prefix.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Transport("connection closed".into())
+        } else if matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            Error::Timeout("frame read timed out".into())
+        } else {
+            Error::Io(e)
+        }
+    })?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME {
+        return Err(Error::Transport(format!(
+            "incoming frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})"
+        )));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| Error::Transport(format!("truncated frame: {e}")))?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_in_memory() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello flower").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello flower");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+    }
+
+    #[test]
+    fn oversized_incoming_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = read_frame(&mut Cursor::new(buf)).unwrap_err();
+        assert!(err.to_string().contains("MAX_FRAME"));
+    }
+
+    #[test]
+    fn eof_is_clean_error() {
+        let err = read_frame(&mut Cursor::new(Vec::new())).unwrap_err();
+        assert!(err.to_string().contains("connection closed"));
+    }
+
+    #[test]
+    fn truncated_payload_detected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]); // only 3 of 8 bytes
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! In-process transport: channel pairs carrying encoded frames.
+//!
+//! Used by the device-farm simulator so the server talks to simulated
+//! clients through the *identical* message/codec path as TCP — only the
+//! byte-moving layer is swapped. Frames are still fully encoded/decoded,
+//! so serialization bugs cannot hide in simulation.
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Channel capacity: a handful of in-flight messages per direction is
+/// plenty — the Flower Protocol is strictly request/response per client.
+const CAPACITY: usize = 8;
+
+/// One end of an in-process duplex connection.
+pub struct InProcConnection {
+    tx: SyncSender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Create a connected pair: (server end, client end).
+pub fn pair() -> (InProcConnection, InProcConnection) {
+    let (tx_a, rx_b) = sync_channel(CAPACITY);
+    let (tx_b, rx_a) = sync_channel(CAPACITY);
+    (
+        InProcConnection { tx: tx_a, rx: rx_a },
+        InProcConnection { tx: tx_b, rx: rx_b },
+    )
+}
+
+impl InProcConnection {
+    pub fn send(&mut self, frame: &[u8]) -> Result<()> {
+        self.tx
+            .send(frame.to_vec())
+            .map_err(|_| Error::Transport("in-proc peer closed".into()))
+    }
+
+    pub fn recv(&mut self) -> Result<Vec<u8>> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Transport("in-proc peer closed".into()))
+    }
+
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => Error::Timeout("in-proc recv timed out".into()),
+            RecvTimeoutError::Disconnected => Error::Transport("in-proc peer closed".into()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn duplex_roundtrip() {
+        let (mut server, mut client) = pair();
+        client.send(b"hello").unwrap();
+        assert_eq!(server.recv().unwrap(), b"hello");
+        server.send(b"world").unwrap();
+        assert_eq!(client.recv().unwrap(), b"world");
+    }
+
+    #[test]
+    fn closed_peer_errors() {
+        let (mut server, client) = pair();
+        drop(client);
+        assert!(server.recv().is_err());
+        assert!(server.send(b"x").is_err());
+    }
+
+    #[test]
+    fn recv_timeout_elapses() {
+        let (mut server, _client) = pair();
+        let err = server.recv_timeout(Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)));
+    }
+
+    #[test]
+    fn typed_messages_inproc() {
+        use crate::proto::*;
+        use crate::transport::Connection;
+
+        let (server, client) = pair();
+        let mut server = Connection::InProc(server);
+        let mut client = Connection::InProc(client);
+
+        let ins = ServerMessage::FitIns(FitIns {
+            parameters: Parameters::from_flat(vec![1.0, 2.0]),
+            config: crate::config! { "epochs" => 1i64 },
+        });
+        server.send_server_message(&ins).unwrap();
+        assert_eq!(client.recv_server_message().unwrap(), ins);
+    }
+}

@@ -1,0 +1,156 @@
+//! TCP transport: the deployment path (cloud server, edge clients dial in).
+//!
+//! Blocking I/O; the server dedicates a thread per connected client (the
+//! paper's cohorts are tens of devices — thread-per-client is the simple,
+//! robust choice at that scale).
+
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::frame::{read_frame, write_frame};
+use crate::error::{Error, Result};
+
+/// One established TCP connection moving whole frames.
+pub struct TcpConnection {
+    stream: TcpStream,
+    peer: String,
+}
+
+impl TcpConnection {
+    pub fn from_stream(stream: TcpStream) -> Result<Self> {
+        stream.set_nodelay(true)?;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "<unknown>".into());
+        Ok(TcpConnection { stream, peer })
+    }
+
+    /// Dial a Flower server.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::Transport(format!("connect: {e}")))?;
+        Self::from_stream(stream)
+    }
+
+    /// Dial with a connect timeout.
+    pub fn connect_timeout(addr: &SocketAddr, timeout: Duration) -> Result<Self> {
+        let stream = TcpStream::connect_timeout(addr, timeout)
+            .map_err(|e| Error::Transport(format!("connect: {e}")))?;
+        Self::from_stream(stream)
+    }
+
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    pub fn send(&mut self, frame: &[u8]) -> Result<()> {
+        write_frame(&mut self.stream, frame)
+    }
+
+    pub fn recv(&mut self) -> Result<Vec<u8>> {
+        self.stream.set_read_timeout(None)?;
+        read_frame(&mut self.stream)
+    }
+
+    /// Receive with a deadline; returns `Error::Timeout` when it elapses.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>> {
+        self.stream.set_read_timeout(Some(timeout))?;
+        let r = read_frame(&mut self.stream);
+        let _ = self.stream.set_read_timeout(None);
+        r
+    }
+}
+
+/// Accept loop wrapper for the server side.
+pub struct TcpTransportListener {
+    listener: TcpListener,
+}
+
+impl TcpTransportListener {
+    pub fn bind<A: ToSocketAddrs>(addr: A) -> Result<Self> {
+        let listener =
+            TcpListener::bind(addr).map_err(|e| Error::Transport(format!("bind: {e}")))?;
+        Ok(TcpTransportListener { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(Error::Io)
+    }
+
+    /// Accept the next client connection (blocking).
+    pub fn accept(&self) -> Result<TcpConnection> {
+        let (stream, _) = self
+            .listener
+            .accept()
+            .map_err(|e| Error::Transport(format!("accept: {e}")))?;
+        TcpConnection::from_stream(stream)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tcp_frame_roundtrip() {
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let client = std::thread::spawn(move || {
+            let mut conn = TcpConnection::connect(addr).unwrap();
+            conn.send(b"ping").unwrap();
+            conn.recv().unwrap()
+        });
+
+        let mut server_conn = listener.accept().unwrap();
+        assert_eq!(server_conn.recv().unwrap(), b"ping");
+        server_conn.send(b"pong").unwrap();
+
+        assert_eq!(client.join().unwrap(), b"pong");
+    }
+
+    #[test]
+    fn recv_timeout_elapses() {
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _client = TcpConnection::connect(addr).unwrap();
+        let mut server_conn = listener.accept().unwrap();
+        let err = server_conn
+            .recv_timeout(Duration::from_millis(50))
+            .unwrap_err();
+        assert!(
+            matches!(err, Error::Timeout(_)),
+            "expected timeout, got {err}"
+        );
+    }
+
+    #[test]
+    fn typed_messages_over_tcp() {
+        use crate::proto::*;
+        use crate::transport::Connection;
+
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let client = std::thread::spawn(move || {
+            let mut conn = Connection::Tcp(TcpConnection::connect(addr).unwrap());
+            conn.send_client_message(&ClientMessage::Register(ClientInfo {
+                client_id: "c1".into(),
+                device: "jetson_tx2_gpu".into(),
+                os: "linux".into(),
+                num_examples: 100,
+            }))
+            .unwrap();
+            conn.recv_server_message().unwrap()
+        });
+
+        let mut conn = Connection::Tcp(listener.accept().unwrap());
+        let msg = conn.recv_client_message().unwrap();
+        assert!(matches!(msg, ClientMessage::Register(_)));
+        conn.send_server_message(&ServerMessage::Reconnect { seconds: 3 })
+            .unwrap();
+
+        assert_eq!(client.join().unwrap(), ServerMessage::Reconnect { seconds: 3 });
+    }
+}

@@ -1,0 +1,130 @@
+//! Micro-benchmark harness (criterion stand-in, offline build).
+//!
+//! Usage in a `[[bench]] harness = false` target:
+//! ```ignore
+//! let mut b = Bench::new("codec");
+//! b.bench("encode_fit_ins_137k", || encode(...));
+//! b.finish();
+//! ```
+//! Prints `name  median  mean  p95  iters` rows and returns the stats so
+//! the bench binaries can assert regressions or dump CSV.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// Result statistics for one benchmark case (nanoseconds per iteration).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+}
+
+impl Stats {
+    pub fn median(&self) -> Duration {
+        Duration::from_nanos(self.median_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:8.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:8.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:8.3} s ", ns / 1_000_000_000.0)
+    }
+}
+
+/// A group of benchmark cases sharing a target measurement time.
+pub struct Bench {
+    group: String,
+    /// wall-clock budget per case
+    pub target: Duration,
+    /// minimum sample count per case
+    pub min_samples: usize,
+    pub results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        println!("\n== bench group: {group} ==");
+        println!(
+            "{:<44} {:>11} {:>11} {:>11} {:>8}",
+            "case", "median", "mean", "p95", "iters"
+        );
+        Bench {
+            group: group.to_string(),
+            target: Duration::from_millis(
+                std::env::var("FLOWRS_BENCH_MS")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(400),
+            ),
+            min_samples: 10,
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which should return something to defeat DCE.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Stats {
+        // Warmup + calibration: find iters-per-sample so one sample ~ 1ms.
+        let t0 = Instant::now();
+        black_box(f());
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let per_sample = (Duration::from_millis(1).as_nanos() / once.as_nanos()).max(1) as u64;
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.target || samples.len() < self.min_samples {
+            let t = Instant::now();
+            for _ in 0..per_sample {
+                black_box(f());
+            }
+            let dt = t.elapsed().as_nanos() as f64 / per_sample as f64;
+            samples.push(dt);
+            total_iters += per_sample;
+            if samples.len() >= 10_000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = samples[samples.len() / 2];
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        let p95 = samples[p95_idx];
+        let stats = Stats {
+            name: format!("{}/{}", self.group, name),
+            median_ns: median,
+            mean_ns: mean,
+            p95_ns: p95,
+            iters: total_iters,
+        };
+        println!(
+            "{:<44} {:>11} {:>11} {:>11} {:>8}",
+            stats.name,
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.mean_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    /// Throughput variant: also prints MB/s given bytes processed per iter.
+    pub fn bench_bytes<T>(&mut self, name: &str, bytes: usize, f: impl FnMut() -> T) {
+        let stats = self.bench(name, f).clone();
+        let mbps = bytes as f64 / (stats.median_ns / 1e9) / 1e6;
+        println!("{:<44} {:>10.1} MB/s", format!("  ({bytes} B/iter)"), mbps);
+    }
+
+    pub fn finish(self) -> Vec<Stats> {
+        self.results
+    }
+}

@@ -1,0 +1,166 @@
+//! IEEE 754 binary16 (half-precision) conversions, implemented in-tree
+//! (offline build — no `half` crate).
+//!
+//! Used by the communication-compression path: model parameters are
+//! quantized to f16 on the wire, halving the paper's per-round payload
+//! (the dominant communication cost at FL scale). Round-to-nearest-even,
+//! correct subnormal/inf/nan handling both ways.
+
+/// Convert an f32 to its binary16 bit pattern (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // inf / nan
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+    // re-bias: f32 bias 127, f16 bias 15
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // normal f16
+        let half_exp = ((unbiased + 15) as u16) << 10;
+        let half_mant = (mant >> 13) as u16;
+        // round-to-nearest-even on the 13 dropped bits
+        let round_bits = mant & 0x1FFF;
+        let halfway = 0x1000;
+        let mut out = sign | half_exp | half_mant;
+        if round_bits > halfway || (round_bits == halfway && (half_mant & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: correct (next binade)
+        }
+        return out;
+    }
+    if unbiased >= -25 {
+        // subnormal f16: implicit leading 1 becomes explicit
+        let full_mant = mant | 0x0080_0000;
+        let shift = (-14 - unbiased) + 13;
+        let half_mant = (full_mant >> shift) as u16;
+        let round_bits = full_mant & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let mut out = sign | half_mant;
+        if round_bits > halfway || (round_bits == halfway && (half_mant & 1) == 1) {
+            out = out.wrapping_add(1);
+        }
+        return out;
+    }
+    sign // underflow -> signed zero
+}
+
+/// Convert a binary16 bit pattern to f32 (exact).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign, // signed zero
+        (0, m) => {
+            // subnormal: value = m × 2^-24; normalize around the top set bit
+            let p = 31 - m.leading_zeros(); // 0..=9
+            let exp32 = 103 + p; // 127 - 24 + p
+            let mant32 = (m & !(1u32 << p)) << (23 - p);
+            sign | (exp32 << 23) | mant32
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,            // inf
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13), // nan
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Quantize a slice.
+pub fn quantize(xs: &[f32]) -> Vec<u16> {
+    xs.iter().map(|&x| f32_to_f16_bits(x)).collect()
+}
+
+/// Dequantize a slice.
+pub fn dequantize(hs: &[u16]) -> Vec<f32> {
+    hs.iter().map(|&h| f16_bits_to_f32(h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 0.25] {
+            let h = f32_to_f16_bits(x);
+            assert_eq!(f16_bits_to_f32(h), x, "x={x}");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16 max
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16_bits(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x0001), 5.960_464_5e-8); // smallest subnormal
+    }
+
+    #[test]
+    fn overflow_and_underflow() {
+        assert_eq!(f32_to_f16_bits(1e6), 0x7C00); // -> inf
+        assert_eq!(f32_to_f16_bits(-1e6), 0xFC00);
+        assert_eq!(f32_to_f16_bits(1e-9), 0x0000); // -> +0
+        assert_eq!(f32_to_f16_bits(-1e-9), 0x8000); // -> -0
+    }
+
+    #[test]
+    fn nan_propagates() {
+        let h = f32_to_f16_bits(f32::NAN);
+        assert!(f16_bits_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        // all f16 subnormals are exact in f32
+        for bits in 1u16..0x0400 {
+            let x = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(x), bits, "bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn all_f16_normals_roundtrip() {
+        // every finite f16 is exactly representable in f32: f16->f32->f16 is identity
+        for bits in 0u16..=0xFFFF {
+            let exp = (bits >> 10) & 0x1F;
+            if exp == 0x1F {
+                continue; // inf/nan handled elsewhere
+            }
+            let x = f16_bits_to_f32(bits);
+            assert_eq!(f32_to_f16_bits(x), bits, "bits={bits:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut rng = crate::util::rng::Rng::seed_from(0);
+        for _ in 0..10_000 {
+            let x = (rng.normal() * 2.0) as f32;
+            let back = f16_bits_to_f32(f32_to_f16_bits(x));
+            // relative error bound for f16 normals: 2^-11
+            assert!(
+                (back - x).abs() <= x.abs() * 4.9e-4 + 6e-8,
+                "x={x} back={back}"
+            );
+        }
+    }
+
+    #[test]
+    fn slice_helpers() {
+        let xs = vec![0.1f32, -0.2, 3.5];
+        let back = dequantize(&quantize(&xs));
+        for (a, b) in xs.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}

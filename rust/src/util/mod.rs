@@ -1,0 +1,19 @@
+//! In-tree substrates that would normally be external crates.
+//!
+//! The build is fully offline (only the `xla` PJRT binding is vendored), so
+//! the pieces a typical project pulls from crates.io are implemented here:
+//!
+//! * [`json`] — a strict JSON parser/writer (for `artifacts/manifest.json`
+//!   and experiment configs).
+//! * [`rng`] — a deterministic xoshiro256++ PRNG with normal sampling
+//!   (dataset synthesis, client sampling, property tests).
+//! * [`bench`] — a micro-benchmark harness (criterion stand-in) used by
+//!   `rust/benches/*`.
+//! * [`prop`] — a tiny property-testing driver (proptest stand-in) used by
+//!   `rust/tests/proptests.rs`.
+
+pub mod bench;
+pub mod f16;
+pub mod json;
+pub mod prop;
+pub mod rng;

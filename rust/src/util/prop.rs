@@ -1,0 +1,75 @@
+//! Tiny property-testing driver (proptest stand-in, offline build).
+//!
+//! ```ignore
+//! prop::check("codec roundtrip", 256, |rng| {
+//!     let msg = arbitrary_message(rng);
+//!     let buf = encode(&msg);
+//!     prop::assert_eq_prop(&decode(&buf)?, &msg)
+//! });
+//! ```
+//! Each case gets a fresh RNG derived from a base seed; on failure the
+//! driver panics with the case index and seed so the exact input can be
+//! replayed with `FLOWRS_PROP_SEED`.
+
+use super::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub type PropResult = std::result::Result<(), String>;
+
+/// Run `cases` random cases of `prop`. Panics on the first failure with
+/// enough information to replay it deterministically.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng) -> PropResult) {
+    let base_seed: u64 = std::env::var("FLOWRS_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xF10E_2026);
+    let root = Rng::seed_from(base_seed);
+    for case in 0..cases {
+        let mut rng = root.derive(case);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case} \
+                 (replay with FLOWRS_PROP_SEED={base_seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning a `PropResult`.
+pub fn ensure(cond: bool, msg: impl FnOnce() -> String) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg())
+    }
+}
+
+/// Equality helper with debug formatting.
+pub fn assert_eq_prop<T: PartialEq + std::fmt::Debug>(got: &T, want: &T) -> PropResult {
+    if got == want {
+        Ok(())
+    } else {
+        Err(format!("mismatch:\n  got:  {got:?}\n  want: {want:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 32, |rng| {
+            count += 1;
+            ensure(rng.below(10) < 10, || "impossible".into())
+        });
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at case")]
+    fn failing_property_panics_with_case() {
+        check("always fails", 8, |_| Err("nope".into()));
+    }
+}

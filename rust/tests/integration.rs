@@ -1,0 +1,386 @@
+//! End-to-end integration tests over the full stack: synthetic data →
+//! device trainers → PJRT runtime → Flower server → strategies.
+//!
+//! These run real federated training (small scale) through the AOT
+//! artifacts; they are the Rust-side counterpart of the paper's Table 2/3
+//! mechanics. All tests skip gracefully if `make artifacts` hasn't run.
+
+use std::path::PathBuf;
+
+use flowrs::config::{AggBackend, ExperimentConfig, StrategyConfig};
+use flowrs::data::Partitioner;
+use flowrs::runtime::Runtime;
+use flowrs::sim;
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime loads"))
+}
+
+/// Small-but-real head-model FL run: loss must drop, accuracy must beat
+/// chance (1/31), costs must accumulate.
+#[test]
+fn head_fl_learns_and_accounts_costs() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ExperimentConfig::default()
+        .named("it-head")
+        .model("head")
+        .clients(3)
+        .rounds(4)
+        .epochs(2)
+        .lr(0.1)
+        .data(64, 100)
+        .seed(42);
+    let report = sim::run_experiment(&cfg, &rt).expect("experiment runs");
+    assert_eq!(report.rounds_run, 4);
+    let h = &report.history;
+    let first = &h.rounds[0];
+    let last = h.rounds.last().unwrap();
+    assert!(
+        last.eval_loss < first.eval_loss,
+        "loss did not drop: {} -> {}",
+        first.eval_loss,
+        last.eval_loss
+    );
+    assert!(last.accuracy > 1.0 / 31.0 * 2.0, "acc={}", last.accuracy);
+    assert!(h.total_time_s() > 0.0);
+    assert!(h.total_energy_j() > 0.0);
+    // Costs are virtual: 2 epochs × 2 batches × 1.48s×factor(phones) ≫ wallclock
+    assert!(first.round_time_s > 5.0);
+    // 3 clients × 2 epochs × 2 steps
+    assert_eq!(first.steps, 12);
+    assert_eq!(first.fit_completed, 3);
+}
+
+/// The CIFAR workload end-to-end with the PJRT aggregation backend.
+#[test]
+fn cifar_fl_with_pjrt_aggregation() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ExperimentConfig::default()
+        .named("it-cifar")
+        .model("cifar_cnn")
+        .clients(2)
+        .rounds(3)
+        .epochs(1)
+        .lr(0.08)
+        .data(64, 100)
+        .agg(AggBackend::Pjrt)
+        .seed(7);
+    let report = sim::run_experiment(&cfg, &rt).expect("experiment runs");
+    let h = &report.history;
+    assert!(h.rounds.last().unwrap().eval_loss < h.rounds[0].eval_loss * 1.05);
+    assert!(h.rounds.iter().all(|r| r.fit_failures == 0));
+}
+
+/// Rust and PJRT aggregation backends must produce near-identical
+/// training trajectories (same seeds, same clients).
+#[test]
+fn aggregation_backends_agree() {
+    let Some(rt) = runtime() else { return };
+    let base = ExperimentConfig::default()
+        .named("it-agg")
+        .model("head")
+        .clients(2)
+        .rounds(2)
+        .epochs(1)
+        .data(64, 100)
+        .seed(123);
+    let r1 = sim::run_experiment(&base.clone().agg(AggBackend::Rust), &rt).unwrap();
+    let r2 = sim::run_experiment(&base.agg(AggBackend::Pjrt), &rt).unwrap();
+    for (a, b) in r1.history.rounds.iter().zip(&r2.history.rounds) {
+        assert!(
+            (a.eval_loss - b.eval_loss).abs() < 1e-3,
+            "round {}: {} vs {}",
+            a.round,
+            a.eval_loss,
+            b.eval_loss
+        );
+        assert!((a.accuracy - b.accuracy).abs() < 1e-6);
+    }
+}
+
+/// τ cutoff: CPU clients under a tight τ must truncate, process fewer
+/// steps, and the round time must shrink to ≈ the cutoff.
+#[test]
+fn cutoff_truncates_cpu_clients() {
+    let Some(rt) = runtime() else { return };
+    // 2 epochs × 2 steps = 4 steps; full CPU compute = 4 × 1.48 × 1.27 ≈ 7.5s.
+    // τ = 4s allows only 2 steps on the CPU profile.
+    let cfg = ExperimentConfig::default()
+        .named("it-cutoff")
+        .model("head")
+        .clients(2)
+        .rounds(2)
+        .epochs(2)
+        .data(64, 100)
+        .devices(&["jetson_tx2_cpu"])
+        .strategy(StrategyConfig::FedAvgCutoff {
+            taus: vec![("jetson_tx2_cpu".into(), 4.0)],
+            default_tau_s: None,
+        })
+        .seed(5);
+    let report = sim::run_experiment(&cfg, &rt).unwrap();
+    for r in &report.history.rounds {
+        assert_eq!(r.truncated_clients, 2, "round {}: {r:?}", r.round);
+        // 2 clients × 2 steps (cut from 4)
+        assert_eq!(r.steps, 4);
+        // round time ≈ comm + 2×1.88s + overhead, well under the full ~8.5s
+        assert!(r.round_time_s < 6.0, "t={}", r.round_time_s);
+    }
+
+    // Control: no cutoff → all 8 steps, no truncation.
+    let cfg_free = ExperimentConfig::default()
+        .named("it-nocutoff")
+        .model("head")
+        .clients(2)
+        .rounds(1)
+        .epochs(2)
+        .data(64, 100)
+        .devices(&["jetson_tx2_cpu"])
+        .seed(5);
+    let free = sim::run_experiment(&cfg_free, &rt).unwrap();
+    assert_eq!(free.history.rounds[0].truncated_clients, 0);
+    assert_eq!(free.history.rounds[0].steps, 8);
+    assert!(free.history.rounds[0].round_time_s > report.history.rounds[0].round_time_s);
+}
+
+/// FedProx runs through the prox artifact and still learns.
+#[test]
+fn fedprox_strategy_runs() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ExperimentConfig::default()
+        .named("it-fedprox")
+        .model("head")
+        .clients(2)
+        .rounds(3)
+        .epochs(1)
+        .lr(0.1)
+        .data(64, 100)
+        .strategy(StrategyConfig::FedProx { mu: 0.01 })
+        .partitioner(Partitioner::Dirichlet { alpha: 0.5 })
+        .seed(77);
+    let report = sim::run_experiment(&cfg, &rt).unwrap();
+    let h = &report.history;
+    assert!(h.rounds.last().unwrap().eval_loss < h.rounds[0].eval_loss * 1.1);
+}
+
+/// FedAvgM and QFedAvg run end-to-end (ablation strategies).
+#[test]
+fn ablation_strategies_run() {
+    let Some(rt) = runtime() else { return };
+    for strategy in [
+        StrategyConfig::FedAvgM { beta: 0.9, server_lr: 1.0 },
+        StrategyConfig::QFedAvg { q: 1.0 },
+    ] {
+        let cfg = ExperimentConfig::default()
+            .named("it-ablation")
+            .model("head")
+            .clients(2)
+            .rounds(2)
+            .epochs(1)
+            .data(64, 100)
+            .strategy(strategy.clone())
+            .seed(9);
+        let report = sim::run_experiment(&cfg, &rt)
+            .unwrap_or_else(|e| panic!("{strategy:?} failed: {e}"));
+        assert_eq!(report.rounds_run, 2);
+    }
+}
+
+/// Determinism: identical configs produce identical histories.
+#[test]
+fn experiments_are_reproducible() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ExperimentConfig::default()
+        .named("it-repro")
+        .model("head")
+        .clients(2)
+        .rounds(2)
+        .epochs(1)
+        .data(64, 100)
+        .agg(AggBackend::Rust)
+        .seed(31337);
+    let a = sim::run_experiment(&cfg, &rt).unwrap();
+    let b = sim::run_experiment(&cfg, &rt).unwrap();
+    for (ra, rb) in a.history.rounds.iter().zip(&b.history.rounds) {
+        assert_eq!(ra.eval_loss.to_bits(), rb.eval_loss.to_bits());
+        assert_eq!(ra.accuracy.to_bits(), rb.accuracy.to_bits());
+        assert_eq!(ra.round_energy_j.to_bits(), rb.round_energy_j.to_bits());
+    }
+}
+
+/// f16 wire compression: halves the moved bytes, still learns, and the
+/// trajectory stays close to the uncompressed run.
+#[test]
+fn quantized_comm_halves_bytes_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let base = ExperimentConfig::default()
+        .named("it-quant")
+        .model("head")
+        .clients(2)
+        .rounds(3)
+        .epochs(1)
+        .lr(0.1)
+        .data(64, 100)
+        .agg(AggBackend::Rust)
+        .seed(55);
+    let plain = sim::run_experiment(&base.clone(), &rt).unwrap();
+    let quant = sim::run_experiment(&base.quantized(true), &rt).unwrap();
+    // byte accounting: fit downlink + uplink halved
+    let pb = plain.history.rounds[0].down_bytes + plain.history.rounds[0].up_bytes;
+    let qb = quant.history.rounds[0].down_bytes + quant.history.rounds[0].up_bytes;
+    assert_eq!(qb * 2, pb, "expected exactly half the fit-phase bytes");
+    // still learns, and close to the f32 trajectory
+    let pa = plain.history.final_accuracy();
+    let qa = quant.history.final_accuracy();
+    assert!((pa - qa).abs() < 0.1, "f16 diverged: {pa} vs {qa}");
+}
+
+/// Secure aggregation: the server only ever sees masked (noise-like)
+/// individual updates, yet with equal-sized shards the training
+/// trajectory matches plain FedAvg exactly (masks cancel in the mean).
+#[test]
+fn secure_aggregation_matches_plain_mean() {
+    let Some(rt) = runtime() else { return };
+    let base = ExperimentConfig::default()
+        .named("it-secagg")
+        .model("head")
+        .clients(3)
+        .rounds(3)
+        .epochs(1)
+        .lr(0.1)
+        .data(64, 100) // equal shards -> weighted mean == unweighted mean
+        .agg(AggBackend::Rust)
+        .seed(91);
+    let plain = sim::run_experiment(&base.clone(), &rt).unwrap();
+    let secure = sim::run_experiment(&base.secure(true), &rt).unwrap();
+    for (p, s) in plain.history.rounds.iter().zip(&secure.history.rounds) {
+        assert!(
+            (p.eval_loss - s.eval_loss).abs() < 5e-3,
+            "round {}: plain {} vs secagg {}",
+            p.round,
+            p.eval_loss,
+            s.eval_loss
+        );
+        assert!((p.accuracy - s.accuracy).abs() < 0.05);
+    }
+    // masks actually flowed: uplink bytes unchanged, but the updates the
+    // server aggregated were masked (verified unit-level in strategy::secagg)
+    assert_eq!(secure.rounds_run, 3);
+}
+
+/// SecAgg + dropout is rejected at config time (SecAgg0 cannot recover
+/// lost masks).
+#[test]
+fn secure_aggregation_rejects_dropout() {
+    let cfg = ExperimentConfig::default().secure(true).dropout(0.2);
+    assert!(cfg.validate().is_err());
+}
+
+/// Failure injection: with dropout the server sees failures, keeps
+/// aggregating the survivors, and still finishes every round.
+#[test]
+fn dropout_failures_are_survivable() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ExperimentConfig::default()
+        .named("it-dropout")
+        .model("head")
+        .clients(4)
+        .rounds(4)
+        .epochs(1)
+        .data(64, 100)
+        .dropout(0.4)
+        .seed(66);
+    let report = sim::run_experiment(&cfg, &rt).unwrap();
+    assert_eq!(report.rounds_run, 4);
+    let total_failures: usize = report.history.rounds.iter().map(|r| r.fit_failures).sum();
+    assert!(total_failures > 0, "dropout never triggered");
+    // every round still aggregated someone
+    assert!(report.history.rounds.iter().all(|r| r.fit_completed >= 1));
+}
+
+/// Heterogeneous cohort: a straggler device dominates round time.
+#[test]
+fn straggler_dominates_round_time() {
+    let Some(rt) = runtime() else { return };
+    let fast = ExperimentConfig::default()
+        .named("it-fast")
+        .model("head")
+        .clients(2)
+        .rounds(1)
+        .epochs(1)
+        .data(64, 100)
+        .devices(&["pixel4"])
+        .seed(4);
+    let mixed = ExperimentConfig::default()
+        .named("it-mixed")
+        .model("head")
+        .clients(2)
+        .rounds(1)
+        .epochs(1)
+        .data(64, 100)
+        .devices(&["pixel4", "raspberry_pi4"]) // rpi factor 6.0
+        .seed(4);
+    let t_fast = sim::run_experiment(&fast, &rt).unwrap().history.rounds[0].round_time_s;
+    let t_mixed = sim::run_experiment(&mixed, &rt).unwrap().history.rounds[0].round_time_s;
+    assert!(
+        t_mixed > t_fast * 2.0,
+        "straggler effect missing: fast={t_fast} mixed={t_mixed}"
+    );
+}
+
+/// Memory-leak regression guard: the original `execute::<Literal>` path
+/// leaked ~0.5 MB per step through the C shim (never-freed input buffers;
+/// a full table run OOMed at 36 GB). The `execute_b` + owned-buffer path
+/// must hold RSS flat over hundreds of steps.
+#[test]
+fn runtime_does_not_leak_per_step() {
+    fn rss_kb() -> Option<u64> {
+        let s = std::fs::read_to_string("/proc/self/status").ok()?;
+        s.lines()
+            .find_map(|l| l.strip_prefix("VmRSS:"))
+            .and_then(|v| v.trim().trim_end_matches(" kB").trim().parse().ok())
+    }
+    let Some(rt) = runtime() else { return };
+    let Some(_) = rss_kb() else { return }; // non-linux: skip
+    let d = flowrs::data::SyntheticSpec::office_like(1).generate(32, 0);
+    let feats: Vec<f32> = (0..32 * 1280).map(|i| (i % 7) as f32 * 0.1).collect();
+    let mut p = rt.initial_parameters("head").unwrap();
+    // warm up (compilation + allocator pools)
+    for _ in 0..50 {
+        p = rt.train_step("head", &p, &feats, &d.y, 0.01).unwrap().0;
+    }
+    let before = rss_kb().unwrap();
+    for _ in 0..300 {
+        p = rt.train_step("head", &p, &feats, &d.y, 0.01).unwrap().0;
+    }
+    let after = rss_kb().unwrap();
+    let grown_mb = (after.saturating_sub(before)) as f64 / 1024.0;
+    // the old path grew ~150 MB over 300 steps; allow 20 MB of noise
+    assert!(grown_mb < 20.0, "RSS grew {grown_mb:.1} MB over 300 steps");
+}
+
+/// More local epochs must cost more modeled time and energy (Table 2a's
+/// core trade-off), holding everything else fixed.
+#[test]
+fn epochs_scale_time_and_energy() {
+    let Some(rt) = runtime() else { return };
+    let mk = |e: i64| {
+        ExperimentConfig::default()
+            .named("it-epochs")
+            .model("head")
+            .clients(2)
+            .rounds(2)
+            .epochs(e)
+            .data(64, 100)
+            .seed(88)
+    };
+    let r1 = sim::run_experiment(&mk(1), &rt).unwrap();
+    let r3 = sim::run_experiment(&mk(3), &rt).unwrap();
+    assert!(r3.history.total_time_s() > r1.history.total_time_s() * 2.0);
+    assert!(r3.history.total_energy_j() > r1.history.total_energy_j() * 2.0);
+}

@@ -1,0 +1,392 @@
+//! Property-based tests (in-tree `util::prop` driver) over the
+//! coordinator's core invariants: codec roundtrips, aggregation math,
+//! partition coverage, cost-model monotonicity, JSON robustness.
+
+use flowrs::data::{Dataset, Partitioner};
+use flowrs::device::profiles;
+use flowrs::proto::*;
+use flowrs::sim::cost::CostModel;
+use flowrs::strategy::Aggregator;
+use flowrs::util::json::Json;
+use flowrs::util::prop::{assert_eq_prop, check, ensure};
+use flowrs::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// arbitrary generators
+// ---------------------------------------------------------------------------
+
+fn arb_string(rng: &mut Rng) -> String {
+    let len = rng.below(12);
+    (0..len)
+        .map(|_| {
+            // mix ascii and some multibyte
+            match rng.below(10) {
+                0 => 'é',
+                1 => '✓',
+                2 => '\n',
+                _ => (b'a' + rng.below(26) as u8) as char,
+            }
+        })
+        .collect()
+}
+
+fn arb_scalar(rng: &mut Rng) -> Scalar {
+    match rng.below(5) {
+        0 => Scalar::Bool(rng.below(2) == 0),
+        1 => Scalar::I64(rng.next_u64() as i64),
+        2 => Scalar::F64(rng.normal() * 1e3),
+        3 => Scalar::Str(arb_string(rng)),
+        _ => Scalar::Bytes((0..rng.below(16)).map(|_| rng.below(256) as u8).collect()),
+    }
+}
+
+fn arb_config(rng: &mut Rng) -> ConfigMap {
+    let mut m = ConfigMap::new();
+    for _ in 0..rng.below(6) {
+        m.insert(arb_string(rng), arb_scalar(rng));
+    }
+    m
+}
+
+fn arb_tensor(rng: &mut Rng) -> Tensor {
+    let rank = rng.below(3);
+    let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(8)).collect();
+    let n: usize = shape.iter().product();
+    match rng.below(3) {
+        0 => Tensor::f32(shape, (0..n).map(|_| rng.normal_f32()).collect()).unwrap(),
+        1 => Tensor::i32(shape, (0..n).map(|_| rng.next_u64() as i32).collect()).unwrap(),
+        _ => Tensor::f32(shape, (0..n).map(|_| rng.normal_f32()).collect())
+            .unwrap()
+            .quantize_f16()
+            .unwrap(),
+    }
+}
+
+fn arb_parameters(rng: &mut Rng) -> Parameters {
+    Parameters {
+        tensors: (0..rng.below(4)).map(|_| arb_tensor(rng)).collect(),
+    }
+}
+
+fn arb_status(rng: &mut Rng) -> Status {
+    let code = match rng.below(4) {
+        0 => StatusCode::Ok,
+        1 => StatusCode::FitNotImplemented,
+        2 => StatusCode::FitError,
+        _ => StatusCode::EvaluateError,
+    };
+    Status { code, message: arb_string(rng) }
+}
+
+fn arb_server_message(rng: &mut Rng) -> ServerMessage {
+    match rng.below(4) {
+        0 => ServerMessage::GetParametersIns(GetParametersIns { config: arb_config(rng) }),
+        1 => ServerMessage::FitIns(FitIns {
+            parameters: arb_parameters(rng),
+            config: arb_config(rng),
+        }),
+        2 => ServerMessage::EvaluateIns(EvaluateIns {
+            parameters: arb_parameters(rng),
+            config: arb_config(rng),
+        }),
+        _ => ServerMessage::Reconnect { seconds: rng.next_u64() },
+    }
+}
+
+fn arb_client_message(rng: &mut Rng) -> ClientMessage {
+    match rng.below(5) {
+        0 => ClientMessage::Register(ClientInfo {
+            client_id: arb_string(rng),
+            device: arb_string(rng),
+            os: arb_string(rng),
+            num_examples: rng.next_u64(),
+        }),
+        1 => ClientMessage::GetParametersRes(GetParametersRes {
+            status: arb_status(rng),
+            parameters: arb_parameters(rng),
+        }),
+        2 => ClientMessage::FitRes(FitRes {
+            status: arb_status(rng),
+            parameters: arb_parameters(rng),
+            num_examples: rng.next_u64(),
+            metrics: arb_config(rng),
+        }),
+        3 => ClientMessage::EvaluateRes(EvaluateRes {
+            status: arb_status(rng),
+            loss: rng.normal(),
+            num_examples: rng.next_u64(),
+            metrics: arb_config(rng),
+        }),
+        _ => ClientMessage::Disconnect { reason: arb_string(rng) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// codec properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_server_message_roundtrip() {
+    check("server message roundtrip", 300, |rng| {
+        let msg = arb_server_message(rng);
+        let buf = encode_server_message(&msg);
+        let back = decode_server_message(&buf).map_err(|e| e.to_string())?;
+        assert_eq_prop(&back, &msg)
+    });
+}
+
+#[test]
+fn prop_client_message_roundtrip() {
+    check("client message roundtrip", 300, |rng| {
+        let msg = arb_client_message(rng);
+        let buf = encode_client_message(&msg);
+        let back = decode_client_message(&buf).map_err(|e| e.to_string())?;
+        assert_eq_prop(&back, &msg)
+    });
+}
+
+#[test]
+fn prop_corrupted_frames_never_panic() {
+    check("decoder is total on corrupt input", 500, |rng| {
+        let msg = arb_client_message(rng);
+        let mut buf = encode_client_message(&msg);
+        if buf.is_empty() {
+            return Ok(());
+        }
+        // flip a random byte and/or truncate
+        let i = rng.below(buf.len());
+        buf[i] ^= 1 << rng.below(8);
+        if rng.below(2) == 0 {
+            buf.truncate(rng.below(buf.len() + 1));
+        }
+        // must return Ok or Err, never panic; and if Ok, re-encoding works
+        if let Ok(m) = decode_client_message(&buf) {
+            let _ = encode_client_message(&m);
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// aggregation properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_aggregate_convexity_and_permutation() {
+    check("aggregation stays in convex hull, permutation-invariant", 100, |rng| {
+        let p = 1 + rng.below(64);
+        let k = 1 + rng.below(6);
+        let vecs: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..p).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let weights: Vec<f64> = (0..k).map(|_| 0.01 + rng.f64()).collect();
+        let inputs: Vec<(&[f32], f64)> = vecs
+            .iter()
+            .zip(&weights)
+            .map(|(v, &w)| (v.as_slice(), w))
+            .collect();
+        let out = Aggregator::Rust
+            .weighted_average(&inputs)
+            .map_err(|e| e.to_string())?;
+        // convex hull bounds
+        for j in 0..p {
+            let lo = vecs.iter().map(|v| v[j]).fold(f32::INFINITY, f32::min) - 1e-4;
+            let hi = vecs.iter().map(|v| v[j]).fold(f32::NEG_INFINITY, f32::max) + 1e-4;
+            ensure(out[j] >= lo && out[j] <= hi, || {
+                format!("element {j} = {} outside [{lo}, {hi}]", out[j])
+            })?;
+        }
+        // permutation invariance
+        let mut perm: Vec<usize> = (0..k).collect();
+        rng.shuffle(&mut perm);
+        let shuffled: Vec<(&[f32], f64)> =
+            perm.iter().map(|&i| (vecs[i].as_slice(), weights[i])).collect();
+        let out2 = Aggregator::Rust
+            .weighted_average(&shuffled)
+            .map_err(|e| e.to_string())?;
+        for j in 0..p {
+            ensure((out[j] - out2[j]).abs() < 1e-5, || {
+                format!("permutation changed element {j}: {} vs {}", out[j], out2[j])
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_aggregate_identical_inputs_fixed_point() {
+    check("averaging copies of v returns v", 100, |rng| {
+        let p = 1 + rng.below(128);
+        let v: Vec<f32> = (0..p).map(|_| rng.normal_f32()).collect();
+        let k = 1 + rng.below(8);
+        let inputs: Vec<(&[f32], f64)> =
+            (0..k).map(|_| (v.as_slice(), 0.5 + rng.f64())).collect();
+        let out = Aggregator::Rust
+            .weighted_average(&inputs)
+            .map_err(|e| e.to_string())?;
+        for j in 0..p {
+            ensure((out[j] - v[j]).abs() < 1e-5, || {
+                format!("fixed point violated at {j}: {} vs {}", out[j], v[j])
+            })?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// partition properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_partitions_cover_and_disjoint() {
+    check("every partitioner covers without duplication", 60, |rng| {
+        let n = 100 + rng.below(400);
+        let classes = 2 + rng.below(9);
+        // data rows tagged with unique example ids in feature slot 0
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let y: Vec<i32> = (0..n).map(|_| rng.below(classes) as i32).collect();
+        let data = Dataset::new(x, y, 1).unwrap();
+        let clients = 2 + rng.below(6);
+        let part = match rng.below(3) {
+            0 => Partitioner::Iid,
+            1 => Partitioner::Dirichlet { alpha: 0.2 + rng.f64() },
+            _ => Partitioner::Shards { shards_per_client: 1 + rng.below(3) },
+        };
+        let parts = part
+            .split(&data, clients, &mut rng.derive(1))
+            .map_err(|e| e.to_string())?;
+        ensure(parts.len() == clients, || "wrong client count".into())?;
+        let mut seen = std::collections::BTreeSet::new();
+        for p in &parts {
+            for &id in &p.x {
+                ensure(seen.insert(id as i64), || {
+                    format!("example {id} assigned twice by {part:?}")
+                })?;
+            }
+        }
+        // IID must cover everything exactly when divisible
+        if matches!(part, Partitioner::Iid) {
+            let per = n / clients;
+            ensure(seen.len() == per * clients, || "IID lost examples".into())?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// f16 properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_f16_roundtrip_through_f32_is_identity() {
+    use flowrs::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+    check("f16 -> f32 -> f16 identity on finite values", 2000, |rng| {
+        let bits = (rng.next_u64() & 0xFFFF) as u16;
+        let exp = (bits >> 10) & 0x1F;
+        if exp == 0x1F {
+            return Ok(()); // inf/nan covered in unit tests
+        }
+        let x = f16_bits_to_f32(bits);
+        ensure(f32_to_f16_bits(x) == bits, || {
+            format!("bits {bits:#06x} -> {x} -> {:#06x}", f32_to_f16_bits(x))
+        })
+    });
+}
+
+#[test]
+fn prop_f16_quantization_monotone() {
+    use flowrs::util::f16::{f16_bits_to_f32, f32_to_f16_bits};
+    check("f16 rounding preserves order", 500, |rng| {
+        let a = rng.normal() as f32 * 10.0;
+        let b = rng.normal() as f32 * 10.0;
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        let qlo = f16_bits_to_f32(f32_to_f16_bits(lo));
+        let qhi = f16_bits_to_f32(f32_to_f16_bits(hi));
+        ensure(qlo <= qhi, || format!("{lo} -> {qlo} vs {hi} -> {qhi}"))
+    });
+}
+
+// ---------------------------------------------------------------------------
+// cost model properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_cost_model_monotone() {
+    check("cost model: more steps/bytes never cheaper", 100, |rng| {
+        let m = CostModel::default();
+        let all = profiles::ALL;
+        let d = all[rng.below(all.len())].clone();
+        let s1 = rng.below(1000) as u64;
+        let s2 = s1 + 1 + rng.below(1000) as u64;
+        let c1 = m.compute(&d, s1);
+        let c2 = m.compute(&d, s2);
+        ensure(c2.time_s > c1.time_s && c2.energy_j > c1.energy_j, || {
+            format!("compute not monotone on {}", d.name)
+        })?;
+        let b1 = rng.below(1_000_000);
+        let b2 = b1 + 1 + rng.below(1_000_000);
+        ensure(
+            m.comm(&d, b2).time_s > m.comm(&d, b1).time_s,
+            || format!("comm not monotone on {}", d.name),
+        )?;
+        // τ budget: steps fit exactly within their own cost
+        let steps = m.max_steps_within(&d, m.compute(&d, s2).time_s + 1e-9);
+        ensure(steps >= s2, || {
+            format!("max_steps_within under-counts: {steps} < {s2}")
+        })?;
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// JSON properties
+// ---------------------------------------------------------------------------
+
+fn arb_json(rng: &mut Rng, depth: usize) -> Json {
+    if depth == 0 {
+        return match rng.below(4) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.next_u64() % 1_000_000) as f64 - 500_000.0),
+            _ => Json::Str(arb_string(rng)),
+        };
+    }
+    match rng.below(6) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(rng.normal() * 100.0),
+        3 => Json::Str(arb_string(rng)),
+        4 => Json::Arr((0..rng.below(5)).map(|_| arb_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|_| (arb_string(rng), arb_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_write_parse_roundtrip() {
+    check("json writer/parser roundtrip", 300, |rng| {
+        let doc = arb_json(rng, 3);
+        let text = doc.to_string();
+        let back = Json::parse(&text).map_err(|e| format!("{e} in {text:?}"))?;
+        // floats may lose ULPs through the default formatter; compare via re-write
+        assert_eq_prop(&back.to_string(), &text)
+    });
+}
+
+#[test]
+fn prop_json_parser_total_on_garbage() {
+    check("json parser never panics", 500, |rng| {
+        let len = rng.below(64);
+        let garbage: String = (0..len)
+            .map(|_| {
+                let c = rng.below(128) as u8;
+                if c.is_ascii() { c as char } else { '?' }
+            })
+            .collect();
+        let _ = Json::parse(&garbage); // Ok or Err, no panic
+        Ok(())
+    });
+}

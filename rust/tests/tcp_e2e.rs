@@ -1,0 +1,138 @@
+//! TCP deployment test: a real Flower server on a socket, real client
+//! processes-worth of threads dialing in, full wire protocol — the
+//! paper's deployment shape (Figure 1/3) on localhost.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flowrs::client::{app, DeviceTrainer};
+use flowrs::data::SyntheticSpec;
+use flowrs::device::profiles;
+use flowrs::proto::{ClientInfo, Parameters};
+use flowrs::runtime::Runtime;
+use flowrs::server::{serve_registrations, ClientManager, Server, ServerConfig};
+use flowrs::strategy::fedavg::TrainingPlan;
+use flowrs::strategy::{Aggregator, FedAvg};
+use flowrs::transport::tcp::{TcpConnection, TcpTransportListener};
+use flowrs::transport::Connection;
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime loads"))
+}
+
+#[test]
+fn tcp_federation_trains_head_model() {
+    let Some(rt) = runtime() else { return };
+
+    let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let manager = Arc::new(ClientManager::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let reg = serve_registrations(listener, Arc::clone(&manager), Arc::clone(&stop));
+
+    // two "devices" dial in over real sockets
+    let mut clients = Vec::new();
+    for i in 0..2u64 {
+        let rt = rt.clone();
+        clients.push(std::thread::spawn(move || {
+            let device = profiles::by_name("pixel3").unwrap();
+            let spec = SyntheticSpec::office_like(99);
+            let base = flowrs::client::BaseModel::generate(99 ^ 0xBA5E, 3072, 1280);
+            let mut trainer = DeviceTrainer::new(
+                rt,
+                "head",
+                device,
+                Default::default(),
+                spec.generate(64, i + 1),
+                spec.generate(100, 1000 + i),
+                Some(base),
+                99 ^ i,
+            )
+            .unwrap();
+            let info = ClientInfo {
+                client_id: format!("tcp-{i}"),
+                device: "pixel3".into(),
+                os: device.os.to_string(),
+                num_examples: trainer.num_train_examples() as u64,
+            };
+            let conn = Connection::Tcp(TcpConnection::connect(addr).unwrap());
+            app::run_client(conn, &mut trainer, info).unwrap();
+        }));
+    }
+
+    let strategy = FedAvg::new(
+        TrainingPlan { epochs: 1, lr: 0.1 },
+        Aggregator::Pjrt { runtime: rt.clone(), model: "head".into() },
+    );
+    let mut server = Server::new(
+        Arc::clone(&manager),
+        Box::new(strategy),
+        Default::default(),
+        ServerConfig {
+            num_rounds: 3,
+            quorum: 2,
+            quorum_timeout: Duration::from_secs(30),
+            ..Default::default()
+        },
+    );
+    let initial = Parameters::from_flat(rt.initial_parameters("head").unwrap());
+    let history = server.run(initial).unwrap();
+
+    assert_eq!(history.rounds.len(), 3);
+    assert!(history.rounds.iter().all(|r| r.fit_completed == 2));
+    // 3 rounds × 2 steps is noisy; require beats-chance accuracy (1/31)
+    // and finite losses rather than a monotone trajectory.
+    assert!(
+        history.best_accuracy() > 2.0 / 31.0,
+        "accuracy never beat chance: {:?}",
+        history
+            .rounds
+            .iter()
+            .map(|r| r.accuracy)
+            .collect::<Vec<_>>()
+    );
+    assert!(history.rounds.iter().all(|r| r.eval_loss.is_finite()));
+    // bytes actually moved over the wire both ways
+    assert!(history.rounds[0].down_bytes > 0);
+    assert!(history.rounds[0].up_bytes > 0);
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpConnection::connect(addr); // unblock accept
+    reg.join().unwrap();
+    for c in clients {
+        c.join().unwrap();
+    }
+}
+
+#[test]
+fn registration_rejects_unknown_devices() {
+    let Some(_rt) = runtime() else { return };
+    let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let manager = Arc::new(ClientManager::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let reg = serve_registrations(listener, Arc::clone(&manager), Arc::clone(&stop));
+
+    // a client claiming an unknown device is not registered
+    let mut conn = Connection::Tcp(TcpConnection::connect(addr).unwrap());
+    conn.send_client_message(&flowrs::proto::ClientMessage::Register(ClientInfo {
+        client_id: "evil".into(),
+        device: "quantum_toaster".into(),
+        os: "?".into(),
+        num_examples: 1,
+    }))
+    .unwrap();
+    std::thread::sleep(Duration::from_millis(200));
+    assert_eq!(manager.len(), 0);
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpConnection::connect(addr);
+    reg.join().unwrap();
+}
