@@ -1,0 +1,77 @@
+//! Scheduler benchmarks: cohort selection and full engine rounds at
+//! population scale (1k / 100k / 1M virtual devices).
+//!
+//! Selection is O(population) per round (one sort for the utility
+//! policy); an engine round adds the availability scan, the completion
+//! event heap and the surrogate numerics. Record the numbers from this
+//! bench on the target machine as the baseline when touching the
+//! scheduler hot paths (`FLOWRS_BENCH_MS` trims the per-case budget).
+
+use flowrs::config::{PolicyConfig, ScheduleConfig};
+use flowrs::sched::engine::{Engine, Population, SurrogateTrainer};
+use flowrs::sched::policy::{Candidate, SelectionContext};
+use flowrs::sim::cost::CostModel;
+use flowrs::util::bench::Bench;
+
+fn candidates(pop: &Population) -> Vec<Candidate> {
+    pop.devices
+        .iter()
+        .map(|d| Candidate {
+            device: d.device,
+            num_examples: d.num_examples,
+            last_loss: Some(1.0 + d.skew),
+            rounds_since_selected: None,
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::new("selection");
+    let cost = CostModel::default();
+    let policies = [
+        PolicyConfig::Uniform,
+        PolicyConfig::DeadlineAware,
+        PolicyConfig::UtilityBased { alpha: 2.0, explore_frac: 0.1 },
+    ];
+
+    for &n in &[1_000usize, 100_000, 1_000_000] {
+        let cfg = ScheduleConfig::default()
+            .named("bench")
+            .population(n)
+            .cohort(100)
+            .epochs(10)
+            .deadline(Some(250.0))
+            .seed(42);
+        let pop = Population::synthesize(&cfg).unwrap();
+        let cands = candidates(&pop);
+        let ctx = SelectionContext {
+            round: 1,
+            cost: &cost,
+            steps_per_round: 80,
+            model_bytes: cfg.model_bytes,
+            target_cohort: cfg.cohort_size,
+            deadline_s: cfg.deadline_s,
+        };
+        for p in &policies {
+            let mut policy = p.build(42);
+            b.bench(&format!("select_{}_n{n}", policy.name()), || {
+                policy.select(&ctx, &cands)
+            });
+        }
+
+        // One full engine round: availability scan + candidate build +
+        // selection + event queue + surrogate numerics. State advances
+        // between iterations (virtual clock, loss history) — that's the
+        // steady-state workload, not a cold start.
+        let mut engine =
+            Engine::new(&cfg.policy(PolicyConfig::DeadlineAware), SurrogateTrainer::default())
+                .unwrap();
+        let mut round = 0u64;
+        b.bench(&format!("engine_round_n{n}"), || {
+            round += 1;
+            engine.run_round(round).unwrap()
+        });
+    }
+
+    b.finish();
+}

@@ -6,6 +6,11 @@ use std::path::Path;
 
 use crate::data::Partitioner;
 use crate::error::{Error, Result};
+use crate::sched::availability::ChurnSpec;
+use crate::sched::policy::{
+    DeadlineAware, SelectionPolicy, UniformRandom, UtilityBased, DEFAULT_EXPLORE_FRAC,
+    DEFAULT_UTILITY_ALPHA,
+};
 use crate::sim::cost::CostModel;
 use crate::util::json::Json;
 
@@ -349,6 +354,302 @@ fn parse_strategy(v: &Json) -> Result<StrategyConfig> {
     })
 }
 
+// ---------------------------------------------------------------------------
+// Population-scale scheduling (the `sched` subsystem)
+// ---------------------------------------------------------------------------
+
+/// Which cohort-selection policy drives the scheduler.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PolicyConfig {
+    Uniform,
+    DeadlineAware,
+    UtilityBased { alpha: f64, explore_frac: f64 },
+}
+
+impl PolicyConfig {
+    /// Parse `uniform` | `deadline` | `utility[:ALPHA[:EXPLORE]]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "uniform" => return Ok(PolicyConfig::Uniform),
+            "deadline" => return Ok(PolicyConfig::DeadlineAware),
+            "utility" => {
+                return Ok(PolicyConfig::UtilityBased {
+                    alpha: DEFAULT_UTILITY_ALPHA,
+                    explore_frac: DEFAULT_EXPLORE_FRAC,
+                })
+            }
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("utility:") {
+            let mut parts = rest.split(':');
+            let alpha: f64 = parts
+                .next()
+                .unwrap_or("")
+                .parse()
+                .map_err(|_| Error::Config(format!("bad alpha in {s:?}")))?;
+            let explore_frac: f64 = match parts.next() {
+                Some(v) => v
+                    .parse()
+                    .map_err(|_| Error::Config(format!("bad explore fraction in {s:?}")))?,
+                None => DEFAULT_EXPLORE_FRAC,
+            };
+            if parts.next().is_some() {
+                return Err(Error::Config(format!("trailing fields in {s:?}")));
+            }
+            return Ok(PolicyConfig::UtilityBased { alpha, explore_frac });
+        }
+        Err(Error::Config(format!(
+            "unknown policy {s:?} (uniform | deadline | utility[:ALPHA[:EXPLORE]])"
+        )))
+    }
+
+    /// Human-readable label that distinguishes variants — unlike the
+    /// built policy's `name()`, which is the kind only ("utility" for
+    /// every alpha).
+    pub fn label(&self) -> String {
+        match self {
+            PolicyConfig::Uniform => "uniform".into(),
+            PolicyConfig::DeadlineAware => "deadline".into(),
+            PolicyConfig::UtilityBased { alpha, explore_frac } => {
+                format!("utility:{alpha}:{explore_frac}")
+            }
+        }
+    }
+
+    /// Instantiate the policy with a seed.
+    pub fn build(&self, seed: u64) -> Box<dyn SelectionPolicy> {
+        match self {
+            PolicyConfig::Uniform => Box::new(UniformRandom::new(seed)),
+            PolicyConfig::DeadlineAware => Box::new(DeadlineAware::new(seed)),
+            PolicyConfig::UtilityBased { alpha, explore_frac } => Box::new(
+                UtilityBased::new(seed)
+                    .with_alpha(*alpha)
+                    .with_exploration(*explore_frac),
+            ),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if let PolicyConfig::UtilityBased { alpha, explore_frac } = self {
+            if *alpha < 0.0 || !alpha.is_finite() {
+                return Err(Error::Config("utility alpha must be finite and >= 0".into()));
+            }
+            if !(0.0..=1.0).contains(explore_frac) {
+                return Err(Error::Config("explore fraction must be in [0, 1]".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A population-scale scheduling experiment (the `sched` subcommand and
+/// [`crate::sim::population`]).
+#[derive(Debug, Clone)]
+pub struct ScheduleConfig {
+    pub name: String,
+    pub policy: PolicyConfig,
+    /// Round deadline τ (s): selected clients that have not reported by
+    /// τ are dropped and their energy wasted. None = wait for everyone.
+    pub deadline_s: Option<f64>,
+    /// Clients trained per round.
+    pub cohort_size: usize,
+    /// Virtual devices in the population.
+    pub population: usize,
+    pub rounds: u64,
+    /// Local epochs per selected client per round.
+    pub epochs: i64,
+    /// Train steps per local epoch (the paper's Table-2 workload runs 8).
+    pub steps_per_epoch: u64,
+    /// Parameter payload bytes on the wire, each way (CIFAR CNN ≈ 547 KB).
+    pub model_bytes: usize,
+    /// (device profile name, weight) population mix; empty = default mix.
+    pub device_mix: Vec<(String, f64)>,
+    /// On/off churn; None = everyone always available.
+    pub churn: Option<ChurnSpec>,
+    pub seed: u64,
+    pub cost: CostModel,
+    /// Early-stop (and time-to-accuracy reporting) target.
+    pub target_accuracy: Option<f64>,
+}
+
+impl Default for ScheduleConfig {
+    fn default() -> Self {
+        ScheduleConfig {
+            name: "sched".into(),
+            policy: PolicyConfig::Uniform,
+            deadline_s: None,
+            cohort_size: 100,
+            population: 100_000,
+            rounds: 30,
+            epochs: 1,
+            steps_per_epoch: 8,
+            model_bytes: 547_496,
+            device_mix: Vec::new(),
+            churn: None,
+            seed: 20260710,
+            cost: CostModel::default(),
+            target_accuracy: None,
+        }
+    }
+}
+
+impl ScheduleConfig {
+    // -- builder helpers (tests and benches) -----------------------------
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.into();
+        self
+    }
+    pub fn policy(mut self, p: PolicyConfig) -> Self {
+        self.policy = p;
+        self
+    }
+    pub fn deadline(mut self, tau_s: Option<f64>) -> Self {
+        self.deadline_s = tau_s;
+        self
+    }
+    pub fn cohort(mut self, k: usize) -> Self {
+        self.cohort_size = k;
+        self
+    }
+    pub fn population(mut self, n: usize) -> Self {
+        self.population = n;
+        self
+    }
+    pub fn rounds(mut self, n: u64) -> Self {
+        self.rounds = n;
+        self
+    }
+    pub fn epochs(mut self, e: i64) -> Self {
+        self.epochs = e;
+        self
+    }
+    pub fn churn(mut self, spec: Option<ChurnSpec>) -> Self {
+        self.churn = spec;
+        self
+    }
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.population == 0 {
+            return Err(Error::Config("population must be > 0".into()));
+        }
+        if self.cohort_size == 0 {
+            return Err(Error::Config("cohort_size must be > 0".into()));
+        }
+        if self.cohort_size > self.population {
+            return Err(Error::Config(format!(
+                "cohort_size {} exceeds population {}",
+                self.cohort_size, self.population
+            )));
+        }
+        if self.rounds == 0 {
+            return Err(Error::Config("rounds must be > 0".into()));
+        }
+        if self.epochs < 0 {
+            return Err(Error::Config("epochs must be >= 0".into()));
+        }
+        if self.steps_per_epoch == 0 {
+            return Err(Error::Config("steps_per_epoch must be > 0".into()));
+        }
+        if self.model_bytes == 0 {
+            return Err(Error::Config("model_bytes must be > 0".into()));
+        }
+        if let Some(tau) = self.deadline_s {
+            if tau <= 0.0 || !tau.is_finite() {
+                return Err(Error::Config("deadline_s must be finite and > 0".into()));
+            }
+        }
+        if let Some(churn) = &self.churn {
+            if churn.mean_on_s <= 0.0 || !churn.mean_on_s.is_finite() {
+                return Err(Error::Config("churn mean_on_s must be finite and > 0".into()));
+            }
+            if churn.mean_off_s < 0.0 || !churn.mean_off_s.is_finite() {
+                return Err(Error::Config("churn mean_off_s must be finite and >= 0".into()));
+            }
+        }
+        for (name, w) in &self.device_mix {
+            crate::device::profiles::by_name(name)?;
+            if *w <= 0.0 || !w.is_finite() {
+                return Err(Error::Config(format!(
+                    "device mix weight for {name} must be finite and > 0"
+                )));
+            }
+        }
+        self.policy.validate()
+    }
+
+    // -- JSON loading -----------------------------------------------------
+
+    pub fn from_json_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text)?;
+        let mut cfg = ScheduleConfig::default();
+        if let Some(v) = doc.opt("name") {
+            cfg.name = v.as_str()?.to_string();
+        }
+        if let Some(v) = doc.opt("policy") {
+            cfg.policy = PolicyConfig::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.opt("deadline_s") {
+            cfg.deadline_s = Some(v.as_f64()?);
+        }
+        if let Some(v) = doc.opt("cohort_size") {
+            cfg.cohort_size = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("population") {
+            cfg.population = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("rounds") {
+            cfg.rounds = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.opt("epochs") {
+            cfg.epochs = v.as_f64()? as i64;
+        }
+        if let Some(v) = doc.opt("steps_per_epoch") {
+            cfg.steps_per_epoch = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.opt("model_bytes") {
+            cfg.model_bytes = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("device_mix") {
+            cfg.device_mix = v
+                .as_obj()?
+                .iter()
+                .map(|(name, w)| Ok((name.clone(), w.as_f64()?)))
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = doc.opt("churn") {
+            cfg.churn = Some(ChurnSpec {
+                mean_on_s: v.get("mean_on_s")?.as_f64()?,
+                mean_off_s: v.get("mean_off_s")?.as_f64()?,
+            });
+        }
+        if let Some(v) = doc.opt("seed") {
+            cfg.seed = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.opt("t_step_ref_s") {
+            cfg.cost.t_step_ref_s = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("server_overhead_s") {
+            cfg.cost.server_overhead_s = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("target_accuracy") {
+            cfg.target_accuracy = Some(v.as_f64()?);
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -420,5 +721,101 @@ mod tests {
             .is_err());
         assert!(ExperimentConfig::from_json(r#"{"agg_backend": "gpu"}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"strategy": {"kind": "sgd"}}"#).is_err());
+    }
+
+    #[test]
+    fn policy_config_parses_all_forms() {
+        assert_eq!(PolicyConfig::parse("uniform").unwrap(), PolicyConfig::Uniform);
+        assert_eq!(PolicyConfig::parse("deadline").unwrap(), PolicyConfig::DeadlineAware);
+        assert_eq!(
+            PolicyConfig::parse("utility").unwrap(),
+            PolicyConfig::UtilityBased { alpha: 2.0, explore_frac: 0.1 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("utility:3.5").unwrap(),
+            PolicyConfig::UtilityBased { alpha: 3.5, explore_frac: 0.1 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("utility:1.0:0.25").unwrap(),
+            PolicyConfig::UtilityBased { alpha: 1.0, explore_frac: 0.25 }
+        );
+        assert!(PolicyConfig::parse("oort").is_err());
+        assert!(PolicyConfig::parse("utility:x").is_err());
+        assert!(PolicyConfig::parse("utility:1:0.1:9").is_err());
+    }
+
+    #[test]
+    fn policy_labels_distinguish_variants() {
+        let a = PolicyConfig::parse("utility:1.5").unwrap();
+        let b = PolicyConfig::parse("utility:3").unwrap();
+        assert_ne!(a.label(), b.label());
+        assert_eq!(PolicyConfig::Uniform.label(), "uniform");
+        assert_eq!(PolicyConfig::DeadlineAware.label(), "deadline");
+    }
+
+    #[test]
+    fn schedule_default_is_valid() {
+        ScheduleConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn schedule_json_roundtrip_full() {
+        let cfg = ScheduleConfig::from_json(
+            r#"{
+                "name": "pop-exp",
+                "policy": "utility:2.0:0.2",
+                "deadline_s": 250.0,
+                "cohort_size": 128,
+                "population": 100000,
+                "rounds": 25,
+                "epochs": 10,
+                "steps_per_epoch": 8,
+                "model_bytes": 547496,
+                "device_mix": {"pixel4": 3, "raspberry_pi4": 1},
+                "churn": {"mean_on_s": 600, "mean_off_s": 300},
+                "seed": 99,
+                "t_step_ref_s": 1.48,
+                "target_accuracy": 0.5
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.name, "pop-exp");
+        assert_eq!(
+            cfg.policy,
+            PolicyConfig::UtilityBased { alpha: 2.0, explore_frac: 0.2 }
+        );
+        assert_eq!(cfg.deadline_s, Some(250.0));
+        assert_eq!(cfg.cohort_size, 128);
+        assert_eq!(cfg.population, 100_000);
+        assert_eq!(cfg.device_mix.len(), 2);
+        assert_eq!(
+            cfg.churn,
+            Some(crate::sched::availability::ChurnSpec {
+                mean_on_s: 600.0,
+                mean_off_s: 300.0
+            })
+        );
+        assert_eq!(cfg.target_accuracy, Some(0.5));
+    }
+
+    #[test]
+    fn schedule_validation_catches_mistakes() {
+        assert!(ScheduleConfig::default().population(0).validate().is_err());
+        assert!(ScheduleConfig::default().cohort(0).validate().is_err());
+        assert!(ScheduleConfig::default()
+            .population(10)
+            .cohort(11)
+            .validate()
+            .is_err());
+        assert!(ScheduleConfig::default().deadline(Some(-1.0)).validate().is_err());
+        let mut bad_mix = ScheduleConfig::default();
+        bad_mix.device_mix = vec![("nokia3310".into(), 1.0)];
+        assert!(bad_mix.validate().is_err());
+        let mut bad_w = ScheduleConfig::default();
+        bad_w.device_mix = vec![("pixel4".into(), 0.0)];
+        assert!(bad_w.validate().is_err());
+        assert!(ScheduleConfig::from_json(r#"{"policy": "magic"}"#).is_err());
+        assert!(ScheduleConfig::from_json(r#"{"churn": {"mean_on_s": -5, "mean_off_s": 1}}"#)
+            .is_err());
     }
 }

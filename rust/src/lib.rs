@@ -7,8 +7,13 @@
 //! * **L3 (this crate)** — the Flower coordinator: the FL loop ([`server`]),
 //!   the RPC server and wire protocol ([`transport`], [`proto`]), the
 //!   pluggable [`strategy`] abstraction (FedAvg and the paper's τ-cutoff
-//!   variant among others), the on-device client runtime ([`client`]), and
-//!   the heterogeneous-device simulation substrate ([`device`], [`sim`]).
+//!   variant among others), the on-device client runtime ([`client`]), the
+//!   heterogeneous-device simulation substrate ([`device`], [`sim`]), and
+//!   the cost-aware scheduler ([`sched`]): pluggable cohort-selection
+//!   policies (uniform / deadline-aware / utility-based) over the
+//!   calibrated cost model, per-device availability churn, and an
+//!   event-driven virtual-time engine that scales policy experiments to
+//!   100k–1M virtual devices ([`sim::population`], `flowrs sched`).
 //! * **L2 (JAX, build-time)** — the training workloads (CIFAR CNN, frozen
 //!   base + trainable head), lowered once to HLO text under `artifacts/`.
 //! * **L1 (Pallas, build-time)** — fused dense fwd/bwd, softmax-xent, SGD
@@ -16,7 +21,11 @@
 //!
 //! Python never runs on the request path: the [`runtime`] module loads the
 //! AOT artifacts through the `xla` crate's PJRT CPU client and executes
-//! train / eval / feature-extraction / aggregation steps natively.
+//! train / eval / feature-extraction / aggregation steps natively. The
+//! PJRT binding sits behind the `xla` cargo feature (see `vendor/xla`);
+//! without it the crate still builds and tests — the runtime is stubbed,
+//! artifact-dependent paths skip, and population-scale scheduling uses
+//! the surrogate trainer.
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index,
 //! and `EXPERIMENTS.md` for paper-vs-measured numbers.
@@ -29,6 +38,7 @@ pub mod error;
 pub mod metrics;
 pub mod proto;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod sim;
 pub mod strategy;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //! * `sim`       — run a federated experiment in the device-farm simulator
+//! * `sched`     — population-scale cost-aware scheduling experiments
 //! * `server`    — start a Flower TCP server (cloud side of the paper)
 //! * `client`    — start one on-device TCP client
 //! * `devices`   — print the device inventory (paper Table 1)
@@ -16,13 +17,14 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use flowrs::client::{app, BaseModel, DeviceTrainer};
-use flowrs::config::{AggBackend, ExperimentConfig, StrategyConfig};
+use flowrs::config::{AggBackend, ExperimentConfig, PolicyConfig, ScheduleConfig, StrategyConfig};
 use flowrs::data::{Partitioner, SyntheticSpec};
 use flowrs::device::profiles;
 use flowrs::error::{Error, Result};
 use flowrs::metrics::Table;
 use flowrs::proto::{ClientInfo, Parameters};
 use flowrs::runtime::Runtime;
+use flowrs::sched::availability::ChurnSpec;
 use flowrs::server::{serve_registrations, ClientManager, Server, ServerConfig};
 use flowrs::sim;
 use flowrs::strategy::fedavg::TrainingPlan;
@@ -102,6 +104,7 @@ fn run(argv: &[String]) -> Result<()> {
     let args = Args::parse(&argv[1..])?;
     match cmd {
         "sim" => cmd_sim(&args),
+        "sched" => cmd_sched(&args),
         "server" => cmd_server(&args),
         "client" => cmd_client(&args),
         "devices" => cmd_devices(),
@@ -129,6 +132,13 @@ fn print_usage() {
                       --strategy fedavg|fedprox:MU|cutoff:DEV=TAU_S[,..]|fedavgm:BETA|qfedavg:Q\n\
                       --quantize f16|off --dropout P --agg rust|pjrt\n\
                       --t-step-ref <s> --out <csv> --artifacts <dir>\n\
+           sched      run a cost-aware population-scale scheduling experiment\n\
+                      --config <file.json> | --population N --cohort K --rounds R\n\
+                      --policy uniform|deadline|utility[:ALPHA[:EXPLORE]]\n\
+                      --compare p1,p2,.. --deadline TAU_S --churn ON_S,OFF_S\n\
+                      --epochs E --steps-per-epoch S --model-bytes B --seed N\n\
+                      --target-accuracy A --t-step-ref <s> --out <csv>\n\
+                      (real PJRT cohort numerics with artifacts, surrogate otherwise)\n\
            server     start a Flower TCP server\n\
                       --addr 127.0.0.1:9092 --model cifar_cnn --rounds 10 --epochs 1\n\
                       --lr 0.05 --quorum 2 --artifacts <dir>\n\
@@ -273,6 +283,179 @@ fn cmd_sim(args: &Args) -> Result<()> {
         flowrs::metrics::write_report(&PathBuf::from(out), &report.history.to_csv())?;
         log::info(&format!("wrote per-round CSV to {out}"));
     }
+    Ok(())
+}
+
+fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        ScheduleConfig::from_json_file(&PathBuf::from(path))?
+    } else {
+        ScheduleConfig::default()
+    };
+    if let Some(v) = args.get("name") {
+        cfg.name = v.into();
+    }
+    if let Some(v) = args.get_parsed("population")? {
+        cfg.population = v;
+    }
+    if let Some(v) = args.get_parsed("cohort")? {
+        cfg.cohort_size = v;
+    }
+    if let Some(v) = args.get_parsed("rounds")? {
+        cfg.rounds = v;
+    }
+    if let Some(v) = args.get_parsed("epochs")? {
+        cfg.epochs = v;
+    }
+    if let Some(v) = args.get_parsed("steps-per-epoch")? {
+        cfg.steps_per_epoch = v;
+    }
+    if let Some(v) = args.get_parsed("model-bytes")? {
+        cfg.model_bytes = v;
+    }
+    if let Some(v) = args.get_parsed("deadline")? {
+        cfg.deadline_s = Some(v);
+    }
+    if let Some(v) = args.get_parsed("seed")? {
+        cfg.seed = v;
+    }
+    if let Some(v) = args.get_parsed("target-accuracy")? {
+        cfg.target_accuracy = Some(v);
+    }
+    if let Some(v) = args.get_parsed("t-step-ref")? {
+        cfg.cost.t_step_ref_s = v;
+    }
+    if let Some(v) = args.get("policy") {
+        cfg.policy = PolicyConfig::parse(v)?;
+    }
+    if let Some(v) = args.get("churn") {
+        let (on, off) = v.split_once(',').ok_or_else(|| {
+            Error::Config(format!("churn wants ON_S,OFF_S, got {v:?}"))
+        })?;
+        cfg.churn = Some(ChurnSpec {
+            mean_on_s: on
+                .parse()
+                .map_err(|_| Error::Config(format!("bad churn on-time {on:?}")))?,
+            mean_off_s: off
+                .parse()
+                .map_err(|_| Error::Config(format!("bad churn off-time {off:?}")))?,
+        });
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_sched(args: &Args) -> Result<()> {
+    if args.has_help() {
+        print_usage();
+        return Ok(());
+    }
+    let cfg = sched_config_from_args(args)?;
+    // Real cohort numerics need the AOT artifacts; everything else about
+    // the engine (costs, availability, policies) is artifact-free.
+    let runtime = match Runtime::load(&artifact_dir(args)) {
+        Ok(rt) => {
+            log::info("artifacts found: selected cohorts train real PJRT numerics");
+            Some(rt)
+        }
+        Err(e) => {
+            log::info(&format!("no PJRT runtime ({e}); using the surrogate trainer"));
+            None
+        }
+    };
+    let policies: Vec<PolicyConfig> = match args.get("compare") {
+        Some(list) => list
+            .split(',')
+            .map(PolicyConfig::parse)
+            .collect::<Result<_>>()?,
+        None => vec![cfg.policy.clone()],
+    };
+    // Validate every compared variant up front: a bad entry must fail
+    // before the first (possibly expensive) run, not mid-loop after
+    // earlier results would be discarded.
+    let mut run_cfgs = Vec::with_capacity(policies.len());
+    let mut labels = std::collections::BTreeSet::new();
+    for policy in policies {
+        let mut run_cfg = cfg.clone();
+        run_cfg.policy = policy;
+        run_cfg.validate()?;
+        if !labels.insert(run_cfg.policy.label()) {
+            return Err(Error::Config(format!(
+                "duplicate policy {:?} in --compare (each run would overwrite \
+                 the previous CSV)",
+                run_cfg.policy.label()
+            )));
+        }
+        run_cfgs.push(run_cfg);
+    }
+    let single = run_cfgs.len() == 1;
+    let target = cfg.target_accuracy.unwrap_or(0.5);
+    let t2a_hdr = format!("t2a@{target} (min)");
+    let mut table = Table::new(
+        &format!(
+            "sched {:?}: {} virtual devices, cohort {}, {} rounds{}",
+            cfg.name,
+            cfg.population,
+            cfg.cohort_size,
+            cfg.rounds,
+            match cfg.deadline_s {
+                Some(t) => format!(", tau={t}s"),
+                None => String::new(),
+            },
+        ),
+        &[
+            "policy",
+            "final acc",
+            t2a_hdr.as_str(),
+            "time (min)",
+            "energy (kJ)",
+            "wasted (kJ)",
+            "hit-rate",
+            "dropped",
+        ],
+    );
+    for run_cfg in run_cfgs {
+        // Variant-distinguishing label: `--compare utility:1,utility:3`
+        // must not collapse into one table row / CSV path.
+        let label = run_cfg.policy.label();
+        let report = sim::population::run_population(&run_cfg, runtime.as_ref())?;
+        table.row(vec![
+            label.clone(),
+            format!("{:.4}", report.final_accuracy()),
+            match report.time_to_accuracy_s(target) {
+                Some(t) => format!("{:.2}", t / 60.0),
+                None => "-".into(),
+            },
+            format!("{:.2}", report.total_time_s() / 60.0),
+            format!("{:.2}", report.total_energy_j() / 1e3),
+            format!("{:.2}", report.wasted_energy_j() / 1e3),
+            format!("{:.3}", report.hit_rate()),
+            report.dropped_total().to_string(),
+        ]);
+        if let Some(out) = args.get("out") {
+            let path = if single {
+                out.to_string()
+            } else {
+                // filename-safe label (no ':'), inserted before the
+                // extension so the files still end in .csv
+                let safe = label.replace(':', "-");
+                let p = std::path::Path::new(out);
+                match (
+                    p.file_stem().and_then(|s| s.to_str()),
+                    p.extension().and_then(|e| e.to_str()),
+                ) {
+                    (Some(stem), Some(ext)) => p
+                        .with_file_name(format!("{stem}-{safe}.{ext}"))
+                        .display()
+                        .to_string(),
+                    _ => format!("{out}-{safe}"),
+                }
+            };
+            flowrs::metrics::write_report(&PathBuf::from(&path), &report.to_csv())?;
+            log::info(&format!("wrote per-round CSV to {path}"));
+        }
+    }
+    print!("{}", table.render());
     Ok(())
 }
 

@@ -13,7 +13,6 @@
 
 pub mod manifest;
 
-use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -21,7 +20,9 @@ use std::sync::{mpsc, Arc};
 pub use manifest::{default_artifact_dir, ArtifactEntry, IoSpec, Manifest, ModelEntry};
 
 use crate::error::{Error, Result};
-use crate::proto::{Tensor, TensorData};
+use crate::proto::Tensor;
+
+use exec::executor_thread;
 
 struct Job {
     artifact: String,
@@ -309,101 +310,134 @@ fn scalar_out(t: Option<Tensor>, what: &str) -> Result<f32> {
 }
 
 // ---------------------------------------------------------------------------
-// Executor thread
+// Executor thread — real PJRT behind the `xla` feature, a stub otherwise
+// (manifest loading and the typed helpers above work either way; without
+// the feature every execution request fails with a clear message, and
+// the artifact-gated tests/benches skip at runtime as before)
 // ---------------------------------------------------------------------------
 
-fn executor_thread(
-    manifest: Arc<Manifest>,
-    rx: mpsc::Receiver<Job>,
-    ready: mpsc::Sender<Result<()>>,
-    stats: Arc<RuntimeStats>,
-) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
-            let _ = ready.send(Ok(()));
-            c
-        }
-        Err(e) => {
-            let _ = ready.send(Err(Error::Runtime(format!("PjRtClient::cpu: {e}"))));
-            return;
-        }
-    };
-    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+#[cfg(feature = "xla")]
+mod exec {
+    use super::*;
+    use crate::proto::TensorData;
+    use std::collections::HashMap;
 
-    while let Ok(job) = rx.recv() {
-        let result = run_job(&manifest, &client, &mut executables, &stats, &job);
-        let _ = job.resp.send(result);
+    pub(super) fn executor_thread(
+        manifest: Arc<Manifest>,
+        rx: mpsc::Receiver<Job>,
+        ready: mpsc::Sender<Result<()>>,
+        stats: Arc<RuntimeStats>,
+    ) {
+        let client = match xla::PjRtClient::cpu() {
+            Ok(c) => {
+                let _ = ready.send(Ok(()));
+                c
+            }
+            Err(e) => {
+                let _ = ready.send(Err(Error::Runtime(format!("PjRtClient::cpu: {e}"))));
+                return;
+            }
+        };
+        let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+        while let Ok(job) = rx.recv() {
+            let result = run_job(&manifest, &client, &mut executables, &stats, &job);
+            let _ = job.resp.send(result);
+        }
+    }
+
+    fn run_job(
+        manifest: &Manifest,
+        client: &xla::PjRtClient,
+        executables: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+        stats: &RuntimeStats,
+        job: &Job,
+    ) -> Result<Vec<Tensor>> {
+        if !executables.contains_key(&job.artifact) {
+            let path = manifest.artifact_path(&job.artifact)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str()
+                    .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            stats.compilations.fetch_add(1, Ordering::Relaxed);
+            executables.insert(job.artifact.clone(), exe);
+        }
+        let exe = executables.get(&job.artifact).expect("just inserted");
+
+        // Perf/leak note (EXPERIMENTS.md §Perf): `execute::<Literal>` goes
+        // through the C shim's `execute()`, which `.release()`s every
+        // host-transferred input buffer and never frees it (~0.5 MB leaked per
+        // train step — the original table run OOMed at 36 GB). Building the
+        // input buffers ourselves and calling `execute_b` keeps ownership on
+        // the Rust side, so inputs are freed on drop.
+        let buffers: Vec<xla::PjRtBuffer> = job
+            .inputs
+            .iter()
+            .map(|t| tensor_to_buffer(client, t))
+            .collect::<Result<_>>()?;
+        let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        stats.executions.fetch_add(1, Ordering::Relaxed);
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| Error::Runtime(format!("expected tuple output: {e}")))?;
+        parts.into_iter().map(literal_to_tensor).collect()
+    }
+
+    fn tensor_to_buffer(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        // Host-to-device transfer with Rust-side ownership (freed on drop).
+        match &t.data {
+            TensorData::F32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
+            TensorData::I32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
+            TensorData::F16(_) => {
+                // f16 is a wire-compression format only; artifacts take f32.
+                Err(Error::Runtime(
+                    "f16 tensors must be dequantized before execution".into(),
+                ))
+            }
+        }
+    }
+
+    fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.ty() {
+            xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            other => {
+                return Err(Error::Runtime(format!(
+                    "unsupported output element type {other:?}"
+                )))
+            }
+        };
+        Ok(Tensor { shape: dims, data })
     }
 }
 
-fn run_job(
-    manifest: &Manifest,
-    client: &xla::PjRtClient,
-    executables: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-    stats: &RuntimeStats,
-    job: &Job,
-) -> Result<Vec<Tensor>> {
-    if !executables.contains_key(&job.artifact) {
-        let path = manifest.artifact_path(&job.artifact)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str()
-                .ok_or_else(|| Error::Artifact("non-utf8 artifact path".into()))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = client.compile(&comp)?;
-        stats.compilations.fetch_add(1, Ordering::Relaxed);
-        executables.insert(job.artifact.clone(), exe);
+#[cfg(not(feature = "xla"))]
+mod exec {
+    use super::*;
+
+    pub(super) fn executor_thread(
+        _manifest: Arc<Manifest>,
+        rx: mpsc::Receiver<Job>,
+        ready: mpsc::Sender<Result<()>>,
+        _stats: Arc<RuntimeStats>,
+    ) {
+        // Fail the load handshake (mirroring the real path's
+        // PjRtClient::cpu failure) so callers' skip/surrogate fallbacks
+        // engage up front instead of discovering a dead runtime
+        // mid-experiment.
+        let _ = ready.send(Err(Error::Runtime(
+            "flowrs was built without the `xla` feature: the PJRT runtime is \
+             stubbed and cannot execute artifacts"
+                .into(),
+        )));
+        drop(rx);
     }
-    let exe = executables.get(&job.artifact).expect("just inserted");
-
-    // Perf/leak note (EXPERIMENTS.md §Perf): `execute::<Literal>` goes
-    // through the C shim's `execute()`, which `.release()`s every
-    // host-transferred input buffer and never frees it (~0.5 MB leaked per
-    // train step — the original table run OOMed at 36 GB). Building the
-    // input buffers ourselves and calling `execute_b` keeps ownership on
-    // the Rust side, so inputs are freed on drop.
-    let buffers: Vec<xla::PjRtBuffer> = job
-        .inputs
-        .iter()
-        .map(|t| tensor_to_buffer(client, t))
-        .collect::<Result<_>>()?;
-    let result = exe.execute_b::<xla::PjRtBuffer>(&buffers)?;
-    let tuple = result[0][0].to_literal_sync()?;
-    stats.executions.fetch_add(1, Ordering::Relaxed);
-    // aot.py lowers with return_tuple=True: output is always a tuple.
-    let parts = tuple
-        .to_tuple()
-        .map_err(|e| Error::Runtime(format!("expected tuple output: {e}")))?;
-    parts.into_iter().map(literal_to_tensor).collect()
-}
-
-fn tensor_to_buffer(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
-    // Host-to-device transfer with Rust-side ownership (freed on drop).
-    match &t.data {
-        TensorData::F32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
-        TensorData::I32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
-        TensorData::F16(_) => {
-            // f16 is a wire-compression format only; artifacts take f32.
-            Err(Error::Runtime(
-                "f16 tensors must be dequantized before execution".into(),
-            ))
-        }
-    }
-}
-
-fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
-    let shape = lit.array_shape()?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data = match shape.ty() {
-        xla::ElementType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
-        xla::ElementType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
-        other => {
-            return Err(Error::Runtime(format!(
-                "unsupported output element type {other:?}"
-            )))
-        }
-    };
-    Ok(Tensor { shape: dims, data })
 }
 
 #[cfg(test)]
@@ -416,7 +450,16 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return None;
         }
-        Some(Runtime::load(&dir).expect("runtime loads"))
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            // Stubbed-runtime builds (no `xla` feature) skip; with the
+            // real binding, a load failure is a genuine regression.
+            Err(e) if !cfg!(feature = "xla") => {
+                eprintln!("skipping: runtime unavailable ({e})");
+                None
+            }
+            Err(e) => panic!("runtime failed to load with artifacts present: {e}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,218 @@
+//! Device availability: per-device on/off churn.
+//!
+//! Real federated populations are never fully online — phones charge at
+//! night, lose signal, leave Wi-Fi. The engine draws cohorts from
+//! *available* devices only, using a deterministic per-device on/off
+//! cycle synthesized from a seeded RNG: each device gets its own dwell
+//! times (around the configured means) and phase, so at any virtual time
+//! roughly `mean_on / (mean_on + mean_off)` of the population is online,
+//! with membership constantly rotating.
+//!
+//! The cycle form keeps availability queries O(1) at million-device
+//! scale; [`ChurnModel::trace`] materializes the same schedule as an
+//! explicit toggle-time trace when a test or an export needs one.
+
+use crate::util::rng::Rng;
+
+/// Churn parameters: mean online / offline dwell times in seconds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnSpec {
+    pub mean_on_s: f64,
+    pub mean_off_s: f64,
+}
+
+/// One device's deterministic on/off cycle: online during the first
+/// `on_s` seconds of every `on_s + off_s` period, shifted by `phase_s`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Cycle {
+    pub on_s: f64,
+    pub off_s: f64,
+    pub phase_s: f64,
+}
+
+impl Cycle {
+    /// A device that never goes offline.
+    pub fn always_on() -> Self {
+        Cycle { on_s: 1.0, off_s: 0.0, phase_s: 0.0 }
+    }
+
+    /// Is the device online at virtual time `t_s` (t ≥ 0)?
+    pub fn is_on(&self, t_s: f64) -> bool {
+        (t_s + self.phase_s) % (self.on_s + self.off_s) < self.on_s
+    }
+}
+
+/// Population-wide churn: every device's cycle derives deterministically
+/// from (seed, device index).
+#[derive(Debug, Clone)]
+pub struct ChurnModel {
+    seed: u64,
+    spec: ChurnSpec,
+}
+
+impl ChurnModel {
+    pub fn new(spec: ChurnSpec, seed: u64) -> Self {
+        ChurnModel { seed, spec }
+    }
+
+    /// The device's on/off cycle. Dwell times are drawn uniformly in
+    /// `[0.5, 1.5) ×` the configured mean; the phase is uniform over the
+    /// period so devices don't toggle in lockstep.
+    pub fn cycle(&self, device: u64) -> Cycle {
+        let mut rng = Rng::seed_from(self.seed).derive(device);
+        let on_s = self.spec.mean_on_s * (0.5 + rng.f64());
+        let off_s = self.spec.mean_off_s * (0.5 + rng.f64());
+        let phase_s = rng.f64() * (on_s + off_s);
+        Cycle { on_s, off_s, phase_s }
+    }
+
+    pub fn is_available(&self, device: u64, t_s: f64) -> bool {
+        self.cycle(device).is_on(t_s)
+    }
+
+    /// Materialize the device's schedule over `[0, horizon_s)` as an
+    /// explicit trace (state at t=0 plus sorted toggle times).
+    pub fn trace(&self, device: u64, horizon_s: f64) -> AvailabilityTrace {
+        let c = self.cycle(device);
+        if c.off_s <= 0.0 {
+            // mean_off_s = 0 is valid config: the device never drops, and
+            // emitting zero-length off dwells would break the trace's
+            // strictly-increasing toggle contract.
+            return AvailabilityTrace { initially_on: true, toggles_s: Vec::new() };
+        }
+        let period = c.on_s + c.off_s;
+        let pos = c.phase_s % period; // position inside the cycle at t=0
+        let initially_on = pos < c.on_s;
+        let mut toggles_s = Vec::new();
+        // time of the first toggle after t=0, then alternate dwell times
+        let mut t = if initially_on { c.on_s - pos } else { period - pos };
+        let mut on = initially_on;
+        while t < horizon_s {
+            toggles_s.push(t);
+            on = !on;
+            t += if on { c.on_s } else { c.off_s };
+        }
+        AvailabilityTrace { initially_on, toggles_s }
+    }
+}
+
+/// Explicit per-device availability trace: initial state + toggle times.
+#[derive(Debug, Clone, Default)]
+pub struct AvailabilityTrace {
+    pub initially_on: bool,
+    /// Strictly increasing times (s) at which the device flips state.
+    pub toggles_s: Vec<f64>,
+}
+
+impl AvailabilityTrace {
+    pub fn is_on(&self, t_s: f64) -> bool {
+        let flips = self.toggles_s.partition_point(|&x| x <= t_s);
+        self.initially_on ^ (flips % 2 == 1)
+    }
+}
+
+/// The population's availability model.
+#[derive(Debug, Clone)]
+pub enum Availability {
+    /// Everyone always online (the paper's testbed setting).
+    AlwaysOn,
+    Churn(ChurnModel),
+}
+
+impl Availability {
+    pub fn from_spec(spec: Option<&ChurnSpec>, seed: u64) -> Self {
+        match spec {
+            Some(s) => Availability::Churn(ChurnModel::new(s.clone(), seed)),
+            None => Availability::AlwaysOn,
+        }
+    }
+
+    pub fn cycle(&self, device: u64) -> Cycle {
+        match self {
+            Availability::AlwaysOn => Cycle::always_on(),
+            Availability::Churn(m) => m.cycle(device),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ChurnModel {
+        ChurnModel::new(ChurnSpec { mean_on_s: 600.0, mean_off_s: 300.0 }, 42)
+    }
+
+    #[test]
+    fn always_on_is_always_on() {
+        let c = Cycle::always_on();
+        for t in [0.0, 1.0, 1e6, 12345.678] {
+            assert!(c.is_on(t));
+        }
+    }
+
+    #[test]
+    fn cycle_alternates_with_expected_duty() {
+        let m = model();
+        // duty ≈ 600/900 on average; count over many devices at one instant
+        let online = (0..10_000).filter(|&d| m.is_available(d, 5_000.0)).count();
+        assert!(
+            (5_500..7_800).contains(&online),
+            "online={online}, expected ≈ 2/3 of 10k"
+        );
+        // every device both appears and disappears over a long horizon
+        for d in 0..32 {
+            let c = m.cycle(d);
+            let states: Vec<bool> = (0..200).map(|i| c.is_on(i as f64 * 17.0)).collect();
+            assert!(states.iter().any(|&s| s), "device {d} never on");
+            assert!(states.iter().any(|&s| !s), "device {d} never off");
+        }
+    }
+
+    #[test]
+    fn trace_agrees_with_cycle_queries() {
+        let m = model();
+        for d in 0..16 {
+            let trace = m.trace(d, 10_000.0);
+            for i in 0..500 {
+                let t = i as f64 * 19.97;
+                assert_eq!(
+                    trace.is_on(t),
+                    m.is_available(d, t),
+                    "device {d} diverges at t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn traces_are_deterministic_per_seed() {
+        let a = model().trace(3, 5_000.0);
+        let b = model().trace(3, 5_000.0);
+        assert_eq!(a.initially_on, b.initially_on);
+        assert_eq!(a.toggles_s, b.toggles_s);
+        let other = ChurnModel::new(ChurnSpec { mean_on_s: 600.0, mean_off_s: 300.0 }, 43)
+            .trace(3, 5_000.0);
+        assert_ne!(a.toggles_s, other.toggles_s);
+    }
+
+    #[test]
+    fn trace_toggles_are_increasing() {
+        let trace = model().trace(9, 50_000.0);
+        assert!(trace.toggles_s.windows(2).all(|w| w[0] < w[1]));
+        assert!(!trace.toggles_s.is_empty());
+    }
+
+    #[test]
+    fn zero_off_dwell_means_always_on() {
+        // mean_off_s = 0 is valid config; the trace must not emit
+        // zero-length off dwells (duplicate toggle times).
+        let m = ChurnModel::new(ChurnSpec { mean_on_s: 600.0, mean_off_s: 0.0 }, 42);
+        for d in 0..8 {
+            let trace = m.trace(d, 50_000.0);
+            assert!(trace.initially_on);
+            assert!(trace.toggles_s.is_empty());
+            assert!(m.is_available(d, 12_345.6));
+        }
+    }
+}

@@ -1,0 +1,707 @@
+//! The event-driven population engine: virtual federations of 100k–1M
+//! devices, scheduled in virtual time.
+//!
+//! The in-proc simulator ([`crate::sim::run_experiment`]) runs one OS
+//! thread per client and tops out at tens of devices. This engine flips
+//! the representation: the *population* is a flat array of cost profiles
+//! and availability cycles, a round is a binary-heap event queue over
+//! modeled completion times, and only the selected cohort trains
+//! numerics — either for real through a [`CohortTrainer`] backed by the
+//! PJRT runtime ([`crate::sim::population`]) or through the closed-form
+//! [`SurrogateTrainer`]. A 100k-device round is a few milliseconds of
+//! wall clock; a 1M-device experiment completes in seconds.
+//!
+//! Per round:
+//! 1. scan availability at the current virtual time,
+//! 2. ask the configured [`SelectionPolicy`] for a cohort,
+//! 3. push one completion event per selected client (modeled download +
+//!    compute + upload time) and drain the heap in virtual-time order:
+//!    clients past the τ deadline — or offline by their completion time
+//!    (mid-round churn) — are *dropped* and their energy wasted,
+//! 4. train numerics for the clients that reported, advance the clock to
+//!    `min(τ, slowest completion)` + server overhead.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::config::ScheduleConfig;
+use crate::device::{profiles, DeviceProfile};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+use super::availability::{Availability, Cycle};
+use super::policy::{Candidate, SelectionContext, SelectionPolicy};
+
+// ---------------------------------------------------------------------------
+// Population
+// ---------------------------------------------------------------------------
+
+/// One virtual device: a cost profile, an availability cycle, and the
+/// scheduler-visible training history.
+#[derive(Debug, Clone)]
+pub struct VirtualDevice {
+    pub device: &'static DeviceProfile,
+    pub num_examples: u64,
+    pub cycle: Cycle,
+    /// Data-difficulty skew in [0, 1): gives utility policies per-client
+    /// signal under the surrogate trainer.
+    pub skew: f64,
+    pub last_loss: Option<f64>,
+    pub last_selected_round: Option<u64>,
+}
+
+/// The whole virtual federation.
+#[derive(Debug, Clone, Default)]
+pub struct Population {
+    pub devices: Vec<VirtualDevice>,
+}
+
+/// The default population mix when the config doesn't pin one: phones
+/// dominate, with tablet / embedded / SBC tails (paper Table 1 hardware).
+pub fn default_device_mix() -> Vec<(&'static DeviceProfile, f64)> {
+    [
+        ("pixel4", 0.20),
+        ("pixel3", 0.20),
+        ("pixel2", 0.15),
+        ("galaxy_tab_s6", 0.10),
+        ("galaxy_tab_s4", 0.10),
+        ("jetson_tx2_gpu", 0.05),
+        ("jetson_tx2_cpu", 0.05),
+        ("raspberry_pi4", 0.15),
+    ]
+    .iter()
+    .map(|&(name, w)| (profiles::by_name(name).expect("inventory is static"), w))
+    .collect()
+}
+
+impl Population {
+    /// Synthesize a population from the config: profiles drawn from the
+    /// device mix, data sizes and availability cycles from the seed.
+    pub fn synthesize(cfg: &ScheduleConfig) -> Result<Population> {
+        let mix: Vec<(&'static DeviceProfile, f64)> = if cfg.device_mix.is_empty() {
+            default_device_mix()
+        } else {
+            cfg.device_mix
+                .iter()
+                .map(|(name, w)| Ok((profiles::by_name(name)?, *w)))
+                .collect::<Result<_>>()?
+        };
+        let total_w: f64 = mix.iter().map(|&(_, w)| w).sum();
+        if total_w <= 0.0 || total_w.is_nan() {
+            return Err(Error::Config("device mix weights must sum > 0".into()));
+        }
+        let availability = Availability::from_spec(cfg.churn.as_ref(), cfg.seed ^ 0xC4A2);
+        let mut rng = Rng::seed_from(cfg.seed ^ 0x0F0B);
+        let mut devices = Vec::with_capacity(cfg.population);
+        for i in 0..cfg.population {
+            let mut r = rng.f64() * total_w;
+            let mut profile = mix[mix.len() - 1].0;
+            for &(p, w) in &mix {
+                if r < w {
+                    profile = p;
+                    break;
+                }
+                r -= w;
+            }
+            devices.push(VirtualDevice {
+                device: profile,
+                num_examples: 64 + rng.below(448) as u64,
+                cycle: availability.cycle(i as u64),
+                skew: rng.f64(),
+                last_loss: None,
+                last_selected_round: None,
+            });
+        }
+        Ok(Population { devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cohort numerics
+// ---------------------------------------------------------------------------
+
+/// Numerics backend for the selected cohort. The engine models *costs*;
+/// this trait supplies the *learning*: real PJRT training
+/// ([`crate::sim::population::RuntimeCohortTrainer`]) or the closed-form
+/// surrogate below.
+pub trait CohortTrainer {
+    /// Train one round over `cohort` (indices into `pop.devices`, only
+    /// the clients that actually reported). Returns per-client train
+    /// losses aligned with `cohort`, plus the global (eval_loss,
+    /// accuracy) after aggregation.
+    fn train_round(
+        &mut self,
+        round: u64,
+        pop: &Population,
+        cohort: &[usize],
+        steps_per_client: u64,
+    ) -> Result<(Vec<f64>, f64, f64)>;
+}
+
+/// Closed-form training stand-in for population-scale runs without AOT
+/// artifacts: global accuracy follows a saturating curve in cumulative
+/// completed cohort steps, and per-client loss adds a device-specific
+/// skew so utility-based policies have signal. Deterministic; accuracy
+/// is monotone in useful work, which is exactly the property the
+/// scheduler experiments measure (time-to-accuracy per policy).
+#[derive(Debug, Clone)]
+pub struct SurrogateTrainer {
+    progress_steps: f64,
+    /// Accuracy ceiling (the paper's CIFAR workload plateaus ≈ 0.68).
+    pub ceiling: f64,
+    /// Cohort-steps at which accuracy reaches half the ceiling.
+    pub half_steps: f64,
+}
+
+impl Default for SurrogateTrainer {
+    fn default() -> Self {
+        SurrogateTrainer { progress_steps: 0.0, ceiling: 0.68, half_steps: 4_000.0 }
+    }
+}
+
+impl CohortTrainer for SurrogateTrainer {
+    fn train_round(
+        &mut self,
+        _round: u64,
+        pop: &Population,
+        cohort: &[usize],
+        steps_per_client: u64,
+    ) -> Result<(Vec<f64>, f64, f64)> {
+        self.progress_steps += (cohort.len() as u64 * steps_per_client) as f64;
+        let acc = if self.progress_steps > 0.0 {
+            self.ceiling * self.progress_steps / (self.progress_steps + self.half_steps)
+        } else {
+            0.0
+        };
+        let eval_loss = 2.3 * (1.0 - acc / self.ceiling) + 0.05;
+        let losses = cohort
+            .iter()
+            .map(|&i| eval_loss * (0.75 + 0.5 * pop.devices[i].skew))
+            .collect();
+        Ok((losses, eval_loss, acc))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Records
+// ---------------------------------------------------------------------------
+
+/// Everything the engine learned in one round.
+#[derive(Debug, Clone, Default)]
+pub struct PopulationRound {
+    pub round: u64,
+    /// Devices online at round start.
+    pub available: usize,
+    pub selected: usize,
+    /// Clients whose result arrived in time (and still online).
+    pub completed: usize,
+    pub dropped_deadline: usize,
+    pub dropped_churn: usize,
+    pub train_loss: f64,
+    pub eval_loss: f64,
+    pub accuracy: f64,
+    /// Useful train steps (completed clients only).
+    pub steps: u64,
+    pub round_time_s: f64,
+    pub cum_time_s: f64,
+    pub round_energy_j: f64,
+    /// Energy burned by dropped clients (subset of `round_energy_j`).
+    pub wasted_energy_j: f64,
+}
+
+/// A full population-scale experiment.
+#[derive(Debug, Clone)]
+pub struct PopulationReport {
+    pub name: String,
+    pub policy: String,
+    pub population: usize,
+    pub rounds: Vec<PopulationRound>,
+}
+
+impl PopulationReport {
+    pub fn final_accuracy(&self) -> f64 {
+        self.rounds.last().map(|r| r.accuracy).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_time_s(&self) -> f64 {
+        self.rounds.last().map(|r| r.cum_time_s).unwrap_or(0.0)
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.rounds.iter().map(|r| r.round_energy_j).sum()
+    }
+
+    pub fn wasted_energy_j(&self) -> f64 {
+        self.rounds.iter().map(|r| r.wasted_energy_j).sum()
+    }
+
+    pub fn selected_total(&self) -> usize {
+        self.rounds.iter().map(|r| r.selected).sum()
+    }
+
+    pub fn completed_total(&self) -> usize {
+        self.rounds.iter().map(|r| r.completed).sum()
+    }
+
+    pub fn dropped_total(&self) -> usize {
+        self.selected_total() - self.completed_total()
+    }
+
+    /// Fraction of selected clients whose results were usable.
+    pub fn hit_rate(&self) -> f64 {
+        let selected = self.selected_total();
+        if selected == 0 {
+            return 1.0;
+        }
+        self.completed_total() as f64 / selected as f64
+    }
+
+    /// Virtual time at which accuracy first reached `target`.
+    pub fn time_to_accuracy_s(&self, target: f64) -> Option<f64> {
+        self.rounds
+            .iter()
+            .find(|r| r.accuracy >= target)
+            .map(|r| r.cum_time_s)
+    }
+
+    /// CSV export (header + one row per round).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,available,selected,completed,dropped_deadline,dropped_churn,\
+             train_loss,eval_loss,accuracy,steps,round_time_s,cum_time_s,\
+             round_energy_j,wasted_energy_j\n",
+        );
+        for r in &self.rounds {
+            out.push_str(&format!(
+                "{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.3},{:.3},{:.3}\n",
+                r.round,
+                r.available,
+                r.selected,
+                r.completed,
+                r.dropped_deadline,
+                r.dropped_churn,
+                r.train_loss,
+                r.eval_loss,
+                r.accuracy,
+                r.steps,
+                r.round_time_s,
+                r.cum_time_s,
+                r.round_energy_j,
+                r.wasted_energy_j,
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Engine
+// ---------------------------------------------------------------------------
+
+/// A client-completion event on the virtual-time queue.
+#[derive(Debug, Clone, Copy)]
+struct Completion {
+    finish_s: f64,
+    device_idx: usize,
+    energy_j: f64,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Completion {}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.finish_s
+            .total_cmp(&other.finish_s)
+            .then(self.device_idx.cmp(&other.device_idx))
+    }
+}
+
+/// The population-scale scheduler engine.
+pub struct Engine<T: CohortTrainer> {
+    cfg: ScheduleConfig,
+    policy: Box<dyn SelectionPolicy>,
+    trainer: T,
+    pop: Population,
+    clock_s: f64,
+}
+
+impl<T: CohortTrainer> Engine<T> {
+    pub fn new(cfg: &ScheduleConfig, trainer: T) -> Result<Self> {
+        cfg.validate()?;
+        let policy = cfg.policy.build(cfg.seed ^ 0x5E1);
+        let pop = Population::synthesize(cfg)?;
+        Ok(Engine { cfg: cfg.clone(), policy, trainer, pop, clock_s: 0.0 })
+    }
+
+    pub fn population(&self) -> &Population {
+        &self.pop
+    }
+
+    pub fn virtual_time_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Run the configured number of rounds (early-stopping on the target
+    /// accuracy, if set).
+    pub fn run(mut self) -> Result<PopulationReport> {
+        let mut rounds = Vec::new();
+        for round in 1..=self.cfg.rounds {
+            let rec = self.run_round(round)?;
+            let acc = rec.accuracy;
+            rounds.push(rec);
+            if let Some(target) = self.cfg.target_accuracy {
+                if acc >= target {
+                    break;
+                }
+            }
+        }
+        Ok(PopulationReport {
+            name: self.cfg.name.clone(),
+            policy: self.policy.name().to_string(),
+            population: self.cfg.population,
+            rounds,
+        })
+    }
+
+    /// Advance one round of virtual time. Public so benches can time a
+    /// single round; [`Engine::run`] is the normal entry point.
+    pub fn run_round(&mut self, round: u64) -> Result<PopulationRound> {
+        let entry = self.clock_s;
+        let steps = self.cfg.epochs.max(0) as u64 * self.cfg.steps_per_epoch;
+
+        // 1. availability scan. Under extreme churn an instant can have
+        // zero devices online; the server would simply wait, so the
+        // clock fast-forwards to the next arrival instead of failing
+        // (the dead air still counts toward this round's time).
+        let mut now = entry;
+        let mut avail: Vec<u32> = Vec::new();
+        let mut rescans = 0u32;
+        loop {
+            for (i, d) in self.pop.devices.iter().enumerate() {
+                if d.cycle.is_on(now) {
+                    avail.push(i as u32);
+                }
+            }
+            if !avail.is_empty() {
+                break;
+            }
+            rescans += 1;
+            if rescans > 1_000 {
+                return Err(Error::Protocol(format!(
+                    "round {round}: no devices ever available (t={now:.0}s)"
+                )));
+            }
+            let mut dt = f64::INFINITY;
+            for d in &self.pop.devices {
+                let period = d.cycle.on_s + d.cycle.off_s;
+                let pos = (now + d.cycle.phase_s) % period;
+                // every device is offline here, i.e. pos >= on_s
+                dt = dt.min(period - pos);
+            }
+            if !dt.is_finite() {
+                return Err(Error::Protocol(format!(
+                    "round {round}: no devices ever available (t={now:.0}s)"
+                )));
+            }
+            // epsilon guards float-boundary stalls (pos == period)
+            now += dt.max(1e-6);
+        }
+
+        // 2. cohort selection over available devices only
+        let candidates: Vec<Candidate> = avail
+            .iter()
+            .map(|&i| {
+                let d = &self.pop.devices[i as usize];
+                Candidate {
+                    device: d.device,
+                    num_examples: d.num_examples,
+                    last_loss: d.last_loss,
+                    rounds_since_selected: d
+                        .last_selected_round
+                        .map(|r| round.saturating_sub(r)),
+                }
+            })
+            .collect();
+        let ctx = SelectionContext {
+            round,
+            cost: &self.cfg.cost,
+            steps_per_round: steps,
+            model_bytes: self.cfg.model_bytes,
+            target_cohort: self.cfg.cohort_size,
+            deadline_s: self.cfg.deadline_s,
+        };
+        let picked = self.policy.select(&ctx, &candidates);
+        let cohort: Vec<usize> = picked.iter().map(|&j| avail[j] as usize).collect();
+        if cohort.is_empty() {
+            return Err(Error::Protocol(format!(
+                "round {round}: policy selected no clients ({} available)",
+                avail.len()
+            )));
+        }
+
+        // 3. completion events over modeled costs, drained in time order
+        let mut heap: BinaryHeap<Reverse<Completion>> =
+            BinaryHeap::with_capacity(cohort.len());
+        for &i in &cohort {
+            let d = &self.pop.devices[i];
+            heap.push(Reverse(Completion {
+                finish_s: now + ctx.modeled_round_time_s(d.device),
+                device_idx: i,
+                energy_j: ctx.modeled_round_energy_j(d.device),
+            }));
+        }
+        let deadline_abs = self.cfg.deadline_s.map(|tau| now + tau);
+        let mut done: Vec<Completion> = Vec::new();
+        let mut dropped_deadline = 0usize;
+        let mut dropped_churn = 0usize;
+        let mut wasted_j = 0f64;
+        let mut slowest_all = now;
+        while let Some(Reverse(ev)) = heap.pop() {
+            slowest_all = slowest_all.max(ev.finish_s);
+            let d = &self.pop.devices[ev.device_idx];
+            // The device was online at dispatch (it came from the
+            // availability scan); its connection survives only until the
+            // current on-dwell ends.
+            let first_off_s = if d.cycle.off_s > 0.0 {
+                let period = d.cycle.on_s + d.cycle.off_s;
+                let pos = (now + d.cycle.phase_s) % period;
+                now + (d.cycle.on_s - pos)
+            } else {
+                f64::INFINITY
+            };
+            let round_cutoff = deadline_abs.unwrap_or(f64::INFINITY).min(ev.finish_s);
+            if first_off_s < round_cutoff {
+                // Went offline mid-round before it could report: its work
+                // never arrives; energy burned up to the disconnect.
+                dropped_churn += 1;
+                let frac = ((first_off_s - now) / (ev.finish_s - now)).clamp(0.0, 1.0);
+                wasted_j += ev.energy_j * frac;
+            } else if let Some(dl) = deadline_abs.filter(|&dl| ev.finish_s > dl) {
+                // Kept computing until τ, then the server moved on.
+                dropped_deadline += 1;
+                let frac = ((dl - now) / (ev.finish_s - now)).clamp(0.0, 1.0);
+                wasted_j += ev.energy_j * frac;
+            } else {
+                done.push(ev);
+            }
+        }
+
+        // 4. round closes at τ if anyone is missing, else at the slowest
+        // reporter (no deadline: the server waits out the stragglers)
+        let completed = done.len();
+        let slowest_ok = done.iter().fold(now, |a, e| a.max(e.finish_s));
+        let round_end = match deadline_abs {
+            Some(dl) if completed < cohort.len() => dl,
+            Some(_) => slowest_ok,
+            None => slowest_all,
+        };
+
+        let mut energy_j = wasted_j;
+        for ev in &done {
+            energy_j += ev.energy_j;
+            let wait = (round_end - ev.finish_s).max(0.0);
+            energy_j += self
+                .cfg
+                .cost
+                .idle(self.pop.devices[ev.device_idx].device, wait)
+                .energy_j;
+        }
+
+        // 5. numerics for the cohort that actually reported
+        let done_idx: Vec<usize> = done.iter().map(|e| e.device_idx).collect();
+        let (losses, eval_loss, accuracy) =
+            self.trainer.train_round(round, &self.pop, &done_idx, steps)?;
+        debug_assert_eq!(losses.len(), done_idx.len());
+        for (&i, &l) in done_idx.iter().zip(&losses) {
+            self.pop.devices[i].last_loss = Some(l);
+        }
+        for &i in &cohort {
+            self.pop.devices[i].last_selected_round = Some(round);
+        }
+        let train_loss = if losses.is_empty() {
+            f64::NAN
+        } else {
+            losses.iter().sum::<f64>() / losses.len() as f64
+        };
+
+        // measured from round entry so availability dead air is charged
+        let round_time_s = (round_end - entry) + self.cfg.cost.server_overhead_s;
+        self.clock_s = entry + round_time_s;
+
+        Ok(PopulationRound {
+            round,
+            available: avail.len(),
+            selected: cohort.len(),
+            completed,
+            dropped_deadline,
+            dropped_churn,
+            train_loss,
+            eval_loss,
+            accuracy,
+            steps: completed as u64 * steps,
+            round_time_s,
+            cum_time_s: self.clock_s,
+            round_energy_j: energy_j,
+            wasted_energy_j: wasted_j,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{PolicyConfig, ScheduleConfig};
+    use crate::sched::availability::ChurnSpec;
+
+    fn cfg() -> ScheduleConfig {
+        ScheduleConfig::default()
+            .named("engine-test")
+            .population(2_000)
+            .cohort(50)
+            .rounds(5)
+            .seed(7)
+    }
+
+    #[test]
+    fn rounds_advance_virtual_time_and_accuracy() {
+        let report = Engine::new(&cfg(), SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.rounds.len(), 5);
+        assert!(report.rounds.windows(2).all(|w| w[1].cum_time_s > w[0].cum_time_s));
+        assert!(report.rounds.windows(2).all(|w| w[1].accuracy >= w[0].accuracy));
+        assert!(report.final_accuracy() > 0.0);
+        // no deadline, no churn: everyone selected completes
+        assert!(report.rounds.iter().all(|r| r.completed == r.selected));
+        assert_eq!(report.dropped_total(), 0);
+        assert!(report.wasted_energy_j() == 0.0);
+        assert!(report.total_energy_j() > 0.0);
+    }
+
+    #[test]
+    fn deadline_drops_stragglers_and_wastes_energy() {
+        // 8 steps ≈ 11.8 s on TX2 GPU, ≈ 71 s on the RPi; τ = 30 s drops
+        // every RPi a uniform policy happens to pick.
+        let c = cfg()
+            .policy(PolicyConfig::Uniform)
+            .deadline(Some(30.0))
+            .rounds(6);
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert!(report.dropped_total() > 0, "no drops under a tight τ");
+        assert!(report.wasted_energy_j() > 0.0);
+        assert!(report.hit_rate() < 1.0);
+        // the round can never run past τ + server overhead (1 s default)
+        assert!(report.rounds.iter().all(|r| r.round_time_s <= 31.0 + 1e-9));
+        // accounting invariant
+        for r in &report.rounds {
+            assert_eq!(r.completed + r.dropped_deadline + r.dropped_churn, r.selected);
+        }
+    }
+
+    #[test]
+    fn churn_rotates_availability() {
+        let c = cfg()
+            .population(5_000)
+            .churn(Some(ChurnSpec { mean_on_s: 500.0, mean_off_s: 500.0 }))
+            .rounds(8);
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        for r in &report.rounds {
+            assert!(
+                r.available > 1_000 && r.available < 4_000,
+                "round {}: available={} of 5000",
+                r.round,
+                r.available
+            );
+        }
+    }
+
+    #[test]
+    fn dead_air_fast_forwards_instead_of_failing() {
+        // duty ≈ 0.1%: most scan instants have zero devices online, so
+        // the engine must jump the clock to the next arrival, not error.
+        let c = cfg()
+            .population(50)
+            .cohort(5)
+            .rounds(8)
+            .seed(11)
+            .churn(Some(ChurnSpec { mean_on_s: 10.0, mean_off_s: 10_000.0 }));
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.rounds.len(), 8);
+        assert!(report.rounds.iter().all(|r| r.available >= 1));
+        assert!(report
+            .rounds
+            .windows(2)
+            .all(|w| w[1].cum_time_s > w[0].cum_time_s));
+    }
+
+    #[test]
+    fn engine_runs_are_deterministic() {
+        let c = cfg().policy(PolicyConfig::UtilityBased { alpha: 2.0, explore_frac: 0.2 });
+        let a = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        let b = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn target_accuracy_stops_early() {
+        let mut c = cfg().rounds(50);
+        c.target_accuracy = Some(0.3);
+        let report = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        assert!(report.rounds.len() < 50);
+        assert!(report.final_accuracy() >= 0.3);
+    }
+
+    #[test]
+    fn population_synthesis_honors_mix_and_seed() {
+        let mut c = cfg().population(10_000);
+        c.device_mix = vec![("pixel4".into(), 3.0), ("raspberry_pi4".into(), 1.0)];
+        let pop = Population::synthesize(&c).unwrap();
+        assert_eq!(pop.len(), 10_000);
+        let pixels = pop.devices.iter().filter(|d| d.device.name == "pixel4").count();
+        assert!(
+            (7_000..8_000).contains(&pixels),
+            "pixel share {pixels} off the 3:1 mix"
+        );
+        let again = Population::synthesize(&c).unwrap();
+        assert_eq!(pop.devices.len(), again.devices.len());
+        assert!(pop
+            .devices
+            .iter()
+            .zip(&again.devices)
+            .all(|(a, b)| a.device.name == b.device.name && a.num_examples == b.num_examples));
+    }
+
+    #[test]
+    fn unknown_device_in_mix_rejected() {
+        let mut c = cfg();
+        c.device_mix = vec![("nokia3310".into(), 1.0)];
+        assert!(Population::synthesize(&c).is_err());
+    }
+}

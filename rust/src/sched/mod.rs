@@ -1,0 +1,38 @@
+//! Cost-aware client scheduling and the event-driven population engine.
+//!
+//! The paper quantifies per-device system costs (compute time, comm time,
+//! energy) and closes by arguing that those numbers "could be used to
+//! design more efficient FL algorithms". This subsystem does exactly
+//! that, in three layers:
+//!
+//! * [`policy`] — pluggable [`policy::SelectionPolicy`] implementations
+//!   ([`policy::UniformRandom`], [`policy::DeadlineAware`],
+//!   [`policy::UtilityBased`]) that choose each round's cohort from the
+//!   calibrated [`crate::sim::cost::CostModel`] and observed client
+//!   state.
+//! * [`availability`] — per-device on/off churn so cohorts are drawn
+//!   from *available* devices only (deterministic cycles + explicit
+//!   trace synthesis from a seeded RNG).
+//! * [`engine`] — an event-driven virtual-time engine that scales to
+//!   100k–1M virtual devices by advancing a binary-heap event queue over
+//!   modeled costs, training numerics only for the selected cohort.
+//!
+//! Wiring: [`crate::config::ScheduleConfig`] describes an experiment
+//! (JSON or builder), [`crate::server::Server`] accepts a selection hook
+//! so live deployments use the same policies, and
+//! [`crate::sim::population`] runs population-scale experiments with
+//! real PJRT numerics when artifacts are present (the closed-form
+//! surrogate otherwise). See `rust/src/sched/README.md`.
+
+pub mod availability;
+pub mod engine;
+pub mod policy;
+
+pub use availability::{Availability, AvailabilityTrace, ChurnModel, ChurnSpec, Cycle};
+pub use engine::{
+    CohortTrainer, Engine, Population, PopulationReport, PopulationRound, SurrogateTrainer,
+    VirtualDevice,
+};
+pub use policy::{
+    Candidate, DeadlineAware, SelectionContext, SelectionPolicy, UniformRandom, UtilityBased,
+};

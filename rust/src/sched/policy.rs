@@ -1,0 +1,378 @@
+//! Pluggable cohort-selection policies.
+//!
+//! The paper's closing argument is that quantified system costs "could be
+//! used to design more efficient FL algorithms"; this module is that step.
+//! A [`SelectionPolicy`] decides *which* clients train each round, given
+//! the calibrated [`CostModel`] and what the server has observed so far:
+//!
+//! * [`UniformRandom`] — the FedAvg baseline (extracted from the strategy
+//!   so server, simulator and population engine share one sampler).
+//! * [`DeadlineAware`] — the natural generalization of the paper's
+//!   τ-cutoff: instead of truncating stragglers after τ, don't pick
+//!   clients whose *modeled* round time exceeds τ in the first place.
+//! * [`UtilityBased`] — Oort-style: blend statistical utility (recent
+//!   training loss, data size) with modeled system cost, plus an
+//!   exploration share for never-sampled clients.
+//!
+//! All policies are deterministic per seed: same seed + same candidates
+//! → same cohort, which the property tests pin down.
+
+use crate::device::DeviceProfile;
+use crate::sim::cost::CostModel;
+use crate::util::rng::Rng;
+
+/// Everything a policy may consult about the round being scheduled.
+#[derive(Debug, Clone, Copy)]
+pub struct SelectionContext<'a> {
+    pub round: u64,
+    pub cost: &'a CostModel,
+    /// Modeled local train steps a selected client will run this round.
+    pub steps_per_round: u64,
+    /// Parameter payload bytes on the wire, each way.
+    pub model_bytes: usize,
+    /// How many clients the round wants.
+    pub target_cohort: usize,
+    /// Round deadline τ in seconds (modeled download + compute + upload).
+    pub deadline_s: Option<f64>,
+}
+
+impl SelectionContext<'_> {
+    /// Modeled end-to-end round time for one client on `device`.
+    pub fn modeled_round_time_s(&self, device: &DeviceProfile) -> f64 {
+        let link = self.cost.comm(device, self.model_bytes);
+        self.cost.compute(device, self.steps_per_round).time_s + 2.0 * link.time_s
+    }
+
+    /// Modeled end-to-end round energy for one client on `device`.
+    pub fn modeled_round_energy_j(&self, device: &DeviceProfile) -> f64 {
+        let link = self.cost.comm(device, self.model_bytes);
+        self.cost.compute(device, self.steps_per_round).energy_j + 2.0 * link.energy_j
+    }
+}
+
+/// What the scheduler knows about one selectable client.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub device: &'static DeviceProfile,
+    pub num_examples: u64,
+    /// Most recent train loss this client reported (None = never sampled).
+    pub last_loss: Option<f64>,
+    /// Rounds since this client was last selected (None = never).
+    pub rounds_since_selected: Option<u64>,
+}
+
+/// A cohort-selection policy. `select` returns distinct indices into
+/// `candidates`, at most `ctx.target_cohort` of them (exactly
+/// `min(target_cohort, candidates.len())` for every policy in this
+/// module). Implementations must be deterministic given their seed.
+pub trait SelectionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize>;
+}
+
+// ---------------------------------------------------------------------------
+// UniformRandom
+// ---------------------------------------------------------------------------
+
+/// Uniform sampling without replacement — FedAvg's original behavior.
+pub struct UniformRandom {
+    rng: Rng,
+}
+
+impl UniformRandom {
+    /// Seeds the RNG directly (no mixing): this is FedAvg's original
+    /// sampler, and extracted callers must reproduce historical seeded
+    /// cohorts exactly.
+    pub fn new(seed: u64) -> Self {
+        UniformRandom { rng: Rng::seed_from(seed) }
+    }
+
+    /// `min(k, n)` distinct indices in `[0, n)`. Shared with
+    /// [`crate::strategy::FedAvg`]'s fraction sampling.
+    pub fn pick(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.sample_indices(n, k.min(n))
+    }
+}
+
+impl SelectionPolicy for UniformRandom {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
+        self.pick(candidates.len(), ctx.target_cohort)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeadlineAware
+// ---------------------------------------------------------------------------
+
+/// Pick uniformly among clients whose modeled round time fits the τ
+/// deadline; if the feasible pool is too small, top up with the fastest
+/// infeasible clients (they will be the least-late stragglers).
+pub struct DeadlineAware {
+    rng: Rng,
+}
+
+impl DeadlineAware {
+    pub fn new(seed: u64) -> Self {
+        DeadlineAware { rng: Rng::seed_from(seed ^ 0x00D1) }
+    }
+}
+
+impl SelectionPolicy for DeadlineAware {
+    fn name(&self) -> &'static str {
+        "deadline"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
+        let k = ctx.target_cohort.min(candidates.len());
+        let mut feasible: Vec<usize> = Vec::new();
+        let mut late: Vec<(f64, usize)> = Vec::new();
+        for (i, c) in candidates.iter().enumerate() {
+            let t = ctx.modeled_round_time_s(c.device);
+            match ctx.deadline_s {
+                Some(tau) if t > tau => late.push((t, i)),
+                _ => feasible.push(i),
+            }
+        }
+        self.rng.shuffle(&mut feasible);
+        feasible.truncate(k);
+        if feasible.len() < k {
+            late.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+            let need = k - feasible.len();
+            feasible.extend(late.iter().take(need).map(|&(_, i)| i));
+        }
+        feasible
+    }
+}
+
+// ---------------------------------------------------------------------------
+// UtilityBased
+// ---------------------------------------------------------------------------
+
+/// Default `(τ/t)^alpha` over-deadline penalty exponent (shared with
+/// `config::PolicyConfig::parse` so `"utility"` means the same policy
+/// however it's constructed).
+pub const DEFAULT_UTILITY_ALPHA: f64 = 2.0;
+/// Default share of each cohort reserved for never-sampled clients.
+pub const DEFAULT_EXPLORE_FRAC: f64 = 0.1;
+
+/// Oort-flavored utility selection: statistical utility from the client's
+/// recent loss and data size, discounted by `(τ/t)^alpha` when the
+/// modeled round time `t` overshoots the deadline, with a slight
+/// staleness bonus and an `explore_frac` share of each cohort reserved
+/// for never-sampled clients.
+pub struct UtilityBased {
+    rng: Rng,
+    pub alpha: f64,
+    pub explore_frac: f64,
+}
+
+impl UtilityBased {
+    pub fn new(seed: u64) -> Self {
+        UtilityBased {
+            rng: Rng::seed_from(seed ^ 0x007C),
+            alpha: DEFAULT_UTILITY_ALPHA,
+            explore_frac: DEFAULT_EXPLORE_FRAC,
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    pub fn with_exploration(mut self, frac: f64) -> Self {
+        self.explore_frac = frac.clamp(0.0, 1.0);
+        self
+    }
+
+    fn score(&self, ctx: &SelectionContext, c: &Candidate, loss: f64) -> f64 {
+        let stat = (c.num_examples as f64).sqrt() * loss.max(0.0);
+        let sys = match ctx.deadline_s {
+            Some(tau) => {
+                let t = ctx.modeled_round_time_s(c.device);
+                if t > tau {
+                    (tau / t).powf(self.alpha)
+                } else {
+                    1.0
+                }
+            }
+            None => 1.0,
+        };
+        let staleness = 1.0 + 0.05 * (c.rounds_since_selected.unwrap_or(0) as f64).sqrt();
+        stat * sys * staleness
+    }
+}
+
+impl SelectionPolicy for UtilityBased {
+    fn name(&self) -> &'static str {
+        "utility"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
+        let k = ctx.target_cohort.min(candidates.len());
+        let mut scored: Vec<(f64, usize)> = Vec::new();
+        let mut fresh: Vec<usize> = Vec::new();
+        for (i, c) in candidates.iter().enumerate() {
+            match c.last_loss {
+                Some(loss) => scored.push((self.score(ctx, c, loss), i)),
+                None => fresh.push(i),
+            }
+        }
+        // Highest utility first; index breaks ties deterministically.
+        scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
+        let explore_n = (k as f64 * self.explore_frac).round() as usize;
+        let exploit_n = k.saturating_sub(explore_n).min(scored.len());
+        let mut picked: Vec<usize> = scored.iter().take(exploit_n).map(|&(_, i)| i).collect();
+        self.rng.shuffle(&mut fresh);
+        let need = k - picked.len();
+        picked.extend(fresh.into_iter().take(need));
+        if picked.len() < k {
+            // No fresh clients left: top up from the remaining scored pool.
+            let need = k - picked.len();
+            picked.extend(scored.iter().skip(exploit_n).take(need).map(|&(_, i)| i));
+        }
+        picked
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::profiles;
+
+    fn candidate(device: &'static DeviceProfile, last_loss: Option<f64>) -> Candidate {
+        Candidate { device, num_examples: 256, last_loss, rounds_since_selected: None }
+    }
+
+    fn mixed_candidates() -> Vec<Candidate> {
+        // 4 fast (TX2 GPU, factor 1.0) + 4 slow (RPi, factor 6.0)
+        let gpu = profiles::by_name("jetson_tx2_gpu").unwrap();
+        let rpi = profiles::by_name("raspberry_pi4").unwrap();
+        (0..8)
+            .map(|i| candidate(if i < 4 { gpu } else { rpi }, Some(1.0)))
+            .collect()
+    }
+
+    fn ctx(cost: &CostModel, k: usize, deadline_s: Option<f64>) -> SelectionContext<'_> {
+        SelectionContext {
+            round: 1,
+            cost,
+            steps_per_round: 80,
+            model_bytes: 547_496,
+            target_cohort: k,
+            deadline_s,
+        }
+    }
+
+    #[test]
+    fn uniform_selects_distinct_k() {
+        let m = CostModel::default();
+        let cands = mixed_candidates();
+        let picked = UniformRandom::new(7).select(&ctx(&m, 5, None), &cands);
+        assert_eq!(picked.len(), 5);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 5);
+        // asking for more than exist clamps
+        assert_eq!(UniformRandom::new(7).select(&ctx(&m, 99, None), &cands).len(), 8);
+    }
+
+    #[test]
+    fn deadline_aware_picks_only_feasible_when_enough() {
+        let m = CostModel::default();
+        let cands = mixed_candidates();
+        // 80 steps × 1.48 s ≈ 118 s on the GPU, ≈ 710 s on the RPi.
+        let c = ctx(&m, 4, Some(200.0));
+        let picked = DeadlineAware::new(3).select(&c, &cands);
+        assert_eq!(picked.len(), 4);
+        assert!(picked.iter().all(|&i| i < 4), "picked a straggler: {picked:?}");
+    }
+
+    #[test]
+    fn deadline_aware_tops_up_with_fastest_stragglers() {
+        let m = CostModel::default();
+        let cands = mixed_candidates();
+        let c = ctx(&m, 6, Some(200.0));
+        let picked = DeadlineAware::new(3).select(&c, &cands);
+        assert_eq!(picked.len(), 6);
+        // all 4 feasible GPUs plus 2 (equally slow) RPis
+        assert_eq!(picked.iter().filter(|&&i| i < 4).count(), 4);
+    }
+
+    #[test]
+    fn deadline_aware_without_deadline_is_uniform() {
+        let m = CostModel::default();
+        let cands = mixed_candidates();
+        let picked = DeadlineAware::new(3).select(&ctx(&m, 8, None), &cands);
+        let mut sorted = picked;
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn utility_prefers_high_loss_clients() {
+        let m = CostModel::default();
+        let gpu = profiles::by_name("jetson_tx2_gpu").unwrap();
+        let cands: Vec<Candidate> = (0..6)
+            .map(|i| candidate(gpu, Some(if i < 3 { 0.1 } else { 5.0 })))
+            .collect();
+        let mut policy = UtilityBased::new(1).with_exploration(0.0);
+        let picked = policy.select(&ctx(&m, 3, None), &cands);
+        let mut sorted = picked;
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![3, 4, 5]);
+    }
+
+    #[test]
+    fn utility_reserves_exploration_share_for_fresh_clients() {
+        let m = CostModel::default();
+        let gpu = profiles::by_name("jetson_tx2_gpu").unwrap();
+        let mut cands: Vec<Candidate> = (0..8).map(|_| candidate(gpu, Some(2.0))).collect();
+        cands.push(candidate(gpu, None));
+        cands.push(candidate(gpu, None));
+        let mut policy = UtilityBased::new(1).with_exploration(0.5);
+        let picked = policy.select(&ctx(&m, 4, None), &cands);
+        assert_eq!(picked.len(), 4);
+        let fresh = picked.iter().filter(|&&i| i >= 8).count();
+        assert_eq!(fresh, 2, "explore share not honored: {picked:?}");
+    }
+
+    #[test]
+    fn utility_penalizes_over_deadline_devices() {
+        let m = CostModel::default();
+        let gpu = profiles::by_name("jetson_tx2_gpu").unwrap();
+        let rpi = profiles::by_name("raspberry_pi4").unwrap();
+        // same loss; the RPi blows τ by ~3.5× and must score lower
+        let cands = vec![candidate(gpu, Some(1.0)), candidate(rpi, Some(1.0))];
+        let mut policy = UtilityBased::new(1).with_exploration(0.0);
+        let picked = policy.select(&ctx(&m, 1, Some(200.0)), &cands);
+        assert_eq!(picked, vec![0]);
+    }
+
+    #[test]
+    fn policies_are_deterministic_per_seed() {
+        let m = CostModel::default();
+        let cands = mixed_candidates();
+        let c = ctx(&m, 4, Some(200.0));
+        for seed in [0u64, 1, 42, 0xDEAD] {
+            assert_eq!(
+                UniformRandom::new(seed).select(&c, &cands),
+                UniformRandom::new(seed).select(&c, &cands),
+            );
+            assert_eq!(
+                DeadlineAware::new(seed).select(&c, &cands),
+                DeadlineAware::new(seed).select(&c, &cands),
+            );
+            assert_eq!(
+                UtilityBased::new(seed).select(&c, &cands),
+                UtilityBased::new(seed).select(&c, &cands),
+            );
+        }
+    }
+}

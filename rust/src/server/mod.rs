@@ -18,6 +18,7 @@ pub use client_manager::ClientManager;
 pub use history::{History, RoundRecord};
 pub use proxy::ClientProxy;
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
@@ -26,6 +27,7 @@ use crate::client::keys;
 use crate::error::{Error, Result};
 use crate::proto::scalar::ConfigExt;
 use crate::proto::{ClientMessage, Parameters};
+use crate::sched::policy::{Candidate, SelectionContext, SelectionPolicy};
 use crate::sim::cost::CostModel;
 use crate::strategy::{fedavg, ClientHandle, Strategy};
 use crate::telemetry::log;
@@ -60,12 +62,38 @@ impl Default for ServerConfig {
     }
 }
 
+/// What the server-side selection hook needs to build a
+/// [`SelectionContext`] each round (the payload size comes from the
+/// current parameters).
+#[derive(Debug, Clone)]
+pub struct SelectionHints {
+    /// How many clients to hand the strategy each round.
+    pub target_cohort: usize,
+    /// Round deadline τ for deadline/utility policies.
+    pub deadline_s: Option<f64>,
+    /// Modeled local train steps per selected client per round.
+    pub steps_per_round: u64,
+}
+
+/// Per-client observations feeding cost-aware selection.
+#[derive(Debug, Clone, Default)]
+struct ClientStat {
+    last_loss: Option<f64>,
+    last_selected_round: Option<u64>,
+}
+
 /// The FL server.
 pub struct Server {
     pub manager: Arc<ClientManager>,
     strategy: Box<dyn Strategy>,
     cost: CostModel,
     config: ServerConfig,
+    /// Optional cost-aware selection hook: when set, cohort choice is
+    /// delegated to the policy and the strategy only sees the pre-selected
+    /// subset. A strategy with `fraction_fit < 1` still subsamples within
+    /// that subset; leave it at 1.0 (the default) for full delegation.
+    selector: Option<(Box<dyn SelectionPolicy>, SelectionHints)>,
+    client_stats: HashMap<String, ClientStat>,
 }
 
 impl Server {
@@ -75,7 +103,25 @@ impl Server {
         cost: CostModel,
         config: ServerConfig,
     ) -> Self {
-        Server { manager, strategy, cost, config }
+        Server {
+            manager,
+            strategy,
+            cost,
+            config,
+            selector: None,
+            client_stats: HashMap::new(),
+        }
+    }
+
+    /// Delegate per-round cohort choice to a [`SelectionPolicy`] from the
+    /// `sched` subsystem.
+    pub fn with_selection(
+        mut self,
+        policy: Box<dyn SelectionPolicy>,
+        hints: SelectionHints,
+    ) -> Self {
+        self.selector = Some((policy, hints));
+        self
     }
 
     /// Run the configured number of rounds from `initial` parameters.
@@ -125,9 +171,55 @@ impl Server {
     }
 
     fn run_round(&mut self, round: u64, params: &mut Parameters) -> Result<RoundRecord> {
-        let proxies = self.manager.snapshot();
-        if proxies.is_empty() {
+        let all_proxies = self.manager.snapshot();
+        if all_proxies.is_empty() {
             return Err(Error::Protocol("no clients connected".into()));
+        }
+
+        // ---- cost-aware selection hook ---------------------------------
+        let proxies: Vec<Arc<ClientProxy>> = match &mut self.selector {
+            Some((policy, hints)) => {
+                // Bound the stats map under id churn: once it far exceeds
+                // the live cohort, drop entries for clients no longer
+                // registered (brief disconnects keep their history until
+                // then; a pruned client just rejoins the explore pool).
+                if self.client_stats.len() > all_proxies.len().saturating_mul(4).max(1024) {
+                    let live: std::collections::HashSet<&str> =
+                        all_proxies.iter().map(|p| p.handle.id.as_str()).collect();
+                    self.client_stats.retain(|id, _| live.contains(id.as_str()));
+                }
+                let candidates: Vec<Candidate> = all_proxies
+                    .iter()
+                    .map(|p| {
+                        let stat = self.client_stats.get(&p.handle.id);
+                        Candidate {
+                            device: p.handle.device,
+                            num_examples: p.handle.num_examples,
+                            last_loss: stat.and_then(|s| s.last_loss),
+                            rounds_since_selected: stat
+                                .and_then(|s| s.last_selected_round)
+                                .map(|r| round.saturating_sub(r)),
+                        }
+                    })
+                    .collect();
+                let ctx = SelectionContext {
+                    round,
+                    cost: &self.cost,
+                    steps_per_round: hints.steps_per_round,
+                    model_bytes: params.byte_len(),
+                    target_cohort: hints.target_cohort,
+                    deadline_s: hints.deadline_s,
+                };
+                let picked = policy.select(&ctx, &candidates);
+                picked
+                    .into_iter()
+                    .map(|i| Arc::clone(&all_proxies[i]))
+                    .collect()
+            }
+            None => all_proxies,
+        };
+        if proxies.is_empty() {
+            return Err(Error::Protocol("selection policy picked no clients".into()));
         }
         let handles: Vec<ClientHandle> = proxies.iter().map(|p| p.handle.clone()).collect();
 
@@ -137,6 +229,16 @@ impl Server {
             return Err(Error::Protocol("strategy selected no clients".into()));
         }
         let fit_selected = plan.len();
+        // Stats only feed the selection hook's candidates; don't grow the
+        // map on servers that never read it.
+        if self.selector.is_some() {
+            for (idx, _) in &plan {
+                self.client_stats
+                    .entry(handles[*idx].id.clone())
+                    .or_default()
+                    .last_selected_round = Some(round);
+            }
+        }
         let timeout = self.config.round_timeout;
         let mut fit_results: Vec<(ClientHandle, crate::proto::FitRes)> = Vec::new();
         let mut fit_failures = 0usize;
@@ -184,6 +286,13 @@ impl Server {
                     let compute_e = res.metrics.get_f64_or(keys::ENERGY_J, 0.0);
                     let t = down.time_s + compute_t + up.time_s;
                     let e = down.energy_j + compute_e + up.energy_j;
+                    let loss = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
+                    if self.selector.is_some() && loss.is_finite() {
+                        self.client_stats
+                            .entry(handle.id.clone())
+                            .or_default()
+                            .last_loss = Some(loss);
+                    }
                     client_times.push((handle.clone(), t, e));
                     fit_results.push((handle, res));
                 }
@@ -486,6 +595,62 @@ mod tests {
         );
         let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
         assert_eq!(history.rounds.len(), 3); // acc 0.1, 0.2, 0.3 → stop
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn selection_hook_limits_cohort_per_round() {
+        use crate::sched::policy::UniformRandom;
+
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 4);
+        let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+        let mut server = Server::new(
+            Arc::clone(&manager),
+            Box::new(strategy),
+            CostModel::default(),
+            ServerConfig {
+                num_rounds: 3,
+                quorum: 4,
+                ..Default::default()
+            },
+        )
+        .with_selection(
+            Box::new(UniformRandom::new(11)),
+            SelectionHints { target_cohort: 2, deadline_s: None, steps_per_round: 8 },
+        );
+        let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        assert_eq!(history.rounds.len(), 3);
+        for r in &history.rounds {
+            assert_eq!(r.fit_selected, 2, "round {}: {r:?}", r.round);
+            assert_eq!(r.fit_completed, 2);
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn selection_hook_clamps_oversized_cohort() {
+        use crate::sched::policy::UniformRandom;
+
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 2);
+        let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+        let mut server = Server::new(
+            Arc::clone(&manager),
+            Box::new(strategy),
+            CostModel::default(),
+            ServerConfig { num_rounds: 1, quorum: 2, ..Default::default() },
+        )
+        .with_selection(
+            Box::new(UniformRandom::new(5)),
+            SelectionHints { target_cohort: 10, deadline_s: None, steps_per_round: 8 },
+        );
+        let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        assert_eq!(history.rounds[0].fit_selected, 2);
         for t in threads {
             t.join().unwrap();
         }

@@ -8,6 +8,7 @@
 //! [`cost::CostModel`] and the per-device profiles.
 
 pub mod cost;
+pub mod population;
 
 use std::sync::Arc;
 

@@ -7,7 +7,7 @@ use crate::config;
 use crate::error::Result;
 use crate::proto::scalar::ConfigExt;
 use crate::proto::{ConfigMap, EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
-use crate::util::rng::Rng;
+use crate::sched::policy::UniformRandom;
 
 use super::{
     weighted_eval_summary, Aggregator, ClientHandle, EvalSummary, Strategy,
@@ -44,7 +44,10 @@ pub struct FedAvg {
     /// Lower bound on per-round cohort size.
     pub min_fit_clients: usize,
     pub aggregator: Aggregator,
-    rng: Rng,
+    /// The uniform cohort sampler, shared with the `sched` subsystem
+    /// (`sched::policy::UniformRandom` is FedAvg's original sampling,
+    /// extracted so server hooks and the population engine reuse it).
+    sampler: UniformRandom,
 }
 
 impl FedAvg {
@@ -54,7 +57,9 @@ impl FedAvg {
             fraction_fit: 1.0,
             min_fit_clients: 1,
             aggregator,
-            rng: Rng::seed_from(0x5A3D),
+            // Same stream FedAvg drew from before the sampler was
+            // extracted, so historical seeded cohorts reproduce exactly.
+            sampler: UniformRandom::new(0x5A3D),
         }
     }
 
@@ -65,7 +70,7 @@ impl FedAvg {
     }
 
     pub fn with_seed(mut self, seed: u64) -> Self {
-        self.rng = Rng::seed_from(seed);
+        self.sampler = UniformRandom::new(seed);
         self
     }
 
@@ -73,7 +78,7 @@ impl FedAvg {
     fn sample(&mut self, n: usize) -> Vec<usize> {
         let want = ((n as f64 * self.fraction_fit).ceil() as usize)
             .clamp(self.min_fit_clients.min(n), n);
-        self.rng.sample_indices(n, want)
+        self.sampler.pick(n, want)
     }
 
     /// Weighted parameter average over successful results — the shared

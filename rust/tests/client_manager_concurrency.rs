@@ -1,0 +1,164 @@
+//! Concurrency coverage for `server::ClientManager`: register/unregister
+//! races, stale-entry replacement on reconnect, and `wait_for` behavior
+//! under churn and multiple waiters.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use flowrs::device::profiles;
+use flowrs::server::{ClientManager, ClientProxy};
+use flowrs::strategy::ClientHandle;
+use flowrs::transport::{inproc, Connection};
+
+fn proxy(id: &str) -> Arc<ClientProxy> {
+    let (server_end, client_end) = inproc::pair();
+    std::mem::forget(client_end); // keep the channel alive for the test
+    Arc::new(ClientProxy::new(
+        ClientHandle {
+            id: id.into(),
+            device: profiles::by_name("pixel4").unwrap(),
+            num_examples: 1,
+        },
+        Connection::InProc(server_end),
+    ))
+}
+
+#[test]
+fn concurrent_register_unregister_is_consistent() {
+    let m = Arc::new(ClientManager::new());
+    let threads: Vec<_> = (0..8)
+        .map(|t| {
+            let m = Arc::clone(&m);
+            std::thread::spawn(move || {
+                for i in 0..100 {
+                    let id = format!("c{t}-{i}");
+                    m.register(proxy(&id));
+                    if i % 2 == 0 {
+                        m.unregister(&id);
+                    }
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    // every thread left its odd-numbered clients registered
+    assert_eq!(m.len(), 8 * 50);
+    // all survivors are distinct ids
+    let mut ids: Vec<String> = m.handles().into_iter().map(|h| h.id).collect();
+    ids.sort();
+    ids.dedup();
+    assert_eq!(ids.len(), 8 * 50);
+}
+
+#[test]
+fn concurrent_reconnects_keep_exactly_one_entry() {
+    let m = Arc::new(ClientManager::new());
+    let threads: Vec<_> = (0..8)
+        .map(|_| {
+            let m = Arc::clone(&m);
+            std::thread::spawn(move || {
+                for _ in 0..200 {
+                    // same device id reconnecting from many threads: the
+                    // stale entry must always be replaced, never duplicated
+                    m.register(proxy("flappy-phone"));
+                }
+            })
+        })
+        .collect();
+    for t in threads {
+        t.join().unwrap();
+    }
+    assert_eq!(m.len(), 1);
+    assert_eq!(m.handles()[0].id, "flappy-phone");
+}
+
+#[test]
+fn wait_for_returns_immediately_when_quorum_already_met() {
+    let m = ClientManager::new();
+    assert!(m.wait_for(0, Duration::from_millis(1)));
+    m.register(proxy("a"));
+    let t0 = Instant::now();
+    assert!(m.wait_for(1, Duration::from_secs(5)));
+    assert!(t0.elapsed() < Duration::from_secs(1));
+}
+
+#[test]
+fn wait_for_times_out_under_churn_that_never_reaches_quorum() {
+    let m = Arc::new(ClientManager::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let churner = {
+        let m = Arc::clone(&m);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            // one device flapping on/off: len oscillates 0..=1, quorum of
+            // 2 is never reached, but the waiter keeps being notified
+            while !stop.load(Ordering::Relaxed) {
+                m.register(proxy("flap"));
+                m.unregister("flap");
+            }
+        })
+    };
+    let t0 = Instant::now();
+    let reached = m.wait_for(2, Duration::from_millis(200));
+    stop.store(true, Ordering::Relaxed);
+    churner.join().unwrap();
+    assert!(!reached);
+    assert!(
+        t0.elapsed() >= Duration::from_millis(150),
+        "timed out way too early: {:?}",
+        t0.elapsed()
+    );
+}
+
+#[test]
+fn many_waiters_all_wake_on_quorum() {
+    let m = Arc::new(ClientManager::new());
+    let waiters: Vec<_> = (0..4)
+        .map(|_| {
+            let m = Arc::clone(&m);
+            std::thread::spawn(move || m.wait_for(3, Duration::from_secs(5)))
+        })
+        .collect();
+    for i in 0..3 {
+        std::thread::sleep(Duration::from_millis(10));
+        m.register(proxy(&format!("late-{i}")));
+    }
+    for w in waiters {
+        assert!(w.join().unwrap(), "a waiter missed the quorum notification");
+    }
+}
+
+#[test]
+fn snapshot_is_stable_under_concurrent_mutation() {
+    let m = Arc::new(ClientManager::new());
+    for i in 0..16 {
+        m.register(proxy(&format!("base-{i}")));
+    }
+    let stop = Arc::new(AtomicBool::new(false));
+    let mutator = {
+        let m = Arc::clone(&m);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut i = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                m.register(proxy(&format!("hot-{}", i % 8)));
+                m.unregister(&format!("hot-{}", (i + 4) % 8));
+                i += 1;
+            }
+        })
+    };
+    for _ in 0..200 {
+        // a snapshot taken mid-churn always contains the stable cohort
+        let snap = m.snapshot();
+        let base = snap
+            .iter()
+            .filter(|p| p.handle.id.starts_with("base-"))
+            .count();
+        assert_eq!(base, 16);
+    }
+    stop.store(true, Ordering::Relaxed);
+    mutator.join().unwrap();
+}

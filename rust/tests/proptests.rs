@@ -390,3 +390,113 @@ fn prop_json_parser_total_on_garbage() {
         Ok(())
     });
 }
+
+// ---------------------------------------------------------------------------
+// scheduler policy properties
+// ---------------------------------------------------------------------------
+
+use flowrs::sched::policy::{
+    Candidate, DeadlineAware, SelectionContext, SelectionPolicy, UniformRandom, UtilityBased,
+};
+
+fn arb_candidates(rng: &mut Rng) -> Vec<Candidate> {
+    let n = 1 + rng.below(150);
+    (0..n)
+        .map(|_| Candidate {
+            device: &profiles::ALL[rng.below(profiles::ALL.len())],
+            num_examples: 1 + rng.next_u64() % 1000,
+            last_loss: if rng.below(3) == 0 { None } else { Some(rng.f64() * 3.0) },
+            rounds_since_selected: if rng.below(2) == 0 {
+                None
+            } else {
+                Some(rng.below(50) as u64)
+            },
+        })
+        .collect()
+}
+
+fn build_policy(tag: usize, seed: u64) -> Box<dyn SelectionPolicy> {
+    match tag {
+        0 => Box::new(UniformRandom::new(seed)),
+        1 => Box::new(DeadlineAware::new(seed)),
+        _ => Box::new(UtilityBased::new(seed)),
+    }
+}
+
+#[test]
+fn prop_policies_deterministic_distinct_and_bounded() {
+    let name = "every policy: same seed -> same cohort; distinct, in range, exact size";
+    check(name, 120, |rng| {
+        let cands = arb_candidates(rng);
+        let cost = CostModel::default();
+        let k = 1 + rng.below(cands.len() + 4); // sometimes ask for more than exist
+        let ctx = SelectionContext {
+            round: 1 + rng.below(40) as u64,
+            cost: &cost,
+            steps_per_round: 1 + rng.below(100) as u64,
+            model_bytes: 1_000 + rng.below(1_000_000),
+            target_cohort: k,
+            deadline_s: if rng.below(2) == 0 {
+                Some(30.0 + rng.f64() * 600.0)
+            } else {
+                None
+            },
+        };
+        let seed = rng.next_u64();
+        for tag in 0..3 {
+            let a = build_policy(tag, seed).select(&ctx, &cands);
+            let b = build_policy(tag, seed).select(&ctx, &cands);
+            assert_eq_prop(&a, &b)?;
+            let want = k.min(cands.len());
+            ensure(a.len() == want, || {
+                format!("policy {tag}: cohort {} != {want}", a.len())
+            })?;
+            let distinct: std::collections::BTreeSet<usize> = a.iter().copied().collect();
+            ensure(distinct.len() == a.len(), || {
+                format!("policy {tag} repeated an index: {a:?}")
+            })?;
+            ensure(a.iter().all(|&i| i < cands.len()), || {
+                format!("policy {tag} index out of range: {a:?}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deadline_aware_feasibility() {
+    let name = "deadline-aware: feasible-only when the pool suffices, else all included";
+    check(name, 120, |rng| {
+        let cands = arb_candidates(rng);
+        let cost = CostModel::default();
+        let k = 1 + rng.below(cands.len());
+        let deadline = 10.0 + rng.f64() * 2_000.0;
+        let ctx = SelectionContext {
+            round: 1,
+            cost: &cost,
+            steps_per_round: 1 + rng.below(200) as u64,
+            model_bytes: 1_000 + rng.below(2_000_000),
+            target_cohort: k,
+            deadline_s: Some(deadline),
+        };
+        let feasible: Vec<usize> = (0..cands.len())
+            .filter(|&i| ctx.modeled_round_time_s(cands[i].device) <= deadline)
+            .collect();
+        let picked = DeadlineAware::new(rng.next_u64()).select(&ctx, &cands);
+        if feasible.len() >= k {
+            for &i in &picked {
+                ensure(
+                    ctx.modeled_round_time_s(cands[i].device) <= deadline,
+                    || format!("picked infeasible candidate {i} with {} feasible", feasible.len()),
+                )?;
+            }
+        } else {
+            for &i in &feasible {
+                ensure(picked.contains(&i), || {
+                    format!("feasible candidate {i} skipped while topping up")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}

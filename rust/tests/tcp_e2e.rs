@@ -24,7 +24,16 @@ fn runtime() -> Option<Runtime> {
         eprintln!("skipping: run `make artifacts` first");
         return None;
     }
-    Some(Runtime::load(&dir).expect("runtime loads"))
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        // Stubbed-runtime builds (no `xla` feature) skip; with the real
+        // binding compiled in, a load failure is a genuine regression.
+        Err(e) if !cfg!(feature = "xla") => {
+            eprintln!("skipping: runtime unavailable ({e})");
+            None
+        }
+        Err(e) => panic!("runtime failed to load with artifacts present: {e}"),
+    }
 }
 
 #[test]
