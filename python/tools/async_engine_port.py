@@ -1,0 +1,291 @@
+#!/usr/bin/env python3
+"""Exact Python port of the `sched` engine's sync and async loops.
+
+The paper-repro build container has no Rust toolchain (see
+`.claude/skills/verify/SKILL.md`), so changes to the engine's virtual-time
+logic are cross-validated here: this module reproduces `util::rng`
+(xoshiro256++ seeded via SplitMix64), `Population::synthesize` with the
+default device mix, availability cycles, the `CostModel`, the
+`UniformRandom` policy stream, and both `Engine::run` loops bit-faithfully
+(same event ordering, same accumulators, same flush semantics — async
+drops resolve at the cutoff and free their slot there).
+
+Running it replays the acceptance scenario pinned by
+`rust/tests/sched_engine.rs::fedbuff_beats_sync_fedavg_time_to_accuracy_on_heterogeneous_mix`
+(population 300, cohort 16, seed 13, target 0.3): FedBuff (K=8,
+alpha=0.5) must reach the target in strictly less virtual time than
+synchronous FedAvg. Expected: sync t2a ~= 1728 s, async t2a ~= 1243 s.
+"""
+
+import heapq
+
+MASK = (1 << 64) - 1
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    """util::rng::Rng — xoshiro256++, SplitMix64-seeded."""
+
+    def __init__(self, seed=None, state=None):
+        if state is not None:
+            self.s = list(state)
+            return
+        sm = seed & MASK
+        self.s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            self.s.append(v)
+
+    def derive(self, stream):
+        sm = (self.s[0] ^ (stream * 0xA24BAED4963EE407)) & MASK
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        return Rng(state=s)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return int(self.f64() * n) % n
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def sample_indices(self, n, k):
+        idx = list(range(n))
+        self.shuffle(idx)
+        return idx[:k]
+
+
+# device/profiles.rs: (name, compute_factor, bandwidth_mbps, default-mix weight)
+MIX = [
+    ("pixel4", 1.8, 50.0, 0.20),
+    ("pixel3", 2.2, 50.0, 0.20),
+    ("pixel2", 2.8, 40.0, 0.15),
+    ("galaxy_tab_s6", 1.9, 50.0, 0.10),
+    ("galaxy_tab_s4", 2.6, 40.0, 0.10),
+    ("jetson_tx2_gpu", 1.0, 100.0, 0.05),
+    ("jetson_tx2_cpu", 1.27, 100.0, 0.05),
+    ("raspberry_pi4", 6.0, 100.0, 0.15),
+]
+T_STEP_REF_S = 1.48
+SERVER_OVERHEAD_S = 1.0
+MODEL_BYTES = 547_496
+
+
+class Cycle:
+    def __init__(self, on, off, phase):
+        self.on, self.off, self.phase = on, off, phase
+
+    def is_on(self, t):
+        return (t + self.phase) % (self.on + self.off) < self.on
+
+    def on_dwell_end(self, t):
+        if self.off <= 0:
+            return float("inf")
+        period = self.on + self.off
+        return t + (self.on - (t + self.phase) % period)
+
+    def next_on_delay(self, t):
+        period = self.on + self.off
+        pos = (t + self.phase) % period
+        return 0.0 if pos < self.on else period - pos
+
+
+ALWAYS_ON = Cycle(1.0, 0.0, 0.0)
+
+
+def synthesize(population, seed, churn=None):
+    """Population::synthesize with the default mix (+ optional churn)."""
+    total_w = sum(w for *_, w in MIX)
+    rng = Rng(seed ^ 0x0F0B)
+    churn_root = Rng(seed ^ 0xC4A2) if churn else None
+    devices = []
+    for i in range(population):
+        r = rng.f64() * total_w
+        prof = MIX[-1]
+        for entry in MIX:
+            if r < entry[3]:
+                prof = entry
+                break
+            r -= entry[3]
+        num_examples = 64 + rng.below(448)
+        if churn:
+            crng = churn_root.derive(i)
+            on = churn[0] * (0.5 + crng.f64())
+            off = churn[1] * (0.5 + crng.f64())
+            cyc = Cycle(on, off, crng.f64() * (on + off))
+        else:
+            cyc = ALWAYS_ON
+        skew = rng.f64()
+        devices.append(
+            dict(name=prof[0], factor=prof[1], bw=prof[2],
+                 num_examples=num_examples, skew=skew, cycle=cyc)
+        )
+    return devices
+
+
+def modeled_round_time(dev, steps):
+    return steps * T_STEP_REF_S * dev["factor"] + 2.0 * MODEL_BYTES * 8.0 / (dev["bw"] * 1e6)
+
+
+class Surrogate:
+    """SurrogateTrainer: accuracy saturates in cumulative (weighted) steps."""
+
+    def __init__(self):
+        self.progress = 0.0
+
+    def accuracy(self):
+        if self.progress <= 0:
+            return 0.0
+        return 0.68 * self.progress / (self.progress + 4000.0)
+
+    def round(self, completed, steps):
+        self.progress += completed * steps
+        return self.accuracy()
+
+    def flush(self, weight_sum, steps):
+        self.progress += weight_sum * steps
+        return self.accuracy()
+
+
+def run_sync(pop, seed, cohort, rounds, steps, target=None):
+    """Engine::run, barrier-synchronous (uniform policy, no deadline/churn)."""
+    policy = Rng(seed ^ 0x5E1)
+    trainer = Surrogate()
+    clock = 0.0
+    out = []
+    for rnd in range(1, rounds + 1):
+        picked = policy.sample_indices(len(pop), min(cohort, len(pop)))
+        slowest = max(modeled_round_time(pop[i], steps) for i in picked)
+        acc = trainer.round(len(picked), steps)
+        clock += slowest + SERVER_OVERHEAD_S
+        out.append(dict(round=rnd, cum_time=clock, acc=acc))
+        if target is not None and acc >= target:
+            break
+    return out
+
+
+def run_async(pop, seed, cohort, versions, steps, k_flush, alpha,
+              deadline=None, target=None, max_concurrency=0):
+    """Engine::run_async: event-driven FedBuff folds, drop-at-cutoff."""
+    policy = Rng(seed ^ 0x5E1)
+    trainer = Surrogate()
+    max_if = max_concurrency or cohort
+    n = len(pop)
+    now = 0.0
+    version = 0
+    in_flight = [False] * n
+    if_count = 0
+    heap = []
+    buffer = []
+    out = []
+    dropped_dl = dropped_ch = 0
+    wasted = energy = 0.0
+    while version < versions:
+        if if_count < max_if:
+            avail = [i for i in range(n)
+                     if not in_flight[i] and pop[i]["cycle"].is_on(now)]
+            if avail:
+                want = max_if - if_count
+                picked = policy.sample_indices(len(avail), min(want, len(avail)))
+                for j in picked:
+                    i = avail[j]
+                    full = now + modeled_round_time(pop[i], steps)
+                    first_off = pop[i]["cycle"].on_dwell_end(now)
+                    dl = now + deadline if deadline is not None else float("inf")
+                    if first_off < min(dl, full):
+                        resolve, outcome = first_off, "churn"
+                    elif full > dl:
+                        resolve, outcome = dl, "deadline"
+                    else:
+                        resolve, outcome = full, "fold"
+                    frac = min(max((resolve - now) / (full - now), 0.0), 1.0)
+                    in_flight[i] = True
+                    if_count += 1
+                    heapq.heappush(heap, (resolve, i, version, outcome, frac))
+        if not heap:
+            dt = min(pop[i]["cycle"].next_on_delay(now) for i in range(n))
+            now += max(dt, 1e-6)
+            continue
+        resolve, i, base_version, outcome, frac = heapq.heappop(heap)
+        now = max(now, resolve)
+        in_flight[i] = False
+        if_count -= 1
+        energy += frac  # relative units; enough to check conservation
+        if outcome == "fold":
+            buffer.append((i, version - base_version))
+        elif outcome == "churn":
+            dropped_ch += 1
+            wasted += frac
+        else:
+            dropped_dl += 1
+            wasted += frac
+        if len(buffer) >= k_flush:
+            version += 1
+            weight_sum = sum((1 + s) ** (-alpha) for _, s in buffer)
+            acc = trainer.flush(weight_sum, steps)
+            stals = [s for _, s in buffer]
+            now += SERVER_OVERHEAD_S
+            out.append(dict(
+                round=version, cum_time=now, acc=acc,
+                completed=len(buffer), mean_staleness=sum(stals) / len(stals),
+                max_staleness=max(stals), dropped_deadline=dropped_dl,
+                dropped_churn=dropped_ch, wasted=wasted, in_flight=if_count))
+            buffer = []
+            dropped_dl = dropped_ch = 0
+            wasted = energy = 0.0
+            if target is not None and acc >= target:
+                break
+    return out
+
+
+def time_to_accuracy(rows, target):
+    for r in rows:
+        if r["acc"] >= target:
+            return r["cum_time"]
+    return None
+
+
+if __name__ == "__main__":
+    seed, target = 13, 0.3
+    pop = synthesize(300, seed)
+    stragglers = sum(1 for d in pop if d["name"] == "raspberry_pi4")
+    sync = run_sync(pop, seed, 16, 60, 8, target)
+    fedbuff = run_async(pop, seed, 16, 400, 8, 8, 0.5, target=target)
+    t_sync = time_to_accuracy(sync, target)
+    t_async = time_to_accuracy(fedbuff, target)
+    print(f"population 300 (straggler-class devices: {stragglers})")
+    print(f"sync   FedAvg : {len(sync):3d} rounds,   t2a@{target} = {t_sync:8.1f} s")
+    print(f"FedBuff K=8   : {len(fedbuff):3d} versions, t2a@{target} = {t_async:8.1f} s "
+          f"(max staleness {max(r['max_staleness'] for r in fedbuff)})")
+    assert stragglers >= 1
+    assert t_async < t_sync, "FedBuff must beat the barrier loop"
+    print(f"OK: async wins by {t_sync / t_async:.2f}x")

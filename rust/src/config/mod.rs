@@ -71,6 +71,16 @@ pub struct ExperimentConfig {
     /// Secure aggregation (SecAgg0 pairwise masking; forces unweighted
     /// mean aggregation and full participation).
     pub secure_agg: bool,
+    /// Asynchronous (FedBuff-style) server loop: flush the aggregation
+    /// buffer every K successful results instead of barriering each
+    /// round. `None` = the synchronous loop. `rounds` then counts model
+    /// versions (flushes).
+    pub async_buffer: Option<usize>,
+    /// Polynomial staleness-discount exponent for async aggregation
+    /// (`w(s) = (1+s)^-alpha`; 0 disables the discount).
+    pub staleness_alpha: f64,
+    /// Async loop: max concurrent fit dispatches (0 = every client).
+    pub max_concurrency: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -98,6 +108,9 @@ impl Default for ExperimentConfig {
             quantize_f16: false,
             dropout: 0.0,
             secure_agg: false,
+            async_buffer: None,
+            staleness_alpha: crate::strategy::fedbuff::DEFAULT_STALENESS_ALPHA,
+            max_concurrency: 0,
         }
     }
 }
@@ -171,6 +184,19 @@ impl ExperimentConfig {
         self.secure_agg = on;
         self
     }
+    /// Switch the server loop to buffered async aggregation (FedBuff).
+    pub fn buffered(mut self, k: usize) -> Self {
+        self.async_buffer = Some(k);
+        self
+    }
+    pub fn staleness(mut self, alpha: f64) -> Self {
+        self.staleness_alpha = alpha;
+        self
+    }
+    pub fn concurrency(mut self, n: usize) -> Self {
+        self.max_concurrency = n;
+        self
+    }
 
     /// Default device list for the workload, if none configured.
     pub fn effective_devices(&self) -> Vec<String> {
@@ -209,6 +235,42 @@ impl ExperimentConfig {
         if self.secure_agg && self.dropout > 0.0 {
             return Err(Error::Config(
                 "secure_agg requires full participation (SecAgg0 has no dropout                  recovery) — set dropout to 0".into(),
+            ));
+        }
+        if let Some(k) = self.async_buffer {
+            if k == 0 {
+                return Err(Error::Config("async_buffer must be > 0".into()));
+            }
+            if self.secure_agg {
+                return Err(Error::Config(
+                    "async_buffer is incompatible with secure_agg (SecAgg0 masks \
+                     cancel only over a fixed synchronous cohort)".into(),
+                ));
+            }
+            if self.quantize_f16 {
+                return Err(Error::Config(
+                    "async_buffer is incompatible with quantize_f16 (the wire \
+                     quantizer wraps the synchronous strategy only)".into(),
+                ));
+            }
+            if self.strategy != StrategyConfig::FedAvg {
+                return Err(Error::Config(format!(
+                    "async_buffer replaces the synchronous strategy with FedBuff \
+                     — {:?} would be silently ignored; set strategy to fedavg \
+                     (the default) or drop async_buffer",
+                    self.strategy
+                )));
+            }
+            if self.fraction_fit != 1.0 {
+                return Err(Error::Config(
+                    "async_buffer streams results from every client \
+                     (fraction_fit is not consulted); leave it at 1.0".into(),
+                ));
+            }
+        }
+        if self.staleness_alpha < 0.0 || !self.staleness_alpha.is_finite() {
+            return Err(Error::Config(
+                "staleness_alpha must be finite and >= 0".into(),
             ));
         }
         if self.model != "cifar_cnn" && self.model != "head" {
@@ -319,6 +381,15 @@ impl ExperimentConfig {
         }
         if let Some(v) = doc.opt("secure_agg") {
             cfg.secure_agg = v.as_bool()?;
+        }
+        if let Some(v) = doc.opt("async_buffer") {
+            cfg.async_buffer = Some(v.as_usize()?);
+        }
+        if let Some(v) = doc.opt("staleness_alpha") {
+            cfg.staleness_alpha = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("max_concurrency") {
+            cfg.max_concurrency = v.as_usize()?;
         }
         if let Some(v) = doc.opt("strategy") {
             cfg.strategy = parse_strategy(v)?;
@@ -470,6 +541,18 @@ pub struct ScheduleConfig {
     pub cost: CostModel,
     /// Early-stop (and time-to-accuracy reporting) target.
     pub target_accuracy: Option<f64>,
+    /// Asynchronous (FedBuff-style) engine mode: fold device-finish
+    /// events into a buffer and flush a new model version every K folds,
+    /// instead of barriering each round on the slowest cohort member.
+    /// `None` = the synchronous round loop. `rounds` then counts model
+    /// versions (flushes).
+    pub async_buffer: Option<usize>,
+    /// Polynomial staleness-discount exponent for async folds
+    /// (`w(s) = (1+s)^-alpha`).
+    pub staleness_alpha: f64,
+    /// Async mode: max concurrent in-flight dispatches
+    /// (0 = `cohort_size`).
+    pub max_concurrency: usize,
 }
 
 impl Default for ScheduleConfig {
@@ -489,6 +572,9 @@ impl Default for ScheduleConfig {
             seed: 20260710,
             cost: CostModel::default(),
             target_accuracy: None,
+            async_buffer: None,
+            staleness_alpha: crate::strategy::fedbuff::DEFAULT_STALENESS_ALPHA,
+            max_concurrency: 0,
         }
     }
 }
@@ -531,6 +617,29 @@ impl ScheduleConfig {
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
+    }
+    /// Switch the engine to buffered async aggregation (FedBuff-style).
+    pub fn buffered(mut self, k: usize) -> Self {
+        self.async_buffer = Some(k);
+        self
+    }
+    pub fn staleness(mut self, alpha: f64) -> Self {
+        self.staleness_alpha = alpha;
+        self
+    }
+    pub fn concurrency(mut self, n: usize) -> Self {
+        self.max_concurrency = n;
+        self
+    }
+
+    /// Async in-flight bound: explicit `max_concurrency`, or the cohort
+    /// size when unset.
+    pub fn effective_concurrency(&self) -> usize {
+        if self.max_concurrency == 0 {
+            self.cohort_size
+        } else {
+            self.max_concurrency
+        }
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -578,6 +687,16 @@ impl ScheduleConfig {
                     "device mix weight for {name} must be finite and > 0"
                 )));
             }
+        }
+        if let Some(k) = self.async_buffer {
+            if k == 0 {
+                return Err(Error::Config("async_buffer must be > 0".into()));
+            }
+        }
+        if self.staleness_alpha < 0.0 || !self.staleness_alpha.is_finite() {
+            return Err(Error::Config(
+                "staleness_alpha must be finite and >= 0".into(),
+            ));
         }
         self.policy.validate()
     }
@@ -644,6 +763,15 @@ impl ScheduleConfig {
         }
         if let Some(v) = doc.opt("target_accuracy") {
             cfg.target_accuracy = Some(v.as_f64()?);
+        }
+        if let Some(v) = doc.opt("async_buffer") {
+            cfg.async_buffer = Some(v.as_usize()?);
+        }
+        if let Some(v) = doc.opt("staleness_alpha") {
+            cfg.staleness_alpha = v.as_f64()?;
+        }
+        if let Some(v) = doc.opt("max_concurrency") {
+            cfg.max_concurrency = v.as_usize()?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -796,6 +924,54 @@ mod tests {
             })
         );
         assert_eq!(cfg.target_accuracy, Some(0.5));
+    }
+
+    #[test]
+    fn async_knobs_roundtrip_and_validate() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"async_buffer": 8, "staleness_alpha": 0.5, "max_concurrency": 32}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.async_buffer, Some(8));
+        assert_eq!(cfg.staleness_alpha, 0.5);
+        assert_eq!(cfg.max_concurrency, 32);
+        assert!(ExperimentConfig::from_json(r#"{"async_buffer": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"staleness_alpha": -1}"#).is_err());
+        assert!(
+            ExperimentConfig::from_json(r#"{"async_buffer": 4, "secure_agg": true}"#).is_err(),
+            "secure aggregation needs a synchronous cohort"
+        );
+        assert!(
+            ExperimentConfig::from_json(r#"{"async_buffer": 4, "quantize_f16": true}"#).is_err()
+        );
+        assert!(
+            ExperimentConfig::from_json(
+                r#"{"async_buffer": 4, "strategy": {"kind": "fedprox", "mu": 0.1}}"#
+            )
+            .is_err(),
+            "a non-FedAvg strategy must not be silently replaced by FedBuff"
+        );
+        assert!(
+            ExperimentConfig::from_json(r#"{"async_buffer": 4, "fraction_fit": 0.5}"#).is_err()
+        );
+
+        let s = ScheduleConfig::from_json(
+            r#"{"async_buffer": 8, "staleness_alpha": 1.5, "max_concurrency": 64}"#,
+        )
+        .unwrap();
+        assert_eq!(s.async_buffer, Some(8));
+        assert_eq!(s.staleness_alpha, 1.5);
+        assert_eq!(s.effective_concurrency(), 64);
+        assert_eq!(
+            ScheduleConfig::default().cohort(24).effective_concurrency(),
+            24,
+            "max_concurrency 0 defaults to the cohort size"
+        );
+        assert!(ScheduleConfig::from_json(r#"{"async_buffer": 0}"#).is_err());
+        assert!(ScheduleConfig::from_json(r#"{"staleness_alpha": -0.1}"#).is_err());
+        // sync default stays valid and untouched
+        assert_eq!(ScheduleConfig::default().async_buffer, None);
+        ScheduleConfig::default().buffered(8).staleness(0.5).validate().unwrap();
     }
 
     #[test]

@@ -131,6 +131,8 @@ fn print_usage() {
                       --devices a,b,c --partitioner iid|dirichlet:A|shards:K\n\
                       --strategy fedavg|fedprox:MU|cutoff:DEV=TAU_S[,..]|fedavgm:BETA|qfedavg:Q\n\
                       --quantize f16|off --dropout P --agg rust|pjrt\n\
+                      --async-buffer K --staleness-alpha A --max-concurrency N\n\
+                      (async: FedBuff loop, no round barrier; --rounds = model versions)\n\
                       --t-step-ref <s> --out <csv> --artifacts <dir>\n\
            sched      run a cost-aware population-scale scheduling experiment\n\
                       --config <file.json> | --population N --cohort K --rounds R\n\
@@ -138,6 +140,10 @@ fn print_usage() {
                       --compare p1,p2,.. --deadline TAU_S --churn ON_S,OFF_S\n\
                       --epochs E --steps-per-epoch S --model-bytes B --seed N\n\
                       --target-accuracy A --t-step-ref <s> --out <csv>\n\
+                      --mode sync|async|both --async-buffer K --staleness-alpha A\n\
+                      --max-concurrency N  (async = FedBuff folds, per-flush versions;\n\
+                      both = every policy twice, sync vs async, one table;\n\
+                      --mode async/both without --async-buffer defaults to K=8)\n\
                       (real PJRT cohort numerics with artifacts, surrogate otherwise)\n\
            server     start a Flower TCP server\n\
                       --addr 127.0.0.1:9092 --model cifar_cnn --rounds 10 --epochs 1\n\
@@ -258,6 +264,18 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_parsed("dropout")? {
         cfg.dropout = v;
     }
+    if let Some(v) = args.get_parsed("async-buffer")? {
+        cfg.async_buffer = Some(v);
+    }
+    if let Some(v) = args.get_parsed("staleness-alpha")? {
+        cfg.staleness_alpha = v;
+    }
+    if let Some(v) = args.get_parsed("max-concurrency")? {
+        cfg.max_concurrency = v;
+    }
+    if let Some(v) = args.get_parsed("target-accuracy")? {
+        cfg.target_accuracy = Some(v);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -278,6 +296,25 @@ fn cmd_sim(args: &Args) -> Result<()> {
     table.row(vec!["accuracy".into(), format!("{acc:.4}")]);
     table.row(vec!["convergence time (min)".into(), format!("{mins:.2}")]);
     table.row(vec!["energy (kJ)".into(), format!("{kj:.2}")]);
+    if let Some(target) = cfg.target_accuracy {
+        table.row(vec![
+            format!("time to acc {target} (min)"),
+            match report.history.time_to_accuracy_s(target) {
+                Some(t) => format!("{:.2}", t / 60.0),
+                None => "-".into(),
+            },
+        ]);
+    }
+    if let Some(k) = cfg.async_buffer {
+        table.row(vec![
+            format!("model versions (K={k})"),
+            report.history.rounds.len().to_string(),
+        ]);
+        table.row(vec![
+            format!("mean staleness (alpha={})", cfg.staleness_alpha),
+            format!("{:.2}", report.history.mean_staleness()),
+        ]);
+    }
     print!("{}", table.render());
     if let Some(out) = args.get("out") {
         flowrs::metrics::write_report(&PathBuf::from(out), &report.history.to_csv())?;
@@ -325,6 +362,15 @@ fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
     if let Some(v) = args.get_parsed("t-step-ref")? {
         cfg.cost.t_step_ref_s = v;
     }
+    if let Some(v) = args.get_parsed("async-buffer")? {
+        cfg.async_buffer = Some(v);
+    }
+    if let Some(v) = args.get_parsed("staleness-alpha")? {
+        cfg.staleness_alpha = v;
+    }
+    if let Some(v) = args.get_parsed("max-concurrency")? {
+        cfg.max_concurrency = v;
+    }
     if let Some(v) = args.get("policy") {
         cfg.policy = PolicyConfig::parse(v)?;
     }
@@ -370,23 +416,52 @@ fn cmd_sched(args: &Args) -> Result<()> {
             .collect::<Result<_>>()?,
         None => vec![cfg.policy.clone()],
     };
+    // Which server loop(s) each policy runs under: the barrier-synchronous
+    // round loop, the FedBuff async mode, or both side by side.
+    let modes: Vec<bool> = match args.get("mode") {
+        // entries are `is_async`
+        Some("sync") => vec![false],
+        Some("async") => vec![true],
+        Some("both") => vec![false, true],
+        Some(other) => {
+            return Err(Error::Config(format!(
+                "unknown mode {other:?} (sync | async | both)"
+            )))
+        }
+        None => vec![cfg.async_buffer.is_some()],
+    };
     // Validate every compared variant up front: a bad entry must fail
     // before the first (possibly expensive) run, not mid-loop after
     // earlier results would be discarded.
-    let mut run_cfgs = Vec::with_capacity(policies.len());
+    let mut run_cfgs: Vec<(String, ScheduleConfig)> = Vec::new();
     let mut labels = std::collections::BTreeSet::new();
     for policy in policies {
-        let mut run_cfg = cfg.clone();
-        run_cfg.policy = policy;
-        run_cfg.validate()?;
-        if !labels.insert(run_cfg.policy.label()) {
-            return Err(Error::Config(format!(
-                "duplicate policy {:?} in --compare (each run would overwrite \
-                 the previous CSV)",
+        for &is_async in &modes {
+            let mut run_cfg = cfg.clone();
+            run_cfg.policy = policy.clone();
+            let label = if is_async {
+                let k = run_cfg
+                    .async_buffer
+                    .unwrap_or(flowrs::strategy::fedbuff::DEFAULT_BUFFER_SIZE);
+                run_cfg.async_buffer = Some(k);
+                format!(
+                    "{}+fedbuff:{k}:{}",
+                    run_cfg.policy.label(),
+                    run_cfg.staleness_alpha
+                )
+            } else {
+                run_cfg.async_buffer = None;
                 run_cfg.policy.label()
-            )));
+            };
+            run_cfg.validate()?;
+            if !labels.insert(label.clone()) {
+                return Err(Error::Config(format!(
+                    "duplicate policy {label:?} in --compare (each run would \
+                     overwrite the previous CSV)"
+                )));
+            }
+            run_cfgs.push((label, run_cfg));
         }
-        run_cfgs.push(run_cfg);
     }
     let single = run_cfgs.len() == 1;
     let target = cfg.target_accuracy.unwrap_or(0.5);
@@ -412,12 +487,13 @@ fn cmd_sched(args: &Args) -> Result<()> {
             "wasted (kJ)",
             "hit-rate",
             "dropped",
+            "mean stal",
         ],
     );
-    for run_cfg in run_cfgs {
+    for (label, run_cfg) in run_cfgs {
         // Variant-distinguishing label: `--compare utility:1,utility:3`
-        // must not collapse into one table row / CSV path.
-        let label = run_cfg.policy.label();
+        // (or the same policy sync vs async under `--mode both`) must not
+        // collapse into one table row / CSV path.
         let report = sim::population::run_population(&run_cfg, runtime.as_ref())?;
         table.row(vec![
             label.clone(),
@@ -431,6 +507,7 @@ fn cmd_sched(args: &Args) -> Result<()> {
             format!("{:.2}", report.wasted_energy_j() / 1e3),
             format!("{:.3}", report.hit_rate()),
             report.dropped_total().to_string(),
+            format!("{:.2}", report.mean_staleness()),
         ]);
         if let Some(out) = args.get("out") {
             let path = if single {

@@ -40,6 +40,31 @@ impl Cycle {
     pub fn is_on(&self, t_s: f64) -> bool {
         (t_s + self.phase_s) % (self.on_s + self.off_s) < self.on_s
     }
+
+    /// End of the on-dwell containing `t_s` — the instant a connection
+    /// opened at `t_s` dies. Call only when `is_on(t_s)`; infinite for an
+    /// always-on cycle.
+    pub fn on_dwell_end_s(&self, t_s: f64) -> f64 {
+        if self.off_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        let period = self.on_s + self.off_s;
+        let pos = (t_s + self.phase_s) % period;
+        debug_assert!(pos < self.on_s, "on_dwell_end_s called while offline");
+        t_s + (self.on_s - pos)
+    }
+
+    /// Seconds from `t_s` until this device is next online (0 if online
+    /// now).
+    pub fn next_on_delay_s(&self, t_s: f64) -> f64 {
+        let period = self.on_s + self.off_s;
+        let pos = (t_s + self.phase_s) % period;
+        if pos < self.on_s {
+            0.0
+        } else {
+            period - pos
+        }
+    }
 }
 
 /// Population-wide churn: every device's cycle derives deterministically
@@ -167,6 +192,33 @@ mod tests {
             assert!(states.iter().any(|&s| s), "device {d} never on");
             assert!(states.iter().any(|&s| !s), "device {d} never off");
         }
+    }
+
+    #[test]
+    fn dwell_helpers_agree_with_is_on() {
+        let m = model();
+        for d in 0..16 {
+            let c = m.cycle(d);
+            for i in 0..200 {
+                let t = i as f64 * 23.7;
+                if c.is_on(t) {
+                    assert_eq!(c.next_on_delay_s(t), 0.0, "device {d} t={t}");
+                    let end = c.on_dwell_end_s(t);
+                    assert!(end > t, "device {d} t={t}");
+                    // just before the dwell end: still on; just past: off
+                    assert!(c.is_on(end - 1e-6), "device {d} t={t} end={end}");
+                    assert!(!c.is_on(end + 1e-6), "device {d} t={t} end={end}");
+                } else {
+                    let dt = c.next_on_delay_s(t);
+                    assert!(dt > 0.0, "device {d} t={t}");
+                    assert!(c.is_on(t + dt + 1e-6), "device {d} t={t} dt={dt}");
+                }
+            }
+        }
+        // always-on cycles never disconnect and are never waited on
+        let c = Cycle::always_on();
+        assert_eq!(c.on_dwell_end_s(123.0), f64::INFINITY);
+        assert_eq!(c.next_on_delay_s(123.0), 0.0);
     }
 
     #[test]

@@ -144,6 +144,24 @@ pub trait CohortTrainer {
         cohort: &[usize],
         steps_per_client: u64,
     ) -> Result<(Vec<f64>, f64, f64)>;
+
+    /// One async buffer flush: `folds` pairs a reporting device index
+    /// with its staleness weight in (0, 1] (`(1+s)^-alpha`). Returns the
+    /// same `(losses, eval_loss, accuracy)` triple as [`train_round`],
+    /// losses aligned with `folds`. The default ignores the weights;
+    /// trainers that can discount stale work override it.
+    ///
+    /// [`train_round`]: CohortTrainer::train_round
+    fn train_flush(
+        &mut self,
+        version: u64,
+        pop: &Population,
+        folds: &[(usize, f64)],
+        steps_per_client: u64,
+    ) -> Result<(Vec<f64>, f64, f64)> {
+        let cohort: Vec<usize> = folds.iter().map(|&(i, _)| i).collect();
+        self.train_round(version, pop, &cohort, steps_per_client)
+    }
 }
 
 /// Closed-form training stand-in for population-scale runs without AOT
@@ -167,6 +185,18 @@ impl Default for SurrogateTrainer {
     }
 }
 
+impl SurrogateTrainer {
+    /// `(eval_loss, accuracy)` at the current cumulative progress.
+    fn metrics(&self) -> (f64, f64) {
+        let acc = if self.progress_steps > 0.0 {
+            self.ceiling * self.progress_steps / (self.progress_steps + self.half_steps)
+        } else {
+            0.0
+        };
+        (2.3 * (1.0 - acc / self.ceiling) + 0.05, acc)
+    }
+}
+
 impl CohortTrainer for SurrogateTrainer {
     fn train_round(
         &mut self,
@@ -176,15 +206,30 @@ impl CohortTrainer for SurrogateTrainer {
         steps_per_client: u64,
     ) -> Result<(Vec<f64>, f64, f64)> {
         self.progress_steps += (cohort.len() as u64 * steps_per_client) as f64;
-        let acc = if self.progress_steps > 0.0 {
-            self.ceiling * self.progress_steps / (self.progress_steps + self.half_steps)
-        } else {
-            0.0
-        };
-        let eval_loss = 2.3 * (1.0 - acc / self.ceiling) + 0.05;
+        let (eval_loss, acc) = self.metrics();
         let losses = cohort
             .iter()
             .map(|&i| eval_loss * (0.75 + 0.5 * pop.devices[i].skew))
+            .collect();
+        Ok((losses, eval_loss, acc))
+    }
+
+    /// Async flush: stale folds contribute their *discounted* step count
+    /// to the progress curve — the surrogate's closed-form version of
+    /// "stale updates help less".
+    fn train_flush(
+        &mut self,
+        _version: u64,
+        pop: &Population,
+        folds: &[(usize, f64)],
+        steps_per_client: u64,
+    ) -> Result<(Vec<f64>, f64, f64)> {
+        let weight: f64 = folds.iter().map(|&(_, w)| w).sum();
+        self.progress_steps += weight * steps_per_client as f64;
+        let (eval_loss, acc) = self.metrics();
+        let losses = folds
+            .iter()
+            .map(|&(i, _)| eval_loss * (0.75 + 0.5 * pop.devices[i].skew))
             .collect();
         Ok((losses, eval_loss, acc))
     }
@@ -215,6 +260,13 @@ pub struct PopulationRound {
     pub round_energy_j: f64,
     /// Energy burned by dropped clients (subset of `round_energy_j`).
     pub wasted_energy_j: f64,
+    /// Async mode only: mean/max staleness (model versions between a
+    /// fold's dispatch and its flush) over this flush — 0 in sync rounds.
+    pub mean_staleness: f64,
+    pub max_staleness: u64,
+    /// Async mode only: dispatches still in flight when this version
+    /// flushed.
+    pub in_flight: usize,
 }
 
 /// A full population-scale experiment.
@@ -272,16 +324,31 @@ impl PopulationReport {
             .map(|r| r.cum_time_s)
     }
 
+    /// Completion-weighted mean staleness (0 for a synchronous run).
+    pub fn mean_staleness(&self) -> f64 {
+        let (sum, n) = self.rounds.iter().fold((0.0f64, 0u64), |(s, n), r| {
+            (
+                s + r.mean_staleness * r.completed as f64,
+                n + r.completed as u64,
+            )
+        });
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
     /// CSV export (header + one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,available,selected,completed,dropped_deadline,dropped_churn,\
              train_loss,eval_loss,accuracy,steps,round_time_s,cum_time_s,\
-             round_energy_j,wasted_energy_j\n",
+             round_energy_j,wasted_energy_j,mean_staleness,max_staleness,in_flight\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.3},{:.3},{:.3}\n",
+                "{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.3},{:.3},{:.3},{:.3},{},{}\n",
                 r.round,
                 r.available,
                 r.selected,
@@ -296,6 +363,9 @@ impl PopulationReport {
                 r.cum_time_s,
                 r.round_energy_j,
                 r.wasted_energy_j,
+                r.mean_staleness,
+                r.max_staleness,
+                r.in_flight,
             ));
         }
         out
@@ -306,12 +376,29 @@ impl PopulationReport {
 // Engine
 // ---------------------------------------------------------------------------
 
-/// A client-completion event on the virtual-time queue.
+/// How an async dispatch resolves. Everything about a dispatch is
+/// modeled, so its fate is known the moment it is issued; the event is
+/// queued at the time the server *learns* the outcome.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Outcome {
+    Fold,
+    DropDeadline,
+    DropChurn,
+}
+
+/// A client-completion event on the virtual-time queue. `outcome` and
+/// `base_version` only matter in async mode (a device is never in flight
+/// twice, so `device_idx` still breaks ordering ties uniquely); in async
+/// mode `finish_s` is the *resolve* time — fold at the modeled finish,
+/// churn drop at the disconnect, deadline drop at τ — and `energy_j` is
+/// already prorated to the work done by then.
 #[derive(Debug, Clone, Copy)]
 struct Completion {
     finish_s: f64,
     device_idx: usize,
     energy_j: f64,
+    base_version: u64,
+    outcome: Outcome,
 }
 
 impl PartialEq for Completion {
@@ -359,8 +446,13 @@ impl<T: CohortTrainer> Engine<T> {
     }
 
     /// Run the configured number of rounds (early-stopping on the target
-    /// accuracy, if set).
+    /// accuracy, if set). With `cfg.async_buffer` set this runs the
+    /// event-driven async mode instead — each "round" in the report is
+    /// then one model version (buffer flush).
     pub fn run(mut self) -> Result<PopulationReport> {
+        if self.cfg.async_buffer.is_some() {
+            return self.run_async();
+        }
         let mut rounds = Vec::new();
         for round in 1..=self.cfg.rounds {
             let rec = self.run_round(round)?;
@@ -410,10 +502,8 @@ impl<T: CohortTrainer> Engine<T> {
             }
             let mut dt = f64::INFINITY;
             for d in &self.pop.devices {
-                let period = d.cycle.on_s + d.cycle.off_s;
-                let pos = (now + d.cycle.phase_s) % period;
-                // every device is offline here, i.e. pos >= on_s
-                dt = dt.min(period - pos);
+                // every device is offline here, so the delay is positive
+                dt = dt.min(d.cycle.next_on_delay_s(now));
             }
             if !dt.is_finite() {
                 return Err(Error::Protocol(format!(
@@ -465,6 +555,8 @@ impl<T: CohortTrainer> Engine<T> {
                 finish_s: now + ctx.modeled_round_time_s(d.device),
                 device_idx: i,
                 energy_j: ctx.modeled_round_energy_j(d.device),
+                base_version: 0,
+                outcome: Outcome::Fold, // sync mode classifies at drain
             }));
         }
         let deadline_abs = self.cfg.deadline_s.map(|tau| now + tau);
@@ -479,13 +571,7 @@ impl<T: CohortTrainer> Engine<T> {
             // The device was online at dispatch (it came from the
             // availability scan); its connection survives only until the
             // current on-dwell ends.
-            let first_off_s = if d.cycle.off_s > 0.0 {
-                let period = d.cycle.on_s + d.cycle.off_s;
-                let pos = (now + d.cycle.phase_s) % period;
-                now + (d.cycle.on_s - pos)
-            } else {
-                f64::INFINITY
-            };
+            let first_off_s = d.cycle.on_dwell_end_s(now);
             let round_cutoff = deadline_abs.unwrap_or(f64::INFINITY).min(ev.finish_s);
             if first_off_s < round_cutoff {
                 // Went offline mid-round before it could report: its work
@@ -560,6 +646,277 @@ impl<T: CohortTrainer> Engine<T> {
             cum_time_s: self.clock_s,
             round_energy_j: energy_j,
             wasted_energy_j: wasted_j,
+            mean_staleness: 0.0, // barrier rounds are never stale
+            max_staleness: 0,
+            in_flight: 0,
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Async (FedBuff-style) mode
+    // -----------------------------------------------------------------
+
+    /// Event-driven async mode: keep up to `effective_concurrency()`
+    /// dispatches in flight, fold each device-finish event into a buffer,
+    /// and flush a model version every `async_buffer` folds — no cohort
+    /// barrier, so a straggler only ever delays its *own* contribution.
+    /// Staleness (versions flushed between a fold's dispatch and its
+    /// arrival) discounts its training weight by `(1+s)^-alpha` via
+    /// [`CohortTrainer::train_flush`].
+    ///
+    /// `deadline_s` becomes a per-dispatch cutoff: a device that would
+    /// finish more than τ after its dispatch is dropped at τ (energy up
+    /// to the cutoff wasted) and its concurrency slot frees *at the
+    /// cutoff*, not at the hypothetical finish — likewise a churn drop
+    /// resolves at the disconnect. The virtual clock therefore never
+    /// advances past the moment the server learns an outcome.
+    fn run_async(mut self) -> Result<PopulationReport> {
+        let k_flush = self
+            .cfg
+            .async_buffer
+            .expect("run_async requires cfg.async_buffer");
+        let alpha = self.cfg.staleness_alpha;
+        let max_in_flight = self.cfg.effective_concurrency().max(1);
+        let steps = self.cfg.epochs.max(0) as u64 * self.cfg.steps_per_epoch;
+
+        let mut rounds: Vec<PopulationRound> = Vec::new();
+        let mut version: u64 = 0;
+        let mut now = self.clock_s;
+        let mut last_flush_s = now;
+        let mut in_flight = vec![false; self.pop.devices.len()];
+        let mut in_flight_count = 0usize;
+        let mut heap: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
+        let mut buffer: Vec<(usize, u64)> = Vec::new(); // (device, staleness)
+        // accumulators since the last flush
+        let mut dropped_deadline = 0usize;
+        let mut dropped_churn = 0usize;
+        let mut wasted_j = 0f64;
+        let mut energy_j = 0f64;
+        let mut avail_count = 0usize;
+        let mut events_since_flush = 0u64;
+        let mut rescans = 0u32;
+
+        while version < self.cfg.rounds {
+            // ---- top up: keep the in-flight window full ----------------
+            if in_flight_count < max_in_flight {
+                let mut avail: Vec<u32> = Vec::new();
+                for (i, d) in self.pop.devices.iter().enumerate() {
+                    if !in_flight[i] && d.cycle.is_on(now) {
+                        avail.push(i as u32);
+                    }
+                }
+                avail_count = avail.len() + in_flight_count;
+                if !avail.is_empty() {
+                    let candidates: Vec<Candidate> = avail
+                        .iter()
+                        .map(|&i| {
+                            let d = &self.pop.devices[i as usize];
+                            Candidate {
+                                device: d.device,
+                                num_examples: d.num_examples,
+                                last_loss: d.last_loss,
+                                rounds_since_selected: d
+                                    .last_selected_round
+                                    .map(|r| (version + 1).saturating_sub(r)),
+                            }
+                        })
+                        .collect();
+                    let ctx = SelectionContext {
+                        round: version + 1,
+                        cost: &self.cfg.cost,
+                        steps_per_round: steps,
+                        model_bytes: self.cfg.model_bytes,
+                        target_cohort: max_in_flight - in_flight_count,
+                        deadline_s: self.cfg.deadline_s,
+                    };
+                    let picked = self.policy.select(&ctx, &candidates);
+                    for j in picked {
+                        let i = avail[j] as usize;
+                        let (full_finish_s, full_energy_j, first_off_s) = {
+                            let d = &self.pop.devices[i];
+                            (
+                                now + ctx.modeled_round_time_s(d.device),
+                                ctx.modeled_round_energy_j(d.device),
+                                // online at dispatch; the connection
+                                // survives only to this on-dwell's end
+                                d.cycle.on_dwell_end_s(now),
+                            )
+                        };
+                        let deadline_abs = self
+                            .cfg
+                            .deadline_s
+                            .map(|tau| now + tau)
+                            .unwrap_or(f64::INFINITY);
+                        // The dispatch's fate is fully modeled, so decide
+                        // it now and queue the event at the moment the
+                        // server *learns* it: a doomed dispatch frees its
+                        // slot at the cutoff and never drags the clock to
+                        // its hypothetical finish.
+                        let (resolve_s, outcome) = if first_off_s
+                            < deadline_abs.min(full_finish_s)
+                        {
+                            (first_off_s, Outcome::DropChurn)
+                        } else if full_finish_s > deadline_abs {
+                            (deadline_abs, Outcome::DropDeadline)
+                        } else {
+                            (full_finish_s, Outcome::Fold)
+                        };
+                        // energy up to the resolve point (all of it for a
+                        // fold, the burned fraction for a drop)
+                        let frac =
+                            ((resolve_s - now) / (full_finish_s - now)).clamp(0.0, 1.0);
+                        in_flight[i] = true;
+                        in_flight_count += 1;
+                        self.pop.devices[i].last_selected_round = Some(version + 1);
+                        heap.push(Reverse(Completion {
+                            finish_s: resolve_s,
+                            device_idx: i,
+                            energy_j: full_energy_j * frac,
+                            base_version: version,
+                            outcome,
+                        }));
+                    }
+                }
+            }
+
+            // ---- drain one completion event ----------------------------
+            let Some(Reverse(ev)) = heap.pop() else {
+                // Nothing in flight. Every *built-in* policy dispatches
+                // at least one online candidate, so this means nobody is
+                // online — but a custom policy may decline; diagnose that
+                // accurately (like the sync loop) instead of blaming
+                // availability.
+                let online = self
+                    .pop
+                    .devices
+                    .iter()
+                    .filter(|d| d.cycle.is_on(now))
+                    .count();
+                if online > 0 {
+                    return Err(Error::Protocol(format!(
+                        "async version {}: policy selected no clients \
+                         ({online} available)",
+                        version + 1
+                    )));
+                }
+                // Nobody online: fast-forward to the next device arrival
+                // (the dead air is charged to the flush in progress,
+                // exactly like the sync loop).
+                rescans += 1;
+                if rescans > 1_000 {
+                    return Err(Error::Protocol(format!(
+                        "async version {}: no devices ever available (t={now:.0}s)",
+                        version + 1
+                    )));
+                }
+                let mut dt = f64::INFINITY;
+                for d in &self.pop.devices {
+                    dt = dt.min(d.cycle.next_on_delay_s(now));
+                }
+                if !dt.is_finite() {
+                    return Err(Error::Protocol(format!(
+                        "async version {}: no devices ever available (t={now:.0}s)",
+                        version + 1
+                    )));
+                }
+                now += dt.max(1e-6);
+                continue;
+            };
+            rescans = 0;
+            events_since_flush += 1;
+            if events_since_flush > 10_000u64.max(1_000 * k_flush as u64) {
+                return Err(Error::Protocol(format!(
+                    "async version {}: buffer starved ({} events without {} \
+                     usable folds — deadline/churn drop everything)",
+                    version + 1,
+                    events_since_flush,
+                    k_flush
+                )));
+            }
+            now = now.max(ev.finish_s);
+            let i = ev.device_idx;
+            in_flight[i] = false;
+            in_flight_count -= 1;
+            energy_j += ev.energy_j;
+            match ev.outcome {
+                Outcome::Fold => buffer.push((i, version - ev.base_version)),
+                Outcome::DropChurn => {
+                    dropped_churn += 1;
+                    wasted_j += ev.energy_j;
+                }
+                Outcome::DropDeadline => {
+                    dropped_deadline += 1;
+                    wasted_j += ev.energy_j;
+                }
+            }
+
+            // ---- flush: a new model version every K folds --------------
+            if buffer.len() >= k_flush {
+                version += 1;
+                let folds: Vec<(usize, f64)> = buffer
+                    .iter()
+                    .map(|&(i, s)| (i, crate::strategy::fedbuff::staleness_discount(s, alpha)))
+                    .collect();
+                let (losses, eval_loss, accuracy) =
+                    self.trainer.train_flush(version, &self.pop, &folds, steps)?;
+                debug_assert_eq!(losses.len(), buffer.len());
+                for (&(di, _), &l) in buffer.iter().zip(&losses) {
+                    self.pop.devices[di].last_loss = Some(l);
+                }
+                let completed = buffer.len();
+                let staleness_sum: u64 = buffer.iter().map(|&(_, s)| s).sum();
+                let max_staleness = buffer.iter().map(|&(_, s)| s).max().unwrap_or(0);
+                let train_loss = if losses.is_empty() {
+                    f64::NAN
+                } else {
+                    losses.iter().sum::<f64>() / losses.len() as f64
+                };
+                let round_time_s = (now - last_flush_s) + self.cfg.cost.server_overhead_s;
+                now += self.cfg.cost.server_overhead_s;
+                last_flush_s = now;
+                self.clock_s = now;
+                rounds.push(PopulationRound {
+                    round: version,
+                    available: avail_count,
+                    // resolution-based, like the sync loop's accounting:
+                    // dispatches *settled* this window (folds + drops), so
+                    // selected - completed = drops and hit_rate/dropped
+                    // keep their meaning; outstanding work is `in_flight`
+                    selected: completed + dropped_deadline + dropped_churn,
+                    completed,
+                    dropped_deadline,
+                    dropped_churn,
+                    train_loss,
+                    eval_loss,
+                    accuracy,
+                    steps: completed as u64 * steps,
+                    round_time_s,
+                    cum_time_s: self.clock_s,
+                    round_energy_j: energy_j,
+                    wasted_energy_j: wasted_j,
+                    mean_staleness: staleness_sum as f64 / completed as f64,
+                    max_staleness,
+                    in_flight: in_flight_count,
+                });
+                buffer.clear();
+                dropped_deadline = 0;
+                dropped_churn = 0;
+                wasted_j = 0.0;
+                energy_j = 0.0;
+                events_since_flush = 0;
+                if let Some(target) = self.cfg.target_accuracy {
+                    if accuracy >= target {
+                        break;
+                    }
+                }
+            }
+        }
+        self.clock_s = now;
+        Ok(PopulationReport {
+            name: self.cfg.name.clone(),
+            policy: self.policy.name().to_string(),
+            population: self.cfg.population,
+            rounds,
         })
     }
 }
@@ -675,6 +1032,94 @@ mod tests {
         c.target_accuracy = Some(0.3);
         let report = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
         assert!(report.rounds.len() < 50);
+        assert!(report.final_accuracy() >= 0.3);
+    }
+
+    #[test]
+    fn async_mode_flushes_versions_and_tracks_staleness() {
+        let c = cfg().buffered(8).rounds(10);
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.rounds.len(), 10);
+        for r in &report.rounds {
+            assert_eq!(r.completed, 8, "every flush folds exactly K results");
+            assert!(r.round_time_s > 0.0);
+            assert!(r.in_flight <= c.effective_concurrency());
+        }
+        assert!(report
+            .rounds
+            .windows(2)
+            .all(|w| w[1].cum_time_s > w[0].cum_time_s));
+        assert!(report
+            .rounds
+            .windows(2)
+            .all(|w| w[1].accuracy >= w[0].accuracy));
+        // the default mix is heterogeneous (RPi 6× slower than TX2 GPU):
+        // versions flush while stragglers are still in flight, so some
+        // folds must land stale
+        assert!(
+            report.rounds.iter().any(|r| r.max_staleness > 0),
+            "no stale folds despite a heterogeneous mix"
+        );
+        assert!(report.mean_staleness() > 0.0);
+        // no deadline, no churn: nothing is dropped in async mode either
+        assert_eq!(report.dropped_total(), 0);
+        assert_eq!(report.wasted_energy_j(), 0.0);
+    }
+
+    #[test]
+    fn async_runs_are_deterministic() {
+        let c = cfg().buffered(8).rounds(8).seed(23);
+        let a = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        let b = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn async_deadline_drops_per_dispatch_but_still_flushes() {
+        // τ = 30 s drops every RPi/Pixel-2 dispatch (modeled 33–71 s)
+        // while the fast classes keep the buffer filling. 20 versions so
+        // the run outlasts the slow events (first drop pops at ≈ 31 s).
+        let c = cfg().buffered(4).deadline(Some(30.0)).rounds(20);
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.rounds.len(), 20);
+        assert!(report.dropped_total() > 0, "no drops under a tight τ");
+        assert!(report.wasted_energy_j() > 0.0);
+        // accounting invariant, same shape as the sync loop: every
+        // settled dispatch either folded or was dropped
+        for r in &report.rounds {
+            assert_eq!(r.completed, 4);
+            assert_eq!(r.completed + r.dropped_deadline + r.dropped_churn, r.selected);
+        }
+        assert!(report.hit_rate() < 1.0);
+    }
+
+    #[test]
+    fn async_mode_survives_churn() {
+        let c = cfg()
+            .population(2_000)
+            .buffered(8)
+            .churn(Some(ChurnSpec { mean_on_s: 500.0, mean_off_s: 500.0 }))
+            .rounds(6);
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.rounds.len(), 6);
+        assert!(report.rounds.iter().all(|r| r.completed == 8));
+    }
+
+    #[test]
+    fn async_target_accuracy_stops_early() {
+        let mut c = cfg().buffered(8).rounds(500);
+        c.target_accuracy = Some(0.3);
+        let report = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        assert!(report.rounds.len() < 500);
         assert!(report.final_accuracy() >= 0.3);
     }
 

@@ -15,7 +15,11 @@
 //!   trace synthesis from a seeded RNG).
 //! * [`engine`] — an event-driven virtual-time engine that scales to
 //!   100k–1M virtual devices by advancing a binary-heap event queue over
-//!   modeled costs, training numerics only for the selected cohort.
+//!   modeled costs, training numerics only for the selected cohort. With
+//!   [`crate::config::ScheduleConfig::async_buffer`] set it runs in
+//!   FedBuff-style async mode: device-finish events fold into a buffer
+//!   (staleness-discounted) instead of barriering each round, and every
+//!   K folds flush a model version.
 //!
 //! Wiring: [`crate::config::ScheduleConfig`] describes an experiment
 //! (JSON or builder), [`crate::server::Server`] accepts a selection hook

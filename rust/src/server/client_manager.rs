@@ -43,6 +43,19 @@ impl ClientManager {
         self.clients.lock().expect("manager lock").len()
     }
 
+    /// Whether *this exact* proxy (pointer identity, deliberately not id)
+    /// is still registered. The async loop uses this to discard in-flight
+    /// results whose client deregistered — or reconnected as a *new*
+    /// proxy under the same id, which an id lookup would wrongly treat as
+    /// still-live — while the fit was outstanding.
+    pub fn contains_proxy(&self, proxy: &Arc<ClientProxy>) -> bool {
+        self.clients
+            .lock()
+            .expect("manager lock")
+            .iter()
+            .any(|c| Arc::ptr_eq(c, proxy))
+    }
+
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

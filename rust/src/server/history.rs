@@ -27,6 +27,16 @@ pub struct RoundRecord {
     /// parameter bytes moved server→clients / clients→server
     pub down_bytes: usize,
     pub up_bytes: usize,
+    /// async loop only: mean/max staleness (model versions between a
+    /// result's dispatch and its fold) over the results aggregated into
+    /// this record — 0 in a barrier-synchronous round
+    pub mean_staleness: f64,
+    pub max_staleness: u64,
+    /// async loop only: fit dispatches in flight when this version flushed
+    pub concurrency: usize,
+    /// async loop only: in-flight results discarded because their client
+    /// deregistered before they arrived
+    pub fit_discarded: usize,
 }
 
 /// The full experiment history.
@@ -81,16 +91,33 @@ impl History {
             .map(|r| r.cum_time_s)
     }
 
+    /// Completion-weighted mean staleness across the whole run (0 for a
+    /// barrier-synchronous history).
+    pub fn mean_staleness(&self) -> f64 {
+        let (sum, n) = self.rounds.iter().fold((0.0f64, 0u64), |(s, n), r| {
+            (
+                s + r.mean_staleness * r.fit_completed as f64,
+                n + r.fit_completed as u64,
+            )
+        });
+        if n == 0 {
+            0.0
+        } else {
+            sum / n as f64
+        }
+    }
+
     /// CSV export (header + one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,fit_selected,fit_completed,fit_failures,train_loss,eval_loss,\
              accuracy,round_time_s,cum_time_s,round_energy_j,cum_energy_j,steps,\
-             truncated_clients,down_bytes,up_bytes\n",
+             truncated_clients,down_bytes,up_bytes,mean_staleness,max_staleness,\
+             concurrency,fit_discarded\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3},{:.3},{},{},{},{}\n",
+                "{},{},{},{},{:.6},{:.6},{:.6},{:.3},{:.3},{:.3},{:.3},{},{},{},{},{:.3},{},{},{}\n",
                 r.round,
                 r.fit_selected,
                 r.fit_completed,
@@ -106,6 +133,10 @@ impl History {
                 r.truncated_clients,
                 r.down_bytes,
                 r.up_bytes,
+                r.mean_staleness,
+                r.max_staleness,
+                r.concurrency,
+                r.fit_discarded,
             ));
         }
         out
@@ -146,6 +177,21 @@ mod tests {
         assert_eq!(h.rounds_to_accuracy(0.6), Some(2));
         assert_eq!(h.time_to_accuracy_s(0.6), Some(200.0));
         assert_eq!(h.rounds_to_accuracy(0.9), None);
+    }
+
+    #[test]
+    fn mean_staleness_weighted_by_completions() {
+        let mut h = History::default();
+        let mut a = rec(1, 0.1, 1.0, 1.0);
+        a.fit_completed = 8;
+        a.mean_staleness = 1.0;
+        let mut b = rec(2, 0.2, 1.0, 1.0);
+        b.fit_completed = 2;
+        b.mean_staleness = 6.0;
+        h.push(a);
+        h.push(b);
+        assert!((h.mean_staleness() - 2.0).abs() < 1e-12); // (8·1 + 2·6)/10
+        assert_eq!(History::default().mean_staleness(), 0.0);
     }
 
     #[test]

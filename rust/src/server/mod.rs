@@ -10,10 +10,12 @@
 //! (compute + radio + optional idle-while-waiting), accumulated into a
 //! [`History`].
 
+pub mod async_loop;
 pub mod client_manager;
 pub mod history;
 pub mod proxy;
 
+pub use async_loop::{AsyncServer, AsyncStats};
 pub use client_manager::ClientManager;
 pub use history::{History, RoundRecord};
 pub use proxy::ClientProxy;
@@ -47,6 +49,20 @@ pub struct ServerConfig {
     pub target_accuracy: Option<f64>,
     /// Charge idle power to fast clients while they wait for stragglers.
     pub count_idle_energy: bool,
+    /// Async loop ([`AsyncServer`]): flush the aggregation buffer every K
+    /// successful results. `None` = the synchronous barrier loop; callers
+    /// (e.g. [`crate::sim::run_experiment`]) use this knob to pick the
+    /// loop and size the FedBuff buffer.
+    pub async_buffer: Option<usize>,
+    /// Async loop: polynomial staleness-discount exponent
+    /// (`w(s) = (1+s)^-alpha`).
+    pub staleness_alpha: f64,
+    /// Async loop: max concurrent fit dispatches (0 = every registered
+    /// client stays in flight).
+    pub max_concurrency: usize,
+    /// Async loop: modeled local train steps per dispatch, used for
+    /// virtual-time accounting of each in-flight exchange.
+    pub steps_per_round: u64,
 }
 
 impl Default for ServerConfig {
@@ -58,6 +74,10 @@ impl Default for ServerConfig {
             quorum_timeout: Duration::from_secs(60),
             target_accuracy: None,
             count_idle_energy: true,
+            async_buffer: None,
+            staleness_alpha: crate::strategy::fedbuff::DEFAULT_STALENESS_ALPHA,
+            max_concurrency: 0,
+            steps_per_round: 8,
         }
     }
 }
@@ -163,9 +183,17 @@ impl Server {
                 }
             }
         }
-        // graceful shutdown
+        // Graceful shutdown. A client whose connection died mid-run (or
+        // that already left) makes `reconnect` fail — that must never
+        // hang or abort the shutdown sweep, but it must not be silent
+        // either: surface which client it was.
         for proxy in self.manager.snapshot() {
-            let _ = proxy.reconnect(0);
+            if let Err(e) = proxy.reconnect(0) {
+                log::warn(&format!(
+                    "client {}: reconnect at shutdown failed: {e}",
+                    proxy.handle.id
+                ));
+            }
         }
         Ok(history)
     }
@@ -382,6 +410,10 @@ impl Server {
             truncated_clients,
             down_bytes,
             up_bytes,
+            mean_staleness: 0.0, // barrier rounds are never stale
+            max_staleness: 0,
+            concurrency: fit_selected,
+            fit_discarded: 0,
         })
     }
 }
@@ -445,7 +477,7 @@ pub fn serve_registrations(
 }
 
 #[cfg(test)]
-mod tests {
+pub(crate) mod tests {
     use super::*;
     use crate::client::Client;
     use crate::device::profiles;
@@ -499,14 +531,21 @@ mod tests {
         }
     }
 
-    fn spawn_fake_cohort(manager: &Arc<ClientManager>, n: usize) -> Vec<std::thread::JoinHandle<()>> {
-        (0..n)
-            .map(|i| {
+    /// Spawn one in-proc fake client per entry in `devices` (profile
+    /// names); ids are `fake-0..`. Shared with the async-loop tests.
+    pub(crate) fn spawn_fake_cohort_on(
+        manager: &Arc<ClientManager>,
+        devices: &[&str],
+    ) -> Vec<std::thread::JoinHandle<()>> {
+        devices
+            .iter()
+            .enumerate()
+            .map(|(i, device)| {
                 let (server_end, client_end) = inproc::pair();
                 manager.register(Arc::new(ClientProxy::new(
                     ClientHandle {
                         id: format!("fake-{i}"),
-                        device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+                        device: profiles::by_name(device).unwrap(),
                         num_examples: 256,
                     },
                     Connection::InProc(server_end),
@@ -543,6 +582,25 @@ mod tests {
                 })
             })
             .collect()
+    }
+
+    pub(crate) fn spawn_fake_cohort(
+        manager: &Arc<ClientManager>,
+        n: usize,
+    ) -> Vec<std::thread::JoinHandle<()>> {
+        spawn_fake_cohort_on(manager, &vec!["jetson_tx2_gpu"; n])
+    }
+
+    /// `fast` TX2 GPUs plus `slow` Raspberry Pis (6× the modeled compute
+    /// time — the straggler class the async loop routes around).
+    pub(crate) fn spawn_fake_straggler_cohort(
+        manager: &Arc<ClientManager>,
+        fast: usize,
+        slow: usize,
+    ) -> Vec<std::thread::JoinHandle<()>> {
+        let mut devices = vec!["jetson_tx2_gpu"; fast];
+        devices.extend(std::iter::repeat("raspberry_pi4").take(slow));
+        spawn_fake_cohort_on(manager, &devices)
     }
 
     #[test]
@@ -653,6 +711,48 @@ mod tests {
         assert_eq!(history.rounds[0].fit_selected, 2);
         for t in threads {
             t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_with_dead_connection_warns_but_never_hangs() {
+        // One live fake client plus one proxy whose peer hung up before
+        // the run: the round counts the dead client as a failure, and the
+        // graceful-shutdown sweep must log-and-continue past the dead
+        // connection instead of hanging or erroring the whole run.
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 1);
+        let (server_end, client_end) = inproc::pair();
+        drop(client_end); // dead on arrival
+        manager.register(Arc::new(ClientProxy::new(
+            ClientHandle {
+                id: "dead-phone".into(),
+                device: profiles::by_name("pixel4").unwrap(),
+                num_examples: 64,
+            },
+            Connection::InProc(server_end),
+        )));
+        let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+        let mut server = Server::new(
+            Arc::clone(&manager),
+            Box::new(strategy),
+            CostModel::default(),
+            ServerConfig { num_rounds: 1, quorum: 2, ..Default::default() },
+        );
+        let (tx, rx) = std::sync::mpsc::channel();
+        let t = std::thread::spawn(move || {
+            tx.send(server.run(Parameters::from_flat(vec![0.0; 4]))).ok();
+        });
+        let history = rx
+            .recv_timeout(Duration::from_secs(30))
+            .expect("server hung during the run or at shutdown")
+            .expect("one live client must be enough to finish the round");
+        assert_eq!(history.rounds.len(), 1);
+        assert_eq!(history.rounds[0].fit_completed, 1);
+        assert_eq!(history.rounds[0].fit_failures, 1);
+        t.join().unwrap();
+        for th in threads {
+            th.join().unwrap();
         }
     }
 

@@ -19,10 +19,10 @@ use crate::data::{Dataset, SyntheticSpec};
 use crate::error::{Error, Result};
 use crate::proto::Parameters;
 use crate::runtime::Runtime;
-use crate::server::{ClientManager, ClientProxy, History, Server, ServerConfig};
+use crate::server::{AsyncServer, ClientManager, ClientProxy, History, Server, ServerConfig};
 use crate::strategy::{
-    fedavg::TrainingPlan, Aggregator, ClientHandle, FedAvg, FedAvgCutoff, FedAvgM, FedProx,
-    QFedAvg, Strategy,
+    fedavg::TrainingPlan, Aggregator, ClientHandle, FedAvg, FedAvgCutoff, FedAvgM, FedBuff,
+    FedProx, QFedAvg, Strategy,
 };
 use crate::telemetry::log;
 use crate::transport::{inproc, Connection};
@@ -50,15 +50,20 @@ impl SimReport {
     }
 }
 
-/// Build the strategy described by the config.
-pub fn build_strategy(cfg: &ExperimentConfig, runtime: &Runtime) -> Box<dyn Strategy> {
-    let aggregator = match cfg.agg_backend {
+/// Aggregation backend described by the config.
+pub fn build_aggregator(cfg: &ExperimentConfig, runtime: &Runtime) -> Aggregator {
+    match cfg.agg_backend {
         AggBackend::Rust => Aggregator::Rust,
         AggBackend::Pjrt => Aggregator::Pjrt {
             runtime: runtime.clone(),
             model: cfg.model.clone(),
         },
-    };
+    }
+}
+
+/// Build the strategy described by the config.
+pub fn build_strategy(cfg: &ExperimentConfig, runtime: &Runtime) -> Box<dyn Strategy> {
+    let aggregator = build_aggregator(cfg, runtime);
     let plan = TrainingPlan { epochs: cfg.epochs, lr: cfg.lr };
     let base = FedAvg::new(plan, aggregator)
         .with_fraction(cfg.fraction_fit, 1)
@@ -224,21 +229,52 @@ pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimRe
         }));
     }
 
-    let strategy = build_strategy(cfg, runtime);
-    let mut server = Server::new(
-        Arc::clone(&manager),
-        strategy,
-        cfg.cost.clone(),
-        ServerConfig {
-            num_rounds: cfg.rounds,
-            quorum: cfg.num_clients,
-            target_accuracy: cfg.target_accuracy,
-            count_idle_energy: cfg.count_idle_energy,
-            ..Default::default()
-        },
-    );
     let initial = Parameters::from_flat(runtime.initial_parameters(&cfg.model)?);
-    let history = server.run(initial)?;
+    let history = if let Some(k) = cfg.async_buffer {
+        // FedBuff async loop: no round barrier, `rounds` counts model
+        // versions. Validation already rejected everything the async loop
+        // cannot honor (secure_agg, quantize_f16, non-FedAvg strategies,
+        // fraction_fit < 1), so nothing is silently ignored here.
+        let strategy = FedBuff::new(
+            TrainingPlan { epochs: cfg.epochs, lr: cfg.lr },
+            build_aggregator(cfg, runtime),
+            k,
+        )
+        .with_alpha(cfg.staleness_alpha);
+        let mut server = AsyncServer::new(
+            Arc::clone(&manager),
+            Box::new(strategy),
+            cfg.cost.clone(),
+            ServerConfig {
+                num_rounds: cfg.rounds,
+                quorum: cfg.num_clients,
+                target_accuracy: cfg.target_accuracy,
+                count_idle_energy: cfg.count_idle_energy,
+                async_buffer: Some(k),
+                staleness_alpha: cfg.staleness_alpha,
+                max_concurrency: cfg.max_concurrency,
+                // paper workload: 8 train steps per local epoch
+                steps_per_round: cfg.epochs.max(0) as u64 * 8,
+                ..Default::default()
+            },
+        );
+        server.run(initial)?
+    } else {
+        let strategy = build_strategy(cfg, runtime);
+        let mut server = Server::new(
+            Arc::clone(&manager),
+            strategy,
+            cfg.cost.clone(),
+            ServerConfig {
+                num_rounds: cfg.rounds,
+                quorum: cfg.num_clients,
+                target_accuracy: cfg.target_accuracy,
+                count_idle_energy: cfg.count_idle_energy,
+                ..Default::default()
+            },
+        );
+        server.run(initial)?
+    };
     for t in client_threads {
         t.join()
             .map_err(|_| Error::Client("client thread panicked".into()))??;

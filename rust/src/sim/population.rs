@@ -52,18 +52,22 @@ impl RuntimeCohortTrainer {
     }
 }
 
-impl CohortTrainer for RuntimeCohortTrainer {
-    fn train_round(
+impl RuntimeCohortTrainer {
+    /// Shared round/flush body: train every listed device from the
+    /// current globals, aggregate weighted by `examples × fold_weight`
+    /// (fold weights are 1.0 in the synchronous loop, the staleness
+    /// discount in async mode), then evaluate the new globals.
+    fn train_weighted(
         &mut self,
         round: u64,
         pop: &Population,
-        cohort: &[usize],
+        folds: &[(usize, f64)],
         steps_per_client: u64,
     ) -> Result<(Vec<f64>, f64, f64)> {
-        let mut updated: Vec<Vec<f32>> = Vec::with_capacity(cohort.len());
-        let mut weights: Vec<f64> = Vec::with_capacity(cohort.len());
-        let mut losses: Vec<f64> = Vec::with_capacity(cohort.len());
-        for &i in cohort {
+        let mut updated: Vec<Vec<f32>> = Vec::with_capacity(folds.len());
+        let mut weights: Vec<f64> = Vec::with_capacity(folds.len());
+        let mut losses: Vec<f64> = Vec::with_capacity(folds.len());
+        for &(i, fold_w) in folds {
             let mut p = self.params.clone();
             let mut loss_sum = 0f64;
             for s in 0..steps_per_client {
@@ -85,7 +89,7 @@ impl CohortTrainer for RuntimeCohortTrainer {
             } else {
                 f64::NAN
             });
-            weights.push(pop.devices[i].num_examples as f64);
+            weights.push(pop.devices[i].num_examples as f64 * fold_w);
             updated.push(p);
         }
         if !updated.is_empty() {
@@ -101,6 +105,29 @@ impl CohortTrainer for RuntimeCohortTrainer {
                 .eval_step(&self.model, &self.params, &self.eval_x, &self.eval_y)?;
         let accuracy = correct as f64 / self.eval_y.len() as f64;
         Ok((losses, eval_loss as f64, accuracy))
+    }
+}
+
+impl CohortTrainer for RuntimeCohortTrainer {
+    fn train_round(
+        &mut self,
+        round: u64,
+        pop: &Population,
+        cohort: &[usize],
+        steps_per_client: u64,
+    ) -> Result<(Vec<f64>, f64, f64)> {
+        let folds: Vec<(usize, f64)> = cohort.iter().map(|&i| (i, 1.0)).collect();
+        self.train_weighted(round, pop, &folds, steps_per_client)
+    }
+
+    fn train_flush(
+        &mut self,
+        version: u64,
+        pop: &Population,
+        folds: &[(usize, f64)],
+        steps_per_client: u64,
+    ) -> Result<(Vec<f64>, f64, f64)> {
+        self.train_weighted(version, pop, folds, steps_per_client)
     }
 }
 

@@ -88,20 +88,35 @@ impl FedAvg {
         results: &[(ClientHandle, FitRes)],
         weight_fn: impl Fn(&ClientHandle, &FitRes) -> f64,
     ) -> Result<Parameters> {
-        let mut inputs: Vec<(&[f32], f64)> = Vec::with_capacity(results.len());
-        for (handle, res) in results {
-            if !res.status.is_ok() || res.num_examples == 0 {
-                continue;
-            }
-            let w = weight_fn(handle, res);
-            if w <= 0.0 {
-                continue;
-            }
-            inputs.push((res.parameters.to_flat()?, w));
-        }
-        let flat = self.aggregator.weighted_average(&inputs)?;
-        Ok(Parameters::from_flat(flat))
+        weighted_parameter_average(
+            &self.aggregator,
+            results.iter().map(|(h, r)| (r, weight_fn(h, r))),
+        )
     }
+}
+
+/// Weighted parameter average over `(result, weight)` pairs, skipping
+/// failed/empty results and non-positive weights. Extracted from
+/// [`FedAvg::average`] so the synchronous FedAvg family and the
+/// [`crate::strategy::FedBuff`] flush share one arithmetic path —
+/// FedBuff with zero staleness is bit-identical to FedAvg because both
+/// funnel through here.
+pub(crate) fn weighted_parameter_average<'a>(
+    aggregator: &Aggregator,
+    results: impl IntoIterator<Item = (&'a FitRes, f64)>,
+) -> Result<Parameters> {
+    let mut inputs: Vec<(&[f32], f64)> = Vec::new();
+    for (res, w) in results {
+        if !res.status.is_ok() || res.num_examples == 0 {
+            continue;
+        }
+        if w <= 0.0 {
+            continue;
+        }
+        inputs.push((res.parameters.to_flat()?, w));
+    }
+    let flat = aggregator.weighted_average(&inputs)?;
+    Ok(Parameters::from_flat(flat))
 }
 
 impl Strategy for FedAvg {

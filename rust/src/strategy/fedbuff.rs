@@ -1,0 +1,295 @@
+//! FedBuff (Nguyen et al. 2022): buffered asynchronous aggregation.
+//!
+//! The synchronous FL loop barriers every round on its slowest
+//! participant — the paper's Table 3 shows stragglers dominating round
+//! wall-time and wasted energy. FedBuff removes the barrier: the server
+//! keeps fit work outstanding on every client, folds results into a
+//! buffer *as they arrive*, and emits a new model version every K
+//! results. A result trained from model version `v` folded at version
+//! `v'` has staleness `s = v' - v` and is discounted by the polynomial
+//! weight `(1 + s)^-alpha`, so updates from stragglers still contribute
+//! but cannot drag the model backwards.
+//!
+//! With `K = cohort size` and zero staleness the flush reduces to plain
+//! example-weighted FedAvg — bit-identical, since both run the same
+//! [`weighted_parameter_average`] path (property-tested in
+//! `rust/tests/proptests.rs`).
+
+use crate::client::keys;
+use crate::config;
+use crate::error::{Error, Result};
+use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters};
+
+use super::fedavg::{weighted_parameter_average, TrainingPlan};
+use super::{
+    weighted_eval_summary, Aggregator, AsyncStrategy, ClientHandle, EvalSummary,
+};
+
+/// Default polynomial staleness exponent (FedBuff's `a = 0.5`).
+pub const DEFAULT_STALENESS_ALPHA: f64 = 0.5;
+
+/// Default buffer size K (the FedBuff paper's sweet spot, and what
+/// `flowrs sched --mode async|both` uses when `--async-buffer` is not
+/// given).
+pub const DEFAULT_BUFFER_SIZE: usize = 8;
+
+/// Polynomial staleness discount `w(s) = (1 + s)^-alpha`.
+///
+/// Properties (property-tested): `w(0) = 1`, `w` is in `(0, 1]`, and is
+/// monotonically non-increasing in `s` for every `alpha >= 0`.
+pub fn staleness_discount(staleness: u64, alpha: f64) -> f64 {
+    (1.0 + staleness as f64).powf(-alpha)
+}
+
+/// Raw FedBuff weight of one buffered result: `examples × w(staleness)`.
+/// This exact expression feeds the flush aggregation; the property tests
+/// exercise it through [`normalized_staleness_weights`] so they cover the
+/// production weight path, not a parallel formula.
+pub fn staleness_weight(num_examples: u64, staleness: u64, alpha: f64) -> f64 {
+    num_examples as f64 * staleness_discount(staleness, alpha)
+}
+
+/// Normalize per-result weights `examples_i × w(s_i)` into a convex
+/// combination (non-negative, summing to 1) — the same normalization the
+/// aggregator applies to the flush weights. Errors when every weight
+/// vanishes (no successful result carries mass).
+pub fn normalized_staleness_weights(
+    examples: &[u64],
+    staleness: &[u64],
+    alpha: f64,
+) -> Result<Vec<f64>> {
+    debug_assert_eq!(examples.len(), staleness.len());
+    let raw: Vec<f64> = examples
+        .iter()
+        .zip(staleness)
+        .map(|(&n, &s)| staleness_weight(n, s, alpha))
+        .collect();
+    let total: f64 = raw.iter().sum();
+    if total <= 0.0 || !total.is_finite() {
+        return Err(Error::Aggregation("staleness weights sum to zero".into()));
+    }
+    Ok(raw.into_iter().map(|w| w / total).collect())
+}
+
+/// The buffered asynchronous strategy.
+pub struct FedBuff {
+    pub plan: TrainingPlan,
+    /// Buffer size K: successful results per model-version flush.
+    pub buffer_size: usize,
+    /// Polynomial staleness exponent (0 = no discount).
+    pub alpha: f64,
+    aggregator: Aggregator,
+    /// Arrived-but-unflushed results: (staleness, result).
+    buffer: Vec<(u64, FitRes)>,
+}
+
+impl FedBuff {
+    pub fn new(plan: TrainingPlan, aggregator: Aggregator, buffer_size: usize) -> Self {
+        FedBuff {
+            plan,
+            buffer_size: buffer_size.max(1),
+            alpha: DEFAULT_STALENESS_ALPHA,
+            aggregator,
+            buffer: Vec::new(),
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Results currently waiting in the buffer.
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    fn flush_buffer(&mut self) -> Result<Option<Parameters>> {
+        if self.buffer.is_empty() {
+            return Ok(None);
+        }
+        let alpha = self.alpha;
+        let params = weighted_parameter_average(
+            &self.aggregator,
+            self.buffer
+                .iter()
+                .map(|(s, r)| (r, staleness_weight(r.num_examples, *s, alpha))),
+        )?;
+        self.buffer.clear();
+        Ok(Some(params))
+    }
+}
+
+impl AsyncStrategy for FedBuff {
+    fn name(&self) -> &'static str {
+        "fedbuff"
+    }
+
+    fn buffer_size(&self) -> usize {
+        self.buffer_size
+    }
+
+    fn configure_fit(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        _handle: &ClientHandle,
+    ) -> FitIns {
+        FitIns {
+            parameters: parameters.clone(),
+            config: self.plan.to_config(version),
+        }
+    }
+
+    fn on_fit_result(
+        &mut self,
+        _handle: &ClientHandle,
+        staleness: u64,
+        res: FitRes,
+    ) -> Result<Option<Parameters>> {
+        // Failed or empty results carry no mass; the server accounts for
+        // them separately, the buffer only ever holds usable updates.
+        if !res.status.is_ok() || res.num_examples == 0 {
+            return Ok(None);
+        }
+        self.buffer.push((staleness, res));
+        if self.buffer.len() >= self.buffer_size {
+            self.flush_buffer()
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn flush(&mut self) -> Result<Option<Parameters>> {
+        self.flush_buffer()
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        let config = config! { keys::ROUND => version as i64 };
+        (0..cohort.len())
+            .map(|idx| {
+                (
+                    idx,
+                    EvaluateIns { parameters: parameters.clone(), config: config.clone() },
+                )
+            })
+            .collect()
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        _version: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        weighted_eval_summary(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::testutil::*;
+    use super::*;
+
+    fn fedbuff(k: usize, alpha: f64) -> FedBuff {
+        FedBuff::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust, k).with_alpha(alpha)
+    }
+
+    #[test]
+    fn discount_is_one_at_zero_staleness() {
+        for alpha in [0.0, 0.5, 1.0, 3.0] {
+            assert_eq!(staleness_discount(0, alpha), 1.0);
+        }
+    }
+
+    #[test]
+    fn discount_decreases_with_staleness() {
+        let w: Vec<f64> = (0..6).map(|s| staleness_discount(s, 0.5)).collect();
+        assert!(w.windows(2).all(|p| p[1] < p[0]), "{w:?}");
+        assert!((staleness_discount(3, 0.5) - 0.5).abs() < 1e-12); // (1+3)^-0.5
+    }
+
+    #[test]
+    fn zero_alpha_ignores_staleness() {
+        assert_eq!(staleness_discount(100, 0.0), 1.0);
+    }
+
+    #[test]
+    fn buffer_flushes_on_kth_result() {
+        let mut s = fedbuff(3, 0.5);
+        let h = handles(3);
+        assert!(s
+            .on_fit_result(&h[0], 0, fit_res(vec![1.0, 1.0], 10, 1.0))
+            .unwrap()
+            .is_none());
+        assert!(s
+            .on_fit_result(&h[1], 0, fit_res(vec![2.0, 2.0], 10, 1.0))
+            .unwrap()
+            .is_none());
+        assert_eq!(s.buffered(), 2);
+        let p = s
+            .on_fit_result(&h[2], 0, fit_res(vec![3.0, 3.0], 10, 1.0))
+            .unwrap()
+            .expect("third result must flush");
+        assert_eq!(p.to_flat().unwrap(), &[2.0, 2.0]);
+        assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn stale_results_are_downweighted() {
+        // Equal examples; staleness 3 at alpha 0.5 discounts to 1/2, so
+        // weights are 2:1 in favour of the fresh result.
+        let mut s = fedbuff(2, 0.5);
+        let h = handles(2);
+        assert!(s
+            .on_fit_result(&h[0], 0, fit_res(vec![0.0], 100, 1.0))
+            .unwrap()
+            .is_none());
+        let p = s
+            .on_fit_result(&h[1], 3, fit_res(vec![3.0], 100, 1.0))
+            .unwrap()
+            .unwrap();
+        let got = p.to_flat().unwrap()[0];
+        assert!((got - 1.0).abs() < 1e-6, "got {got}"); // (0·1 + 3·0.5) / 1.5
+    }
+
+    #[test]
+    fn failed_results_never_enter_the_buffer() {
+        use crate::proto::{Status, StatusCode};
+        let mut s = fedbuff(2, 0.5);
+        let h = handles(2);
+        let mut bad = fit_res(vec![9.0], 10, 1.0);
+        bad.status = Status { code: StatusCode::FitError, message: "oom".into() };
+        assert!(s.on_fit_result(&h[0], 0, bad).unwrap().is_none());
+        assert_eq!(s.buffered(), 0);
+        let empty = fit_res(vec![9.0], 0, 1.0);
+        assert!(s.on_fit_result(&h[1], 0, empty).unwrap().is_none());
+        assert_eq!(s.buffered(), 0);
+    }
+
+    #[test]
+    fn explicit_flush_drains_partial_buffer() {
+        let mut s = fedbuff(8, 0.5);
+        let h = handles(1);
+        assert!(s
+            .on_fit_result(&h[0], 0, fit_res(vec![4.0], 10, 1.0))
+            .unwrap()
+            .is_none());
+        let p = s.flush().unwrap().expect("partial buffer must flush");
+        assert_eq!(p.to_flat().unwrap(), &[4.0]);
+        assert!(s.flush().unwrap().is_none(), "empty buffer flushes to None");
+    }
+
+    #[test]
+    fn normalized_weights_are_convex() {
+        let w = normalized_staleness_weights(&[100, 50, 10], &[0, 2, 7], 0.5).unwrap();
+        assert_eq!(w.len(), 3);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w.iter().all(|&x| x > 0.0));
+        assert!(normalized_staleness_weights(&[0, 0], &[0, 0], 0.5).is_err());
+    }
+}

@@ -14,12 +14,16 @@
 //!   strategy the paper compares its idea to.
 //! * [`fedavgm::FedAvgM`] — server momentum on the aggregated update.
 //! * [`qfedavg::QFedAvg`] — fairness-reweighted aggregation (ablation).
+//! * [`fedbuff::FedBuff`] — buffered *asynchronous* aggregation
+//!   (Nguyen et al. 2022) behind the [`AsyncStrategy`] surface: no round
+//!   barrier, staleness-discounted folds, a model version per flush.
 
 pub mod aggregate;
 pub mod compressed;
 pub mod fedavg;
 pub mod fedavg_cutoff;
 pub mod fedavgm;
+pub mod fedbuff;
 pub mod fedprox;
 pub mod qfedavg;
 pub mod secagg;
@@ -29,6 +33,7 @@ pub use compressed::QuantizedComm;
 pub use fedavg::FedAvg;
 pub use fedavg_cutoff::FedAvgCutoff;
 pub use fedavgm::FedAvgM;
+pub use fedbuff::FedBuff;
 pub use fedprox::FedProx;
 pub use qfedavg::QFedAvg;
 pub use secagg::SecAgg;
@@ -89,6 +94,64 @@ pub trait Strategy: Send {
     fn aggregate_evaluate(
         &mut self,
         round: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary>;
+}
+
+/// The server-side brain of an *asynchronous* FL loop.
+///
+/// Where [`Strategy`] thinks in barrier-synchronous rounds (configure a
+/// cohort, wait for everyone, aggregate), an `AsyncStrategy` is fed fit
+/// results **one at a time, as they arrive**. It buffers them and emits
+/// new global parameters whenever its buffer fills — each emission is one
+/// *model version*. The caller (the async server loop or the population
+/// engine's async mode) tracks which version every in-flight client
+/// started from and reports the *staleness* `current_version -
+/// base_version` alongside each result.
+pub trait AsyncStrategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Buffer size K: successful results folded per model-version flush.
+    fn buffer_size(&self) -> usize;
+
+    /// Instructions for one fit dispatch to `handle`, training from the
+    /// `version`-th global parameters.
+    fn configure_fit(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        handle: &ClientHandle,
+    ) -> FitIns;
+
+    /// Fold one arrived result. Returns `Some(new_parameters)` when this
+    /// result filled the buffer (a flush — the model version advances),
+    /// `None` while the buffer is still filling.
+    fn on_fit_result(
+        &mut self,
+        handle: &ClientHandle,
+        staleness: u64,
+        res: FitRes,
+    ) -> Result<Option<Parameters>>;
+
+    /// Force-flush a partially full buffer. `None` if empty. The built-in
+    /// loops never need this — they stop only at flush boundaries, where
+    /// the buffer is empty by construction — it exists for callers that
+    /// stop mid-window (checkpointing, preemption).
+    fn flush(&mut self) -> Result<Option<Parameters>>;
+
+    /// Select and configure clients for federated evaluation of a freshly
+    /// flushed model version.
+    fn configure_evaluate(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)>;
+
+    /// Fold evaluation results into a summary for one model version.
+    fn aggregate_evaluate(
+        &mut self,
+        version: u64,
         results: &[(ClientHandle, EvaluateRes)],
     ) -> Result<EvalSummary>;
 }

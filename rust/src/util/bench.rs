@@ -47,16 +47,26 @@ pub struct Bench {
     pub target: Duration,
     /// minimum sample count per case
     pub min_samples: usize,
+    /// `--test` smoke mode (criterion convention): run every case once
+    /// to prove it still executes, skip the measurement loop. CI uses
+    /// `cargo bench --bench <name> -- --test` so bench targets can't
+    /// bit-rot without burning bench time.
+    pub test_mode: bool,
     pub results: Vec<Stats>,
 }
 
 impl Bench {
     pub fn new(group: &str) -> Self {
-        println!("\n== bench group: {group} ==");
-        println!(
-            "{:<44} {:>11} {:>11} {:>11} {:>8}",
-            "case", "median", "mean", "p95", "iters"
-        );
+        let test_mode = std::env::args().any(|a| a == "--test");
+        if test_mode {
+            println!("\n== bench group: {group} (test mode: 1 iter/case) ==");
+        } else {
+            println!("\n== bench group: {group} ==");
+            println!(
+                "{:<44} {:>11} {:>11} {:>11} {:>8}",
+                "case", "median", "mean", "p95", "iters"
+            );
+        }
         Bench {
             group: group.to_string(),
             target: Duration::from_millis(
@@ -66,6 +76,7 @@ impl Bench {
                     .unwrap_or(400),
             ),
             min_samples: 10,
+            test_mode,
             results: Vec::new(),
         }
     }
@@ -75,6 +86,19 @@ impl Bench {
         // Warmup + calibration: find iters-per-sample so one sample ~ 1ms.
         let t0 = Instant::now();
         black_box(f());
+        if self.test_mode {
+            let ns = t0.elapsed().as_nanos() as f64;
+            let stats = Stats {
+                name: format!("{}/{}", self.group, name),
+                median_ns: ns,
+                mean_ns: ns,
+                p95_ns: ns,
+                iters: 1,
+            };
+            println!("{:<44} ok ({})", stats.name, fmt_ns(ns).trim_start());
+            self.results.push(stats);
+            return self.results.last().unwrap();
+        }
         let once = t0.elapsed().max(Duration::from_nanos(20));
         let per_sample = (Duration::from_millis(1).as_nanos() / once.as_nanos()).max(1) as u64;
 

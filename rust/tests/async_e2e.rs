@@ -1,0 +1,230 @@
+//! Deterministic end-to-end comparison of the synchronous barrier loop
+//! and the FedBuff async loop over a real in-proc cohort with one
+//! artificial straggler.
+//!
+//! The cohort is 3 fast devices (TX2 GPU) plus 1 Raspberry Pi whose
+//! modeled round time is 6× longer. Every client "trains" by adding +1
+//! to each parameter and evaluates accuracy as `mean(params)/10`, so
+//! accuracy is a pure deterministic function of the aggregation history:
+//! the sync loop gains exactly 0.1 accuracy per barrier round (paying
+//! the straggler's 71 s each time), while the async loop flushes
+//! versions at the fast devices' cadence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flowrs::client::keys;
+use flowrs::device::profiles;
+use flowrs::proto::*;
+use flowrs::server::{
+    AsyncServer, ClientManager, ClientProxy, Server, ServerConfig,
+};
+use flowrs::sim::cost::CostModel;
+use flowrs::strategy::fedavg::TrainingPlan;
+use flowrs::strategy::{Aggregator, ClientHandle, FedAvg, FedBuff};
+use flowrs::transport::{inproc, Connection};
+
+/// Fits served per client id, shared with the test body so it can prove
+/// every dispatched request was actually answered exactly once.
+type ServedCounters = Vec<Arc<AtomicU64>>;
+
+/// Spawn the straggler cohort: `fast` TX2 GPUs + `slow` RPis. Each
+/// client adds +1 to every parameter, reports the cost model's own
+/// compute time for its device (so the sync loop's reported times agree
+/// with the async loop's modeled times), and answers evaluate with
+/// accuracy = mean/10.
+fn spawn_cohort(
+    manager: &Arc<ClientManager>,
+    fast: usize,
+    slow: usize,
+) -> (Vec<std::thread::JoinHandle<()>>, ServedCounters) {
+    let cost = CostModel::default();
+    let mut devices = vec!["jetson_tx2_gpu"; fast];
+    devices.extend(std::iter::repeat("raspberry_pi4").take(slow));
+    let mut counters = Vec::new();
+    let threads = devices
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let device = profiles::by_name(name).unwrap();
+            let compute_time_s = cost.compute(device, 8).time_s;
+            let served = Arc::new(AtomicU64::new(0));
+            counters.push(Arc::clone(&served));
+            let (server_end, client_end) = inproc::pair();
+            manager.register(Arc::new(ClientProxy::new(
+                ClientHandle {
+                    id: format!("dev-{i}"),
+                    device,
+                    num_examples: 256,
+                },
+                Connection::InProc(server_end),
+            )));
+            std::thread::spawn(move || {
+                let mut conn = Connection::InProc(client_end);
+                loop {
+                    let Ok(msg) = conn.recv_server_message() else { return };
+                    match msg {
+                        ServerMessage::FitIns(ins) => {
+                            served.fetch_add(1, Ordering::Relaxed);
+                            let mut p = ins.parameters.to_flat().unwrap().to_vec();
+                            for v in &mut p {
+                                *v += 1.0;
+                            }
+                            let mut metrics = ConfigMap::new();
+                            metrics.insert(keys::STEPS.into(), Scalar::I64(8));
+                            metrics.insert(
+                                keys::COMPUTE_TIME_S.into(),
+                                Scalar::F64(compute_time_s),
+                            );
+                            metrics.insert(keys::ENERGY_J.into(), Scalar::F64(50.0));
+                            metrics.insert(keys::TRAIN_LOSS.into(), Scalar::F64(1.0));
+                            conn.send_client_message(&ClientMessage::FitRes(FitRes {
+                                status: Status::ok(),
+                                parameters: Parameters::from_flat(p),
+                                num_examples: 256,
+                                metrics,
+                            }))
+                            .unwrap();
+                        }
+                        ServerMessage::EvaluateIns(ins) => {
+                            let p = ins.parameters.to_flat().unwrap();
+                            let mean = p.iter().sum::<f32>() as f64 / p.len() as f64;
+                            let mut metrics = ConfigMap::new();
+                            metrics.insert(
+                                keys::ACCURACY.into(),
+                                Scalar::F64((mean / 10.0).min(1.0)),
+                            );
+                            conn.send_client_message(&ClientMessage::EvaluateRes(EvaluateRes {
+                                status: Status::ok(),
+                                loss: (10.0 - mean).max(0.0),
+                                num_examples: 100,
+                                metrics,
+                            }))
+                            .unwrap();
+                        }
+                        ServerMessage::GetParametersIns(_) => {
+                            conn.send_client_message(&ClientMessage::GetParametersRes(
+                                GetParametersRes {
+                                    status: Status::ok(),
+                                    parameters: Parameters::from_flat(vec![0.0; 4]),
+                                },
+                            ))
+                            .unwrap();
+                        }
+                        ServerMessage::Reconnect { .. } => {
+                            let _ = conn.send_client_message(&ClientMessage::Disconnect {
+                                reason: "bye".into(),
+                            });
+                            return;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    (threads, counters)
+}
+
+const TARGET: f64 = 0.3;
+
+fn run_sync() -> flowrs::server::History {
+    let manager = Arc::new(ClientManager::new());
+    let (threads, _) = spawn_cohort(&manager, 3, 1);
+    let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+    let mut server = Server::new(
+        Arc::clone(&manager),
+        Box::new(strategy),
+        CostModel::default(),
+        ServerConfig {
+            num_rounds: 20,
+            quorum: 4,
+            target_accuracy: Some(TARGET),
+            ..Default::default()
+        },
+    );
+    let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+    for t in threads {
+        t.join().unwrap();
+    }
+    history
+}
+
+fn run_async() -> (flowrs::server::History, flowrs::server::AsyncStats, u64) {
+    let manager = Arc::new(ClientManager::new());
+    let (threads, counters) = spawn_cohort(&manager, 3, 1);
+    let strategy = FedBuff::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust, 2)
+        .with_alpha(0.5);
+    let mut server = AsyncServer::new(
+        Arc::clone(&manager),
+        Box::new(strategy),
+        CostModel::default(),
+        ServerConfig {
+            num_rounds: 200,
+            quorum: 4,
+            target_accuracy: Some(TARGET),
+            async_buffer: Some(2),
+            steps_per_round: 8,
+            ..Default::default()
+        },
+    );
+    let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+    for t in threads {
+        t.join().unwrap();
+    }
+    let served: u64 = counters.iter().map(|c| c.load(Ordering::Relaxed)).sum();
+    (history, server.stats(), served)
+}
+
+#[test]
+fn async_beats_sync_time_to_accuracy_with_a_straggler() {
+    let sync = run_sync();
+    let (async_h, _, _) = run_async();
+
+    let t_sync = sync
+        .time_to_accuracy_s(TARGET)
+        .expect("sync loop never reached the target");
+    let t_async = async_h
+        .time_to_accuracy_s(TARGET)
+        .expect("async loop never reached the target");
+    assert!(
+        t_async < t_sync,
+        "async modeled time-to-{TARGET} ({t_async:.1}s) must beat the \
+         barrier loop ({t_sync:.1}s) when a straggler gates every round"
+    );
+    // the sync loop pays the RPi's ~71 s every round; 3 rounds ≈ 216 s
+    assert!(t_sync > 200.0, "sync t2a {t_sync:.1}s — straggler not gating?");
+    // staleness shows up in the async history (the RPi folds late)
+    assert!(async_h.rounds.iter().any(|r| r.max_staleness > 0));
+}
+
+#[test]
+fn async_loop_never_drops_or_double_counts_results() {
+    let (history, stats, served) = run_async();
+    // every dispatch was answered by a client exactly once...
+    assert_eq!(stats.dispatched, served, "dispatches vs client-served fits");
+    // ...and every one of them is accounted for in exactly one bucket
+    assert_eq!(
+        stats.dispatched,
+        stats.folded + stats.failures + stats.discarded + stats.drained,
+        "async accounting identity broke: {stats:?}"
+    );
+    assert_eq!(stats.failures, 0, "{stats:?}");
+    assert_eq!(stats.discarded, 0, "{stats:?}");
+    // flushes consumed K=2 folds each, and because the loop only ever
+    // stops at a flush boundary, every folded result was aggregated
+    assert_eq!(stats.flushed, 2 * history.rounds.len() as u64);
+    assert_eq!(stats.folded, stats.flushed);
+    // per-version records agree with the global fold count
+    let recorded: usize = history.rounds.iter().map(|r| r.fit_completed).sum();
+    assert_eq!(recorded as u64, stats.flushed);
+}
+
+#[test]
+fn async_loop_is_deterministic_in_virtual_time() {
+    // Real thread interleavings differ between runs; the modeled clock,
+    // fold order, and therefore the whole history must not.
+    let (a, _, _) = run_async();
+    let (b, _, _) = run_async();
+    assert_eq!(a.to_csv(), b.to_csv());
+}

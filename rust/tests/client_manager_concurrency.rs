@@ -1,14 +1,23 @@
 //! Concurrency coverage for `server::ClientManager`: register/unregister
-//! races, stale-entry replacement on reconnect, and `wait_for` behavior
-//! under churn and multiple waiters.
+//! races, stale-entry replacement on reconnect, `wait_for` behavior
+//! under churn and multiple waiters — and the async dispatch path:
+//! clients registering/deregistering mid-flight must never panic the
+//! fold loop, and in-flight results from deregistered clients are
+//! discarded exactly once.
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use flowrs::client::keys;
 use flowrs::device::profiles;
-use flowrs::server::{ClientManager, ClientProxy};
-use flowrs::strategy::ClientHandle;
+use flowrs::proto::{
+    ClientMessage, ConfigMap, FitRes, Parameters, Scalar, ServerMessage, Status,
+};
+use flowrs::server::{AsyncServer, ClientManager, ClientProxy, ServerConfig};
+use flowrs::sim::cost::CostModel;
+use flowrs::strategy::fedavg::TrainingPlan;
+use flowrs::strategy::{Aggregator, ClientHandle, FedBuff};
 use flowrs::transport::{inproc, Connection};
 
 fn proxy(id: &str) -> Arc<ClientProxy> {
@@ -128,6 +137,193 @@ fn many_waiters_all_wake_on_quorum() {
     }
     for w in waiters {
         assert!(w.join().unwrap(), "a waiter missed the quorum notification");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Async dispatch path: manager churn while fits are in flight
+// ---------------------------------------------------------------------------
+
+/// Per-client handles the async-churn tests watch.
+struct FakeClient {
+    thread: std::thread::JoinHandle<()>,
+    served: Arc<AtomicU64>,
+    got_fit: Arc<AtomicBool>,
+}
+
+/// Register an in-proc fake client that answers fit with +1 params and
+/// evaluate with a fixed accuracy, optionally sleeping `delay` before
+/// each fit response (to hold a result in flight in *real* time).
+fn spawn_fake(
+    manager: &Arc<ClientManager>,
+    id: &str,
+    device: &str,
+    delay: Option<Duration>,
+) -> FakeClient {
+    let (server_end, client_end) = inproc::pair();
+    manager.register(Arc::new(ClientProxy::new(
+        ClientHandle {
+            id: id.into(),
+            device: profiles::by_name(device).unwrap(),
+            num_examples: 128,
+        },
+        Connection::InProc(server_end),
+    )));
+    let served = Arc::new(AtomicU64::new(0));
+    let got_fit = Arc::new(AtomicBool::new(false));
+    let served2 = Arc::clone(&served);
+    let got_fit2 = Arc::clone(&got_fit);
+    let thread = std::thread::spawn(move || {
+        let mut conn = Connection::InProc(client_end);
+        loop {
+            let Ok(msg) = conn.recv_server_message() else { return };
+            match msg {
+                ServerMessage::FitIns(ins) => {
+                    got_fit2.store(true, Ordering::SeqCst);
+                    if let Some(d) = delay {
+                        std::thread::sleep(d);
+                    }
+                    served2.fetch_add(1, Ordering::SeqCst);
+                    let mut p = ins.parameters.to_flat().unwrap().to_vec();
+                    for v in &mut p {
+                        *v += 1.0;
+                    }
+                    let mut metrics = ConfigMap::new();
+                    metrics.insert(keys::STEPS.into(), Scalar::I64(8));
+                    metrics.insert(keys::TRAIN_LOSS.into(), Scalar::F64(1.0));
+                    if conn
+                        .send_client_message(&ClientMessage::FitRes(FitRes {
+                            status: Status::ok(),
+                            parameters: Parameters::from_flat(p),
+                            num_examples: 128,
+                            metrics,
+                        }))
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                ServerMessage::EvaluateIns(_) => {
+                    let mut metrics = ConfigMap::new();
+                    metrics.insert(keys::ACCURACY.into(), Scalar::F64(0.0));
+                    if conn
+                        .send_client_message(&ClientMessage::EvaluateRes(
+                            flowrs::proto::EvaluateRes {
+                                status: Status::ok(),
+                                loss: 1.0,
+                                num_examples: 10,
+                                metrics,
+                            },
+                        ))
+                        .is_err()
+                    {
+                        return;
+                    }
+                }
+                ServerMessage::GetParametersIns(_) => return,
+                ServerMessage::Reconnect { .. } => {
+                    let _ = conn.send_client_message(&ClientMessage::Disconnect {
+                        reason: "bye".into(),
+                    });
+                    return;
+                }
+            }
+        }
+    });
+    FakeClient { thread, served, got_fit }
+}
+
+fn async_server(manager: &Arc<ClientManager>, k: usize, versions: u64) -> AsyncServer {
+    let strategy = FedBuff::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust, k)
+        .with_alpha(0.5);
+    AsyncServer::new(
+        Arc::clone(manager),
+        Box::new(strategy),
+        CostModel::default(),
+        ServerConfig {
+            num_rounds: versions,
+            quorum: manager.len(),
+            steps_per_round: 8,
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn async_inflight_result_from_deregistered_client_discarded_exactly_once() {
+    let manager = Arc::new(ClientManager::new());
+    // Two fast clients keep versions flushing; the slow one (6× modeled
+    // time, 300 ms real delay) holds a result in flight long enough for
+    // the test to deregister it first.
+    let fast0 = spawn_fake(&manager, "fast-0", "jetson_tx2_gpu", None);
+    let fast1 = spawn_fake(&manager, "fast-1", "jetson_tx2_gpu", None);
+    let slow = spawn_fake(
+        &manager,
+        "slow",
+        "raspberry_pi4",
+        Some(Duration::from_millis(300)),
+    );
+
+    let mut server = async_server(&manager, 2, 20);
+    let m2 = Arc::clone(&manager);
+    let runner = std::thread::spawn(move || {
+        let h = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        (h, server.stats())
+    });
+    // Deterministic ordering: wait until the slow client has its fit in
+    // flight (it sleeps 300 ms before answering), then deregister it.
+    while !slow.got_fit.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    m2.unregister("slow");
+
+    let (history, stats) = runner.join().expect("fold loop panicked");
+    assert_eq!(history.rounds.len(), 20);
+    assert_eq!(
+        stats.discarded, 1,
+        "the deregistered client's in-flight result must be discarded exactly once: {stats:?}"
+    );
+    assert_eq!(
+        stats.dispatched,
+        stats.folded + stats.failures + stats.discarded + stats.drained,
+        "{stats:?}"
+    );
+    // the slow client answered its one fit, and that answer went nowhere
+    assert_eq!(slow.served.load(Ordering::SeqCst), 1);
+    for c in [fast0, fast1, slow] {
+        c.thread.join().unwrap();
+    }
+}
+
+#[test]
+fn async_client_registering_mid_flight_joins_rotation() {
+    let manager = Arc::new(ClientManager::new());
+    let a = spawn_fake(&manager, "a", "jetson_tx2_gpu", None);
+    // b paces the run in *real* time (~5 ms per fold) so the mid-run
+    // registration below deterministically lands before version 40
+    let b = spawn_fake(&manager, "b", "jetson_tx2_gpu", Some(Duration::from_millis(5)));
+
+    let mut server = async_server(&manager, 2, 40);
+    let m2 = Arc::clone(&manager);
+    let runner = std::thread::spawn(move || {
+        let h = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        (h, server.stats())
+    });
+    // register a third client once the run is underway
+    while !a.got_fit.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let late = spawn_fake(&m2, "late", "jetson_tx2_gpu", None);
+
+    let (history, stats) = runner.join().expect("fold loop panicked");
+    assert_eq!(history.rounds.len(), 40);
+    assert!(
+        late.served.load(Ordering::SeqCst) > 0,
+        "mid-run registration never dispatched"
+    );
+    assert_eq!(stats.discarded, 0, "{stats:?}");
+    for c in [a, b, late] {
+        c.thread.join().unwrap();
     }
 }
 

@@ -392,6 +392,122 @@ fn prop_json_parser_total_on_garbage() {
 }
 
 // ---------------------------------------------------------------------------
+// FedBuff staleness-weight properties
+// ---------------------------------------------------------------------------
+
+use flowrs::strategy::fedbuff::{normalized_staleness_weights, staleness_discount, FedBuff};
+use flowrs::strategy::{fedavg::TrainingPlan, AsyncStrategy, ClientHandle, FedAvg, Strategy};
+
+#[test]
+fn prop_staleness_discount_bounded_and_monotone() {
+    let name = "w(s) = (1+s)^-alpha: w(0)=1, w in (0,1], non-increasing in s";
+    check(name, 300, |rng| {
+        let alpha = rng.f64() * 4.0;
+        ensure(staleness_discount(0, alpha) == 1.0, || {
+            format!("w(0) != 1 at alpha={alpha}")
+        })?;
+        let s1 = rng.below(500) as u64;
+        let s2 = s1 + rng.below(500) as u64;
+        let (w1, w2) = (staleness_discount(s1, alpha), staleness_discount(s2, alpha));
+        for (s, w) in [(s1, w1), (s2, w2)] {
+            ensure(w > 0.0 && w <= 1.0, || format!("w({s})={w} out of (0,1]"))?;
+        }
+        ensure(w2 <= w1, || {
+            format!("not monotone: w({s2})={w2} > w({s1})={w1} at alpha={alpha}")
+        })?;
+        // alpha = 0 disables the discount entirely
+        ensure(staleness_discount(s2, 0.0) == 1.0, || "alpha=0 must not discount".into())
+    });
+}
+
+#[test]
+fn prop_staleness_weights_form_convex_combination() {
+    check("normalized buffer weights: non-negative, sum to 1", 200, |rng| {
+        let k = 1 + rng.below(16);
+        let examples: Vec<u64> = (0..k).map(|_| 1 + rng.next_u64() % 1_000).collect();
+        let staleness: Vec<u64> = (0..k).map(|_| rng.below(50) as u64).collect();
+        let alpha = rng.f64() * 3.0;
+        let w = normalized_staleness_weights(&examples, &staleness, alpha)
+            .map_err(|e| e.to_string())?;
+        ensure(w.len() == k, || "weight count mismatch".into())?;
+        let sum: f64 = w.iter().sum();
+        ensure((sum - 1.0).abs() < 1e-9, || format!("weights sum to {sum}"))?;
+        ensure(w.iter().all(|&x| x >= 0.0), || format!("negative weight in {w:?}"))?;
+        Ok(())
+    });
+}
+
+fn fit_res_for(params: Vec<f32>, num_examples: u64) -> FitRes {
+    FitRes {
+        status: Status::ok(),
+        parameters: Parameters::from_flat(params),
+        num_examples,
+        metrics: ConfigMap::new(),
+    }
+}
+
+#[test]
+fn prop_fedbuff_full_buffer_zero_staleness_is_bit_identical_to_fedavg() {
+    let name = "FedBuff(K = cohort, staleness 0) == FedAvg, bit for bit";
+    check(name, 120, |rng| {
+        let k = 1 + rng.below(8);
+        let p = 1 + rng.below(64);
+        let device = profiles::by_name("jetson_tx2_gpu").map_err(|e| e.to_string())?;
+        let results: Vec<(ClientHandle, FitRes)> = (0..k)
+            .map(|i| {
+                let handle = ClientHandle {
+                    id: format!("c{i}"),
+                    device,
+                    num_examples: 1 + rng.next_u64() % 1_000,
+                };
+                let params: Vec<f32> = (0..p).map(|_| rng.normal_f32() * 10.0).collect();
+                let n = handle.num_examples;
+                (handle, fit_res_for(params, n))
+            })
+            .collect();
+
+        let mut fedavg = FedAvg::new(TrainingPlan::default(), flowrs::strategy::Aggregator::Rust);
+        let avg = fedavg
+            .aggregate_fit(1, &results, 0)
+            .map_err(|e| e.to_string())?;
+
+        // alpha is irrelevant at staleness 0 — any exponent must reduce
+        // to plain example-weighted FedAvg
+        let alpha = rng.f64() * 4.0;
+        let mut fedbuff = FedBuff::new(
+            TrainingPlan::default(),
+            flowrs::strategy::Aggregator::Rust,
+            k,
+        )
+        .with_alpha(alpha);
+        let mut flushed = None;
+        for (i, (handle, res)) in results.iter().enumerate() {
+            let out = fedbuff
+                .on_fit_result(handle, 0, res.clone())
+                .map_err(|e| e.to_string())?;
+            if i + 1 < k {
+                ensure(out.is_none(), || format!("flushed early at result {i}"))?;
+            } else {
+                flushed = out;
+            }
+        }
+        let buf = flushed.ok_or("buffer never flushed on the K-th result")?;
+        let a = avg.to_flat().map_err(|e| e.to_string())?;
+        let b = buf.to_flat().map_err(|e| e.to_string())?;
+        ensure(a.len() == b.len(), || "length mismatch".into())?;
+        for j in 0..a.len() {
+            ensure(a[j].to_bits() == b[j].to_bits(), || {
+                format!(
+                    "element {j} differs: fedavg {} vs fedbuff {} (alpha={alpha})",
+                    a[j], b[j]
+                )
+            })?;
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
 // scheduler policy properties
 // ---------------------------------------------------------------------------
 

@@ -142,6 +142,58 @@ fn churn_rotates_availability_and_accounting_balances() {
     }
 }
 
+/// The async-aggregation acceptance claim: with the default
+/// heterogeneous device mix (which includes the straggler-class
+/// Raspberry Pi at 15%), FedBuff (K=8, alpha=0.5) reaches the target
+/// accuracy in strictly less virtual wall-time than synchronous FedAvg,
+/// because the sync loop barriers on the slowest cohort member every
+/// round while the async loop folds at each device's own cadence.
+#[test]
+fn fedbuff_beats_sync_fedavg_time_to_accuracy_on_heterogeneous_mix() {
+    let target = 0.3;
+    let mut sync_cfg = ScheduleConfig::default()
+        .named("sync-vs-fedbuff")
+        .population(300)
+        .cohort(16)
+        .rounds(60)
+        .seed(13)
+        .policy(PolicyConfig::Uniform);
+    sync_cfg.target_accuracy = Some(target);
+
+    // ≥1 straggler-class device in the default mix, as the claim requires
+    let pop = flowrs::sched::Population::synthesize(&sync_cfg).unwrap();
+    let stragglers = pop
+        .devices
+        .iter()
+        .filter(|d| d.device.name == "raspberry_pi4")
+        .count();
+    assert!(stragglers >= 1, "default mix lost its straggler class");
+
+    let mut async_cfg = sync_cfg.clone().buffered(8).staleness(0.5);
+    async_cfg.rounds = 400; // versions flush much faster than rounds
+
+    let sync = run_population(&sync_cfg, None).unwrap();
+    let fedbuff = run_population(&async_cfg, None).unwrap();
+
+    let t_sync = sync
+        .time_to_accuracy_s(target)
+        .expect("sync FedAvg never reached the target");
+    let t_async = fedbuff
+        .time_to_accuracy_s(target)
+        .expect("FedBuff never reached the target");
+    assert!(
+        t_async < t_sync,
+        "FedBuff t2a {t_async:.0}s must beat sync {t_sync:.0}s"
+    );
+    // staleness is real (stragglers fold late) yet bounded progress wins
+    assert!(fedbuff.mean_staleness() > 0.0);
+    assert_eq!(sync.mean_staleness(), 0.0);
+
+    // deterministic: the seeded async run reproduces bit-identically
+    let again = run_population(&async_cfg, None).unwrap();
+    assert_eq!(fedbuff.to_csv(), again.to_csv());
+}
+
 /// Identical configs produce bit-identical reports.
 #[test]
 fn population_runs_are_deterministic() {
