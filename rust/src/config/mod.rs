@@ -8,8 +8,8 @@ use crate::data::Partitioner;
 use crate::error::{Error, Result};
 use crate::sched::availability::ChurnSpec;
 use crate::sched::policy::{
-    DeadlineAware, SelectionPolicy, UniformRandom, UtilityBased, DEFAULT_EXPLORE_FRAC,
-    DEFAULT_UTILITY_ALPHA,
+    DeadlineAware, FairnessCap, SelectionPolicy, UniformRandom, UtilityBased,
+    DEFAULT_EXPLORE_FRAC, DEFAULT_FAIRNESS_CAP, DEFAULT_UTILITY_ALPHA,
 };
 use crate::sim::cost::CostModel;
 use crate::util::json::Json;
@@ -435,10 +435,13 @@ pub enum PolicyConfig {
     Uniform,
     DeadlineAware,
     UtilityBased { alpha: f64, explore_frac: f64 },
+    /// Fairness-aware uniform sampling with a per-device selection cap.
+    FairnessCap { max_selections: u64 },
 }
 
 impl PolicyConfig {
-    /// Parse `uniform` | `deadline` | `utility[:ALPHA[:EXPLORE]]`.
+    /// Parse `uniform` | `deadline` | `utility[:ALPHA[:EXPLORE]]` |
+    /// `fair[:CAP]`.
     pub fn parse(s: &str) -> Result<Self> {
         match s {
             "uniform" => return Ok(PolicyConfig::Uniform),
@@ -447,6 +450,11 @@ impl PolicyConfig {
                 return Ok(PolicyConfig::UtilityBased {
                     alpha: DEFAULT_UTILITY_ALPHA,
                     explore_frac: DEFAULT_EXPLORE_FRAC,
+                })
+            }
+            "fair" => {
+                return Ok(PolicyConfig::FairnessCap {
+                    max_selections: DEFAULT_FAIRNESS_CAP,
                 })
             }
             _ => {}
@@ -469,8 +477,14 @@ impl PolicyConfig {
             }
             return Ok(PolicyConfig::UtilityBased { alpha, explore_frac });
         }
+        if let Some(rest) = s.strip_prefix("fair:") {
+            let max_selections: u64 = rest
+                .parse()
+                .map_err(|_| Error::Config(format!("bad selection cap in {s:?}")))?;
+            return Ok(PolicyConfig::FairnessCap { max_selections });
+        }
         Err(Error::Config(format!(
-            "unknown policy {s:?} (uniform | deadline | utility[:ALPHA[:EXPLORE]])"
+            "unknown policy {s:?} (uniform | deadline | utility[:ALPHA[:EXPLORE]] | fair[:CAP])"
         )))
     }
 
@@ -484,6 +498,7 @@ impl PolicyConfig {
             PolicyConfig::UtilityBased { alpha, explore_frac } => {
                 format!("utility:{alpha}:{explore_frac}")
             }
+            PolicyConfig::FairnessCap { max_selections } => format!("fair:{max_selections}"),
         }
     }
 
@@ -497,17 +512,30 @@ impl PolicyConfig {
                     .with_alpha(*alpha)
                     .with_exploration(*explore_frac),
             ),
+            PolicyConfig::FairnessCap { max_selections } => {
+                Box::new(FairnessCap::new(seed).with_cap(*max_selections))
+            }
         }
     }
 
     fn validate(&self) -> Result<()> {
-        if let PolicyConfig::UtilityBased { alpha, explore_frac } = self {
-            if *alpha < 0.0 || !alpha.is_finite() {
-                return Err(Error::Config("utility alpha must be finite and >= 0".into()));
+        match self {
+            PolicyConfig::UtilityBased { alpha, explore_frac } => {
+                if *alpha < 0.0 || !alpha.is_finite() {
+                    return Err(Error::Config(
+                        "utility alpha must be finite and >= 0".into(),
+                    ));
+                }
+                if !(0.0..=1.0).contains(explore_frac) {
+                    return Err(Error::Config("explore fraction must be in [0, 1]".into()));
+                }
             }
-            if !(0.0..=1.0).contains(explore_frac) {
-                return Err(Error::Config("explore fraction must be in [0, 1]".into()));
+            PolicyConfig::FairnessCap { max_selections } => {
+                if *max_selections == 0 {
+                    return Err(Error::Config("fairness cap must be > 0".into()));
+                }
             }
+            _ => {}
         }
         Ok(())
     }
@@ -867,9 +895,19 @@ mod tests {
             PolicyConfig::parse("utility:1.0:0.25").unwrap(),
             PolicyConfig::UtilityBased { alpha: 1.0, explore_frac: 0.25 }
         );
+        assert_eq!(
+            PolicyConfig::parse("fair").unwrap(),
+            PolicyConfig::FairnessCap { max_selections: 10 }
+        );
+        assert_eq!(
+            PolicyConfig::parse("fair:3").unwrap(),
+            PolicyConfig::FairnessCap { max_selections: 3 }
+        );
         assert!(PolicyConfig::parse("oort").is_err());
         assert!(PolicyConfig::parse("utility:x").is_err());
         assert!(PolicyConfig::parse("utility:1:0.1:9").is_err());
+        assert!(PolicyConfig::parse("fair:zero").is_err());
+        assert!(PolicyConfig::FairnessCap { max_selections: 0 }.validate().is_err());
     }
 
     #[test]

@@ -136,7 +136,8 @@ fn print_usage() {
                       --t-step-ref <s> --out <csv> --artifacts <dir>\n\
            sched      run a cost-aware population-scale scheduling experiment\n\
                       --config <file.json> | --population N --cohort K --rounds R\n\
-                      --policy uniform|deadline|utility[:ALPHA[:EXPLORE]]\n\
+                      --policy uniform|deadline|utility[:ALPHA[:EXPLORE]]|fair[:CAP]\n\
+                      (fair = uniform under a per-device selection-count cap)\n\
                       --compare p1,p2,.. --deadline TAU_S --churn ON_S,OFF_S\n\
                       --epochs E --steps-per-epoch S --model-bytes B --seed N\n\
                       --target-accuracy A --t-step-ref <s> --out <csv>\n\

@@ -8,9 +8,15 @@
 //! roughly `mean_on / (mean_on + mean_off)` of the population is online,
 //! with membership constantly rotating.
 //!
-//! The cycle form keeps availability queries O(1) at million-device
-//! scale; [`ChurnModel::trace`] materializes the same schedule as an
-//! explicit toggle-time trace when a test or an export needs one.
+//! The cycle form keeps *point* availability queries O(1) at
+//! million-device scale; [`ChurnModel::trace`] materializes the same
+//! schedule as an explicit toggle-time trace when a test or an export
+//! needs one. For the streaming execution core, which needs the *set*
+//! of available devices after every event, [`AvailabilityIndex`]
+//! maintains that set incrementally: a time wheel bucketed by next
+//! state-transition time plus a swap-remove free-list of idle online
+//! devices, so advancing virtual time costs O(transitions elapsed) —
+//! amortized O(1) per event — instead of an O(population) rescan.
 
 use crate::util::rng::Rng;
 
@@ -64,6 +70,21 @@ impl Cycle {
         } else {
             period - pos
         }
+    }
+
+    /// Distance from `t_s` to this cycle's nearest on/off toggle
+    /// (infinite for an always-on cycle). Instants closer than float
+    /// noise to a toggle are legitimately ambiguous — on/off answers a
+    /// rounding error apart are both defensible — so equivalence checks
+    /// (index vs. brute-force rescan) use this to skip them.
+    pub fn boundary_distance_s(&self, t_s: f64) -> f64 {
+        if self.off_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        let period = self.on_s + self.off_s;
+        let pos = (t_s + self.phase_s) % period;
+        // nearest of: period start, on->off edge, period end
+        pos.min((pos - self.on_s).abs()).min(period - pos)
     }
 }
 
@@ -160,6 +181,394 @@ impl Availability {
     }
 }
 
+// ---------------------------------------------------------------------------
+// AvailabilityIndex: O(1)-amortized incremental membership
+// ---------------------------------------------------------------------------
+
+/// Sentinel for "device is not in the idle-online list".
+const NOT_LISTED: u32 = u32::MAX;
+
+/// Guard against floating-point stalls when a computed transition does
+/// not advance time (a dwell boundary hit within rounding error).
+const MIN_TRANSITION_STEP_S: f64 = 1e-9;
+
+/// Smallest schedule step guaranteed to actually advance a float of
+/// magnitude `t_s`: the absolute floor alone is absorbed by f64
+/// rounding once `t_s` exceeds ~2^24 s, so a relative component (1e-12
+/// relative ≫ the 2^-52 machine epsilon) keeps `t + step > t` at any
+/// virtual time.
+fn min_step_s(t_s: f64) -> f64 {
+    MIN_TRANSITION_STEP_S.max(t_s.abs() * 1e-12)
+}
+
+/// A calendar-queue of per-device next-transition times: buckets of
+/// fixed width over absolute virtual time, entries kept unsorted inside
+/// a bucket (processing order within a bucket is deterministic but not
+/// time-sorted — membership toggles commute, so only determinism
+/// matters). An entry whose time lands a full lap ahead stays in its
+/// bucket until the cursor comes around again. The cursor is an integer
+/// window index so repeated advancement cannot drift in floating point.
+#[derive(Debug, Clone)]
+struct TransitionWheel {
+    width_s: f64,
+    buckets: Vec<Vec<(f64, u32)>>,
+    /// Index of the window the cursor is in (`floor(t / width)`).
+    cursor_window: u64,
+    len: usize,
+}
+
+impl TransitionWheel {
+    fn new(width_s: f64, num_buckets: usize, t0_s: f64) -> Self {
+        let mut wheel = TransitionWheel {
+            width_s,
+            buckets: vec![Vec::new(); num_buckets.max(1)],
+            cursor_window: 0,
+            len: 0,
+        };
+        wheel.cursor_window = wheel.window_of(t0_s);
+        wheel
+    }
+
+    fn window_of(&self, t_s: f64) -> u64 {
+        (t_s / self.width_s) as u64
+    }
+
+    fn schedule(&mut self, t_s: f64, device: u32) {
+        let b = (self.window_of(t_s) % self.buckets.len() as u64) as usize;
+        self.buckets[b].push((t_s, device));
+        self.len += 1;
+    }
+
+    /// Move entries of the cursor's bucket that are due (`t <= now`)
+    /// into `out`. Does not move the cursor. Processing order across
+    /// windows is irrelevant for correctness: transitions of distinct
+    /// devices commute, and each device has exactly one pending entry.
+    fn take_due(&mut self, now_s: f64, out: &mut Vec<(f64, u32)>) {
+        if self.len == 0 {
+            return;
+        }
+        let b = (self.cursor_window % self.buckets.len() as u64) as usize;
+        let bucket = &mut self.buckets[b];
+        let mut i = 0;
+        while i < bucket.len() {
+            if bucket[i].0 <= now_s {
+                out.push(bucket.swap_remove(i));
+                self.len -= 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Step the cursor to the next window if the current one is entirely
+    /// behind `now`; returns false once the cursor window contains `now`.
+    fn advance_window(&mut self, now_s: f64) -> bool {
+        if self.cursor_window < self.window_of(now_s) {
+            self.cursor_window += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Earliest scheduled transition, scanning every bucket — O(entries).
+    /// Only the dead-air path (nobody online, nothing in flight) needs
+    /// this, which is exactly when a full scan was already the status quo.
+    fn earliest(&self) -> Option<f64> {
+        let mut min: Option<f64> = None;
+        for bucket in &self.buckets {
+            for &(t, _) in bucket {
+                min = Some(match min {
+                    Some(m) if m <= t => m,
+                    _ => t,
+                });
+            }
+        }
+        min
+    }
+}
+
+/// Incrementally maintained availability membership over a population
+/// of on/off [`Cycle`]s — the O(1)-amortized replacement for per-event
+/// O(population) rescans in the streaming execution core.
+///
+/// The index tracks, per device, (a) whether it is online at the
+/// index's current time and (b) whether the caller has checked it out
+/// (`busy`, e.g. a fit dispatch in flight). Devices that are online and
+/// not busy sit in an unordered free-list supporting O(1) insert /
+/// swap-remove and O(k) uniform sampling without replacement.
+/// [`AvailabilityIndex::advance`] processes exactly the state
+/// transitions that elapsed, so total maintenance cost over a run is
+/// O(total transitions), independent of how many events interleave.
+///
+/// Determinism: every operation (transition processing order, list
+/// swaps, sampling) is a pure function of the construction input and
+/// the call sequence, so identical runs produce identical membership
+/// *and* identical list order.
+#[derive(Debug, Clone)]
+pub struct AvailabilityIndex {
+    cycles: Vec<Cycle>,
+    online: Vec<bool>,
+    busy: Vec<bool>,
+    idle_online: Vec<u32>,
+    pos: Vec<u32>,
+    wheel: TransitionWheel,
+    now_s: f64,
+    /// scratch for `advance` (kept to avoid per-call allocation)
+    due: Vec<(f64, u32)>,
+}
+
+impl AvailabilityIndex {
+    /// Build the index at virtual time `t0_s`. Always-on cycles never
+    /// schedule transitions, so a churn-free population costs nothing to
+    /// advance.
+    pub fn new(cycles: Vec<Cycle>, t0_s: f64) -> Self {
+        let n = cycles.len();
+        // Bucket width tuned to the mean churn period; any value is
+        // correct, this one keeps buckets small under the default specs.
+        let mut period_sum = 0.0f64;
+        let mut churny = 0usize;
+        for c in &cycles {
+            if c.off_s > 0.0 {
+                period_sum += c.on_s + c.off_s;
+                churny += 1;
+            }
+        }
+        let width_s = if churny == 0 {
+            1.0
+        } else {
+            (period_sum / churny as f64 / 8.0).clamp(1e-3, 1e7)
+        };
+        let mut idx = AvailabilityIndex {
+            cycles,
+            online: vec![false; n],
+            busy: vec![false; n],
+            idle_online: Vec::with_capacity(n),
+            pos: vec![NOT_LISTED; n],
+            wheel: TransitionWheel::new(width_s, 512, t0_s),
+            now_s: t0_s,
+            due: Vec::new(),
+        };
+        for i in 0..n {
+            let c = idx.cycles[i];
+            if c.is_on(t0_s) {
+                idx.online[i] = true;
+                idx.list_push(i as u32);
+            }
+            if c.off_s > 0.0 {
+                let t_next = if idx.online[i] {
+                    c.on_dwell_end_s(t0_s)
+                } else {
+                    t0_s + c.next_on_delay_s(t0_s)
+                };
+                idx.wheel
+                    .schedule(t_next.max(t0_s + min_step_s(t0_s)), i as u32);
+            }
+        }
+        idx
+    }
+
+    pub fn now_s(&self) -> f64 {
+        self.now_s
+    }
+
+    /// Devices currently online and not checked out.
+    pub fn idle_online_len(&self) -> usize {
+        self.idle_online.len()
+    }
+
+    /// Is `device` online at the index's current time?
+    pub fn is_online(&self, device: u32) -> bool {
+        self.online[device as usize]
+    }
+
+    /// Advance to `now_s` (monotone; earlier times are a no-op),
+    /// processing every state transition in between. Amortized O(1) per
+    /// call: each device transition is handled exactly once, whenever it
+    /// falls due. A jump longer than a full wheel lap (only possible
+    /// after extreme dead air) falls back to an O(population) rebuild —
+    /// exactly what a from-scratch rescan would have cost.
+    pub fn advance(&mut self, now_s: f64) {
+        if now_s <= self.now_s {
+            return;
+        }
+        if self.wheel.len == 0 {
+            self.now_s = now_s;
+            return;
+        }
+        if self.wheel.window_of(now_s) - self.wheel.cursor_window
+            >= self.wheel.buckets.len() as u64
+        {
+            self.rebuild(now_s);
+            return;
+        }
+        self.now_s = now_s;
+        loop {
+            let mut due = std::mem::take(&mut self.due);
+            self.wheel.take_due(now_s, &mut due);
+            if due.is_empty() {
+                self.due = due;
+                // window clean: step to the next one or stop at `now`
+                if !self.wheel.advance_window(now_s) {
+                    break;
+                }
+                continue;
+            }
+            for &(t, device) in &due {
+                self.apply_transition(t, device);
+            }
+            due.clear();
+            self.due = due;
+            // re-scan the same window: a follow-up transition may have
+            // landed inside it and already be due
+        }
+    }
+
+    /// From-scratch reconstruction at `now_s`: recompute every device's
+    /// state and next transition directly from its cycle. Busy marks are
+    /// preserved.
+    fn rebuild(&mut self, now_s: f64) {
+        self.now_s = now_s;
+        self.idle_online.clear();
+        self.pos.iter_mut().for_each(|p| *p = NOT_LISTED);
+        self.wheel = TransitionWheel::new(
+            self.wheel.width_s,
+            self.wheel.buckets.len(),
+            now_s,
+        );
+        for i in 0..self.cycles.len() {
+            let c = self.cycles[i];
+            self.online[i] = c.is_on(now_s);
+            if self.online[i] && !self.busy[i] {
+                self.list_push(i as u32);
+            }
+            if c.off_s > 0.0 {
+                let t_next = if self.online[i] {
+                    c.on_dwell_end_s(now_s)
+                } else {
+                    now_s + c.next_on_delay_s(now_s)
+                };
+                self.wheel
+                    .schedule(t_next.max(now_s + min_step_s(now_s)), i as u32);
+            }
+        }
+    }
+
+    /// Process one scheduled transition: recompute the device's state
+    /// from its cycle at the scheduled instant (robust to the boundary
+    /// landing a rounding error away) and schedule the next one.
+    fn apply_transition(&mut self, t_s: f64, device: u32) {
+        let i = device as usize;
+        let c = self.cycles[i];
+        let on = c.is_on(t_s);
+        if on != self.online[i] {
+            self.online[i] = on;
+            if !self.busy[i] {
+                if on {
+                    self.list_push(device);
+                } else {
+                    self.list_remove(device);
+                }
+            }
+        }
+        let dt = if on {
+            c.on_dwell_end_s(t_s) - t_s
+        } else {
+            c.next_on_delay_s(t_s)
+        };
+        self.wheel.schedule(t_s + dt.max(min_step_s(t_s)), device);
+    }
+
+    /// Check a device out (e.g. a dispatch in flight): it leaves the
+    /// idle pool until [`AvailabilityIndex::mark_idle`].
+    pub fn mark_busy(&mut self, device: u32) {
+        let i = device as usize;
+        debug_assert!(!self.busy[i], "device {device} already busy");
+        self.busy[i] = true;
+        if self.pos[i] != NOT_LISTED {
+            self.list_remove(device);
+        }
+    }
+
+    /// Return a device to the pool; it re-enters the idle-online list
+    /// only if its cycle says it is online at the index's current time.
+    pub fn mark_idle(&mut self, device: u32) {
+        let i = device as usize;
+        self.busy[i] = false;
+        if self.online[i] && self.pos[i] == NOT_LISTED {
+            self.list_push(device);
+        }
+    }
+
+    /// Uniform sample of `k` distinct idle online devices — O(k) partial
+    /// Fisher–Yates over the free-list (the list order this leaves
+    /// behind is deterministic).
+    pub fn sample_idle(&mut self, rng: &mut Rng, k: usize) -> Vec<u32> {
+        let n = self.idle_online.len();
+        let k = k.min(n);
+        let mut out = Vec::with_capacity(k);
+        for j in 0..k {
+            let r = j + rng.below(n - j);
+            self.idle_online.swap(j, r);
+            self.pos[self.idle_online[j] as usize] = j as u32;
+            self.pos[self.idle_online[r] as usize] = r as u32;
+            out.push(self.idle_online[j]);
+        }
+        out
+    }
+
+    /// Re-derive one device's online state straight from its cycle at
+    /// `t_s`, fixing the free-list to match. Callers use this to
+    /// reconcile float-boundary disagreements between the wheel's
+    /// scheduled transitions and a point `is_on` query (the device's
+    /// pending wheel entry stays scheduled; processing it later is
+    /// idempotent, since transitions recompute state from the cycle).
+    pub fn resync_device(&mut self, device: u32, t_s: f64) {
+        let i = device as usize;
+        let on = self.cycles[i].is_on(t_s);
+        if on != self.online[i] {
+            self.online[i] = on;
+            if !self.busy[i] {
+                if on {
+                    self.list_push(device);
+                } else {
+                    self.list_remove(device);
+                }
+            }
+        }
+    }
+
+    /// The idle online devices in ascending id order — the O(available)
+    /// materialization for policies that score the whole candidate pool.
+    pub fn idle_online_sorted(&self) -> Vec<u32> {
+        let mut v = self.idle_online.clone();
+        v.sort_unstable();
+        v
+    }
+
+    /// Earliest pending state transition (absolute virtual time), if any
+    /// cycle ever toggles. O(scheduled entries) — dead-air path only.
+    pub fn next_transition_s(&self) -> Option<f64> {
+        self.wheel.earliest()
+    }
+
+    fn list_push(&mut self, device: u32) {
+        debug_assert_eq!(self.pos[device as usize], NOT_LISTED);
+        self.pos[device as usize] = self.idle_online.len() as u32;
+        self.idle_online.push(device);
+    }
+
+    fn list_remove(&mut self, device: u32) {
+        let p = self.pos[device as usize] as usize;
+        debug_assert!(p < self.idle_online.len());
+        self.idle_online.swap_remove(p);
+        if p < self.idle_online.len() {
+            self.pos[self.idle_online[p] as usize] = p as u32;
+        }
+        self.pos[device as usize] = NOT_LISTED;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -253,6 +662,154 @@ mod tests {
         let trace = model().trace(9, 50_000.0);
         assert!(trace.toggles_s.windows(2).all(|w| w[0] < w[1]));
         assert!(!trace.toggles_s.is_empty());
+    }
+
+    // -- AvailabilityIndex ------------------------------------------------
+
+    fn cycles_for(m: &ChurnModel, n: u64) -> Vec<Cycle> {
+        (0..n).map(|d| m.cycle(d)).collect()
+    }
+
+    /// Brute-force membership at `t`: online and not busy.
+    fn brute_idle(cycles: &[Cycle], busy: &[bool], t: f64) -> Vec<u32> {
+        (0..cycles.len())
+            .filter(|&i| !busy[i] && cycles[i].is_on(t))
+            .map(|i| i as u32)
+            .collect()
+    }
+
+    /// Distance from `t` to the nearest toggle of any cycle — queries
+    /// this close to a boundary are legitimately ambiguous in floats.
+    fn boundary_distance(cycles: &[Cycle], t: f64) -> f64 {
+        cycles
+            .iter()
+            .map(|c| c.boundary_distance_s(t))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    #[test]
+    fn index_matches_brute_force_over_monotone_times() {
+        let m = model();
+        let cycles = cycles_for(&m, 300);
+        let mut idx = AvailabilityIndex::new(cycles.clone(), 0.0);
+        let busy = vec![false; cycles.len()];
+        let mut t = 0.0;
+        for step in 0..400 {
+            t += 7.3 + (step % 11) as f64 * 13.1;
+            if boundary_distance(&cycles, t) < 1e-6 {
+                continue; // ambiguous within float noise of a toggle
+            }
+            idx.advance(t);
+            let mut got = idx.idle_online_sorted();
+            got.sort_unstable();
+            assert_eq!(got, brute_idle(&cycles, &busy, t), "diverged at t={t}");
+        }
+    }
+
+    #[test]
+    fn index_busy_marks_remove_and_restore() {
+        let m = ChurnModel::new(ChurnSpec { mean_on_s: 100.0, mean_off_s: 0.0 }, 7);
+        let cycles = cycles_for(&m, 10);
+        let mut idx = AvailabilityIndex::new(cycles, 0.0);
+        assert_eq!(idx.idle_online_len(), 10);
+        idx.mark_busy(3);
+        idx.mark_busy(7);
+        assert_eq!(idx.idle_online_len(), 8);
+        assert!(!idx.idle_online_sorted().contains(&3));
+        idx.mark_idle(3);
+        assert_eq!(idx.idle_online_len(), 9);
+        assert!(idx.idle_online_sorted().contains(&3));
+        idx.mark_idle(7);
+        assert_eq!(idx.idle_online_sorted(), (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn index_busy_device_rejoins_only_when_online() {
+        let m = model();
+        let cycles = cycles_for(&m, 50);
+        let mut idx = AvailabilityIndex::new(cycles.clone(), 0.0);
+        // find a device online at t=0 that is offline at some later probe
+        let dev = (0..50u32)
+            .find(|&d| cycles[d as usize].is_on(0.0))
+            .expect("someone online at t=0");
+        idx.mark_busy(dev);
+        let c = cycles[dev as usize];
+        let t_off = c.on_dwell_end_s(0.0) + 1.0; // firmly inside the off dwell
+        idx.advance(t_off);
+        idx.mark_idle(dev);
+        assert!(
+            !idx.idle_online_sorted().contains(&dev),
+            "offline device re-entered the idle pool"
+        );
+        assert!(!idx.is_online(dev));
+    }
+
+    #[test]
+    fn index_sampling_is_uniform_without_replacement_and_deterministic() {
+        let m = ChurnModel::new(ChurnSpec { mean_on_s: 1.0, mean_off_s: 0.0 }, 1);
+        let cycles = cycles_for(&m, 100);
+        let mut a = AvailabilityIndex::new(cycles.clone(), 0.0);
+        let mut b = AvailabilityIndex::new(cycles, 0.0);
+        let sa = a.sample_idle(&mut Rng::seed_from(9), 20);
+        let sb = b.sample_idle(&mut Rng::seed_from(9), 20);
+        assert_eq!(sa, sb, "same seed must sample the same devices");
+        assert_eq!(sa.len(), 20);
+        let mut sorted = sa.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20, "sample repeated a device: {sa:?}");
+        // oversampling clamps to the pool
+        assert_eq!(a.sample_idle(&mut Rng::seed_from(1), 500).len(), 100);
+        // the list stays internally consistent after sampling
+        assert_eq!(a.idle_online_sorted(), (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn index_survives_long_jumps_via_rebuild() {
+        let m = model();
+        let cycles = cycles_for(&m, 100);
+        let mut idx = AvailabilityIndex::new(cycles.clone(), 0.0);
+        let busy = vec![false; cycles.len()];
+        // jump far past a full wheel lap, then resume small steps
+        for &t in &[1.0e7, 1.0e7 + 5.0, 1.0e7 + 901.0] {
+            if boundary_distance(&cycles, t) < 1e-6 {
+                continue;
+            }
+            idx.advance(t);
+            assert_eq!(
+                idx.idle_online_sorted(),
+                brute_idle(&cycles, &busy, t),
+                "diverged after jump to t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn index_next_transition_matches_min_next_on_delay_when_all_offline() {
+        // all-offline instant: the next transition must be the earliest
+        // device arrival, which is what the dead-air fast-forward needs
+        let m = ChurnModel::new(ChurnSpec { mean_on_s: 10.0, mean_off_s: 10_000.0 }, 3);
+        let cycles = cycles_for(&m, 40);
+        let mut t = 0.0;
+        let mut idx = AvailabilityIndex::new(cycles.clone(), 0.0);
+        // walk to some instant where nobody is online
+        for _ in 0..200 {
+            t += 137.0;
+            idx.advance(t);
+            if idx.idle_online_len() == 0 {
+                break;
+            }
+        }
+        assert_eq!(idx.idle_online_len(), 0, "never found an all-offline instant");
+        let expected = cycles
+            .iter()
+            .map(|c| t + c.next_on_delay_s(t))
+            .fold(f64::INFINITY, f64::min);
+        let got = idx.next_transition_s().expect("churny cycles always schedule");
+        assert!(
+            (got - expected).abs() < 1e-6,
+            "next transition {got} vs expected arrival {expected}"
+        );
     }
 
     #[test]

@@ -1,25 +1,37 @@
 //! The event-driven population engine: virtual federations of 100k–1M
-//! devices, scheduled in virtual time.
+//! devices, scheduled in virtual time by **one** execution core.
 //!
 //! The in-proc simulator ([`crate::sim::run_experiment`]) runs one OS
 //! thread per client and tops out at tens of devices. This engine flips
 //! the representation: the *population* is a flat array of cost profiles
-//! and availability cycles, a round is a binary-heap event queue over
+//! and availability cycles, execution is a binary-heap event queue over
 //! modeled completion times, and only the selected cohort trains
 //! numerics — either for real through a [`CohortTrainer`] backed by the
 //! PJRT runtime ([`crate::sim::population`]) or through the closed-form
 //! [`SurrogateTrainer`]. A 100k-device round is a few milliseconds of
 //! wall clock; a 1M-device experiment completes in seconds.
 //!
-//! Per round:
-//! 1. scan availability at the current virtual time,
-//! 2. ask the configured [`SelectionPolicy`] for a cohort,
-//! 3. push one completion event per selected client (modeled download +
-//!    compute + upload time) and drain the heap in virtual-time order:
-//!    clients past the τ deadline — or offline by their completion time
-//!    (mid-round churn) — are *dropped* and their energy wasted,
-//! 4. train numerics for the clients that reported, advance the clock to
-//!    `min(τ, slowest completion)` + server overhead.
+//! Synchronous FedAvg and FedBuff-style async are *the same loop*
+//! parameterized by [`ExecMode`]: every dispatch's fate is modeled at
+//! issue time, settles as one event, folds into a buffer, and the buffer
+//! flushes into a model version —
+//!
+//! * [`ExecMode::Sync`] is the degenerate case of buffered async: the
+//!   buffer is the whole cohort, the flush is the round barrier, events
+//!   resolve at their full modeled finish (the server waits), and every
+//!   fold has staleness 0 so its weight is exactly 1.
+//! * [`ExecMode::Async`] streams: a bounded window of dispatches stays
+//!   in flight (topped up per event through the O(1)-amortized
+//!   [`AvailabilityIndex`]), each event resolves the moment the server
+//!   *learns* the outcome (fold at the finish, drop at the τ cutoff or
+//!   the disconnect), and every `k_flush` folds flush a staleness-
+//!   discounted model version.
+//!
+//! Availability cost: the barrier mode scans availability once per round
+//! (the O(population) candidate build dominates anyway); the streaming
+//! mode advances the incremental index instead, so per-event top-up no
+//! longer rescans the population — the hot-path win the 1M-device bench
+//! and CI smoke pin down.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -29,7 +41,7 @@ use crate::device::{profiles, DeviceProfile};
 use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
-use super::availability::{Availability, Cycle};
+use super::availability::{Availability, AvailabilityIndex, Cycle};
 use super::policy::{Candidate, SelectionContext, SelectionPolicy};
 
 // ---------------------------------------------------------------------------
@@ -48,6 +60,8 @@ pub struct VirtualDevice {
     pub skew: f64,
     pub last_loss: Option<f64>,
     pub last_selected_round: Option<u64>,
+    /// Lifetime selection count (fairness policies cap this).
+    pub times_selected: u64,
 }
 
 /// The whole virtual federation.
@@ -110,6 +124,7 @@ impl Population {
                 skew: rng.f64(),
                 last_loss: None,
                 last_selected_round: None,
+                times_selected: 0,
             });
         }
         Ok(Population { devices })
@@ -132,44 +147,51 @@ impl Population {
 /// this trait supplies the *learning*: real PJRT training
 /// ([`crate::sim::population::RuntimeCohortTrainer`]) or the closed-form
 /// surrogate below.
+///
+/// There is exactly one numeric entry point — [`train_flush`] — shared
+/// by both execution modes: a barrier round is a flush whose folds all
+/// carry weight 1.0 ([`train_round`] is the provided wrapper that says
+/// so). That is what makes FedAvg the degenerate case of FedBuff at the
+/// trainer layer, with no parallel arithmetic path to drift.
+///
+/// [`train_flush`]: CohortTrainer::train_flush
+/// [`train_round`]: CohortTrainer::train_round
 pub trait CohortTrainer {
-    /// Train one round over `cohort` (indices into `pop.devices`, only
-    /// the clients that actually reported). Returns per-client train
-    /// losses aligned with `cohort`, plus the global (eval_loss,
-    /// accuracy) after aggregation.
-    fn train_round(
-        &mut self,
-        round: u64,
-        pop: &Population,
-        cohort: &[usize],
-        steps_per_client: u64,
-    ) -> Result<(Vec<f64>, f64, f64)>;
-
-    /// One async buffer flush: `folds` pairs a reporting device index
-    /// with its staleness weight in (0, 1] (`(1+s)^-alpha`). Returns the
-    /// same `(losses, eval_loss, accuracy)` triple as [`train_round`],
-    /// losses aligned with `folds`. The default ignores the weights;
-    /// trainers that can discount stale work override it.
-    ///
-    /// [`train_round`]: CohortTrainer::train_round
+    /// One aggregation step: `folds` pairs a reporting device index
+    /// (into `pop.devices`) with its fold weight in (0, 1] — the
+    /// staleness discount `(1+s)^-alpha` in async mode, exactly 1.0 in a
+    /// barrier round. Returns per-client train losses aligned with
+    /// `folds`, plus the global (eval_loss, accuracy) after aggregation.
     fn train_flush(
         &mut self,
         version: u64,
         pop: &Population,
         folds: &[(usize, f64)],
         steps_per_client: u64,
+    ) -> Result<(Vec<f64>, f64, f64)>;
+
+    /// Barrier round over `cohort`: every fold carries weight 1.0.
+    /// Provided so synchronous callers funnel through the same numeric
+    /// kernel as async flushes.
+    fn train_round(
+        &mut self,
+        round: u64,
+        pop: &Population,
+        cohort: &[usize],
+        steps_per_client: u64,
     ) -> Result<(Vec<f64>, f64, f64)> {
-        let cohort: Vec<usize> = folds.iter().map(|&(i, _)| i).collect();
-        self.train_round(version, pop, &cohort, steps_per_client)
+        let folds: Vec<(usize, f64)> = cohort.iter().map(|&i| (i, 1.0)).collect();
+        self.train_flush(round, pop, &folds, steps_per_client)
     }
 }
 
 /// Closed-form training stand-in for population-scale runs without AOT
 /// artifacts: global accuracy follows a saturating curve in cumulative
-/// completed cohort steps, and per-client loss adds a device-specific
-/// skew so utility-based policies have signal. Deterministic; accuracy
-/// is monotone in useful work, which is exactly the property the
-/// scheduler experiments measure (time-to-accuracy per policy).
+/// completed (staleness-weighted) cohort steps, and per-client loss adds
+/// a device-specific skew so utility-based policies have signal.
+/// Deterministic; accuracy is monotone in useful work, which is exactly
+/// the property the scheduler experiments measure (time-to-accuracy per
+/// policy).
 #[derive(Debug, Clone)]
 pub struct SurrogateTrainer {
     progress_steps: f64,
@@ -198,25 +220,9 @@ impl SurrogateTrainer {
 }
 
 impl CohortTrainer for SurrogateTrainer {
-    fn train_round(
-        &mut self,
-        _round: u64,
-        pop: &Population,
-        cohort: &[usize],
-        steps_per_client: u64,
-    ) -> Result<(Vec<f64>, f64, f64)> {
-        self.progress_steps += (cohort.len() as u64 * steps_per_client) as f64;
-        let (eval_loss, acc) = self.metrics();
-        let losses = cohort
-            .iter()
-            .map(|&i| eval_loss * (0.75 + 0.5 * pop.devices[i].skew))
-            .collect();
-        Ok((losses, eval_loss, acc))
-    }
-
-    /// Async flush: stale folds contribute their *discounted* step count
-    /// to the progress curve — the surrogate's closed-form version of
-    /// "stale updates help less".
+    /// Each fold contributes its *weighted* step count to the progress
+    /// curve — the surrogate's closed-form version of "stale updates
+    /// help less"; barrier folds (weight 1.0) contribute fully.
     fn train_flush(
         &mut self,
         _version: u64,
@@ -239,11 +245,13 @@ impl CohortTrainer for SurrogateTrainer {
 // Records
 // ---------------------------------------------------------------------------
 
-/// Everything the engine learned in one round.
+/// Everything the engine learned in one round (barrier mode) or one
+/// model version (async mode).
 #[derive(Debug, Clone, Default)]
 pub struct PopulationRound {
     pub round: u64,
-    /// Devices online at round start.
+    /// Devices online at round start (sync) / at the last top-up (async,
+    /// including in-flight).
     pub available: usize,
     pub selected: usize,
     /// Clients whose result arrived in time (and still online).
@@ -373,12 +381,25 @@ impl PopulationReport {
 }
 
 // ---------------------------------------------------------------------------
-// Engine
+// The unified execution core
 // ---------------------------------------------------------------------------
 
-/// How an async dispatch resolves. Everything about a dispatch is
-/// modeled, so its fate is known the moment it is issued; the event is
-/// queued at the time the server *learns* the outcome.
+/// How the single virtual-time loop executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Barrier rounds: dispatch a full cohort, settle every dispatch,
+    /// flush once per round — buffered async degenerated to K = cohort
+    /// size with zero staleness.
+    Sync,
+    /// FedBuff streaming: a bounded window stays in flight, a model
+    /// version flushes every `k_flush` folds.
+    Async { k_flush: usize },
+}
+
+/// How a dispatch resolves. Everything about a dispatch is modeled, so
+/// its fate is known the moment it is issued; the event is queued at the
+/// time the server *learns* the outcome (async) or at the modeled finish
+/// (sync — the barrier waits regardless).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Outcome {
     Fold,
@@ -386,15 +407,13 @@ enum Outcome {
     DropChurn,
 }
 
-/// A client-completion event on the virtual-time queue. `outcome` and
-/// `base_version` only matter in async mode (a device is never in flight
-/// twice, so `device_idx` still breaks ordering ties uniquely); in async
-/// mode `finish_s` is the *resolve* time — fold at the modeled finish,
-/// churn drop at the disconnect, deadline drop at τ — and `energy_j` is
-/// already prorated to the work done by then.
+/// A dispatch-resolution event on the virtual-time queue. A device is
+/// never in flight twice, so `device_idx` breaks ordering ties uniquely.
+/// `energy_j` is already prorated to the work done by `resolve_s` (all
+/// of it for a fold, the burned fraction for a drop).
 #[derive(Debug, Clone, Copy)]
 struct Completion {
-    finish_s: f64,
+    resolve_s: f64,
     device_idx: usize,
     energy_j: f64,
     base_version: u64,
@@ -414,19 +433,78 @@ impl PartialOrd for Completion {
 }
 impl Ord for Completion {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.finish_s
-            .total_cmp(&other.finish_s)
+        self.resolve_s
+            .total_cmp(&other.resolve_s)
             .then(self.device_idx.cmp(&other.device_idx))
     }
 }
 
-/// The population-scale scheduler engine.
+/// One buffered (arrived, usable) result awaiting the next flush.
+#[derive(Debug, Clone, Copy)]
+struct BufferedFold {
+    device_idx: usize,
+    staleness: u64,
+    resolve_s: f64,
+}
+
+/// The scheduler-visible view of one device when selecting for
+/// round/version `round` — the single construction site for engine
+/// candidates, so policy-facing fields cannot drift between the barrier
+/// scan and the streaming materialization.
+fn candidate_of(pop: &Population, device_idx: usize, round: u64) -> Candidate {
+    let d = &pop.devices[device_idx];
+    Candidate {
+        device: d.device,
+        num_examples: d.num_examples,
+        last_loss: d.last_loss,
+        rounds_since_selected: d.last_selected_round.map(|r| round.saturating_sub(r)),
+        times_selected: d.times_selected,
+    }
+}
+
+/// The population-scale scheduler engine — one event-driven core for
+/// both execution modes (see the module docs).
 pub struct Engine<T: CohortTrainer> {
     cfg: ScheduleConfig,
     policy: Box<dyn SelectionPolicy>,
     trainer: T,
     pop: Population,
     clock_s: f64,
+    // ---- unified execution state ----
+    mode: ExecMode,
+    /// Modeled local train steps per dispatch.
+    steps: u64,
+    /// Model versions flushed so far (== rounds completed in sync mode).
+    version: u64,
+    /// Event-loop virtual time.
+    now_s: f64,
+    /// Sync: wall entry of the open round (availability dead air is
+    /// charged from here).
+    entry_s: f64,
+    /// Sync: round start after the dead-air fast-forward — the deadline
+    /// anchor and idle-energy baseline.
+    round_now_s: f64,
+    /// Async: virtual time of the previous flush (+ server overhead).
+    last_flush_s: f64,
+    /// Sync: a round has been dispatched and not yet flushed.
+    round_open: bool,
+    heap: BinaryHeap<Reverse<Completion>>,
+    in_flight: usize,
+    buffer: Vec<BufferedFold>,
+    // accumulators since the last flush
+    dropped_deadline: usize,
+    dropped_churn: usize,
+    wasted_j: f64,
+    energy_j: f64,
+    /// Sync: slowest modeled finish over *all* dispatches (with no
+    /// deadline the barrier waits even for doomed stragglers).
+    slowest_all_s: f64,
+    avail_count: usize,
+    events_since_flush: u64,
+    rescans: u32,
+    /// Streaming availability membership (async mode only; the barrier
+    /// mode's once-per-round scan stays exact and allocation-free).
+    index: Option<AvailabilityIndex>,
 }
 
 impl<T: CohortTrainer> Engine<T> {
@@ -434,7 +512,45 @@ impl<T: CohortTrainer> Engine<T> {
         cfg.validate()?;
         let policy = cfg.policy.build(cfg.seed ^ 0x5E1);
         let pop = Population::synthesize(cfg)?;
-        Ok(Engine { cfg: cfg.clone(), policy, trainer, pop, clock_s: 0.0 })
+        let mode = match cfg.async_buffer {
+            Some(k) => ExecMode::Async { k_flush: k },
+            None => ExecMode::Sync,
+        };
+        let index = match mode {
+            ExecMode::Async { .. } => Some(AvailabilityIndex::new(
+                pop.devices.iter().map(|d| d.cycle).collect(),
+                0.0,
+            )),
+            ExecMode::Sync => None,
+        };
+        let steps = cfg.epochs.max(0) as u64 * cfg.steps_per_epoch;
+        Ok(Engine {
+            cfg: cfg.clone(),
+            policy,
+            trainer,
+            pop,
+            clock_s: 0.0,
+            mode,
+            steps,
+            version: 0,
+            now_s: 0.0,
+            entry_s: 0.0,
+            round_now_s: 0.0,
+            last_flush_s: 0.0,
+            round_open: false,
+            heap: BinaryHeap::new(),
+            in_flight: 0,
+            buffer: Vec::new(),
+            dropped_deadline: 0,
+            dropped_churn: 0,
+            wasted_j: 0.0,
+            energy_j: 0.0,
+            slowest_all_s: 0.0,
+            avail_count: 0,
+            events_since_flush: 0,
+            rescans: 0,
+            index,
+        })
     }
 
     pub fn population(&self) -> &Population {
@@ -445,17 +561,18 @@ impl<T: CohortTrainer> Engine<T> {
         self.clock_s
     }
 
-    /// Run the configured number of rounds (early-stopping on the target
-    /// accuracy, if set). With `cfg.async_buffer` set this runs the
-    /// event-driven async mode instead — each "round" in the report is
-    /// then one model version (buffer flush).
+    /// The execution mode this engine was configured with.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Run the configured number of rounds / model versions
+    /// (early-stopping on the target accuracy, if set). One loop, both
+    /// modes: each iteration advances the core to its next flush.
     pub fn run(mut self) -> Result<PopulationReport> {
-        if self.cfg.async_buffer.is_some() {
-            return self.run_async();
-        }
         let mut rounds = Vec::new();
-        for round in 1..=self.cfg.rounds {
-            let rec = self.run_round(round)?;
+        while self.version < self.cfg.rounds {
+            let rec = self.step_flush()?;
             let acc = rec.accuracy;
             rounds.push(rec);
             if let Some(target) = self.cfg.target_accuracy {
@@ -472,13 +589,87 @@ impl<T: CohortTrainer> Engine<T> {
         })
     }
 
-    /// Advance one round of virtual time. Public so benches can time a
-    /// single round; [`Engine::run`] is the normal entry point.
+    /// Advance one barrier round of virtual time. Public so benches can
+    /// time a single round; [`Engine::run`] is the normal entry point.
     pub fn run_round(&mut self, round: u64) -> Result<PopulationRound> {
-        let entry = self.clock_s;
-        let steps = self.cfg.epochs.max(0) as u64 * self.cfg.steps_per_epoch;
+        if self.mode != ExecMode::Sync {
+            return Err(Error::Config(
+                "run_round drives the barrier mode; use run_version for async engines".into(),
+            ));
+        }
+        self.version = round.saturating_sub(1);
+        self.step_flush()
+    }
 
-        // 1. availability scan. Under extreme churn an instant can have
+    /// Advance the streaming engine by one model version (buffer flush).
+    /// Public so benches can time per-event costs at population scale.
+    pub fn run_version(&mut self) -> Result<PopulationRound> {
+        if self.mode == ExecMode::Sync {
+            return Err(Error::Config(
+                "run_version drives the streaming mode; use run_round for sync engines".into(),
+            ));
+        }
+        self.step_flush()
+    }
+
+    /// The unified virtual-time loop: dispatch, settle one event, flush
+    /// when the mode says so. Returns at the next flush.
+    fn step_flush(&mut self) -> Result<PopulationRound> {
+        loop {
+            self.dispatch()?;
+            let Some(Reverse(ev)) = self.heap.pop() else {
+                // Nothing in flight (streaming mode only: a barrier
+                // dispatch always queues its whole cohort or errors).
+                self.fast_forward()?;
+                continue;
+            };
+            self.rescans = 0;
+            self.events_since_flush += 1;
+            if let ExecMode::Async { k_flush } = self.mode {
+                if self.events_since_flush > 10_000u64.max(1_000 * k_flush as u64) {
+                    return Err(Error::Protocol(format!(
+                        "async version {}: buffer starved ({} events without {} \
+                         usable folds — deadline/churn drop everything)",
+                        self.version + 1,
+                        self.events_since_flush,
+                        k_flush
+                    )));
+                }
+            }
+            self.settle(ev);
+            let ready = match self.mode {
+                ExecMode::Sync => self.round_open && self.heap.is_empty(),
+                ExecMode::Async { k_flush } => self.buffer.len() >= k_flush,
+            };
+            if ready {
+                return self.flush();
+            }
+        }
+    }
+
+    /// Mode-dependent dispatch: open a barrier round, or top up the
+    /// streaming window. Both paths model every dispatch's fate at issue
+    /// time and queue it through [`Engine::push_dispatch`].
+    fn dispatch(&mut self) -> Result<()> {
+        match self.mode {
+            ExecMode::Sync => {
+                if self.round_open {
+                    return Ok(());
+                }
+                self.begin_round()
+            }
+            ExecMode::Async { .. } => self.top_up(),
+        }
+    }
+
+    /// Open one barrier round: scan availability at the current virtual
+    /// time (fast-forwarding through dead air, which is charged to the
+    /// round), select a cohort, and dispatch all of it.
+    fn begin_round(&mut self) -> Result<()> {
+        let round = self.version + 1;
+        let entry = self.clock_s;
+
+        // Availability scan. Under extreme churn an instant can have
         // zero devices online; the server would simply wait, so the
         // clock fast-forwards to the next arrival instead of failing
         // (the dead air still counts toward this round's time).
@@ -514,410 +705,380 @@ impl<T: CohortTrainer> Engine<T> {
             now += dt.max(1e-6);
         }
 
-        // 2. cohort selection over available devices only
+        // Cohort selection over available devices only.
         let candidates: Vec<Candidate> = avail
             .iter()
-            .map(|&i| {
-                let d = &self.pop.devices[i as usize];
-                Candidate {
-                    device: d.device,
-                    num_examples: d.num_examples,
-                    last_loss: d.last_loss,
-                    rounds_since_selected: d
-                        .last_selected_round
-                        .map(|r| round.saturating_sub(r)),
-                }
-            })
+            .map(|&i| candidate_of(&self.pop, i as usize, round))
             .collect();
         let ctx = SelectionContext {
             round,
             cost: &self.cfg.cost,
-            steps_per_round: steps,
+            steps_per_round: self.steps,
             model_bytes: self.cfg.model_bytes,
             target_cohort: self.cfg.cohort_size,
             deadline_s: self.cfg.deadline_s,
         };
         let picked = self.policy.select(&ctx, &candidates);
-        let cohort: Vec<usize> = picked.iter().map(|&j| avail[j] as usize).collect();
-        if cohort.is_empty() {
+        if picked.is_empty() {
             return Err(Error::Protocol(format!(
                 "round {round}: policy selected no clients ({} available)",
                 avail.len()
             )));
         }
+        let dispatches: Vec<(usize, f64, f64)> = picked
+            .iter()
+            .map(|&j| {
+                let i = avail[j] as usize;
+                let d = self.pop.devices[i].device;
+                (i, ctx.modeled_round_time_s(d), ctx.modeled_round_energy_j(d))
+            })
+            .collect();
 
-        // 3. completion events over modeled costs, drained in time order
-        let mut heap: BinaryHeap<Reverse<Completion>> =
-            BinaryHeap::with_capacity(cohort.len());
-        for &i in &cohort {
-            let d = &self.pop.devices[i];
-            heap.push(Reverse(Completion {
-                finish_s: now + ctx.modeled_round_time_s(d.device),
-                device_idx: i,
-                energy_j: ctx.modeled_round_energy_j(d.device),
-                base_version: 0,
-                outcome: Outcome::Fold, // sync mode classifies at drain
-            }));
+        let deadline_abs = self
+            .cfg
+            .deadline_s
+            .map(|tau| now + tau)
+            .unwrap_or(f64::INFINITY);
+        for (i, full_time_s, full_energy_j) in dispatches {
+            // Barrier events resolve at the full modeled finish: the
+            // server waits out even doomed dispatches (classification
+            // still happens at issue time — the predicates are pure
+            // functions of the model).
+            self.push_dispatch(i, now, full_time_s, full_energy_j, deadline_abs, false);
         }
-        let deadline_abs = self.cfg.deadline_s.map(|tau| now + tau);
-        let mut done: Vec<Completion> = Vec::new();
-        let mut dropped_deadline = 0usize;
-        let mut dropped_churn = 0usize;
-        let mut wasted_j = 0f64;
-        let mut slowest_all = now;
-        while let Some(Reverse(ev)) = heap.pop() {
-            slowest_all = slowest_all.max(ev.finish_s);
-            let d = &self.pop.devices[ev.device_idx];
-            // The device was online at dispatch (it came from the
-            // availability scan); its connection survives only until the
-            // current on-dwell ends.
-            let first_off_s = d.cycle.on_dwell_end_s(now);
-            let round_cutoff = deadline_abs.unwrap_or(f64::INFINITY).min(ev.finish_s);
-            if first_off_s < round_cutoff {
-                // Went offline mid-round before it could report: its work
-                // never arrives; energy burned up to the disconnect.
-                dropped_churn += 1;
-                let frac = ((first_off_s - now) / (ev.finish_s - now)).clamp(0.0, 1.0);
-                wasted_j += ev.energy_j * frac;
-            } else if let Some(dl) = deadline_abs.filter(|&dl| ev.finish_s > dl) {
-                // Kept computing until τ, then the server moved on.
-                dropped_deadline += 1;
-                let frac = ((dl - now) / (ev.finish_s - now)).clamp(0.0, 1.0);
-                wasted_j += ev.energy_j * frac;
-            } else {
-                done.push(ev);
+        self.entry_s = entry;
+        self.round_now_s = now;
+        self.now_s = now;
+        self.avail_count = avail.len();
+        self.slowest_all_s = now;
+        self.round_open = true;
+        Ok(())
+    }
+
+    /// Top up the streaming window through the availability index:
+    /// uniform policies sample straight off it (O(want) amortized);
+    /// policies that score the whole pool get a materialized candidate
+    /// view (inherently O(available)). Retries immediately when every
+    /// sampled device was a float-boundary skip (each skip shrinks the
+    /// idle pool, so the retry terminates) — otherwise an empty heap
+    /// after such a round would be misdiagnosed as the policy declining.
+    fn top_up(&mut self) -> Result<()> {
+        loop {
+            let (dispatched, skipped) = self.try_top_up()?;
+            if dispatched > 0 || skipped == 0 {
+                return Ok(());
             }
         }
+    }
 
-        // 4. round closes at τ if anyone is missing, else at the slowest
-        // reporter (no deadline: the server waits out the stragglers)
-        let completed = done.len();
-        let slowest_ok = done.iter().fold(now, |a, e| a.max(e.finish_s));
-        let round_end = match deadline_abs {
-            Some(dl) if completed < cohort.len() => dl,
-            Some(_) => slowest_ok,
-            None => slowest_all,
+    /// One top-up attempt; returns `(dispatched, boundary_skips)`.
+    fn try_top_up(&mut self) -> Result<(usize, usize)> {
+        let window = self.cfg.effective_concurrency().max(1);
+        if self.in_flight >= window {
+            return Ok((0, 0));
+        }
+        let now = self.now_s;
+        let index = self.index.as_mut().expect("streaming mode has an index");
+        index.advance(now);
+        self.avail_count = index.idle_online_len() + self.in_flight;
+        if index.idle_online_len() == 0 {
+            return Ok((0, 0));
+        }
+        let want = window - self.in_flight;
+        let ctx = SelectionContext {
+            round: self.version + 1,
+            cost: &self.cfg.cost,
+            steps_per_round: self.steps,
+            model_bytes: self.cfg.model_bytes,
+            target_cohort: want,
+            deadline_s: self.cfg.deadline_s,
         };
-
-        let mut energy_j = wasted_j;
-        for ev in &done {
-            energy_j += ev.energy_j;
-            let wait = (round_end - ev.finish_s).max(0.0);
-            energy_j += self
-                .cfg
-                .cost
-                .idle(self.pop.devices[ev.device_idx].device, wait)
-                .energy_j;
+        let chosen: Vec<u32> = match self.policy.select_streaming(&ctx, &mut *index, want) {
+            Some(devices) => devices,
+            None => {
+                let snapshot = index.idle_online_sorted();
+                let candidates: Vec<Candidate> = snapshot
+                    .iter()
+                    .map(|&i| candidate_of(&self.pop, i as usize, self.version + 1))
+                    .collect();
+                self.policy
+                    .select(&ctx, &candidates)
+                    .into_iter()
+                    .map(|j| snapshot[j])
+                    .collect()
+            }
+        };
+        let dispatches: Vec<(usize, f64, f64)> = chosen
+            .iter()
+            .map(|&dev| {
+                let d = self.pop.devices[dev as usize].device;
+                (
+                    dev as usize,
+                    ctx.modeled_round_time_s(d),
+                    ctx.modeled_round_energy_j(d),
+                )
+            })
+            .collect();
+        let deadline_abs = self
+            .cfg
+            .deadline_s
+            .map(|tau| now + tau)
+            .unwrap_or(f64::INFINITY);
+        let mut dispatched = 0usize;
+        let mut skipped = 0usize;
+        for (i, full_time_s, full_energy_j) in dispatches {
+            // The wheel's scheduled transition and a point `is_on` query
+            // can disagree by a rounding error at a toggle boundary, so
+            // a sampled device may already be past its disconnect. The
+            // pre-index rescan filtered on `is_on(now)` implicitly; do
+            // the same here — reconcile the index and skip the dispatch
+            // (the retry loop above won't see the device again).
+            if !self.pop.devices[i].cycle.is_on(now) {
+                self.index
+                    .as_mut()
+                    .expect("streaming mode has an index")
+                    .resync_device(i as u32, now);
+                skipped += 1;
+                continue;
+            }
+            self.index
+                .as_mut()
+                .expect("streaming mode has an index")
+                .mark_busy(i as u32);
+            // Streaming events resolve at the cutoff: a doomed dispatch
+            // frees its slot the moment the server learns the outcome
+            // and never drags the clock to its hypothetical finish.
+            self.push_dispatch(i, now, full_time_s, full_energy_j, deadline_abs, true);
+            dispatched += 1;
         }
+        Ok((dispatched, skipped))
+    }
 
-        // 5. numerics for the cohort that actually reported
-        let done_idx: Vec<usize> = done.iter().map(|e| e.device_idx).collect();
+    /// Model one dispatch's fate at issue time and queue its resolution
+    /// event. The fate is a pure function of the model: a device online
+    /// at dispatch keeps its connection only to the end of the current
+    /// on-dwell (churn drop at the disconnect), a finish past τ is a
+    /// deadline drop at τ, anything else folds at the modeled finish.
+    /// Energy is prorated to the resolve point.
+    fn push_dispatch(
+        &mut self,
+        i: usize,
+        now: f64,
+        full_time_s: f64,
+        full_energy_j: f64,
+        deadline_abs: f64,
+        resolve_at_cutoff: bool,
+    ) {
+        let full_finish_s = now + full_time_s;
+        let d = &mut self.pop.devices[i];
+        // online at dispatch; the connection survives only to this
+        // on-dwell's end
+        let first_off_s = d.cycle.on_dwell_end_s(now);
+        let (cutoff_s, outcome) = if first_off_s < deadline_abs.min(full_finish_s) {
+            (first_off_s, Outcome::DropChurn)
+        } else if full_finish_s > deadline_abs {
+            (deadline_abs, Outcome::DropDeadline)
+        } else {
+            (full_finish_s, Outcome::Fold)
+        };
+        let frac = ((cutoff_s - now) / (full_finish_s - now)).clamp(0.0, 1.0);
+        d.last_selected_round = Some(self.version + 1);
+        d.times_selected += 1;
+        self.in_flight += 1;
+        self.heap.push(Reverse(Completion {
+            resolve_s: if resolve_at_cutoff { cutoff_s } else { full_finish_s },
+            device_idx: i,
+            energy_j: full_energy_j * frac,
+            base_version: self.version,
+            outcome,
+        }));
+    }
+
+    /// Settle one resolution event: account its energy, fold or drop it,
+    /// and (streaming) advance the clock and free the device's slot.
+    fn settle(&mut self, ev: Completion) {
+        let i = ev.device_idx;
+        match self.mode {
+            ExecMode::Async { .. } => {
+                self.now_s = self.now_s.max(ev.resolve_s);
+                self.index
+                    .as_mut()
+                    .expect("streaming mode has an index")
+                    .mark_idle(i as u32);
+            }
+            ExecMode::Sync => {
+                self.slowest_all_s = self.slowest_all_s.max(ev.resolve_s);
+            }
+        }
+        self.in_flight -= 1;
+        self.energy_j += ev.energy_j;
+        match ev.outcome {
+            Outcome::Fold => self.buffer.push(BufferedFold {
+                device_idx: i,
+                staleness: self.version - ev.base_version,
+                resolve_s: ev.resolve_s,
+            }),
+            Outcome::DropChurn => {
+                self.dropped_churn += 1;
+                self.wasted_j += ev.energy_j;
+            }
+            Outcome::DropDeadline => {
+                self.dropped_deadline += 1;
+                self.wasted_j += ev.energy_j;
+            }
+        }
+    }
+
+    /// Flush the buffer into a new model version: train the folds
+    /// (staleness-discounted; weight 1.0 in a barrier round), close the
+    /// books, and emit the round record. Shared by both modes — only the
+    /// clock arithmetic differs (barrier close vs. flush-to-flush).
+    fn flush(&mut self) -> Result<PopulationRound> {
+        self.version += 1;
+        let version = self.version;
+        let alpha = self.cfg.staleness_alpha;
+        let folds: Vec<(usize, f64)> = self
+            .buffer
+            .iter()
+            .map(|f| {
+                (
+                    f.device_idx,
+                    crate::strategy::fedbuff::staleness_discount(f.staleness, alpha),
+                )
+            })
+            .collect();
         let (losses, eval_loss, accuracy) =
-            self.trainer.train_round(round, &self.pop, &done_idx, steps)?;
-        debug_assert_eq!(losses.len(), done_idx.len());
-        for (&i, &l) in done_idx.iter().zip(&losses) {
-            self.pop.devices[i].last_loss = Some(l);
+            self.trainer
+                .train_flush(version, &self.pop, &folds, self.steps)?;
+        debug_assert_eq!(losses.len(), self.buffer.len());
+        for (f, &l) in self.buffer.iter().zip(&losses) {
+            self.pop.devices[f.device_idx].last_loss = Some(l);
         }
-        for &i in &cohort {
-            self.pop.devices[i].last_selected_round = Some(round);
-        }
+        let completed = self.buffer.len();
+        let staleness_sum: u64 = self.buffer.iter().map(|f| f.staleness).sum();
+        let max_staleness = self.buffer.iter().map(|f| f.staleness).max().unwrap_or(0);
         let train_loss = if losses.is_empty() {
             f64::NAN
         } else {
             losses.iter().sum::<f64>() / losses.len() as f64
         };
+        let overhead = self.cfg.cost.server_overhead_s;
 
-        // measured from round entry so availability dead air is charged
-        let round_time_s = (round_end - entry) + self.cfg.cost.server_overhead_s;
-        self.clock_s = entry + round_time_s;
+        let round_time_s = match self.mode {
+            ExecMode::Sync => {
+                // The round closes at τ if anyone is missing, else at
+                // the slowest reporter (no deadline: the server waits
+                // out every straggler, folded or doomed).
+                let drops = self.dropped_deadline + self.dropped_churn;
+                let slowest_ok = self
+                    .buffer
+                    .iter()
+                    .map(|f| f.resolve_s)
+                    .fold(self.round_now_s, f64::max);
+                let round_end = match self.cfg.deadline_s {
+                    Some(tau) if drops > 0 => self.round_now_s + tau,
+                    Some(_) => slowest_ok,
+                    None => self.slowest_all_s,
+                };
+                // idle-while-waiting energy for clients that reported early
+                for f in &self.buffer {
+                    let wait = (round_end - f.resolve_s).max(0.0);
+                    self.energy_j += self
+                        .cfg
+                        .cost
+                        .idle(self.pop.devices[f.device_idx].device, wait)
+                        .energy_j;
+                }
+                // measured from round entry so availability dead air is
+                // charged
+                let round_time_s = (round_end - self.entry_s) + overhead;
+                self.clock_s = self.entry_s + round_time_s;
+                self.now_s = self.clock_s;
+                self.round_open = false;
+                round_time_s
+            }
+            ExecMode::Async { .. } => {
+                let round_time_s = (self.now_s - self.last_flush_s) + overhead;
+                self.now_s += overhead;
+                self.last_flush_s = self.now_s;
+                self.clock_s = self.now_s;
+                round_time_s
+            }
+        };
 
-        Ok(PopulationRound {
-            round,
-            available: avail.len(),
-            selected: cohort.len(),
+        let rec = PopulationRound {
+            round: version,
+            available: self.avail_count,
+            // resolution-based accounting in both modes: dispatches
+            // *settled* this window (folds + drops), so selected -
+            // completed = drops and hit_rate keeps its meaning;
+            // outstanding streaming work is `in_flight`
+            selected: completed + self.dropped_deadline + self.dropped_churn,
             completed,
-            dropped_deadline,
-            dropped_churn,
+            dropped_deadline: self.dropped_deadline,
+            dropped_churn: self.dropped_churn,
             train_loss,
             eval_loss,
             accuracy,
-            steps: completed as u64 * steps,
+            steps: completed as u64 * self.steps,
             round_time_s,
             cum_time_s: self.clock_s,
-            round_energy_j: energy_j,
-            wasted_energy_j: wasted_j,
-            mean_staleness: 0.0, // barrier rounds are never stale
-            max_staleness: 0,
-            in_flight: 0,
-        })
+            round_energy_j: self.energy_j,
+            wasted_energy_j: self.wasted_j,
+            mean_staleness: if completed == 0 {
+                0.0
+            } else {
+                staleness_sum as f64 / completed as f64
+            },
+            max_staleness,
+            in_flight: self.in_flight,
+        };
+        self.buffer.clear();
+        self.dropped_deadline = 0;
+        self.dropped_churn = 0;
+        self.wasted_j = 0.0;
+        self.energy_j = 0.0;
+        self.events_since_flush = 0;
+        Ok(rec)
     }
 
-    // -----------------------------------------------------------------
-    // Async (FedBuff-style) mode
-    // -----------------------------------------------------------------
-
-    /// Event-driven async mode: keep up to `effective_concurrency()`
-    /// dispatches in flight, fold each device-finish event into a buffer,
-    /// and flush a model version every `async_buffer` folds — no cohort
-    /// barrier, so a straggler only ever delays its *own* contribution.
-    /// Staleness (versions flushed between a fold's dispatch and its
-    /// arrival) discounts its training weight by `(1+s)^-alpha` via
-    /// [`CohortTrainer::train_flush`].
-    ///
-    /// `deadline_s` becomes a per-dispatch cutoff: a device that would
-    /// finish more than τ after its dispatch is dropped at τ (energy up
-    /// to the cutoff wasted) and its concurrency slot frees *at the
-    /// cutoff*, not at the hypothetical finish — likewise a churn drop
-    /// resolves at the disconnect. The virtual clock therefore never
-    /// advances past the moment the server learns an outcome.
-    fn run_async(mut self) -> Result<PopulationReport> {
-        let k_flush = self
-            .cfg
-            .async_buffer
-            .expect("run_async requires cfg.async_buffer");
-        let alpha = self.cfg.staleness_alpha;
-        let max_in_flight = self.cfg.effective_concurrency().max(1);
-        let steps = self.cfg.epochs.max(0) as u64 * self.cfg.steps_per_epoch;
-
-        let mut rounds: Vec<PopulationRound> = Vec::new();
-        let mut version: u64 = 0;
-        let mut now = self.clock_s;
-        let mut last_flush_s = now;
-        let mut in_flight = vec![false; self.pop.devices.len()];
-        let mut in_flight_count = 0usize;
-        let mut heap: BinaryHeap<Reverse<Completion>> = BinaryHeap::new();
-        let mut buffer: Vec<(usize, u64)> = Vec::new(); // (device, staleness)
-        // accumulators since the last flush
-        let mut dropped_deadline = 0usize;
-        let mut dropped_churn = 0usize;
-        let mut wasted_j = 0f64;
-        let mut energy_j = 0f64;
-        let mut avail_count = 0usize;
-        let mut events_since_flush = 0u64;
-        let mut rescans = 0u32;
-
-        while version < self.cfg.rounds {
-            // ---- top up: keep the in-flight window full ----------------
-            if in_flight_count < max_in_flight {
-                let mut avail: Vec<u32> = Vec::new();
-                for (i, d) in self.pop.devices.iter().enumerate() {
-                    if !in_flight[i] && d.cycle.is_on(now) {
-                        avail.push(i as u32);
-                    }
-                }
-                avail_count = avail.len() + in_flight_count;
-                if !avail.is_empty() {
-                    let candidates: Vec<Candidate> = avail
-                        .iter()
-                        .map(|&i| {
-                            let d = &self.pop.devices[i as usize];
-                            Candidate {
-                                device: d.device,
-                                num_examples: d.num_examples,
-                                last_loss: d.last_loss,
-                                rounds_since_selected: d
-                                    .last_selected_round
-                                    .map(|r| (version + 1).saturating_sub(r)),
-                            }
-                        })
-                        .collect();
-                    let ctx = SelectionContext {
-                        round: version + 1,
-                        cost: &self.cfg.cost,
-                        steps_per_round: steps,
-                        model_bytes: self.cfg.model_bytes,
-                        target_cohort: max_in_flight - in_flight_count,
-                        deadline_s: self.cfg.deadline_s,
-                    };
-                    let picked = self.policy.select(&ctx, &candidates);
-                    for j in picked {
-                        let i = avail[j] as usize;
-                        let (full_finish_s, full_energy_j, first_off_s) = {
-                            let d = &self.pop.devices[i];
-                            (
-                                now + ctx.modeled_round_time_s(d.device),
-                                ctx.modeled_round_energy_j(d.device),
-                                // online at dispatch; the connection
-                                // survives only to this on-dwell's end
-                                d.cycle.on_dwell_end_s(now),
-                            )
-                        };
-                        let deadline_abs = self
-                            .cfg
-                            .deadline_s
-                            .map(|tau| now + tau)
-                            .unwrap_or(f64::INFINITY);
-                        // The dispatch's fate is fully modeled, so decide
-                        // it now and queue the event at the moment the
-                        // server *learns* it: a doomed dispatch frees its
-                        // slot at the cutoff and never drags the clock to
-                        // its hypothetical finish.
-                        let (resolve_s, outcome) = if first_off_s
-                            < deadline_abs.min(full_finish_s)
-                        {
-                            (first_off_s, Outcome::DropChurn)
-                        } else if full_finish_s > deadline_abs {
-                            (deadline_abs, Outcome::DropDeadline)
-                        } else {
-                            (full_finish_s, Outcome::Fold)
-                        };
-                        // energy up to the resolve point (all of it for a
-                        // fold, the burned fraction for a drop)
-                        let frac =
-                            ((resolve_s - now) / (full_finish_s - now)).clamp(0.0, 1.0);
-                        in_flight[i] = true;
-                        in_flight_count += 1;
-                        self.pop.devices[i].last_selected_round = Some(version + 1);
-                        heap.push(Reverse(Completion {
-                            finish_s: resolve_s,
-                            device_idx: i,
-                            energy_j: full_energy_j * frac,
-                            base_version: version,
-                            outcome,
-                        }));
-                    }
-                }
-            }
-
-            // ---- drain one completion event ----------------------------
-            let Some(Reverse(ev)) = heap.pop() else {
-                // Nothing in flight. Every *built-in* policy dispatches
-                // at least one online candidate, so this means nobody is
-                // online — but a custom policy may decline; diagnose that
-                // accurately (like the sync loop) instead of blaming
-                // availability.
-                let online = self
-                    .pop
-                    .devices
-                    .iter()
-                    .filter(|d| d.cycle.is_on(now))
-                    .count();
-                if online > 0 {
-                    return Err(Error::Protocol(format!(
-                        "async version {}: policy selected no clients \
-                         ({online} available)",
-                        version + 1
-                    )));
-                }
-                // Nobody online: fast-forward to the next device arrival
-                // (the dead air is charged to the flush in progress,
-                // exactly like the sync loop).
-                rescans += 1;
-                if rescans > 1_000 {
-                    return Err(Error::Protocol(format!(
-                        "async version {}: no devices ever available (t={now:.0}s)",
-                        version + 1
-                    )));
-                }
-                let mut dt = f64::INFINITY;
-                for d in &self.pop.devices {
-                    dt = dt.min(d.cycle.next_on_delay_s(now));
-                }
-                if !dt.is_finite() {
-                    return Err(Error::Protocol(format!(
-                        "async version {}: no devices ever available (t={now:.0}s)",
-                        version + 1
-                    )));
-                }
-                now += dt.max(1e-6);
-                continue;
-            };
-            rescans = 0;
-            events_since_flush += 1;
-            if events_since_flush > 10_000u64.max(1_000 * k_flush as u64) {
-                return Err(Error::Protocol(format!(
-                    "async version {}: buffer starved ({} events without {} \
-                     usable folds — deadline/churn drop everything)",
-                    version + 1,
-                    events_since_flush,
-                    k_flush
-                )));
-            }
-            now = now.max(ev.finish_s);
-            let i = ev.device_idx;
-            in_flight[i] = false;
-            in_flight_count -= 1;
-            energy_j += ev.energy_j;
-            match ev.outcome {
-                Outcome::Fold => buffer.push((i, version - ev.base_version)),
-                Outcome::DropChurn => {
-                    dropped_churn += 1;
-                    wasted_j += ev.energy_j;
-                }
-                Outcome::DropDeadline => {
-                    dropped_deadline += 1;
-                    wasted_j += ev.energy_j;
-                }
-            }
-
-            // ---- flush: a new model version every K folds --------------
-            if buffer.len() >= k_flush {
-                version += 1;
-                let folds: Vec<(usize, f64)> = buffer
-                    .iter()
-                    .map(|&(i, s)| (i, crate::strategy::fedbuff::staleness_discount(s, alpha)))
-                    .collect();
-                let (losses, eval_loss, accuracy) =
-                    self.trainer.train_flush(version, &self.pop, &folds, steps)?;
-                debug_assert_eq!(losses.len(), buffer.len());
-                for (&(di, _), &l) in buffer.iter().zip(&losses) {
-                    self.pop.devices[di].last_loss = Some(l);
-                }
-                let completed = buffer.len();
-                let staleness_sum: u64 = buffer.iter().map(|&(_, s)| s).sum();
-                let max_staleness = buffer.iter().map(|&(_, s)| s).max().unwrap_or(0);
-                let train_loss = if losses.is_empty() {
-                    f64::NAN
-                } else {
-                    losses.iter().sum::<f64>() / losses.len() as f64
-                };
-                let round_time_s = (now - last_flush_s) + self.cfg.cost.server_overhead_s;
-                now += self.cfg.cost.server_overhead_s;
-                last_flush_s = now;
-                self.clock_s = now;
-                rounds.push(PopulationRound {
-                    round: version,
-                    available: avail_count,
-                    // resolution-based, like the sync loop's accounting:
-                    // dispatches *settled* this window (folds + drops), so
-                    // selected - completed = drops and hit_rate/dropped
-                    // keep their meaning; outstanding work is `in_flight`
-                    selected: completed + dropped_deadline + dropped_churn,
-                    completed,
-                    dropped_deadline,
-                    dropped_churn,
-                    train_loss,
-                    eval_loss,
-                    accuracy,
-                    steps: completed as u64 * steps,
-                    round_time_s,
-                    cum_time_s: self.clock_s,
-                    round_energy_j: energy_j,
-                    wasted_energy_j: wasted_j,
-                    mean_staleness: staleness_sum as f64 / completed as f64,
-                    max_staleness,
-                    in_flight: in_flight_count,
-                });
-                buffer.clear();
-                dropped_deadline = 0;
-                dropped_churn = 0;
-                wasted_j = 0.0;
-                energy_j = 0.0;
-                events_since_flush = 0;
-                if let Some(target) = self.cfg.target_accuracy {
-                    if accuracy >= target {
-                        break;
-                    }
-                }
-            }
+    /// Streaming dead air: nothing in flight and nothing dispatchable.
+    /// Every *built-in* policy dispatches at least one online candidate,
+    /// so an empty heap with devices online means a custom policy
+    /// declined — diagnose that accurately instead of blaming
+    /// availability. Otherwise fast-forward the clock to the next device
+    /// arrival (the dead air is charged to the flush in progress).
+    fn fast_forward(&mut self) -> Result<()> {
+        let index = self
+            .index
+            .as_mut()
+            .expect("a barrier dispatch always queues events");
+        index.advance(self.now_s);
+        if index.idle_online_len() > 0 {
+            return Err(Error::Protocol(format!(
+                "async version {}: policy selected no clients ({} available)",
+                self.version + 1,
+                index.idle_online_len()
+            )));
         }
-        self.clock_s = now;
-        Ok(PopulationReport {
-            name: self.cfg.name.clone(),
-            policy: self.policy.name().to_string(),
-            population: self.cfg.population,
-            rounds,
-        })
+        self.rescans += 1;
+        if self.rescans > 1_000 {
+            return Err(Error::Protocol(format!(
+                "async version {}: no devices ever available (t={:.0}s)",
+                self.version + 1,
+                self.now_s
+            )));
+        }
+        let Some(t_next) = index.next_transition_s() else {
+            return Err(Error::Protocol(format!(
+                "async version {}: no devices ever available (t={:.0}s)",
+                self.version + 1,
+                self.now_s
+            )));
+        };
+        // epsilon guards float-boundary stalls
+        self.now_s += (t_next - self.now_s).max(1e-6);
+        Ok(())
     }
 }
 
@@ -1090,7 +1251,7 @@ mod tests {
         assert_eq!(report.rounds.len(), 20);
         assert!(report.dropped_total() > 0, "no drops under a tight τ");
         assert!(report.wasted_energy_j() > 0.0);
-        // accounting invariant, same shape as the sync loop: every
+        // accounting invariant, same shape as the sync mode: every
         // settled dispatch either folded or was dropped
         for r in &report.rounds {
             assert_eq!(r.completed, 4);
@@ -1121,6 +1282,53 @@ mod tests {
         let report = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
         assert!(report.rounds.len() < 500);
         assert!(report.final_accuracy() >= 0.3);
+    }
+
+    #[test]
+    fn fairness_cap_spreads_selection_load() {
+        // With a hard cap of 2 selections per device, 10 rounds × 50
+        // clients = 500 drafts must spread over ≥ 250 distinct devices;
+        // uniform with the same seed concentrates more repeats.
+        let c = cfg()
+            .population(2_000)
+            .policy(PolicyConfig::FairnessCap { max_selections: 2 })
+            .rounds(10);
+        let engine = Engine::new(&c, SurrogateTrainer::default()).unwrap();
+        let report = {
+            let mut e = engine;
+            let mut rounds = Vec::new();
+            for round in 1..=10 {
+                rounds.push(e.run_round(round).unwrap());
+            }
+            let over_cap = e
+                .population()
+                .devices
+                .iter()
+                .filter(|d| d.times_selected > 2)
+                .count();
+            assert_eq!(over_cap, 0, "fairness cap exceeded");
+            let distinct = e
+                .population()
+                .devices
+                .iter()
+                .filter(|d| d.times_selected > 0)
+                .count();
+            assert!(distinct >= 250, "selection load not spread: {distinct} devices");
+            rounds
+        };
+        assert_eq!(report.len(), 10);
+        assert!(report.iter().all(|r| r.selected == 50));
+    }
+
+    #[test]
+    fn run_round_and_run_version_enforce_modes() {
+        let mut sync = Engine::new(&cfg(), SurrogateTrainer::default()).unwrap();
+        assert!(sync.run_version().is_err());
+        assert!(sync.run_round(1).is_ok());
+        let mut streaming =
+            Engine::new(&cfg().buffered(8), SurrogateTrainer::default()).unwrap();
+        assert!(streaming.run_round(1).is_err());
+        assert!(streaming.run_version().is_ok());
     }
 
     #[test]

@@ -12,14 +12,20 @@
 //!   state.
 //! * [`availability`] — per-device on/off churn so cohorts are drawn
 //!   from *available* devices only (deterministic cycles + explicit
-//!   trace synthesis from a seeded RNG).
-//! * [`engine`] — an event-driven virtual-time engine that scales to
-//!   100k–1M virtual devices by advancing a binary-heap event queue over
-//!   modeled costs, training numerics only for the selected cohort. With
-//!   [`crate::config::ScheduleConfig::async_buffer`] set it runs in
-//!   FedBuff-style async mode: device-finish events fold into a buffer
-//!   (staleness-discounted) instead of barriering each round, and every
-//!   K folds flush a model version.
+//!   trace synthesis from a seeded RNG), plus the incremental
+//!   [`availability::AvailabilityIndex`]: a time wheel over next
+//!   state-transitions + an idle-online free-list, so the streaming
+//!   core's per-event top-up is O(1)-amortized instead of an
+//!   O(population) rescan.
+//! * [`engine`] — **one** event-driven virtual-time core
+//!   ([`engine::ExecMode`]) that scales to 100k–1M virtual devices by
+//!   advancing a binary-heap event queue over modeled costs, training
+//!   numerics only for the selected cohort. Synchronous FedAvg rounds
+//!   are the degenerate case (buffer = cohort, barrier flush, zero
+//!   staleness); with [`crate::config::ScheduleConfig::async_buffer`]
+//!   set the same loop streams FedBuff-style: device-finish events fold
+//!   into a buffer (staleness-discounted) and every K folds flush a
+//!   model version.
 //!
 //! Wiring: [`crate::config::ScheduleConfig`] describes an experiment
 //! (JSON or builder), [`crate::server::Server`] accepts a selection hook
@@ -32,11 +38,14 @@ pub mod availability;
 pub mod engine;
 pub mod policy;
 
-pub use availability::{Availability, AvailabilityTrace, ChurnModel, ChurnSpec, Cycle};
+pub use availability::{
+    Availability, AvailabilityIndex, AvailabilityTrace, ChurnModel, ChurnSpec, Cycle,
+};
 pub use engine::{
-    CohortTrainer, Engine, Population, PopulationReport, PopulationRound, SurrogateTrainer,
-    VirtualDevice,
+    CohortTrainer, Engine, ExecMode, Population, PopulationReport, PopulationRound,
+    SurrogateTrainer, VirtualDevice,
 };
 pub use policy::{
-    Candidate, DeadlineAware, SelectionContext, SelectionPolicy, UniformRandom, UtilityBased,
+    Candidate, DeadlineAware, FairnessCap, SelectionContext, SelectionPolicy, UniformRandom,
+    UtilityBased,
 };

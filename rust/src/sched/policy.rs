@@ -13,11 +13,21 @@
 //! * [`UtilityBased`] — Oort-style: blend statistical utility (recent
 //!   training loss, data size) with modeled system cost, plus an
 //!   exploration share for never-sampled clients.
+//! * [`FairnessCap`] — uniform sampling under a per-device
+//!   selection-count cap, so no device is drafted (and drained) far more
+//!   often than its peers.
 //!
 //! All policies are deterministic per seed: same seed + same candidates
 //! → same cohort, which the property tests pin down.
+//!
+//! Policies that can sample straight off the incremental
+//! [`AvailabilityIndex`] additionally implement
+//! [`SelectionPolicy::select_streaming`], the O(1)-amortized fast path
+//! the streaming execution core uses between events; everyone else gets
+//! the materialized candidate view via [`SelectionPolicy::select`].
 
 use crate::device::DeviceProfile;
+use crate::sched::availability::AvailabilityIndex;
 use crate::sim::cost::CostModel;
 use crate::util::rng::Rng;
 
@@ -59,6 +69,9 @@ pub struct Candidate {
     pub last_loss: Option<f64>,
     /// Rounds since this client was last selected (None = never).
     pub rounds_since_selected: Option<u64>,
+    /// How many times this client has been selected so far (fairness
+    /// policies cap this).
+    pub times_selected: u64,
 }
 
 /// A cohort-selection policy. `select` returns distinct indices into
@@ -69,6 +82,23 @@ pub trait SelectionPolicy: Send {
     fn name(&self) -> &'static str;
 
     fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize>;
+
+    /// Streaming fast path: draw up to `want` devices straight off the
+    /// availability index, without materializing the candidate pool.
+    /// Returns *device ids* (not candidate indices). The default `None`
+    /// tells the caller this policy needs the full candidate view (it
+    /// then builds candidates and calls [`SelectionPolicy::select`]);
+    /// policies that only need uniform access — [`UniformRandom`] —
+    /// override it, making per-event top-up O(want) amortized instead of
+    /// O(population).
+    fn select_streaming(
+        &mut self,
+        _ctx: &SelectionContext,
+        _index: &mut AvailabilityIndex,
+        _want: usize,
+    ) -> Option<Vec<u32>> {
+        None
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -102,6 +132,21 @@ impl SelectionPolicy for UniformRandom {
 
     fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
         self.pick(candidates.len(), ctx.target_cohort)
+    }
+
+    /// Uniform sampling needs nothing but the index: O(want) partial
+    /// Fisher–Yates over the idle-online free-list. (This draws from the
+    /// same seeded stream as `select`, so a policy instance stays
+    /// deterministic whichever path the caller takes — but the streams
+    /// are not interchangeable: the fast path consumes O(want) draws
+    /// where the materialized path consumes O(available).)
+    fn select_streaming(
+        &mut self,
+        _ctx: &SelectionContext,
+        index: &mut AvailabilityIndex,
+        want: usize,
+    ) -> Option<Vec<u32>> {
+        Some(index.sample_idle(&mut self.rng, want))
     }
 }
 
@@ -240,13 +285,80 @@ impl SelectionPolicy for UtilityBased {
     }
 }
 
+// ---------------------------------------------------------------------------
+// FairnessCap
+// ---------------------------------------------------------------------------
+
+/// Default per-device selection cap for the `fair` policy.
+pub const DEFAULT_FAIRNESS_CAP: u64 = 10;
+
+/// Fairness-aware selection: uniform sampling restricted to devices
+/// selected fewer than `max_selections` times so far. If the uncapped
+/// pool cannot fill the cohort, it tops up with the least-selected
+/// capped devices (ties broken by candidate index), so cohorts stay full
+/// while selection load spreads as evenly as availability allows.
+pub struct FairnessCap {
+    rng: Rng,
+    /// Hard cap on how often one device is drafted over a run.
+    pub max_selections: u64,
+}
+
+impl FairnessCap {
+    pub fn new(seed: u64) -> Self {
+        FairnessCap {
+            rng: Rng::seed_from(seed ^ 0xFA1C),
+            max_selections: DEFAULT_FAIRNESS_CAP,
+        }
+    }
+
+    pub fn with_cap(mut self, max_selections: u64) -> Self {
+        self.max_selections = max_selections.max(1);
+        self
+    }
+}
+
+impl SelectionPolicy for FairnessCap {
+    fn name(&self) -> &'static str {
+        "fair"
+    }
+
+    fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
+        let k = ctx.target_cohort.min(candidates.len());
+        let mut eligible: Vec<usize> = Vec::new();
+        let mut capped: Vec<(u64, usize)> = Vec::new();
+        for (i, c) in candidates.iter().enumerate() {
+            if c.times_selected < self.max_selections {
+                eligible.push(i);
+            } else {
+                capped.push((c.times_selected, i));
+            }
+        }
+        self.rng.shuffle(&mut eligible);
+        eligible.truncate(k);
+        if eligible.len() < k {
+            // Not enough uncapped devices: fill with the least-hammered
+            // capped ones rather than starving the round.
+            capped.sort_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+            let need = k - eligible.len();
+            eligible.extend(capped.iter().take(need).map(|&(_, i)| i));
+        }
+        eligible
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::device::profiles;
 
     fn candidate(device: &'static DeviceProfile, last_loss: Option<f64>) -> Candidate {
-        Candidate { device, num_examples: 256, last_loss, rounds_since_selected: None }
+        Candidate {
+            device,
+            num_examples: 256,
+            last_loss,
+            rounds_since_selected: None,
+            times_selected: 0,
+        }
     }
 
     fn mixed_candidates() -> Vec<Candidate> {
@@ -373,6 +485,78 @@ mod tests {
                 UtilityBased::new(seed).select(&c, &cands),
                 UtilityBased::new(seed).select(&c, &cands),
             );
+            assert_eq!(
+                FairnessCap::new(seed).select(&c, &cands),
+                FairnessCap::new(seed).select(&c, &cands),
+            );
         }
+    }
+
+    #[test]
+    fn fairness_cap_excludes_over_selected_devices() {
+        let m = CostModel::default();
+        let gpu = profiles::by_name("jetson_tx2_gpu").unwrap();
+        let mut cands: Vec<Candidate> = (0..8).map(|_| candidate(gpu, Some(1.0))).collect();
+        for c in cands.iter_mut().take(4) {
+            c.times_selected = 5; // at the cap
+        }
+        let mut policy = FairnessCap::new(3).with_cap(5);
+        let picked = policy.select(&ctx(&m, 4, None), &cands);
+        assert_eq!(picked.len(), 4);
+        assert!(
+            picked.iter().all(|&i| i >= 4),
+            "picked a capped device: {picked:?}"
+        );
+    }
+
+    #[test]
+    fn fairness_cap_tops_up_with_least_selected_when_pool_exhausted() {
+        let m = CostModel::default();
+        let gpu = profiles::by_name("jetson_tx2_gpu").unwrap();
+        let mut cands: Vec<Candidate> = (0..6).map(|_| candidate(gpu, Some(1.0))).collect();
+        // everyone capped, at different counts; 2 under-cap devices
+        for (i, c) in cands.iter_mut().enumerate() {
+            c.times_selected = match i {
+                0 | 1 => 0,
+                2 => 7,
+                3 => 9,
+                _ => 20,
+            };
+        }
+        let mut policy = FairnessCap::new(3).with_cap(5);
+        let picked = policy.select(&ctx(&m, 4, None), &cands);
+        assert_eq!(picked.len(), 4);
+        // both uncapped devices plus the two least-selected capped ones
+        assert!(picked.contains(&0) && picked.contains(&1), "{picked:?}");
+        assert!(picked.contains(&2) && picked.contains(&3), "{picked:?}");
+    }
+
+    #[test]
+    fn uniform_streaming_fast_path_samples_from_index() {
+        use crate::sched::availability::{AvailabilityIndex, Cycle};
+        let m = CostModel::default();
+        let cands = mixed_candidates();
+        let c = ctx(&m, 3, None);
+        let mut index = AvailabilityIndex::new(vec![Cycle::always_on(); 8], 0.0);
+        let mut policy = UniformRandom::new(5);
+        let picked = policy
+            .select_streaming(&c, &mut index, 3)
+            .expect("uniform supports the streaming fast path");
+        assert_eq!(picked.len(), 3);
+        let mut sorted = picked.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "repeated device: {picked:?}");
+        assert!(picked.iter().all(|&d| d < 8));
+        // non-uniform policies decline the fast path
+        assert!(DeadlineAware::new(5)
+            .select_streaming(&c, &mut index, 3)
+            .is_none());
+        assert!(UtilityBased::new(5)
+            .select_streaming(&c, &mut index, 3)
+            .is_none());
+        assert!(FairnessCap::new(5)
+            .select_streaming(&c, &mut index, 3)
+            .is_none());
     }
 }

@@ -1,26 +1,29 @@
-//! The asynchronous FL loop: buffered aggregation without a round barrier.
+//! The asynchronous FL server façade: buffered aggregation without a
+//! round barrier.
 //!
-//! The synchronous [`super::Server`] dispatches a cohort and waits for the
-//! slowest participant before aggregating — the straggler tax the paper
-//! quantifies. [`AsyncServer`] keeps one fit request outstanding on every
-//! registered client (bounded by `max_concurrency`), folds results into
-//! the configured [`AsyncStrategy`] buffer **as they arrive**, and emits a
-//! new model version every flush. Each flush appends a [`RoundRecord`]
-//! whose `round` is the model version and which carries the new
-//! staleness/concurrency stats.
+//! The synchronous [`super::Server`] dispatches a cohort and waits for
+//! the slowest participant before aggregating — the straggler tax the
+//! paper quantifies. [`AsyncServer`] runs the *same* execution core
+//! ([`super::exec::ExecCore`]) in streaming mode: up to
+//! `max_concurrency` fit requests stay outstanding, results fold into
+//! the configured [`AsyncStrategy`] buffer **as they arrive**, and every
+//! flush emits a new model version. Each flush appends a
+//! [`super::RoundRecord`] whose `round` is the model version and which
+//! carries the staleness/concurrency stats.
 //!
 //! Time is *modeled*, exactly like the rest of the evaluation stack: a
 //! dispatch to device `d` completes `download + steps × t_step(d) +
-//! upload` virtual seconds after it is issued, and the fold loop consumes
-//! completions in virtual-time order (a binary heap, as in
+//! upload` virtual seconds after it is issued, and the fold loop
+//! consumes completions in virtual-time order (a binary heap, as in
 //! [`crate::sched::engine`]). That makes the loop deterministic — real
 //! thread scheduling cannot reorder folds — while every exchange still
 //! crosses the real wire protocol.
 //!
-//! Lifecycle of one in-flight result:
-//! * **folded** — client still registered, result ok → into the buffer;
-//! * **failed** — the client answered with an error status (it stays in
-//!   rotation) or the exchange errored (the connection is dropped);
+//! Lifecycle of one in-flight result (shared with the barrier mode —
+//! see [`super::exec`]):
+//! * **folded** — client still registered, result usable → aggregation;
+//! * **failed** — error status or empty result (the client stays in
+//!   rotation), or a transport error (the connection is dropped);
 //! * **discarded** — the client deregistered (or reconnected as a new
 //!   proxy) while the fit was outstanding; counted exactly once;
 //! * **drained** — still in flight when the run stopped.
@@ -29,125 +32,29 @@
 //! ([`AsyncStats`]), which the e2e tests assert: no result is ever lost
 //! or double-counted.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::sync::Arc;
-use std::thread::JoinHandle;
 
-use crate::client::keys;
-use crate::error::{Error, Result};
-use crate::proto::scalar::ConfigExt;
-use crate::proto::{FitRes, Parameters};
+use crate::error::Result;
+use crate::proto::Parameters;
 use crate::sim::cost::CostModel;
-use crate::strategy::{AsyncStrategy, ClientHandle};
-use crate::telemetry::log;
+use crate::strategy::AsyncStrategy;
 
 use super::client_manager::ClientManager;
-use super::history::{History, RoundRecord};
-use super::proxy::ClientProxy;
+use super::exec::{Brain, ExecCore};
+use super::history::History;
 use super::ServerConfig;
 
-/// Whole-run accounting for the async loop (see the module docs for the
-/// lifecycle of each count). `dispatched == folded + failures + discarded
-/// + drained` after [`AsyncServer::run`] returns.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
-pub struct AsyncStats {
-    /// Fit requests sent.
-    pub dispatched: u64,
-    /// Successful results folded into the strategy buffer.
-    pub folded: u64,
-    /// Folded results that have been aggregated into a model version
-    /// (`buffer_size × versions`; `folded - flushed` sit in the buffer).
-    pub flushed: u64,
-    /// Results that reported an error status or whose exchange failed.
-    pub failures: u64,
-    /// In-flight results from clients that deregistered before arrival.
-    pub discarded: u64,
-    /// Results still in flight when the run stopped (joined, not folded).
-    pub drained: u64,
-}
+pub use super::exec::AsyncStats;
 
-/// A dispatch completion on the virtual-time queue. Ordered by modeled
-/// finish time, ties broken by dispatch sequence for determinism.
-#[derive(Debug, Clone, Copy)]
-struct Pending {
-    finish_s: f64,
-    seq: u64,
-}
-
-impl PartialEq for Pending {
-    fn eq(&self, other: &Self) -> bool {
-        self.cmp(other) == std::cmp::Ordering::Equal
-    }
-}
-impl Eq for Pending {}
-impl PartialOrd for Pending {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for Pending {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.finish_s
-            .total_cmp(&other.finish_s)
-            .then(self.seq.cmp(&other.seq))
-    }
-}
-
-/// One outstanding fit dispatch.
-struct InFlight {
-    proxy: Arc<ClientProxy>,
-    base_version: u64,
-    finish_s: f64,
-    bytes_down: usize,
-    modeled_energy_j: f64,
-    join: JoinHandle<Result<FitRes>>,
-}
-
-/// Per-version accumulators, reset at every flush.
-#[derive(Default)]
-struct FlushAcc {
-    folded: usize,
-    failures: usize,
-    discarded: usize,
-    staleness_sum: u64,
-    staleness_max: u64,
-    energy_j: f64,
-    down_bytes: usize,
-    up_bytes: usize,
-    steps: u64,
-    train_loss_sum: f64,
-    train_loss_n: usize,
-}
-
-impl FlushAcc {
-    fn mean_staleness(&self) -> f64 {
-        if self.folded == 0 {
-            0.0
-        } else {
-            self.staleness_sum as f64 / self.folded as f64
-        }
-    }
-
-    fn train_loss(&self) -> f64 {
-        if self.train_loss_n == 0 {
-            f64::NAN
-        } else {
-            self.train_loss_sum / self.train_loss_n as f64
-        }
-    }
-}
-
-/// The asynchronous FL server. `config.num_rounds` counts model versions
+/// The asynchronous FL server — the streaming-mode façade over
+/// [`super::exec::ExecCore`]. `config.num_rounds` counts model versions
 /// (buffer flushes); `config.max_concurrency` bounds outstanding
 /// dispatches (0 = every registered client); `config.steps_per_round` is
-/// the modeled local-step count used for virtual-time accounting.
+/// the modeled local-step count used for virtual-time accounting of each
+/// in-flight exchange.
 pub struct AsyncServer {
     pub manager: Arc<ClientManager>,
-    strategy: Box<dyn AsyncStrategy>,
-    cost: CostModel,
-    config: ServerConfig,
-    stats: AsyncStats,
+    core: ExecCore,
 }
 
 impl AsyncServer {
@@ -157,318 +64,19 @@ impl AsyncServer {
         cost: CostModel,
         config: ServerConfig,
     ) -> Self {
-        AsyncServer { manager, strategy, cost, config, stats: AsyncStats::default() }
+        let core = ExecCore::new(Arc::clone(&manager), Brain::Async(strategy), cost, config);
+        AsyncServer { manager, core }
     }
 
     /// Whole-run accounting (valid after [`AsyncServer::run`] returns).
     pub fn stats(&self) -> AsyncStats {
-        self.stats
-    }
-
-    /// Send one fit request to `proxy` and push its modeled completion
-    /// onto the virtual-time queue.
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch(
-        &mut self,
-        proxy: Arc<ClientProxy>,
-        version: u64,
-        params: &Parameters,
-        clock_s: f64,
-        seq: &mut u64,
-        heap: &mut BinaryHeap<Reverse<Pending>>,
-        in_flight: &mut HashMap<u64, InFlight>,
-    ) {
-        let handle = proxy.handle.clone();
-        let ins = self.strategy.configure_fit(version, params, &handle);
-        let bytes_down = ins.parameters.byte_len();
-        // Modeled duration: download + local steps + upload (upload
-        // approximated by the model payload, as in the sched engine).
-        let link = self.cost.comm(handle.device, bytes_down);
-        let compute = self.cost.compute(handle.device, self.config.steps_per_round);
-        let finish_s = clock_s + compute.time_s + 2.0 * link.time_s;
-        let modeled_energy_j = compute.energy_j + 2.0 * link.energy_j;
-        let timeout = self.config.round_timeout;
-        let worker = Arc::clone(&proxy);
-        let join = std::thread::spawn(move || worker.fit(ins, timeout));
-        *seq += 1;
-        heap.push(Reverse(Pending { finish_s, seq: *seq }));
-        in_flight.insert(
-            *seq,
-            InFlight { proxy, base_version: version, finish_s, bytes_down, modeled_energy_j, join },
-        );
-        self.stats.dispatched += 1;
-    }
-
-    /// Keep every registered, non-busy client in flight (up to
-    /// `max_concurrency`). Clients that register mid-run join the
-    /// rotation here; clients that deregistered simply stop being
-    /// re-dispatched.
-    #[allow(clippy::too_many_arguments)]
-    fn top_up(
-        &mut self,
-        version: u64,
-        params: &Parameters,
-        clock_s: f64,
-        seq: &mut u64,
-        heap: &mut BinaryHeap<Reverse<Pending>>,
-        in_flight: &mut HashMap<u64, InFlight>,
-    ) {
-        let limit = if self.config.max_concurrency == 0 {
-            usize::MAX
-        } else {
-            self.config.max_concurrency
-        };
-        if in_flight.len() >= limit {
-            return;
-        }
-        let busy: HashSet<String> = in_flight
-            .values()
-            .map(|f| f.proxy.handle.id.clone())
-            .collect();
-        for proxy in self.manager.snapshot() {
-            if in_flight.len() >= limit {
-                break;
-            }
-            if busy.contains(&proxy.handle.id) {
-                continue;
-            }
-            self.dispatch(proxy, version, params, clock_s, seq, heap, in_flight);
-        }
-    }
-
-    /// Federated spot-evaluation of a freshly flushed version on the
-    /// flush-triggering client — the one connection guaranteed idle right
-    /// now (every other client may have a fit outstanding). Returns
-    /// `(eval_loss, accuracy)`, NaN on error.
-    fn spot_evaluate(
-        &mut self,
-        version: u64,
-        params: &Parameters,
-        proxy: &Arc<ClientProxy>,
-    ) -> (f64, f64) {
-        let handle = proxy.handle.clone();
-        let plan = self
-            .strategy
-            .configure_evaluate(version, params, std::slice::from_ref(&handle));
-        let Some((_, ins)) = plan.into_iter().next() else {
-            return (f64::NAN, f64::NAN);
-        };
-        match proxy.evaluate(ins, self.config.round_timeout) {
-            Ok(res) => match self.strategy.aggregate_evaluate(version, &[(handle, res)]) {
-                Ok(s) => (s.loss, s.accuracy),
-                Err(e) => {
-                    log::warn(&format!("version {version}: evaluate aggregation failed: {e}"));
-                    (f64::NAN, f64::NAN)
-                }
-            },
-            Err(e) => {
-                log::warn(&format!(
-                    "client {} evaluate error at version {version}: {e}",
-                    proxy.handle.id
-                ));
-                (f64::NAN, f64::NAN)
-            }
-        }
+        self.core.stats()
     }
 
     /// Run until `config.num_rounds` model versions have been produced
     /// (or the target accuracy is reached), from `initial` parameters.
     pub fn run(&mut self, initial: Parameters) -> Result<History> {
-        if !self
-            .manager
-            .wait_for(self.config.quorum, self.config.quorum_timeout)
-        {
-            return Err(Error::Timeout(format!(
-                "quorum of {} clients not reached ({} connected)",
-                self.config.quorum,
-                self.manager.len()
-            )));
-        }
-        let mut params = initial;
-        let mut version: u64 = 0;
-        let mut history = History::default();
-        let mut clock_s = 0.0f64;
-        let mut last_flush_clock = 0.0f64;
-        let mut seq: u64 = 0;
-        let mut heap: BinaryHeap<Reverse<Pending>> = BinaryHeap::new();
-        let mut in_flight: HashMap<u64, InFlight> = HashMap::new();
-        let mut acc = FlushAcc::default();
-        let mut failures_since_fold = 0usize;
-
-        self.top_up(version, &params, clock_s, &mut seq, &mut heap, &mut in_flight);
-
-        // Every exit from this loop — normal completion or error — falls
-        // through to the drain + graceful-shutdown epilogue below, so
-        // in-flight threads are always joined (keeping the AsyncStats
-        // identity) and clients always get their Reconnect.
-        let loop_result: Result<()> = loop {
-            let Some(Reverse(ev)) = heap.pop() else {
-                // Nothing in flight: new clients may have registered.
-                self.top_up(version, &params, clock_s, &mut seq, &mut heap, &mut in_flight);
-                if heap.is_empty() {
-                    break Err(Error::Protocol(
-                        "async loop: no clients available to dispatch".into(),
-                    ));
-                }
-                continue;
-            };
-            let fl = in_flight
-                .remove(&ev.seq)
-                .expect("heap and in-flight map are 1:1");
-            clock_s = clock_s.max(fl.finish_s);
-            let outcome = fl
-                .join
-                .join()
-                .unwrap_or_else(|_| Err(Error::Client("fit thread panicked".into())));
-            // A result only counts if *this exact* connection is still
-            // registered; a client that deregistered (or reconnected as a
-            // new proxy) mid-flight is discarded exactly once.
-            let still_registered = self.manager.contains_proxy(&fl.proxy);
-            let handle = fl.proxy.handle.clone();
-            match outcome {
-                // num_examples == 0 carries no aggregation mass — treat it
-                // as a failure here so `folded` counts exactly the results
-                // the strategy buffers (the accounting identity depends on
-                // every fold reaching the buffer).
-                Ok(res) if res.status.is_ok() && res.num_examples > 0 => {
-                    if !still_registered {
-                        self.stats.discarded += 1;
-                        acc.discarded += 1;
-                        log::warn(&format!(
-                            "client {}: in-flight result discarded (deregistered)",
-                            handle.id
-                        ));
-                    } else {
-                        failures_since_fold = 0;
-                        self.stats.folded += 1;
-                        let staleness = version - fl.base_version;
-                        acc.folded += 1;
-                        acc.staleness_sum += staleness;
-                        acc.staleness_max = acc.staleness_max.max(staleness);
-                        acc.energy_j += fl.modeled_energy_j;
-                        acc.down_bytes += fl.bytes_down;
-                        acc.up_bytes += res.parameters.byte_len();
-                        acc.steps += res.metrics.get_i64_or(keys::STEPS, 0).max(0) as u64;
-                        let loss = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
-                        if loss.is_finite() {
-                            acc.train_loss_sum += loss;
-                            acc.train_loss_n += 1;
-                        }
-                        let flushed = match self.strategy.on_fit_result(&handle, staleness, res)
-                        {
-                            Ok(flushed) => flushed,
-                            Err(e) => break Err(e),
-                        };
-                        if let Some(new_params) = flushed {
-                            self.stats.flushed += acc.folded as u64;
-                            params = new_params;
-                            version += 1;
-                            let concurrency = in_flight.len() + 1;
-                            let (eval_loss, accuracy) =
-                                self.spot_evaluate(version, &params, &fl.proxy);
-                            let record = RoundRecord {
-                                round: version,
-                                fit_selected: acc.folded + acc.failures + acc.discarded,
-                                fit_completed: acc.folded,
-                                fit_failures: acc.failures,
-                                train_loss: acc.train_loss(),
-                                eval_loss,
-                                accuracy,
-                                round_time_s: (clock_s - last_flush_clock)
-                                    + self.cost.server_overhead_s,
-                                cum_time_s: 0.0, // filled by History::push
-                                round_energy_j: acc.energy_j,
-                                cum_energy_j: 0.0, // filled by History::push
-                                steps: acc.steps,
-                                truncated_clients: 0,
-                                down_bytes: acc.down_bytes,
-                                up_bytes: acc.up_bytes,
-                                mean_staleness: acc.mean_staleness(),
-                                max_staleness: acc.staleness_max,
-                                concurrency,
-                                fit_discarded: acc.discarded,
-                            };
-                            clock_s += self.cost.server_overhead_s;
-                            last_flush_clock = clock_s;
-                            log::info(&format!(
-                                "version {version:>3}: acc={accuracy:.4} loss={eval_loss:.4} \
-                                 t={:.1}s stal={:.2} (max {}) inflight={concurrency}",
-                                record.round_time_s,
-                                record.mean_staleness,
-                                record.max_staleness,
-                            ));
-                            let done_versions = version >= self.config.num_rounds;
-                            let hit_target = self
-                                .config
-                                .target_accuracy
-                                .map(|t| accuracy >= t)
-                                .unwrap_or(false);
-                            history.push(record);
-                            acc = FlushAcc::default();
-                            if hit_target {
-                                log::info(&format!(
-                                    "target accuracy reached at version {version}; stopping"
-                                ));
-                                break Ok(());
-                            }
-                            if done_versions {
-                                break Ok(());
-                            }
-                        }
-                    }
-                }
-                Ok(res) => {
-                    self.stats.failures += 1;
-                    acc.failures += 1;
-                    failures_since_fold += 1;
-                    log::warn(&format!(
-                        "client {} fit failed: {}",
-                        handle.id,
-                        if res.status.is_ok() {
-                            "empty result (0 examples)"
-                        } else {
-                            res.status.message.as_str()
-                        }
-                    ));
-                }
-                Err(e) => {
-                    self.stats.failures += 1;
-                    acc.failures += 1;
-                    failures_since_fold += 1;
-                    log::warn(&format!(
-                        "client {} fit error: {e}; dropping its connection",
-                        handle.id
-                    ));
-                    if still_registered {
-                        self.manager.unregister(&handle.id);
-                    }
-                }
-            }
-            if failures_since_fold > 64 + 8 * self.manager.len() {
-                break Err(Error::Protocol(
-                    "async loop: clients failing continuously, no fold progress".into(),
-                ));
-            }
-            self.top_up(version, &params, clock_s, &mut seq, &mut heap, &mut in_flight);
-        };
-
-        // Drain: join whatever is still in flight so no client thread is
-        // left blocked mid-exchange; the results are accounted as drained.
-        for (_, fl) in in_flight.drain() {
-            let _ = fl.join.join();
-            self.stats.drained += 1;
-        }
-        // Graceful shutdown — same contract as the sync loop: a dead
-        // connection logs a warning, it never hangs the server.
-        for proxy in self.manager.snapshot() {
-            if let Err(e) = proxy.reconnect(0) {
-                log::warn(&format!(
-                    "client {}: reconnect at shutdown failed: {e}",
-                    proxy.handle.id
-                ));
-            }
-        }
-        loop_result.map(|()| history)
+        self.core.run(initial)
     }
 }
 

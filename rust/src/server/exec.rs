@@ -1,0 +1,868 @@
+//! The server's single execution core: one dispatch/fold/accounting
+//! state machine behind both [`super::Server`] (barrier rounds) and
+//! [`super::AsyncServer`] (FedBuff streaming).
+//!
+//! Both façades drive the same [`ExecCore`]:
+//!
+//! * **quorum / shutdown** — one prologue (wait for the minimum cohort)
+//!   and one epilogue (drain in-flight work, then a reconnect sweep that
+//!   log-and-continues past dead connections) for both modes;
+//! * **dispatch** — every fit request is a spawned exchange thread
+//!   ([`spawn_fit`]); the barrier loop joins them all before
+//!   aggregating, the streaming loop joins each at its modeled
+//!   virtual-time completion;
+//! * **settlement** — one classifier ([`classify`]) decides the fate of
+//!   every outcome in both modes: *folded* (usable result from a
+//!   still-registered connection), *discarded* (the exact proxy
+//!   deregistered — or reconnected as a new proxy — mid-flight; counted
+//!   exactly once), or *failed* (error status, empty result, or a
+//!   transport error, which also drops the connection);
+//! * **accounting** — one accumulator ([`FitAcc`]) feeds
+//!   [`RoundRecord`]s in both modes, and the whole-run [`AsyncStats`]
+//!   identity `dispatched == folded + failures + discarded + drained`
+//!   holds for barrier rounds exactly as it does for streaming.
+//!
+//! What stays mode-specific is the *clock*: barrier rounds charge the
+//! slowest participant's client-reported time (plus idle-while-waiting
+//! energy), while the streaming loop models completion times at
+//! dispatch (download + steps × t_step + upload) and consumes them in
+//! virtual-time order — deterministic regardless of real thread
+//! scheduling, exactly like [`crate::sched::Engine`].
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::client::keys;
+use crate::error::{Error, Result};
+use crate::proto::scalar::ConfigExt;
+use crate::proto::{EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+use crate::sched::policy::{Candidate, SelectionContext, SelectionPolicy};
+use crate::sim::cost::CostModel;
+use crate::strategy::{AsyncStrategy, ClientHandle, EvalSummary, Strategy};
+use crate::telemetry::log;
+
+use super::client_manager::ClientManager;
+use super::history::{History, RoundRecord};
+use super::proxy::ClientProxy;
+use super::{SelectionHints, ServerConfig};
+
+/// Whole-run accounting (see the module docs for the lifecycle of each
+/// count). `dispatched == folded + failures + discarded + drained` after
+/// a run returns — in either mode.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AsyncStats {
+    /// Fit requests sent.
+    pub dispatched: u64,
+    /// Successful results folded into aggregation.
+    pub folded: u64,
+    /// Folded results that have been aggregated into a model version
+    /// (`buffer_size × versions` in streaming mode; `folded - flushed`
+    /// sit in the buffer).
+    pub flushed: u64,
+    /// Results that reported an error status, carried no examples, or
+    /// whose exchange failed.
+    pub failures: u64,
+    /// In-flight results from clients that deregistered before arrival.
+    pub discarded: u64,
+    /// Results still in flight when the run stopped (joined, not folded).
+    pub drained: u64,
+}
+
+/// The strategy driving the core: barrier-synchronous ([`Strategy`]) or
+/// streaming ([`AsyncStrategy`]).
+pub(crate) enum Brain {
+    Sync(Box<dyn Strategy>),
+    Async(Box<dyn AsyncStrategy>),
+}
+
+/// Per-client observations feeding cost-aware selection.
+#[derive(Debug, Clone, Default)]
+struct ClientStat {
+    last_loss: Option<f64>,
+    last_selected_round: Option<u64>,
+    times_selected: u64,
+}
+
+/// A dispatch completion on the streaming virtual-time queue. Ordered by
+/// modeled finish time, ties broken by dispatch sequence for
+/// determinism.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    finish_s: f64,
+    seq: u64,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == std::cmp::Ordering::Equal
+    }
+}
+impl Eq for Pending {}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.finish_s
+            .total_cmp(&other.finish_s)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// One outstanding fit dispatch (streaming mode).
+struct InFlight {
+    proxy: Arc<ClientProxy>,
+    base_version: u64,
+    finish_s: f64,
+    bytes_down: usize,
+    modeled_energy_j: f64,
+    join: JoinHandle<Result<FitRes>>,
+}
+
+/// How one settled exchange is accounted.
+enum Settled {
+    /// Usable result from a still-registered connection.
+    Fold(FitRes),
+    /// Error status, empty result, or transport error. `transport` means
+    /// the connection itself died (the caller drops it if it is still
+    /// this exact proxy that is registered).
+    Failure { transport: bool, reason: String },
+    /// The exact proxy deregistered (or reconnected as a new proxy)
+    /// while the fit was outstanding.
+    Discarded,
+}
+
+/// Classify one joined fit outcome. A result only counts if *this
+/// exact* connection is still registered; `num_examples == 0` carries no
+/// aggregation mass and is treated as a failure so `folded` counts
+/// exactly the results aggregation can use (the accounting identity
+/// depends on every fold reaching the aggregation path).
+fn classify(manager: &ClientManager, proxy: &Arc<ClientProxy>, outcome: Result<FitRes>) -> Settled {
+    match outcome {
+        Ok(res) if res.status.is_ok() && res.num_examples > 0 => {
+            if manager.contains_proxy(proxy) {
+                Settled::Fold(res)
+            } else {
+                Settled::Discarded
+            }
+        }
+        Ok(res) => Settled::Failure {
+            transport: false,
+            reason: if res.status.is_ok() {
+                "empty result (0 examples)".into()
+            } else {
+                res.status.message.clone()
+            },
+        },
+        Err(e) => Settled::Failure { transport: true, reason: e.to_string() },
+    }
+}
+
+/// Spawn one fit exchange. Both modes dispatch through here.
+fn spawn_fit(
+    proxy: Arc<ClientProxy>,
+    ins: FitIns,
+    timeout: Duration,
+) -> JoinHandle<Result<FitRes>> {
+    std::thread::spawn(move || proxy.fit(ins, timeout))
+}
+
+/// Accumulates settled exchanges between two flushes (streaming) or
+/// within one round (barrier), and turns into the per-record stats.
+#[derive(Default)]
+struct FitAcc {
+    folded: usize,
+    failures: usize,
+    discarded: usize,
+    staleness_sum: u64,
+    staleness_max: u64,
+    energy_j: f64,
+    down_bytes: usize,
+    up_bytes: usize,
+    steps: u64,
+    truncated: usize,
+    train_loss_sum: f64,
+    train_loss_n: usize,
+}
+
+impl FitAcc {
+    /// Account one folded result. `staleness` is 0 in barrier rounds.
+    #[allow(clippy::too_many_arguments)]
+    fn fold(
+        &mut self,
+        staleness: u64,
+        energy_j: f64,
+        bytes_down: usize,
+        bytes_up: usize,
+        steps: u64,
+        train_loss: f64,
+        truncated: bool,
+    ) {
+        self.folded += 1;
+        self.staleness_sum += staleness;
+        self.staleness_max = self.staleness_max.max(staleness);
+        self.energy_j += energy_j;
+        self.down_bytes += bytes_down;
+        self.up_bytes += bytes_up;
+        self.steps += steps;
+        if truncated {
+            self.truncated += 1;
+        }
+        if train_loss.is_finite() {
+            self.train_loss_sum += train_loss;
+            self.train_loss_n += 1;
+        }
+    }
+
+    fn mean_staleness(&self) -> f64 {
+        if self.folded == 0 {
+            0.0
+        } else {
+            self.staleness_sum as f64 / self.folded as f64
+        }
+    }
+
+    fn train_loss(&self) -> f64 {
+        if self.train_loss_n == 0 {
+            f64::NAN
+        } else {
+            self.train_loss_sum / self.train_loss_n as f64
+        }
+    }
+}
+
+/// The execution core. `config.num_rounds` counts barrier rounds or
+/// model versions (buffer flushes); `config.max_concurrency` bounds
+/// outstanding streaming dispatches (0 = every registered client);
+/// `config.steps_per_round` is the modeled local-step count used for
+/// streaming virtual-time accounting.
+pub(crate) struct ExecCore {
+    pub manager: Arc<ClientManager>,
+    cost: CostModel,
+    config: ServerConfig,
+    brain: Brain,
+    /// Optional cost-aware selection hook (barrier mode): when set,
+    /// cohort choice is delegated to the policy and the strategy only
+    /// sees the pre-selected subset.
+    selector: Option<(Box<dyn SelectionPolicy>, SelectionHints)>,
+    client_stats: HashMap<String, ClientStat>,
+    stats: AsyncStats,
+}
+
+impl ExecCore {
+    pub fn new(
+        manager: Arc<ClientManager>,
+        brain: Brain,
+        cost: CostModel,
+        config: ServerConfig,
+    ) -> Self {
+        ExecCore {
+            manager,
+            cost,
+            config,
+            brain,
+            selector: None,
+            client_stats: HashMap::new(),
+            stats: AsyncStats::default(),
+        }
+    }
+
+    pub fn set_selection(
+        &mut self,
+        policy: Box<dyn SelectionPolicy>,
+        hints: SelectionHints,
+    ) {
+        self.selector = Some((policy, hints));
+    }
+
+    /// Whole-run accounting (valid after [`ExecCore::run`] returns).
+    pub fn stats(&self) -> AsyncStats {
+        self.stats
+    }
+
+    /// Run from `initial` parameters until `config.num_rounds` rounds /
+    /// versions (or the target accuracy). Every exit — normal completion
+    /// or error past quorum — goes through the graceful-shutdown
+    /// epilogue, so clients always get their Reconnect.
+    pub fn run(&mut self, initial: Parameters) -> Result<History> {
+        if !self
+            .manager
+            .wait_for(self.config.quorum, self.config.quorum_timeout)
+        {
+            return Err(Error::Timeout(format!(
+                "quorum of {} clients not reached ({} connected)",
+                self.config.quorum,
+                self.manager.len()
+            )));
+        }
+        let mut params = initial;
+        let mut history = History::default();
+        let streaming = matches!(self.brain, Brain::Async(_));
+        let loop_result = if streaming {
+            self.run_streaming(&mut params, &mut history)
+        } else {
+            self.run_barrier(&mut params, &mut history)
+        };
+        // Graceful shutdown. A client whose connection died mid-run (or
+        // that already left) makes `reconnect` fail — that must never
+        // hang or abort the shutdown sweep, but it must not be silent
+        // either: surface which client it was.
+        for proxy in self.manager.snapshot() {
+            if let Err(e) = proxy.reconnect(0) {
+                log::warn(&format!(
+                    "client {}: reconnect at shutdown failed: {e}",
+                    proxy.handle.id
+                ));
+            }
+        }
+        loop_result.map(|()| history)
+    }
+
+    // -----------------------------------------------------------------
+    // Shared pieces
+    // -----------------------------------------------------------------
+
+    /// Cost-aware cohort choice (barrier mode): when a selection hook is
+    /// set, delegate to the policy over the full registry; otherwise the
+    /// whole registry is the cohort.
+    fn select_cohort(
+        &mut self,
+        round: u64,
+        params: &Parameters,
+        all_proxies: Vec<Arc<ClientProxy>>,
+    ) -> Result<Vec<Arc<ClientProxy>>> {
+        let proxies: Vec<Arc<ClientProxy>> = match &mut self.selector {
+            Some((policy, hints)) => {
+                // Bound the stats map under id churn: once it far exceeds
+                // the live cohort, drop entries for clients no longer
+                // registered (brief disconnects keep their history until
+                // then; a pruned client just rejoins the explore pool).
+                if self.client_stats.len() > all_proxies.len().saturating_mul(4).max(1024) {
+                    let live: HashSet<&str> =
+                        all_proxies.iter().map(|p| p.handle.id.as_str()).collect();
+                    self.client_stats.retain(|id, _| live.contains(id.as_str()));
+                }
+                let candidates: Vec<Candidate> = all_proxies
+                    .iter()
+                    .map(|p| {
+                        let stat = self.client_stats.get(&p.handle.id);
+                        Candidate {
+                            device: p.handle.device,
+                            num_examples: p.handle.num_examples,
+                            last_loss: stat.and_then(|s| s.last_loss),
+                            rounds_since_selected: stat
+                                .and_then(|s| s.last_selected_round)
+                                .map(|r| round.saturating_sub(r)),
+                            times_selected: stat.map(|s| s.times_selected).unwrap_or(0),
+                        }
+                    })
+                    .collect();
+                let ctx = SelectionContext {
+                    round,
+                    cost: &self.cost,
+                    steps_per_round: hints.steps_per_round,
+                    model_bytes: params.byte_len(),
+                    target_cohort: hints.target_cohort,
+                    deadline_s: hints.deadline_s,
+                };
+                let picked = policy.select(&ctx, &candidates);
+                picked
+                    .into_iter()
+                    .map(|i| Arc::clone(&all_proxies[i]))
+                    .collect()
+            }
+            None => all_proxies,
+        };
+        if proxies.is_empty() {
+            return Err(Error::Protocol("selection policy picked no clients".into()));
+        }
+        Ok(proxies)
+    }
+
+    /// Federated evaluation of `params` over `proxies`/`handles`
+    /// (parallel dispatch, plan order). The barrier loop evaluates the
+    /// whole cohort; the streaming loop spot-evaluates the
+    /// flush-triggering client — the one connection guaranteed idle
+    /// right now (every other client may have a fit outstanding).
+    fn run_evaluate(
+        &mut self,
+        version: u64,
+        params: &Parameters,
+        proxies: &[Arc<ClientProxy>],
+        handles: &[ClientHandle],
+    ) -> Result<EvalSummary> {
+        let plan = match &mut self.brain {
+            Brain::Sync(s) => s.configure_evaluate(version, params, handles),
+            Brain::Async(s) => s.configure_evaluate(version, params, handles),
+        };
+        let timeout = self.config.round_timeout;
+        // Plan entries pointing outside the cohort are ignored rather
+        // than trusted: the streaming flush path evaluates a one-client
+        // cohort, and a custom strategy returning any other index must
+        // degrade to a skipped evaluation, not a panic.
+        let tasks: Vec<(usize, JoinHandle<Result<EvaluateRes>>)> = plan
+            .into_iter()
+            .filter(|(idx, _)| *idx < proxies.len())
+            .map(|(idx, ins)| {
+                let proxy = Arc::clone(&proxies[idx]);
+                (idx, std::thread::spawn(move || proxy.evaluate(ins, timeout)))
+            })
+            .collect();
+        let mut results = Vec::new();
+        for (idx, t) in tasks {
+            match t
+                .join()
+                .unwrap_or_else(|_| Err(Error::Client("evaluate thread panicked".into())))
+            {
+                Ok(res) => results.push((handles[idx].clone(), res)),
+                Err(e) => {
+                    log::warn(&format!("client {} evaluate error: {e}", handles[idx].id))
+                }
+            }
+        }
+        match &mut self.brain {
+            Brain::Sync(s) => s.aggregate_evaluate(version, &results),
+            Brain::Async(s) => s.aggregate_evaluate(version, &results),
+        }
+    }
+
+    /// Settle one failure/discard into the accumulator and whole-run
+    /// stats (the fold path is mode-specific because its cost accounting
+    /// differs). A transport failure also drops the connection, but only
+    /// if it is still this exact proxy that is registered.
+    fn settle_non_fold(&mut self, acc: &mut FitAcc, proxy: &Arc<ClientProxy>, settled: &Settled) {
+        let id = &proxy.handle.id;
+        match settled {
+            Settled::Fold(_) => unreachable!("fold settlement is mode-specific"),
+            Settled::Failure { transport, reason } => {
+                self.stats.failures += 1;
+                acc.failures += 1;
+                if *transport {
+                    log::warn(&format!(
+                        "client {id} fit error: {reason}; dropping its connection"
+                    ));
+                    // Drop by identity, not id: a client that already
+                    // reconnected as a new proxy must keep its fresh
+                    // registration.
+                    if self.manager.contains_proxy(proxy) {
+                        self.manager.unregister(id);
+                    }
+                } else {
+                    log::warn(&format!("client {id} fit failed: {reason}"));
+                }
+            }
+            Settled::Discarded => {
+                self.stats.discarded += 1;
+                acc.discarded += 1;
+                log::warn(&format!(
+                    "client {id}: in-flight result discarded (deregistered)"
+                ));
+            }
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Barrier mode
+    // -----------------------------------------------------------------
+
+    fn run_barrier(&mut self, params: &mut Parameters, history: &mut History) -> Result<()> {
+        for round in 1..=self.config.num_rounds {
+            let record = self.barrier_round(round, params)?;
+            log::info(&format!(
+                "round {round:>3}: acc={:.4} loss={:.4} t={:.1}s (cum {:.1} min) E={:.1} kJ (cum {:.1} kJ){}",
+                record.accuracy,
+                record.eval_loss,
+                record.round_time_s,
+                (history.total_time_s() + record.round_time_s) / 60.0,
+                record.round_energy_j / 1e3,
+                (history.total_energy_j() + record.round_energy_j) / 1e3,
+                if record.truncated_clients > 0 {
+                    format!(" truncated={}", record.truncated_clients)
+                } else {
+                    String::new()
+                },
+            ));
+            let acc = record.accuracy;
+            history.push(record);
+            if let Some(target) = self.config.target_accuracy {
+                if acc >= target {
+                    log::info(&format!("target accuracy {target} reached; stopping"));
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One barrier round: dispatch the whole cohort, join every exchange
+    /// (real client-reported costs), aggregate, evaluate.
+    fn barrier_round(&mut self, round: u64, params: &mut Parameters) -> Result<RoundRecord> {
+        let all_proxies = self.manager.snapshot();
+        if all_proxies.is_empty() {
+            return Err(Error::Protocol("no clients connected".into()));
+        }
+        let proxies = self.select_cohort(round, params, all_proxies)?;
+        let handles: Vec<ClientHandle> = proxies.iter().map(|p| p.handle.clone()).collect();
+
+        // ---- fit phase -------------------------------------------------
+        let Brain::Sync(strategy) = &mut self.brain else {
+            unreachable!("barrier loop runs a synchronous strategy")
+        };
+        let plan = strategy.configure_fit(round, params, &handles);
+        if plan.is_empty() {
+            return Err(Error::Protocol("strategy selected no clients".into()));
+        }
+        let fit_selected = plan.len();
+        // Stats only feed the selection hook's candidates; don't grow the
+        // map on servers that never read it.
+        if self.selector.is_some() {
+            for (idx, _) in &plan {
+                let stat = self
+                    .client_stats
+                    .entry(handles[*idx].id.clone())
+                    .or_default();
+                stat.last_selected_round = Some(round);
+                stat.times_selected += 1;
+            }
+        }
+        let timeout = self.config.round_timeout;
+        let tasks: Vec<(usize, usize, JoinHandle<Result<FitRes>>)> = plan
+            .iter()
+            .map(|(idx, ins)| {
+                self.stats.dispatched += 1;
+                let bytes_down = ins.parameters.byte_len();
+                (
+                    *idx,
+                    bytes_down,
+                    spawn_fit(Arc::clone(&proxies[*idx]), ins.clone(), timeout),
+                )
+            })
+            .collect();
+
+        let mut acc = FitAcc::default();
+        let mut fit_results: Vec<(ClientHandle, FitRes)> = Vec::new();
+        // (device, reported round time) per fold, for the barrier clock
+        // and idle-while-waiting energy
+        let mut client_times: Vec<(&'static crate::device::DeviceProfile, f64)> = Vec::new();
+
+        for (idx, bytes_down, join) in tasks {
+            let outcome = join
+                .join()
+                .unwrap_or_else(|_| Err(Error::Client("fit thread panicked".into())));
+            let handle = handles[idx].clone();
+            match classify(&self.manager, &proxies[idx], outcome) {
+                Settled::Fold(res) => {
+                    self.stats.folded += 1;
+                    let bytes_up = res.parameters.byte_len();
+                    let down = self.cost.comm(handle.device, bytes_down);
+                    let up = self.cost.comm(handle.device, bytes_up);
+                    let compute_t = res.metrics.get_f64_or(keys::COMPUTE_TIME_S, 0.0);
+                    let compute_e = res.metrics.get_f64_or(keys::ENERGY_J, 0.0);
+                    let t = down.time_s + compute_t + up.time_s;
+                    let e = down.energy_j + compute_e + up.energy_j;
+                    let loss = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
+                    if self.selector.is_some() && loss.is_finite() {
+                        self.client_stats
+                            .entry(handle.id.clone())
+                            .or_default()
+                            .last_loss = Some(loss);
+                    }
+                    let steps = res.metrics.get_i64_or(keys::STEPS, 0).max(0) as u64;
+                    let truncated = matches!(
+                        res.metrics.get(keys::TRUNCATED),
+                        Some(Scalar::Bool(true))
+                    );
+                    // barrier folds are never stale
+                    acc.fold(0, e, bytes_down, bytes_up, steps, loss, truncated);
+                    client_times.push((handle.device, t));
+                    fit_results.push((handle, res));
+                }
+                other => self.settle_non_fold(&mut acc, &proxies[idx], &other),
+            }
+        }
+
+        // The barrier closes at the slowest reporter; early finishers
+        // optionally burn idle power while they wait.
+        let round_fit_time = client_times
+            .iter()
+            .map(|&(_, t)| t)
+            .fold(0.0f64, f64::max);
+        if self.config.count_idle_energy {
+            for &(device, t) in &client_times {
+                acc.energy_j += self
+                    .cost
+                    .idle(device, (round_fit_time - t).max(0.0))
+                    .energy_j;
+            }
+        }
+
+        let Brain::Sync(strategy) = &mut self.brain else {
+            unreachable!("barrier loop runs a synchronous strategy")
+        };
+        *params = strategy.aggregate_fit(round, &fit_results, acc.failures)?;
+        self.stats.flushed += acc.folded as u64;
+
+        // ---- evaluate phase --------------------------------------------
+        let summary = self.run_evaluate(round, params, &proxies, &handles)?;
+
+        Ok(RoundRecord {
+            round,
+            fit_selected,
+            fit_completed: acc.folded,
+            fit_failures: acc.failures,
+            train_loss: acc.train_loss(),
+            eval_loss: summary.loss,
+            accuracy: summary.accuracy,
+            round_time_s: round_fit_time + self.cost.server_overhead_s,
+            cum_time_s: 0.0, // filled by History::push
+            round_energy_j: acc.energy_j,
+            cum_energy_j: 0.0, // filled by History::push
+            steps: acc.steps,
+            truncated_clients: acc.truncated,
+            down_bytes: acc.down_bytes,
+            up_bytes: acc.up_bytes,
+            mean_staleness: acc.mean_staleness(), // 0: barrier folds are never stale
+            max_staleness: acc.staleness_max,
+            concurrency: fit_selected,
+            fit_discarded: acc.discarded,
+        })
+    }
+
+    // -----------------------------------------------------------------
+    // Streaming (FedBuff) mode
+    // -----------------------------------------------------------------
+
+    /// Send one fit request to `proxy` and push its modeled completion
+    /// onto the virtual-time queue.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_streaming(
+        &mut self,
+        proxy: Arc<ClientProxy>,
+        version: u64,
+        params: &Parameters,
+        clock_s: f64,
+        seq: &mut u64,
+        heap: &mut BinaryHeap<Reverse<Pending>>,
+        in_flight: &mut HashMap<u64, InFlight>,
+    ) {
+        let handle = proxy.handle.clone();
+        let Brain::Async(strategy) = &mut self.brain else {
+            unreachable!("streaming loop runs an async strategy")
+        };
+        let ins = strategy.configure_fit(version, params, &handle);
+        let bytes_down = ins.parameters.byte_len();
+        // Modeled duration: download + local steps + upload (upload
+        // approximated by the model payload, as in the sched engine).
+        let link = self.cost.comm(handle.device, bytes_down);
+        let compute = self.cost.compute(handle.device, self.config.steps_per_round);
+        let finish_s = clock_s + compute.time_s + 2.0 * link.time_s;
+        let modeled_energy_j = compute.energy_j + 2.0 * link.energy_j;
+        let join = spawn_fit(Arc::clone(&proxy), ins, self.config.round_timeout);
+        *seq += 1;
+        heap.push(Reverse(Pending { finish_s, seq: *seq }));
+        in_flight.insert(
+            *seq,
+            InFlight { proxy, base_version: version, finish_s, bytes_down, modeled_energy_j, join },
+        );
+        self.stats.dispatched += 1;
+    }
+
+    /// Keep every registered, non-busy client in flight (up to
+    /// `max_concurrency`). Clients that register mid-run join the
+    /// rotation here; clients that deregistered simply stop being
+    /// re-dispatched.
+    fn top_up(
+        &mut self,
+        version: u64,
+        params: &Parameters,
+        clock_s: f64,
+        seq: &mut u64,
+        heap: &mut BinaryHeap<Reverse<Pending>>,
+        in_flight: &mut HashMap<u64, InFlight>,
+    ) {
+        let limit = if self.config.max_concurrency == 0 {
+            usize::MAX
+        } else {
+            self.config.max_concurrency
+        };
+        if in_flight.len() >= limit {
+            return;
+        }
+        let busy: HashSet<String> = in_flight
+            .values()
+            .map(|f| f.proxy.handle.id.clone())
+            .collect();
+        for proxy in self.manager.snapshot() {
+            if in_flight.len() >= limit {
+                break;
+            }
+            if busy.contains(&proxy.handle.id) {
+                continue;
+            }
+            self.dispatch_streaming(proxy, version, params, clock_s, seq, heap, in_flight);
+        }
+    }
+
+    /// The streaming loop: fold results in modeled virtual-time order,
+    /// flush a model version every K folds.
+    fn run_streaming(&mut self, params: &mut Parameters, history: &mut History) -> Result<()> {
+        let mut version: u64 = 0;
+        let mut clock_s = 0.0f64;
+        let mut last_flush_clock = 0.0f64;
+        let mut seq: u64 = 0;
+        let mut heap: BinaryHeap<Reverse<Pending>> = BinaryHeap::new();
+        let mut in_flight: HashMap<u64, InFlight> = HashMap::new();
+        let mut acc = FitAcc::default();
+        let mut failures_since_fold = 0usize;
+
+        self.top_up(version, params, clock_s, &mut seq, &mut heap, &mut in_flight);
+
+        // Every exit from this loop — normal completion or error — falls
+        // through to the drain below (keeping the AsyncStats identity)
+        // and then to ExecCore::run's shutdown sweep.
+        let loop_result: Result<()> = loop {
+            let Some(Reverse(ev)) = heap.pop() else {
+                // Nothing in flight: new clients may have registered.
+                self.top_up(version, params, clock_s, &mut seq, &mut heap, &mut in_flight);
+                if heap.is_empty() {
+                    break Err(Error::Protocol(
+                        "async loop: no clients available to dispatch".into(),
+                    ));
+                }
+                continue;
+            };
+            let fl = in_flight
+                .remove(&ev.seq)
+                .expect("heap and in-flight map are 1:1");
+            clock_s = clock_s.max(fl.finish_s);
+            let outcome = fl
+                .join
+                .join()
+                .unwrap_or_else(|_| Err(Error::Client("fit thread panicked".into())));
+            let handle = fl.proxy.handle.clone();
+            match classify(&self.manager, &fl.proxy, outcome) {
+                Settled::Fold(res) => {
+                    failures_since_fold = 0;
+                    self.stats.folded += 1;
+                    let staleness = version - fl.base_version;
+                    let bytes_up = res.parameters.byte_len();
+                    let loss = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
+                    let steps = res.metrics.get_i64_or(keys::STEPS, 0).max(0) as u64;
+                    let truncated = matches!(
+                        res.metrics.get(keys::TRUNCATED),
+                        Some(Scalar::Bool(true))
+                    );
+                    acc.fold(
+                        staleness,
+                        fl.modeled_energy_j,
+                        fl.bytes_down,
+                        bytes_up,
+                        steps,
+                        loss,
+                        truncated,
+                    );
+                    let Brain::Async(strategy) = &mut self.brain else {
+                        unreachable!("streaming loop runs an async strategy")
+                    };
+                    let flushed = match strategy.on_fit_result(&handle, staleness, res) {
+                        Ok(flushed) => flushed,
+                        Err(e) => break Err(e),
+                    };
+                    if let Some(new_params) = flushed {
+                        self.stats.flushed += acc.folded as u64;
+                        *params = new_params;
+                        version += 1;
+                        let concurrency = in_flight.len() + 1;
+                        let (eval_loss, accuracy) = match self.run_evaluate(
+                            version,
+                            params,
+                            std::slice::from_ref(&fl.proxy),
+                            std::slice::from_ref(&handle),
+                        ) {
+                            Ok(s) => (s.loss, s.accuracy),
+                            Err(e) => {
+                                log::warn(&format!(
+                                    "version {version}: spot evaluation failed: {e}"
+                                ));
+                                (f64::NAN, f64::NAN)
+                            }
+                        };
+                        let record = RoundRecord {
+                            round: version,
+                            fit_selected: acc.folded + acc.failures + acc.discarded,
+                            fit_completed: acc.folded,
+                            fit_failures: acc.failures,
+                            train_loss: acc.train_loss(),
+                            eval_loss,
+                            accuracy,
+                            round_time_s: (clock_s - last_flush_clock)
+                                + self.cost.server_overhead_s,
+                            cum_time_s: 0.0, // filled by History::push
+                            round_energy_j: acc.energy_j,
+                            cum_energy_j: 0.0, // filled by History::push
+                            steps: acc.steps,
+                            truncated_clients: acc.truncated,
+                            down_bytes: acc.down_bytes,
+                            up_bytes: acc.up_bytes,
+                            mean_staleness: acc.mean_staleness(),
+                            max_staleness: acc.staleness_max,
+                            concurrency,
+                            fit_discarded: acc.discarded,
+                        };
+                        clock_s += self.cost.server_overhead_s;
+                        last_flush_clock = clock_s;
+                        log::info(&format!(
+                            "version {version:>3}: acc={accuracy:.4} loss={eval_loss:.4} \
+                             t={:.1}s stal={:.2} (max {}) inflight={concurrency}",
+                            record.round_time_s,
+                            record.mean_staleness,
+                            record.max_staleness,
+                        ));
+                        let done_versions = version >= self.config.num_rounds;
+                        let hit_target = self
+                            .config
+                            .target_accuracy
+                            .map(|t| accuracy >= t)
+                            .unwrap_or(false);
+                        history.push(record);
+                        acc = FitAcc::default();
+                        if hit_target {
+                            log::info(&format!(
+                                "target accuracy reached at version {version}; stopping"
+                            ));
+                            break Ok(());
+                        }
+                        if done_versions {
+                            break Ok(());
+                        }
+                    }
+                }
+                other => {
+                    if matches!(other, Settled::Failure { .. }) {
+                        failures_since_fold += 1;
+                    }
+                    self.settle_non_fold(&mut acc, &fl.proxy, &other);
+                }
+            }
+            if failures_since_fold > 64 + 8 * self.manager.len() {
+                break Err(Error::Protocol(
+                    "async loop: clients failing continuously, no fold progress".into(),
+                ));
+            }
+            self.top_up(version, params, clock_s, &mut seq, &mut heap, &mut in_flight);
+        };
+
+        // Drain: join whatever is still in flight so no client thread is
+        // left blocked mid-exchange; the results are accounted as drained.
+        for (_, fl) in in_flight.drain() {
+            let _ = fl.join.join();
+            self.stats.drained += 1;
+        }
+        loop_result
+    }
+}

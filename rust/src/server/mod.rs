@@ -5,6 +5,14 @@
 //! what config, how results merge) is delegated to the configured
 //! [`crate::strategy::Strategy`].
 //!
+//! Both server surfaces are thin façades over the single execution core
+//! in [`exec`]: [`Server`] runs it in barrier mode (one flush per
+//! round), [`AsyncServer`] in FedBuff streaming mode (one flush per K
+//! folds). Dispatch, outcome classification, accounting, evaluation and
+//! the quorum/shutdown lifecycle are one implementation — only the
+//! clock differs (client-reported barrier time vs. modeled virtual
+//! time).
+//!
 //! The loop also produces the paper's evaluation currency: per-round
 //! modeled wall time (slowest participant + server overhead) and energy
 //! (compute + radio + optional idle-while-waiting), accumulated into a
@@ -12,29 +20,30 @@
 
 pub mod async_loop;
 pub mod client_manager;
+pub mod exec;
 pub mod history;
 pub mod proxy;
 
-pub use async_loop::{AsyncServer, AsyncStats};
+pub use async_loop::AsyncServer;
 pub use client_manager::ClientManager;
+pub use exec::AsyncStats;
 pub use history::{History, RoundRecord};
 pub use proxy::ClientProxy;
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::client::keys;
-use crate::error::{Error, Result};
-use crate::proto::scalar::ConfigExt;
+use crate::error::Result;
 use crate::proto::{ClientMessage, Parameters};
-use crate::sched::policy::{Candidate, SelectionContext, SelectionPolicy};
+use crate::sched::policy::SelectionPolicy;
 use crate::sim::cost::CostModel;
-use crate::strategy::{fedavg, ClientHandle, Strategy};
+use crate::strategy::{ClientHandle, Strategy};
 use crate::telemetry::log;
 use crate::transport::tcp::TcpTransportListener;
 use crate::transport::Connection;
+
+use exec::{Brain, ExecCore};
 
 /// Server-side knobs.
 #[derive(Debug, Clone)]
@@ -83,8 +92,8 @@ impl Default for ServerConfig {
 }
 
 /// What the server-side selection hook needs to build a
-/// [`SelectionContext`] each round (the payload size comes from the
-/// current parameters).
+/// [`crate::sched::policy::SelectionContext`] each round (the payload
+/// size comes from the current parameters).
 #[derive(Debug, Clone)]
 pub struct SelectionHints {
     /// How many clients to hand the strategy each round.
@@ -95,25 +104,11 @@ pub struct SelectionHints {
     pub steps_per_round: u64,
 }
 
-/// Per-client observations feeding cost-aware selection.
-#[derive(Debug, Clone, Default)]
-struct ClientStat {
-    last_loss: Option<f64>,
-    last_selected_round: Option<u64>,
-}
-
-/// The FL server.
+/// The FL server — the barrier-mode façade over [`exec::ExecCore`]: one
+/// buffer flush per round, zero staleness, client-reported costs.
 pub struct Server {
     pub manager: Arc<ClientManager>,
-    strategy: Box<dyn Strategy>,
-    cost: CostModel,
-    config: ServerConfig,
-    /// Optional cost-aware selection hook: when set, cohort choice is
-    /// delegated to the policy and the strategy only sees the pre-selected
-    /// subset. A strategy with `fraction_fit < 1` still subsamples within
-    /// that subset; leave it at 1.0 (the default) for full delegation.
-    selector: Option<(Box<dyn SelectionPolicy>, SelectionHints)>,
-    client_stats: HashMap<String, ClientStat>,
+    core: ExecCore,
 }
 
 impl Server {
@@ -123,298 +118,32 @@ impl Server {
         cost: CostModel,
         config: ServerConfig,
     ) -> Self {
-        Server {
-            manager,
-            strategy,
-            cost,
-            config,
-            selector: None,
-            client_stats: HashMap::new(),
-        }
+        let core = ExecCore::new(Arc::clone(&manager), Brain::Sync(strategy), cost, config);
+        Server { manager, core }
     }
 
     /// Delegate per-round cohort choice to a [`SelectionPolicy`] from the
-    /// `sched` subsystem.
+    /// `sched` subsystem. A strategy with `fraction_fit < 1` still
+    /// subsamples within the selected subset; leave it at 1.0 (the
+    /// default) for full delegation.
     pub fn with_selection(
         mut self,
         policy: Box<dyn SelectionPolicy>,
         hints: SelectionHints,
     ) -> Self {
-        self.selector = Some((policy, hints));
+        self.core.set_selection(policy, hints);
         self
     }
 
     /// Run the configured number of rounds from `initial` parameters.
     pub fn run(&mut self, initial: Parameters) -> Result<History> {
-        if !self
-            .manager
-            .wait_for(self.config.quorum, self.config.quorum_timeout)
-        {
-            return Err(Error::Timeout(format!(
-                "quorum of {} clients not reached ({} connected)",
-                self.config.quorum,
-                self.manager.len()
-            )));
-        }
-        let mut params = initial;
-        let mut history = History::default();
-        for round in 1..=self.config.num_rounds {
-            let record = self.run_round(round, &mut params)?;
-            log::info(&format!(
-                "round {round:>3}: acc={:.4} loss={:.4} t={:.1}s (cum {:.1} min) E={:.1} kJ (cum {:.1} kJ){}",
-                record.accuracy,
-                record.eval_loss,
-                record.round_time_s,
-                (history.total_time_s() + record.round_time_s) / 60.0,
-                record.round_energy_j / 1e3,
-                (history.total_energy_j() + record.round_energy_j) / 1e3,
-                if record.truncated_clients > 0 {
-                    format!(" truncated={}", record.truncated_clients)
-                } else {
-                    String::new()
-                },
-            ));
-            let acc = record.accuracy;
-            history.push(record);
-            if let Some(target) = self.config.target_accuracy {
-                if acc >= target {
-                    log::info(&format!("target accuracy {target} reached; stopping"));
-                    break;
-                }
-            }
-        }
-        // Graceful shutdown. A client whose connection died mid-run (or
-        // that already left) makes `reconnect` fail — that must never
-        // hang or abort the shutdown sweep, but it must not be silent
-        // either: surface which client it was.
-        for proxy in self.manager.snapshot() {
-            if let Err(e) = proxy.reconnect(0) {
-                log::warn(&format!(
-                    "client {}: reconnect at shutdown failed: {e}",
-                    proxy.handle.id
-                ));
-            }
-        }
-        Ok(history)
+        self.core.run(initial)
     }
 
-    fn run_round(&mut self, round: u64, params: &mut Parameters) -> Result<RoundRecord> {
-        let all_proxies = self.manager.snapshot();
-        if all_proxies.is_empty() {
-            return Err(Error::Protocol("no clients connected".into()));
-        }
-
-        // ---- cost-aware selection hook ---------------------------------
-        let proxies: Vec<Arc<ClientProxy>> = match &mut self.selector {
-            Some((policy, hints)) => {
-                // Bound the stats map under id churn: once it far exceeds
-                // the live cohort, drop entries for clients no longer
-                // registered (brief disconnects keep their history until
-                // then; a pruned client just rejoins the explore pool).
-                if self.client_stats.len() > all_proxies.len().saturating_mul(4).max(1024) {
-                    let live: std::collections::HashSet<&str> =
-                        all_proxies.iter().map(|p| p.handle.id.as_str()).collect();
-                    self.client_stats.retain(|id, _| live.contains(id.as_str()));
-                }
-                let candidates: Vec<Candidate> = all_proxies
-                    .iter()
-                    .map(|p| {
-                        let stat = self.client_stats.get(&p.handle.id);
-                        Candidate {
-                            device: p.handle.device,
-                            num_examples: p.handle.num_examples,
-                            last_loss: stat.and_then(|s| s.last_loss),
-                            rounds_since_selected: stat
-                                .and_then(|s| s.last_selected_round)
-                                .map(|r| round.saturating_sub(r)),
-                        }
-                    })
-                    .collect();
-                let ctx = SelectionContext {
-                    round,
-                    cost: &self.cost,
-                    steps_per_round: hints.steps_per_round,
-                    model_bytes: params.byte_len(),
-                    target_cohort: hints.target_cohort,
-                    deadline_s: hints.deadline_s,
-                };
-                let picked = policy.select(&ctx, &candidates);
-                picked
-                    .into_iter()
-                    .map(|i| Arc::clone(&all_proxies[i]))
-                    .collect()
-            }
-            None => all_proxies,
-        };
-        if proxies.is_empty() {
-            return Err(Error::Protocol("selection policy picked no clients".into()));
-        }
-        let handles: Vec<ClientHandle> = proxies.iter().map(|p| p.handle.clone()).collect();
-
-        // ---- fit phase -------------------------------------------------
-        let plan = self.strategy.configure_fit(round, params, &handles);
-        if plan.is_empty() {
-            return Err(Error::Protocol("strategy selected no clients".into()));
-        }
-        let fit_selected = plan.len();
-        // Stats only feed the selection hook's candidates; don't grow the
-        // map on servers that never read it.
-        if self.selector.is_some() {
-            for (idx, _) in &plan {
-                self.client_stats
-                    .entry(handles[*idx].id.clone())
-                    .or_default()
-                    .last_selected_round = Some(round);
-            }
-        }
-        let timeout = self.config.round_timeout;
-        let mut fit_results: Vec<(ClientHandle, crate::proto::FitRes)> = Vec::new();
-        let mut fit_failures = 0usize;
-        let mut down_bytes = 0usize;
-        let mut up_bytes = 0usize;
-        let mut client_times: Vec<(ClientHandle, f64, f64)> = Vec::new(); // (handle, t, energy)
-
-        let outcomes: Vec<(usize, usize, Result<crate::proto::FitRes>)> =
-            std::thread::scope(|scope| {
-                let mut tasks = Vec::new();
-                for (idx, ins) in &plan {
-                    let proxy = Arc::clone(&proxies[*idx]);
-                    let bytes_down = ins.parameters.byte_len();
-                    let ins = ins.clone();
-                    tasks.push((
-                        *idx,
-                        bytes_down,
-                        scope.spawn(move || proxy.fit(ins, timeout)),
-                    ));
-                }
-                tasks
-                    .into_iter()
-                    .map(|(idx, bytes_down, t)| {
-                        (
-                            idx,
-                            bytes_down,
-                            t.join().unwrap_or_else(|_| {
-                                Err(Error::Client("fit thread panicked".into()))
-                            }),
-                        )
-                    })
-                    .collect()
-            });
-
-        for (idx, bytes_down, outcome) in outcomes {
-            let handle = handles[idx].clone();
-            match outcome {
-                Ok(res) if res.status.is_ok() => {
-                    down_bytes += bytes_down;
-                    let bytes_up = res.parameters.byte_len();
-                    up_bytes += bytes_up;
-                    let down = self.cost.comm(handle.device, bytes_down);
-                    let up = self.cost.comm(handle.device, bytes_up);
-                    let compute_t = res.metrics.get_f64_or(keys::COMPUTE_TIME_S, 0.0);
-                    let compute_e = res.metrics.get_f64_or(keys::ENERGY_J, 0.0);
-                    let t = down.time_s + compute_t + up.time_s;
-                    let e = down.energy_j + compute_e + up.energy_j;
-                    let loss = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
-                    if self.selector.is_some() && loss.is_finite() {
-                        self.client_stats
-                            .entry(handle.id.clone())
-                            .or_default()
-                            .last_loss = Some(loss);
-                    }
-                    client_times.push((handle.clone(), t, e));
-                    fit_results.push((handle, res));
-                }
-                Ok(res) => {
-                    log::warn(&format!(
-                        "client {} fit failed: {}",
-                        handle.id, res.status.message
-                    ));
-                    fit_failures += 1;
-                }
-                Err(e) => {
-                    log::warn(&format!("client {} fit error: {e}", handle.id));
-                    fit_failures += 1;
-                }
-            }
-        }
-
-        let round_fit_time = client_times
-            .iter()
-            .map(|(_, t, _)| *t)
-            .fold(0.0f64, f64::max);
-        let mut round_energy: f64 = client_times.iter().map(|(_, _, e)| e).sum();
-        if self.config.count_idle_energy {
-            for (handle, t, _) in &client_times {
-                round_energy += self
-                    .cost
-                    .idle(handle.device, (round_fit_time - t).max(0.0))
-                    .energy_j;
-            }
-        }
-
-        let train_loss = fedavg::mean_train_loss(&fit_results);
-        let truncated_clients = fedavg::truncated_count(&fit_results);
-        let steps: u64 = fit_results
-            .iter()
-            .map(|(_, res)| res.metrics.get_i64_or(keys::STEPS, 0).max(0) as u64)
-            .sum();
-
-        *params = self
-            .strategy
-            .aggregate_fit(round, &fit_results, fit_failures)?;
-
-        // ---- evaluate phase --------------------------------------------
-        let eval_plan = self.strategy.configure_evaluate(round, params, &handles);
-        let eval_outcomes: Vec<(usize, Result<crate::proto::EvaluateRes>)> =
-            std::thread::scope(|scope| {
-                let mut tasks = Vec::new();
-                for (idx, ins) in &eval_plan {
-                    let proxy = Arc::clone(&proxies[*idx]);
-                    let ins = ins.clone();
-                    tasks.push((*idx, scope.spawn(move || proxy.evaluate(ins, timeout))));
-                }
-                tasks
-                    .into_iter()
-                    .map(|(idx, t)| {
-                        (
-                            idx,
-                            t.join().unwrap_or_else(|_| {
-                                Err(Error::Client("evaluate thread panicked".into()))
-                            }),
-                        )
-                    })
-                    .collect()
-            });
-        let mut eval_results = Vec::new();
-        for (idx, outcome) in eval_outcomes {
-            match outcome {
-                Ok(res) => eval_results.push((handles[idx].clone(), res)),
-                Err(e) => log::warn(&format!("client {} evaluate error: {e}", handles[idx].id)),
-            }
-        }
-        let summary = self.strategy.aggregate_evaluate(round, &eval_results)?;
-
-        Ok(RoundRecord {
-            round,
-            fit_selected,
-            fit_completed: fit_results.len(),
-            fit_failures,
-            train_loss,
-            eval_loss: summary.loss,
-            accuracy: summary.accuracy,
-            round_time_s: round_fit_time + self.cost.server_overhead_s,
-            cum_time_s: 0.0,   // filled by History::push
-            round_energy_j: round_energy,
-            cum_energy_j: 0.0, // filled by History::push
-            steps,
-            truncated_clients,
-            down_bytes,
-            up_bytes,
-            mean_staleness: 0.0, // barrier rounds are never stale
-            max_staleness: 0,
-            concurrency: fit_selected,
-            fit_discarded: 0,
-        })
+    /// Whole-run accounting: the same `dispatched == folded + failures +
+    /// discarded + drained` identity the streaming loop keeps.
+    pub fn stats(&self) -> AsyncStats {
+        self.core.stats()
     }
 }
 
@@ -479,7 +208,7 @@ pub fn serve_registrations(
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
-    use crate::client::Client;
+    use crate::client::{keys, Client};
     use crate::device::profiles;
     use crate::proto::*;
     use crate::strategy::{fedavg::TrainingPlan, Aggregator, FedAvg};

@@ -52,12 +52,13 @@ impl RuntimeCohortTrainer {
     }
 }
 
-impl RuntimeCohortTrainer {
-    /// Shared round/flush body: train every listed device from the
-    /// current globals, aggregate weighted by `examples × fold_weight`
-    /// (fold weights are 1.0 in the synchronous loop, the staleness
-    /// discount in async mode), then evaluate the new globals.
-    fn train_weighted(
+impl CohortTrainer for RuntimeCohortTrainer {
+    /// The one numeric entry point (see [`CohortTrainer`]): train every
+    /// listed device from the current globals, aggregate weighted by
+    /// `examples × fold_weight` (fold weights are 1.0 in barrier
+    /// rounds, the staleness discount in async mode), then evaluate the
+    /// new globals.
+    fn train_flush(
         &mut self,
         round: u64,
         pop: &Population,
@@ -105,29 +106,6 @@ impl RuntimeCohortTrainer {
                 .eval_step(&self.model, &self.params, &self.eval_x, &self.eval_y)?;
         let accuracy = correct as f64 / self.eval_y.len() as f64;
         Ok((losses, eval_loss as f64, accuracy))
-    }
-}
-
-impl CohortTrainer for RuntimeCohortTrainer {
-    fn train_round(
-        &mut self,
-        round: u64,
-        pop: &Population,
-        cohort: &[usize],
-        steps_per_client: u64,
-    ) -> Result<(Vec<f64>, f64, f64)> {
-        let folds: Vec<(usize, f64)> = cohort.iter().map(|&i| (i, 1.0)).collect();
-        self.train_weighted(round, pop, &folds, steps_per_client)
-    }
-
-    fn train_flush(
-        &mut self,
-        version: u64,
-        pop: &Population,
-        folds: &[(usize, f64)],
-        steps_per_client: u64,
-    ) -> Result<(Vec<f64>, f64, f64)> {
-        self.train_weighted(version, pop, folds, steps_per_client)
     }
 }
 

@@ -5,8 +5,7 @@
 use crate::client::keys;
 use crate::config;
 use crate::error::Result;
-use crate::proto::scalar::ConfigExt;
-use crate::proto::{ConfigMap, EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+use crate::proto::{ConfigMap, EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters};
 use crate::sched::policy::UniformRandom;
 
 use super::{
@@ -101,6 +100,14 @@ impl FedAvg {
 /// [`crate::strategy::FedBuff`] flush share one arithmetic path —
 /// FedBuff with zero staleness is bit-identical to FedAvg because both
 /// funnel through here.
+///
+/// This is a thin wire-level adapter: the audited numeric kernel
+/// underneath is [`Aggregator::weighted_average`], which is also what
+/// the population engine's
+/// [`crate::sim::population::RuntimeCohortTrainer`] calls directly on
+/// raw parameter vectors. Every weighted mean in the crate — sync
+/// round, async flush, engine cohort — reduces to that one kernel; no
+/// parallel averaging arithmetic exists to drift.
 pub(crate) fn weighted_parameter_average<'a>(
     aggregator: &Aggregator,
     results: impl IntoIterator<Item = (&'a FitRes, f64)>,
@@ -177,39 +184,11 @@ impl Strategy for FedAvg {
     }
 }
 
-/// Mean client-reported training loss over successful results (used by the
-/// server history; not part of the Strategy trait).
-pub fn mean_train_loss(results: &[(ClientHandle, FitRes)]) -> f64 {
-    let mut sum = 0f64;
-    let mut n = 0usize;
-    for (_, res) in results {
-        if res.status.is_ok() {
-            let l = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
-            if l.is_finite() {
-                sum += l;
-                n += 1;
-            }
-        }
-    }
-    if n == 0 {
-        f64::NAN
-    } else {
-        sum / n as f64
-    }
-}
-
-/// Count of clients whose fit was truncated by a τ cutoff.
-pub fn truncated_count(results: &[(ClientHandle, FitRes)]) -> usize {
-    results
-        .iter()
-        .filter(|(_, res)| matches!(res.metrics.get(keys::TRUNCATED), Some(Scalar::Bool(true))))
-        .count()
-}
-
 #[cfg(test)]
 mod tests {
     use super::super::testutil::*;
     use super::*;
+    use crate::proto::scalar::ConfigExt;
 
     fn strategy() -> FedAvg {
         FedAvg::new(TrainingPlan { epochs: 5, lr: 0.1 }, Aggregator::Rust)
@@ -274,18 +253,4 @@ mod tests {
         assert!(s.aggregate_fit(1, &[], 3).is_err());
     }
 
-    #[test]
-    fn train_loss_and_truncation_helpers() {
-        let h = handles(2);
-        let mut truncated = fit_res(vec![0.0], 10, 2.0);
-        truncated
-            .metrics
-            .insert(keys::TRUNCATED.into(), Scalar::Bool(true));
-        let results = vec![
-            (h[0].clone(), fit_res(vec![0.0], 10, 1.0)),
-            (h[1].clone(), truncated),
-        ];
-        assert!((mean_train_loss(&results) - 1.5).abs() < 1e-9);
-        assert_eq!(truncated_count(&results), 1);
-    }
 }

@@ -152,3 +152,45 @@ impl Bench {
         self.results
     }
 }
+
+/// Render bench results as the in-tree JSON baseline format (see
+/// `rust/BENCH_selection.json`): one row per case with nanosecond
+/// timings, plus metadata marking how the numbers were produced.
+/// `note` carries the group's acceptance criterion so regenerating the
+/// file never drops it from the tree. Baselines are machine-dependent —
+/// regenerate on the target machine rather than comparing across hosts
+/// (`mode` records whether the run was a real measurement or a `--test`
+/// smoke).
+pub fn results_to_json(group: &str, note: &str, results: &[Stats], test_mode: bool) -> String {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|s| {
+            Json::Obj(BTreeMap::from([
+                ("name".to_string(), Json::Str(s.name.clone())),
+                ("median_ns".to_string(), Json::Num(s.median_ns)),
+                ("mean_ns".to_string(), Json::Num(s.mean_ns)),
+                ("p95_ns".to_string(), Json::Num(s.p95_ns)),
+                ("iters".to_string(), Json::Num(s.iters as f64)),
+            ]))
+        })
+        .collect();
+    Json::Obj(BTreeMap::from([
+        ("group".to_string(), Json::Str(group.into())),
+        (
+            "mode".to_string(),
+            Json::Str(if test_mode { "test" } else { "measure" }.into()),
+        ),
+        ("machine_dependent".to_string(), Json::Bool(true)),
+        ("note".to_string(), Json::Str(note.into())),
+        (
+            "regenerate".to_string(),
+            Json::Str(format!(
+                "cd rust && cargo bench --bench {group} -- --json BENCH_{group}.json"
+            )),
+        ),
+        ("results".to_string(), Json::Arr(rows)),
+    ]))
+    .to_string()
+}

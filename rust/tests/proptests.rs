@@ -511,8 +511,10 @@ fn prop_fedbuff_full_buffer_zero_staleness_is_bit_identical_to_fedavg() {
 // scheduler policy properties
 // ---------------------------------------------------------------------------
 
+use flowrs::sched::availability::{AvailabilityIndex, ChurnModel, ChurnSpec};
 use flowrs::sched::policy::{
-    Candidate, DeadlineAware, SelectionContext, SelectionPolicy, UniformRandom, UtilityBased,
+    Candidate, DeadlineAware, FairnessCap, SelectionContext, SelectionPolicy, UniformRandom,
+    UtilityBased,
 };
 
 fn arb_candidates(rng: &mut Rng) -> Vec<Candidate> {
@@ -527,6 +529,7 @@ fn arb_candidates(rng: &mut Rng) -> Vec<Candidate> {
             } else {
                 Some(rng.below(50) as u64)
             },
+            times_selected: rng.below(30) as u64,
         })
         .collect()
 }
@@ -535,7 +538,8 @@ fn build_policy(tag: usize, seed: u64) -> Box<dyn SelectionPolicy> {
     match tag {
         0 => Box::new(UniformRandom::new(seed)),
         1 => Box::new(DeadlineAware::new(seed)),
-        _ => Box::new(UtilityBased::new(seed)),
+        2 => Box::new(UtilityBased::new(seed)),
+        _ => Box::new(FairnessCap::new(seed).with_cap(5)),
     }
 }
 
@@ -559,7 +563,7 @@ fn prop_policies_deterministic_distinct_and_bounded() {
             },
         };
         let seed = rng.next_u64();
-        for tag in 0..3 {
+        for tag in 0..4 {
             let a = build_policy(tag, seed).select(&ctx, &cands);
             let b = build_policy(tag, seed).select(&ctx, &cands);
             assert_eq_prop(&a, &b)?;
@@ -573,6 +577,118 @@ fn prop_policies_deterministic_distinct_and_bounded() {
             })?;
             ensure(a.iter().all(|&i| i < cands.len()), || {
                 format!("policy {tag} index out of range: {a:?}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fairness_cap_is_deterministic_and_honors_the_cap() {
+    let name = "fairness cap: same seed -> same cohort; capped devices only when the \
+                uncapped pool runs dry";
+    check(name, 120, |rng| {
+        let cands = arb_candidates(rng);
+        let cost = CostModel::default();
+        let k = 1 + rng.below(cands.len());
+        let cap = 1 + rng.below(20) as u64;
+        let ctx = SelectionContext {
+            round: 1 + rng.below(40) as u64,
+            cost: &cost,
+            steps_per_round: 1 + rng.below(100) as u64,
+            model_bytes: 1_000 + rng.below(1_000_000),
+            target_cohort: k,
+            deadline_s: None,
+        };
+        let seed = rng.next_u64();
+        let a = FairnessCap::new(seed).with_cap(cap).select(&ctx, &cands);
+        let b = FairnessCap::new(seed).with_cap(cap).select(&ctx, &cands);
+        assert_eq_prop(&a, &b)?;
+        ensure(a.len() == k.min(cands.len()), || {
+            format!("cohort {} != {}", a.len(), k.min(cands.len()))
+        })?;
+        let distinct: std::collections::BTreeSet<usize> = a.iter().copied().collect();
+        ensure(distinct.len() == a.len(), || format!("repeated index: {a:?}"))?;
+        let uncapped: Vec<usize> = (0..cands.len())
+            .filter(|&i| cands[i].times_selected < cap)
+            .collect();
+        if uncapped.len() >= k {
+            for &i in &a {
+                ensure(cands[i].times_selected < cap, || {
+                    format!(
+                        "picked capped candidate {i} (count {}) with {} uncapped available",
+                        cands[i].times_selected,
+                        uncapped.len()
+                    )
+                })?;
+            }
+        } else {
+            // the uncapped pool cannot fill the cohort: everyone in it
+            // must still be drafted before any capped device
+            for &i in &uncapped {
+                ensure(a.contains(&i), || {
+                    format!("uncapped candidate {i} skipped while topping up")
+                })?;
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------------
+// availability-index properties
+// ---------------------------------------------------------------------------
+
+/// The satellite invariant for the O(1)-amortized index: over random
+/// churn traces with random monotone time jumps and random busy/idle
+/// checkouts, the incrementally maintained idle-online set must equal a
+/// brute-force O(n) rescan — except within float noise of a toggle
+/// boundary, where both answers are legitimate.
+#[test]
+fn prop_availability_index_matches_brute_force_rescan() {
+    let name = "availability index == brute-force rescan over random churn traces";
+    check(name, 40, |rng| {
+        let n = 20 + rng.below(200);
+        let spec = ChurnSpec {
+            mean_on_s: 30.0 + rng.f64() * 1_000.0,
+            mean_off_s: rng.f64() * 1_000.0,
+        };
+        let model = ChurnModel::new(spec, rng.next_u64());
+        let cycles: Vec<_> = (0..n as u64).map(|d| model.cycle(d)).collect();
+        let mut index = AvailabilityIndex::new(cycles.clone(), 0.0);
+        let mut busy = vec![false; n];
+        let mut t = 0.0f64;
+        for _ in 0..60 {
+            t += 0.5 + rng.f64() * 400.0;
+            index.advance(t);
+            // random checkout churn, like dispatch/settle would do (the
+            // engine only checks out devices the index lists as online)
+            for _ in 0..rng.below(6) {
+                let d = rng.below(n);
+                if busy[d] {
+                    busy[d] = false;
+                    index.mark_idle(d as u32);
+                } else if index.is_online(d as u32) {
+                    busy[d] = true;
+                    index.mark_busy(d as u32);
+                }
+            }
+            // skip instants within float noise of any toggle boundary
+            // (same ambiguity rule as the availability unit tests)
+            if cycles.iter().any(|c| c.boundary_distance_s(t) < 1e-6) {
+                continue;
+            }
+            let expected: Vec<u32> = (0..n)
+                .filter(|&i| !busy[i] && cycles[i].is_on(t))
+                .map(|i| i as u32)
+                .collect();
+            let got = index.idle_online_sorted();
+            ensure(got == expected, || {
+                format!(
+                    "index diverged at t={t}: {} vs brute-force {}",
+                    got.len(),
+                    expected.len()
+                )
             })?;
         }
         Ok(())

@@ -194,6 +194,43 @@ fn fedbuff_beats_sync_fedavg_time_to_accuracy_on_heterogeneous_mix() {
     assert_eq!(fedbuff.to_csv(), again.to_csv());
 }
 
+/// The O(1)-amortized-index guard: a 1M-device streaming run whose
+/// event count is high enough that an O(population)-per-event top-up
+/// regression (the pre-index behavior: a full availability rescan plus a
+/// population-sized shuffle per event) would blow the wall-clock budget
+/// by an order of magnitude, while the indexed path spends its time in
+/// population synthesis and stays comfortably inside it.
+///
+/// Ignored by default (it needs a release build to be meaningful); CI
+/// runs it explicitly via
+/// `cargo test --release -q engine_smoke_1m -- --ignored`.
+#[test]
+#[ignore = "1M-device release-mode smoke; CI runs it via -- --ignored"]
+fn engine_smoke_1m_streaming_stays_flat() {
+    let mut cfg = ScheduleConfig::default()
+        .named("smoke-1m")
+        .population(1_000_000)
+        .cohort(256)
+        .seed(17)
+        .buffered(64)
+        .concurrency(512)
+        .rounds(50);
+    cfg.churn = Some(ChurnSpec { mean_on_s: 600.0, mean_off_s: 300.0 });
+    let t0 = Instant::now();
+    let report = run_population(&cfg, None).unwrap();
+    let elapsed = t0.elapsed();
+    assert_eq!(report.rounds.len(), 50);
+    assert_eq!(report.population, 1_000_000);
+    // 50 versions × K=64 = 3200 folds, plus top-ups: thousands of events
+    assert_eq!(report.completed_total(), 50 * 64);
+    assert!(report.final_accuracy() > 0.0);
+    assert!(
+        elapsed < Duration::from_secs(60),
+        "1M-device streaming run took {elapsed:?}; the per-event availability \
+         index has regressed to O(population)"
+    );
+}
+
 /// Identical configs produce bit-identical reports.
 #[test]
 fn population_runs_are_deterministic() {
