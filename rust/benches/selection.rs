@@ -11,6 +11,11 @@
 //! cost must stay flat from 100k to 1M devices instead of scaling with
 //! population — both always-on and under churn.
 //!
+//! The `ckpt_*` cases measure checkpoint persistence overhead (atomic
+//! write, CRC-validating read, full decode of a 100k-device streaming
+//! checkpoint) so `BENCH_selection.json` refreshes capture the
+//! `persist` subsystem alongside the scheduler hot paths.
+//!
 //! Record the numbers from this bench on the target machine as the
 //! baseline when touching the scheduler hot paths (`FLOWRS_BENCH_MS`
 //! trims the per-case budget); `-- --json BENCH_selection.json` writes
@@ -18,6 +23,7 @@
 //! — baselines are machine-dependent, regenerate locally).
 
 use flowrs::config::{PolicyConfig, ScheduleConfig};
+use flowrs::persist::{CheckpointReader, EngineCheckpoint};
 use flowrs::sched::engine::{Engine, Population, SurrogateTrainer};
 use flowrs::sched::policy::{Candidate, SelectionContext};
 use flowrs::sched::ChurnSpec;
@@ -112,6 +118,39 @@ fn main() {
         });
     }
 
+    // Checkpoint persistence overhead at population scale: one atomic
+    // write (serialize + fsync + rename) and one read (validate CRCs +
+    // decode) of a streaming-mode engine checkpoint at 100k devices.
+    // Future BENCH_selection.json refreshes record these alongside the
+    // scheduler hot paths, so persistence regressions are visible in
+    // the same baseline file.
+    {
+        let ck_cfg = ScheduleConfig::default()
+            .named("bench")
+            .population(100_000)
+            .cohort(100)
+            .buffered(32)
+            .concurrency(128)
+            .seed(42);
+        let mut engine = Engine::new(&ck_cfg, SurrogateTrainer::default()).unwrap();
+        let rounds = vec![engine.run_version().unwrap()];
+        let ckpt = engine.checkpoint(&rounds).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "flowrs-bench-ckpt-{}.flwr",
+            std::process::id()
+        ));
+        b.bench("ckpt_write_atomic_n100000", || {
+            ckpt.to_writer().write_atomic(&path).unwrap()
+        });
+        b.bench("ckpt_read_validate_n100000", || {
+            CheckpointReader::read(&path).unwrap()
+        });
+        b.bench("ckpt_decode_n100000", || {
+            EngineCheckpoint::from_reader(&CheckpointReader::read(&path).unwrap()).unwrap()
+        });
+        std::fs::remove_file(&path).ok();
+    }
+
     let results = b.finish();
     // `-- --json <path>`: record the run as the in-tree baseline file.
     let json_path = std::env::args().skip_while(|a| a != "--json").nth(1);
@@ -121,7 +160,10 @@ fn main() {
                     engine_async_version_n1000000 medians must be within noise of \
                     each other (per-event top-up is O(1)-amortized through the \
                     availability index), while select_*_n* scales with population \
-                    (materialized candidate pools are inherently O(population)).";
+                    (materialized candidate pools are inherently O(population)). \
+                    ckpt_* cases record checkpoint persistence overhead (atomic \
+                    fsync write, CRC-validating read, full decode) for a \
+                    100k-device streaming checkpoint.";
         std::fs::write(&path, results_to_json("selection", note, &results, test_mode))
             .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
         println!("wrote bench baselines to {path}");

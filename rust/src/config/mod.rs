@@ -81,6 +81,15 @@ pub struct ExperimentConfig {
     pub staleness_alpha: f64,
     /// Async loop: max concurrent fit dispatches (0 = every client).
     pub max_concurrency: usize,
+    /// Write atomic checkpoints (parameters, history, accounting) to
+    /// this directory at round/flush boundaries (see [`crate::persist`]).
+    /// `None` = no checkpointing.
+    pub checkpoint_dir: Option<String>,
+    /// Checkpoint every N rounds / model versions (0 = every flush).
+    pub checkpoint_every_rounds: u64,
+    /// Resume from this checkpoint file — or, if the path is a
+    /// directory, its newest valid checkpoint — before round 1.
+    pub resume_from: Option<String>,
 }
 
 impl Default for ExperimentConfig {
@@ -111,6 +120,9 @@ impl Default for ExperimentConfig {
             async_buffer: None,
             staleness_alpha: crate::strategy::fedbuff::DEFAULT_STALENESS_ALPHA,
             max_concurrency: 0,
+            checkpoint_dir: None,
+            checkpoint_every_rounds: 0,
+            resume_from: None,
         }
     }
 }
@@ -195,6 +207,21 @@ impl ExperimentConfig {
     }
     pub fn concurrency(mut self, n: usize) -> Self {
         self.max_concurrency = n;
+        self
+    }
+    /// Write checkpoints into `dir` at round boundaries.
+    pub fn checkpoints(mut self, dir: &str) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+    /// Checkpoint cadence in rounds (0 = every round).
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.checkpoint_every_rounds = n;
+        self
+    }
+    /// Resume from a checkpoint file or directory.
+    pub fn resume(mut self, path: &str) -> Self {
+        self.resume_from = Some(path.into());
         self
     }
 
@@ -391,6 +418,15 @@ impl ExperimentConfig {
         if let Some(v) = doc.opt("max_concurrency") {
             cfg.max_concurrency = v.as_usize()?;
         }
+        if let Some(v) = doc.opt("checkpoint_dir") {
+            cfg.checkpoint_dir = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.opt("checkpoint_every_rounds") {
+            cfg.checkpoint_every_rounds = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.opt("resume_from") {
+            cfg.resume_from = Some(v.as_str()?.to_string());
+        }
         if let Some(v) = doc.opt("strategy") {
             cfg.strategy = parse_strategy(v)?;
         }
@@ -581,6 +617,15 @@ pub struct ScheduleConfig {
     /// Async mode: max concurrent in-flight dispatches
     /// (0 = `cohort_size`).
     pub max_concurrency: usize,
+    /// Write atomic engine checkpoints to this directory at flush
+    /// boundaries (see [`crate::persist`]). `None` = no checkpointing.
+    pub checkpoint_dir: Option<String>,
+    /// Checkpoint every N rounds / model versions (0 = every flush).
+    pub checkpoint_every_rounds: u64,
+    /// Resume from this checkpoint file — or, if the path is a
+    /// directory, its newest valid checkpoint. The resumed run replays
+    /// the uninterrupted trajectory bit-identically.
+    pub resume_from: Option<String>,
 }
 
 impl Default for ScheduleConfig {
@@ -603,6 +648,9 @@ impl Default for ScheduleConfig {
             async_buffer: None,
             staleness_alpha: crate::strategy::fedbuff::DEFAULT_STALENESS_ALPHA,
             max_concurrency: 0,
+            checkpoint_dir: None,
+            checkpoint_every_rounds: 0,
+            resume_from: None,
         }
     }
 }
@@ -658,6 +706,39 @@ impl ScheduleConfig {
     pub fn concurrency(mut self, n: usize) -> Self {
         self.max_concurrency = n;
         self
+    }
+
+    /// Write checkpoints into `dir` at flush boundaries.
+    pub fn checkpoints(mut self, dir: &str) -> Self {
+        self.checkpoint_dir = Some(dir.into());
+        self
+    }
+    /// Checkpoint cadence in rounds / versions (0 = every flush).
+    pub fn checkpoint_every(mut self, n: u64) -> Self {
+        self.checkpoint_every_rounds = n;
+        self
+    }
+    /// Resume from a checkpoint file or directory.
+    pub fn resume(mut self, path: &str) -> Self {
+        self.resume_from = Some(path.into());
+        self
+    }
+
+    /// Stable fingerprint of every knob the engine's *trajectory*
+    /// depends on. Excluded: `name`, `rounds`, `target_accuracy` (a
+    /// resumed run may legitimately extend or re-target a finished
+    /// one) and the checkpoint knobs themselves. Resume refuses a
+    /// checkpoint whose fingerprint does not match — a silent config
+    /// drift would otherwise break the bit-identical-replay guarantee.
+    pub fn fingerprint(&self) -> String {
+        let mut c = self.clone();
+        c.name = String::new();
+        c.rounds = 0;
+        c.target_accuracy = None;
+        c.checkpoint_dir = None;
+        c.checkpoint_every_rounds = 0;
+        c.resume_from = None;
+        format!("schedule-v1:{c:?}")
     }
 
     /// Async in-flight bound: explicit `max_concurrency`, or the cohort
@@ -800,6 +881,15 @@ impl ScheduleConfig {
         }
         if let Some(v) = doc.opt("max_concurrency") {
             cfg.max_concurrency = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("checkpoint_dir") {
+            cfg.checkpoint_dir = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.opt("checkpoint_every_rounds") {
+            cfg.checkpoint_every_rounds = v.as_usize()? as u64;
+        }
+        if let Some(v) = doc.opt("resume_from") {
+            cfg.resume_from = Some(v.as_str()?.to_string());
         }
         cfg.validate()?;
         Ok(cfg)
@@ -1010,6 +1100,66 @@ mod tests {
         // sync default stays valid and untouched
         assert_eq!(ScheduleConfig::default().async_buffer, None);
         ScheduleConfig::default().buffered(8).staleness(0.5).validate().unwrap();
+    }
+
+    #[test]
+    fn checkpoint_knobs_roundtrip_both_configs() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{"checkpoint_dir": "/tmp/ck", "checkpoint_every_rounds": 5, "resume_from": "/tmp/ck"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_dir.as_deref(), Some("/tmp/ck"));
+        assert_eq!(cfg.checkpoint_every_rounds, 5);
+        assert_eq!(cfg.resume_from.as_deref(), Some("/tmp/ck"));
+
+        let s = ScheduleConfig::from_json(
+            r#"{"checkpoint_dir": "ckpts", "checkpoint_every_rounds": 2, "resume_from": "ckpts"}"#,
+        )
+        .unwrap();
+        assert_eq!(s.checkpoint_dir.as_deref(), Some("ckpts"));
+        assert_eq!(s.checkpoint_every_rounds, 2);
+        assert_eq!(s.resume_from.as_deref(), Some("ckpts"));
+
+        // builders mirror the JSON knobs; defaults stay off
+        assert_eq!(ScheduleConfig::default().checkpoint_dir, None);
+        let b = ScheduleConfig::default().checkpoints("d").checkpoint_every(3).resume("d");
+        assert_eq!(b.checkpoint_dir.as_deref(), Some("d"));
+        assert_eq!(b.checkpoint_every_rounds, 3);
+        let e = ExperimentConfig::default().checkpoints("d").checkpoint_every(3).resume("d");
+        assert_eq!(e.resume_from.as_deref(), Some("d"));
+    }
+
+    #[test]
+    fn fingerprint_ignores_run_length_but_pins_trajectory_knobs() {
+        let base = ScheduleConfig::default();
+        // name / rounds / target / checkpoint knobs do not change identity
+        assert_eq!(base.fingerprint(), base.clone().named("other").fingerprint());
+        assert_eq!(base.fingerprint(), base.clone().rounds(99).fingerprint());
+        let mut t = base.clone();
+        t.target_accuracy = Some(0.9);
+        assert_eq!(base.fingerprint(), t.fingerprint());
+        assert_eq!(
+            base.fingerprint(),
+            base.clone().checkpoints("x").checkpoint_every(7).resume("y").fingerprint()
+        );
+        // everything trajectory-relevant does
+        assert_ne!(base.fingerprint(), base.clone().seed(1).fingerprint());
+        assert_ne!(base.fingerprint(), base.clone().cohort(7).fingerprint());
+        assert_ne!(base.fingerprint(), base.clone().population(7).fingerprint());
+        assert_ne!(base.fingerprint(), base.clone().buffered(4).fingerprint());
+        assert_ne!(
+            base.fingerprint(),
+            base.clone().policy(PolicyConfig::DeadlineAware).fingerprint()
+        );
+        assert_ne!(
+            base.fingerprint(),
+            base.clone()
+                .churn(Some(crate::sched::availability::ChurnSpec {
+                    mean_on_s: 1.0,
+                    mean_off_s: 1.0
+                }))
+                .fingerprint()
+        );
     }
 
     #[test]

@@ -26,6 +26,9 @@ pub enum Error {
     Client(String),
     /// Timeouts waiting for clients.
     Timeout(String),
+    /// Checkpoint persistence: corrupt/truncated files, incompatible
+    /// configs on resume.
+    Persist(String),
     /// Underlying std I/O error.
     Io(std::io::Error),
 }
@@ -42,6 +45,7 @@ impl fmt::Display for Error {
             Error::Aggregation(m) => write!(f, "aggregation error: {m}"),
             Error::Client(m) => write!(f, "client error: {m}"),
             Error::Timeout(m) => write!(f, "timeout: {m}"),
+            Error::Persist(m) => write!(f, "persist error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

@@ -13,7 +13,10 @@
 //!   policies (uniform / deadline-aware / utility-based) over the
 //!   calibrated cost model, per-device availability churn, and an
 //!   event-driven virtual-time engine that scales policy experiments to
-//!   100k–1M virtual devices ([`sim::population`], `flowrs sched`).
+//!   100k–1M virtual devices ([`sim::population`], `flowrs sched`), and
+//!   the checkpoint/resume subsystem ([`persist`]): atomic, versioned
+//!   on-disk snapshots of server and engine state, so population-scale
+//!   runs survive a coordinator kill and resume bit-identically.
 //! * **L2 (JAX, build-time)** — the training workloads (CIFAR CNN, frozen
 //!   base + trainable head), lowered once to HLO text under `artifacts/`.
 //! * **L1 (Pallas, build-time)** — fused dense fwd/bwd, softmax-xent, SGD
@@ -36,6 +39,7 @@ pub mod data;
 pub mod device;
 pub mod error;
 pub mod metrics;
+pub mod persist;
 pub mod proto;
 pub mod runtime;
 pub mod sched;

@@ -7,11 +7,12 @@
 //! * `client`    — start one on-device TCP client
 //! * `devices`   — print the device inventory (paper Table 1)
 //! * `artifacts` — verify the AOT artifact bundle end-to-end
+//! * `ckpt`      — inspect persistent checkpoints (`ckpt inspect <file|dir>`)
 //!
 //! Run `flowrs help` for flags.
 
 use std::collections::BTreeMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 use std::time::Duration;
@@ -36,7 +37,6 @@ use flowrs::transport::Connection;
 /// Tiny flag parser: `--key value` pairs plus positional words.
 struct Args {
     flags: BTreeMap<String, String>,
-    #[allow(dead_code)]
     positional: Vec<String>,
 }
 
@@ -109,6 +109,7 @@ fn run(argv: &[String]) -> Result<()> {
         "client" => cmd_client(&args),
         "devices" => cmd_devices(),
         "artifacts" => cmd_artifacts(&args),
+        "ckpt" => cmd_ckpt(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -133,6 +134,7 @@ fn print_usage() {
                       --quantize f16|off --dropout P --agg rust|pjrt\n\
                       --async-buffer K --staleness-alpha A --max-concurrency N\n\
                       (async: FedBuff loop, no round barrier; --rounds = model versions)\n\
+                      --checkpoint-dir <dir> --checkpoint-every N --resume <file|dir>\n\
                       --t-step-ref <s> --out <csv> --artifacts <dir>\n\
            sched      run a cost-aware population-scale scheduling experiment\n\
                       --config <file.json> | --population N --cohort K --rounds R\n\
@@ -145,6 +147,8 @@ fn print_usage() {
                       --max-concurrency N  (async = FedBuff folds, per-flush versions;\n\
                       both = every policy twice, sync vs async, one table;\n\
                       --mode async/both without --async-buffer defaults to K=8)\n\
+                      --checkpoint-dir <dir> --checkpoint-every N --resume <file|dir>\n\
+                      (kill/resume replays the uninterrupted trace bit-identically)\n\
                       (real PJRT cohort numerics with artifacts, surrogate otherwise)\n\
            server     start a Flower TCP server\n\
                       --addr 127.0.0.1:9092 --model cifar_cnn --rounds 10 --epochs 1\n\
@@ -153,7 +157,11 @@ fn print_usage() {
                       --addr 127.0.0.1:9092 --model cifar_cnn --device jetson_tx2_gpu\n\
                       --id c0 --train 256 --test 100 --seed 1 --stream 1 --artifacts <dir>\n\
            devices    print the device inventory (paper Table 1)\n\
-           artifacts  verify the AOT bundle: load, compile, smoke-run\n"
+           artifacts  verify the AOT bundle: load, compile, smoke-run\n\
+           ckpt       inspect persistent checkpoints\n\
+                      ckpt inspect <file|dir>  (a directory resolves to its\n\
+                      newest valid checkpoint; prints header, sections and\n\
+                      the round-trace summary)\n"
     );
 }
 
@@ -277,6 +285,15 @@ fn config_from_args(args: &Args) -> Result<ExperimentConfig> {
     if let Some(v) = args.get_parsed("target-accuracy")? {
         cfg.target_accuracy = Some(v);
     }
+    if let Some(v) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(v.into());
+    }
+    if let Some(v) = args.get_parsed("checkpoint-every")? {
+        cfg.checkpoint_every_rounds = v;
+    }
+    if let Some(v) = args.get("resume") {
+        cfg.resume_from = Some(v.into());
+    }
     cfg.validate()?;
     Ok(cfg)
 }
@@ -372,6 +389,15 @@ fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
     if let Some(v) = args.get_parsed("max-concurrency")? {
         cfg.max_concurrency = v;
     }
+    if let Some(v) = args.get("checkpoint-dir") {
+        cfg.checkpoint_dir = Some(v.into());
+    }
+    if let Some(v) = args.get_parsed("checkpoint-every")? {
+        cfg.checkpoint_every_rounds = v;
+    }
+    if let Some(v) = args.get("resume") {
+        cfg.resume_from = Some(v.into());
+    }
     if let Some(v) = args.get("policy") {
         cfg.policy = PolicyConfig::parse(v)?;
     }
@@ -465,6 +491,13 @@ fn cmd_sched(args: &Args) -> Result<()> {
         }
     }
     let single = run_cfgs.len() == 1;
+    if !single && (cfg.resume_from.is_some() || cfg.checkpoint_dir.is_some()) {
+        return Err(Error::Config(
+            "--checkpoint-dir / --resume apply to a single run; drop --compare / \
+             --mode both or give each variant its own invocation"
+                .into(),
+        ));
+    }
     let target = cfg.target_accuracy.unwrap_or(0.5);
     let t2a_hdr = format!("t2a@{target} (min)");
     let mut table = Table::new(
@@ -700,5 +733,95 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
         println!("  aggregate OK: identity drift={drift:.2e}");
     }
     println!("artifact bundle OK ({} executions)", runtime.executions());
+    Ok(())
+}
+
+fn cmd_ckpt(args: &Args) -> Result<()> {
+    if args.has_help() {
+        print_usage();
+        return Ok(());
+    }
+    match args.positional.first().map(String::as_str) {
+        Some("inspect") => {
+            let path = args.positional.get(1).ok_or_else(|| {
+                Error::Config("usage: flowrs ckpt inspect <file|dir>".into())
+            })?;
+            inspect_checkpoint(&PathBuf::from(path))
+        }
+        _ => Err(Error::Config(
+            "unknown ckpt subcommand; usage: flowrs ckpt inspect <file|dir>".into(),
+        )),
+    }
+}
+
+/// Pretty-print a checkpoint's header, section map and round summary.
+fn inspect_checkpoint(path: &Path) -> Result<()> {
+    use flowrs::persist::{
+        resolve_checkpoint, CheckpointKind, EngineCheckpoint, ServerCheckpoint,
+    };
+
+    let (resolved, reader) = resolve_checkpoint(path)?;
+    println!("checkpoint {}", resolved.display());
+    println!("  kind:            {:?}", reader.kind());
+    println!("  format version:  {}", reader.format_version());
+    println!("  rounds complete: {}", reader.rounds_completed());
+    println!("  sections:");
+    for (tag, bytes) in reader.sections() {
+        println!("    {tag}  {bytes} bytes");
+    }
+
+    let mut table = Table::new(
+        "round trace (last 5)",
+        &["round", "accuracy", "eval loss", "cum time (min)", "completed"],
+    );
+    let mut row = |round: u64, acc: f64, loss: f64, cum_s: f64, completed: usize| {
+        table.row(vec![
+            round.to_string(),
+            format!("{acc:.4}"),
+            format!("{loss:.4}"),
+            format!("{:.2}", cum_s / 60.0),
+            completed.to_string(),
+        ]);
+    };
+    match reader.kind() {
+        CheckpointKind::Engine => {
+            let ck = EngineCheckpoint::from_reader(&reader)?;
+            println!("  population:      {} devices", ck.devices.len());
+            println!("  virtual time:    {:.1} s", ck.clock_s);
+            println!(
+                "  in flight:       {} dispatches{}",
+                ck.in_flight.len(),
+                if ck.index.is_some() { " (streaming mode)" } else { "" },
+            );
+            for r in ck.rounds.iter().rev().take(5).rev() {
+                row(r.round, r.accuracy, r.eval_loss, r.cum_time_s, r.completed);
+            }
+        }
+        CheckpointKind::Server => {
+            let ck = ServerCheckpoint::from_reader(&reader)?;
+            let params: usize = ck.params.iter().map(|t| t.data.len()).sum();
+            println!(
+                "  loop:            {}",
+                if ck.streaming { "streaming (async)" } else { "barrier (sync)" }
+            );
+            println!("  parameters:      {params} f32s in {} tensor(s)", ck.params.len());
+            println!(
+                "  accounting:      dispatched={} folded={} flushed={} failures={} discarded={} drained={}",
+                ck.stats.dispatched,
+                ck.stats.folded,
+                ck.stats.flushed,
+                ck.stats.failures,
+                ck.stats.discarded,
+                ck.stats.drained,
+            );
+            if !ck.clients.is_empty() {
+                println!("  observed clients: {}", ck.clients.len());
+            }
+            for r in ck.history.iter().rev().take(5).rev() {
+                row(r.round, r.accuracy, r.eval_loss, r.cum_time_s, r.fit_completed);
+            }
+        }
+    }
+    print!("{}", table.render());
     Ok(())
 }

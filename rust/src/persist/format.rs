@@ -1,0 +1,779 @@
+//! The on-disk checkpoint container: a versioned, CRC-guarded section
+//! file written atomically (temp file → fsync → rename), plus the
+//! directory protocol ([`CheckpointStore`]) that always resolves to the
+//! newest *valid* checkpoint.
+//!
+//! Layout (all integers little-endian; see `rust/src/persist/FORMAT.md`
+//! for the normative description and the version-bump policy):
+//!
+//! ```text
+//! file    := header section* footer
+//! header  := magic[8]="FLWRCKPT" format_version:u32 kind[4]
+//!            rounds_completed:u64 section_count:u32 header_crc32:u32
+//! section := tag[4] payload_len:u64 crc32:u32 payload[payload_len]
+//! footer  := "FLWREND1"
+//! ```
+//!
+//! Every byte of the file is covered by a checksum or a sentinel: the
+//! header by `header_crc32`, each section (tag + length + payload) by
+//! its `crc32`, and the end of the byte stream by the footer. A
+//! truncation at *any* offset therefore fails to load — either a short
+//! read, a checksum mismatch, or a missing footer — which is exactly
+//! the crash-window guarantee the resume path depends on (locked by a
+//! property test in `rust/tests/persist_e2e.rs`).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::telemetry::log;
+
+/// Leading file magic: any file not starting with these 8 bytes is not
+/// a flowrs checkpoint.
+pub const MAGIC: [u8; 8] = *b"FLWRCKPT";
+
+/// Trailing sentinel: a file that parses to the end but does not close
+/// with these 8 bytes was truncated mid-write.
+pub const FOOTER: [u8; 8] = *b"FLWREND1";
+
+/// The container-format version this build writes (and the newest it
+/// reads). Bump only on incompatible layout changes — adding a new
+/// *section* is forward-compatible because readers ignore unknown tags.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// File-name extension used by [`CheckpointStore`].
+pub const EXTENSION: &str = "flwr";
+
+/// What produced a checkpoint (and what can consume it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CheckpointKind {
+    /// A population-scale [`crate::sched::Engine`] snapshot.
+    Engine,
+    /// A live-server [`crate::server::Server`] / [`crate::server::AsyncServer`]
+    /// snapshot (written by their shared execution core).
+    Server,
+}
+
+impl CheckpointKind {
+    fn tag(self) -> [u8; 4] {
+        match self {
+            CheckpointKind::Engine => *b"ENGN",
+            CheckpointKind::Server => *b"SRVR",
+        }
+    }
+
+    fn from_tag(tag: &[u8]) -> Result<Self> {
+        match tag {
+            b"ENGN" => Ok(CheckpointKind::Engine),
+            b"SRVR" => Ok(CheckpointKind::Server),
+            other => Err(Error::Persist(format!(
+                "unknown checkpoint kind tag {:?}",
+                String::from_utf8_lossy(other)
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, the zlib polynomial)
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+const CRC_INIT: u32 = 0xFFFF_FFFF;
+
+/// Fold `data` into a running CRC state (start from [`CRC_INIT`],
+/// finish by xor-ing with it). The incremental form lets the writer
+/// and reader checksum `tag ++ len ++ payload` without concatenating
+/// them — multi-MB checkpoint sections are never copied just to be
+/// checksummed.
+fn crc32_fold(mut state: u32, data: &[u8]) -> u32 {
+    for &b in data {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// IEEE CRC-32 over `data` (the zlib/PNG polynomial). Exposed so tests
+/// and external tooling can verify section payloads independently.
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_fold(CRC_INIT, data) ^ CRC_INIT
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level encode / decode helpers (crate-internal)
+// ---------------------------------------------------------------------------
+
+/// Little-endian section-payload encoder. All floats are stored as raw
+/// IEEE-754 bits so round-tripping is exact (NaN payloads included).
+#[derive(Default)]
+pub(crate) struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub(crate) fn new() -> Self {
+        Enc { buf: Vec::new() }
+    }
+
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub(crate) fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    pub(crate) fn bool(&mut self, v: bool) {
+        self.u8(u8::from(v));
+    }
+
+    pub(crate) fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub(crate) fn opt_u64(&mut self, v: Option<u64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub(crate) fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub(crate) fn bytes(&mut self, b: &[u8]) {
+        self.u64(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    pub(crate) fn f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a section payload. Every
+/// accessor fails with [`Error::Persist`] instead of panicking, so a
+/// corrupt payload that somehow passed its CRC still degrades to a
+/// clean load error.
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Dec { buf, pos: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                Error::Persist(format!(
+                    "truncated checkpoint data: want {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len().saturating_sub(self.pos)
+                ))
+            })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub(crate) fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(Error::Persist(format!("invalid bool byte {other}"))),
+        }
+    }
+
+    pub(crate) fn opt_f64(&mut self) -> Result<Option<f64>> {
+        Ok(if self.bool()? { Some(self.f64()?) } else { None })
+    }
+
+    pub(crate) fn opt_u64(&mut self) -> Result<Option<u64>> {
+        Ok(if self.bool()? { Some(self.u64()?) } else { None })
+    }
+
+    /// A `u64` that must fit a collection count (guards against a
+    /// corrupt length field causing a huge allocation).
+    pub(crate) fn count(&mut self, what: &str) -> Result<usize> {
+        let n = self.u64()?;
+        let remaining = (self.buf.len() - self.pos) as u64;
+        if n > remaining {
+            return Err(Error::Persist(format!(
+                "{what} count {n} exceeds remaining payload ({remaining} bytes)"
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
+        let n = self.count("string byte")?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Persist("invalid UTF-8 in checkpoint string".into()))
+    }
+
+    pub(crate) fn bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.count("byte-blob")?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()?;
+        let remaining = ((self.buf.len() - self.pos) / 4) as u64;
+        if n > remaining {
+            return Err(Error::Persist(format!(
+                "f32 vector count {n} exceeds remaining payload"
+            )));
+        }
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub(crate) fn done(&self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(Error::Persist(format!(
+                "{} trailing bytes after checkpoint payload",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Builds one checkpoint file: a typed header plus tagged, checksummed
+/// sections, written atomically so a crash at any instant leaves either
+/// the previous checkpoint or a complete new one — never a torn file.
+///
+/// # Examples
+///
+/// ```
+/// use flowrs::persist::{CheckpointKind, CheckpointReader, CheckpointWriter};
+///
+/// let path = std::env::temp_dir().join("flowrs-writer-doctest.flwr");
+/// let mut w = CheckpointWriter::new(CheckpointKind::Engine, 3);
+/// w.section("DEMO", b"hello".to_vec());
+/// w.write_atomic(&path).unwrap();
+///
+/// let r = CheckpointReader::read(&path).unwrap();
+/// assert_eq!(r.kind(), CheckpointKind::Engine);
+/// assert_eq!(r.rounds_completed(), 3);
+/// assert_eq!(r.section("DEMO").unwrap(), b"hello".as_slice());
+/// # std::fs::remove_file(&path).ok();
+/// ```
+pub struct CheckpointWriter {
+    kind: CheckpointKind,
+    rounds_completed: u64,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl CheckpointWriter {
+    /// Start a checkpoint of `kind` taken after `rounds_completed`
+    /// rounds / model versions.
+    pub fn new(kind: CheckpointKind, rounds_completed: u64) -> Self {
+        CheckpointWriter { kind, rounds_completed, sections: Vec::new() }
+    }
+
+    /// The `rounds_completed` this writer was created with (the
+    /// [`CheckpointStore`] derives the file name from it).
+    pub fn rounds_completed(&self) -> u64 {
+        self.rounds_completed
+    }
+
+    /// Append one section. `tag` must be exactly 4 ASCII bytes (the
+    /// format's fixed tag width); duplicate tags are a caller bug.
+    pub fn section(&mut self, tag: &str, payload: Vec<u8>) {
+        assert!(
+            tag.len() == 4 && tag.is_ascii(),
+            "section tag must be 4 ASCII bytes, got {tag:?}"
+        );
+        debug_assert!(
+            self.sections.iter().all(|(t, _)| t != tag),
+            "duplicate section tag {tag:?}"
+        );
+        self.sections.push((tag.to_string(), payload));
+    }
+
+    /// Serialize the complete file image (header + sections + footer).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload_len: usize = self.sections.iter().map(|(_, p)| p.len() + 16).sum();
+        let mut buf = Vec::with_capacity(32 + payload_len + 8);
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        buf.extend_from_slice(&self.kind.tag());
+        buf.extend_from_slice(&self.rounds_completed.to_le_bytes());
+        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        let header_crc = crc32(&buf);
+        buf.extend_from_slice(&header_crc.to_le_bytes());
+        for (tag, payload) in &self.sections {
+            let start = buf.len();
+            buf.extend_from_slice(tag.as_bytes());
+            buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            // CRC covers tag + length + payload so a flipped tag or
+            // length byte is caught, not just payload corruption.
+            let crc =
+                crc32_fold(crc32_fold(CRC_INIT, &buf[start..]), payload) ^ CRC_INIT;
+            buf.extend_from_slice(&crc.to_le_bytes());
+            buf.extend_from_slice(payload);
+        }
+        buf.extend_from_slice(&FOOTER);
+        buf
+    }
+
+    /// Write the checkpoint to `path` atomically: serialize to
+    /// `path.tmp`, `fsync` the file, `rename` over `path`, then
+    /// best-effort `fsync` the containing directory so the rename
+    /// itself is durable. A crash at any point leaves `path` either
+    /// absent, the previous complete file, or the new complete file.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes();
+        let tmp = path.with_extension("tmp");
+        {
+            use std::io::Write as _;
+            let mut f = std::fs::File::create(&tmp).map_err(|e| {
+                Error::Persist(format!("cannot create {}: {e}", tmp.display()))
+            })?;
+            f.write_all(&bytes)
+                .map_err(|e| Error::Persist(format!("write {}: {e}", tmp.display())))?;
+            f.sync_all()
+                .map_err(|e| Error::Persist(format!("fsync {}: {e}", tmp.display())))?;
+        }
+        std::fs::rename(&tmp, path).map_err(|e| {
+            Error::Persist(format!(
+                "rename {} -> {}: {e}",
+                tmp.display(),
+                path.display()
+            ))
+        })?;
+        if let Some(parent) = path.parent() {
+            if let Ok(dir) = std::fs::File::open(parent) {
+                let _ = dir.sync_all();
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Parses and validates one checkpoint file. Construction fails — it
+/// never yields partial data — on bad magic, an unsupported format
+/// version, any checksum mismatch, a short read, a missing footer, or
+/// trailing garbage. Unknown section tags are kept (and listable via
+/// [`CheckpointReader::sections`]) but otherwise ignored, which is what
+/// makes adding sections a forward-compatible change.
+///
+/// # Examples
+///
+/// ```
+/// use flowrs::persist::{CheckpointKind, CheckpointReader, CheckpointWriter};
+///
+/// let path = std::env::temp_dir().join("flowrs-reader-doctest.flwr");
+/// let mut w = CheckpointWriter::new(CheckpointKind::Server, 7);
+/// w.section("DATA", vec![1, 2, 3]);
+/// w.write_atomic(&path).unwrap();
+///
+/// let r = CheckpointReader::read(&path).unwrap();
+/// assert_eq!(r.rounds_completed(), 7);
+/// assert_eq!(r.section("DATA").unwrap(), [1, 2, 3].as_slice());
+/// assert!(r.section("GONE").is_err());
+///
+/// // corruption anywhere in the file is a clean load error
+/// let mut bytes = std::fs::read(&path).unwrap();
+/// bytes.truncate(bytes.len() - 1);
+/// assert!(CheckpointReader::from_bytes(&bytes).is_err());
+/// # std::fs::remove_file(&path).ok();
+/// ```
+pub struct CheckpointReader {
+    kind: CheckpointKind,
+    format_version: u32,
+    rounds_completed: u64,
+    sections: Vec<(String, Vec<u8>)>,
+}
+
+impl CheckpointReader {
+    /// Read and validate the checkpoint at `path`.
+    pub fn read(path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Persist(format!("cannot read {}: {e}", path.display())))?;
+        Self::from_bytes(&bytes)
+            .map_err(|e| Error::Persist(format!("{}: {e}", path.display())))
+    }
+
+    /// Parse a checkpoint from an in-memory byte image.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self> {
+        let mut d = Dec::new(buf);
+        if d.take(8)? != MAGIC.as_slice() {
+            return Err(Error::Persist("not a flowrs checkpoint (bad magic)".into()));
+        }
+        let format_version = d.u32()?;
+        if format_version == 0 || format_version > FORMAT_VERSION {
+            return Err(Error::Persist(format!(
+                "unsupported checkpoint format version {format_version} \
+                 (this build reads versions 1..={FORMAT_VERSION})"
+            )));
+        }
+        let kind = CheckpointKind::from_tag(d.take(4)?)?;
+        let rounds_completed = d.u64()?;
+        let section_count = d.u32()?;
+        let header_crc = d.u32()?;
+        if crc32(&buf[..28]) != header_crc {
+            return Err(Error::Persist("header checksum mismatch".into()));
+        }
+        let mut sections = Vec::with_capacity((section_count as usize).min(64));
+        for _ in 0..section_count {
+            let tag_bytes = d.take(4)?;
+            let tag = std::str::from_utf8(tag_bytes)
+                .map_err(|_| Error::Persist("non-UTF-8 section tag".into()))?
+                .to_string();
+            let len_bytes = d.take(8)?;
+            let len = u64::from_le_bytes([
+                len_bytes[0],
+                len_bytes[1],
+                len_bytes[2],
+                len_bytes[3],
+                len_bytes[4],
+                len_bytes[5],
+                len_bytes[6],
+                len_bytes[7],
+            ]) as usize;
+            let crc = d.u32()?;
+            let payload = d.take(len)?;
+            let state = crc32_fold(
+                crc32_fold(crc32_fold(CRC_INIT, tag_bytes), len_bytes),
+                payload,
+            );
+            if state ^ CRC_INIT != crc {
+                return Err(Error::Persist(format!(
+                    "section {tag:?} checksum mismatch"
+                )));
+            }
+            sections.push((tag, payload.to_vec()));
+        }
+        if d.take(8)? != FOOTER.as_slice() {
+            return Err(Error::Persist(
+                "checkpoint footer missing (truncated write?)".into(),
+            ));
+        }
+        d.done()?;
+        Ok(CheckpointReader { kind, format_version, rounds_completed, sections })
+    }
+
+    /// What wrote this checkpoint (engine vs. live server).
+    pub fn kind(&self) -> CheckpointKind {
+        self.kind
+    }
+
+    /// The container-format version the file was written with.
+    pub fn format_version(&self) -> u32 {
+        self.format_version
+    }
+
+    /// Rounds / model versions completed when the checkpoint was taken.
+    pub fn rounds_completed(&self) -> u64 {
+        self.rounds_completed
+    }
+
+    /// A required section's payload; errors if the tag is absent.
+    pub fn section(&self, tag: &str) -> Result<&[u8]> {
+        self.opt_section(tag).ok_or_else(|| {
+            Error::Persist(format!("checkpoint is missing section {tag:?}"))
+        })
+    }
+
+    /// An optional section's payload.
+    pub fn opt_section(&self, tag: &str) -> Option<&[u8]> {
+        self.sections
+            .iter()
+            .find(|(t, _)| t == tag)
+            .map(|(_, p)| p.as_slice())
+    }
+
+    /// Every section tag with its payload size in bytes (in file
+    /// order) — what `flowrs ckpt inspect` prints.
+    pub fn sections(&self) -> impl Iterator<Item = (&str, usize)> {
+        self.sections.iter().map(|(t, p)| (t.as_str(), p.len()))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Directory protocol
+// ---------------------------------------------------------------------------
+
+/// A directory of checkpoints, one file per checkpointed round
+/// (`ckpt-<rounds, zero-padded>.flwr`). Writes go through
+/// [`CheckpointWriter::write_atomic`]; reads resolve to the newest
+/// *valid* file, skipping (with a warning) any file that fails
+/// validation — so a crash mid-write degrades to the previous
+/// checkpoint instead of a corrupt resume.
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    /// Open (creating if necessary) the checkpoint directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).map_err(|e| {
+            Error::Persist(format!("cannot create {}: {e}", dir.display()))
+        })?;
+        Ok(CheckpointStore { dir })
+    }
+
+    /// The directory this store reads and writes.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// The canonical file path for a checkpoint taken after
+    /// `rounds_completed` rounds (zero-padded so lexicographic order is
+    /// numeric order).
+    pub fn path_for(&self, rounds_completed: u64) -> PathBuf {
+        self.dir
+            .join(format!("ckpt-{rounds_completed:010}.{EXTENSION}"))
+    }
+
+    /// Atomically write `writer`'s checkpoint into the store; returns
+    /// the final path.
+    pub fn save(&self, writer: &CheckpointWriter) -> Result<PathBuf> {
+        let path = self.path_for(writer.rounds_completed());
+        writer.write_atomic(&path)?;
+        Ok(path)
+    }
+
+    /// All checkpoint files currently in the store, oldest first.
+    pub fn list(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        let entries = std::fs::read_dir(&self.dir).map_err(|e| {
+            Error::Persist(format!("cannot list {}: {e}", self.dir.display()))
+        })?;
+        for entry in entries {
+            let path = entry
+                .map_err(|e| Error::Persist(format!("cannot list {}: {e}", self.dir.display())))?
+                .path();
+            let is_ckpt = path.extension().and_then(|e| e.to_str()) == Some(EXTENSION)
+                && path
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("ckpt-"));
+            if is_ckpt {
+                out.push(path);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// The newest checkpoint that parses and validates, or `None` if
+    /// the store holds no valid checkpoint. Invalid files (a crash
+    /// window, bit rot) are skipped with a warning — never returned.
+    pub fn latest_valid(&self) -> Result<Option<(PathBuf, CheckpointReader)>> {
+        let mut files = self.list()?;
+        files.reverse(); // newest first
+        for path in files {
+            match CheckpointReader::read(&path) {
+                Ok(reader) => return Ok(Some((path, reader))),
+                Err(e) => log::warn(&format!("skipping invalid checkpoint: {e}")),
+            }
+        }
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("flowrs-format-{tag}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // standard test vector for the IEEE polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn writer_reader_roundtrip() {
+        let mut w = CheckpointWriter::new(CheckpointKind::Engine, 42);
+        w.section("AAAA", vec![1, 2, 3]);
+        w.section("BBBB", Vec::new());
+        let bytes = w.to_bytes();
+        let r = CheckpointReader::from_bytes(&bytes).unwrap();
+        assert_eq!(r.kind(), CheckpointKind::Engine);
+        assert_eq!(r.format_version(), FORMAT_VERSION);
+        assert_eq!(r.rounds_completed(), 42);
+        assert_eq!(r.section("AAAA").unwrap(), [1u8, 2, 3].as_slice());
+        assert_eq!(r.section("BBBB").unwrap(), [].as_slice());
+        assert!(r.section("CCCC").is_err());
+        assert!(r.opt_section("CCCC").is_none());
+        let listed: Vec<(String, usize)> = r
+            .sections()
+            .map(|(t, n)| (t.to_string(), n))
+            .collect();
+        assert_eq!(listed, vec![("AAAA".into(), 3), ("BBBB".into(), 0)]);
+    }
+
+    #[test]
+    fn every_truncation_fails_cleanly() {
+        let mut w = CheckpointWriter::new(CheckpointKind::Server, 5);
+        w.section("DATA", (0..200u8).collect());
+        let bytes = w.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                CheckpointReader::from_bytes(&bytes[..cut]).is_err(),
+                "truncation at byte {cut} of {} parsed as valid",
+                bytes.len()
+            );
+        }
+        assert!(CheckpointReader::from_bytes(&bytes).is_ok());
+    }
+
+    #[test]
+    fn every_single_byte_flip_fails_cleanly() {
+        let mut w = CheckpointWriter::new(CheckpointKind::Engine, 9);
+        w.section("DATA", vec![7; 64]);
+        let bytes = w.to_bytes();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x5A;
+            assert!(
+                CheckpointReader::from_bytes(&bad).is_err(),
+                "flip at byte {i} parsed as valid"
+            );
+        }
+    }
+
+    #[test]
+    fn atomic_write_leaves_no_temp_file() {
+        let dir = tmp("atomic");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt-0000000001.flwr");
+        let mut w = CheckpointWriter::new(CheckpointKind::Engine, 1);
+        w.section("DATA", vec![1]);
+        w.write_atomic(&path).unwrap();
+        assert!(path.exists());
+        assert!(!path.with_extension("tmp").exists());
+        CheckpointReader::read(&path).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_resolves_newest_valid_and_skips_corrupt() {
+        let dir = tmp("store");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::open(&dir).unwrap();
+        for round in [1u64, 2, 3] {
+            let mut w = CheckpointWriter::new(CheckpointKind::Engine, round);
+            w.section("DATA", vec![round as u8]);
+            store.save(&w).unwrap();
+        }
+        assert_eq!(store.list().unwrap().len(), 3);
+        let (path, r) = store.latest_valid().unwrap().unwrap();
+        assert_eq!(r.rounds_completed(), 3);
+        // corrupt the newest: the store must fall back to round 2
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        let (_, r) = store.latest_valid().unwrap().unwrap();
+        assert_eq!(r.rounds_completed(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_store_is_none() {
+        let dir = tmp("empty");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::open(&dir).unwrap();
+        assert!(store.latest_valid().unwrap().is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

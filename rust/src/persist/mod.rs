@@ -1,0 +1,51 @@
+//! Persistent checkpoint / resume for long-running federations.
+//!
+//! The paper's setting is flaky edge populations coordinated by one
+//! server — and a coordinator that loses its global model state on a
+//! restart is itself the weakest device in the federation. This
+//! subsystem makes server-side state durable:
+//!
+//! * [`format`](self) — a versioned, CRC-guarded section container
+//!   ([`CheckpointWriter`] / [`CheckpointReader`]) written atomically
+//!   (temp file → fsync → rename), plus the [`CheckpointStore`]
+//!   directory protocol that always resolves to the newest *valid*
+//!   file. A truncation at any byte offset fails to load cleanly —
+//!   property-tested in `rust/tests/persist_e2e.rs`. The byte layout is
+//!   documented in `rust/src/persist/FORMAT.md`.
+//! * [`EngineCheckpoint`] — a [`crate::sched::Engine`] snapshot at a
+//!   flush boundary: per-device scheduler history, policy RNG position,
+//!   trainer numerics, virtual clocks, the in-flight dispatch manifest
+//!   and the exact availability-index state. Kill a sync or async
+//!   engine run at round *k*, resume it, and the selection / accuracy
+//!   trace is **bit-identical** to the uninterrupted run.
+//! * [`ServerCheckpoint`] — the live server's durable state
+//!   (parameters, [`crate::server::History`], whole-run
+//!   [`crate::server::AsyncStats`], selection-hook observations and
+//!   the selection policy's RNG position). In-flight exchanges are
+//!   real threads, so a resumed server re-dispatches instead of
+//!   restoring them; resume refuses a sync/async mode flip or a
+//!   parameter-shape mismatch.
+//!
+//! Wiring: `checkpoint_dir` / `checkpoint_every_rounds` / `resume_from`
+//! knobs on [`crate::config::ExperimentConfig`],
+//! [`crate::config::ScheduleConfig`] and
+//! [`crate::server::ServerConfig`]; `--checkpoint-dir` /
+//! `--checkpoint-every` / `--resume` flags on `flowrs sim` and
+//! `flowrs sched`; and `flowrs ckpt inspect <file|dir>` pretty-prints a
+//! checkpoint's header and round summary.
+#![deny(missing_docs)]
+
+mod format;
+mod state;
+
+pub use format::{
+    crc32, CheckpointKind, CheckpointReader, CheckpointStore, CheckpointWriter, EXTENSION,
+    FOOTER, FORMAT_VERSION, MAGIC,
+};
+pub use state::{
+    decode_population_rounds, decode_round_records, load_engine_checkpoint,
+    load_server_checkpoint, resolve_checkpoint, ClientStatRecord, DeviceState, EngineCheckpoint,
+    InFlightDispatch, ParamTensor, ServerCheckpoint,
+};
+
+pub(crate) use format::{Dec, Enc};

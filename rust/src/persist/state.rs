@@ -1,0 +1,841 @@
+//! What a checkpoint *contains*: typed snapshots of the engine and the
+//! live server, with their section codecs.
+//!
+//! Two checkpoint kinds exist (see [`super::CheckpointKind`]):
+//!
+//! * [`EngineCheckpoint`] — a [`crate::sched::Engine`] at a flush
+//!   boundary. Captures everything the engine's trajectory depends on
+//!   beyond the (re-synthesizable) config: the per-device scheduler
+//!   history (loss / last-selected / fairness counters), the selection
+//!   policy's RNG position, the trainer's numeric state, the virtual
+//!   clocks, the in-flight dispatch manifest, and the availability
+//!   index's exact internal state. Restoring it replays the
+//!   uninterrupted run bit-identically (locked by e2e tests).
+//! * [`ServerCheckpoint`] — the live server's durable state: global
+//!   [`Parameters`], the full round [`History`], whole-run
+//!   [`AsyncStats`], the selection hook's per-client observations and
+//!   its RNG position (so cohort selection continues its stream).
+//!   In-flight fit exchanges are real threads and cannot be persisted;
+//!   a resumed server re-dispatches instead (their results were counted
+//!   as `drained` when the original run stopped, so the accounting
+//!   identity still holds across the kill).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::proto::{Parameters, Tensor};
+use crate::sched::availability::IndexState;
+use crate::sched::engine::PopulationRound;
+use crate::server::{AsyncStats, History, RoundRecord};
+use crate::util::rng::RngState;
+
+use super::format::{
+    CheckpointKind, CheckpointReader, CheckpointStore, CheckpointWriter, Dec, Enc,
+};
+
+// Section tags (4 ASCII bytes each; see FORMAT.md).
+const SEC_META: &str = "META";
+const SEC_DEVICES: &str = "POPS";
+const SEC_RNG: &str = "PRNG";
+const SEC_TRAINER: &str = "TRNR";
+const SEC_IN_FLIGHT: &str = "INFL";
+const SEC_INDEX: &str = "INDX";
+const SEC_ENGINE_ROUNDS: &str = "ERND";
+const SEC_PARAMS: &str = "PARM";
+const SEC_SERVER_META: &str = "SMET";
+const SEC_SERVER_ROUNDS: &str = "SRND";
+const SEC_STATS: &str = "STAT";
+const SEC_CLIENTS: &str = "CLST";
+
+// ---------------------------------------------------------------------------
+// Engine checkpoint
+// ---------------------------------------------------------------------------
+
+/// One virtual device's mutable scheduler state (everything else about
+/// a device — profile, data size, availability cycle — re-synthesizes
+/// deterministically from the config).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct DeviceState {
+    /// Most recent train loss the device reported.
+    pub last_loss: Option<f64>,
+    /// Round / version in which the device was last selected.
+    pub last_selected_round: Option<u64>,
+    /// Lifetime selection count (fairness policies cap this).
+    pub times_selected: u64,
+}
+
+/// One dispatch still in flight when the checkpoint was taken: the
+/// modeled resolution event, verbatim. Restoring re-queues it, so a
+/// resumed streaming run *re-settles* the outstanding work instead of
+/// losing it — and settles it at exactly the virtual times the
+/// uninterrupted run would have.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InFlightDispatch {
+    /// Virtual time at which the dispatch resolves.
+    pub resolve_s: f64,
+    /// Index of the device in the synthesized population.
+    pub device: u64,
+    /// Energy already prorated to the resolve point.
+    pub energy_j: f64,
+    /// Model version the dispatch was issued against.
+    pub base_version: u64,
+    /// Modeled fate: 0 = fold, 1 = deadline drop, 2 = churn drop.
+    pub outcome: u8,
+}
+
+/// A complete [`crate::sched::Engine`] snapshot at a flush boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EngineCheckpoint {
+    /// Fingerprint of the determinism-relevant config
+    /// ([`crate::config::ScheduleConfig::fingerprint`]); resume refuses
+    /// a mismatch instead of silently diverging.
+    pub fingerprint: String,
+    /// Model versions flushed (== rounds completed).
+    pub version: u64,
+    /// Report clock (cumulative virtual time).
+    pub clock_s: f64,
+    /// Event-loop virtual time.
+    pub now_s: f64,
+    /// Virtual time of the previous streaming flush.
+    pub last_flush_s: f64,
+    /// Devices online at the last availability observation.
+    pub avail_count: u64,
+    /// Per-device mutable scheduler state, population order.
+    pub devices: Vec<DeviceState>,
+    /// The selection policy's RNG position (`None` for policies that
+    /// carry no RNG — they are assumed stateless-deterministic).
+    pub policy_rng: Option<RngState>,
+    /// Opaque trainer state
+    /// ([`crate::sched::engine::CohortTrainer::checkpoint_state`]).
+    pub trainer: Vec<u8>,
+    /// Dispatches in flight (streaming mode; empty at a sync barrier).
+    pub in_flight: Vec<InFlightDispatch>,
+    /// Exact availability-index state (streaming mode only).
+    pub index: Option<IndexState>,
+    /// Every round record produced so far — the resumed report prepends
+    /// these, so a spliced trace is byte-identical to an uninterrupted
+    /// run's.
+    pub rounds: Vec<PopulationRound>,
+}
+
+impl EngineCheckpoint {
+    /// Serialize into a [`CheckpointWriter`] ready for
+    /// [`CheckpointWriter::write_atomic`] / [`CheckpointStore::save`].
+    pub fn to_writer(&self) -> CheckpointWriter {
+        let mut w = CheckpointWriter::new(CheckpointKind::Engine, self.version);
+
+        let mut meta = Enc::new();
+        meta.str(&self.fingerprint);
+        meta.u64(self.version);
+        meta.f64(self.clock_s);
+        meta.f64(self.now_s);
+        meta.f64(self.last_flush_s);
+        meta.u64(self.avail_count);
+        w.section(SEC_META, meta.into_bytes());
+
+        let mut devs = Enc::new();
+        devs.u64(self.devices.len() as u64);
+        for d in &self.devices {
+            devs.opt_f64(d.last_loss);
+            devs.opt_u64(d.last_selected_round);
+            devs.u64(d.times_selected);
+        }
+        w.section(SEC_DEVICES, devs.into_bytes());
+
+        let mut rng = Enc::new();
+        match &self.policy_rng {
+            Some(s) => {
+                rng.bool(true);
+                for word in s.s {
+                    rng.u64(word);
+                }
+                rng.opt_f64(s.spare_normal);
+            }
+            None => rng.bool(false),
+        }
+        w.section(SEC_RNG, rng.into_bytes());
+
+        let mut trainer = Enc::new();
+        trainer.bytes(&self.trainer);
+        w.section(SEC_TRAINER, trainer.into_bytes());
+
+        let mut infl = Enc::new();
+        infl.u64(self.in_flight.len() as u64);
+        for f in &self.in_flight {
+            infl.f64(f.resolve_s);
+            infl.u64(f.device);
+            infl.f64(f.energy_j);
+            infl.u64(f.base_version);
+            infl.u8(f.outcome);
+        }
+        w.section(SEC_IN_FLIGHT, infl.into_bytes());
+
+        if let Some(ix) = &self.index {
+            w.section(SEC_INDEX, encode_index_state(ix));
+        }
+
+        w.section(SEC_ENGINE_ROUNDS, encode_population_rounds(&self.rounds));
+        w
+    }
+
+    /// Decode from a validated [`CheckpointReader`] (kind must be
+    /// [`CheckpointKind::Engine`]).
+    pub fn from_reader(r: &CheckpointReader) -> Result<Self> {
+        if r.kind() != CheckpointKind::Engine {
+            return Err(Error::Persist(format!(
+                "expected an engine checkpoint, found {:?}",
+                r.kind()
+            )));
+        }
+        let mut meta = Dec::new(r.section(SEC_META)?);
+        let fingerprint = meta.str()?;
+        let version = meta.u64()?;
+        let clock_s = meta.f64()?;
+        let now_s = meta.f64()?;
+        let last_flush_s = meta.f64()?;
+        let avail_count = meta.u64()?;
+        meta.done()?;
+
+        let mut devs = Dec::new(r.section(SEC_DEVICES)?);
+        let n = devs.count("device")?;
+        let mut devices = Vec::with_capacity(n);
+        for _ in 0..n {
+            devices.push(DeviceState {
+                last_loss: devs.opt_f64()?,
+                last_selected_round: devs.opt_u64()?,
+                times_selected: devs.u64()?,
+            });
+        }
+        devs.done()?;
+
+        let mut rng = Dec::new(r.section(SEC_RNG)?);
+        let policy_rng = if rng.bool()? {
+            let mut s = [0u64; 4];
+            for word in &mut s {
+                *word = rng.u64()?;
+            }
+            Some(RngState { s, spare_normal: rng.opt_f64()? })
+        } else {
+            None
+        };
+        rng.done()?;
+
+        let mut tr = Dec::new(r.section(SEC_TRAINER)?);
+        let trainer = tr.bytes()?;
+        tr.done()?;
+
+        let mut infl = Dec::new(r.section(SEC_IN_FLIGHT)?);
+        let n = infl.count("in-flight dispatch")?;
+        let mut in_flight = Vec::with_capacity(n);
+        for _ in 0..n {
+            in_flight.push(InFlightDispatch {
+                resolve_s: infl.f64()?,
+                device: infl.u64()?,
+                energy_j: infl.f64()?,
+                base_version: infl.u64()?,
+                outcome: infl.u8()?,
+            });
+        }
+        infl.done()?;
+
+        let index = match r.opt_section(SEC_INDEX) {
+            Some(buf) => Some(decode_index_state(buf)?),
+            None => None,
+        };
+        let rounds = decode_population_rounds(r.section(SEC_ENGINE_ROUNDS)?)?;
+        Ok(EngineCheckpoint {
+            fingerprint,
+            version,
+            clock_s,
+            now_s,
+            last_flush_s,
+            avail_count,
+            devices,
+            policy_rng,
+            trainer,
+            in_flight,
+            index,
+            rounds,
+        })
+    }
+}
+
+fn encode_index_state(ix: &IndexState) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.f64(ix.now_s);
+    e.u64(ix.online.len() as u64);
+    for &b in &ix.online {
+        e.bool(b);
+    }
+    e.u64(ix.busy.len() as u64);
+    for &b in &ix.busy {
+        e.bool(b);
+    }
+    e.u64(ix.idle_online.len() as u64);
+    for &d in &ix.idle_online {
+        e.u32(d);
+    }
+    e.f64(ix.wheel_width_s);
+    e.u64(ix.wheel_cursor_window);
+    e.u64(ix.wheel_buckets.len() as u64);
+    for bucket in &ix.wheel_buckets {
+        e.u64(bucket.len() as u64);
+        for &(t, d) in bucket {
+            e.f64(t);
+            e.u32(d);
+        }
+    }
+    e.into_bytes()
+}
+
+fn decode_index_state(buf: &[u8]) -> Result<IndexState> {
+    let mut d = Dec::new(buf);
+    let now_s = d.f64()?;
+    let n = d.count("index online flag")?;
+    let mut online = Vec::with_capacity(n);
+    for _ in 0..n {
+        online.push(d.bool()?);
+    }
+    let n = d.count("index busy flag")?;
+    let mut busy = Vec::with_capacity(n);
+    for _ in 0..n {
+        busy.push(d.bool()?);
+    }
+    let n = d.count("index free-list entry")?;
+    let mut idle_online = Vec::with_capacity(n);
+    for _ in 0..n {
+        idle_online.push(d.u32()?);
+    }
+    let wheel_width_s = d.f64()?;
+    let wheel_cursor_window = d.u64()?;
+    let n = d.count("wheel bucket")?;
+    let mut wheel_buckets = Vec::with_capacity(n);
+    for _ in 0..n {
+        let m = d.count("wheel entry")?;
+        let mut bucket = Vec::with_capacity(m);
+        for _ in 0..m {
+            let t = d.f64()?;
+            let dev = d.u32()?;
+            bucket.push((t, dev));
+        }
+        wheel_buckets.push(bucket);
+    }
+    d.done()?;
+    Ok(IndexState {
+        now_s,
+        online,
+        busy,
+        idle_online,
+        wheel_width_s,
+        wheel_cursor_window,
+        wheel_buckets,
+    })
+}
+
+fn encode_population_rounds(rounds: &[PopulationRound]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(rounds.len() as u64);
+    for r in rounds {
+        e.u64(r.round);
+        e.u64(r.available as u64);
+        e.u64(r.selected as u64);
+        e.u64(r.completed as u64);
+        e.u64(r.dropped_deadline as u64);
+        e.u64(r.dropped_churn as u64);
+        e.f64(r.train_loss);
+        e.f64(r.eval_loss);
+        e.f64(r.accuracy);
+        e.u64(r.steps);
+        e.f64(r.round_time_s);
+        e.f64(r.cum_time_s);
+        e.f64(r.round_energy_j);
+        e.f64(r.wasted_energy_j);
+        e.f64(r.mean_staleness);
+        e.u64(r.max_staleness);
+        e.u64(r.in_flight as u64);
+    }
+    e.into_bytes()
+}
+
+/// Decode the engine round-trace section (also used by
+/// `flowrs ckpt inspect` to pretty-print a checkpoint's history).
+pub fn decode_population_rounds(buf: &[u8]) -> Result<Vec<PopulationRound>> {
+    let mut d = Dec::new(buf);
+    let n = d.count("population round")?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(PopulationRound {
+            round: d.u64()?,
+            available: d.u64()? as usize,
+            selected: d.u64()? as usize,
+            completed: d.u64()? as usize,
+            dropped_deadline: d.u64()? as usize,
+            dropped_churn: d.u64()? as usize,
+            train_loss: d.f64()?,
+            eval_loss: d.f64()?,
+            accuracy: d.f64()?,
+            steps: d.u64()?,
+            round_time_s: d.f64()?,
+            cum_time_s: d.f64()?,
+            round_energy_j: d.f64()?,
+            wasted_energy_j: d.f64()?,
+            mean_staleness: d.f64()?,
+            max_staleness: d.u64()?,
+            in_flight: d.u64()? as usize,
+        });
+    }
+    d.done()?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Server checkpoint
+// ---------------------------------------------------------------------------
+
+/// One parameter tensor, flattened for storage (f32 only — the server
+/// always holds full-precision parameters; f16 exists on the wire
+/// only).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamTensor {
+    /// Row-major shape.
+    pub shape: Vec<u64>,
+    /// Flat f32 payload.
+    pub data: Vec<f32>,
+}
+
+/// The selection hook's per-client observations, keyed by client id.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClientStatRecord {
+    /// Client id (stable across reconnects).
+    pub id: String,
+    /// Most recent finite train loss.
+    pub last_loss: Option<f64>,
+    /// Round in which the client was last selected.
+    pub last_selected_round: Option<u64>,
+    /// Lifetime selection count.
+    pub times_selected: u64,
+}
+
+/// A live-server snapshot at a flush boundary (see the module docs for
+/// what is and is not captured).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerCheckpoint {
+    /// Which loop wrote the checkpoint: `true` = streaming (FedBuff
+    /// versions), `false` = barrier rounds. Resume refuses a mode flip
+    /// — continuing an async version history with barrier rounds (or
+    /// vice versa) would silently change the records' semantics.
+    pub streaming: bool,
+    /// The selection hook's RNG position, when a policy is installed
+    /// and carries one — restored on resume so the cohort-selection
+    /// stream continues instead of replaying from its seed.
+    pub policy_rng: Option<RngState>,
+    /// Global model parameters at the checkpointed version.
+    pub params: Vec<ParamTensor>,
+    /// Every round / version record produced so far.
+    pub history: Vec<RoundRecord>,
+    /// Whole-run accounting at the checkpoint instant.
+    pub stats: AsyncStats,
+    /// Per-client selection observations, sorted by id (so identical
+    /// state always serializes to identical bytes).
+    pub clients: Vec<ClientStatRecord>,
+}
+
+impl ServerCheckpoint {
+    /// Capture a checkpoint from the execution core's live state.
+    /// Fails if any parameter tensor is not f32 (the server never holds
+    /// quantized parameters; the wire compressor is a strategy wrapper).
+    pub fn capture(
+        streaming: bool,
+        policy_rng: Option<RngState>,
+        params: &Parameters,
+        history: &History,
+        stats: AsyncStats,
+        mut clients: Vec<ClientStatRecord>,
+    ) -> Result<Self> {
+        let mut tensors = Vec::with_capacity(params.tensors.len());
+        for t in &params.tensors {
+            tensors.push(ParamTensor {
+                shape: t.shape.iter().map(|&d| d as u64).collect(),
+                data: t.as_f32()?.to_vec(),
+            });
+        }
+        clients.sort_by(|a, b| a.id.cmp(&b.id));
+        Ok(ServerCheckpoint {
+            streaming,
+            policy_rng,
+            params: tensors,
+            history: history.rounds.clone(),
+            stats,
+            clients,
+        })
+    }
+
+    /// Rebuild the [`Parameters`] container.
+    pub fn parameters(&self) -> Result<Parameters> {
+        let mut tensors = Vec::with_capacity(self.params.len());
+        for t in &self.params {
+            tensors.push(Tensor::f32(
+                t.shape.iter().map(|&d| d as usize).collect(),
+                t.data.clone(),
+            )?);
+        }
+        Ok(Parameters { tensors })
+    }
+
+    /// Serialize into a [`CheckpointWriter`].
+    pub fn to_writer(&self) -> CheckpointWriter {
+        let mut w = CheckpointWriter::new(CheckpointKind::Server, self.history.len() as u64);
+
+        let mut meta = Enc::new();
+        meta.bool(self.streaming);
+        match &self.policy_rng {
+            Some(s) => {
+                meta.bool(true);
+                for word in s.s {
+                    meta.u64(word);
+                }
+                meta.opt_f64(s.spare_normal);
+            }
+            None => meta.bool(false),
+        }
+        w.section(SEC_SERVER_META, meta.into_bytes());
+
+        let mut parm = Enc::new();
+        parm.u64(self.params.len() as u64);
+        for t in &self.params {
+            parm.u64(t.shape.len() as u64);
+            for &d in &t.shape {
+                parm.u64(d);
+            }
+            parm.f32s(&t.data);
+        }
+        w.section(SEC_PARAMS, parm.into_bytes());
+
+        w.section(SEC_SERVER_ROUNDS, encode_round_records(&self.history));
+
+        let mut stat = Enc::new();
+        stat.u64(self.stats.dispatched);
+        stat.u64(self.stats.folded);
+        stat.u64(self.stats.flushed);
+        stat.u64(self.stats.failures);
+        stat.u64(self.stats.discarded);
+        stat.u64(self.stats.drained);
+        w.section(SEC_STATS, stat.into_bytes());
+
+        let mut cl = Enc::new();
+        cl.u64(self.clients.len() as u64);
+        for c in &self.clients {
+            cl.str(&c.id);
+            cl.opt_f64(c.last_loss);
+            cl.opt_u64(c.last_selected_round);
+            cl.u64(c.times_selected);
+        }
+        w.section(SEC_CLIENTS, cl.into_bytes());
+        w
+    }
+
+    /// Decode from a validated [`CheckpointReader`] (kind must be
+    /// [`CheckpointKind::Server`]).
+    pub fn from_reader(r: &CheckpointReader) -> Result<Self> {
+        if r.kind() != CheckpointKind::Server {
+            return Err(Error::Persist(format!(
+                "expected a server checkpoint, found {:?}",
+                r.kind()
+            )));
+        }
+        let mut meta = Dec::new(r.section(SEC_SERVER_META)?);
+        let streaming = meta.bool()?;
+        let policy_rng = if meta.bool()? {
+            let mut s = [0u64; 4];
+            for word in &mut s {
+                *word = meta.u64()?;
+            }
+            Some(RngState { s, spare_normal: meta.opt_f64()? })
+        } else {
+            None
+        };
+        meta.done()?;
+
+        let mut parm = Dec::new(r.section(SEC_PARAMS)?);
+        let n = parm.count("parameter tensor")?;
+        let mut params = Vec::with_capacity(n);
+        for _ in 0..n {
+            let rank = parm.count("tensor dim")?;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                shape.push(parm.u64()?);
+            }
+            params.push(ParamTensor { shape, data: parm.f32s()? });
+        }
+        parm.done()?;
+
+        let history = decode_round_records(r.section(SEC_SERVER_ROUNDS)?)?;
+
+        let mut stat = Dec::new(r.section(SEC_STATS)?);
+        let stats = AsyncStats {
+            dispatched: stat.u64()?,
+            folded: stat.u64()?,
+            flushed: stat.u64()?,
+            failures: stat.u64()?,
+            discarded: stat.u64()?,
+            drained: stat.u64()?,
+        };
+        stat.done()?;
+
+        let mut cl = Dec::new(r.section(SEC_CLIENTS)?);
+        let n = cl.count("client stat")?;
+        let mut clients = Vec::with_capacity(n);
+        for _ in 0..n {
+            clients.push(ClientStatRecord {
+                id: cl.str()?,
+                last_loss: cl.opt_f64()?,
+                last_selected_round: cl.opt_u64()?,
+                times_selected: cl.u64()?,
+            });
+        }
+        cl.done()?;
+        Ok(ServerCheckpoint { streaming, policy_rng, params, history, stats, clients })
+    }
+}
+
+fn encode_round_records(records: &[RoundRecord]) -> Vec<u8> {
+    let mut e = Enc::new();
+    e.u64(records.len() as u64);
+    for r in records {
+        e.u64(r.round);
+        e.u64(r.fit_selected as u64);
+        e.u64(r.fit_completed as u64);
+        e.u64(r.fit_failures as u64);
+        e.f64(r.train_loss);
+        e.f64(r.eval_loss);
+        e.f64(r.accuracy);
+        e.f64(r.round_time_s);
+        e.f64(r.cum_time_s);
+        e.f64(r.round_energy_j);
+        e.f64(r.cum_energy_j);
+        e.u64(r.steps);
+        e.u64(r.truncated_clients as u64);
+        e.u64(r.down_bytes as u64);
+        e.u64(r.up_bytes as u64);
+        e.f64(r.mean_staleness);
+        e.u64(r.max_staleness);
+        e.u64(r.concurrency as u64);
+        e.u64(r.fit_discarded as u64);
+    }
+    e.into_bytes()
+}
+
+/// Decode the server round-trace section (also used by
+/// `flowrs ckpt inspect`).
+pub fn decode_round_records(buf: &[u8]) -> Result<Vec<RoundRecord>> {
+    let mut d = Dec::new(buf);
+    let n = d.count("round record")?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(RoundRecord {
+            round: d.u64()?,
+            fit_selected: d.u64()? as usize,
+            fit_completed: d.u64()? as usize,
+            fit_failures: d.u64()? as usize,
+            train_loss: d.f64()?,
+            eval_loss: d.f64()?,
+            accuracy: d.f64()?,
+            round_time_s: d.f64()?,
+            cum_time_s: d.f64()?,
+            round_energy_j: d.f64()?,
+            cum_energy_j: d.f64()?,
+            steps: d.u64()?,
+            truncated_clients: d.u64()? as usize,
+            down_bytes: d.u64()? as usize,
+            up_bytes: d.u64()? as usize,
+            mean_staleness: d.f64()?,
+            max_staleness: d.u64()?,
+            concurrency: d.u64()? as usize,
+            fit_discarded: d.u64()? as usize,
+        });
+    }
+    d.done()?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Resolution helpers (file-or-directory arguments)
+// ---------------------------------------------------------------------------
+
+/// Resolve a checkpoint argument: a file path loads that exact file; a
+/// directory loads its newest valid checkpoint via [`CheckpointStore`].
+pub fn resolve_checkpoint(path: &Path) -> Result<(PathBuf, CheckpointReader)> {
+    if path.is_dir() {
+        CheckpointStore::open(path)?.latest_valid()?.ok_or_else(|| {
+            Error::Persist(format!(
+                "no valid checkpoint found in {}",
+                path.display()
+            ))
+        })
+    } else {
+        Ok((path.to_path_buf(), CheckpointReader::read(path)?))
+    }
+}
+
+/// Load an [`EngineCheckpoint`] from a file or directory argument.
+pub fn load_engine_checkpoint(path: &Path) -> Result<EngineCheckpoint> {
+    let (resolved, reader) = resolve_checkpoint(path)?;
+    EngineCheckpoint::from_reader(&reader)
+        .map_err(|e| Error::Persist(format!("{}: {e}", resolved.display())))
+}
+
+/// Load a [`ServerCheckpoint`] from a file or directory argument.
+pub fn load_server_checkpoint(path: &Path) -> Result<ServerCheckpoint> {
+    let (resolved, reader) = resolve_checkpoint(path)?;
+    ServerCheckpoint::from_reader(&reader)
+        .map_err(|e| Error::Persist(format!("{}: {e}", resolved.display())))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine_ckpt() -> EngineCheckpoint {
+        EngineCheckpoint {
+            fingerprint: "schedule-v1:test".into(),
+            version: 4,
+            clock_s: 123.5,
+            now_s: 125.25,
+            last_flush_s: 120.0,
+            avail_count: 37,
+            devices: vec![
+                DeviceState { last_loss: Some(1.5), last_selected_round: Some(3), times_selected: 2 },
+                DeviceState::default(),
+            ],
+            policy_rng: Some(RngState { s: [1, 2, 3, 4], spare_normal: Some(-0.75) }),
+            trainer: vec![9, 8, 7],
+            in_flight: vec![InFlightDispatch {
+                resolve_s: 130.0,
+                device: 1,
+                energy_j: 42.0,
+                base_version: 4,
+                outcome: 0,
+            }],
+            index: Some(IndexState {
+                now_s: 125.25,
+                online: vec![true, false],
+                busy: vec![false, true],
+                idle_online: vec![0],
+                wheel_width_s: 10.0,
+                wheel_cursor_window: 12,
+                wheel_buckets: vec![vec![(131.0, 1)], Vec::new()],
+            }),
+            rounds: vec![PopulationRound {
+                round: 4,
+                available: 37,
+                selected: 8,
+                completed: 8,
+                train_loss: 1.25,
+                eval_loss: 2.0,
+                accuracy: 0.25,
+                steps: 64,
+                round_time_s: 30.0,
+                cum_time_s: 123.5,
+                round_energy_j: 500.0,
+                mean_staleness: 0.5,
+                max_staleness: 2,
+                in_flight: 1,
+                ..Default::default()
+            }],
+        }
+    }
+
+    #[test]
+    fn engine_checkpoint_roundtrips_exactly() {
+        let ck = engine_ckpt();
+        let bytes = ck.to_writer().to_bytes();
+        let reader = CheckpointReader::from_bytes(&bytes).unwrap();
+        assert_eq!(reader.kind(), CheckpointKind::Engine);
+        assert_eq!(reader.rounds_completed(), 4);
+        let back = EngineCheckpoint::from_reader(&reader).unwrap();
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.devices, ck.devices);
+        assert_eq!(back.policy_rng, ck.policy_rng);
+        assert_eq!(back.in_flight, ck.in_flight);
+        assert_eq!(back.index, ck.index);
+        assert_eq!(back.trainer, ck.trainer);
+        // f64 fields round-trip bit-exactly
+        assert_eq!(back.clock_s.to_bits(), ck.clock_s.to_bits());
+        assert_eq!(back.rounds[0].accuracy.to_bits(), ck.rounds[0].accuracy.to_bits());
+        assert_eq!(back, ck);
+    }
+
+    #[test]
+    fn engine_checkpoint_nan_losses_survive() {
+        let mut ck = engine_ckpt();
+        ck.rounds[0].train_loss = f64::NAN;
+        let bytes = ck.to_writer().to_bytes();
+        let back =
+            EngineCheckpoint::from_reader(&CheckpointReader::from_bytes(&bytes).unwrap()).unwrap();
+        assert!(back.rounds[0].train_loss.is_nan());
+        assert_eq!(
+            back.rounds[0].train_loss.to_bits(),
+            ck.rounds[0].train_loss.to_bits()
+        );
+    }
+
+    #[test]
+    fn server_checkpoint_roundtrips_exactly() {
+        let params = Parameters::from_flat(vec![1.0, -2.5, 3.25]);
+        let mut history = History::default();
+        history.push(RoundRecord {
+            round: 1,
+            fit_selected: 4,
+            fit_completed: 3,
+            fit_failures: 1,
+            accuracy: 0.1,
+            round_time_s: 13.0,
+            round_energy_j: 400.0,
+            ..Default::default()
+        });
+        let stats = AsyncStats { dispatched: 4, folded: 3, flushed: 3, failures: 1, ..Default::default() };
+        let clients = vec![
+            ClientStatRecord {
+                id: "b".into(),
+                last_loss: Some(0.5),
+                last_selected_round: Some(1),
+                times_selected: 1,
+            },
+            ClientStatRecord { id: "a".into(), last_loss: None, last_selected_round: None, times_selected: 0 },
+        ];
+        let rng = Some(RngState { s: [9, 8, 7, 6], spare_normal: None });
+        let ck = ServerCheckpoint::capture(true, rng, &params, &history, stats, clients).unwrap();
+        // capture sorts clients by id for deterministic bytes
+        assert_eq!(ck.clients[0].id, "a");
+        let bytes = ck.to_writer().to_bytes();
+        let reader = CheckpointReader::from_bytes(&bytes).unwrap();
+        assert_eq!(reader.kind(), CheckpointKind::Server);
+        let back = ServerCheckpoint::from_reader(&reader).unwrap();
+        assert_eq!(back, ck);
+        assert!(back.streaming, "mode tag must round-trip");
+        assert_eq!(back.policy_rng, rng, "selection RNG position must round-trip");
+        assert_eq!(back.parameters().unwrap(), params);
+    }
+
+    #[test]
+    fn kind_mismatch_is_rejected() {
+        let ck = engine_ckpt();
+        let bytes = ck.to_writer().to_bytes();
+        let reader = CheckpointReader::from_bytes(&bytes).unwrap();
+        assert!(ServerCheckpoint::from_reader(&reader).is_err());
+    }
+
+    #[test]
+    fn capture_rejects_non_f32_parameters() {
+        let params = Parameters::from_flat(vec![1.0]).quantize_f16().unwrap();
+        assert!(ServerCheckpoint::capture(
+            false,
+            None,
+            &params,
+            &History::default(),
+            AsyncStats::default(),
+            Vec::new()
+        )
+        .is_err());
+    }
+}

@@ -17,13 +17,24 @@
 //! state-transition time plus a swap-remove free-list of idle online
 //! devices, so advancing virtual time costs O(transitions elapsed) —
 //! amortized O(1) per event — instead of an O(population) rescan.
+//!
+//! The index's complete internal state is exportable
+//! ([`AvailabilityIndex::export_state`]) and restorable
+//! ([`AvailabilityIndex::from_state`]) — byte-exactly, free-list order
+//! and wheel contents included — because the checkpoint subsystem
+//! ([`crate::persist`]) guarantees that a killed-and-resumed streaming
+//! run samples exactly the devices the uninterrupted run would have.
+#![deny(missing_docs)]
 
+use crate::error::{Error, Result};
 use crate::util::rng::Rng;
 
 /// Churn parameters: mean online / offline dwell times in seconds.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChurnSpec {
+    /// Mean online dwell (seconds).
     pub mean_on_s: f64,
+    /// Mean offline dwell (seconds).
     pub mean_off_s: f64,
 }
 
@@ -31,8 +42,11 @@ pub struct ChurnSpec {
 /// `on_s` seconds of every `on_s + off_s` period, shifted by `phase_s`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Cycle {
+    /// Online dwell length (seconds).
     pub on_s: f64,
+    /// Offline dwell length (seconds); 0 = never offline.
     pub off_s: f64,
+    /// Phase shift of the cycle at t = 0 (seconds).
     pub phase_s: f64,
 }
 
@@ -97,6 +111,8 @@ pub struct ChurnModel {
 }
 
 impl ChurnModel {
+    /// Build the population-wide churn model for `spec`, seeded so the
+    /// whole schedule is reproducible.
     pub fn new(spec: ChurnSpec, seed: u64) -> Self {
         ChurnModel { seed, spec }
     }
@@ -112,6 +128,7 @@ impl ChurnModel {
         Cycle { on_s, off_s, phase_s }
     }
 
+    /// Is `device` online at virtual time `t_s`?
     pub fn is_available(&self, device: u64, t_s: f64) -> bool {
         self.cycle(device).is_on(t_s)
     }
@@ -145,12 +162,14 @@ impl ChurnModel {
 /// Explicit per-device availability trace: initial state + toggle times.
 #[derive(Debug, Clone, Default)]
 pub struct AvailabilityTrace {
+    /// State at t = 0.
     pub initially_on: bool,
     /// Strictly increasing times (s) at which the device flips state.
     pub toggles_s: Vec<f64>,
 }
 
 impl AvailabilityTrace {
+    /// Is the device online at `t_s` according to this trace?
     pub fn is_on(&self, t_s: f64) -> bool {
         let flips = self.toggles_s.partition_point(|&x| x <= t_s);
         self.initially_on ^ (flips % 2 == 1)
@@ -166,6 +185,8 @@ pub enum Availability {
 }
 
 impl Availability {
+    /// Build the model: churn when a spec is configured, always-on
+    /// otherwise.
     pub fn from_spec(spec: Option<&ChurnSpec>, seed: u64) -> Self {
         match spec {
             Some(s) => Availability::Churn(ChurnModel::new(s.clone(), seed)),
@@ -173,6 +194,7 @@ impl Availability {
         }
     }
 
+    /// The device's on/off cycle under this model.
     pub fn cycle(&self, device: u64) -> Cycle {
         match self {
             Availability::AlwaysOn => Cycle::always_on(),
@@ -368,6 +390,7 @@ impl AvailabilityIndex {
         idx
     }
 
+    /// The index's current virtual time.
     pub fn now_s(&self) -> f64 {
         self.now_s
     }
@@ -552,6 +575,100 @@ impl AvailabilityIndex {
         self.wheel.earliest()
     }
 
+    /// Export the index's complete internal state — free-list order and
+    /// raw wheel contents included — for checkpointing. Restoring the
+    /// result with [`AvailabilityIndex::from_state`] (over the same
+    /// cycles) yields an index whose every future observable —
+    /// membership, sampling order, transition processing — is
+    /// bit-identical to this one's. A canonical rebuild at the same
+    /// time would *not* be: the free-list order (which uniform sampling
+    /// consumes) and sub-epsilon wheel timestamps are functions of the
+    /// whole operation history.
+    pub fn export_state(&self) -> IndexState {
+        IndexState {
+            now_s: self.now_s,
+            online: self.online.clone(),
+            busy: self.busy.clone(),
+            idle_online: self.idle_online.clone(),
+            wheel_width_s: self.wheel.width_s,
+            wheel_cursor_window: self.wheel.cursor_window,
+            wheel_buckets: self.wheel.buckets.clone(),
+        }
+    }
+
+    /// Rebuild an index from [`AvailabilityIndex::export_state`] output
+    /// and the same cycles it was built over. Validates internal
+    /// consistency (vector lengths, free-list entries in range and
+    /// duplicate-free) so a corrupt checkpoint fails cleanly instead of
+    /// resuming into undefined behavior.
+    pub fn from_state(cycles: Vec<Cycle>, state: IndexState) -> Result<Self> {
+        let n = cycles.len();
+        if state.online.len() != n || state.busy.len() != n {
+            return Err(Error::Persist(format!(
+                "availability-index state is for {} devices, population has {n}",
+                state.online.len()
+            )));
+        }
+        if !(state.wheel_width_s > 0.0) || !state.wheel_width_s.is_finite() {
+            return Err(Error::Persist(format!(
+                "invalid wheel width {}",
+                state.wheel_width_s
+            )));
+        }
+        let mut pos = vec![NOT_LISTED; n];
+        for (j, &d) in state.idle_online.iter().enumerate() {
+            let i = d as usize;
+            if i >= n {
+                return Err(Error::Persist(format!(
+                    "free-list entry {d} out of range (population {n})"
+                )));
+            }
+            if pos[i] != NOT_LISTED {
+                return Err(Error::Persist(format!(
+                    "device {d} appears twice in the idle free-list"
+                )));
+            }
+            if !state.online[i] || state.busy[i] {
+                return Err(Error::Persist(format!(
+                    "free-list entry {d} is not idle-online (online={}, busy={})",
+                    state.online[i], state.busy[i]
+                )));
+            }
+            pos[i] = j as u32;
+        }
+        for bucket in &state.wheel_buckets {
+            for &(_, d) in bucket {
+                if d as usize >= n {
+                    return Err(Error::Persist(format!(
+                        "wheel entry for device {d} out of range (population {n})"
+                    )));
+                }
+            }
+        }
+        let buckets = if state.wheel_buckets.is_empty() {
+            vec![Vec::new()]
+        } else {
+            state.wheel_buckets
+        };
+        let len = buckets.iter().map(Vec::len).sum();
+        let wheel = TransitionWheel {
+            width_s: state.wheel_width_s,
+            buckets,
+            cursor_window: state.wheel_cursor_window,
+            len,
+        };
+        Ok(AvailabilityIndex {
+            cycles,
+            online: state.online,
+            busy: state.busy,
+            idle_online: state.idle_online,
+            pos,
+            wheel,
+            now_s: state.now_s,
+            due: Vec::new(),
+        })
+    }
+
     fn list_push(&mut self, device: u32) {
         debug_assert_eq!(self.pos[device as usize], NOT_LISTED);
         self.pos[device as usize] = self.idle_online.len() as u32;
@@ -567,6 +684,31 @@ impl AvailabilityIndex {
         }
         self.pos[device as usize] = NOT_LISTED;
     }
+}
+
+/// The complete serializable state of an [`AvailabilityIndex`]
+/// ([`AvailabilityIndex::export_state`] /
+/// [`AvailabilityIndex::from_state`]). Field order and contents mirror
+/// the index's internals verbatim — including the *unsorted* free-list
+/// and per-bucket wheel entries — because bit-identical resume depends
+/// on exactly that history-dependent state.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexState {
+    /// The index's virtual time.
+    pub now_s: f64,
+    /// Per-device online flag at `now_s`.
+    pub online: Vec<bool>,
+    /// Per-device checked-out (in-flight) flag.
+    pub busy: Vec<bool>,
+    /// The idle-online free-list, in its live (history-dependent) order.
+    pub idle_online: Vec<u32>,
+    /// Transition-wheel bucket width (seconds).
+    pub wheel_width_s: f64,
+    /// The wheel cursor's integer window index.
+    pub wheel_cursor_window: u64,
+    /// Raw wheel buckets: `(transition time, device)` entries, bucket
+    /// and in-bucket order preserved.
+    pub wheel_buckets: Vec<Vec<(f64, u32)>>,
 }
 
 #[cfg(test)]
@@ -810,6 +952,79 @@ mod tests {
             (got - expected).abs() < 1e-6,
             "next transition {got} vs expected arrival {expected}"
         );
+    }
+
+    #[test]
+    fn index_state_roundtrip_is_bit_identical_going_forward() {
+        let m = model();
+        let cycles = cycles_for(&m, 250);
+        let mut a = AvailabilityIndex::new(cycles.clone(), 0.0);
+        // build up history-dependent internal order: advance, check
+        // devices out and back in, sample
+        let mut rng = Rng::seed_from(77);
+        let mut t = 0.0;
+        for step in 0..60 {
+            t += 31.0 + (step % 7) as f64 * 11.0;
+            a.advance(t);
+            let picked = a.sample_idle(&mut rng, 4);
+            for &d in &picked {
+                a.mark_busy(d);
+            }
+            if step % 2 == 0 {
+                for &d in &picked {
+                    a.mark_idle(d);
+                }
+            }
+        }
+        let state = a.export_state();
+        let mut b = AvailabilityIndex::from_state(cycles, state.clone()).unwrap();
+        assert_eq!(b.export_state(), state, "restore must be lossless");
+        // identical sampling stream (free-list order restored exactly)
+        let mut ra = Rng::seed_from(5);
+        let mut rb = Rng::seed_from(5);
+        assert_eq!(a.sample_idle(&mut ra, 10), b.sample_idle(&mut rb, 10));
+        // identical future transitions
+        for dt in [13.0, 250.0, 777.0] {
+            t += dt;
+            a.advance(t);
+            b.advance(t);
+            assert_eq!(a.idle_online_sorted(), b.idle_online_sorted(), "diverged at t={t}");
+            assert_eq!(a.export_state(), b.export_state(), "internal state diverged at t={t}");
+        }
+    }
+
+    #[test]
+    fn index_state_validation_rejects_corruption() {
+        let m = model();
+        let cycles = cycles_for(&m, 20);
+        let idx = AvailabilityIndex::new(cycles.clone(), 0.0);
+        let good = idx.export_state();
+        // wrong population size
+        assert!(AvailabilityIndex::from_state(cycles[..10].to_vec(), good.clone()).is_err());
+        // duplicate free-list entry
+        let mut dup = good.clone();
+        if dup.idle_online.len() >= 2 {
+            dup.idle_online[1] = dup.idle_online[0];
+            assert!(AvailabilityIndex::from_state(cycles.clone(), dup).is_err());
+        }
+        // out-of-range free-list entry
+        let mut oob = good.clone();
+        oob.idle_online[0] = 999;
+        assert!(AvailabilityIndex::from_state(cycles.clone(), oob).is_err());
+        // free-list entry contradicting the busy flag (would corrupt
+        // the swap-remove invariant silently in release builds)
+        let mut busy_listed = good.clone();
+        busy_listed.busy[busy_listed.idle_online[0] as usize] = true;
+        assert!(AvailabilityIndex::from_state(cycles.clone(), busy_listed).is_err());
+        // wheel entry for a device outside the population (would panic
+        // in apply_transition on the first advance past its time)
+        let mut bad_wheel = good.clone();
+        bad_wheel.wheel_buckets[0].push((1.0, 999));
+        assert!(AvailabilityIndex::from_state(cycles.clone(), bad_wheel).is_err());
+        // broken wheel width
+        let mut bad_w = good;
+        bad_w.wheel_width_s = -1.0;
+        assert!(AvailabilityIndex::from_state(cycles, bad_w).is_err());
     }
 
     #[test]

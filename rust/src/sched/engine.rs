@@ -39,6 +39,8 @@ use std::collections::BinaryHeap;
 use crate::config::ScheduleConfig;
 use crate::device::{profiles, DeviceProfile};
 use crate::error::{Error, Result};
+use crate::persist::{CheckpointStore, DeviceState, EngineCheckpoint, InFlightDispatch};
+use crate::telemetry::log;
 use crate::util::rng::Rng;
 
 use super::availability::{Availability, AvailabilityIndex, Cycle};
@@ -183,6 +185,23 @@ pub trait CohortTrainer {
         let folds: Vec<(usize, f64)> = cohort.iter().map(|&i| (i, 1.0)).collect();
         self.train_flush(round, pop, &folds, steps_per_client)
     }
+
+    /// Checkpointing hook: serialize the trainer's mutable numeric
+    /// state (an opaque blob; format is the trainer's own). The default
+    /// `None` marks the trainer as not checkpointable — the engine then
+    /// refuses to write a checkpoint rather than writing one that
+    /// cannot restore the numerics.
+    fn checkpoint_state(&self) -> Option<Vec<u8>> {
+        None
+    }
+
+    /// Restore state captured by [`CohortTrainer::checkpoint_state`].
+    /// The default errors, matching the default `None` above.
+    fn restore_state(&mut self, _state: &[u8]) -> Result<()> {
+        Err(Error::Persist(
+            "this CohortTrainer does not support checkpoint restore".into(),
+        ))
+    }
 }
 
 /// Closed-form training stand-in for population-scale runs without AOT
@@ -239,6 +258,24 @@ impl CohortTrainer for SurrogateTrainer {
             .collect();
         Ok((losses, eval_loss, acc))
     }
+
+    /// The surrogate's whole state is its closed-form curve position:
+    /// three f64s, stored as raw bits so resume is bit-exact.
+    fn checkpoint_state(&self) -> Option<Vec<u8>> {
+        let mut e = crate::persist::Enc::new();
+        e.f64(self.progress_steps);
+        e.f64(self.ceiling);
+        e.f64(self.half_steps);
+        Some(e.into_bytes())
+    }
+
+    fn restore_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = crate::persist::Dec::new(state);
+        self.progress_steps = d.f64()?;
+        self.ceiling = d.f64()?;
+        self.half_steps = d.f64()?;
+        d.done()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -247,7 +284,7 @@ impl CohortTrainer for SurrogateTrainer {
 
 /// Everything the engine learned in one round (barrier mode) or one
 /// model version (async mode).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct PopulationRound {
     pub round: u64,
     /// Devices online at round start (sync) / at the last top-up (async,
@@ -505,6 +542,10 @@ pub struct Engine<T: CohortTrainer> {
     /// Streaming availability membership (async mode only; the barrier
     /// mode's once-per-round scan stays exact and allocation-free).
     index: Option<AvailabilityIndex>,
+    /// Rounds restored from a checkpoint ([`Engine::resume`]); `run`
+    /// prepends them so a resumed report splices seamlessly onto the
+    /// uninterrupted trace.
+    prior_rounds: Vec<PopulationRound>,
 }
 
 impl<T: CohortTrainer> Engine<T> {
@@ -550,6 +591,7 @@ impl<T: CohortTrainer> Engine<T> {
             events_since_flush: 0,
             rescans: 0,
             index,
+            prior_rounds: Vec::new(),
         })
     }
 
@@ -569,16 +611,47 @@ impl<T: CohortTrainer> Engine<T> {
     /// Run the configured number of rounds / model versions
     /// (early-stopping on the target accuracy, if set). One loop, both
     /// modes: each iteration advances the core to its next flush.
+    ///
+    /// With [`crate::config::ScheduleConfig::checkpoint_dir`] set, an
+    /// atomic checkpoint is written every
+    /// `checkpoint_every_rounds` flushes (and once more at exit, so the
+    /// final state is always durable). A resumed engine
+    /// ([`Engine::resume`]) prepends the checkpointed rounds, so the
+    /// returned report covers the whole logical run.
     pub fn run(mut self) -> Result<PopulationReport> {
-        let mut rounds = Vec::new();
-        while self.version < self.cfg.rounds {
+        let store = match &self.cfg.checkpoint_dir {
+            Some(dir) => Some(CheckpointStore::open(dir)?),
+            None => None,
+        };
+        let every = self.cfg.checkpoint_every_rounds.max(1);
+        let mut rounds = std::mem::take(&mut self.prior_rounds);
+        // A checkpoint for the resume point already exists on disk.
+        let mut last_saved = if self.version > 0 { Some(self.version) } else { None };
+        let mut reached = match self.cfg.target_accuracy {
+            Some(t) => rounds.last().map(|r| r.accuracy >= t).unwrap_or(false),
+            None => false,
+        };
+        while !reached && self.version < self.cfg.rounds {
             let rec = self.step_flush()?;
             let acc = rec.accuracy;
             rounds.push(rec);
             if let Some(target) = self.cfg.target_accuracy {
                 if acc >= target {
-                    break;
+                    reached = true;
                 }
+            }
+            if let Some(store) = &store {
+                if self.version % every == 0 {
+                    let path = store.save(&self.checkpoint(&rounds)?.to_writer())?;
+                    log::info(&format!("checkpoint written: {}", path.display()));
+                    last_saved = Some(self.version);
+                }
+            }
+        }
+        if let Some(store) = &store {
+            if last_saved != Some(self.version) {
+                let path = store.save(&self.checkpoint(&rounds)?.to_writer())?;
+                log::info(&format!("final checkpoint written: {}", path.display()));
             }
         }
         Ok(PopulationReport {
@@ -1080,6 +1153,168 @@ impl<T: CohortTrainer> Engine<T> {
         self.now_s += (t_next - self.now_s).max(1e-6);
         Ok(())
     }
+
+    // -----------------------------------------------------------------
+    // Checkpoint / resume
+    // -----------------------------------------------------------------
+
+    /// Capture a complete engine snapshot at the current flush boundary
+    /// (`rounds` is the trace produced so far; it rides along so the
+    /// resumed report can splice onto the uninterrupted one). Errors if
+    /// called mid-round — a barrier round is open or folds are
+    /// buffered — or if the trainer does not support checkpointing.
+    ///
+    /// What makes the snapshot *sufficient* for bit-identical resume:
+    /// population synthesis is a pure function of the config (only the
+    /// mutable per-device tails are captured), the policy contributes
+    /// its RNG position, the trainer its numeric state, and the
+    /// streaming mode additionally contributes the in-flight dispatch
+    /// manifest (re-queued verbatim on resume, so outstanding work is
+    /// re-settled, not lost) and the availability index's exact
+    /// internal state (free-list order included — uniform sampling
+    /// consumes it).
+    pub fn checkpoint(&self, rounds: &[PopulationRound]) -> Result<EngineCheckpoint> {
+        if self.round_open || !self.buffer.is_empty() {
+            return Err(Error::Persist(
+                "engine checkpoints are only valid at a flush boundary".into(),
+            ));
+        }
+        let trainer = self.trainer.checkpoint_state().ok_or_else(|| {
+            Error::Persist(
+                "this CohortTrainer does not support checkpointing \
+                 (checkpoint_state returned None)"
+                    .into(),
+            )
+        })?;
+        let mut in_flight: Vec<InFlightDispatch> = self
+            .heap
+            .iter()
+            .map(|rev| {
+                let c = &rev.0;
+                InFlightDispatch {
+                    resolve_s: c.resolve_s,
+                    device: c.device_idx as u64,
+                    energy_j: c.energy_j,
+                    base_version: c.base_version,
+                    outcome: match c.outcome {
+                        Outcome::Fold => 0,
+                        Outcome::DropDeadline => 1,
+                        Outcome::DropChurn => 2,
+                    },
+                }
+            })
+            .collect();
+        // (resolve_s, device) is unique — a device is never in flight
+        // twice — so this order is canonical and the restored heap pops
+        // in exactly the original sequence.
+        in_flight.sort_by(|a, b| a.resolve_s.total_cmp(&b.resolve_s).then(a.device.cmp(&b.device)));
+        Ok(EngineCheckpoint {
+            fingerprint: self.cfg.fingerprint(),
+            version: self.version,
+            clock_s: self.clock_s,
+            now_s: self.now_s,
+            last_flush_s: self.last_flush_s,
+            avail_count: self.avail_count as u64,
+            devices: self
+                .pop
+                .devices
+                .iter()
+                .map(|d| DeviceState {
+                    last_loss: d.last_loss,
+                    last_selected_round: d.last_selected_round,
+                    times_selected: d.times_selected,
+                })
+                .collect(),
+            policy_rng: self.policy.rng_state(),
+            trainer,
+            in_flight,
+            index: self.index.as_ref().map(|ix| ix.export_state()),
+            rounds: rounds.to_vec(),
+        })
+    }
+
+    /// Rebuild an engine from a checkpoint and continue where it left
+    /// off: [`Engine::run`] then produces rounds `version+1..` and
+    /// prepends the checkpointed trace, bit-identical to the
+    /// uninterrupted run (locked by the kill-at-round-k e2e tests).
+    /// The config must fingerprint-match the checkpointed one
+    /// ([`crate::config::ScheduleConfig::fingerprint`]); `rounds`,
+    /// `target_accuracy`, `name` and the checkpoint knobs may differ.
+    pub fn resume(cfg: &ScheduleConfig, trainer: T, ckpt: &EngineCheckpoint) -> Result<Self> {
+        let mut e = Engine::new(cfg, trainer)?;
+        let fp = cfg.fingerprint();
+        if fp != ckpt.fingerprint {
+            return Err(Error::Persist(format!(
+                "checkpoint config mismatch: the checkpoint was written under\n  {}\nbut this run is configured as\n  {fp}",
+                ckpt.fingerprint
+            )));
+        }
+        if ckpt.devices.len() != e.pop.devices.len() {
+            return Err(Error::Persist(format!(
+                "checkpoint has {} devices, population synthesized {}",
+                ckpt.devices.len(),
+                e.pop.devices.len()
+            )));
+        }
+        for (d, s) in e.pop.devices.iter_mut().zip(&ckpt.devices) {
+            d.last_loss = s.last_loss;
+            d.last_selected_round = s.last_selected_round;
+            d.times_selected = s.times_selected;
+        }
+        if let Some(state) = &ckpt.policy_rng {
+            e.policy.restore_rng(state);
+        }
+        e.trainer.restore_state(&ckpt.trainer)?;
+        e.version = ckpt.version;
+        e.clock_s = ckpt.clock_s;
+        e.now_s = ckpt.now_s;
+        e.last_flush_s = ckpt.last_flush_s;
+        e.avail_count = ckpt.avail_count as usize;
+        match (e.mode, &ckpt.index) {
+            (ExecMode::Async { .. }, Some(state)) => {
+                let cycles: Vec<Cycle> = e.pop.devices.iter().map(|d| d.cycle).collect();
+                e.index = Some(AvailabilityIndex::from_state(cycles, state.clone())?);
+            }
+            (ExecMode::Sync, None) => {}
+            _ => {
+                return Err(Error::Persist(
+                    "checkpoint execution mode (sync/async) does not match the config".into(),
+                ))
+            }
+        }
+        if e.mode == ExecMode::Sync && !ckpt.in_flight.is_empty() {
+            return Err(Error::Persist(
+                "sync checkpoint carries in-flight dispatches".into(),
+            ));
+        }
+        for f in &ckpt.in_flight {
+            if f.device as usize >= e.pop.devices.len() {
+                return Err(Error::Persist(format!(
+                    "in-flight dispatch for device {} out of range",
+                    f.device
+                )));
+            }
+            e.heap.push(Reverse(Completion {
+                resolve_s: f.resolve_s,
+                device_idx: f.device as usize,
+                energy_j: f.energy_j,
+                base_version: f.base_version,
+                outcome: match f.outcome {
+                    0 => Outcome::Fold,
+                    1 => Outcome::DropDeadline,
+                    2 => Outcome::DropChurn,
+                    other => {
+                        return Err(Error::Persist(format!(
+                            "unknown in-flight outcome tag {other}"
+                        )))
+                    }
+                },
+            }));
+        }
+        e.in_flight = e.heap.len();
+        e.prior_rounds = ckpt.rounds.clone();
+        Ok(e)
+    }
 }
 
 #[cfg(test)]
@@ -1329,6 +1564,64 @@ mod tests {
             Engine::new(&cfg().buffered(8), SurrogateTrainer::default()).unwrap();
         assert!(streaming.run_round(1).is_err());
         assert!(streaming.run_version().is_ok());
+    }
+
+    #[test]
+    fn sync_checkpoint_resume_replays_rounds_bit_identically() {
+        let c = cfg().rounds(6);
+        let full = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        // "kill" at round 3: checkpoint, then resume into a fresh engine
+        let mut e = Engine::new(&c, SurrogateTrainer::default()).unwrap();
+        let mut rounds = Vec::new();
+        for r in 1..=3 {
+            rounds.push(e.run_round(r).unwrap());
+        }
+        let ck = e.checkpoint(&rounds).unwrap();
+        assert!(ck.in_flight.is_empty(), "sync boundary has nothing in flight");
+        assert!(ck.index.is_none(), "sync engines carry no index");
+        let resumed = Engine::resume(&c, SurrogateTrainer::default(), &ck)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(resumed.to_csv(), full.to_csv());
+    }
+
+    #[test]
+    fn async_checkpoint_resume_replays_versions_bit_identically() {
+        let c = cfg().buffered(8).rounds(8).seed(23);
+        let full = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        let mut e = Engine::new(&c, SurrogateTrainer::default()).unwrap();
+        let mut rounds = Vec::new();
+        for _ in 0..4 {
+            rounds.push(e.run_version().unwrap());
+        }
+        let ck = e.checkpoint(&rounds).unwrap();
+        assert!(
+            !ck.in_flight.is_empty(),
+            "a streaming flush boundary should carry in-flight dispatches"
+        );
+        assert!(ck.index.is_some(), "streaming engines persist their index");
+        let resumed = Engine::resume(&c, SurrogateTrainer::default(), &ck)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(resumed.to_csv(), full.to_csv());
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_or_mode_flipped_config() {
+        let c = cfg();
+        let mut e = Engine::new(&c, SurrogateTrainer::default()).unwrap();
+        let rec = e.run_round(1).unwrap();
+        let ck = e.checkpoint(&[rec]).unwrap();
+        // different seed → different trajectory → refused
+        assert!(Engine::resume(&cfg().seed(999), SurrogateTrainer::default(), &ck).is_err());
+        // sync checkpoint into an async config → refused
+        assert!(Engine::resume(&cfg().buffered(8), SurrogateTrainer::default(), &ck).is_err());
+        // rounds / name / target may differ freely
+        let mut extended = cfg().rounds(50).named("extended");
+        extended.target_accuracy = Some(0.9);
+        assert!(Engine::resume(&extended, SurrogateTrainer::default(), &ck).is_ok());
     }
 
     #[test]

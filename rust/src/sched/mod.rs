@@ -39,7 +39,7 @@ pub mod engine;
 pub mod policy;
 
 pub use availability::{
-    Availability, AvailabilityIndex, AvailabilityTrace, ChurnModel, ChurnSpec, Cycle,
+    Availability, AvailabilityIndex, AvailabilityTrace, ChurnModel, ChurnSpec, Cycle, IndexState,
 };
 pub use engine::{
     CohortTrainer, Engine, ExecMode, Population, PopulationReport, PopulationRound,

@@ -29,7 +29,7 @@
 use crate::device::DeviceProfile;
 use crate::sched::availability::AvailabilityIndex;
 use crate::sim::cost::CostModel;
-use crate::util::rng::Rng;
+use crate::util::rng::{Rng, RngState};
 
 /// Everything a policy may consult about the round being scheduled.
 #[derive(Debug, Clone, Copy)]
@@ -99,6 +99,19 @@ pub trait SelectionPolicy: Send {
     ) -> Option<Vec<u32>> {
         None
     }
+
+    /// Checkpointing hook: the policy's RNG position, if it carries
+    /// one. The default `None` marks the policy as stateless — the
+    /// checkpoint subsystem ([`crate::persist`]) then persists nothing
+    /// for it and assumes its decisions are a pure function of the
+    /// candidates. Every built-in policy overrides this.
+    fn rng_state(&self) -> Option<RngState> {
+        None
+    }
+
+    /// Restore the RNG position captured by
+    /// [`SelectionPolicy::rng_state`]. A no-op for stateless policies.
+    fn restore_rng(&mut self, _state: &RngState) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -148,6 +161,14 @@ impl SelectionPolicy for UniformRandom {
     ) -> Option<Vec<u32>> {
         Some(index.sample_idle(&mut self.rng, want))
     }
+
+    fn rng_state(&self) -> Option<RngState> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng(&mut self, state: &RngState) {
+        self.rng = Rng::restore(state);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -191,6 +212,14 @@ impl SelectionPolicy for DeadlineAware {
             feasible.extend(late.iter().take(need).map(|&(_, i)| i));
         }
         feasible
+    }
+
+    fn rng_state(&self) -> Option<RngState> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng(&mut self, state: &RngState) {
+        self.rng = Rng::restore(state);
     }
 }
 
@@ -283,6 +312,14 @@ impl SelectionPolicy for UtilityBased {
         }
         picked
     }
+
+    fn rng_state(&self) -> Option<RngState> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng(&mut self, state: &RngState) {
+        self.rng = Rng::restore(state);
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -343,6 +380,14 @@ impl SelectionPolicy for FairnessCap {
             eligible.extend(capped.iter().take(need).map(|&(_, i)| i));
         }
         eligible
+    }
+
+    fn rng_state(&self) -> Option<RngState> {
+        Some(self.rng.state())
+    }
+
+    fn restore_rng(&mut self, state: &RngState) {
+        self.rng = Rng::restore(state);
     }
 }
 
@@ -529,6 +574,28 @@ mod tests {
         // both uncapped devices plus the two least-selected capped ones
         assert!(picked.contains(&0) && picked.contains(&1), "{picked:?}");
         assert!(picked.contains(&2) && picked.contains(&3), "{picked:?}");
+    }
+
+    #[test]
+    fn rng_state_roundtrip_replays_selection() {
+        let m = CostModel::default();
+        let cands = mixed_candidates();
+        let c = ctx(&m, 4, Some(200.0));
+        let policies: Vec<Box<dyn SelectionPolicy>> = vec![
+            Box::new(UniformRandom::new(3)),
+            Box::new(DeadlineAware::new(3)),
+            Box::new(UtilityBased::new(3)),
+            Box::new(FairnessCap::new(3)),
+        ];
+        for mut p in policies {
+            // burn a draw so the captured state is mid-stream
+            let _ = p.select(&c, &cands);
+            let state = p.rng_state().expect("built-in policies expose their RNG");
+            let first = p.select(&c, &cands);
+            p.restore_rng(&state);
+            let replay = p.select(&c, &cands);
+            assert_eq!(first, replay, "{} did not replay after restore", p.name());
+        }
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! The synchronous [`super::Server`] dispatches a cohort and waits for
 //! the slowest participant before aggregating — the straggler tax the
 //! paper quantifies. [`AsyncServer`] runs the *same* execution core
-//! ([`super::exec::ExecCore`]) in streaming mode: up to
+//! (`super::exec::ExecCore`) in streaming mode: up to
 //! `max_concurrency` fit requests stay outstanding, results fold into
 //! the configured [`AsyncStrategy`] buffer **as they arrive**, and every
 //! flush emits a new model version. Each flush appends a
@@ -36,18 +36,19 @@ use std::sync::Arc;
 
 use crate::error::Result;
 use crate::proto::Parameters;
+use crate::sched::policy::SelectionPolicy;
 use crate::sim::cost::CostModel;
 use crate::strategy::AsyncStrategy;
 
 use super::client_manager::ClientManager;
 use super::exec::{Brain, ExecCore};
 use super::history::History;
-use super::ServerConfig;
+use super::{SelectionHints, ServerConfig};
 
 pub use super::exec::AsyncStats;
 
 /// The asynchronous FL server — the streaming-mode façade over
-/// [`super::exec::ExecCore`]. `config.num_rounds` counts model versions
+/// `super::exec::ExecCore`. `config.num_rounds` counts model versions
 /// (buffer flushes); `config.max_concurrency` bounds outstanding
 /// dispatches (0 = every registered client); `config.steps_per_round` is
 /// the modeled local-step count used for virtual-time accounting of each
@@ -66,6 +67,26 @@ impl AsyncServer {
     ) -> Self {
         let core = ExecCore::new(Arc::clone(&manager), Brain::Async(strategy), cost, config);
         AsyncServer { manager, core }
+    }
+
+    /// Delegate streaming top-up to a [`SelectionPolicy`] from the
+    /// `sched` subsystem — the same hook [`super::Server`] exposes for
+    /// barrier cohorts. Every time a window slot frees, the policy
+    /// chooses which idle client fills it: uniform policies sample the
+    /// roster's availability index directly
+    /// ([`SelectionPolicy::select_streaming`], O(want)); scoring
+    /// policies get the materialized candidate view. Bound the window
+    /// with `config.max_concurrency` — with an unbounded window every
+    /// idle client is dispatched and the policy has nothing to decide.
+    /// `hints.target_cohort` is ignored here (the window *is* the
+    /// cohort).
+    pub fn with_selection(
+        mut self,
+        policy: Box<dyn SelectionPolicy>,
+        hints: SelectionHints,
+    ) -> Self {
+        self.core.set_selection(policy, hints);
+        self
     }
 
     /// Whole-run accounting (valid after [`AsyncServer::run`] returns).
@@ -179,6 +200,117 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+    }
+
+    #[test]
+    fn async_selection_hook_bounds_window_and_keeps_identity() {
+        use crate::sched::policy::UniformRandom;
+        use crate::server::SelectionHints;
+
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 4);
+        let mut server = AsyncServer::new(
+            Arc::clone(&manager),
+            fedbuff(2),
+            CostModel::default(),
+            ServerConfig {
+                num_rounds: 6,
+                quorum: 4,
+                max_concurrency: 2,
+                steps_per_round: 8,
+                ..Default::default()
+            },
+        )
+        .with_selection(
+            Box::new(UniformRandom::new(17)),
+            SelectionHints { target_cohort: 2, deadline_s: None, steps_per_round: 8 },
+        );
+        let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        assert_eq!(history.rounds.len(), 6);
+        for r in &history.rounds {
+            assert!(
+                r.concurrency <= 2,
+                "window exceeded max_concurrency: {r:?}"
+            );
+        }
+        let s = server.stats();
+        assert_eq!(s.dispatched, s.folded + s.failures + s.discarded + s.drained);
+        assert_eq!(s.flushed, 2 * 6);
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn async_checkpoint_resume_continues_versions() {
+        let dir = std::env::temp_dir().join(format!(
+            "flowrs-async-server-ckpt-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // phase 1: 3 versions with checkpointing on
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 4);
+        let mut server = AsyncServer::new(
+            Arc::clone(&manager),
+            fedbuff(2),
+            CostModel::default(),
+            ServerConfig {
+                num_rounds: 3,
+                quorum: 4,
+                steps_per_round: 8,
+                checkpoint_dir: Some(dir.clone()),
+                ..Default::default()
+            },
+        );
+        let h1 = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        assert_eq!(h1.rounds.len(), 3);
+        for t in threads {
+            t.join().unwrap();
+        }
+        let s1 = server.stats();
+        assert_eq!(s1.dispatched, s1.folded + s1.failures + s1.discarded + s1.drained);
+
+        // phase 2: fresh cohort, resume to 6 versions
+        let manager = Arc::new(ClientManager::new());
+        let threads = spawn_fake_cohort(&manager, 4);
+        let mut server = AsyncServer::new(
+            Arc::clone(&manager),
+            fedbuff(2),
+            CostModel::default(),
+            ServerConfig {
+                num_rounds: 6,
+                quorum: 4,
+                steps_per_round: 8,
+                resume_from: Some(dir.clone()),
+                ..Default::default()
+            },
+        );
+        let h2 = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+        assert_eq!(h2.rounds.len(), 6);
+        // the restored prefix is the killed run's history, verbatim
+        for (a, b) in h1.rounds.iter().zip(&h2.rounds) {
+            assert_eq!(a.round, b.round);
+            assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+            assert_eq!(a.fit_completed, b.fit_completed);
+        }
+        // parameters carried over: accuracy keeps growing monotonically
+        // (every fold adds +1 to the params in this fake cohort)
+        assert!(
+            h2.rounds[3].accuracy > h1.rounds[2].accuracy,
+            "resume restarted from scratch: {:.3} !> {:.3}",
+            h2.rounds[3].accuracy,
+            h1.rounds[2].accuracy
+        );
+        // restored + new accounting still satisfies the identity
+        let s2 = server.stats();
+        assert_eq!(s2.dispatched, s2.folded + s2.failures + s2.discarded + s2.drained);
+        assert!(s2.dispatched > s1.dispatched);
+        for t in threads {
+            t.join().unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! deployments start the server first, then check devices out of the AWS
 //! farm.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -17,6 +18,8 @@ use crate::strategy::ClientHandle;
 pub struct ClientManager {
     clients: Mutex<Vec<Arc<ClientProxy>>>,
     arrived: Condvar,
+    /// Bumped on every membership change (see [`ClientManager::generation`]).
+    generation: AtomicU64,
 }
 
 impl ClientManager {
@@ -30,13 +33,28 @@ impl ClientManager {
         let mut clients = self.clients.lock().expect("manager lock");
         clients.retain(|c| c.handle.id != proxy.handle.id);
         clients.push(proxy);
+        self.generation.fetch_add(1, Ordering::Release);
         self.arrived.notify_all();
     }
 
     /// Remove a client by id (connection dropped).
     pub fn unregister(&self, id: &str) {
         let mut clients = self.clients.lock().expect("manager lock");
+        let before = clients.len();
         clients.retain(|c| c.handle.id != id);
+        if clients.len() != before {
+            self.generation.fetch_add(1, Ordering::Release);
+        }
+    }
+
+    /// Monotone membership-change counter: bumped on every register and
+    /// every effective unregister (a reconnect under the same id counts
+    /// — it is a *new* proxy). The streaming execution core compares
+    /// this against its cached roster so it only rebuilds its
+    /// per-client index when membership actually changed, instead of
+    /// re-scanning the registry on every event.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
     }
 
     pub fn len(&self) -> usize {
@@ -130,6 +148,24 @@ mod tests {
         m.register(proxy("a"));
         m.register(proxy("a"));
         assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn generation_tracks_effective_membership_changes() {
+        let m = ClientManager::new();
+        let g0 = m.generation();
+        m.register(proxy("a"));
+        let g1 = m.generation();
+        assert!(g1 > g0, "register must bump the generation");
+        // a reconnect under the same id is a new proxy → bump
+        m.register(proxy("a"));
+        let g2 = m.generation();
+        assert!(g2 > g1);
+        // removing a client that isn't registered is a no-op
+        m.unregister("ghost");
+        assert_eq!(m.generation(), g2);
+        m.unregister("a");
+        assert!(m.generation() > g2);
     }
 
     #[test]

@@ -2,22 +2,22 @@
 //! state machine behind both [`super::Server`] (barrier rounds) and
 //! [`super::AsyncServer`] (FedBuff streaming).
 //!
-//! Both façades drive the same [`ExecCore`]:
+//! Both façades drive the same `ExecCore`:
 //!
 //! * **quorum / shutdown** — one prologue (wait for the minimum cohort)
 //!   and one epilogue (drain in-flight work, then a reconnect sweep that
 //!   log-and-continues past dead connections) for both modes;
 //! * **dispatch** — every fit request is a spawned exchange thread
-//!   ([`spawn_fit`]); the barrier loop joins them all before
+//!   (`spawn_fit`); the barrier loop joins them all before
 //!   aggregating, the streaming loop joins each at its modeled
 //!   virtual-time completion;
-//! * **settlement** — one classifier ([`classify`]) decides the fate of
+//! * **settlement** — one classifier (`classify`) decides the fate of
 //!   every outcome in both modes: *folded* (usable result from a
 //!   still-registered connection), *discarded* (the exact proxy
 //!   deregistered — or reconnected as a new proxy — mid-flight; counted
 //!   exactly once), or *failed* (error status, empty result, or a
 //!   transport error, which also drops the connection);
-//! * **accounting** — one accumulator ([`FitAcc`]) feeds
+//! * **accounting** — one accumulator (`FitAcc`) feeds
 //!   [`RoundRecord`]s in both modes, and the whole-run [`AsyncStats`]
 //!   identity `dispatched == folded + failures + discarded + drained`
 //!   holds for barrier rounds exactly as it does for streaming.
@@ -28,6 +28,22 @@
 //! dispatch (download + steps × t_step + upload) and consumes them in
 //! virtual-time order — deterministic regardless of real thread
 //! scheduling, exactly like [`crate::sched::Engine`].
+//!
+//! Two cross-cutting facilities live here too:
+//!
+//! * **selection** — both modes accept a
+//!   [`SelectionPolicy`] hook. The barrier mode delegates each round's
+//!   cohort; the streaming mode tops its in-flight window up through
+//!   [`SelectionPolicy::select_streaming`] over a `StreamRoster` —
+//!   an always-on [`AvailabilityIndex`] across registered clients,
+//!   rebuilt only when [`ClientManager::generation`] says membership
+//!   changed — so the server shares the engine's O(want) fast path
+//!   instead of re-scanning the registry on every event;
+//! * **checkpointing** — with [`ServerConfig::checkpoint_dir`] set,
+//!   each history push writes an atomic [`crate::persist`] checkpoint
+//!   (parameters + history + [`AsyncStats`] + selection observations),
+//!   and [`ServerConfig::resume_from`] restores one before round 1.
+#![deny(missing_docs)]
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
@@ -37,8 +53,12 @@ use std::time::Duration;
 
 use crate::client::keys;
 use crate::error::{Error, Result};
+use crate::persist::{
+    load_server_checkpoint, CheckpointStore, ClientStatRecord, ServerCheckpoint,
+};
 use crate::proto::scalar::ConfigExt;
 use crate::proto::{EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+use crate::sched::availability::{AvailabilityIndex, Cycle};
 use crate::sched::policy::{Candidate, SelectionContext, SelectionPolicy};
 use crate::sim::cost::CostModel;
 use crate::strategy::{AsyncStrategy, ClientHandle, EvalSummary, Strategy};
@@ -122,6 +142,74 @@ struct InFlight {
     bytes_down: usize,
     modeled_energy_j: f64,
     join: JoinHandle<Result<FitRes>>,
+}
+
+/// The streaming loop's registry view: one slot per registered client,
+/// backed by an always-on [`AvailabilityIndex`] whose free-list tracks
+/// which clients are idle (no fit outstanding). Top-up then samples
+/// that free-list — O(want) for uniform policies via
+/// [`SelectionPolicy::select_streaming`], O(idle) materialized for
+/// scoring policies — instead of re-scanning the whole registry (and
+/// re-building a busy set) on every event. The roster rebuilds only
+/// when [`ClientManager::generation`] reports a membership change.
+struct StreamRoster {
+    /// Manager generation the roster was built at (`u64::MAX` forces
+    /// the first build).
+    generation: u64,
+    /// Slot → proxy, in registration order.
+    proxies: Vec<Arc<ClientProxy>>,
+    /// Always-on index over the slots; busy = fit outstanding.
+    index: AvailabilityIndex,
+    /// Proxy identity (pointer) → slot. In-flight `Arc`s keep proxies
+    /// alive, so a pointer uniquely identifies a proxy for as long as
+    /// its dispatch is outstanding.
+    slot_by_ptr: HashMap<usize, u32>,
+}
+
+impl StreamRoster {
+    fn new() -> Self {
+        StreamRoster {
+            generation: u64::MAX,
+            proxies: Vec::new(),
+            index: AvailabilityIndex::new(Vec::new(), 0.0),
+            slot_by_ptr: HashMap::new(),
+        }
+    }
+
+    fn ptr_key(proxy: &Arc<ClientProxy>) -> usize {
+        Arc::as_ptr(proxy) as usize
+    }
+
+    /// Rebuild from the live registry, re-marking clients with an
+    /// outstanding dispatch as busy. Clients that deregistered simply
+    /// drop out (their in-flight result is classified on arrival);
+    /// clients that registered mid-run get an idle slot and join the
+    /// rotation at the next top-up.
+    fn rebuild(&mut self, manager: &ClientManager, in_flight: &HashMap<u64, InFlight>) {
+        self.generation = manager.generation();
+        self.proxies = manager.snapshot();
+        let n = self.proxies.len();
+        self.index = AvailabilityIndex::new(vec![Cycle::always_on(); n], 0.0);
+        self.slot_by_ptr = self
+            .proxies
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (Self::ptr_key(p), i as u32))
+            .collect();
+        for fl in in_flight.values() {
+            if let Some(&slot) = self.slot_by_ptr.get(&Self::ptr_key(&fl.proxy)) {
+                self.index.mark_busy(slot);
+            }
+        }
+    }
+
+    /// Return a settled dispatch's slot to the idle pool (no-op if the
+    /// client deregistered while the fit was outstanding).
+    fn settle(&mut self, proxy: &Arc<ClientProxy>) {
+        if let Some(&slot) = self.slot_by_ptr.get(&Self::ptr_key(proxy)) {
+            self.index.mark_idle(slot);
+        }
+    }
 }
 
 /// How one settled exchange is accounted.
@@ -289,6 +377,11 @@ impl ExecCore {
     /// versions (or the target accuracy). Every exit — normal completion
     /// or error past quorum — goes through the graceful-shutdown
     /// epilogue, so clients always get their Reconnect.
+    ///
+    /// With `config.resume_from` set, a [`crate::persist`] server
+    /// checkpoint replaces `initial`: parameters, history, whole-run
+    /// accounting and selection observations are restored and the loop
+    /// continues at the next round / version.
     pub fn run(&mut self, initial: Parameters) -> Result<History> {
         if !self
             .manager
@@ -303,10 +396,29 @@ impl ExecCore {
         let mut params = initial;
         let mut history = History::default();
         let streaming = matches!(self.brain, Brain::Async(_));
-        let loop_result = if streaming {
-            self.run_streaming(&mut params, &mut history)
-        } else {
-            self.run_barrier(&mut params, &mut history)
+        // A refused resume is an error *past quorum*: it must still fall
+        // through to the shutdown sweep below so connected clients get
+        // their Reconnect instead of hanging on a vanished server.
+        let resume_result = match self.config.resume_from.clone() {
+            Some(path) => self.restore_from(&path, &mut params, &mut history, streaming),
+            None => Ok(()),
+        };
+        let loop_result = match resume_result {
+            Err(e) => Err(e),
+            Ok(()) => {
+                let already_done = self
+                    .config
+                    .target_accuracy
+                    .map(|t| history.rounds.last().map(|r| r.accuracy >= t).unwrap_or(false))
+                    .unwrap_or(false);
+                if already_done {
+                    Ok(())
+                } else if streaming {
+                    self.run_streaming(&mut params, &mut history)
+                } else {
+                    self.run_barrier(&mut params, &mut history)
+                }
+            }
         };
         // Graceful shutdown. A client whose connection died mid-run (or
         // that already left) makes `reconnect` fail — that must never
@@ -326,6 +438,78 @@ impl ExecCore {
     // -----------------------------------------------------------------
     // Shared pieces
     // -----------------------------------------------------------------
+
+    /// Restore a [`crate::persist`] server checkpoint: validates the
+    /// exec mode and the parameter shape against this run (refusing a
+    /// mode flip or a different model outright, like
+    /// [`crate::sched::Engine::resume`] refuses a fingerprint
+    /// mismatch), then replaces parameters, history, whole-run
+    /// accounting and selection observations.
+    fn restore_from(
+        &mut self,
+        path: &std::path::Path,
+        params: &mut Parameters,
+        history: &mut History,
+        streaming: bool,
+    ) -> Result<()> {
+        let ck = load_server_checkpoint(path)?;
+        if ck.streaming != streaming {
+            return Err(Error::Persist(format!(
+                "checkpoint mode mismatch: it was written by the {} loop but \
+                 this server runs the {} loop — continuing would silently \
+                 change the round records' semantics",
+                if ck.streaming { "streaming (async)" } else { "barrier (sync)" },
+                if streaming { "streaming (async)" } else { "barrier (sync)" },
+            )));
+        }
+        let restored = ck.parameters()?;
+        let same_shape = restored.tensors.len() == params.tensors.len()
+            && restored
+                .tensors
+                .iter()
+                .zip(&params.tensors)
+                .all(|(a, b)| a.shape == b.shape);
+        if !same_shape {
+            return Err(Error::Persist(format!(
+                "checkpoint parameter shape mismatch: the checkpoint holds \
+                 {} tensor(s) / {} bytes but this run's model wants {} \
+                 tensor(s) / {} bytes — was it written by a different model?",
+                restored.tensors.len(),
+                restored.byte_len(),
+                params.tensors.len(),
+                params.byte_len(),
+            )));
+        }
+        *params = restored;
+        // Continue the selection stream instead of replaying it from
+        // the seed (same mechanism as the engine checkpoint's PRNG
+        // section). A checkpoint without RNG state restores nothing.
+        if let (Some((policy, _)), Some(state)) = (&mut self.selector, &ck.policy_rng) {
+            policy.restore_rng(state);
+        }
+        history.rounds = ck.history;
+        self.stats = ck.stats;
+        self.client_stats = ck
+            .clients
+            .into_iter()
+            .map(|c| {
+                (
+                    c.id,
+                    ClientStat {
+                        last_loss: c.last_loss,
+                        last_selected_round: c.last_selected_round,
+                        times_selected: c.times_selected,
+                    },
+                )
+            })
+            .collect();
+        log::info(&format!(
+            "resumed from checkpoint: {} rounds done, {} parameter bytes",
+            history.rounds.len(),
+            params.byte_len()
+        ));
+        Ok(())
+    }
 
     /// Cost-aware cohort choice (barrier mode): when a selection hook is
     /// set, delegate to the policy over the full registry; otherwise the
@@ -471,7 +655,9 @@ impl ExecCore {
     // -----------------------------------------------------------------
 
     fn run_barrier(&mut self, params: &mut Parameters, history: &mut History) -> Result<()> {
-        for round in 1..=self.config.num_rounds {
+        // On resume the restored history already covers rounds 1..=k.
+        let start = history.rounds.len() as u64;
+        for round in (start + 1)..=self.config.num_rounds {
             let record = self.barrier_round(round, params)?;
             log::info(&format!(
                 "round {round:>3}: acc={:.4} loss={:.4} t={:.1}s (cum {:.1} min) E={:.1} kJ (cum {:.1} kJ){}",
@@ -489,6 +675,7 @@ impl ExecCore {
             ));
             let acc = record.accuracy;
             history.push(record);
+            self.maybe_checkpoint(&*params, &*history)?;
             if let Some(target) = self.config.target_accuracy {
                 if acc >= target {
                     log::info(&format!("target accuracy {target} reached; stopping"));
@@ -496,6 +683,40 @@ impl ExecCore {
                 }
             }
         }
+        Ok(())
+    }
+
+    /// Write an atomic checkpoint if `config.checkpoint_dir` is set and
+    /// the cadence (`config.checkpoint_every_rounds`, 0 = every flush)
+    /// says this boundary is due. Both loops call this right after each
+    /// history push — the one instant at which the aggregation buffer
+    /// is empty by construction, so parameters + history + accounting
+    /// are the complete durable state.
+    fn maybe_checkpoint(&self, params: &Parameters, history: &History) -> Result<()> {
+        let Some(dir) = &self.config.checkpoint_dir else {
+            return Ok(());
+        };
+        let done = history.rounds.len() as u64;
+        let every = self.config.checkpoint_every_rounds.max(1);
+        if done == 0 || done % every != 0 {
+            return Ok(());
+        }
+        let clients: Vec<ClientStatRecord> = self
+            .client_stats
+            .iter()
+            .map(|(id, s)| ClientStatRecord {
+                id: id.clone(),
+                last_loss: s.last_loss,
+                last_selected_round: s.last_selected_round,
+                times_selected: s.times_selected,
+            })
+            .collect();
+        let streaming = matches!(self.brain, Brain::Async(_));
+        let policy_rng = self.selector.as_ref().and_then(|(p, _)| p.rng_state());
+        let ck =
+            ServerCheckpoint::capture(streaming, policy_rng, params, history, self.stats, clients)?;
+        let path = CheckpointStore::open(dir)?.save(&ck.to_writer())?;
+        log::info(&format!("checkpoint written: {}", path.display()));
         Ok(())
     }
 
@@ -672,12 +893,18 @@ impl ExecCore {
         self.stats.dispatched += 1;
     }
 
-    /// Keep every registered, non-busy client in flight (up to
-    /// `max_concurrency`). Clients that register mid-run join the
-    /// rotation here; clients that deregistered simply stop being
-    /// re-dispatched.
+    /// Top up the streaming window from the roster's idle free-list
+    /// (up to `max_concurrency`). Without a selection hook every idle
+    /// client is dispatched, slot order (= registration order); with
+    /// one, the policy chooses — uniform policies sample the index
+    /// directly in O(want), scoring policies get the materialized
+    /// candidate view. Clients that register mid-run join the rotation
+    /// at the roster rebuild; clients that deregistered simply stop
+    /// being re-dispatched.
+    #[allow(clippy::too_many_arguments)]
     fn top_up(
         &mut self,
+        roster: &mut StreamRoster,
         version: u64,
         params: &Parameters,
         clock_s: f64,
@@ -685,6 +912,9 @@ impl ExecCore {
         heap: &mut BinaryHeap<Reverse<Pending>>,
         in_flight: &mut HashMap<u64, InFlight>,
     ) {
+        if roster.generation != self.manager.generation() {
+            roster.rebuild(&self.manager, in_flight);
+        }
         let limit = if self.config.max_concurrency == 0 {
             usize::MAX
         } else {
@@ -693,34 +923,87 @@ impl ExecCore {
         if in_flight.len() >= limit {
             return;
         }
-        let busy: HashSet<String> = in_flight
-            .values()
-            .map(|f| f.proxy.handle.id.clone())
-            .collect();
-        for proxy in self.manager.snapshot() {
-            if in_flight.len() >= limit {
-                break;
+        let want = (limit - in_flight.len()).min(roster.index.idle_online_len());
+        if want == 0 {
+            return;
+        }
+        let chosen: Vec<u32> = match &mut self.selector {
+            Some((policy, hints)) => {
+                let ctx = SelectionContext {
+                    round: version + 1,
+                    cost: &self.cost,
+                    steps_per_round: hints.steps_per_round,
+                    model_bytes: params.byte_len(),
+                    target_cohort: want,
+                    deadline_s: hints.deadline_s,
+                };
+                match policy.select_streaming(&ctx, &mut roster.index, want) {
+                    Some(devices) => devices,
+                    None => {
+                        let snapshot = roster.index.idle_online_sorted();
+                        let stats = &self.client_stats;
+                        let candidates: Vec<Candidate> = snapshot
+                            .iter()
+                            .map(|&slot| {
+                                let p = &roster.proxies[slot as usize];
+                                let stat = stats.get(&p.handle.id);
+                                Candidate {
+                                    device: p.handle.device,
+                                    num_examples: p.handle.num_examples,
+                                    last_loss: stat.and_then(|s| s.last_loss),
+                                    rounds_since_selected: stat
+                                        .and_then(|s| s.last_selected_round)
+                                        .map(|r| (version + 1).saturating_sub(r)),
+                                    times_selected: stat.map(|s| s.times_selected).unwrap_or(0),
+                                }
+                            })
+                            .collect();
+                        policy
+                            .select(&ctx, &candidates)
+                            .into_iter()
+                            .map(|j| snapshot[j])
+                            .collect()
+                    }
+                }
             }
-            if busy.contains(&proxy.handle.id) {
-                continue;
+            None => {
+                let mut all = roster.index.idle_online_sorted();
+                all.truncate(want);
+                all
+            }
+        };
+        for slot in chosen {
+            let proxy = Arc::clone(&roster.proxies[slot as usize]);
+            roster.index.mark_busy(slot);
+            if self.selector.is_some() {
+                let stat = self.client_stats.entry(proxy.handle.id.clone()).or_default();
+                stat.last_selected_round = Some(version + 1);
+                stat.times_selected += 1;
             }
             self.dispatch_streaming(proxy, version, params, clock_s, seq, heap, in_flight);
         }
     }
 
     /// The streaming loop: fold results in modeled virtual-time order,
-    /// flush a model version every K folds.
+    /// flush a model version every K folds. On resume, `history`
+    /// already holds the restored records — versions continue after
+    /// them (the virtual clock restarts at 0; round durations stay
+    /// additive through [`History::push`]).
     fn run_streaming(&mut self, params: &mut Parameters, history: &mut History) -> Result<()> {
-        let mut version: u64 = 0;
+        let mut version: u64 = history.rounds.len() as u64;
+        if version >= self.config.num_rounds {
+            return Ok(());
+        }
         let mut clock_s = 0.0f64;
         let mut last_flush_clock = 0.0f64;
         let mut seq: u64 = 0;
         let mut heap: BinaryHeap<Reverse<Pending>> = BinaryHeap::new();
         let mut in_flight: HashMap<u64, InFlight> = HashMap::new();
+        let mut roster = StreamRoster::new();
         let mut acc = FitAcc::default();
         let mut failures_since_fold = 0usize;
 
-        self.top_up(version, params, clock_s, &mut seq, &mut heap, &mut in_flight);
+        self.top_up(&mut roster, version, params, clock_s, &mut seq, &mut heap, &mut in_flight);
 
         // Every exit from this loop — normal completion or error — falls
         // through to the drain below (keeping the AsyncStats identity)
@@ -728,7 +1011,15 @@ impl ExecCore {
         let loop_result: Result<()> = loop {
             let Some(Reverse(ev)) = heap.pop() else {
                 // Nothing in flight: new clients may have registered.
-                self.top_up(version, params, clock_s, &mut seq, &mut heap, &mut in_flight);
+                self.top_up(
+                    &mut roster,
+                    version,
+                    params,
+                    clock_s,
+                    &mut seq,
+                    &mut heap,
+                    &mut in_flight,
+                );
                 if heap.is_empty() {
                     break Err(Error::Protocol(
                         "async loop: no clients available to dispatch".into(),
@@ -740,6 +1031,7 @@ impl ExecCore {
                 .remove(&ev.seq)
                 .expect("heap and in-flight map are 1:1");
             clock_s = clock_s.max(fl.finish_s);
+            roster.settle(&fl.proxy);
             let outcome = fl
                 .join
                 .join()
@@ -752,6 +1044,12 @@ impl ExecCore {
                     let staleness = version - fl.base_version;
                     let bytes_up = res.parameters.byte_len();
                     let loss = res.metrics.get_f64_or(keys::TRAIN_LOSS, f64::NAN);
+                    if self.selector.is_some() && loss.is_finite() {
+                        self.client_stats
+                            .entry(handle.id.clone())
+                            .or_default()
+                            .last_loss = Some(loss);
+                    }
                     let steps = res.metrics.get_i64_or(keys::STEPS, 0).max(0) as u64;
                     let truncated = matches!(
                         res.metrics.get(keys::TRUNCATED),
@@ -831,6 +1129,9 @@ impl ExecCore {
                             .unwrap_or(false);
                         history.push(record);
                         acc = FitAcc::default();
+                        if let Err(e) = self.maybe_checkpoint(&*params, &*history) {
+                            break Err(e);
+                        }
                         if hit_target {
                             log::info(&format!(
                                 "target accuracy reached at version {version}; stopping"
@@ -854,7 +1155,15 @@ impl ExecCore {
                     "async loop: clients failing continuously, no fold progress".into(),
                 ));
             }
-            self.top_up(version, params, clock_s, &mut seq, &mut heap, &mut in_flight);
+            self.top_up(
+                &mut roster,
+                version,
+                params,
+                clock_s,
+                &mut seq,
+                &mut heap,
+                &mut in_flight,
+            );
         };
 
         // Drain: join whatever is still in flight so no client thread is

@@ -2,7 +2,7 @@
 //! costs (modeled time + energy) that the paper's evaluation tabulates.
 
 /// Everything the server learned in one round.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RoundRecord {
     pub round: u64,
     /// clients asked to fit / that answered successfully / that failed

@@ -72,6 +72,22 @@ pub struct ServerConfig {
     /// Async loop: modeled local train steps per dispatch, used for
     /// virtual-time accounting of each in-flight exchange.
     pub steps_per_round: u64,
+    /// Write atomic server checkpoints (parameters, history, whole-run
+    /// accounting, selection observations — see [`crate::persist`]) to
+    /// this directory at round/flush boundaries. `None` = off.
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Checkpoint every N rounds / model versions (0 = every flush).
+    pub checkpoint_every_rounds: u64,
+    /// Resume from this checkpoint file (or the newest valid checkpoint
+    /// in this directory) before round 1: parameters, history,
+    /// accounting and the selection hook's RNG position are restored
+    /// and the loop continues at the next round (a mode flip or a
+    /// parameter-shape mismatch is refused). In-flight work from the
+    /// killed run was drained, not persisted — the resumed loop
+    /// re-dispatches (inner strategy state, e.g. FedAvgM momentum,
+    /// restarts fresh; the FedBuff buffer is empty at every flush
+    /// boundary by construction).
+    pub resume_from: Option<std::path::PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -87,6 +103,9 @@ impl Default for ServerConfig {
             staleness_alpha: crate::strategy::fedbuff::DEFAULT_STALENESS_ALPHA,
             max_concurrency: 0,
             steps_per_round: 8,
+            checkpoint_dir: None,
+            checkpoint_every_rounds: 0,
+            resume_from: None,
         }
     }
 }
@@ -104,7 +123,7 @@ pub struct SelectionHints {
     pub steps_per_round: u64,
 }
 
-/// The FL server — the barrier-mode façade over [`exec::ExecCore`]: one
+/// The FL server — the barrier-mode façade over `exec::ExecCore`: one
 /// buffer flush per round, zero staleness, client-reported costs.
 pub struct Server {
     pub manager: Arc<ClientManager>,
@@ -483,6 +502,171 @@ pub(crate) mod tests {
         for th in threads {
             th.join().unwrap();
         }
+    }
+
+    #[test]
+    fn barrier_checkpoint_resume_reproduces_uninterrupted_history() {
+        let dir = std::env::temp_dir().join(format!(
+            "flowrs-barrier-server-ckpt-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let run = |rounds: u64, ckpt: bool, resume: bool| -> History {
+            let manager = Arc::new(ClientManager::new());
+            let threads = spawn_fake_cohort(&manager, 2);
+            let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+            let mut server = Server::new(
+                Arc::clone(&manager),
+                Box::new(strategy),
+                CostModel::default(),
+                ServerConfig {
+                    num_rounds: rounds,
+                    quorum: 2,
+                    checkpoint_dir: ckpt.then(|| dir.clone()),
+                    resume_from: resume.then(|| dir.clone()),
+                    ..Default::default()
+                },
+            );
+            let history = server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+            for t in threads {
+                t.join().unwrap();
+            }
+            history
+        };
+
+        let full = run(5, false, false);
+        let killed = run(3, true, false); // checkpoints at rounds 1..=3
+        assert_eq!(killed.rounds.len(), 3);
+        let resumed = run(5, false, true);
+        // the fake cohort is fully deterministic, so the spliced history
+        // must be byte-identical to the uninterrupted run's
+        assert_eq!(resumed.to_csv(), full.to_csv());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn barrier_resume_continues_the_selection_rng_stream() {
+        use crate::persist::load_server_checkpoint;
+        use crate::sched::policy::UniformRandom;
+
+        let base = std::env::temp_dir().join(format!(
+            "flowrs-server-ckpt-rng-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&base);
+        let dir_full = base.join("full");
+        let dir_kr = base.join("kill-resume");
+
+        let run = |rounds: u64, ckpt: &std::path::Path, resume: bool| {
+            let manager = Arc::new(ClientManager::new());
+            let threads = spawn_fake_cohort(&manager, 3);
+            let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+            let mut server = Server::new(
+                Arc::clone(&manager),
+                Box::new(strategy),
+                CostModel::default(),
+                ServerConfig {
+                    num_rounds: rounds,
+                    quorum: 3,
+                    checkpoint_dir: Some(ckpt.to_path_buf()),
+                    resume_from: resume.then(|| ckpt.to_path_buf()),
+                    ..Default::default()
+                },
+            )
+            .with_selection(
+                Box::new(UniformRandom::new(11)),
+                SelectionHints { target_cohort: 1, deadline_s: None, steps_per_round: 8 },
+            );
+            server.run(Parameters::from_flat(vec![0.0; 4])).unwrap();
+            for t in threads {
+                t.join().unwrap();
+            }
+        };
+
+        run(5, &dir_full, false); // uninterrupted
+        run(3, &dir_kr, false); // killed at round 3
+        run(5, &dir_kr, true); // resumed to 5
+
+        // The final checkpoints must be identical in every field —
+        // including the selection policy's RNG position and the
+        // per-client times_selected counters, which only match if the
+        // resumed run *continued* the selection stream rather than
+        // replaying it from the seed.
+        let full = load_server_checkpoint(&dir_full).unwrap();
+        let resumed = load_server_checkpoint(&dir_kr).unwrap();
+        assert_eq!(full.history.len(), 5);
+        assert!(full.policy_rng.is_some(), "selection RNG must be captured");
+        assert_eq!(full, resumed);
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn resume_refuses_mode_flip_and_shape_mismatch() {
+        use crate::persist::{CheckpointStore, ServerCheckpoint};
+        use crate::server::AsyncStats;
+
+        let dir = std::env::temp_dir().join(format!(
+            "flowrs-server-ckpt-refuse-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = CheckpointStore::open(&dir).unwrap();
+
+        let run_barrier_resume = |initial_dim: usize| -> Result<History> {
+            let manager = Arc::new(ClientManager::new());
+            let threads = spawn_fake_cohort(&manager, 1);
+            let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+            let mut server = Server::new(
+                Arc::clone(&manager),
+                Box::new(strategy),
+                CostModel::default(),
+                ServerConfig {
+                    num_rounds: 2,
+                    quorum: 1,
+                    resume_from: Some(dir.clone()),
+                    ..Default::default()
+                },
+            );
+            let out = server.run(Parameters::from_flat(vec![0.0; initial_dim]));
+            // a refused resume still runs the shutdown sweep, so the
+            // fake client gets its Reconnect and the thread exits
+            for t in threads {
+                t.join().unwrap();
+            }
+            out
+        };
+
+        // a streaming-mode checkpoint must not resume a barrier server
+        let mut h = History::default();
+        h.push(RoundRecord { round: 1, accuracy: 0.1, ..Default::default() });
+        let async_ck = ServerCheckpoint::capture(
+            true,
+            None,
+            &Parameters::from_flat(vec![1.0; 4]),
+            &h,
+            AsyncStats::default(),
+            Vec::new(),
+        )
+        .unwrap();
+        store.save(&async_ck.to_writer()).unwrap();
+        let err = run_barrier_resume(4).expect_err("mode flip must be refused");
+        assert!(err.to_string().contains("mode mismatch"), "{err}");
+
+        // same mode, different parameter shape → refused too
+        let sync_ck = ServerCheckpoint::capture(
+            false,
+            None,
+            &Parameters::from_flat(vec![1.0; 8]),
+            &h,
+            AsyncStats::default(),
+            Vec::new(),
+        )
+        .unwrap();
+        store.save(&sync_ck.to_writer()).unwrap();
+        let err = run_barrier_resume(4).expect_err("shape mismatch must be refused");
+        assert!(err.to_string().contains("shape mismatch"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -255,6 +255,9 @@ pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimRe
                 max_concurrency: cfg.max_concurrency,
                 // paper workload: 8 train steps per local epoch
                 steps_per_round: cfg.epochs.max(0) as u64 * 8,
+                checkpoint_dir: cfg.checkpoint_dir.as_ref().map(std::path::PathBuf::from),
+                checkpoint_every_rounds: cfg.checkpoint_every_rounds,
+                resume_from: cfg.resume_from.as_ref().map(std::path::PathBuf::from),
                 ..Default::default()
             },
         );
@@ -270,6 +273,9 @@ pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimRe
                 quorum: cfg.num_clients,
                 target_accuracy: cfg.target_accuracy,
                 count_idle_energy: cfg.count_idle_energy,
+                checkpoint_dir: cfg.checkpoint_dir.as_ref().map(std::path::PathBuf::from),
+                checkpoint_every_rounds: cfg.checkpoint_every_rounds,
+                resume_from: cfg.resume_from.as_ref().map(std::path::PathBuf::from),
                 ..Default::default()
             },
         );

@@ -10,9 +10,12 @@
 //! [`SurrogateTrainer`], so policy comparisons (time-to-accuracy, wasted
 //! energy, hit-rate) work in any environment.
 
+use std::path::Path;
+
 use crate::config::ScheduleConfig;
 use crate::data::SyntheticSpec;
-use crate::error::Result;
+use crate::error::{Error, Result};
+use crate::persist::load_engine_checkpoint;
 use crate::runtime::Runtime;
 use crate::sched::engine::{
     CohortTrainer, Engine, Population, PopulationReport, SurrogateTrainer,
@@ -107,21 +110,62 @@ impl CohortTrainer for RuntimeCohortTrainer {
         let accuracy = correct as f64 / self.eval_y.len() as f64;
         Ok((losses, eval_loss as f64, accuracy))
     }
+
+    /// The runtime trainer's mutable state is the global parameter
+    /// vector (plus the learning rate, pinned as a sanity check);
+    /// everything else — eval batch, data shards — re-synthesizes
+    /// deterministically from the config.
+    fn checkpoint_state(&self) -> Option<Vec<u8>> {
+        let mut e = crate::persist::Enc::new();
+        e.f32(self.lr);
+        e.f32s(&self.params);
+        Some(e.into_bytes())
+    }
+
+    fn restore_state(&mut self, state: &[u8]) -> Result<()> {
+        let mut d = crate::persist::Dec::new(state);
+        let lr = d.f32()?;
+        let params = d.f32s()?;
+        d.done()?;
+        if params.len() != self.params.len() {
+            return Err(Error::Persist(format!(
+                "checkpointed parameter vector has {} elements, model wants {}",
+                params.len(),
+                self.params.len()
+            )));
+        }
+        self.lr = lr;
+        self.params = params;
+        Ok(())
+    }
 }
 
 /// Run a population-scale scheduling experiment: real PJRT numerics for
 /// the selected cohort when a runtime is supplied, the closed-form
-/// surrogate otherwise.
+/// surrogate otherwise. With [`ScheduleConfig::resume_from`] set, the
+/// engine restores the checkpoint (file, or newest valid file in a
+/// directory) and the returned report covers the whole logical run —
+/// bit-identical to an uninterrupted one.
 pub fn run_population(
     cfg: &ScheduleConfig,
     runtime: Option<&Runtime>,
 ) -> Result<PopulationReport> {
     cfg.validate()?;
+    let ckpt = match &cfg.resume_from {
+        Some(path) => Some(load_engine_checkpoint(Path::new(path))?),
+        None => None,
+    };
     match runtime {
         Some(rt) => {
             let trainer = RuntimeCohortTrainer::new(rt, cfg)?;
-            Engine::new(cfg, trainer)?.run()
+            match &ckpt {
+                Some(ck) => Engine::resume(cfg, trainer, ck)?.run(),
+                None => Engine::new(cfg, trainer)?.run(),
+            }
         }
-        None => Engine::new(cfg, SurrogateTrainer::default())?.run(),
+        None => match &ckpt {
+            Some(ck) => Engine::resume(cfg, SurrogateTrainer::default(), ck)?.run(),
+            None => Engine::new(cfg, SurrogateTrainer::default())?.run(),
+        },
     }
 }

@@ -12,7 +12,7 @@
 //!
 //! With `K = cohort size` and zero staleness the flush reduces to plain
 //! example-weighted FedAvg — bit-identical, since both run the same
-//! [`weighted_parameter_average`] path (property-tested in
+//! `weighted_parameter_average` path (property-tested in
 //! `rust/tests/proptests.rs`).
 
 use crate::client::keys;

@@ -1,0 +1,218 @@
+//! Checkpoint/resume acceptance tests:
+//!
+//! * **kill-at-round-k determinism** — a sync and an async engine run
+//!   killed at round k and resumed from its checkpoint must produce
+//!   selection/accuracy traces *bit-identical* to the uninterrupted
+//!   run (CSV equality, which renders every f64 the engine exposes);
+//! * **crash-window atomicity** — truncating a checkpoint file at any
+//!   byte offset either falls back to the previous valid checkpoint or
+//!   fails cleanly; it never yields a corrupt resume (property test
+//!   over truncation offsets, plus single-byte corruption).
+//!
+//! The richer configs here (churn + deadline + non-default policies)
+//! deliberately exercise every piece of persisted state: device
+//! fairness counters, policy RNG position, trainer curve, the
+//! in-flight dispatch manifest and the availability index's free-list
+//! order.
+
+use std::path::{Path, PathBuf};
+
+use flowrs::config::{PolicyConfig, ScheduleConfig};
+use flowrs::persist::{
+    load_engine_checkpoint, CheckpointReader, CheckpointStore,
+};
+use flowrs::sched::availability::ChurnSpec;
+use flowrs::sched::engine::{Engine, SurrogateTrainer};
+use flowrs::sim::population::run_population;
+use flowrs::util::prop;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flowrs-persist-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// A deliberately messy population: churn rotates availability, the
+/// deadline drops slow devices, and the policy keeps RNG state.
+fn base_cfg() -> ScheduleConfig {
+    ScheduleConfig::default()
+        .named("persist-e2e")
+        .population(1_500)
+        .cohort(40)
+        .seed(11)
+        .deadline(Some(60.0))
+        .churn(Some(ChurnSpec { mean_on_s: 600.0, mean_off_s: 300.0 }))
+}
+
+#[test]
+fn sync_kill_at_round_k_resumes_bit_identically() {
+    let dir = tmp_dir("sync");
+    let dir_s = dir.to_str().unwrap();
+
+    // uninterrupted reference: 6 rounds, fairness-capped selection
+    let cfg = base_cfg().policy(PolicyConfig::FairnessCap { max_selections: 3 });
+    let full = run_population(&cfg.clone().rounds(6), None).unwrap();
+    assert_eq!(full.rounds.len(), 6);
+
+    // "kill" after round 3 (checkpoint every flush), then resume to 6
+    run_population(&cfg.clone().rounds(3).checkpoints(dir_s), None).unwrap();
+    let ck = load_engine_checkpoint(&dir).unwrap();
+    assert_eq!(ck.version, 3);
+    let resumed = run_population(&cfg.clone().rounds(6).resume(dir_s), None).unwrap();
+
+    assert_eq!(
+        resumed.to_csv(),
+        full.to_csv(),
+        "sync kill/resume diverged from the uninterrupted trace"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn async_kill_at_round_k_resumes_bit_identically() {
+    let dir = tmp_dir("async");
+    let dir_s = dir.to_str().unwrap();
+
+    // uniform policy: exercises the streaming fast path, whose draws
+    // depend on the index free-list order — the hardest state to
+    // restore exactly
+    let cfg = base_cfg().buffered(8).concurrency(48);
+    let full = run_population(&cfg.clone().rounds(10), None).unwrap();
+    assert_eq!(full.rounds.len(), 10);
+
+    run_population(&cfg.clone().rounds(4).checkpoints(dir_s), None).unwrap();
+    let ck = load_engine_checkpoint(&dir).unwrap();
+    assert_eq!(ck.version, 4);
+    assert!(
+        !ck.in_flight.is_empty(),
+        "async checkpoint should carry the in-flight dispatch manifest"
+    );
+    let resumed = run_population(&cfg.clone().rounds(10).resume(dir_s), None).unwrap();
+
+    assert_eq!(
+        resumed.to_csv(),
+        full.to_csv(),
+        "async kill/resume diverged from the uninterrupted trace"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn async_scoring_policy_kill_resume_is_bit_identical() {
+    // utility policy declines the fast path → exercises the
+    // materialized candidate view plus per-device loss history restore
+    let dir = tmp_dir("async-utility");
+    let dir_s = dir.to_str().unwrap();
+    let cfg = base_cfg()
+        .policy(PolicyConfig::UtilityBased { alpha: 2.0, explore_frac: 0.2 })
+        .buffered(8)
+        .concurrency(48);
+    let full = run_population(&cfg.clone().rounds(8), None).unwrap();
+    run_population(&cfg.clone().rounds(3).checkpoints(dir_s), None).unwrap();
+    let resumed = run_population(&cfg.clone().rounds(8).resume(dir_s), None).unwrap();
+    assert_eq!(resumed.to_csv(), full.to_csv());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn checkpoint_cadence_knob_thins_the_store() {
+    let dir = tmp_dir("cadence");
+    let dir_s = dir.to_str().unwrap();
+    let cfg = base_cfg().rounds(6).checkpoints(dir_s).checkpoint_every(3);
+    run_population(&cfg, None).unwrap();
+    let store = CheckpointStore::open(&dir).unwrap();
+    let files = store.list().unwrap();
+    // rounds 3 and 6 only (6 is both on-cadence and the final state)
+    assert_eq!(files.len(), 2, "{files:?}");
+    let (_, newest) = store.latest_valid().unwrap().unwrap();
+    assert_eq!(newest.rounds_completed(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resuming_a_finished_run_is_a_noop() {
+    let dir = tmp_dir("noop");
+    let dir_s = dir.to_str().unwrap();
+    let cfg = base_cfg().rounds(4);
+    let full = run_population(&cfg.clone().checkpoints(dir_s), None).unwrap();
+    let resumed = run_population(&cfg.clone().resume(dir_s), None).unwrap();
+    assert_eq!(resumed.to_csv(), full.to_csv());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn resume_refuses_incompatible_config() {
+    let dir = tmp_dir("refuse");
+    let dir_s = dir.to_str().unwrap();
+    run_population(&base_cfg().rounds(2).checkpoints(dir_s), None).unwrap();
+    // different seed → different population/trajectory → refused
+    let err = run_population(&base_cfg().seed(999).rounds(4).resume(dir_s), None)
+        .expect_err("mismatched config must not resume");
+    assert!(
+        err.to_string().contains("mismatch"),
+        "unexpected error: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The crash-window property: for *any* truncation point of the newest
+/// checkpoint file, (a) the file itself never loads, and (b) the store
+/// falls back to the previous valid checkpoint.
+#[test]
+fn truncated_checkpoint_never_loads_and_store_falls_back() {
+    let dir = tmp_dir("trunc");
+    let dir_s = dir.to_str().unwrap();
+    // two real checkpoints (rounds 1 and 2) from a live engine
+    let cfg = base_cfg().rounds(2).checkpoints(dir_s);
+    Engine::new(&cfg, SurrogateTrainer::default())
+        .unwrap()
+        .run()
+        .unwrap();
+    let store = CheckpointStore::open(&dir).unwrap();
+    let (newest_path, newest) = store.latest_valid().unwrap().unwrap();
+    assert_eq!(newest.rounds_completed(), 2);
+    let full_bytes = std::fs::read(&newest_path).unwrap();
+    assert!(full_bytes.len() > 64);
+
+    let check_fallback = |path: &Path, mangled: &[u8]| -> prop::PropResult {
+        std::fs::write(path, mangled).unwrap();
+        prop::ensure(CheckpointReader::read(path).is_err(), || {
+            format!("mangled checkpoint ({} bytes) parsed as valid", mangled.len())
+        })?;
+        let (_, fallback) = CheckpointStore::open(path.parent().unwrap())
+            .unwrap()
+            .latest_valid()
+            .unwrap()
+            .expect("the previous checkpoint must still be resolvable");
+        prop::ensure(fallback.rounds_completed() == 1, || {
+            format!(
+                "store resolved rounds={} instead of the previous valid checkpoint",
+                fallback.rounds_completed()
+            )
+        })
+    };
+
+    prop::check("truncation at any offset fails cleanly", 256, |rng| {
+        let cut = rng.below(full_bytes.len());
+        check_fallback(&newest_path, &full_bytes[..cut])
+    });
+
+    prop::check("single-byte corruption fails cleanly", 128, |rng| {
+        let mut bad = full_bytes.clone();
+        let i = rng.below(bad.len());
+        bad[i] ^= 1 + rng.below(255) as u8;
+        check_fallback(&newest_path, &bad)
+    });
+
+    // restoring the original bytes makes it the newest valid one again
+    std::fs::write(&newest_path, &full_bytes).unwrap();
+    let (_, healed) = store.latest_valid().unwrap().unwrap();
+    assert_eq!(healed.rounds_completed(), 2);
+
+    // and a resume from the fallback state still runs (the previous
+    // checkpoint is a complete, valid state — not a torn one)
+    std::fs::write(&newest_path, &full_bytes[..full_bytes.len() / 3]).unwrap();
+    let resumed = run_population(&base_cfg().rounds(2).resume(dir_s), None).unwrap();
+    assert_eq!(resumed.rounds.len(), 2);
+    std::fs::remove_dir_all(&dir).ok();
+}
