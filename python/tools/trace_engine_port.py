@@ -1,0 +1,780 @@
+#!/usr/bin/env python3
+"""Exact Python port of the trace-driven `sched` engine — golden generator.
+
+The build container has no Rust toolchain (see
+`.claude/skills/verify/SKILL.md`), so the golden-trace regression suite
+(`rust/tests/trace_e2e.rs`) is cross-validated the way PRs 2–3 validated
+the async engine: this module reproduces, bit-faithfully, every piece of
+the Rust engine a trace-driven run touches —
+
+* `util::rng::Rng` (xoshiro256++ seeded via SplitMix64),
+* the trace-file parser semantics (`sched::trace::TraceSet`, CSV form),
+* `DeviceSchedule::Trace` point queries (partition_point == bisect_right),
+* `Population::synthesize` (mix draw + class override + data sizes),
+* the `CostModel` arithmetic in the exact float-op association,
+* the barrier-sync loop (dead-air scan, dispatch-fate classification,
+  heap settle order, energy/idle accounting, flush clock arithmetic),
+* the streaming-async loop including a full mirror of
+  `AvailabilityIndex` (transition wheel with swap-remove bucket scans,
+  idle free-list order, partial-Fisher–Yates sampling) — free-list order
+  is what uniform sampling consumes, so it must match exactly,
+* `PopulationReport::to_csv()` formatting (`{:.6}` / `{:.3}` — both Rust
+  and CPython format floats with correctly-rounded half-even decimals,
+  so the text matches byte-for-byte).
+
+The golden configs avoid `powf` with non-trivial arguments (sync folds
+use staleness 0 → pow(1, y) == 1 exactly; the async golden pins
+staleness_alpha = 0 → pow(x, -0) == 1 exactly), so every number in the
+goldens is a composition of IEEE +,-,*,/ — identical on any platform.
+
+Usage:
+    python3 python/tools/trace_engine_port.py --write-fixtures rust/tests/fixtures
+        regenerate the committed fixture + golden CSVs (prints a summary)
+    python3 python/tools/trace_engine_port.py
+        recompute and check against the committed goldens
+"""
+
+import heapq
+import os
+import sys
+from bisect import bisect_right
+
+MASK = (1 << 64) - 1
+INF = float("inf")
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+class Rng:
+    """util::rng::Rng — xoshiro256++, SplitMix64-seeded."""
+
+    def __init__(self, seed=None, state=None):
+        if state is not None:
+            self.s = list(state)
+            return
+        sm = seed & MASK
+        self.s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return int(self.f64() * n) % n
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def sample_indices(self, n, k):
+        idx = list(range(n))
+        self.shuffle(idx)
+        return idx[:k]
+
+
+# device/profiles.rs: name -> (compute_factor, train_w, idle_w, radio_w, bw)
+PROFILES = {
+    "jetson_tx2_gpu": (1.0, 2.1, 1.4, 1.0, 100.0),
+    "jetson_tx2_cpu": (1.27, 2.4, 1.4, 1.0, 100.0),
+    "pixel4": (1.8, 1.3, 0.6, 0.8, 50.0),
+    "pixel3": (2.2, 1.4, 0.6, 0.8, 50.0),
+    "pixel2": (2.8, 1.5, 0.65, 0.8, 40.0),
+    "galaxy_tab_s6": (1.9, 1.45, 0.7, 0.9, 50.0),
+    "galaxy_tab_s4": (2.6, 1.55, 0.75, 0.9, 40.0),
+    "raspberry_pi4": (6.0, 3.0, 2.0, 0.5, 100.0),
+}
+# sched::engine::default_device_mix(), in order
+DEFAULT_MIX = [
+    ("pixel4", 0.20),
+    ("pixel3", 0.20),
+    ("pixel2", 0.15),
+    ("galaxy_tab_s6", 0.10),
+    ("galaxy_tab_s4", 0.10),
+    ("jetson_tx2_gpu", 0.05),
+    ("jetson_tx2_cpu", 0.05),
+    ("raspberry_pi4", 0.15),
+]
+CLASS_ALIASES = {
+    "phone": "pixel4",
+    "tablet": "galaxy_tab_s6",
+    "jetson": "jetson_tx2_gpu",
+    "rpi": "raspberry_pi4",
+}
+T_STEP_REF_S = 1.48
+SERVER_OVERHEAD_S = 1.0
+MODEL_BYTES = 547_496
+CSV_HEADER = "device,init,class,toggles_s"
+
+
+# ---------------------------------------------------------------------------
+# Trace schedules (DeviceSchedule::Trace point queries)
+# ---------------------------------------------------------------------------
+
+
+class Trace:
+    def __init__(self, initially_on, toggles):
+        self.initially_on = initially_on
+        self.toggles = toggles  # strictly increasing floats
+
+    def flips_through(self, t):
+        # partition_point(|&x| x <= t) == bisect_right
+        return bisect_right(self.toggles, t)
+
+    def is_on(self, t):
+        return self.initially_on ^ (self.flips_through(t) % 2 == 1)
+
+    def next_toggle_after(self, t):
+        i = self.flips_through(t)
+        return self.toggles[i] if i < len(self.toggles) else None
+
+    def on_dwell_end(self, t):
+        nxt = self.next_toggle_after(t)
+        return nxt if nxt is not None else INF
+
+    def next_on_delay(self, t):
+        if self.is_on(t):
+            return 0.0
+        nxt = self.next_toggle_after(t)
+        return (nxt - t) if nxt is not None else INF
+
+    def period_hint(self):
+        n = len(self.toggles)
+        if n >= 2:
+            return (self.toggles[n - 1] - self.toggles[0]) / (n - 1) * 2.0
+        return None
+
+
+def parse_trace_csv(text):
+    """sched::trace::TraceSet::parse_csv — (Trace, class-or-None) rows."""
+    lines = [l.strip() for l in text.splitlines()]
+    lines = [l for l in lines if l and not l.startswith("#")]
+    assert lines[0] == CSV_HEADER, lines[0]
+    rows = []
+    for line in lines[1:]:
+        cols = line.split(",", 3)
+        assert len(cols) == 4, line
+        dev = int(cols[0])
+        assert dev == len(rows)
+        init = cols[1] in ("1", "on")
+        cls = None
+        if cols[2]:
+            cls = CLASS_ALIASES.get(cols[2], cols[2])
+            assert cls in PROFILES, cols[2]
+        toggles = [float(x) for x in cols[3].split(";")] if cols[3] else []
+        for a, b in zip(toggles, toggles[1:]):
+            assert a < b
+        rows.append((Trace(init, toggles), cls))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Population::synthesize (trace source)
+# ---------------------------------------------------------------------------
+
+
+class Device:
+    def __init__(self, name, trace, num_examples, skew):
+        self.name = name
+        (self.factor, self.train_w, self.idle_w, self.radio_w, self.bw) = PROFILES[name]
+        self.trace = trace
+        self.num_examples = num_examples
+        self.skew = skew
+
+
+def synthesize(rows, seed):
+    total_w = sum(w for _, w in DEFAULT_MIX)
+    rng = Rng(seed ^ 0x0F0B)
+    pop = []
+    for trace, cls in rows:
+        r = rng.f64() * total_w
+        name = DEFAULT_MIX[-1][0]
+        for n, w in DEFAULT_MIX:
+            if r < w:
+                name = n
+                break
+            r -= w
+        if cls is not None:
+            name = cls
+        num_examples = 64 + rng.below(448)
+        skew = rng.f64()
+        pop.append(Device(name, trace, num_examples, skew))
+    return pop
+
+
+def round_time(dev, steps):
+    # CostModel: steps * (t_step_ref * factor) + 2 * (bytes*8 / (bw*1e6))
+    return steps * (T_STEP_REF_S * dev.factor) + 2.0 * (
+        MODEL_BYTES * 8.0 / (dev.bw * 1e6)
+    )
+
+
+def round_energy(dev, steps):
+    compute_t = steps * (T_STEP_REF_S * dev.factor)
+    link_t = MODEL_BYTES * 8.0 / (dev.bw * 1e6)
+    return dev.train_w * compute_t + 2.0 * (dev.radio_w * link_t)
+
+
+class Surrogate:
+    """SurrogateTrainer — closed-form accuracy curve."""
+
+    def __init__(self):
+        self.progress = 0.0
+        self.ceiling = 0.68
+        self.half = 4000.0
+
+    def metrics(self):
+        if self.progress > 0.0:
+            acc = self.ceiling * self.progress / (self.progress + self.half)
+        else:
+            acc = 0.0
+        return 2.3 * (1.0 - acc / self.ceiling) + 0.05, acc
+
+    def train_flush(self, pop, folds, steps):
+        # folds: list of (device_idx, weight)
+        weight = 0.0
+        for _, w in folds:
+            weight += w
+        self.progress += weight * float(steps)
+        eval_loss, acc = self.metrics()
+        losses = [eval_loss * (0.75 + 0.5 * pop[i].skew) for i, _ in folds]
+        return losses, eval_loss, acc
+
+
+FOLD, DROP_DEADLINE, DROP_CHURN = 0, 1, 2
+
+
+def csv_row(r):
+    return (
+        "{},{},{},{},{},{},{:.6f},{:.6f},{:.6f},{},{:.3f},{:.3f},{:.3f},{:.3f},"
+        "{:.3f},{},{}\n"
+    ).format(
+        r["round"], r["available"], r["selected"], r["completed"],
+        r["dropped_deadline"], r["dropped_churn"], r["train_loss"],
+        r["eval_loss"], r["accuracy"], r["steps"], r["round_time_s"],
+        r["cum_time_s"], r["round_energy_j"], r["wasted_energy_j"],
+        r["mean_staleness"], r["max_staleness"], r["in_flight"],
+    )
+
+
+CSV_COLUMNS = (
+    "round,available,selected,completed,dropped_deadline,dropped_churn,"
+    "train_loss,eval_loss,accuracy,steps,round_time_s,cum_time_s,"
+    "round_energy_j,wasted_energy_j,mean_staleness,max_staleness,in_flight\n"
+)
+
+
+def report_csv(rows):
+    return CSV_COLUMNS + "".join(csv_row(r) for r in rows)
+
+
+# ---------------------------------------------------------------------------
+# Barrier-sync engine (Engine::step_flush, ExecMode::Sync)
+# ---------------------------------------------------------------------------
+
+
+def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5):
+    policy = Rng(seed ^ 0x5E1)
+    trainer = Surrogate()
+    clock = 0.0
+    version = 0
+    rows = []
+    while version < rounds:
+        # begin_round: availability scan with dead-air fast-forward
+        entry = clock
+        now = entry
+        while True:
+            avail = [i for i, d in enumerate(pop) if d.trace.is_on(now)]
+            if avail:
+                break
+            dt = min(d.trace.next_on_delay(now) for d in pop)
+            assert dt != INF, "no devices ever available"
+            now += max(dt, 1e-6)
+        picked = policy.sample_indices(len(avail), min(cohort, len(avail)))
+        assert picked
+        dispatches = []
+        for j in picked:
+            i = avail[j]
+            dispatches.append((i, round_time(pop[i], steps), round_energy(pop[i], steps)))
+        deadline_abs = now + deadline if deadline is not None else INF
+        heap = []
+        slowest_all = now
+        for i, full_t, full_e in dispatches:
+            full_finish = now + full_t
+            first_off = pop[i].trace.on_dwell_end(now)
+            if first_off < min(deadline_abs, full_finish):
+                cutoff, outcome = first_off, DROP_CHURN
+            elif full_finish > deadline_abs:
+                cutoff, outcome = deadline_abs, DROP_DEADLINE
+            else:
+                cutoff, outcome = full_finish, FOLD
+            frac = min(max((cutoff - now) / (full_finish - now), 0.0), 1.0)
+            # sync events resolve at the full modeled finish
+            heapq.heappush(heap, (full_finish, i, full_e * frac, outcome))
+        energy = 0.0
+        wasted = 0.0
+        dd = dc = 0
+        buffer = []  # (device_idx, resolve_s) in settle order
+        while heap:
+            resolve, i, e, outcome = heapq.heappop(heap)
+            slowest_all = max(slowest_all, resolve)
+            energy += e
+            if outcome == FOLD:
+                buffer.append((i, resolve))
+            elif outcome == DROP_CHURN:
+                dc += 1
+                wasted += e
+            else:
+                dd += 1
+                wasted += e
+        # flush (weights: staleness_discount(0, alpha) == 1.0 exactly)
+        version += 1
+        folds = [(i, 1.0) for i, _ in buffer]
+        losses, eval_loss, acc = trainer.train_flush(pop, folds, steps)
+        completed = len(buffer)
+        train_loss = sum(losses) / len(losses) if losses else float("nan")
+        drops = dd + dc
+        slowest_ok = now
+        for _, resolve in buffer:
+            slowest_ok = max(slowest_ok, resolve)
+        if deadline is not None and drops > 0:
+            round_end = now + deadline
+        elif deadline is not None:
+            round_end = slowest_ok
+        else:
+            round_end = slowest_all
+        for i, resolve in buffer:
+            wait = max(round_end - resolve, 0.0)
+            energy += pop[i].idle_w * wait
+        round_time_s = (round_end - entry) + SERVER_OVERHEAD_S
+        clock = entry + round_time_s
+        rows.append(dict(
+            round=version, available=len(avail), selected=completed + dd + dc,
+            completed=completed, dropped_deadline=dd, dropped_churn=dc,
+            train_loss=train_loss, eval_loss=eval_loss, accuracy=acc,
+            steps=completed * steps, round_time_s=round_time_s,
+            cum_time_s=clock, round_energy_j=energy, wasted_energy_j=wasted,
+            mean_staleness=0.0, max_staleness=0, in_flight=0,
+        ))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# AvailabilityIndex mirror (transition wheel + idle free-list)
+# ---------------------------------------------------------------------------
+
+NOT_LISTED = -1
+MIN_STEP = 1e-9
+
+
+def min_step(t):
+    return max(MIN_STEP, abs(t) * 1e-12)
+
+
+class Wheel:
+    def __init__(self, width, nbuckets, t0):
+        self.width = width
+        self.buckets = [[] for _ in range(max(nbuckets, 1))]
+        self.cursor = self.window_of(t0)
+        self.len = 0
+
+    def window_of(self, t):
+        return int(t / self.width)
+
+    def schedule(self, t, dev):
+        b = self.window_of(t) % len(self.buckets)
+        self.buckets[b].append((t, dev))
+        self.len += 1
+
+    def take_due(self, now, out):
+        if self.len == 0:
+            return
+        b = self.buckets[self.cursor % len(self.buckets)]
+        i = 0
+        while i < len(b):
+            if b[i][0] <= now:
+                out.append(b[i])
+                b[i] = b[-1]  # swap_remove
+                b.pop()
+                self.len -= 1
+            else:
+                i += 1
+
+    def advance_window(self, now):
+        if self.cursor < self.window_of(now):
+            self.cursor += 1
+            return True
+        return False
+
+    def earliest(self):
+        m = None
+        for bucket in self.buckets:
+            for t, _ in bucket:
+                if m is None or t < m:
+                    m = t
+        return m
+
+
+class Index:
+    def __init__(self, traces, t0):
+        n = len(traces)
+        period_sum = 0.0
+        churny = 0
+        for tr in traces:
+            hint = tr.period_hint()
+            if hint is not None:
+                period_sum += hint
+                churny += 1
+        if churny == 0:
+            width = 1.0
+        else:
+            width = min(max(period_sum / churny / 8.0, 1e-3), 1e7)
+        self.traces = traces
+        self.online = [False] * n
+        self.busy = [False] * n
+        self.idle = []
+        self.pos = [NOT_LISTED] * n
+        self.wheel = Wheel(width, 512, t0)
+        self.now = t0
+        for i in range(n):
+            on = traces[i].is_on(t0)
+            t_next = traces[i].next_toggle_after(t0)
+            if on:
+                self.online[i] = True
+                self.list_push(i)
+            if t_next is not None:
+                self.wheel.schedule(max(t_next, t0 + min_step(t0)), i)
+
+    def list_push(self, dev):
+        self.pos[dev] = len(self.idle)
+        self.idle.append(dev)
+
+    def list_remove(self, dev):
+        p = self.pos[dev]
+        self.idle[p] = self.idle[-1]
+        self.idle.pop()
+        if p < len(self.idle):
+            self.pos[self.idle[p]] = p
+        self.pos[dev] = NOT_LISTED
+
+    def advance(self, now):
+        if now <= self.now:
+            return
+        if self.wheel.len == 0:
+            self.now = now
+            return
+        if self.wheel.window_of(now) - self.wheel.cursor >= len(self.wheel.buckets):
+            self.rebuild(now)
+            return
+        self.now = now
+        due = []
+        while True:
+            due.clear()
+            self.wheel.take_due(now, due)
+            if not due:
+                if not self.wheel.advance_window(now):
+                    break
+                continue
+            for t, dev in due:
+                self.apply_transition(t, dev)
+
+    def rebuild(self, now):
+        self.now = now
+        self.idle = []
+        self.pos = [NOT_LISTED] * len(self.traces)
+        self.wheel = Wheel(self.wheel.width, len(self.wheel.buckets), now)
+        for i, tr in enumerate(self.traces):
+            on = tr.is_on(now)
+            t_next = tr.next_toggle_after(now)
+            self.online[i] = on
+            if on and not self.busy[i]:
+                self.list_push(i)
+            if t_next is not None:
+                self.wheel.schedule(max(t_next, now + min_step(now)), i)
+
+    def apply_transition(self, t, dev):
+        on = self.traces[dev].is_on(t)
+        if on != self.online[dev]:
+            self.online[dev] = on
+            if not self.busy[dev]:
+                if on:
+                    self.list_push(dev)
+                else:
+                    self.list_remove(dev)
+        nxt = self.traces[dev].next_toggle_after(t)
+        if nxt is not None:
+            # trace path of DeviceSchedule::next_transition_delay
+            self.wheel.schedule(t + max(nxt - t, min_step(t)), dev)
+
+    def mark_busy(self, dev):
+        self.busy[dev] = True
+        if self.pos[dev] != NOT_LISTED:
+            self.list_remove(dev)
+
+    def mark_idle(self, dev):
+        self.busy[dev] = False
+        if self.online[dev] and self.pos[dev] == NOT_LISTED:
+            self.list_push(dev)
+
+    def sample_idle(self, rng, k):
+        n = len(self.idle)
+        k = min(k, n)
+        out = []
+        for j in range(k):
+            r = j + rng.below(n - j)
+            self.idle[j], self.idle[r] = self.idle[r], self.idle[j]
+            self.pos[self.idle[j]] = j
+            self.pos[self.idle[r]] = r
+            out.append(self.idle[j])
+        return out
+
+    def resync_device(self, dev, t):
+        on = self.traces[dev].is_on(t)
+        if on != self.online[dev]:
+            self.online[dev] = on
+            if not self.busy[dev]:
+                if on:
+                    self.list_push(dev)
+                else:
+                    self.list_remove(dev)
+
+
+# ---------------------------------------------------------------------------
+# Streaming-async engine (Engine::step_flush, ExecMode::Async)
+# ---------------------------------------------------------------------------
+
+
+def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
+              max_concurrency=0):
+    policy = Rng(seed ^ 0x5E1)
+    trainer = Surrogate()
+    window = max(max_concurrency if max_concurrency else cohort, 1)
+    index = Index([d.trace for d in pop], 0.0)
+    state = dict(now=0.0, avail_count=0, in_flight=0)
+    version = 0
+    clock = 0.0
+    last_flush = 0.0
+    heap = []
+    buffer = []  # (device_idx, staleness, resolve_s)
+    dd = dc = 0
+    wasted = energy = 0.0
+    rescans = 0
+    rows = []
+
+    def try_top_up():
+        if state["in_flight"] >= window:
+            return 0, 0
+        now = state["now"]
+        index.advance(now)
+        state["avail_count"] = len(index.idle) + state["in_flight"]
+        if not index.idle:
+            return 0, 0
+        want = window - state["in_flight"]
+        chosen = index.sample_idle(policy, want)
+        dispatches = [
+            (dev, round_time(pop[dev], steps), round_energy(pop[dev], steps))
+            for dev in chosen
+        ]
+        deadline_abs = now + deadline if deadline is not None else INF
+        dispatched = skipped = 0
+        for i, full_t, full_e in dispatches:
+            if not pop[i].trace.is_on(now):
+                index.resync_device(i, now)
+                skipped += 1
+                continue
+            index.mark_busy(i)
+            full_finish = now + full_t
+            first_off = pop[i].trace.on_dwell_end(now)
+            if first_off < min(deadline_abs, full_finish):
+                cutoff, outcome = first_off, DROP_CHURN
+            elif full_finish > deadline_abs:
+                cutoff, outcome = deadline_abs, DROP_DEADLINE
+            else:
+                cutoff, outcome = full_finish, FOLD
+            frac = min(max((cutoff - now) / (full_finish - now), 0.0), 1.0)
+            state["in_flight"] += 1
+            # streaming events resolve at the cutoff
+            heapq.heappush(heap, (cutoff, i, full_e * frac, version, outcome))
+            dispatched += 1
+        return dispatched, skipped
+
+    while version < rounds:
+        while True:
+            dispatched, skipped = try_top_up()
+            if dispatched > 0 or skipped == 0:
+                break
+        if not heap:
+            # fast_forward (streaming dead air)
+            index.advance(state["now"])
+            assert not index.idle, "policy declined with devices online"
+            rescans += 1
+            assert rescans <= 1000
+            t_next = index.wheel.earliest()
+            assert t_next is not None, "no devices ever available"
+            state["now"] += max(t_next - state["now"], 1e-6)
+            continue
+        resolve, i, e, base_version, outcome = heapq.heappop(heap)
+        rescans = 0
+        # settle
+        state["now"] = max(state["now"], resolve)
+        index.mark_idle(i)
+        state["in_flight"] -= 1
+        energy += e
+        if outcome == FOLD:
+            buffer.append((i, version - base_version, resolve))
+        elif outcome == DROP_CHURN:
+            dc += 1
+            wasted += e
+        else:
+            dd += 1
+            wasted += e
+        if len(buffer) >= k_flush:
+            version += 1
+            folds = [(i, (1.0 + s) ** (-alpha)) for i, s, _ in buffer]
+            losses, eval_loss, acc = trainer.train_flush(pop, folds, steps)
+            completed = len(buffer)
+            stals = [s for _, s, _ in buffer]
+            staleness_sum = sum(stals)
+            train_loss = sum(losses) / len(losses) if losses else float("nan")
+            round_time_s = (state["now"] - last_flush) + SERVER_OVERHEAD_S
+            state["now"] += SERVER_OVERHEAD_S
+            last_flush = state["now"]
+            clock = state["now"]
+            rows.append(dict(
+                round=version, available=state["avail_count"],
+                selected=completed + dd + dc, completed=completed,
+                dropped_deadline=dd, dropped_churn=dc, train_loss=train_loss,
+                eval_loss=eval_loss, accuracy=acc, steps=completed * steps,
+                round_time_s=round_time_s, cum_time_s=clock,
+                round_energy_j=energy, wasted_energy_j=wasted,
+                mean_staleness=(staleness_sum / completed if completed else 0.0),
+                max_staleness=max(stals) if stals else 0,
+                in_flight=state["in_flight"],
+            ))
+            buffer = []
+            dd = dc = 0
+            wasted = energy = 0.0
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# The committed fixture + goldens
+# ---------------------------------------------------------------------------
+
+# Golden run configs — keep in sync with rust/tests/trace_e2e.rs and the
+# ci.yml trace smoke leg.
+SYNC_CFG = dict(population=24, cohort=8, rounds=6, seed=7, deadline=60.0,
+                steps=8)
+ASYNC_CFG = dict(population=24, cohort=8, rounds=8, seed=7, deadline=45.0,
+                 steps=8, k_flush=4, alpha=0.0)
+
+FIXTURE = "smalltown.csv"
+GOLDEN_SYNC = "smalltown_sync.golden.csv"
+GOLDEN_ASYNC = "smalltown_async.golden.csv"
+
+
+def build_fixture():
+    """A small deployment-shaped trace: phone / jetson / tablet / rpi
+    classes plus untagged devices, with disconnects spread over ~40 min
+    so both the sync deadline (60 s) and the async cutoff (45 s) see
+    churn- and deadline-drops. Deterministic; arbitrary beyond that."""
+    classes = (
+        ["phone"] * 3 + ["pixel3"] * 3 + ["pixel2"] * 2          # 0-7  phones
+        + ["jetson", "jetson", "jetson_tx2_cpu", "jetson_tx2_cpu"]  # 8-11
+        + [""] * 6                                                # 12-17 mix-drawn
+        + ["tablet", "galaxy_tab_s4"]                              # 18-19
+        + ["rpi"] * 4                                              # 20-23
+    )
+    rng = Rng(20260728)
+    lines = ["# smalltown: 24-device recorded-availability fixture",
+             "# regenerate: python3 python/tools/trace_engine_port.py "
+             "--write-fixtures rust/tests/fixtures",
+             CSV_HEADER]
+    for dev, cls in enumerate(classes):
+        init = 1 if rng.f64() < 0.8 else 0
+        k = 2 + rng.below(4)
+        t = 20.0 + rng.f64() * 60.0
+        toggles = []
+        for _ in range(k):
+            toggles.append(round(t, 1))
+            t += 40.0 + rng.f64() * 400.0
+        lines.append("{},{},{},{}".format(
+            dev, init, cls, ";".join(repr(x) for x in toggles)))
+    return "\n".join(lines) + "\n"
+
+
+def compute_goldens():
+    fixture = build_fixture()
+    rows = parse_trace_csv(fixture)
+    assert len(rows) == SYNC_CFG["population"]
+    pop_sync = synthesize(rows, SYNC_CFG["seed"])
+    sync = run_sync(pop_sync, SYNC_CFG["seed"], SYNC_CFG["cohort"],
+                    SYNC_CFG["rounds"], SYNC_CFG["steps"], SYNC_CFG["deadline"])
+    pop_async = synthesize(rows, ASYNC_CFG["seed"])
+    asy = run_async(pop_async, ASYNC_CFG["seed"], ASYNC_CFG["cohort"],
+                    ASYNC_CFG["rounds"], ASYNC_CFG["steps"],
+                    ASYNC_CFG["k_flush"], ASYNC_CFG["alpha"],
+                    ASYNC_CFG["deadline"])
+    return fixture, report_csv(sync), report_csv(asy), sync, asy
+
+
+def main():
+    fixture, sync_csv, async_csv, sync, asy = compute_goldens()
+    drops_sync = sum(r["dropped_deadline"] + r["dropped_churn"] for r in sync)
+    drops_async = sum(r["dropped_deadline"] + r["dropped_churn"] for r in asy)
+    print(f"sync : {len(sync)} rounds, final acc {sync[-1]['accuracy']:.4f}, "
+          f"t {sync[-1]['cum_time_s']:.1f} s, drops {drops_sync}")
+    print(f"async: {len(asy)} versions, final acc {asy[-1]['accuracy']:.4f}, "
+          f"t {asy[-1]['cum_time_s']:.1f} s, drops {drops_async}, "
+          f"max staleness {max(r['max_staleness'] for r in asy)}")
+    assert drops_sync > 0, "sync golden should exercise drops"
+    assert drops_async > 0, "async golden should exercise drops"
+
+    if len(sys.argv) >= 3 and sys.argv[1] == "--write-fixtures":
+        outdir = sys.argv[2]
+        os.makedirs(outdir, exist_ok=True)
+        for name, text in [(FIXTURE, fixture), (GOLDEN_SYNC, sync_csv),
+                           (GOLDEN_ASYNC, async_csv)]:
+            with open(os.path.join(outdir, name), "w") as f:
+                f.write(text)
+            print(f"wrote {os.path.join(outdir, name)}")
+        return
+
+    # check mode: compare against the committed files
+    here = os.path.dirname(os.path.abspath(__file__))
+    fixdir = os.path.join(here, "..", "..", "rust", "tests", "fixtures")
+    for name, text in [(FIXTURE, fixture), (GOLDEN_SYNC, sync_csv),
+                       (GOLDEN_ASYNC, async_csv)]:
+        path = os.path.join(fixdir, name)
+        with open(path) as f:
+            committed = f.read()
+        assert committed == text, f"{name} drifted from the committed golden"
+        print(f"OK: {name} matches")
+
+
+if __name__ == "__main__":
+    main()

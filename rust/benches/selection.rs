@@ -118,6 +118,43 @@ fn main() {
         });
     }
 
+    // Trace-replay overhead: one barrier round over a scenario-generated
+    // explicit trace set (every availability query is a binary search
+    // over recorded toggles instead of a closed-form cycle), next to the
+    // churn-model `engine_round_n*` cases above. Captures trace-ingestion
+    // cost for BENCH_selection.json refreshes.
+    for &n in &[1_000usize, 100_000] {
+        let trace_cfg = ScheduleConfig::default()
+            .named("bench")
+            .population(n)
+            .cohort(100)
+            .epochs(10)
+            .deadline(Some(250.0))
+            .seed(42)
+            .scenario("diurnal");
+        let mk = || {
+            Engine::new(
+                &trace_cfg.clone().policy(PolicyConfig::DeadlineAware),
+                SurrogateTrainer::default(),
+            )
+            .unwrap()
+        };
+        let mut engine = mk();
+        let mut round = 0u64;
+        b.bench(&format!("engine_trace_replay_n{n}"), || {
+            // Rebuild before the virtual clock crosses the scenario
+            // horizon (devices freeze there and later iterations would
+            // measure a static population, not trace replay). The
+            // occasional rebuild iteration barely moves the median.
+            if engine.virtual_time_s() > 150_000.0 {
+                engine = mk();
+                round = 0;
+            }
+            round += 1;
+            engine.run_round(round).unwrap()
+        });
+    }
+
     // Checkpoint persistence overhead at population scale: one atomic
     // write (serialize + fsync + rename) and one read (validate CRCs +
     // decode) of a streaming-mode engine checkpoint at 100k devices.
@@ -163,7 +200,10 @@ fn main() {
                     (materialized candidate pools are inherently O(population)). \
                     ckpt_* cases record checkpoint persistence overhead (atomic \
                     fsync write, CRC-validating read, full decode) for a \
-                    100k-device streaming checkpoint.";
+                    100k-device streaming checkpoint. engine_trace_replay_n* \
+                    times a barrier round over scenario-generated explicit \
+                    traces (binary-search availability) vs the closed-form \
+                    churn cycles of engine_round_n*.";
         std::fs::write(&path, results_to_json("selection", note, &results, test_mode))
             .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
         println!("wrote bench baselines to {path}");

@@ -598,9 +598,25 @@ pub struct ScheduleConfig {
     /// Parameter payload bytes on the wire, each way (CIFAR CNN ≈ 547 KB).
     pub model_bytes: usize,
     /// (device profile name, weight) population mix; empty = default mix.
+    /// Trace class tags override the mix for the devices they tag.
     pub device_mix: Vec<(String, f64)>,
-    /// On/off churn; None = everyone always available.
+    /// On/off churn; None = everyone always available. Mutually
+    /// exclusive with `trace_file` / `scenario` (those *replace* the
+    /// synthetic availability model).
     pub churn: Option<ChurnSpec>,
+    /// Replay availability (and per-device hardware classes) from this
+    /// recorded trace file — CSV or JSON, spec in
+    /// `rust/src/sched/TRACES.md`. `population` must equal the trace's
+    /// device count. Mutually exclusive with `scenario` and `churn`.
+    pub trace_file: Option<String>,
+    /// Generate availability from a named scenario (`diurnal`,
+    /// `charging-gated`, `flash-crowd`), deterministically from `seed`.
+    /// Mutually exclusive with `trace_file` and `churn`.
+    pub scenario: Option<String>,
+    /// Horizon (seconds) scenario traces are materialized over; devices
+    /// freeze in their final state past it, so pick one beyond the
+    /// virtual time the run will reach.
+    pub scenario_horizon_s: f64,
     pub seed: u64,
     pub cost: CostModel,
     /// Early-stop (and time-to-accuracy reporting) target.
@@ -642,6 +658,9 @@ impl Default for ScheduleConfig {
             model_bytes: 547_496,
             device_mix: Vec::new(),
             churn: None,
+            trace_file: None,
+            scenario: None,
+            scenario_horizon_s: 172_800.0,
             seed: 20260710,
             cost: CostModel::default(),
             target_accuracy: None,
@@ -688,6 +707,21 @@ impl ScheduleConfig {
     }
     pub fn churn(mut self, spec: Option<ChurnSpec>) -> Self {
         self.churn = spec;
+        self
+    }
+    /// Replay availability from a recorded trace file (CSV or JSON).
+    pub fn trace_file(mut self, path: &str) -> Self {
+        self.trace_file = Some(path.into());
+        self
+    }
+    /// Generate availability from a named scenario.
+    pub fn scenario(mut self, name: &str) -> Self {
+        self.scenario = Some(name.into());
+        self
+    }
+    /// Horizon (seconds) scenario traces are materialized over.
+    pub fn scenario_horizon(mut self, horizon_s: f64) -> Self {
+        self.scenario_horizon_s = horizon_s;
         self
     }
     pub fn seed(mut self, seed: u64) -> Self {
@@ -789,6 +823,31 @@ impl ScheduleConfig {
                 return Err(Error::Config("churn mean_off_s must be finite and >= 0".into()));
             }
         }
+        if self.trace_file.is_some() && self.scenario.is_some() {
+            return Err(Error::Config(
+                "trace_file and scenario are mutually exclusive".into(),
+            ));
+        }
+        if (self.trace_file.is_some() || self.scenario.is_some()) && self.churn.is_some() {
+            return Err(Error::Config(
+                "churn describes the synthetic availability model; drop it when \
+                 replaying a trace or scenario"
+                    .into(),
+            ));
+        }
+        if let Some(name) = &self.scenario {
+            if !crate::sched::trace::SCENARIOS.contains(&name.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown scenario {name:?} ({})",
+                    crate::sched::trace::SCENARIOS.join(" | ")
+                )));
+            }
+        }
+        if !(self.scenario_horizon_s > 0.0) || !self.scenario_horizon_s.is_finite() {
+            return Err(Error::Config(
+                "scenario_horizon_s must be finite and > 0".into(),
+            ));
+        }
         for (name, w) in &self.device_mix {
             crate::device::profiles::by_name(name)?;
             if *w <= 0.0 || !w.is_finite() {
@@ -860,6 +919,15 @@ impl ScheduleConfig {
                 mean_on_s: v.get("mean_on_s")?.as_f64()?,
                 mean_off_s: v.get("mean_off_s")?.as_f64()?,
             });
+        }
+        if let Some(v) = doc.opt("trace_file") {
+            cfg.trace_file = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.opt("scenario") {
+            cfg.scenario = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.opt("scenario_horizon_s") {
+            cfg.scenario_horizon_s = v.as_f64()?;
         }
         if let Some(v) = doc.opt("seed") {
             cfg.seed = v.as_usize()? as u64;
@@ -1158,6 +1226,82 @@ mod tests {
                     mean_on_s: 1.0,
                     mean_off_s: 1.0
                 }))
+                .fingerprint()
+        );
+    }
+
+    #[test]
+    fn trace_and_scenario_knobs_roundtrip_and_validate() {
+        let s = ScheduleConfig::from_json(
+            r#"{"scenario": "diurnal", "scenario_horizon_s": 86400, "population": 500}"#,
+        )
+        .unwrap();
+        assert_eq!(s.scenario.as_deref(), Some("diurnal"));
+        assert_eq!(s.scenario_horizon_s, 86_400.0);
+        let t = ScheduleConfig::from_json(r#"{"trace_file": "traces/pop.csv"}"#).unwrap();
+        assert_eq!(t.trace_file.as_deref(), Some("traces/pop.csv"));
+
+        // builders mirror the JSON knobs
+        let b = ScheduleConfig::default()
+            .scenario("flash-crowd")
+            .scenario_horizon(3_600.0);
+        assert_eq!(b.scenario.as_deref(), Some("flash-crowd"));
+        assert_eq!(b.scenario_horizon_s, 3_600.0);
+        b.validate().unwrap();
+        ScheduleConfig::default()
+            .trace_file("x.csv")
+            .validate()
+            .unwrap();
+
+        // unknown scenario name
+        assert!(ScheduleConfig::from_json(r#"{"scenario": "weekend"}"#).is_err());
+        // trace_file + scenario, and either + churn, are exclusive
+        assert!(ScheduleConfig::default()
+            .trace_file("x.csv")
+            .scenario("diurnal")
+            .validate()
+            .is_err());
+        assert!(ScheduleConfig::default()
+            .scenario("diurnal")
+            .churn(Some(crate::sched::availability::ChurnSpec {
+                mean_on_s: 1.0,
+                mean_off_s: 1.0
+            }))
+            .validate()
+            .is_err());
+        assert!(ScheduleConfig::default()
+            .trace_file("x.csv")
+            .churn(Some(crate::sched::availability::ChurnSpec {
+                mean_on_s: 1.0,
+                mean_off_s: 1.0
+            }))
+            .validate()
+            .is_err());
+        // broken horizon
+        assert!(ScheduleConfig::from_json(r#"{"scenario_horizon_s": 0}"#).is_err());
+        assert!(ScheduleConfig::from_json(r#"{"scenario_horizon_s": -5}"#).is_err());
+    }
+
+    #[test]
+    fn fingerprint_pins_trace_and_scenario_knobs() {
+        let base = ScheduleConfig::default();
+        assert_ne!(
+            base.fingerprint(),
+            base.clone().scenario("diurnal").fingerprint()
+        );
+        assert_ne!(
+            base.clone().scenario("diurnal").fingerprint(),
+            base.clone().scenario("flash-crowd").fingerprint()
+        );
+        assert_ne!(
+            base.fingerprint(),
+            base.clone().trace_file("x.csv").fingerprint()
+        );
+        assert_ne!(
+            base.clone().scenario("diurnal").fingerprint(),
+            base.clone()
+                .scenario("diurnal")
+                .scenario_horizon(3_600.0)
                 .fingerprint()
         );
     }

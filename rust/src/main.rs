@@ -141,6 +141,14 @@ fn print_usage() {
                       --policy uniform|deadline|utility[:ALPHA[:EXPLORE]]|fair[:CAP]\n\
                       (fair = uniform under a per-device selection-count cap)\n\
                       --compare p1,p2,.. --deadline TAU_S --churn ON_S,OFF_S\n\
+                      --trace <file.csv|json>  (replay recorded availability +\n\
+                      device classes; spec in rust/src/sched/TRACES.md;\n\
+                      --population must match the trace's device count)\n\
+                      --scenario diurnal|charging-gated|flash-crowd\n\
+                      --scenario-horizon S --compare-scenarios s1,s2,..\n\
+                      (scenario availability generated from --seed; the\n\
+                      comparison table runs every policy under each scenario;\n\
+                      include `baseline` to add the synthetic churn model)\n\
                       --epochs E --steps-per-epoch S --model-bytes B --seed N\n\
                       --target-accuracy A --t-step-ref <s> --out <csv>\n\
                       --mode sync|async|both --async-buffer K --staleness-alpha A\n\
@@ -401,6 +409,15 @@ fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
     if let Some(v) = args.get("policy") {
         cfg.policy = PolicyConfig::parse(v)?;
     }
+    if let Some(v) = args.get("trace") {
+        cfg.trace_file = Some(v.into());
+    }
+    if let Some(v) = args.get("scenario") {
+        cfg.scenario = Some(v.into());
+    }
+    if let Some(v) = args.get_parsed("scenario-horizon")? {
+        cfg.scenario_horizon_s = v;
+    }
     if let Some(v) = args.get("churn") {
         let (on, off) = v.split_once(',').ok_or_else(|| {
             Error::Config(format!("churn wants ON_S,OFF_S, got {v:?}"))
@@ -457,37 +474,60 @@ fn cmd_sched(args: &Args) -> Result<()> {
         }
         None => vec![cfg.async_buffer.is_some()],
     };
+    // Scenario axis: `--compare-scenarios diurnal,flash-crowd` runs every
+    // policy/mode variant under each named scenario and labels the rows
+    // `scenario/policy` so the table compares availability regimes on the
+    // same currencies (t2a, wasted energy, hit rate). The `baseline`
+    // entry stands for the synthetic model (churn/always-on), so a
+    // scenario can be compared against the pre-trace default directly.
+    let scenarios: Vec<Option<String>> = match args.get("compare-scenarios") {
+        Some(list) => list
+            .split(',')
+            .map(|s| match s.trim() {
+                "baseline" => None,
+                other => Some(other.to_string()),
+            })
+            .collect(),
+        None => vec![cfg.scenario.clone()],
+    };
     // Validate every compared variant up front: a bad entry must fail
     // before the first (possibly expensive) run, not mid-loop after
     // earlier results would be discarded.
     let mut run_cfgs: Vec<(String, ScheduleConfig)> = Vec::new();
     let mut labels = std::collections::BTreeSet::new();
-    for policy in policies {
-        for &is_async in &modes {
-            let mut run_cfg = cfg.clone();
-            run_cfg.policy = policy.clone();
-            let label = if is_async {
-                let k = run_cfg
-                    .async_buffer
-                    .unwrap_or(flowrs::strategy::fedbuff::DEFAULT_BUFFER_SIZE);
-                run_cfg.async_buffer = Some(k);
-                format!(
-                    "{}+fedbuff:{k}:{}",
-                    run_cfg.policy.label(),
-                    run_cfg.staleness_alpha
-                )
-            } else {
-                run_cfg.async_buffer = None;
-                run_cfg.policy.label()
-            };
-            run_cfg.validate()?;
-            if !labels.insert(label.clone()) {
-                return Err(Error::Config(format!(
-                    "duplicate policy {label:?} in --compare (each run would \
-                     overwrite the previous CSV)"
-                )));
+    for scenario in &scenarios {
+        for policy in &policies {
+            for &is_async in &modes {
+                let mut run_cfg = cfg.clone();
+                run_cfg.policy = policy.clone();
+                run_cfg.scenario = scenario.clone();
+                let mut label = if is_async {
+                    let k = run_cfg
+                        .async_buffer
+                        .unwrap_or(flowrs::strategy::fedbuff::DEFAULT_BUFFER_SIZE);
+                    run_cfg.async_buffer = Some(k);
+                    format!(
+                        "{}+fedbuff:{k}:{}",
+                        run_cfg.policy.label(),
+                        run_cfg.staleness_alpha
+                    )
+                } else {
+                    run_cfg.async_buffer = None;
+                    run_cfg.policy.label()
+                };
+                if args.get("compare-scenarios").is_some() {
+                    let s = scenario.as_deref().unwrap_or("baseline");
+                    label = format!("{s}/{label}");
+                }
+                run_cfg.validate()?;
+                if !labels.insert(label.clone()) {
+                    return Err(Error::Config(format!(
+                        "duplicate variant {label:?} in --compare/--compare-scenarios \
+                         (each run would overwrite the previous CSV)"
+                    )));
+                }
+                run_cfgs.push((label, run_cfg));
             }
-            run_cfgs.push((label, run_cfg));
         }
     }
     let single = run_cfgs.len() == 1;
@@ -547,9 +587,9 @@ fn cmd_sched(args: &Args) -> Result<()> {
             let path = if single {
                 out.to_string()
             } else {
-                // filename-safe label (no ':'), inserted before the
-                // extension so the files still end in .csv
-                let safe = label.replace(':', "-");
+                // filename-safe label (no ':' or '/'), inserted before
+                // the extension so the files still end in .csv
+                let safe = label.replace([':', '/'], "-");
                 let p = std::path::Path::new(out);
                 match (
                     p.file_stem().and_then(|s| s.to_str()),

@@ -26,6 +26,7 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::telemetry::log;
+use crate::util::bytes::{LeReader, LeWriter};
 
 /// Leading file magic: any file not starting with these 8 bytes is not
 /// a flowrs checkpoint.
@@ -119,40 +120,43 @@ pub fn crc32(data: &[u8]) -> u32 {
 // Byte-level encode / decode helpers (crate-internal)
 // ---------------------------------------------------------------------------
 
-/// Little-endian section-payload encoder. All floats are stored as raw
-/// IEEE-754 bits so round-tripping is exact (NaN payloads included).
+/// Little-endian section-payload encoder: the shared
+/// [`crate::util::bytes::LeWriter`] primitives plus the checkpoint
+/// format's composites (u64-length strings/blobs, option tags, f32
+/// vectors). All floats are stored as raw IEEE-754 bits so
+/// round-tripping is exact (NaN payloads included).
 #[derive(Default)]
 pub(crate) struct Enc {
-    buf: Vec<u8>,
+    w: LeWriter,
 }
 
 impl Enc {
     pub(crate) fn new() -> Self {
-        Enc { buf: Vec::new() }
+        Enc { w: LeWriter::new() }
     }
 
     pub(crate) fn into_bytes(self) -> Vec<u8> {
-        self.buf
+        self.w.into_bytes()
     }
 
     pub(crate) fn u8(&mut self, v: u8) {
-        self.buf.push(v);
+        self.w.u8(v);
     }
 
     pub(crate) fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.w.u32(v);
     }
 
     pub(crate) fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.w.u64(v);
     }
 
     pub(crate) fn f64(&mut self, v: f64) {
-        self.u64(v.to_bits());
+        self.w.f64(v);
     }
 
     pub(crate) fn f32(&mut self, v: f32) {
-        self.u32(v.to_bits());
+        self.w.f32(v);
     }
 
     pub(crate) fn bool(&mut self, v: bool) {
@@ -181,76 +185,59 @@ impl Enc {
 
     pub(crate) fn str(&mut self, s: &str) {
         self.u64(s.len() as u64);
-        self.buf.extend_from_slice(s.as_bytes());
+        self.w.raw(s.as_bytes());
     }
 
     pub(crate) fn bytes(&mut self, b: &[u8]) {
         self.u64(b.len() as u64);
-        self.buf.extend_from_slice(b);
+        self.w.raw(b);
     }
 
     pub(crate) fn f32s(&mut self, v: &[f32]) {
         self.u64(v.len() as u64);
-        self.buf.reserve(v.len() * 4);
+        self.w.reserve(v.len() * 4);
         for &x in v {
-            self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+            self.w.f32(x);
         }
     }
 }
 
-/// Bounds-checked little-endian decoder over a section payload. Every
-/// accessor fails with [`Error::Persist`] instead of panicking, so a
-/// corrupt payload that somehow passed its CRC still degrades to a
-/// clean load error.
+/// Bounds-checked little-endian decoder over a section payload: a
+/// [`crate::util::bytes::LeReader`] with [`Error::Persist`] as its
+/// error category, plus the checkpoint format's composite decoders.
+/// Every accessor fails instead of panicking, so a corrupt payload
+/// that somehow passed its CRC still degrades to a clean load error.
 pub(crate) struct Dec<'a> {
-    buf: &'a [u8],
-    pos: usize,
+    r: LeReader<'a>,
 }
 
 impl<'a> Dec<'a> {
     pub(crate) fn new(buf: &'a [u8]) -> Self {
-        Dec { buf, pos: 0 }
+        Dec { r: LeReader::new(buf, Error::Persist) }
     }
 
     pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        let end = self
-            .pos
-            .checked_add(n)
-            .filter(|&e| e <= self.buf.len())
-            .ok_or_else(|| {
-                Error::Persist(format!(
-                    "truncated checkpoint data: want {n} bytes at offset {}, have {}",
-                    self.pos,
-                    self.buf.len().saturating_sub(self.pos)
-                ))
-            })?;
-        let out = &self.buf[self.pos..end];
-        self.pos = end;
-        Ok(out)
+        self.r.take(n)
     }
 
     pub(crate) fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        self.r.u8()
     }
 
     pub(crate) fn u32(&mut self) -> Result<u32> {
-        let b = self.take(4)?;
-        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        self.r.u32()
     }
 
     pub(crate) fn u64(&mut self) -> Result<u64> {
-        let b = self.take(8)?;
-        Ok(u64::from_le_bytes([
-            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
-        ]))
+        self.r.u64()
     }
 
     pub(crate) fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_bits(self.u64()?))
+        self.r.f64()
     }
 
     pub(crate) fn f32(&mut self) -> Result<f32> {
-        Ok(f32::from_bits(self.u32()?))
+        self.r.f32()
     }
 
     pub(crate) fn bool(&mut self) -> Result<bool> {
@@ -273,7 +260,7 @@ impl<'a> Dec<'a> {
     /// corrupt length field causing a huge allocation).
     pub(crate) fn count(&mut self, what: &str) -> Result<usize> {
         let n = self.u64()?;
-        let remaining = (self.buf.len() - self.pos) as u64;
+        let remaining = self.r.remaining() as u64;
         if n > remaining {
             return Err(Error::Persist(format!(
                 "{what} count {n} exceeds remaining payload ({remaining} bytes)"
@@ -296,7 +283,7 @@ impl<'a> Dec<'a> {
 
     pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u64()?;
-        let remaining = ((self.buf.len() - self.pos) / 4) as u64;
+        let remaining = (self.r.remaining() / 4) as u64;
         if n > remaining {
             return Err(Error::Persist(format!(
                 "f32 vector count {n} exceeds remaining payload"
@@ -310,14 +297,7 @@ impl<'a> Dec<'a> {
     }
 
     pub(crate) fn done(&self) -> Result<()> {
-        if self.pos == self.buf.len() {
-            Ok(())
-        } else {
-            Err(Error::Persist(format!(
-                "{} trailing bytes after checkpoint payload",
-                self.buf.len() - self.pos
-            )))
-        }
+        self.r.expect_end("checkpoint payload")
     }
 }
 
@@ -381,27 +361,27 @@ impl CheckpointWriter {
     /// Serialize the complete file image (header + sections + footer).
     pub fn to_bytes(&self) -> Vec<u8> {
         let payload_len: usize = self.sections.iter().map(|(_, p)| p.len() + 16).sum();
-        let mut buf = Vec::with_capacity(32 + payload_len + 8);
-        buf.extend_from_slice(&MAGIC);
-        buf.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
-        buf.extend_from_slice(&self.kind.tag());
-        buf.extend_from_slice(&self.rounds_completed.to_le_bytes());
-        buf.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
-        let header_crc = crc32(&buf);
-        buf.extend_from_slice(&header_crc.to_le_bytes());
+        let mut w = LeWriter::with_capacity(32 + payload_len + 8);
+        w.raw(&MAGIC);
+        w.u32(FORMAT_VERSION);
+        w.raw(&self.kind.tag());
+        w.u64(self.rounds_completed);
+        w.u32(self.sections.len() as u32);
+        let header_crc = crc32(w.as_slice());
+        w.u32(header_crc);
         for (tag, payload) in &self.sections {
-            let start = buf.len();
-            buf.extend_from_slice(tag.as_bytes());
-            buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+            let start = w.len();
+            w.raw(tag.as_bytes());
+            w.u64(payload.len() as u64);
             // CRC covers tag + length + payload so a flipped tag or
             // length byte is caught, not just payload corruption.
             let crc =
-                crc32_fold(crc32_fold(CRC_INIT, &buf[start..]), payload) ^ CRC_INIT;
-            buf.extend_from_slice(&crc.to_le_bytes());
-            buf.extend_from_slice(payload);
+                crc32_fold(crc32_fold(CRC_INIT, &w.as_slice()[start..]), payload) ^ CRC_INIT;
+            w.u32(crc);
+            w.raw(payload);
         }
-        buf.extend_from_slice(&FOOTER);
-        buf
+        w.raw(&FOOTER);
+        w.into_bytes()
     }
 
     /// Write the checkpoint to `path` atomically: serialize to
@@ -679,6 +659,143 @@ mod tests {
         // standard test vector for the IEEE polynomial
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    /// Golden vector for the section-payload encoder: the exact bytes
+    /// the hand-rolled `Enc` produced before the `util::bytes`
+    /// unification, pinned so no checkpoint on disk can silently
+    /// change meaning under the port.
+    #[test]
+    fn enc_bytes_are_pinned() {
+        let mut e = Enc::new();
+        e.u8(0xAB);
+        e.u32(0x0102_0304);
+        e.u64(0x1122_3344_5566_7788);
+        e.f64(1.5);
+        e.f32(-2.0);
+        e.bool(true);
+        e.opt_f64(None);
+        e.opt_u64(Some(3));
+        e.str("hi");
+        e.bytes(&[9]);
+        e.f32s(&[1.0]);
+        assert_eq!(
+            e.into_bytes(),
+            vec![
+                0xAB, // u8
+                0x04, 0x03, 0x02, 0x01, // u32 LE
+                0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11, // u64 LE
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF8, 0x3F, // f64 1.5 bits
+                0x00, 0x00, 0x00, 0xC0, // f32 -2.0 bits
+                0x01, // bool
+                0x00, // opt_f64 None
+                0x01, 0x03, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // opt_u64 Some(3)
+                0x02, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, b'h', b'i', // str
+                0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x09, // bytes
+                0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // f32s len
+                0x00, 0x00, 0x80, 0x3F, // 1.0f32 bits
+            ]
+        );
+    }
+
+    /// Differential check against the pre-unification encoder: a
+    /// straight-line reimplementation of the old hand-rolled `Enc`
+    /// must agree byte-for-byte with the `util::bytes`-backed one over
+    /// a pseudo-random op sequence, and `Dec` must read it all back.
+    #[test]
+    fn enc_matches_handrolled_reference_and_dec_roundtrips() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::seed_from(0xB17E5);
+        for _ in 0..50 {
+            let mut e = Enc::new();
+            let mut reference: Vec<u8> = Vec::new();
+            let mut script: Vec<u32> = Vec::new();
+            for _ in 0..rng.below(40) {
+                let op = rng.below(8) as u32;
+                script.push(op);
+                match op {
+                    0 => {
+                        let v = rng.next_u64() as u8;
+                        e.u8(v);
+                        reference.push(v);
+                    }
+                    1 => {
+                        let v = rng.next_u64() as u32;
+                        e.u32(v);
+                        reference.extend_from_slice(&v.to_le_bytes());
+                    }
+                    2 => {
+                        let v = rng.next_u64();
+                        e.u64(v);
+                        reference.extend_from_slice(&v.to_le_bytes());
+                    }
+                    3 => {
+                        let v = rng.normal() * 1e6;
+                        e.f64(v);
+                        reference.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                    4 => {
+                        let v = rng.normal_f32();
+                        e.f32(v);
+                        reference.extend_from_slice(&v.to_bits().to_le_bytes());
+                    }
+                    5 => {
+                        let v = rng.below(2) == 0;
+                        e.bool(v);
+                        reference.push(u8::from(v));
+                    }
+                    6 => {
+                        let s: String =
+                            (0..rng.below(12)).map(|_| 'a').collect();
+                        e.str(&s);
+                        reference.extend_from_slice(&(s.len() as u64).to_le_bytes());
+                        reference.extend_from_slice(s.as_bytes());
+                    }
+                    _ => {
+                        let v: Vec<f32> =
+                            (0..rng.below(8)).map(|_| rng.normal_f32()).collect();
+                        e.f32s(&v);
+                        reference.extend_from_slice(&(v.len() as u64).to_le_bytes());
+                        for &x in &v {
+                            reference.extend_from_slice(&x.to_bits().to_le_bytes());
+                        }
+                    }
+                }
+            }
+            let bytes = e.into_bytes();
+            assert_eq!(bytes, reference, "encoder diverged on script {script:?}");
+            // and the decoder consumes exactly what was written
+            let mut d = Dec::new(&bytes);
+            for &op in &script {
+                match op {
+                    0 => {
+                        d.u8().unwrap();
+                    }
+                    1 => {
+                        d.u32().unwrap();
+                    }
+                    2 => {
+                        d.u64().unwrap();
+                    }
+                    3 => {
+                        d.f64().unwrap();
+                    }
+                    4 => {
+                        d.f32().unwrap();
+                    }
+                    5 => {
+                        d.bool().unwrap();
+                    }
+                    6 => {
+                        d.str().unwrap();
+                    }
+                    _ => {
+                        d.f32s().unwrap();
+                    }
+                }
+            }
+            d.done().unwrap();
+        }
     }
 
     #[test]

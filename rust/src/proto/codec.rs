@@ -19,8 +19,15 @@
 //! ```
 //!
 //! Framing (length prefix) is the transport's job — see `transport::frame`.
+//!
+//! The little-endian primitives live in [`crate::util::bytes`] (shared
+//! with the checkpoint container and transport framing); this module
+//! owns only the protocol's composite encodings. The wire bytes are
+//! pinned by golden vectors and a differential property test against
+//! the pre-refactor hand-rolled encoder (`rust/tests/proptests.rs`).
 
 use crate::error::{Error, Result};
+use crate::util::bytes::{LeReader, LeWriter};
 
 use super::message::*;
 use super::scalar::{ConfigMap, Scalar};
@@ -45,41 +52,48 @@ const TAG_DISCONNECT: u8 = 0x85;
 // Writer
 // ---------------------------------------------------------------------------
 
+/// Wire-format writer: the shared [`LeWriter`] primitives plus the
+/// protocol's composite encodings (length-prefixed bytes, tensors,
+/// scalars, config maps).
 struct Writer {
-    buf: Vec<u8>,
+    w: LeWriter,
 }
 
 impl Writer {
     fn with_header(tag: u8, capacity: usize) -> Self {
-        let mut w = Writer { buf: Vec::with_capacity(capacity + 4) };
-        w.u16(MAGIC);
-        w.u8(VERSION);
-        w.u8(tag);
+        let mut w = Writer { w: LeWriter::with_capacity(capacity + 4) };
+        w.w.u16(MAGIC);
+        w.w.u8(VERSION);
+        w.w.u8(tag);
         w
     }
 
+    fn finish(self) -> Vec<u8> {
+        self.w.into_bytes()
+    }
+
     fn u8(&mut self, v: u8) {
-        self.buf.push(v);
+        self.w.u8(v);
     }
     fn u16(&mut self, v: u16) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.w.u16(v);
     }
     fn u32(&mut self, v: u32) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.w.u32(v);
     }
     fn u64(&mut self, v: u64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.w.u64(v);
     }
     fn i64(&mut self, v: i64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.w.i64(v);
     }
     fn f64(&mut self, v: f64) {
-        self.buf.extend_from_slice(&v.to_le_bytes());
+        self.w.f64(v);
     }
 
     fn bytes(&mut self, v: &[u8]) {
         self.u32(v.len() as u32);
-        self.buf.extend_from_slice(v);
+        self.w.raw(v);
     }
 
     fn string(&mut self, v: &str) {
@@ -96,9 +110,9 @@ impl Writer {
                 }
                 self.u32(v.len() as u32);
                 // bulk copy: f32 LE
-                self.buf.reserve(v.len() * 4);
+                self.w.reserve(v.len() * 4);
                 for &x in v {
-                    self.buf.extend_from_slice(&x.to_le_bytes());
+                    self.w.f32(x);
                 }
             }
             TensorData::I32(v) => {
@@ -108,9 +122,9 @@ impl Writer {
                     self.u32(d as u32);
                 }
                 self.u32(v.len() as u32);
-                self.buf.reserve(v.len() * 4);
+                self.w.reserve(v.len() * 4);
                 for &x in v {
-                    self.buf.extend_from_slice(&x.to_le_bytes());
+                    self.w.raw(&x.to_le_bytes());
                 }
             }
             TensorData::F16(v) => {
@@ -120,9 +134,9 @@ impl Writer {
                     self.u32(d as u32);
                 }
                 self.u32(v.len() as u32);
-                self.buf.reserve(v.len() * 2);
+                self.w.reserve(v.len() * 2);
                 for &x in v {
-                    self.buf.extend_from_slice(&x.to_le_bytes());
+                    self.w.u16(x);
                 }
             }
         }
@@ -184,46 +198,38 @@ impl Writer {
 // Reader
 // ---------------------------------------------------------------------------
 
+/// Wire-format reader: a [`LeReader`] with `Error::Codec` as its error
+/// category, plus the protocol's composite decoders.
 struct Reader<'a> {
-    buf: &'a [u8],
-    pos: usize,
+    r: LeReader<'a>,
 }
 
 impl<'a> Reader<'a> {
     fn new(buf: &'a [u8]) -> Self {
-        Reader { buf, pos: 0 }
+        Reader { r: LeReader::new(buf, Error::Codec) }
     }
 
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        if self.pos + n > self.buf.len() {
-            return Err(Error::Codec(format!(
-                "truncated message: need {n} bytes at offset {}, have {}",
-                self.pos,
-                self.buf.len() - self.pos
-            )));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
-        self.pos += n;
-        Ok(s)
+        self.r.take(n)
     }
 
     fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
+        self.r.u8()
     }
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        self.r.u16()
     }
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        self.r.u32()
     }
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        self.r.u64()
     }
     fn i64(&mut self) -> Result<i64> {
-        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        self.r.i64()
     }
     fn f64(&mut self) -> Result<f64> {
-        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        self.r.f64()
     }
 
     fn bytes(&mut self) -> Result<Vec<u8>> {
@@ -323,13 +329,7 @@ impl<'a> Reader<'a> {
     }
 
     fn finish(&self) -> Result<()> {
-        if self.pos != self.buf.len() {
-            return Err(Error::Codec(format!(
-                "{} trailing bytes after message",
-                self.buf.len() - self.pos
-            )));
-        }
-        Ok(())
+        self.r.expect_end("message")
     }
 }
 
@@ -355,24 +355,24 @@ pub fn encode_server_message(msg: &ServerMessage) -> Vec<u8> {
         ServerMessage::GetParametersIns(ins) => {
             let mut w = Writer::with_header(TAG_GET_PARAMETERS_INS, 64);
             w.config(&ins.config);
-            w.buf
+            w.finish()
         }
         ServerMessage::FitIns(ins) => {
             let mut w = Writer::with_header(TAG_FIT_INS, ins.parameters.byte_len() + 256);
             w.parameters(&ins.parameters);
             w.config(&ins.config);
-            w.buf
+            w.finish()
         }
         ServerMessage::EvaluateIns(ins) => {
             let mut w = Writer::with_header(TAG_EVALUATE_INS, ins.parameters.byte_len() + 256);
             w.parameters(&ins.parameters);
             w.config(&ins.config);
-            w.buf
+            w.finish()
         }
         ServerMessage::Reconnect { seconds } => {
             let mut w = Writer::with_header(TAG_RECONNECT, 8);
             w.u64(*seconds);
-            w.buf
+            w.finish()
         }
     }
 }
@@ -409,13 +409,13 @@ pub fn encode_client_message(msg: &ClientMessage) -> Vec<u8> {
             w.string(&info.device);
             w.string(&info.os);
             w.u64(info.num_examples);
-            w.buf
+            w.finish()
         }
         ClientMessage::GetParametersRes(res) => {
             let mut w = Writer::with_header(TAG_GET_PARAMETERS_RES, res.parameters.byte_len() + 64);
             w.status(&res.status);
             w.parameters(&res.parameters);
-            w.buf
+            w.finish()
         }
         ClientMessage::FitRes(res) => {
             let mut w = Writer::with_header(TAG_FIT_RES, res.parameters.byte_len() + 256);
@@ -423,7 +423,7 @@ pub fn encode_client_message(msg: &ClientMessage) -> Vec<u8> {
             w.parameters(&res.parameters);
             w.u64(res.num_examples);
             w.config(&res.metrics);
-            w.buf
+            w.finish()
         }
         ClientMessage::EvaluateRes(res) => {
             let mut w = Writer::with_header(TAG_EVALUATE_RES, 256);
@@ -431,12 +431,12 @@ pub fn encode_client_message(msg: &ClientMessage) -> Vec<u8> {
             w.f64(res.loss);
             w.u64(res.num_examples);
             w.config(&res.metrics);
-            w.buf
+            w.finish()
         }
         ClientMessage::Disconnect { reason } => {
             let mut w = Writer::with_header(TAG_DISCONNECT, reason.len() + 8);
             w.string(reason);
-            w.buf
+            w.finish()
         }
     }
 }
@@ -572,6 +572,58 @@ mod tests {
         });
         let buf = encode_client_message(&msg);
         assert_eq!(decode_client_message(&buf).unwrap(), msg);
+    }
+
+    /// Golden wire vectors: these exact bytes are the protocol — a
+    /// foreign-language client implements against them, so they must
+    /// never drift (they pinned the hand-rolled encoder before the
+    /// `util::bytes` unification and pin the unified one now).
+    #[test]
+    fn wire_bytes_are_pinned() {
+        let buf = encode_server_message(&ServerMessage::Reconnect {
+            seconds: 0x0102_0304_0506_0708,
+        });
+        assert_eq!(
+            buf,
+            vec![
+                0x0E, 0xF1, // magic 0xF10E LE
+                0x01, // version
+                0x04, // TAG_RECONNECT
+                0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // seconds LE
+            ]
+        );
+
+        let buf = encode_client_message(&ClientMessage::Disconnect {
+            reason: "ok".into(),
+        });
+        assert_eq!(
+            buf,
+            vec![
+                0x0E, 0xF1, 0x01, 0x85, // header, TAG_DISCONNECT
+                0x02, 0x00, 0x00, 0x00, // string length u32 LE
+                b'o', b'k',
+            ]
+        );
+
+        // one tensor-bearing message: f32 raw-bit LE payload
+        let msg = ServerMessage::FitIns(FitIns {
+            parameters: Parameters::from_flat(vec![1.0]),
+            config: ConfigMap::new(),
+        });
+        let buf = encode_server_message(&msg);
+        assert_eq!(
+            buf,
+            vec![
+                0x0E, 0xF1, 0x01, 0x02, // header, TAG_FIT_INS
+                0x01, 0x00, // tensor count u16
+                0x00, // dtype f32
+                0x01, // rank 1
+                0x01, 0x00, 0x00, 0x00, // dim 1
+                0x01, 0x00, 0x00, 0x00, // element count
+                0x00, 0x00, 0x80, 0x3F, // 1.0f32 bits LE
+                0x00, 0x00, 0x00, 0x00, // empty config map
+            ]
+        );
     }
 
     #[test]

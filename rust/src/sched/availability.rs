@@ -11,7 +11,12 @@
 //! The cycle form keeps *point* availability queries O(1) at
 //! million-device scale; [`ChurnModel::trace`] materializes the same
 //! schedule as an explicit toggle-time trace when a test or an export
-//! needs one. For the streaming execution core, which needs the *set*
+//! needs one. Recorded traces are first-class, not just an export
+//! format: [`DeviceSchedule`] abstracts over a periodic [`Cycle`] and
+//! an explicit [`AvailabilityTrace`], so populations replayed from
+//! telemetry files or scenario generators ([`crate::sched::trace`])
+//! drive the engine through exactly the machinery the synthetic model
+//! uses. For the streaming execution core, which needs the *set*
 //! of available devices after every event, [`AvailabilityIndex`]
 //! maintains that set incrementally: a time wheel bucketed by next
 //! state-transition time plus a swap-remove free-list of idle online
@@ -136,24 +141,33 @@ impl ChurnModel {
     /// Materialize the device's schedule over `[0, horizon_s)` as an
     /// explicit trace (state at t=0 plus sorted toggle times).
     pub fn trace(&self, device: u64, horizon_s: f64) -> AvailabilityTrace {
-        let c = self.cycle(device);
-        if c.off_s <= 0.0 {
-            // mean_off_s = 0 is valid config: the device never drops, and
+        self.cycle(device).materialize(horizon_s)
+    }
+}
+
+impl Cycle {
+    /// Materialize this cycle over `[0, horizon_s)` as an explicit
+    /// trace (state at t=0 plus sorted toggle times). Shared by
+    /// [`ChurnModel::trace`] and the scenario generators in
+    /// [`crate::sched::trace`].
+    pub fn materialize(&self, horizon_s: f64) -> AvailabilityTrace {
+        if self.off_s <= 0.0 {
+            // off_s = 0 is valid config: the device never drops, and
             // emitting zero-length off dwells would break the trace's
             // strictly-increasing toggle contract.
             return AvailabilityTrace { initially_on: true, toggles_s: Vec::new() };
         }
-        let period = c.on_s + c.off_s;
-        let pos = c.phase_s % period; // position inside the cycle at t=0
-        let initially_on = pos < c.on_s;
+        let period = self.on_s + self.off_s;
+        let pos = self.phase_s % period; // position inside the cycle at t=0
+        let initially_on = pos < self.on_s;
         let mut toggles_s = Vec::new();
         // time of the first toggle after t=0, then alternate dwell times
-        let mut t = if initially_on { c.on_s - pos } else { period - pos };
+        let mut t = if initially_on { self.on_s - pos } else { period - pos };
         let mut on = initially_on;
         while t < horizon_s {
             toggles_s.push(t);
             on = !on;
-            t += if on { c.on_s } else { c.off_s };
+            t += if on { self.on_s } else { self.off_s };
         }
         AvailabilityTrace { initially_on, toggles_s }
     }
@@ -169,10 +183,182 @@ pub struct AvailabilityTrace {
 }
 
 impl AvailabilityTrace {
+    /// Number of toggles at or before `t_s`.
+    fn flips_through(&self, t_s: f64) -> usize {
+        self.toggles_s.partition_point(|&x| x <= t_s)
+    }
+
     /// Is the device online at `t_s` according to this trace?
     pub fn is_on(&self, t_s: f64) -> bool {
-        let flips = self.toggles_s.partition_point(|&x| x <= t_s);
-        self.initially_on ^ (flips % 2 == 1)
+        self.initially_on ^ (self.flips_through(t_s) % 2 == 1)
+    }
+
+    /// The first toggle instant strictly after `t_s`, if any remains —
+    /// past its last toggle the device freezes in its final state.
+    pub fn next_toggle_after(&self, t_s: f64) -> Option<f64> {
+        self.toggles_s.get(self.flips_through(t_s)).copied()
+    }
+
+    /// Distance from `t_s` to the nearest toggle (infinite for a
+    /// toggle-free trace) — same ambiguity-skip contract as
+    /// [`Cycle::boundary_distance_s`].
+    pub fn boundary_distance_s(&self, t_s: f64) -> f64 {
+        let i = self.flips_through(t_s);
+        let after = self
+            .toggles_s
+            .get(i)
+            .map(|&x| x - t_s)
+            .unwrap_or(f64::INFINITY);
+        let before = if i > 0 { t_s - self.toggles_s[i - 1] } else { f64::INFINITY };
+        after.min(before)
+    }
+}
+
+/// One device's availability schedule: either a synthetic periodic
+/// [`Cycle`] or an explicit recorded [`AvailabilityTrace`]. Traces are
+/// shared via `Arc` so a million-device population does not duplicate
+/// toggle lists between the population and the availability index.
+///
+/// A trace device freezes in whatever state its last toggle leaves it
+/// in; a schedule that never comes back online reports an infinite
+/// [`DeviceSchedule::next_on_delay_s`], which the engine's dead-air
+/// paths already treat as "this device is gone".
+#[derive(Debug, Clone)]
+pub enum DeviceSchedule {
+    /// Deterministic periodic on/off cycle (always-on or churn model).
+    Cycle(Cycle),
+    /// Explicit toggle-time trace (recorded file or generated scenario).
+    Trace(std::sync::Arc<AvailabilityTrace>),
+}
+
+impl From<Cycle> for DeviceSchedule {
+    fn from(c: Cycle) -> Self {
+        DeviceSchedule::Cycle(c)
+    }
+}
+
+impl From<AvailabilityTrace> for DeviceSchedule {
+    fn from(t: AvailabilityTrace) -> Self {
+        DeviceSchedule::Trace(std::sync::Arc::new(t))
+    }
+}
+
+impl DeviceSchedule {
+    /// A device that never goes offline.
+    pub fn always_on() -> Self {
+        DeviceSchedule::Cycle(Cycle::always_on())
+    }
+
+    /// Is the device online at virtual time `t_s`?
+    pub fn is_on(&self, t_s: f64) -> bool {
+        match self {
+            DeviceSchedule::Cycle(c) => c.is_on(t_s),
+            DeviceSchedule::Trace(t) => t.is_on(t_s),
+        }
+    }
+
+    /// End of the on-dwell containing `t_s` — the instant a connection
+    /// opened at `t_s` dies. Call only while online; infinite when the
+    /// schedule never goes offline again.
+    pub fn on_dwell_end_s(&self, t_s: f64) -> f64 {
+        match self {
+            DeviceSchedule::Cycle(c) => c.on_dwell_end_s(t_s),
+            DeviceSchedule::Trace(t) => {
+                t.next_toggle_after(t_s).unwrap_or(f64::INFINITY)
+            }
+        }
+    }
+
+    /// Seconds from `t_s` until this device is next online (0 if online
+    /// now; infinite when an offline trace never toggles again).
+    pub fn next_on_delay_s(&self, t_s: f64) -> f64 {
+        match self {
+            DeviceSchedule::Cycle(c) => c.next_on_delay_s(t_s),
+            DeviceSchedule::Trace(t) => {
+                if t.is_on(t_s) {
+                    0.0
+                } else {
+                    t.next_toggle_after(t_s)
+                        .map(|x| x - t_s)
+                        .unwrap_or(f64::INFINITY)
+                }
+            }
+        }
+    }
+
+    /// Distance from `t_s` to this schedule's nearest toggle (infinite
+    /// when it never toggles) — see [`Cycle::boundary_distance_s`].
+    pub fn boundary_distance_s(&self, t_s: f64) -> f64 {
+        match self {
+            DeviceSchedule::Cycle(c) => c.boundary_distance_s(t_s),
+            DeviceSchedule::Trace(t) => t.boundary_distance_s(t_s),
+        }
+    }
+
+    /// Absolute next-toggle instant used when (re)building the index's
+    /// wheel at `t_s` (`online` = the device's state at `t_s`); `None`
+    /// when the schedule never toggles again. For cycles this is the
+    /// exact arithmetic the pre-trace index used in its build path, so
+    /// cycle-driven runs stay bit-identical.
+    fn next_transition_from(&self, t_s: f64, online: bool) -> Option<f64> {
+        match self {
+            DeviceSchedule::Cycle(c) => {
+                if c.off_s <= 0.0 {
+                    return None;
+                }
+                Some(if online {
+                    c.on_dwell_end_s(t_s)
+                } else {
+                    t_s + c.next_on_delay_s(t_s)
+                })
+            }
+            DeviceSchedule::Trace(t) => t.next_toggle_after(t_s),
+        }
+    }
+
+    /// Relative delay to the next toggle when *processing* a transition
+    /// at `t_s`. A separate method because the index's reschedule path
+    /// historically computed a relative dwell where its build path
+    /// computed an absolute instant; both float shapes are preserved
+    /// exactly so cycle-driven runs replay bit-identically across this
+    /// refactor.
+    fn next_transition_delay(&self, t_s: f64, online: bool) -> Option<f64> {
+        match self {
+            DeviceSchedule::Cycle(c) => {
+                if c.off_s <= 0.0 {
+                    return None;
+                }
+                Some(if online {
+                    c.on_dwell_end_s(t_s) - t_s
+                } else {
+                    c.next_on_delay_s(t_s)
+                })
+            }
+            DeviceSchedule::Trace(t) => t.next_toggle_after(t_s).map(|x| x - t_s),
+        }
+    }
+
+    /// Rough period estimate for sizing the index's wheel buckets
+    /// (`None` when the schedule never toggles). Any value is correct —
+    /// this only tunes bucket occupancy.
+    fn period_hint_s(&self) -> Option<f64> {
+        match self {
+            DeviceSchedule::Cycle(c) => {
+                if c.off_s > 0.0 {
+                    Some(c.on_s + c.off_s)
+                } else {
+                    None
+                }
+            }
+            DeviceSchedule::Trace(t) => {
+                let n = t.toggles_s.len();
+                if n >= 2 {
+                    Some((t.toggles_s[n - 1] - t.toggles_s[0]) / (n - 1) as f64 * 2.0)
+                } else {
+                    None
+                }
+            }
+        }
     }
 }
 
@@ -181,6 +367,7 @@ impl AvailabilityTrace {
 pub enum Availability {
     /// Everyone always online (the paper's testbed setting).
     AlwaysOn,
+    /// Per-device deterministic on/off churn.
     Churn(ChurnModel),
 }
 
@@ -329,7 +516,7 @@ impl TransitionWheel {
 /// *and* identical list order.
 #[derive(Debug, Clone)]
 pub struct AvailabilityIndex {
-    cycles: Vec<Cycle>,
+    schedules: Vec<DeviceSchedule>,
     online: Vec<bool>,
     busy: Vec<bool>,
     idle_online: Vec<u32>,
@@ -341,18 +528,29 @@ pub struct AvailabilityIndex {
 }
 
 impl AvailabilityIndex {
-    /// Build the index at virtual time `t0_s`. Always-on cycles never
-    /// schedule transitions, so a churn-free population costs nothing to
-    /// advance.
+    /// Build the index over pure cycles at virtual time `t0_s` — the
+    /// convenience form of [`AvailabilityIndex::from_schedules`] for
+    /// model-synthesized populations. Always-on cycles never schedule
+    /// transitions, so a churn-free population costs nothing to advance.
     pub fn new(cycles: Vec<Cycle>, t0_s: f64) -> Self {
-        let n = cycles.len();
-        // Bucket width tuned to the mean churn period; any value is
+        Self::from_schedules(
+            cycles.into_iter().map(DeviceSchedule::Cycle).collect(),
+            t0_s,
+        )
+    }
+
+    /// Build the index over arbitrary [`DeviceSchedule`]s (cycles,
+    /// recorded traces, or a mix) at virtual time `t0_s`. Schedules
+    /// that never toggle again never enter the transition wheel.
+    pub fn from_schedules(schedules: Vec<DeviceSchedule>, t0_s: f64) -> Self {
+        let n = schedules.len();
+        // Bucket width tuned to the mean toggle period; any value is
         // correct, this one keeps buckets small under the default specs.
         let mut period_sum = 0.0f64;
         let mut churny = 0usize;
-        for c in &cycles {
-            if c.off_s > 0.0 {
-                period_sum += c.on_s + c.off_s;
+        for s in &schedules {
+            if let Some(p) = s.period_hint_s() {
+                period_sum += p;
                 churny += 1;
             }
         }
@@ -362,7 +560,7 @@ impl AvailabilityIndex {
             (period_sum / churny as f64 / 8.0).clamp(1e-3, 1e7)
         };
         let mut idx = AvailabilityIndex {
-            cycles,
+            schedules,
             online: vec![false; n],
             busy: vec![false; n],
             idle_online: Vec::with_capacity(n),
@@ -372,19 +570,15 @@ impl AvailabilityIndex {
             due: Vec::new(),
         };
         for i in 0..n {
-            let c = idx.cycles[i];
-            if c.is_on(t0_s) {
+            let online = idx.schedules[i].is_on(t0_s);
+            let t_next = idx.schedules[i].next_transition_from(t0_s, online);
+            if online {
                 idx.online[i] = true;
                 idx.list_push(i as u32);
             }
-            if c.off_s > 0.0 {
-                let t_next = if idx.online[i] {
-                    c.on_dwell_end_s(t0_s)
-                } else {
-                    t0_s + c.next_on_delay_s(t0_s)
-                };
+            if let Some(t) = t_next {
                 idx.wheel
-                    .schedule(t_next.max(t0_s + min_step_s(t0_s)), i as u32);
+                    .schedule(t.max(t0_s + min_step_s(t0_s)), i as u32);
             }
         }
         idx
@@ -448,8 +642,8 @@ impl AvailabilityIndex {
     }
 
     /// From-scratch reconstruction at `now_s`: recompute every device's
-    /// state and next transition directly from its cycle. Busy marks are
-    /// preserved.
+    /// state and next transition directly from its schedule. Busy marks
+    /// are preserved.
     fn rebuild(&mut self, now_s: f64) {
         self.now_s = now_s;
         self.idle_online.clear();
@@ -459,31 +653,28 @@ impl AvailabilityIndex {
             self.wheel.buckets.len(),
             now_s,
         );
-        for i in 0..self.cycles.len() {
-            let c = self.cycles[i];
-            self.online[i] = c.is_on(now_s);
-            if self.online[i] && !self.busy[i] {
+        for i in 0..self.schedules.len() {
+            let online = self.schedules[i].is_on(now_s);
+            let t_next = self.schedules[i].next_transition_from(now_s, online);
+            self.online[i] = online;
+            if online && !self.busy[i] {
                 self.list_push(i as u32);
             }
-            if c.off_s > 0.0 {
-                let t_next = if self.online[i] {
-                    c.on_dwell_end_s(now_s)
-                } else {
-                    now_s + c.next_on_delay_s(now_s)
-                };
+            if let Some(t) = t_next {
                 self.wheel
-                    .schedule(t_next.max(now_s + min_step_s(now_s)), i as u32);
+                    .schedule(t.max(now_s + min_step_s(now_s)), i as u32);
             }
         }
     }
 
     /// Process one scheduled transition: recompute the device's state
-    /// from its cycle at the scheduled instant (robust to the boundary
-    /// landing a rounding error away) and schedule the next one.
+    /// from its schedule at the scheduled instant (robust to the
+    /// boundary landing a rounding error away) and schedule the next
+    /// one, if the schedule ever toggles again (an exhausted trace
+    /// simply leaves the wheel).
     fn apply_transition(&mut self, t_s: f64, device: u32) {
         let i = device as usize;
-        let c = self.cycles[i];
-        let on = c.is_on(t_s);
+        let on = self.schedules[i].is_on(t_s);
         if on != self.online[i] {
             self.online[i] = on;
             if !self.busy[i] {
@@ -494,12 +685,10 @@ impl AvailabilityIndex {
                 }
             }
         }
-        let dt = if on {
-            c.on_dwell_end_s(t_s) - t_s
-        } else {
-            c.next_on_delay_s(t_s)
-        };
-        self.wheel.schedule(t_s + dt.max(min_step_s(t_s)), device);
+        let next = self.schedules[i].next_transition_delay(t_s, on);
+        if let Some(dt) = next {
+            self.wheel.schedule(t_s + dt.max(min_step_s(t_s)), device);
+        }
     }
 
     /// Check a device out (e.g. a dispatch in flight): it leaves the
@@ -540,15 +729,15 @@ impl AvailabilityIndex {
         out
     }
 
-    /// Re-derive one device's online state straight from its cycle at
-    /// `t_s`, fixing the free-list to match. Callers use this to
+    /// Re-derive one device's online state straight from its schedule
+    /// at `t_s`, fixing the free-list to match. Callers use this to
     /// reconcile float-boundary disagreements between the wheel's
     /// scheduled transitions and a point `is_on` query (the device's
     /// pending wheel entry stays scheduled; processing it later is
-    /// idempotent, since transitions recompute state from the cycle).
+    /// idempotent, since transitions recompute state from the schedule).
     pub fn resync_device(&mut self, device: u32, t_s: f64) {
         let i = device as usize;
-        let on = self.cycles[i].is_on(t_s);
+        let on = self.schedules[i].is_on(t_s);
         if on != self.online[i] {
             self.online[i] = on;
             if !self.busy[i] {
@@ -578,7 +767,7 @@ impl AvailabilityIndex {
     /// Export the index's complete internal state — free-list order and
     /// raw wheel contents included — for checkpointing. Restoring the
     /// result with [`AvailabilityIndex::from_state`] (over the same
-    /// cycles) yields an index whose every future observable —
+    /// schedules) yields an index whose every future observable —
     /// membership, sampling order, transition processing — is
     /// bit-identical to this one's. A canonical rebuild at the same
     /// time would *not* be: the free-list order (which uniform sampling
@@ -597,12 +786,12 @@ impl AvailabilityIndex {
     }
 
     /// Rebuild an index from [`AvailabilityIndex::export_state`] output
-    /// and the same cycles it was built over. Validates internal
+    /// and the same schedules it was built over. Validates internal
     /// consistency (vector lengths, free-list entries in range and
     /// duplicate-free) so a corrupt checkpoint fails cleanly instead of
     /// resuming into undefined behavior.
-    pub fn from_state(cycles: Vec<Cycle>, state: IndexState) -> Result<Self> {
-        let n = cycles.len();
+    pub fn from_state(schedules: Vec<DeviceSchedule>, state: IndexState) -> Result<Self> {
+        let n = schedules.len();
         if state.online.len() != n || state.busy.len() != n {
             return Err(Error::Persist(format!(
                 "availability-index state is for {} devices, population has {n}",
@@ -658,7 +847,7 @@ impl AvailabilityIndex {
             len,
         };
         Ok(AvailabilityIndex {
-            cycles,
+            schedules,
             online: state.online,
             busy: state.busy,
             idle_online: state.idle_online,
@@ -810,6 +999,10 @@ mod tests {
 
     fn cycles_for(m: &ChurnModel, n: u64) -> Vec<Cycle> {
         (0..n).map(|d| m.cycle(d)).collect()
+    }
+
+    fn scheds(cycles: &[Cycle]) -> Vec<DeviceSchedule> {
+        cycles.iter().map(|&c| DeviceSchedule::Cycle(c)).collect()
     }
 
     /// Brute-force membership at `t`: online and not busy.
@@ -977,7 +1170,7 @@ mod tests {
             }
         }
         let state = a.export_state();
-        let mut b = AvailabilityIndex::from_state(cycles, state.clone()).unwrap();
+        let mut b = AvailabilityIndex::from_state(scheds(&cycles), state.clone()).unwrap();
         assert_eq!(b.export_state(), state, "restore must be lossless");
         // identical sampling stream (free-list order restored exactly)
         let mut ra = Rng::seed_from(5);
@@ -1000,31 +1193,147 @@ mod tests {
         let idx = AvailabilityIndex::new(cycles.clone(), 0.0);
         let good = idx.export_state();
         // wrong population size
-        assert!(AvailabilityIndex::from_state(cycles[..10].to_vec(), good.clone()).is_err());
+        assert!(AvailabilityIndex::from_state(scheds(&cycles[..10]), good.clone()).is_err());
         // duplicate free-list entry
         let mut dup = good.clone();
         if dup.idle_online.len() >= 2 {
             dup.idle_online[1] = dup.idle_online[0];
-            assert!(AvailabilityIndex::from_state(cycles.clone(), dup).is_err());
+            assert!(AvailabilityIndex::from_state(scheds(&cycles), dup).is_err());
         }
         // out-of-range free-list entry
         let mut oob = good.clone();
         oob.idle_online[0] = 999;
-        assert!(AvailabilityIndex::from_state(cycles.clone(), oob).is_err());
+        assert!(AvailabilityIndex::from_state(scheds(&cycles), oob).is_err());
         // free-list entry contradicting the busy flag (would corrupt
         // the swap-remove invariant silently in release builds)
         let mut busy_listed = good.clone();
         busy_listed.busy[busy_listed.idle_online[0] as usize] = true;
-        assert!(AvailabilityIndex::from_state(cycles.clone(), busy_listed).is_err());
+        assert!(AvailabilityIndex::from_state(scheds(&cycles), busy_listed).is_err());
         // wheel entry for a device outside the population (would panic
         // in apply_transition on the first advance past its time)
         let mut bad_wheel = good.clone();
         bad_wheel.wheel_buckets[0].push((1.0, 999));
-        assert!(AvailabilityIndex::from_state(cycles.clone(), bad_wheel).is_err());
+        assert!(AvailabilityIndex::from_state(scheds(&cycles), bad_wheel).is_err());
         // broken wheel width
         let mut bad_w = good;
         bad_w.wheel_width_s = -1.0;
-        assert!(AvailabilityIndex::from_state(cycles, bad_w).is_err());
+        assert!(AvailabilityIndex::from_state(scheds(&cycles), bad_w).is_err());
+    }
+
+    // -- DeviceSchedule: explicit traces ----------------------------------
+
+    #[test]
+    fn trace_schedule_helpers_agree_with_cycle_schedule() {
+        // A materialized trace must answer every schedule query the way
+        // its generating cycle does, away from float-ambiguous toggles.
+        let m = model();
+        for d in 0..12 {
+            let c = m.cycle(d);
+            let cyc = DeviceSchedule::Cycle(c);
+            let tr: DeviceSchedule = c.materialize(20_000.0).into();
+            for i in 0..400 {
+                let t = i as f64 * 29.3;
+                if cyc.boundary_distance_s(t) < 1e-6 {
+                    continue;
+                }
+                assert_eq!(tr.is_on(t), cyc.is_on(t), "device {d} t={t}");
+                let dc = cyc.next_on_delay_s(t);
+                let dt = tr.next_on_delay_s(t);
+                assert!(
+                    (dc - dt).abs() < 1e-6 || (dc == 0.0 && dt == 0.0),
+                    "device {d} t={t}: next-on {dt} vs cycle {dc}"
+                );
+                if tr.is_on(t) {
+                    let ec = cyc.on_dwell_end_s(t);
+                    let et = tr.on_dwell_end_s(t);
+                    if ec < 20_000.0 - 1.0 {
+                        assert!((ec - et).abs() < 1e-6, "device {d} t={t}: {et} vs {ec}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trace_schedule_freezes_after_last_toggle() {
+        let t: DeviceSchedule = AvailabilityTrace {
+            initially_on: true,
+            toggles_s: vec![10.0, 20.0, 30.0],
+        }
+        .into();
+        assert!(t.is_on(5.0));
+        assert!(!t.is_on(15.0));
+        assert!(t.is_on(25.0));
+        // past the last toggle: frozen offline, never online again
+        assert!(!t.is_on(35.0));
+        assert!(!t.is_on(1e9));
+        assert_eq!(t.next_on_delay_s(35.0), f64::INFINITY);
+        assert_eq!(t.on_dwell_end_s(25.0), 30.0);
+        // a trace ending online reports an infinite on-dwell
+        let open: DeviceSchedule =
+            AvailabilityTrace { initially_on: false, toggles_s: vec![10.0] }.into();
+        assert!(open.is_on(11.0));
+        assert_eq!(open.on_dwell_end_s(11.0), f64::INFINITY);
+        assert_eq!(open.next_on_delay_s(5.0), 5.0);
+    }
+
+    #[test]
+    fn index_over_traces_matches_index_over_cycles() {
+        // The tentpole claim: the index ingests explicit toggle
+        // schedules natively and maintains the same membership the
+        // cycle-driven index does.
+        let m = model();
+        let cycles = cycles_for(&m, 150);
+        let traces: Vec<DeviceSchedule> = cycles
+            .iter()
+            .map(|c| DeviceSchedule::from(c.materialize(50_000.0)))
+            .collect();
+        let mut a = AvailabilityIndex::new(cycles.clone(), 0.0);
+        let mut b = AvailabilityIndex::from_schedules(traces, 0.0);
+        let mut t = 0.0;
+        for step in 0..300 {
+            t += 11.7 + (step % 13) as f64 * 9.1;
+            if t > 45_000.0 {
+                break; // stay well inside the materialization horizon
+            }
+            if boundary_distance(&cycles, t) < 1e-6 {
+                continue;
+            }
+            a.advance(t);
+            b.advance(t);
+            assert_eq!(
+                a.idle_online_sorted(),
+                b.idle_online_sorted(),
+                "trace-driven index diverged at t={t}"
+            );
+        }
+    }
+
+    #[test]
+    fn index_handles_mixed_and_exhausted_schedules() {
+        // one cycle, one finite trace, one always-on, one never-on
+        let schedules = vec![
+            DeviceSchedule::Cycle(Cycle { on_s: 50.0, off_s: 50.0, phase_s: 0.0 }),
+            DeviceSchedule::from(AvailabilityTrace {
+                initially_on: true,
+                toggles_s: vec![30.0],
+            }),
+            DeviceSchedule::always_on(),
+            DeviceSchedule::from(AvailabilityTrace {
+                initially_on: false,
+                toggles_s: Vec::new(),
+            }),
+        ];
+        let mut idx = AvailabilityIndex::from_schedules(schedules, 0.0);
+        assert_eq!(idx.idle_online_sorted(), vec![0, 1, 2]);
+        idx.advance(40.0); // device 1's trace is exhausted (off forever)
+        assert_eq!(idx.idle_online_sorted(), vec![0, 2]);
+        idx.advance(60.0); // cycle device 0 toggles off at 50
+        assert_eq!(idx.idle_online_sorted(), vec![2]);
+        idx.advance(120.0); // device 0 back on at 100; 1 and 3 stay gone
+        assert_eq!(idx.idle_online_sorted(), vec![0, 2]);
+        idx.advance(1.0e6);
+        assert_eq!(idx.idle_online_sorted(), vec![0, 2]);
     }
 
     #[test]

@@ -43,20 +43,22 @@ use crate::persist::{CheckpointStore, DeviceState, EngineCheckpoint, InFlightDis
 use crate::telemetry::log;
 use crate::util::rng::Rng;
 
-use super::availability::{Availability, AvailabilityIndex, Cycle};
+use super::availability::{AvailabilityIndex, DeviceSchedule};
 use super::policy::{Candidate, SelectionContext, SelectionPolicy};
+use super::trace::AvailabilitySource;
 
 // ---------------------------------------------------------------------------
 // Population
 // ---------------------------------------------------------------------------
 
-/// One virtual device: a cost profile, an availability cycle, and the
-/// scheduler-visible training history.
+/// One virtual device: a cost profile, an availability schedule
+/// (synthetic cycle or recorded trace), and the scheduler-visible
+/// training history.
 #[derive(Debug, Clone)]
 pub struct VirtualDevice {
     pub device: &'static DeviceProfile,
     pub num_examples: u64,
-    pub cycle: Cycle,
+    pub schedule: DeviceSchedule,
     /// Data-difficulty skew in [0, 1): gives utility policies per-client
     /// signal under the surrogate trainer.
     pub skew: f64,
@@ -92,7 +94,12 @@ pub fn default_device_mix() -> Vec<(&'static DeviceProfile, f64)> {
 
 impl Population {
     /// Synthesize a population from the config: profiles drawn from the
-    /// device mix, data sizes and availability cycles from the seed.
+    /// device mix, data sizes from the seed, and availability schedules
+    /// from the configured [`AvailabilitySource`] (churn model, trace
+    /// file, or scenario generator). Devices a trace tags with a
+    /// hardware class get that profile instead of a mix draw — the mix
+    /// draw is still consumed so class tags never shift other devices'
+    /// random streams.
     pub fn synthesize(cfg: &ScheduleConfig) -> Result<Population> {
         let mix: Vec<(&'static DeviceProfile, f64)> = if cfg.device_mix.is_empty() {
             default_device_mix()
@@ -106,7 +113,7 @@ impl Population {
         if total_w <= 0.0 || total_w.is_nan() {
             return Err(Error::Config("device mix weights must sum > 0".into()));
         }
-        let availability = Availability::from_spec(cfg.churn.as_ref(), cfg.seed ^ 0xC4A2);
+        let source = AvailabilitySource::from_config(cfg)?;
         let mut rng = Rng::seed_from(cfg.seed ^ 0x0F0B);
         let mut devices = Vec::with_capacity(cfg.population);
         for i in 0..cfg.population {
@@ -119,10 +126,13 @@ impl Population {
                 }
                 r -= w;
             }
+            if let Some(class) = source.class(i as u64) {
+                profile = class;
+            }
             devices.push(VirtualDevice {
                 device: profile,
                 num_examples: 64 + rng.below(448) as u64,
-                cycle: availability.cycle(i as u64),
+                schedule: source.schedule(i as u64),
                 skew: rng.f64(),
                 last_loss: None,
                 last_selected_round: None,
@@ -558,8 +568,8 @@ impl<T: CohortTrainer> Engine<T> {
             None => ExecMode::Sync,
         };
         let index = match mode {
-            ExecMode::Async { .. } => Some(AvailabilityIndex::new(
-                pop.devices.iter().map(|d| d.cycle).collect(),
+            ExecMode::Async { .. } => Some(AvailabilityIndex::from_schedules(
+                pop.devices.iter().map(|d| d.schedule.clone()).collect(),
                 0.0,
             )),
             ExecMode::Sync => None,
@@ -751,7 +761,7 @@ impl<T: CohortTrainer> Engine<T> {
         let mut rescans = 0u32;
         loop {
             for (i, d) in self.pop.devices.iter().enumerate() {
-                if d.cycle.is_on(now) {
+                if d.schedule.is_on(now) {
                     avail.push(i as u32);
                 }
             }
@@ -767,7 +777,8 @@ impl<T: CohortTrainer> Engine<T> {
             let mut dt = f64::INFINITY;
             for d in &self.pop.devices {
                 // every device is offline here, so the delay is positive
-                dt = dt.min(d.cycle.next_on_delay_s(now));
+                // (infinite for a trace that never comes back)
+                dt = dt.min(d.schedule.next_on_delay_s(now));
             }
             if !dt.is_finite() {
                 return Err(Error::Protocol(format!(
@@ -906,7 +917,7 @@ impl<T: CohortTrainer> Engine<T> {
             // pre-index rescan filtered on `is_on(now)` implicitly; do
             // the same here — reconcile the index and skip the dispatch
             // (the retry loop above won't see the device again).
-            if !self.pop.devices[i].cycle.is_on(now) {
+            if !self.pop.devices[i].schedule.is_on(now) {
                 self.index
                     .as_mut()
                     .expect("streaming mode has an index")
@@ -946,7 +957,7 @@ impl<T: CohortTrainer> Engine<T> {
         let d = &mut self.pop.devices[i];
         // online at dispatch; the connection survives only to this
         // on-dwell's end
-        let first_off_s = d.cycle.on_dwell_end_s(now);
+        let first_off_s = d.schedule.on_dwell_end_s(now);
         let (cutoff_s, outcome) = if first_off_s < deadline_abs.min(full_finish_s) {
             (first_off_s, Outcome::DropChurn)
         } else if full_finish_s > deadline_abs {
@@ -1272,8 +1283,9 @@ impl<T: CohortTrainer> Engine<T> {
         e.avail_count = ckpt.avail_count as usize;
         match (e.mode, &ckpt.index) {
             (ExecMode::Async { .. }, Some(state)) => {
-                let cycles: Vec<Cycle> = e.pop.devices.iter().map(|d| d.cycle).collect();
-                e.index = Some(AvailabilityIndex::from_state(cycles, state.clone())?);
+                let schedules: Vec<DeviceSchedule> =
+                    e.pop.devices.iter().map(|d| d.schedule.clone()).collect();
+                e.index = Some(AvailabilityIndex::from_state(schedules, state.clone())?);
             }
             (ExecMode::Sync, None) => {}
             _ => {
@@ -1649,5 +1661,120 @@ mod tests {
         let mut c = cfg();
         c.device_mix = vec![("nokia3310".into(), 1.0)];
         assert!(Population::synthesize(&c).is_err());
+    }
+
+    // -- trace- and scenario-driven populations ---------------------------
+
+    fn write_trace(tag: &str, text: &str) -> std::path::PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "flowrs-engine-trace-{tag}-{}.csv",
+            std::process::id()
+        ));
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn trace_file_drives_availability_and_classes() {
+        // 2 always-on jetsons, 1 rpi that disconnects at t=30 s, 1 phone
+        // that only comes online at t=50 s
+        let text = "device,init,class,toggles_s\n\
+                    0,1,jetson,\n\
+                    1,1,jetson,\n\
+                    2,1,rpi,30\n\
+                    3,0,phone,50\n";
+        let p = write_trace("classes", text);
+        let c = ScheduleConfig::default()
+            .named("trace-test")
+            .population(4)
+            .cohort(4)
+            .rounds(2)
+            .seed(3)
+            .trace_file(p.to_str().unwrap());
+        let pop = Population::synthesize(&c).unwrap();
+        assert_eq!(pop.devices[0].device.name, "jetson_tx2_gpu");
+        assert_eq!(pop.devices[2].device.name, "raspberry_pi4");
+        assert_eq!(pop.devices[3].device.name, "pixel4");
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.rounds.len(), 2);
+        // round 1 at t=0: devices 0, 1, 2 online; the RPi's recorded
+        // disconnect at 30 s kills its ≈71 s dispatch mid-flight
+        assert_eq!(report.rounds[0].available, 3);
+        assert_eq!(report.rounds[0].dropped_churn, 1);
+        // the class tag must drive the cost model: the doomed RPi burns
+        // real (wasted) energy at RPi power draw
+        assert!(report.rounds[0].wasted_energy_j > 0.0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn trace_population_mismatch_is_rejected() {
+        let p = write_trace(
+            "mismatch",
+            "device,init,class,toggles_s\n0,1,,\n1,1,,\n",
+        );
+        let c = cfg().population(5).trace_file(p.to_str().unwrap());
+        let err = Population::synthesize(&c).unwrap_err();
+        assert!(
+            err.to_string().contains("describes 2 devices"),
+            "unexpected error: {err}"
+        );
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn scenario_population_runs_and_pins_classes() {
+        let c = cfg().population(300).cohort(20).rounds(3).scenario("diurnal");
+        let pop = Population::synthesize(&c).unwrap();
+        assert!(pop.devices.iter().all(|d| {
+            !d.device.name.starts_with("jetson") && d.device.name != "raspberry_pi4"
+        }));
+        let report = Engine::new(&c, SurrogateTrainer::default())
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.rounds.len(), 3);
+        assert!(report.rounds.iter().all(|r| r.available > 0));
+    }
+
+    #[test]
+    fn scenario_async_runs_are_deterministic() {
+        let c = cfg()
+            .population(200)
+            .cohort(16)
+            .buffered(8)
+            .rounds(5)
+            .scenario("flash-crowd");
+        let a = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        let b = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        assert_eq!(a.to_csv(), b.to_csv());
+        assert!(a.rounds.iter().all(|r| r.completed == 8));
+    }
+
+    #[test]
+    fn trace_driven_async_checkpoint_resume_is_bit_identical() {
+        let c = cfg()
+            .population(150)
+            .cohort(12)
+            .buffered(6)
+            .rounds(6)
+            .seed(29)
+            .scenario("flash-crowd");
+        let full = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
+        let mut e = Engine::new(&c, SurrogateTrainer::default()).unwrap();
+        let mut rounds = Vec::new();
+        for _ in 0..3 {
+            rounds.push(e.run_version().unwrap());
+        }
+        let ck = e.checkpoint(&rounds).unwrap();
+        assert!(ck.index.is_some(), "streaming trace engines persist their index");
+        let resumed = Engine::resume(&c, SurrogateTrainer::default(), &ck)
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(resumed.to_csv(), full.to_csv());
     }
 }

@@ -12,11 +12,18 @@
 //!   state.
 //! * [`availability`] — per-device on/off churn so cohorts are drawn
 //!   from *available* devices only (deterministic cycles + explicit
-//!   trace synthesis from a seeded RNG), plus the incremental
+//!   trace synthesis from a seeded RNG), the
+//!   [`availability::DeviceSchedule`] abstraction over cycles and
+//!   recorded toggle traces, plus the incremental
 //!   [`availability::AvailabilityIndex`]: a time wheel over next
 //!   state-transitions + an idle-online free-list, so the streaming
 //!   core's per-event top-up is O(1)-amortized instead of an
-//!   O(population) rescan.
+//!   O(population) rescan — over cycles and explicit traces alike.
+//! * [`trace`] — trace-driven availability and device-class scenarios:
+//!   [`trace::TraceSet`] files (CSV/JSON, spec in
+//!   `rust/src/sched/TRACES.md`), the named scenario generators
+//!   (`diurnal`, `charging-gated`, `flash-crowd`), and the
+//!   [`trace::AvailabilitySource`] abstraction the engine consumes.
 //! * [`engine`] — **one** event-driven virtual-time core
 //!   ([`engine::ExecMode`]) that scales to 100k–1M virtual devices by
 //!   advancing a binary-heap event queue over modeled costs, training
@@ -37,9 +44,11 @@
 pub mod availability;
 pub mod engine;
 pub mod policy;
+pub mod trace;
 
 pub use availability::{
-    Availability, AvailabilityIndex, AvailabilityTrace, ChurnModel, ChurnSpec, Cycle, IndexState,
+    Availability, AvailabilityIndex, AvailabilityTrace, ChurnModel, ChurnSpec, Cycle,
+    DeviceSchedule, IndexState,
 };
 pub use engine::{
     CohortTrainer, Engine, ExecMode, Population, PopulationReport, PopulationRound,
@@ -49,3 +58,4 @@ pub use policy::{
     Candidate, DeadlineAware, FairnessCap, SelectionContext, SelectionPolicy, UniformRandom,
     UtilityBased,
 };
+pub use trace::{AvailabilitySource, TraceEntry, TraceSet};

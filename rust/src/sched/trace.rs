@@ -1,0 +1,770 @@
+//! Trace-driven availability and device-class scenarios.
+//!
+//! The paper's core finding is that on-device FL cost is dominated by
+//! *which* devices are available and *what class of hardware* they are
+//! — smartphones, Jetson TX2s and Raspberry Pis differ by an order of
+//! magnitude in per-round compute and energy. The synthetic
+//! [`ChurnModel`](super::availability::ChurnModel) on/off cycle covers
+//! none of the structure real deployments show (day/night rhythms,
+//! charging-gated participation, flash crowds), so this module makes
+//! *recorded* availability a first-class input:
+//!
+//! * [`TraceSet`] — per-device explicit toggle schedules plus optional
+//!   hardware-class tags, loaded from a documented CSV or JSON file
+//!   (format spec: `rust/src/sched/TRACES.md`).
+//! * [`scenario_trace_set`] — a library of named generators
+//!   (`diurnal`, `charging-gated`, `flash-crowd`) that synthesize
+//!   deployment-shaped trace sets deterministically from a seed.
+//! * [`AvailabilitySource`] — the abstraction the engine consumes: the
+//!   pre-existing synthetic model and trace sets behind one surface,
+//!   yielding a [`DeviceSchedule`] (and optionally a pinned
+//!   [`DeviceProfile`]) per device.
+//!
+//! Class tags feed straight into the engine's cost accounting: a
+//! device tagged `rpi` is modeled with the Raspberry Pi's compute-time
+//! and power figures wherever the cost model is consulted (dispatch
+//! timing, energy, policy feasibility), exactly as if the device mix
+//! had assigned it that profile.
+#![deny(missing_docs)]
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::device::{profiles, DeviceProfile};
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+use super::availability::{Availability, AvailabilityTrace, Cycle, DeviceSchedule};
+
+/// The exact header line a trace CSV must start with.
+pub const CSV_HEADER: &str = "device,init,class,toggles_s";
+
+/// Names of the built-in scenarios, in the order `flowrs sched
+/// --scenario` documents them.
+pub const SCENARIOS: &[&str] = &["diurnal", "charging-gated", "flash-crowd"];
+
+/// Seconds in a day (the diurnal generators' base period).
+const DAY_S: f64 = 86_400.0;
+
+/// Resolve a trace class tag: a shorthand alias (`phone`, `tablet`,
+/// `jetson`, `rpi`) or any exact device-profile name from the
+/// inventory.
+pub fn resolve_class(tag: &str) -> Result<&'static DeviceProfile> {
+    let name = match tag {
+        "phone" => "pixel4",
+        "tablet" => "galaxy_tab_s6",
+        "jetson" => "jetson_tx2_gpu",
+        "rpi" => "raspberry_pi4",
+        other => other,
+    };
+    profiles::by_name(name).map_err(|_| {
+        Error::Config(format!(
+            "unknown device class {tag:?} (phone | tablet | jetson | rpi or an \
+             exact profile name; see `flowrs devices`)"
+        ))
+    })
+}
+
+/// One device's recorded schedule plus its optional hardware-class tag.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    /// The device's availability trace (shared with the index).
+    pub trace: Arc<AvailabilityTrace>,
+    /// Hardware class pinned by the trace (`None` = the device draws
+    /// its profile from the configured device mix).
+    pub class: Option<&'static DeviceProfile>,
+}
+
+/// A recorded availability scenario: one [`TraceEntry`] per device,
+/// dense over device ids `0..len`.
+#[derive(Debug, Clone, Default)]
+pub struct TraceSet {
+    /// Per-device entries, indexed by device id.
+    pub devices: Vec<TraceEntry>,
+}
+
+impl TraceSet {
+    /// Number of devices the trace describes.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Whether the trace describes no devices at all.
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Load a trace file: JSON if the content starts with `{`, CSV
+    /// otherwise (see `rust/src/sched/TRACES.md`).
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Config(format!("cannot read trace {}: {e}", path.display()))
+        })?;
+        Self::parse(&text)
+            .map_err(|e| Error::Config(format!("trace {}: {e}", path.display())))
+    }
+
+    /// Parse trace text: JSON if it starts with `{`, CSV otherwise.
+    pub fn parse(text: &str) -> Result<Self> {
+        if text.trim_start().starts_with('{') {
+            Self::parse_json(text)
+        } else {
+            Self::parse_csv(text)
+        }
+    }
+
+    /// Parse the CSV form. Blank lines and `#` comments are skipped;
+    /// the first remaining line must be exactly [`CSV_HEADER`].
+    pub fn parse_csv(text: &str) -> Result<Self> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        match lines.next() {
+            Some(h) if h == CSV_HEADER => {}
+            other => {
+                return Err(Error::Config(format!(
+                    "trace CSV must start with the header {CSV_HEADER:?}, found {other:?}"
+                )))
+            }
+        }
+        let mut devices = Vec::new();
+        for line in lines {
+            let cols: Vec<&str> = line.splitn(4, ',').collect();
+            if cols.len() != 4 {
+                return Err(Error::Config(format!(
+                    "trace row needs 4 columns ({CSV_HEADER}): {line:?}"
+                )));
+            }
+            let device: usize = cols[0]
+                .parse()
+                .map_err(|_| Error::Config(format!("bad device id {:?}", cols[0])))?;
+            if device != devices.len() {
+                return Err(Error::Config(format!(
+                    "trace device ids must be dense and ascending: row {} is \
+                     tagged device {device}",
+                    devices.len()
+                )));
+            }
+            let initially_on = parse_init(cols[1])?;
+            let class = match cols[2] {
+                "" => None,
+                tag => Some(resolve_class(tag)?),
+            };
+            let toggles_s = parse_toggles(cols[3])?;
+            devices.push(TraceEntry {
+                trace: Arc::new(AvailabilityTrace { initially_on, toggles_s }),
+                class,
+            });
+        }
+        let set = TraceSet { devices };
+        set.validate()?;
+        Ok(set)
+    }
+
+    /// Parse the JSON form:
+    /// `{"devices": [{"device": 0, "initially_on": true,
+    /// "class": "phone", "toggles_s": [30.5, 120.0]}, ...]}` —
+    /// `class` and `toggles_s` are optional per device.
+    pub fn parse_json(text: &str) -> Result<Self> {
+        let doc = Json::parse(text)?;
+        let arr = doc.get("devices")?.as_arr()?;
+        let mut devices = Vec::with_capacity(arr.len());
+        for (i, d) in arr.iter().enumerate() {
+            let device = d.get("device")?.as_usize()?;
+            if device != i {
+                return Err(Error::Config(format!(
+                    "trace device ids must be dense and ascending: entry {i} is \
+                     tagged device {device}"
+                )));
+            }
+            let initially_on = d.get("initially_on")?.as_bool()?;
+            let class = match d.opt("class") {
+                Some(v) => Some(resolve_class(v.as_str()?)?),
+                None => None,
+            };
+            let toggles_s = match d.opt("toggles_s") {
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(Json::as_f64)
+                    .collect::<Result<Vec<f64>>>()?,
+                None => Vec::new(),
+            };
+            devices.push(TraceEntry {
+                trace: Arc::new(AvailabilityTrace { initially_on, toggles_s }),
+                class,
+            });
+        }
+        let set = TraceSet { devices };
+        set.validate()?;
+        Ok(set)
+    }
+
+    /// Check the trace invariants the engine depends on: at least one
+    /// device, and per device strictly increasing, finite, positive
+    /// toggle times.
+    pub fn validate(&self) -> Result<()> {
+        if self.devices.is_empty() {
+            return Err(Error::Config("trace describes no devices".into()));
+        }
+        for (i, e) in self.devices.iter().enumerate() {
+            let t = &e.trace.toggles_s;
+            for (j, &x) in t.iter().enumerate() {
+                if !x.is_finite() || x <= 0.0 {
+                    return Err(Error::Config(format!(
+                        "device {i}: toggle {x} must be finite and > 0"
+                    )));
+                }
+                if j > 0 && x <= t[j - 1] {
+                    return Err(Error::Config(format!(
+                        "device {i}: toggle times must be strictly increasing \
+                         ({} then {x})",
+                        t[j - 1]
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the CSV form. Toggle times print with Rust's
+    /// shortest round-trip `f64` formatting, so
+    /// `parse_csv(to_csv(set))` reproduces the set bit-exactly.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(CSV_HEADER);
+        out.push('\n');
+        for (i, e) in self.devices.iter().enumerate() {
+            let toggles = e
+                .trace
+                .toggles_s
+                .iter()
+                .map(|t| format!("{t}"))
+                .collect::<Vec<_>>()
+                .join(";");
+            out.push_str(&format!(
+                "{i},{},{},{toggles}\n",
+                u8::from(e.trace.initially_on),
+                e.class.map(|c| c.name).unwrap_or(""),
+            ));
+        }
+        out
+    }
+}
+
+fn parse_init(s: &str) -> Result<bool> {
+    match s {
+        "1" | "on" => Ok(true),
+        "0" | "off" => Ok(false),
+        other => Err(Error::Config(format!(
+            "bad init column {other:?} (1 | 0 | on | off)"
+        ))),
+    }
+}
+
+fn parse_toggles(s: &str) -> Result<Vec<f64>> {
+    if s.is_empty() {
+        return Ok(Vec::new());
+    }
+    s.split(';')
+        .map(|x| {
+            x.trim()
+                .parse::<f64>()
+                .map_err(|_| Error::Config(format!("bad toggle time {x:?}")))
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Scenario library
+// ---------------------------------------------------------------------------
+
+/// Generate a named scenario as an explicit [`TraceSet`] over
+/// `[0, horizon_s)`, deterministically from `seed`. Devices freeze in
+/// their final state past the horizon, so pick one beyond the virtual
+/// time the run will reach (the `scenario_horizon_s` config knob).
+///
+/// * `diurnal` — phones and tablets plugged in overnight: one 8–11 h
+///   charging window per 24 h day, per-device jitter on when it opens.
+/// * `charging-gated` — the Flower on-device constraint (train only
+///   while charging *and* idle): one short 1.5–3 h evening session per
+///   day, phones only. Low duty, strongly time-of-day correlated.
+/// * `flash-crowd` — sparse uncorrelated background availability
+///   (20–50 min windows, hours apart) plus a synchronized surge in
+///   `[3600 s, 7200 s)` where the whole population is online at once.
+pub fn scenario_trace_set(
+    name: &str,
+    population: usize,
+    seed: u64,
+    horizon_s: f64,
+) -> Result<TraceSet> {
+    if population == 0 {
+        return Err(Error::Config("scenario population must be > 0".into()));
+    }
+    if !(horizon_s > 0.0) || !horizon_s.is_finite() {
+        return Err(Error::Config(
+            "scenario horizon must be finite and > 0".into(),
+        ));
+    }
+    for &(n, f) in SCENARIO_TABLE {
+        if n == name {
+            return Ok(f(population, seed, horizon_s));
+        }
+    }
+    Err(Error::Config(format!(
+        "unknown scenario {name:?} ({})",
+        SCENARIOS.join(" | ")
+    )))
+}
+
+/// A scenario generator: `(population, seed, horizon_s) -> TraceSet`.
+type ScenarioFn = fn(usize, u64, f64) -> TraceSet;
+
+/// The single scenario registry — [`SCENARIOS`] and every dispatch /
+/// error message derive from this, so adding a scenario is one entry
+/// here plus its generator (consistency pinned by a unit test).
+const SCENARIO_TABLE: &[(&str, ScenarioFn)] = &[
+    ("diurnal", diurnal),
+    ("charging-gated", charging_gated),
+    ("flash-crowd", flash_crowd),
+];
+
+/// Draw one class from a static `(profile name, weight)` mix.
+fn pick_class(
+    rng: &mut Rng,
+    classes: &[(&'static str, f64)],
+) -> &'static DeviceProfile {
+    let total: f64 = classes.iter().map(|&(_, w)| w).sum();
+    let mut r = rng.f64() * total;
+    let mut name = classes[classes.len() - 1].0;
+    for &(n, w) in classes {
+        if r < w {
+            name = n;
+            break;
+        }
+        r -= w;
+    }
+    profiles::by_name(name).expect("scenario classes are static inventory names")
+}
+
+/// Build the daily-window trace for one device: online during
+/// `[start_s, start_s + len_s)` (seconds-of-day, wrapping) each day.
+fn daily_window(start_s: f64, len_s: f64, horizon_s: f64) -> AvailabilityTrace {
+    debug_assert!(len_s < DAY_S && start_s >= 0.0 && start_s < DAY_S);
+    // (t + (DAY - start)) mod DAY < len  ⇔  t-of-day ∈ [start, start+len)
+    Cycle { on_s: len_s, off_s: DAY_S - len_s, phase_s: DAY_S - start_s }
+        .materialize(horizon_s)
+}
+
+/// Day/night cycles: devices charge (and train) overnight.
+fn diurnal(population: usize, seed: u64, horizon_s: f64) -> TraceSet {
+    let classes: [(&str, f64); 5] = [
+        ("pixel4", 0.30),
+        ("pixel3", 0.25),
+        ("pixel2", 0.15),
+        ("galaxy_tab_s6", 0.18),
+        ("galaxy_tab_s4", 0.12),
+    ];
+    let root = Rng::seed_from(seed ^ 0xD1A1);
+    let mut devices = Vec::with_capacity(population);
+    for d in 0..population as u64 {
+        let mut rng = root.derive(d);
+        let start_s = 72_000.0 + rng.f64() * 14_400.0; // plugged in 20:00–24:00
+        let len_s = 28_800.0 + rng.f64() * 10_800.0; // 8–11 h on the charger
+        let class = pick_class(&mut rng, &classes);
+        devices.push(TraceEntry {
+            trace: Arc::new(daily_window(start_s % DAY_S, len_s, horizon_s)),
+            class: Some(class),
+        });
+    }
+    TraceSet { devices }
+}
+
+/// Charging- and idle-gated participation (the Flower on-device
+/// constraint): one short evening session per day, phones only.
+fn charging_gated(population: usize, seed: u64, horizon_s: f64) -> TraceSet {
+    let classes: [(&str, f64); 3] =
+        [("pixel4", 0.40), ("pixel3", 0.35), ("pixel2", 0.25)];
+    let root = Rng::seed_from(seed ^ 0xC4A6);
+    let mut devices = Vec::with_capacity(population);
+    for d in 0..population as u64 {
+        let mut rng = root.derive(d);
+        let start_s = (68_400.0 + rng.f64() * 21_600.0) % DAY_S; // 19:00–01:00
+        let len_s = 5_400.0 + rng.f64() * 5_400.0; // 1.5–3 h charging + idle
+        let class = pick_class(&mut rng, &classes);
+        devices.push(TraceEntry {
+            trace: Arc::new(daily_window(start_s, len_s, horizon_s)),
+            class: Some(class),
+        });
+    }
+    TraceSet { devices }
+}
+
+/// Sparse background availability plus one synchronized surge.
+fn flash_crowd(population: usize, seed: u64, horizon_s: f64) -> TraceSet {
+    const SURGE_START_S: f64 = 3_600.0;
+    const SURGE_END_S: f64 = 7_200.0;
+    let root = Rng::seed_from(seed ^ 0xF1A5);
+    let mut devices = Vec::with_capacity(population);
+    for d in 0..population as u64 {
+        let mut rng = root.derive(d);
+        let on_s = 1_200.0 + rng.f64() * 1_800.0; // 20–50 min windows
+        let off_s = 9_000.0 + rng.f64() * 9_000.0; // 2.5–5 h gaps
+        let phase_s = rng.f64() * (on_s + off_s);
+        let base = Cycle { on_s, off_s, phase_s }.materialize(horizon_s);
+        let trace =
+            union_with_window(&base, SURGE_START_S, SURGE_END_S.min(horizon_s), horizon_s);
+        devices.push(TraceEntry { trace: Arc::new(trace), class: None });
+    }
+    TraceSet { devices }
+}
+
+/// Union a trace's on-intervals with the extra window `[from_s, to_s)`.
+fn union_with_window(
+    base: &AvailabilityTrace,
+    from_s: f64,
+    to_s: f64,
+    horizon_s: f64,
+) -> AvailabilityTrace {
+    if to_s <= from_s {
+        return base.clone();
+    }
+    // materialize the base's on-intervals over [0, horizon)
+    let mut intervals: Vec<(f64, f64)> = Vec::new();
+    let mut on = base.initially_on;
+    let mut t = 0.0;
+    for &x in &base.toggles_s {
+        if on {
+            intervals.push((t, x));
+        }
+        on = !on;
+        t = x;
+    }
+    if on {
+        intervals.push((t, horizon_s));
+    }
+    intervals.push((from_s, to_s));
+    intervals.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut merged: Vec<(f64, f64)> = Vec::new();
+    for (a, b) in intervals {
+        match merged.last_mut() {
+            Some(last) if a <= last.1 => last.1 = last.1.max(b),
+            _ => merged.push((a, b)),
+        }
+    }
+    // re-emit as initial state + toggles strictly inside (0, horizon)
+    let initially_on = merged.first().map(|&(a, _)| a <= 0.0).unwrap_or(false);
+    let mut toggles_s = Vec::new();
+    for (a, b) in merged {
+        if a > 0.0 && a < horizon_s {
+            toggles_s.push(a);
+        }
+        if b > a && b < horizon_s {
+            toggles_s.push(b);
+        }
+    }
+    AvailabilityTrace { initially_on, toggles_s }
+}
+
+// ---------------------------------------------------------------------------
+// AvailabilitySource
+// ---------------------------------------------------------------------------
+
+/// Where a population's availability schedules come from: the
+/// synthetic model (always-on / churn) or an explicit trace set
+/// (recorded file or generated scenario). This is the one surface the
+/// engine consumes, so a replayed deployment trace drives exactly the
+/// machinery the synthetic model does.
+#[derive(Debug, Clone)]
+pub enum AvailabilitySource {
+    /// Synthetic model — the pre-trace behavior, bit-identical.
+    Model(Availability),
+    /// Explicit per-device traces with optional class tags.
+    Trace(TraceSet),
+}
+
+impl AvailabilitySource {
+    /// Build the source a [`crate::config::ScheduleConfig`] describes:
+    /// an explicit `trace_file`, a named `scenario`, or the
+    /// churn/always-on model. A trace file must describe exactly
+    /// `population` devices (scenarios scale to any population).
+    pub fn from_config(cfg: &crate::config::ScheduleConfig) -> Result<Self> {
+        match (&cfg.trace_file, &cfg.scenario) {
+            (Some(_), Some(_)) => Err(Error::Config(
+                "trace_file and scenario are mutually exclusive".into(),
+            )),
+            (Some(path), None) => {
+                let set = TraceSet::from_file(Path::new(path))?;
+                if set.len() != cfg.population {
+                    return Err(Error::Config(format!(
+                        "trace {path:?} describes {} devices; set population {} \
+                         to match (configured: {})",
+                        set.len(),
+                        set.len(),
+                        cfg.population
+                    )));
+                }
+                Ok(AvailabilitySource::Trace(set))
+            }
+            (None, Some(name)) => Ok(AvailabilitySource::Trace(scenario_trace_set(
+                name,
+                cfg.population,
+                cfg.seed,
+                cfg.scenario_horizon_s,
+            )?)),
+            (None, None) => Ok(AvailabilitySource::Model(Availability::from_spec(
+                cfg.churn.as_ref(),
+                cfg.seed ^ 0xC4A2,
+            ))),
+        }
+    }
+
+    /// The device's schedule under this source.
+    pub fn schedule(&self, device: u64) -> DeviceSchedule {
+        match self {
+            AvailabilitySource::Model(a) => DeviceSchedule::Cycle(a.cycle(device)),
+            AvailabilitySource::Trace(t) => {
+                DeviceSchedule::Trace(Arc::clone(&t.devices[device as usize].trace))
+            }
+        }
+    }
+
+    /// The hardware class the source pins for `device`, if any — the
+    /// engine's cost accounting then models the device with that
+    /// profile instead of drawing one from the mix.
+    pub fn class(&self, device: u64) -> Option<&'static DeviceProfile> {
+        match self {
+            AvailabilitySource::Model(_) => None,
+            AvailabilitySource::Trace(t) => t.devices[device as usize].class,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(initially_on: bool, toggles: &[f64], class: Option<&str>) -> TraceEntry {
+        TraceEntry {
+            trace: Arc::new(AvailabilityTrace {
+                initially_on,
+                toggles_s: toggles.to_vec(),
+            }),
+            class: class.map(|c| resolve_class(c).unwrap()),
+        }
+    }
+
+    #[test]
+    fn csv_roundtrip_is_exact() {
+        let set = TraceSet {
+            devices: vec![
+                entry(true, &[30.5, 120.0, 400.25], Some("phone")),
+                entry(false, &[10.0], Some("rpi")),
+                entry(true, &[], None),
+                entry(false, &[0.1, 0.2, 0.30000000000000004], Some("jetson_tx2_cpu")),
+            ],
+        };
+        let text = set.to_csv();
+        let back = TraceSet::parse(&text).unwrap();
+        assert_eq!(back.len(), set.len());
+        for (a, b) in set.devices.iter().zip(&back.devices) {
+            assert_eq!(a.trace.initially_on, b.trace.initially_on);
+            assert_eq!(a.trace.toggles_s, b.trace.toggles_s, "toggles must round-trip bit-exactly");
+            assert_eq!(a.class.map(|c| c.name), b.class.map(|c| c.name));
+        }
+    }
+
+    #[test]
+    fn csv_parser_accepts_comments_aliases_and_on_off() {
+        let text = "\
+# recorded 2026-07-01, anonymized
+device,init,class,toggles_s
+
+0,on,phone,30;60
+1,off,raspberry_pi4,15.5
+2,1,,\n";
+        let set = TraceSet::parse(text).unwrap();
+        assert_eq!(set.len(), 3);
+        assert!(set.devices[0].trace.initially_on);
+        assert_eq!(set.devices[0].class.unwrap().name, "pixel4");
+        assert!(!set.devices[1].trace.initially_on);
+        assert_eq!(set.devices[1].class.unwrap().name, "raspberry_pi4");
+        assert!(set.devices[2].class.is_none());
+        assert!(set.devices[2].trace.toggles_s.is_empty());
+    }
+
+    #[test]
+    fn json_parser_accepts_optional_fields() {
+        let text = r#"{
+            "devices": [
+                {"device": 0, "initially_on": true, "class": "jetson",
+                 "toggles_s": [30.5, 120.0]},
+                {"device": 1, "initially_on": false}
+            ]
+        }"#;
+        let set = TraceSet::parse(text).unwrap();
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.devices[0].class.unwrap().name, "jetson_tx2_gpu");
+        assert_eq!(set.devices[0].trace.toggles_s, vec![30.5, 120.0]);
+        assert!(set.devices[1].class.is_none());
+        assert!(!set.devices[1].trace.initially_on);
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        let hdr = "device,init,class,toggles_s\n";
+        // unsorted toggles
+        assert!(TraceSet::parse(&format!("{hdr}0,1,,30;20\n")).is_err());
+        // duplicate toggle
+        assert!(TraceSet::parse(&format!("{hdr}0,1,,30;30\n")).is_err());
+        // unknown class
+        assert!(TraceSet::parse(&format!("{hdr}0,1,nokia3310,30\n")).is_err());
+        // non-positive / non-finite toggle times
+        assert!(TraceSet::parse(&format!("{hdr}0,1,,0\n")).is_err());
+        assert!(TraceSet::parse(&format!("{hdr}0,1,,-5\n")).is_err());
+        assert!(TraceSet::parse(&format!("{hdr}0,1,,inf\n")).is_err());
+        // bad init column
+        assert!(TraceSet::parse(&format!("{hdr}0,yes,,30\n")).is_err());
+        // sparse / out-of-order device ids
+        assert!(TraceSet::parse(&format!("{hdr}1,1,,30\n")).is_err());
+        assert!(TraceSet::parse(&format!("{hdr}0,1,,30\n2,1,,40\n")).is_err());
+        // missing header, wrong column count, garbage numbers
+        assert!(TraceSet::parse("0,1,,30\n").is_err());
+        assert!(TraceSet::parse(&format!("{hdr}0,1,30\n")).is_err());
+        assert!(TraceSet::parse(&format!("{hdr}0,1,,x\n")).is_err());
+        // empty trace set
+        assert!(TraceSet::parse(hdr).is_err());
+        // JSON: sparse ids and unknown class
+        assert!(TraceSet::parse(
+            r#"{"devices": [{"device": 1, "initially_on": true}]}"#
+        )
+        .is_err());
+        assert!(TraceSet::parse(
+            r#"{"devices": [{"device": 0, "initially_on": true, "class": "vax"}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scenario_registry_is_consistent() {
+        // SCENARIOS (the list validate() and docs use) and
+        // SCENARIO_TABLE (the dispatch) must never drift apart.
+        let table_names: Vec<&str> = SCENARIO_TABLE.iter().map(|&(n, _)| n).collect();
+        assert_eq!(table_names, SCENARIOS.to_vec());
+    }
+
+    #[test]
+    fn class_aliases_resolve() {
+        assert_eq!(resolve_class("phone").unwrap().name, "pixel4");
+        assert_eq!(resolve_class("tablet").unwrap().name, "galaxy_tab_s6");
+        assert_eq!(resolve_class("jetson").unwrap().name, "jetson_tx2_gpu");
+        assert_eq!(resolve_class("rpi").unwrap().name, "raspberry_pi4");
+        assert_eq!(resolve_class("pixel3").unwrap().name, "pixel3");
+        assert!(resolve_class("vax").is_err());
+    }
+
+    #[test]
+    fn scenarios_are_deterministic_and_well_formed() {
+        for &name in SCENARIOS {
+            let a = scenario_trace_set(name, 200, 42, 172_800.0).unwrap();
+            let b = scenario_trace_set(name, 200, 42, 172_800.0).unwrap();
+            let c = scenario_trace_set(name, 200, 43, 172_800.0).unwrap();
+            assert_eq!(a.len(), 200);
+            a.validate().unwrap();
+            let eq = |x: &TraceSet, y: &TraceSet| {
+                x.devices.iter().zip(&y.devices).all(|(p, q)| {
+                    p.trace.initially_on == q.trace.initially_on
+                        && p.trace.toggles_s == q.trace.toggles_s
+                        && p.class.map(|c| c.name) == q.class.map(|c| c.name)
+                })
+            };
+            assert!(eq(&a, &b), "{name} not deterministic");
+            assert!(!eq(&a, &c), "{name} ignores the seed");
+            // every scenario device toggles at least once over 2 days
+            assert!(
+                a.devices.iter().all(|e| !e.trace.toggles_s.is_empty()),
+                "{name} produced a toggle-free device"
+            );
+        }
+        assert!(scenario_trace_set("weekend", 10, 1, 1000.0).is_err());
+        assert!(scenario_trace_set("diurnal", 0, 1, 1000.0).is_err());
+        assert!(scenario_trace_set("diurnal", 10, 1, -1.0).is_err());
+    }
+
+    #[test]
+    fn diurnal_is_day_night_shaped() {
+        let set = scenario_trace_set("diurnal", 500, 7, 172_800.0).unwrap();
+        let online_at = |t: f64| {
+            set.devices.iter().filter(|e| e.trace.is_on(t)).count()
+        };
+        // midnight (well inside the charging window) vs midday
+        let night = online_at(2.0 * 3600.0);
+        let noon = online_at(12.0 * 3600.0);
+        assert!(
+            night > 400 && noon < 100,
+            "diurnal shape wrong: night={night}, noon={noon} of 500"
+        );
+        // phone/tablet classes only
+        assert!(set.devices.iter().all(|e| {
+            matches!(
+                e.class.unwrap().name,
+                "pixel4" | "pixel3" | "pixel2" | "galaxy_tab_s6" | "galaxy_tab_s4"
+            )
+        }));
+    }
+
+    #[test]
+    fn charging_gated_has_low_evening_duty() {
+        let set = scenario_trace_set("charging-gated", 500, 7, 172_800.0).unwrap();
+        let online_at = |t: f64| {
+            set.devices.iter().filter(|e| e.trace.is_on(t)).count()
+        };
+        // ~2.25 h of 24 h → ≈ 9% duty; at 21:00 sessions overlap most
+        let evening = online_at(21.0 * 3600.0);
+        let noon = online_at(12.0 * 3600.0);
+        assert!(evening > 50, "evening={evening} of 500");
+        assert!(noon < 25, "noon={noon} of 500");
+        assert!(set
+            .devices
+            .iter()
+            .all(|e| e.class.unwrap().name.starts_with("pixel")));
+    }
+
+    #[test]
+    fn flash_crowd_surges_everyone_online() {
+        let set = scenario_trace_set("flash-crowd", 300, 7, 172_800.0).unwrap();
+        let online_at = |t: f64| {
+            set.devices.iter().filter(|e| e.trace.is_on(t)).count()
+        };
+        // inside the surge window the whole population is online
+        assert_eq!(online_at(5_000.0), 300);
+        // background duty is sparse (20–50 min per 2.5–5 h)
+        let background = online_at(50_000.0);
+        assert!(
+            background < 120,
+            "background availability too dense: {background} of 300"
+        );
+        assert!(set.devices.iter().all(|e| e.class.is_none()));
+    }
+
+    #[test]
+    fn union_with_window_merges_and_preserves_invariants() {
+        let base = AvailabilityTrace {
+            initially_on: true,
+            toggles_s: vec![100.0, 3_700.0, 3_800.0, 10_000.0],
+        };
+        let merged = union_with_window(&base, 3_600.0, 7_200.0, 20_000.0);
+        // on [0,100) ∪ [3700,3800) ∪ [10000,20000) ∪ surge [3600,7200)
+        //   = [0,100) ∪ [3600,7200) ∪ [10000,20000)
+        assert!(merged.initially_on);
+        assert_eq!(merged.toggles_s, vec![100.0, 3_600.0, 7_200.0, 10_000.0]);
+        assert!(merged.is_on(5_000.0));
+        assert!(!merged.is_on(8_000.0));
+        assert!(merged.is_on(15_000.0));
+        // still a valid strictly-increasing trace
+        TraceSet { devices: vec![TraceEntry { trace: Arc::new(merged), class: None }] }
+            .validate()
+            .unwrap();
+    }
+}

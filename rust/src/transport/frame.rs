@@ -11,11 +11,15 @@
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
+use crate::util::bytes::{LeReader, LeWriter};
 
 /// Upper bound on a single frame's payload.
 pub const MAX_FRAME: usize = 256 * 1024 * 1024;
 
-/// Write one frame (length prefix + payload) and flush.
+/// Write one frame (length prefix + payload) and flush. The prefix
+/// goes through the shared [`crate::util::bytes`] codec, so all three
+/// byte formats (wire, checkpoint, frame) agree on one little-endian
+/// implementation.
 pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     if payload.len() > MAX_FRAME {
         return Err(Error::Transport(format!(
@@ -23,7 +27,9 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
             payload.len()
         )));
     }
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    let mut prefix = LeWriter::with_capacity(4);
+    prefix.u32(payload.len() as u32);
+    w.write_all(prefix.as_slice())?;
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
@@ -44,7 +50,7 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
             Error::Io(e)
         }
     })?;
-    let len = u32::from_le_bytes(len_buf) as usize;
+    let len = LeReader::new(&len_buf, Error::Transport).u32()? as usize;
     if len > MAX_FRAME {
         return Err(Error::Transport(format!(
             "incoming frame of {len} bytes exceeds MAX_FRAME ({MAX_FRAME})"
@@ -60,6 +66,14 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
 mod tests {
     use super::*;
     use std::io::Cursor;
+
+    #[test]
+    fn frame_prefix_bytes_are_pinned() {
+        // golden vector: u32-LE length prefix, payload verbatim
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abc").unwrap();
+        assert_eq!(buf, vec![3, 0, 0, 0, b'a', b'b', b'c']);
+    }
 
     #[test]
     fn roundtrip_in_memory() {

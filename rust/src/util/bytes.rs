@@ -1,0 +1,286 @@
+//! Shared little-endian byte codec primitives.
+//!
+//! Three subsystems speak hand-rolled little-endian byte formats: the
+//! wire protocol ([`crate::proto::codec`]), the checkpoint container
+//! ([`crate::persist`]) and transport framing
+//! ([`crate::transport::frame`]). Each used to carry its own copy of
+//! the same `to_le_bytes` / `from_le_bytes` plumbing with slightly
+//! different bounds-check error types. This module is the single
+//! implementation all three now build on:
+//!
+//! * [`LeWriter`] — an append-only little-endian byte sink.
+//! * [`LeReader`] — a bounds-checked cursor, parameterized over the
+//!   error *constructor* (`Error::Codec` for the wire,
+//!   `Error::Persist` for checkpoints, `Error::Transport` for frames)
+//!   so each layer keeps its own error category without duplicating
+//!   the primitives.
+//!
+//! Floats are raw IEEE-754 bits in both directions (`f64::to_le_bytes`
+//! *is* `to_bits().to_le_bytes()`), so round-trips are exact, NaN
+//! payloads included. The encodings are pinned byte-for-byte by golden
+//! vectors below and by differential property tests against the
+//! pre-refactor hand-rolled encoders in `rust/tests/proptests.rs` and
+//! the `proto`/`persist` unit tests.
+#![deny(missing_docs)]
+
+use crate::error::{Error, Result};
+
+/// Append-only little-endian byte sink. A thin, inline-friendly layer
+/// over `Vec<u8>` — the value is that every producer goes through one
+/// implementation, so the byte order and float representation cannot
+/// drift between subsystems.
+#[derive(Debug, Default)]
+pub struct LeWriter {
+    buf: Vec<u8>,
+}
+
+impl LeWriter {
+    /// An empty writer.
+    pub fn new() -> Self {
+        LeWriter { buf: Vec::new() }
+    }
+
+    /// An empty writer with `capacity` bytes preallocated.
+    pub fn with_capacity(capacity: usize) -> Self {
+        LeWriter { buf: Vec::with_capacity(capacity) }
+    }
+
+    /// The bytes written so far.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Number of bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Reserve room for at least `additional` more bytes (bulk loops).
+    pub fn reserve(&mut self, additional: usize) {
+        self.buf.reserve(additional);
+    }
+
+    /// Consume the writer, yielding its buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Append raw bytes verbatim.
+    pub fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Append one byte.
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    /// Append a `u16`, little-endian.
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u32`, little-endian.
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `i64`, little-endian two's complement.
+    pub fn i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f32` as its raw IEEE-754 bits, little-endian.
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` as its raw IEEE-754 bits, little-endian.
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Bounds-checked little-endian cursor over a byte slice. Every
+/// accessor fails through the error constructor the owning layer
+/// supplied instead of panicking, so corrupt input degrades to that
+/// layer's own clean error category.
+pub struct LeReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    mk_err: fn(String) -> Error,
+}
+
+impl<'a> LeReader<'a> {
+    /// A cursor at the start of `buf`; `mk_err` wraps failure messages
+    /// (e.g. `Error::Codec`, `Error::Persist`, `Error::Transport`).
+    pub fn new(buf: &'a [u8], mk_err: fn(String) -> Error) -> Self {
+        LeReader { buf, pos: 0, mk_err }
+    }
+
+    /// Current offset from the start of the buffer.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Take the next `n` bytes, or fail with a truncation error.
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                (self.mk_err)(format!(
+                    "truncated input: need {n} bytes at offset {}, have {}",
+                    self.pos,
+                    self.buf.len().saturating_sub(self.pos)
+                ))
+            })?;
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    /// Read a little-endian `u32`.
+    pub fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    /// Read a little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Read a little-endian two's-complement `i64`.
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    /// Read an `f32` from its raw IEEE-754 bits.
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Read an `f64` from its raw IEEE-754 bits.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Fail unless the cursor consumed the whole buffer; `what` names
+    /// the payload for the error message ("message", "checkpoint
+    /// payload", ...).
+    pub fn expect_end(&self, what: &str) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err((self.mk_err)(format!(
+                "{} trailing bytes after {what}",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden vectors: the little-endian encodings are pinned
+    /// byte-for-byte, independent of any consumer.
+    #[test]
+    fn writer_encodings_are_pinned() {
+        let mut w = LeWriter::new();
+        w.u8(0xAB);
+        w.u16(0xF10E);
+        w.u32(0x0102_0304);
+        w.u64(0x1122_3344_5566_7788);
+        w.i64(-2);
+        w.f32(1.0);
+        w.f64(1.5);
+        w.raw(b"ok");
+        assert_eq!(
+            w.into_bytes(),
+            vec![
+                0xAB, // u8
+                0x0E, 0xF1, // u16
+                0x04, 0x03, 0x02, 0x01, // u32
+                0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11, // u64
+                0xFE, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, 0xFF, // i64 -2
+                0x00, 0x00, 0x80, 0x3F, // f32 1.0
+                0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF8, 0x3F, // f64 1.5
+                b'o', b'k',
+            ]
+        );
+    }
+
+    #[test]
+    fn reader_roundtrips_and_bounds_checks() {
+        let mut w = LeWriter::with_capacity(64);
+        w.u8(7);
+        w.u16(513);
+        w.u32(70_000);
+        w.u64(1 << 40);
+        w.i64(-1234);
+        w.f32(-0.5);
+        w.f64(f64::from_bits(0x7FF8_0000_0000_0001)); // NaN payload
+        let bytes = w.into_bytes();
+        let mut r = LeReader::new(&bytes, Error::Codec);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 513);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.i64().unwrap(), -1234);
+        assert_eq!(r.f32().unwrap(), -0.5);
+        assert_eq!(r.f64().unwrap().to_bits(), 0x7FF8_0000_0000_0001);
+        r.expect_end("test payload").unwrap();
+        // reading past the end fails through the supplied constructor
+        let err = r.u8().unwrap_err();
+        assert!(matches!(err, Error::Codec(_)), "got {err:?}");
+        let mut p = LeReader::new(&bytes[..3], Error::Persist);
+        assert!(matches!(p.u32().unwrap_err(), Error::Persist(_)));
+        // trailing bytes are reported, not ignored
+        let mut t = LeReader::new(&bytes, Error::Transport);
+        t.u8().unwrap();
+        let err = t.expect_end("frame").unwrap_err();
+        assert!(err.to_string().contains("trailing bytes after frame"));
+    }
+
+    #[test]
+    fn take_overflow_is_an_error_not_a_panic() {
+        let mut r = LeReader::new(&[1, 2, 3], Error::Codec);
+        r.u8().unwrap();
+        assert!(r.take(usize::MAX).is_err());
+        assert_eq!(r.remaining(), 2);
+        assert_eq!(r.pos(), 1);
+    }
+}

@@ -3,6 +3,9 @@
 //! The build is fully offline (only the `xla` PJRT binding is vendored), so
 //! the pieces a typical project pulls from crates.io are implemented here:
 //!
+//! * [`bytes`] — shared little-endian codec primitives (the wire
+//!   protocol, the checkpoint container and transport framing all
+//!   build on these).
 //! * [`json`] — a strict JSON parser/writer (for `artifacts/manifest.json`
 //!   and experiment configs).
 //! * [`rng`] — a deterministic xoshiro256++ PRNG with normal sampling
@@ -13,6 +16,7 @@
 //!   `rust/tests/proptests.rs`.
 
 pub mod bench;
+pub mod bytes;
 pub mod f16;
 pub mod json;
 pub mod prop;

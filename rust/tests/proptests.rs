@@ -145,6 +145,203 @@ fn prop_client_message_roundtrip() {
     });
 }
 
+// -- differential lock for the util::bytes unification ----------------------
+//
+// The wire codec, the checkpoint container and transport framing were
+// ported onto shared little-endian primitives (`util::bytes`). These
+// reference encoders are straight-line reimplementations of the
+// pre-refactor hand-rolled writer; the ported encoder must agree with
+// them byte-for-byte on arbitrary messages, so the refactor cannot have
+// changed a single wire byte.
+
+mod ref_wire {
+    use flowrs::proto::*;
+
+    pub struct W(pub Vec<u8>);
+
+    impl W {
+        pub fn header(tag: u8) -> W {
+            let mut w = W(Vec::new());
+            w.0.extend_from_slice(&0xF10Eu16.to_le_bytes());
+            w.0.push(1); // protocol version
+            w.0.push(tag);
+            w
+        }
+        pub fn u8(&mut self, v: u8) {
+            self.0.push(v);
+        }
+        pub fn u32(&mut self, v: u32) {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn u64(&mut self, v: u64) {
+            self.0.extend_from_slice(&v.to_le_bytes());
+        }
+        pub fn bytes(&mut self, v: &[u8]) {
+            self.u32(v.len() as u32);
+            self.0.extend_from_slice(v);
+        }
+        pub fn string(&mut self, v: &str) {
+            self.bytes(v.as_bytes());
+        }
+        pub fn tensor(&mut self, t: &Tensor) {
+            let (dtype, rank) = match &t.data {
+                TensorData::F32(_) => (0u8, t.shape.len() as u8),
+                TensorData::I32(_) => (1, t.shape.len() as u8),
+                TensorData::F16(_) => (2, t.shape.len() as u8),
+            };
+            self.u8(dtype);
+            self.u8(rank);
+            for &d in &t.shape {
+                self.u32(d as u32);
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    self.u32(v.len() as u32);
+                    for &x in v {
+                        self.0.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::I32(v) => {
+                    self.u32(v.len() as u32);
+                    for &x in v {
+                        self.0.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::F16(v) => {
+                    self.u32(v.len() as u32);
+                    for &x in v {
+                        self.0.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+            }
+        }
+        pub fn parameters(&mut self, p: &Parameters) {
+            self.0.extend_from_slice(&(p.tensors.len() as u16).to_le_bytes());
+            for t in &p.tensors {
+                self.tensor(t);
+            }
+        }
+        pub fn scalar(&mut self, s: &Scalar) {
+            match s {
+                Scalar::Bool(v) => {
+                    self.u8(0);
+                    self.u8(u8::from(*v));
+                }
+                Scalar::I64(v) => {
+                    self.u8(1);
+                    self.0.extend_from_slice(&v.to_le_bytes());
+                }
+                Scalar::F64(v) => {
+                    self.u8(2);
+                    self.0.extend_from_slice(&v.to_le_bytes());
+                }
+                Scalar::Str(v) => {
+                    self.u8(3);
+                    self.string(v);
+                }
+                Scalar::Bytes(v) => {
+                    self.u8(4);
+                    self.bytes(v);
+                }
+            }
+        }
+        pub fn config(&mut self, m: &ConfigMap) {
+            self.u32(m.len() as u32);
+            for (k, v) in m {
+                self.string(k);
+                self.scalar(v);
+            }
+        }
+        pub fn status(&mut self, s: &Status) {
+            self.u8(match s.code {
+                StatusCode::Ok => 0,
+                StatusCode::FitNotImplemented => 1,
+                StatusCode::FitError => 2,
+                StatusCode::EvaluateError => 3,
+            });
+            self.string(&s.message);
+        }
+    }
+
+    pub fn encode_server(msg: &ServerMessage) -> Vec<u8> {
+        match msg {
+            ServerMessage::GetParametersIns(ins) => {
+                let mut w = W::header(0x01);
+                w.config(&ins.config);
+                w.0
+            }
+            ServerMessage::FitIns(ins) => {
+                let mut w = W::header(0x02);
+                w.parameters(&ins.parameters);
+                w.config(&ins.config);
+                w.0
+            }
+            ServerMessage::EvaluateIns(ins) => {
+                let mut w = W::header(0x03);
+                w.parameters(&ins.parameters);
+                w.config(&ins.config);
+                w.0
+            }
+            ServerMessage::Reconnect { seconds } => {
+                let mut w = W::header(0x04);
+                w.u64(*seconds);
+                w.0
+            }
+        }
+    }
+
+    pub fn encode_client(msg: &ClientMessage) -> Vec<u8> {
+        match msg {
+            ClientMessage::Register(info) => {
+                let mut w = W::header(0x81);
+                w.string(&info.client_id);
+                w.string(&info.device);
+                w.string(&info.os);
+                w.u64(info.num_examples);
+                w.0
+            }
+            ClientMessage::GetParametersRes(res) => {
+                let mut w = W::header(0x82);
+                w.status(&res.status);
+                w.parameters(&res.parameters);
+                w.0
+            }
+            ClientMessage::FitRes(res) => {
+                let mut w = W::header(0x83);
+                w.status(&res.status);
+                w.parameters(&res.parameters);
+                w.u64(res.num_examples);
+                w.config(&res.metrics);
+                w.0
+            }
+            ClientMessage::EvaluateRes(res) => {
+                let mut w = W::header(0x84);
+                w.status(&res.status);
+                w.0.extend_from_slice(&res.loss.to_le_bytes());
+                w.u64(res.num_examples);
+                w.config(&res.metrics);
+                w.0
+            }
+            ClientMessage::Disconnect { reason } => {
+                let mut w = W::header(0x85);
+                w.string(reason);
+                w.0
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_wire_codec_bytes_identical_to_pre_unification_reference() {
+    let name = "util::bytes-backed wire encoder == hand-rolled reference, byte for byte";
+    check(name, 300, |rng| {
+        let msg = arb_server_message(rng);
+        assert_eq_prop(&encode_server_message(&msg), &ref_wire::encode_server(&msg))?;
+        let msg = arb_client_message(rng);
+        assert_eq_prop(&encode_client_message(&msg), &ref_wire::encode_client(&msg))
+    });
+}
+
 #[test]
 fn prop_corrupted_frames_never_panic() {
     check("decoder is total on corrupt input", 500, |rng| {
@@ -690,6 +887,125 @@ fn prop_availability_index_matches_brute_force_rescan() {
                     expected.len()
                 )
             })?;
+        }
+        Ok(())
+    });
+}
+
+/// The trace-ingestion differential: an index fed
+/// `ChurnModel::trace(...)` materializations must maintain the same
+/// idle-online membership as one driven by the model's cycles directly
+/// — at every probed instant, under random monotone time jumps and
+/// random busy/idle checkouts applied to both. (Toggle *instants*
+/// differ between the two forms by float ulps, so probes within float
+/// noise of any boundary are skipped, same as the brute-force
+/// rescan property above.)
+#[test]
+fn prop_trace_fed_index_matches_model_fed_index() {
+    use flowrs::sched::availability::DeviceSchedule;
+    let name = "index over materialized traces == index over the generating cycles";
+    check(name, 30, |rng| {
+        let n = 10 + rng.below(120);
+        let horizon = 20_000.0;
+        let spec = ChurnSpec {
+            mean_on_s: 30.0 + rng.f64() * 800.0,
+            mean_off_s: 1.0 + rng.f64() * 800.0,
+        };
+        let model = ChurnModel::new(spec, rng.next_u64());
+        let cycles: Vec<_> = (0..n as u64).map(|d| model.cycle(d)).collect();
+        let traces: Vec<DeviceSchedule> = (0..n as u64)
+            .map(|d| DeviceSchedule::from(model.trace(d, horizon)))
+            .collect();
+        let mut a = AvailabilityIndex::new(cycles.clone(), 0.0);
+        let mut b = AvailabilityIndex::from_schedules(traces, 0.0);
+        let mut busy = vec![false; n];
+        let mut t = 0.0f64;
+        for _ in 0..50 {
+            t += 0.5 + rng.f64() * 250.0;
+            if t > horizon - 2_000.0 {
+                break; // stay inside the materialization horizon
+            }
+            a.advance(t);
+            b.advance(t);
+            // identical checkout churn applied to both indices
+            for _ in 0..rng.below(5) {
+                let d = rng.below(n) as u32;
+                if busy[d as usize] {
+                    busy[d as usize] = false;
+                    a.mark_idle(d);
+                    b.mark_idle(d);
+                } else if a.is_online(d) && b.is_online(d) {
+                    busy[d as usize] = true;
+                    a.mark_busy(d);
+                    b.mark_busy(d);
+                }
+            }
+            if cycles.iter().any(|c| c.boundary_distance_s(t) < 1e-6) {
+                continue;
+            }
+            let got_a = a.idle_online_sorted();
+            let got_b = b.idle_online_sorted();
+            ensure(got_a == got_b, || {
+                format!(
+                    "trace-fed index diverged from model-fed at t={t}: {} vs {}",
+                    got_b.len(),
+                    got_a.len()
+                )
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// Trace-parser round-trip: an arbitrary valid trace set survives
+/// CSV serialization bit-exactly (toggle times included — the writer
+/// uses shortest round-trip float formatting).
+#[test]
+fn prop_trace_set_csv_roundtrip_is_exact() {
+    use flowrs::device::profiles;
+    use flowrs::sched::{AvailabilityTrace, TraceEntry, TraceSet};
+    use std::sync::Arc;
+    check("TraceSet -> CSV -> TraceSet is the identity", 100, |rng| {
+        let n = 1 + rng.below(30);
+        let devices: Vec<TraceEntry> = (0..n)
+            .map(|_| {
+                let k = rng.below(8);
+                let mut t = 0.0f64;
+                let toggles_s: Vec<f64> = (0..k)
+                    .map(|_| {
+                        t += 0.001 + rng.f64() * 500.0;
+                        t
+                    })
+                    .collect();
+                TraceEntry {
+                    trace: Arc::new(AvailabilityTrace {
+                        initially_on: rng.below(2) == 0,
+                        toggles_s,
+                    }),
+                    class: if rng.below(3) == 0 {
+                        Some(&profiles::ALL[rng.below(profiles::ALL.len())])
+                    } else {
+                        None
+                    },
+                }
+            })
+            .collect();
+        let set = TraceSet { devices };
+        set.validate().map_err(|e| e.to_string())?;
+        let text = set.to_csv();
+        let back = TraceSet::parse(&text).map_err(|e| format!("{e}\n{text}"))?;
+        ensure(back.len() == set.len(), || "device count changed".into())?;
+        for (i, (a, b)) in set.devices.iter().zip(&back.devices).enumerate() {
+            ensure(a.trace.initially_on == b.trace.initially_on, || {
+                format!("device {i}: initial state flipped")
+            })?;
+            ensure(a.trace.toggles_s == b.trace.toggles_s, || {
+                format!("device {i}: toggles changed across the round-trip")
+            })?;
+            ensure(
+                a.class.map(|c| c.name) == b.class.map(|c| c.name),
+                || format!("device {i}: class changed"),
+            )?;
         }
         Ok(())
     });
