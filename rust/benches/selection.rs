@@ -23,6 +23,7 @@
 //! — baselines are machine-dependent, regenerate locally).
 
 use flowrs::config::{PolicyConfig, ScheduleConfig};
+use flowrs::obs::{JsonlSink, NullSink, ObsSink};
 use flowrs::persist::{CheckpointReader, EngineCheckpoint};
 use flowrs::sched::engine::{Engine, Population, SurrogateTrainer};
 use flowrs::sched::policy::{Candidate, SelectionContext};
@@ -188,6 +189,41 @@ fn main() {
         std::fs::remove_file(&path).ok();
     }
 
+    // Telemetry overhead on the streaming hot path: the same 100k-device
+    // model-version case as engine_async_version_n100000, once with the
+    // explicit NullSink (must be within noise of the uninstrumented
+    // case — the zero-overhead default is one no-op virtual call per
+    // event) and once with a JsonlSink serializing every event to a
+    // buffered temp file (the `--obs-out` worst case).
+    {
+        let obs_cfg = ScheduleConfig::default()
+            .named("bench")
+            .population(100_000)
+            .cohort(100)
+            .epochs(10)
+            .seed(42)
+            .buffered(32)
+            .concurrency(128);
+        let mut null_engine = Engine::new(&obs_cfg, SurrogateTrainer::default()).unwrap();
+        null_engine.set_obs(std::sync::Arc::new(NullSink));
+        b.bench("obs_overhead_null_sink_n100000", || {
+            null_engine.run_version().unwrap()
+        });
+
+        let events_path = std::env::temp_dir().join(format!(
+            "flowrs-bench-obs-{}.jsonl",
+            std::process::id()
+        ));
+        let sink = std::sync::Arc::new(JsonlSink::create(&events_path).unwrap());
+        let mut jsonl_engine = Engine::new(&obs_cfg, SurrogateTrainer::default()).unwrap();
+        jsonl_engine.set_obs(sink.clone());
+        b.bench("obs_overhead_jsonl_n100000", || {
+            jsonl_engine.run_version().unwrap()
+        });
+        sink.flush().unwrap();
+        std::fs::remove_file(&events_path).ok();
+    }
+
     let results = b.finish();
     // `-- --json <path>`: record the run as the in-tree baseline file.
     let json_path = std::env::args().skip_while(|a| a != "--json").nth(1);
@@ -203,7 +239,10 @@ fn main() {
                     100k-device streaming checkpoint. engine_trace_replay_n* \
                     times a barrier round over scenario-generated explicit \
                     traces (binary-search availability) vs the closed-form \
-                    churn cycles of engine_round_n*.";
+                    churn cycles of engine_round_n*. obs_overhead_null_sink_n100000 \
+                    must stay within noise of engine_async_version_n100000 (the \
+                    NullSink default is one no-op virtual call per event); \
+                    obs_overhead_jsonl_n100000 bounds --obs-out serialization cost.";
         std::fs::write(&path, results_to_json("selection", note, &results, test_mode))
             .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
         println!("wrote bench baselines to {path}");

@@ -642,6 +642,12 @@ pub struct ScheduleConfig {
     /// directory, its newest valid checkpoint. The resumed run replays
     /// the uninterrupted trajectory bit-identically.
     pub resume_from: Option<String>,
+    /// Write structured telemetry into this directory
+    /// (`events.jsonl`, `metrics.json`, `costs.csv` — see
+    /// [`crate::obs`] and `rust/src/obs/METRICS.md`). `None` = no
+    /// instrumentation output. Never affects the trajectory (excluded
+    /// from [`ScheduleConfig::fingerprint`]).
+    pub obs_out: Option<String>,
 }
 
 impl Default for ScheduleConfig {
@@ -670,6 +676,7 @@ impl Default for ScheduleConfig {
             checkpoint_dir: None,
             checkpoint_every_rounds: 0,
             resume_from: None,
+            obs_out: None,
         }
     }
 }
@@ -757,11 +764,19 @@ impl ScheduleConfig {
         self.resume_from = Some(path.into());
         self
     }
+    /// Write structured telemetry (`events.jsonl`, `metrics.json`,
+    /// `costs.csv`) into `dir`.
+    pub fn obs(mut self, dir: &str) -> Self {
+        self.obs_out = Some(dir.into());
+        self
+    }
 
     /// Stable fingerprint of every knob the engine's *trajectory*
     /// depends on. Excluded: `name`, `rounds`, `target_accuracy` (a
     /// resumed run may legitimately extend or re-target a finished
-    /// one) and the checkpoint knobs themselves. Resume refuses a
+    /// one), the checkpoint knobs themselves, and `obs_out`
+    /// (observability must never affect trajectory identity — a resume
+    /// may add or drop instrumentation freely). Resume refuses a
     /// checkpoint whose fingerprint does not match — a silent config
     /// drift would otherwise break the bit-identical-replay guarantee.
     pub fn fingerprint(&self) -> String {
@@ -772,6 +787,7 @@ impl ScheduleConfig {
         c.checkpoint_dir = None;
         c.checkpoint_every_rounds = 0;
         c.resume_from = None;
+        c.obs_out = None;
         format!("schedule-v1:{c:?}")
     }
 
@@ -958,6 +974,9 @@ impl ScheduleConfig {
         }
         if let Some(v) = doc.opt("resume_from") {
             cfg.resume_from = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.opt("obs_out") {
+            cfg.obs_out = Some(v.as_str()?.to_string());
         }
         cfg.validate()?;
         Ok(cfg)
@@ -1181,12 +1200,16 @@ mod tests {
         assert_eq!(cfg.resume_from.as_deref(), Some("/tmp/ck"));
 
         let s = ScheduleConfig::from_json(
-            r#"{"checkpoint_dir": "ckpts", "checkpoint_every_rounds": 2, "resume_from": "ckpts"}"#,
+            r#"{"checkpoint_dir": "ckpts", "checkpoint_every_rounds": 2, "resume_from": "ckpts",
+                "obs_out": "obs"}"#,
         )
         .unwrap();
         assert_eq!(s.checkpoint_dir.as_deref(), Some("ckpts"));
         assert_eq!(s.checkpoint_every_rounds, 2);
         assert_eq!(s.resume_from.as_deref(), Some("ckpts"));
+        assert_eq!(s.obs_out.as_deref(), Some("obs"));
+        assert_eq!(ScheduleConfig::default().obs_out, None);
+        assert_eq!(ScheduleConfig::default().obs("o").obs_out.as_deref(), Some("o"));
 
         // builders mirror the JSON knobs; defaults stay off
         assert_eq!(ScheduleConfig::default().checkpoint_dir, None);
@@ -1210,6 +1233,8 @@ mod tests {
             base.fingerprint(),
             base.clone().checkpoints("x").checkpoint_every(7).resume("y").fingerprint()
         );
+        // observability never changes trajectory identity
+        assert_eq!(base.fingerprint(), base.clone().obs("obs-dir").fingerprint());
         // everything trajectory-relevant does
         assert_ne!(base.fingerprint(), base.clone().seed(1).fingerprint());
         assert_ne!(base.fingerprint(), base.clone().cohort(7).fingerprint());

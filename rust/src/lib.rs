@@ -16,7 +16,10 @@
 //!   100k–1M virtual devices ([`sim::population`], `flowrs sched`), and
 //!   the checkpoint/resume subsystem ([`persist`]): atomic, versioned
 //!   on-disk snapshots of server and engine state, so population-scale
-//!   runs survive a coordinator kill and resume bit-identically.
+//!   runs survive a coordinator kill and resume bit-identically, and the
+//!   structured telemetry subsystem ([`obs`]): a typed event stream, a
+//!   metric registry with deterministic histograms, and the per-round
+//!   per-class system-cost ledger behind `flowrs sched --obs-out`.
 //! * **L2 (JAX, build-time)** — the training workloads (CIFAR CNN, frozen
 //!   base + trainable head), lowered once to HLO text under `artifacts/`.
 //! * **L1 (Pallas, build-time)** — fused dense fwd/bwd, softmax-xent, SGD
@@ -39,6 +42,7 @@ pub mod data;
 pub mod device;
 pub mod error;
 pub mod metrics;
+pub mod obs;
 pub mod persist;
 pub mod proto;
 pub mod runtime;

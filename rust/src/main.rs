@@ -8,6 +8,7 @@
 //! * `devices`   — print the device inventory (paper Table 1)
 //! * `artifacts` — verify the AOT artifact bundle end-to-end
 //! * `ckpt`      — inspect persistent checkpoints (`ckpt inspect <file|dir>`)
+//! * `obs`       — inspect telemetry output dirs (`obs summarize|check <dir>`)
 //!
 //! Run `flowrs help` for flags.
 
@@ -89,7 +90,7 @@ fn main() {
     let code = match run(&argv) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e}");
+            log::error(&format!("error: {e}"));
             1
         }
     };
@@ -110,6 +111,7 @@ fn run(argv: &[String]) -> Result<()> {
         "devices" => cmd_devices(),
         "artifacts" => cmd_artifacts(&args),
         "ckpt" => cmd_ckpt(&args),
+        "obs" => cmd_obs(&args),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -157,10 +159,14 @@ fn print_usage() {
                       --mode async/both without --async-buffer defaults to K=8)\n\
                       --checkpoint-dir <dir> --checkpoint-every N --resume <file|dir>\n\
                       (kill/resume replays the uninterrupted trace bit-identically)\n\
+                      --obs-out <dir>  (write events.jsonl, metrics.json, costs.csv;\n\
+                      deterministic, virtual-time-stamped; spec in rust/src/obs/METRICS.md)\n\
+                      --format table|csv|json  (comparison-table output format)\n\
                       (real PJRT cohort numerics with artifacts, surrogate otherwise)\n\
            server     start a Flower TCP server\n\
                       --addr 127.0.0.1:9092 --model cifar_cnn --rounds 10 --epochs 1\n\
                       --lr 0.05 --quorum 2 --artifacts <dir>\n\
+                      --metrics-addr 127.0.0.1:9100  (Prometheus-text side listener)\n\
            client     start one on-device TCP client\n\
                       --addr 127.0.0.1:9092 --model cifar_cnn --device jetson_tx2_gpu\n\
                       --id c0 --train 256 --test 100 --seed 1 --stream 1 --artifacts <dir>\n\
@@ -169,7 +175,11 @@ fn print_usage() {
            ckpt       inspect persistent checkpoints\n\
                       ckpt inspect <file|dir>  (a directory resolves to its\n\
                       newest valid checkpoint; prints header, sections and\n\
-                      the round-trace summary)\n"
+                      the round-trace summary)\n\
+           obs        inspect a --obs-out telemetry directory\n\
+                      obs summarize <dir>  (per-round/per-class cost ledger +\n\
+                      replayed metric snapshot; verifies the books reconcile)\n\
+                      obs check <dir>  (validate event schema + ledger identity)\n"
     );
 }
 
@@ -406,6 +416,9 @@ fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
     if let Some(v) = args.get("resume") {
         cfg.resume_from = Some(v.into());
     }
+    if let Some(v) = args.get("obs-out") {
+        cfg.obs_out = Some(v.into());
+    }
     if let Some(v) = args.get("policy") {
         cfg.policy = PolicyConfig::parse(v)?;
     }
@@ -441,6 +454,13 @@ fn cmd_sched(args: &Args) -> Result<()> {
         return Ok(());
     }
     let cfg = sched_config_from_args(args)?;
+    // Fail on a bad --format before any (possibly expensive) run.
+    let format = args.get("format").unwrap_or("table");
+    if !matches!(format, "table" | "csv" | "json") {
+        return Err(Error::Config(format!(
+            "unknown format {format:?} (table | csv | json)"
+        )));
+    }
     // Real cohort numerics need the AOT artifacts; everything else about
     // the engine (costs, availability, policies) is artifact-free.
     let runtime = match Runtime::load(&artifact_dir(args)) {
@@ -531,10 +551,12 @@ fn cmd_sched(args: &Args) -> Result<()> {
         }
     }
     let single = run_cfgs.len() == 1;
-    if !single && (cfg.resume_from.is_some() || cfg.checkpoint_dir.is_some()) {
+    if !single
+        && (cfg.resume_from.is_some() || cfg.checkpoint_dir.is_some() || cfg.obs_out.is_some())
+    {
         return Err(Error::Config(
-            "--checkpoint-dir / --resume apply to a single run; drop --compare / \
-             --mode both or give each variant its own invocation"
+            "--checkpoint-dir / --resume / --obs-out apply to a single run; drop \
+             --compare / --mode both or give each variant its own invocation"
                 .into(),
         ));
     }
@@ -606,7 +628,16 @@ fn cmd_sched(args: &Args) -> Result<()> {
             log::info(&format!("wrote per-round CSV to {path}"));
         }
     }
-    print!("{}", table.render());
+    match format {
+        "csv" => print!("{}", table.to_csv()),
+        "json" => println!("{}", table.to_json().to_string()),
+        _ => print!("{}", table.render()),
+    }
+    if let Some(dir) = &cfg.obs_out {
+        log::info(&format!(
+            "wrote telemetry (events.jsonl, metrics.json, costs.csv) to {dir}"
+        ));
+    }
     Ok(())
 }
 
@@ -628,6 +659,18 @@ fn cmd_server(args: &Args) -> Result<()> {
     let manager = Arc::new(ClientManager::new());
     let stop = Arc::new(AtomicBool::new(false));
     let reg_thread = serve_registrations(listener, Arc::clone(&manager), Arc::clone(&stop));
+    // Optional Prometheus-text side listener: `GET <any path>` answers
+    // with the process-wide registry snapshot.
+    let metrics_thread = match args.get("metrics-addr") {
+        Some(maddr) => {
+            let l = std::net::TcpListener::bind(maddr).map_err(|e| {
+                Error::Config(format!("cannot bind metrics listener on {maddr}: {e}"))
+            })?;
+            log::info(&format!("metrics exposition on http://{maddr}/metrics"));
+            Some(flowrs::obs::serve_metrics(l, Arc::clone(&stop)))
+        }
+        None => None,
+    };
 
     let strategy = FedAvg::new(
         TrainingPlan { epochs, lr },
@@ -657,6 +700,9 @@ fn cmd_server(args: &Args) -> Result<()> {
     // Nudge the blocking accept() so the registration thread can exit.
     let _ = TcpConnection::connect(&addr);
     let _ = reg_thread.join();
+    if let Some(t) = metrics_thread {
+        let _ = t.join();
+    }
     Ok(())
 }
 
@@ -774,6 +820,50 @@ fn cmd_artifacts(args: &Args) -> Result<()> {
     }
     println!("artifact bundle OK ({} executions)", runtime.executions());
     Ok(())
+}
+
+fn cmd_obs(args: &Args) -> Result<()> {
+    use flowrs::obs;
+    if args.has_help() {
+        print_usage();
+        return Ok(());
+    }
+    let usage = "usage: flowrs obs <summarize|check> <dir>";
+    let sub = args.positional.first().map(String::as_str);
+    let dir = args
+        .positional
+        .get(1)
+        .map(PathBuf::from)
+        .ok_or_else(|| Error::Config(usage.into()))?;
+    match sub {
+        Some("summarize") => {
+            let events = obs::read_events(&dir)?;
+            let ledger = obs::CostLedger::from_events(&events);
+            ledger.verify()?;
+            let reg = obs::replay_registry(&events);
+            print!(
+                "{}",
+                ledger
+                    .to_table(&format!("system cost ledger ({})", dir.display()))
+                    .render()
+            );
+            println!("{}", reg.snapshot().to_string());
+            Ok(())
+        }
+        Some("check") => {
+            let events = obs::read_events(&dir)?;
+            let ledger = obs::CostLedger::from_events(&events);
+            ledger.verify()?;
+            println!(
+                "obs check OK: {} events, {} closed round(s), books reconcile ({})",
+                events.len(),
+                ledger.rounds().len(),
+                dir.display()
+            );
+            Ok(())
+        }
+        _ => Err(Error::Config(format!("unknown obs subcommand; {usage}"))),
+    }
 }
 
 fn cmd_ckpt(args: &Args) -> Result<()> {

@@ -66,6 +66,31 @@ impl Table {
         }
         out
     }
+
+    /// JSON form: `{"title": ..., "rows": [{header: cell, ...}, ...]}`.
+    /// Cells stay strings (they are already formatted for display), so
+    /// the export is lossless with respect to the rendered table.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|row| {
+                let obj: BTreeMap<String, Json> = self
+                    .headers
+                    .iter()
+                    .zip(row)
+                    .map(|(h, c)| (h.clone(), Json::Str(c.clone())))
+                    .collect();
+                Json::Obj(obj)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("title".to_string(), Json::Str(self.title.clone()));
+        top.insert("rows".to_string(), Json::Arr(rows));
+        Json::Obj(top)
+    }
 }
 
 /// Format a paper Table-2-style row from a sim report:
@@ -122,5 +147,15 @@ mod tests {
         let mut t = Table::new("t", &["a", "b"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn json_export() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(
+            t.to_json().to_string(),
+            r#"{"rows":[{"a":"1","b":"2"}],"title":"t"}"#
+        );
     }
 }

@@ -1,0 +1,560 @@
+//! Typed telemetry events and their canonical JSONL encoding.
+//!
+//! Every event carries a timestamp `t_s`. On the simulation paths
+//! (`sched::engine`, trace replay) this is **virtual time**, so the
+//! encoded stream is a pure function of the config and seed —
+//! deterministic, golden-lockable, and byte-identical across reruns and
+//! kill/resume splices. Only the live TCP path stamps wall-clock time.
+//!
+//! Encoding: one compact JSON object per line, keys sorted (the
+//! [`crate::util::json`] writer emits `BTreeMap` keys in order), with a
+//! `"ev"` discriminant. See `METRICS.md` for the normative field list.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// A dispatch's modeled fate, classified at issue time by the engine
+/// (pure function of the availability/cost model) or left
+/// [`Fate::Pending`] by the live server, which only learns the outcome
+/// when the result arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fate {
+    /// Outcome unknown at dispatch (live server path).
+    Pending,
+    /// Will fold into the aggregation buffer.
+    Fold,
+    /// Will be cut at the round deadline τ.
+    DropDeadline,
+    /// Will disconnect (end of the device's on-dwell) before finishing.
+    DropChurn,
+}
+
+impl Fate {
+    /// Stable wire name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Fate::Pending => "pending",
+            Fate::Fold => "fold",
+            Fate::DropDeadline => "drop_deadline",
+            Fate::DropChurn => "drop_churn",
+        }
+    }
+
+    /// Parse a wire name back.
+    pub fn parse(s: &str) -> Result<Fate> {
+        match s {
+            "pending" => Ok(Fate::Pending),
+            "fold" => Ok(Fate::Fold),
+            "drop_deadline" => Ok(Fate::DropDeadline),
+            "drop_churn" => Ok(Fate::DropChurn),
+            other => Err(Error::Config(format!("unknown dispatch fate {other:?}"))),
+        }
+    }
+}
+
+/// One structured telemetry event. `device` is the population index on
+/// the simulation paths and a per-run dispatch sequence number on the
+/// live server path; `class` is the hardware profile name
+/// ([`crate::device::DeviceProfile::name`]) — the only allowed
+/// per-device label dimension (bounded cardinality).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A barrier round opened: availability scanned, cohort selected.
+    RoundStart {
+        /// Virtual time of the round start (after dead-air fast-forward).
+        t_s: f64,
+        /// 1-based round number.
+        round: u64,
+        /// Devices online at the scan.
+        available: u64,
+        /// Cohort size the policy picked.
+        selected: u64,
+    },
+    /// One fit dispatch was issued.
+    Dispatch {
+        /// Time the dispatch was issued.
+        t_s: f64,
+        /// Device index (sim) or dispatch sequence number (live).
+        device: u64,
+        /// Hardware class name.
+        class: &'static str,
+        /// Modeled fate (sim) or [`Fate::Pending`] (live).
+        fate: Fate,
+        /// Modeled seconds the device will spend before resolution.
+        work_s: f64,
+        /// Energy (J) that will be charged at resolution (prorated).
+        energy_j: f64,
+        /// Parameter bytes moved server→device.
+        bytes_down: u64,
+    },
+    /// A result arrived and folded into the aggregation buffer.
+    Fold {
+        /// Resolution (virtual) time.
+        t_s: f64,
+        /// Device index / dispatch sequence number.
+        device: u64,
+        /// Hardware class name.
+        class: &'static str,
+        /// Model versions between dispatch and fold.
+        staleness: u64,
+        /// Energy (J) charged for this exchange.
+        energy_j: f64,
+        /// Parameter bytes moved device→server.
+        bytes_up: u64,
+    },
+    /// A dispatch was lost to device churn (disconnect mid-round).
+    DropChurn {
+        /// Resolution (virtual) time.
+        t_s: f64,
+        /// Device index / dispatch sequence number.
+        device: u64,
+        /// Hardware class name.
+        class: &'static str,
+        /// Wasted energy (J) — charged and discarded.
+        energy_j: f64,
+    },
+    /// A dispatch was cut at the round deadline τ.
+    DropDeadline {
+        /// Resolution (virtual) time.
+        t_s: f64,
+        /// Device index / dispatch sequence number.
+        device: u64,
+        /// Hardware class name.
+        class: &'static str,
+        /// Wasted energy (J) — charged and discarded.
+        energy_j: f64,
+    },
+    /// A fast client idled waiting for the barrier to close (sync mode).
+    Idle {
+        /// Round-end time at which the wait is settled.
+        t_s: f64,
+        /// Device index.
+        device: u64,
+        /// Hardware class name.
+        class: &'static str,
+        /// Seconds spent waiting.
+        wait_s: f64,
+        /// Idle energy (J) charged for the wait.
+        energy_j: f64,
+    },
+    /// The aggregation buffer flushed into a new model version.
+    Flush {
+        /// Virtual time of the flush (after server overhead).
+        t_s: f64,
+        /// The new model version (== round in sync mode).
+        version: u64,
+        /// Results folded into this version.
+        folded: u64,
+        /// Mean staleness over the folded results.
+        mean_staleness: f64,
+        /// Max staleness over the folded results.
+        max_staleness: u64,
+    },
+    /// Per-round/per-version record closed (both modes).
+    RoundEnd {
+        /// Virtual time of the round close.
+        t_s: f64,
+        /// 1-based round / model version.
+        round: u64,
+        /// Modeled wall time of the round.
+        round_time_s: f64,
+        /// Total energy charged this round (J).
+        energy_j: f64,
+        /// Energy charged to dropped dispatches this round (J).
+        wasted_j: f64,
+        /// Results folded into this round's model version.
+        completed: u64,
+        /// Dispatches cut at the deadline.
+        dropped_deadline: u64,
+        /// Dispatches lost to churn.
+        dropped_churn: u64,
+        /// Federated evaluation loss after the flush.
+        eval_loss: f64,
+        /// Federated evaluation accuracy after the flush.
+        accuracy: f64,
+    },
+    /// A checkpoint file was atomically written (live/global sink only —
+    /// never the per-run stream, so kill/resume splices stay
+    /// byte-identical; see `METRICS.md`).
+    CheckpointWrite {
+        /// Wall-clock seconds since process start.
+        t_s: f64,
+        /// Rounds/versions completed at the checkpoint.
+        version: u64,
+        /// Size of the written file in bytes.
+        bytes: u64,
+    },
+    /// A transport frame left this process (live path, wall clock).
+    FrameSent {
+        /// Wall-clock seconds since process start.
+        t_s: f64,
+        /// Payload bytes (excl. the 4-byte length prefix).
+        bytes: u64,
+    },
+    /// A transport frame arrived (live path, wall clock).
+    FrameRecv {
+        /// Wall-clock seconds since process start.
+        t_s: f64,
+        /// Payload bytes (excl. the 4-byte length prefix).
+        bytes: u64,
+    },
+    /// Federated evaluation finished for a model version (live server).
+    EvalDone {
+        /// Wall-clock seconds since process start.
+        t_s: f64,
+        /// The evaluated model version.
+        version: u64,
+        /// Evaluation loss.
+        loss: f64,
+        /// Evaluation accuracy.
+        accuracy: f64,
+    },
+    /// A live fit exchange failed (error status or transport error).
+    FitFailed {
+        /// Wall-clock seconds since process start.
+        t_s: f64,
+        /// Dispatch sequence number.
+        device: u64,
+        /// Hardware class name.
+        class: &'static str,
+        /// True when the failure was a transport error (connection
+        /// dropped); false for an application-level error status.
+        transport: bool,
+    },
+    /// A live in-flight result was discarded (client deregistered).
+    Discarded {
+        /// Wall-clock seconds since process start.
+        t_s: f64,
+        /// Dispatch sequence number.
+        device: u64,
+        /// Hardware class name.
+        class: &'static str,
+    },
+}
+
+/// Leak-free interning for class names parsed back from JSONL: the set
+/// of hardware profile names is small and fixed, so map onto the static
+/// profile table (unknown names map to `"unknown"` rather than leaking).
+fn intern_class(s: &str) -> &'static str {
+    crate::device::profiles::by_name(s)
+        .map(|p| p.name)
+        .unwrap_or("unknown")
+}
+
+impl Event {
+    /// Stable wire name of this event kind (the `"ev"` field).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Event::RoundStart { .. } => "round_start",
+            Event::Dispatch { .. } => "dispatch",
+            Event::Fold { .. } => "fold",
+            Event::DropChurn { .. } => "drop_churn",
+            Event::DropDeadline { .. } => "drop_deadline",
+            Event::Idle { .. } => "idle",
+            Event::Flush { .. } => "flush",
+            Event::RoundEnd { .. } => "round_end",
+            Event::CheckpointWrite { .. } => "checkpoint_write",
+            Event::FrameSent { .. } => "frame_sent",
+            Event::FrameRecv { .. } => "frame_recv",
+            Event::EvalDone { .. } => "eval_done",
+            Event::FitFailed { .. } => "fit_failed",
+            Event::Discarded { .. } => "discarded",
+        }
+    }
+
+    /// The event's timestamp (virtual or wall time; see module docs).
+    pub fn t_s(&self) -> f64 {
+        match *self {
+            Event::RoundStart { t_s, .. }
+            | Event::Dispatch { t_s, .. }
+            | Event::Fold { t_s, .. }
+            | Event::DropChurn { t_s, .. }
+            | Event::DropDeadline { t_s, .. }
+            | Event::Idle { t_s, .. }
+            | Event::Flush { t_s, .. }
+            | Event::RoundEnd { t_s, .. }
+            | Event::CheckpointWrite { t_s, .. }
+            | Event::FrameSent { t_s, .. }
+            | Event::FrameRecv { t_s, .. }
+            | Event::EvalDone { t_s, .. }
+            | Event::FitFailed { t_s, .. }
+            | Event::Discarded { t_s, .. } => t_s,
+        }
+    }
+
+    /// Encode as a canonical compact JSON object (sorted keys).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("ev".to_string(), Json::Str(self.name().into()));
+        m.insert("t_s".to_string(), Json::Num(self.t_s()));
+        let mut num = |k: &str, v: f64| {
+            m.insert(k.to_string(), Json::Num(v));
+        };
+        match *self {
+            Event::RoundStart { round, available, selected, .. } => {
+                num("round", round as f64);
+                num("available", available as f64);
+                num("selected", selected as f64);
+            }
+            Event::Dispatch { device, class, fate, work_s, energy_j, bytes_down, .. } => {
+                num("device", device as f64);
+                num("work_s", work_s);
+                num("energy_j", energy_j);
+                num("bytes_down", bytes_down as f64);
+                m.insert("class".to_string(), Json::Str(class.into()));
+                m.insert("fate".to_string(), Json::Str(fate.as_str().into()));
+            }
+            Event::Fold { device, class, staleness, energy_j, bytes_up, .. } => {
+                num("device", device as f64);
+                num("staleness", staleness as f64);
+                num("energy_j", energy_j);
+                num("bytes_up", bytes_up as f64);
+                m.insert("class".to_string(), Json::Str(class.into()));
+            }
+            Event::DropChurn { device, class, energy_j, .. }
+            | Event::DropDeadline { device, class, energy_j, .. } => {
+                num("device", device as f64);
+                num("energy_j", energy_j);
+                m.insert("class".to_string(), Json::Str(class.into()));
+            }
+            Event::Idle { device, class, wait_s, energy_j, .. } => {
+                num("device", device as f64);
+                num("wait_s", wait_s);
+                num("energy_j", energy_j);
+                m.insert("class".to_string(), Json::Str(class.into()));
+            }
+            Event::Flush { version, folded, mean_staleness, max_staleness, .. } => {
+                num("version", version as f64);
+                num("folded", folded as f64);
+                num("mean_staleness", mean_staleness);
+                num("max_staleness", max_staleness as f64);
+            }
+            Event::RoundEnd {
+                round,
+                round_time_s,
+                energy_j,
+                wasted_j,
+                completed,
+                dropped_deadline,
+                dropped_churn,
+                eval_loss,
+                accuracy,
+                ..
+            } => {
+                num("round", round as f64);
+                num("round_time_s", round_time_s);
+                num("energy_j", energy_j);
+                num("wasted_j", wasted_j);
+                num("completed", completed as f64);
+                num("dropped_deadline", dropped_deadline as f64);
+                num("dropped_churn", dropped_churn as f64);
+                num("eval_loss", eval_loss);
+                num("accuracy", accuracy);
+            }
+            Event::CheckpointWrite { version, bytes, .. } => {
+                num("version", version as f64);
+                num("bytes", bytes as f64);
+            }
+            Event::FrameSent { bytes, .. } | Event::FrameRecv { bytes, .. } => {
+                num("bytes", bytes as f64);
+            }
+            Event::EvalDone { version, loss, accuracy, .. } => {
+                num("version", version as f64);
+                num("loss", loss);
+                num("accuracy", accuracy);
+            }
+            Event::FitFailed { device, class, transport, .. } => {
+                num("device", device as f64);
+                m.insert("class".to_string(), Json::Str(class.into()));
+                m.insert("transport".to_string(), Json::Bool(transport));
+            }
+            Event::Discarded { device, class, .. } => {
+                num("device", device as f64);
+                m.insert("class".to_string(), Json::Str(class.into()));
+            }
+        }
+        Json::Obj(m)
+    }
+
+    /// One canonical JSONL line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode an event from its JSON object form — the schema validator
+    /// behind `flowrs obs check` and the ledger replay. Rejects unknown
+    /// event names, missing fields, and wrong field types.
+    pub fn from_json(v: &Json) -> Result<Event> {
+        let t_s = v.get("t_s")?.as_f64()?;
+        let u = |k: &str| -> Result<u64> { Ok(v.get(k)?.as_usize()? as u64) };
+        let f = |k: &str| -> Result<f64> { v.get(k)?.as_f64() };
+        let class = |k: &str| -> Result<&'static str> { Ok(intern_class(v.get(k)?.as_str()?)) };
+        match v.get("ev")?.as_str()? {
+            "round_start" => Ok(Event::RoundStart {
+                t_s,
+                round: u("round")?,
+                available: u("available")?,
+                selected: u("selected")?,
+            }),
+            "dispatch" => Ok(Event::Dispatch {
+                t_s,
+                device: u("device")?,
+                class: class("class")?,
+                fate: Fate::parse(v.get("fate")?.as_str()?)?,
+                work_s: f("work_s")?,
+                energy_j: f("energy_j")?,
+                bytes_down: u("bytes_down")?,
+            }),
+            "fold" => Ok(Event::Fold {
+                t_s,
+                device: u("device")?,
+                class: class("class")?,
+                staleness: u("staleness")?,
+                energy_j: f("energy_j")?,
+                bytes_up: u("bytes_up")?,
+            }),
+            "drop_churn" => Ok(Event::DropChurn {
+                t_s,
+                device: u("device")?,
+                class: class("class")?,
+                energy_j: f("energy_j")?,
+            }),
+            "drop_deadline" => Ok(Event::DropDeadline {
+                t_s,
+                device: u("device")?,
+                class: class("class")?,
+                energy_j: f("energy_j")?,
+            }),
+            "idle" => Ok(Event::Idle {
+                t_s,
+                device: u("device")?,
+                class: class("class")?,
+                wait_s: f("wait_s")?,
+                energy_j: f("energy_j")?,
+            }),
+            "flush" => Ok(Event::Flush {
+                t_s,
+                version: u("version")?,
+                folded: u("folded")?,
+                mean_staleness: f("mean_staleness")?,
+                max_staleness: u("max_staleness")?,
+            }),
+            "round_end" => Ok(Event::RoundEnd {
+                t_s,
+                round: u("round")?,
+                round_time_s: f("round_time_s")?,
+                energy_j: f("energy_j")?,
+                wasted_j: f("wasted_j")?,
+                completed: u("completed")?,
+                dropped_deadline: u("dropped_deadline")?,
+                dropped_churn: u("dropped_churn")?,
+                eval_loss: f("eval_loss")?,
+                accuracy: f("accuracy")?,
+            }),
+            "checkpoint_write" => Ok(Event::CheckpointWrite {
+                t_s,
+                version: u("version")?,
+                bytes: u("bytes")?,
+            }),
+            "frame_sent" => Ok(Event::FrameSent { t_s, bytes: u("bytes")? }),
+            "frame_recv" => Ok(Event::FrameRecv { t_s, bytes: u("bytes")? }),
+            "eval_done" => Ok(Event::EvalDone {
+                t_s,
+                version: u("version")?,
+                loss: f("loss")?,
+                accuracy: f("accuracy")?,
+            }),
+            "fit_failed" => Ok(Event::FitFailed {
+                t_s,
+                device: u("device")?,
+                class: class("class")?,
+                transport: v.get("transport")?.as_bool()?,
+            }),
+            "discarded" => Ok(Event::Discarded {
+                t_s,
+                device: u("device")?,
+                class: class("class")?,
+            }),
+            other => Err(Error::Config(format!("unknown event kind {other:?}"))),
+        }
+    }
+
+    /// Parse one JSONL line.
+    pub fn parse_line(line: &str) -> Result<Event> {
+        Event::from_json(&Json::parse(line)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_roundtrip_through_jsonl() {
+        let evs = vec![
+            Event::RoundStart { t_s: 0.0, round: 1, available: 20, selected: 8 },
+            Event::Dispatch {
+                t_s: 0.0,
+                device: 3,
+                class: "jetson_tx2_gpu",
+                fate: Fate::DropDeadline,
+                work_s: 60.0,
+                energy_j: 12.5,
+                bytes_down: 547_496,
+            },
+            Event::Fold {
+                t_s: 61.25,
+                device: 3,
+                class: "pixel4",
+                staleness: 2,
+                energy_j: 0.125,
+                bytes_up: 547_496,
+            },
+            Event::DropChurn { t_s: 5.0, device: 0, class: "raspberry_pi4", energy_j: 1.0 },
+            Event::DropDeadline { t_s: 60.0, device: 1, class: "pixel4", energy_j: 2.0 },
+            Event::Idle { t_s: 61.0, device: 2, class: "pixel4", wait_s: 3.5, energy_j: 0.7 },
+            Event::Flush { t_s: 61.0, version: 1, folded: 6, mean_staleness: 0.5, max_staleness: 2 },
+            Event::RoundEnd {
+                t_s: 62.0,
+                round: 1,
+                round_time_s: 62.0,
+                energy_j: 100.0,
+                wasted_j: 3.0,
+                completed: 6,
+                dropped_deadline: 1,
+                dropped_churn: 1,
+                eval_loss: 1.5,
+                accuracy: 0.25,
+            },
+            Event::CheckpointWrite { t_s: 0.25, version: 3, bytes: 4096 },
+            Event::FrameSent { t_s: 0.5, bytes: 128 },
+            Event::FrameRecv { t_s: 0.5, bytes: 256 },
+            Event::EvalDone { t_s: 1.0, version: 2, loss: 0.75, accuracy: 0.5 },
+            Event::FitFailed { t_s: 2.0, device: 7, class: "pixel4", transport: true },
+            Event::Discarded { t_s: 2.5, device: 8, class: "pixel4" },
+        ];
+        for ev in evs {
+            let line = ev.to_line();
+            let back = Event::parse_line(&line).unwrap();
+            assert_eq!(back, ev, "line: {line}");
+            // canonical: re-encoding the decoded event gives the same bytes
+            assert_eq!(back.to_line(), line);
+        }
+    }
+
+    #[test]
+    fn line_is_compact_sorted_and_discriminated() {
+        let line = Event::FrameSent { t_s: 1.5, bytes: 10 }.to_line();
+        assert_eq!(line, r#"{"bytes":10,"ev":"frame_sent","t_s":1.5}"#);
+    }
+
+    #[test]
+    fn unknown_kind_and_missing_fields_rejected() {
+        assert!(Event::parse_line(r#"{"ev":"nope","t_s":0}"#).is_err());
+        assert!(Event::parse_line(r#"{"ev":"fold","t_s":0}"#).is_err());
+        assert!(Event::parse_line("not json").is_err());
+        assert!(Fate::parse("sideways").is_err());
+    }
+}

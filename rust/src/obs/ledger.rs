@@ -1,0 +1,387 @@
+//! The system-cost ledger: per-round, per-device-class accounting
+//! accumulated from the typed event stream.
+//!
+//! This is the paper's Table-2/3 surface — compute time, bytes up/down,
+//! and energy broken down by hardware class — derived *only* from
+//! events, so it can be rebuilt from a persisted `events.jsonl` at any
+//! time (including after a kill/resume splice). Per-round energy totals
+//! are accumulated **in event order**: f64 addition is
+//! order-dependent, and the engine charges energy in exactly the
+//! emission order, so the ledger's sums reconcile bit-for-bit with the
+//! engine's `round_energy_j` / `wasted_energy_j` accounting
+//! ([`CostLedger::verify`] asserts the identity).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+
+use super::event::Event;
+
+/// Accumulated costs for one hardware class (within a round, or over
+/// the whole run).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassCost {
+    /// Fit dispatches issued.
+    pub dispatches: u64,
+    /// Results folded into the model.
+    pub folds: u64,
+    /// Dispatches cut at the round deadline τ.
+    pub dropped_deadline: u64,
+    /// Dispatches lost to device churn.
+    pub dropped_churn: u64,
+    /// Modeled seconds of device work (compute + radio, to resolution).
+    pub work_s: f64,
+    /// Seconds spent idling at a barrier waiting for stragglers.
+    pub idle_s: f64,
+    /// Parameter bytes moved server→devices.
+    pub bytes_down: u64,
+    /// Parameter bytes moved devices→server.
+    pub bytes_up: u64,
+    /// Energy charged to this class (J), in per-class event order.
+    pub energy_j: f64,
+}
+
+impl ClassCost {
+    fn fold_into(&mut self, other: &ClassCost) {
+        self.dispatches += other.dispatches;
+        self.folds += other.folds;
+        self.dropped_deadline += other.dropped_deadline;
+        self.dropped_churn += other.dropped_churn;
+        self.work_s += other.work_s;
+        self.idle_s += other.idle_s;
+        self.bytes_down += other.bytes_down;
+        self.bytes_up += other.bytes_up;
+        self.energy_j += other.energy_j;
+    }
+}
+
+/// One closed per-round (or per-model-version) cost bucket.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundCost {
+    /// 1-based round / model version (from the closing `round_end`).
+    pub round: u64,
+    /// Virtual time at which the round closed.
+    pub t_end_s: f64,
+    /// The round's modeled wall time, as reported by `round_end`.
+    pub round_time_s: f64,
+    /// Energy charged this round (J), summed in event order — the
+    /// bit-exact counterpart of the engine's `round_energy_j`.
+    pub energy_j: f64,
+    /// Wasted (dropped-dispatch) energy this round, event order.
+    pub wasted_j: f64,
+    /// `round_end`'s own reported energy total (cross-check).
+    pub reported_energy_j: f64,
+    /// `round_end`'s own reported wasted energy (cross-check).
+    pub reported_wasted_j: f64,
+    /// Parameter bytes dispatched server→devices this round.
+    pub bytes_down: u64,
+    /// Parameter bytes folded devices→server this round.
+    pub bytes_up: u64,
+    /// Per-hardware-class breakdown.
+    pub classes: BTreeMap<&'static str, ClassCost>,
+}
+
+/// Event-sourced cost accumulator. Feed it every event in stream order
+/// ([`CostLedger::apply`]); `round_end` events close buckets.
+#[derive(Debug, Clone, Default)]
+pub struct CostLedger {
+    /// Closed per-round buckets, in order.
+    rounds: Vec<RoundCost>,
+    /// The open (not yet `round_end`-closed) bucket.
+    cur: RoundCost,
+    /// Whole-run per-class totals (includes the open bucket).
+    totals: BTreeMap<&'static str, ClassCost>,
+}
+
+impl CostLedger {
+    /// New empty ledger.
+    pub fn new() -> CostLedger {
+        CostLedger::default()
+    }
+
+    /// Build a ledger by replaying events in order.
+    pub fn from_events<'a>(events: impl IntoIterator<Item = &'a Event>) -> CostLedger {
+        let mut ledger = CostLedger::new();
+        for ev in events {
+            ledger.apply(ev);
+        }
+        ledger
+    }
+
+    /// The round-local and whole-run accumulator cells for `class` —
+    /// disjoint fields, so both `&mut`s can live side by side.
+    fn cells(&mut self, class: &'static str) -> [&mut ClassCost; 2] {
+        [
+            self.cur.classes.entry(class).or_default(),
+            self.totals.entry(class).or_default(),
+        ]
+    }
+
+    /// Apply one event in stream order.
+    pub fn apply(&mut self, ev: &Event) {
+        match *ev {
+            Event::Dispatch { class, work_s, bytes_down, .. } => {
+                for c in self.cells(class) {
+                    c.dispatches += 1;
+                    c.work_s += work_s;
+                    c.bytes_down += bytes_down;
+                }
+                self.cur.bytes_down += bytes_down;
+            }
+            Event::Fold { class, energy_j, bytes_up, .. } => {
+                for c in self.cells(class) {
+                    c.folds += 1;
+                    c.energy_j += energy_j;
+                    c.bytes_up += bytes_up;
+                }
+                self.cur.energy_j += energy_j;
+                self.cur.bytes_up += bytes_up;
+            }
+            Event::DropChurn { class, energy_j, .. } => {
+                for c in self.cells(class) {
+                    c.dropped_churn += 1;
+                    c.energy_j += energy_j;
+                }
+                self.cur.energy_j += energy_j;
+                self.cur.wasted_j += energy_j;
+            }
+            Event::DropDeadline { class, energy_j, .. } => {
+                for c in self.cells(class) {
+                    c.dropped_deadline += 1;
+                    c.energy_j += energy_j;
+                }
+                self.cur.energy_j += energy_j;
+                self.cur.wasted_j += energy_j;
+            }
+            Event::Idle { class, wait_s, energy_j, .. } => {
+                for c in self.cells(class) {
+                    c.idle_s += wait_s;
+                    c.energy_j += energy_j;
+                }
+                self.cur.energy_j += energy_j;
+            }
+            Event::RoundEnd { round, t_s, round_time_s, energy_j, wasted_j, .. } => {
+                self.cur.round = round;
+                self.cur.t_end_s = t_s;
+                self.cur.round_time_s = round_time_s;
+                self.cur.reported_energy_j = energy_j;
+                self.cur.reported_wasted_j = wasted_j;
+                self.rounds.push(std::mem::take(&mut self.cur));
+            }
+            // Pure markers / live-path events carry no ledger costs.
+            Event::RoundStart { .. }
+            | Event::Flush { .. }
+            | Event::CheckpointWrite { .. }
+            | Event::FrameSent { .. }
+            | Event::FrameRecv { .. }
+            | Event::EvalDone { .. }
+            | Event::FitFailed { .. }
+            | Event::Discarded { .. } => {}
+        }
+    }
+
+    /// Closed per-round buckets.
+    pub fn rounds(&self) -> &[RoundCost] {
+        &self.rounds
+    }
+
+    /// Whole-run per-class totals (closed buckets + the open one).
+    pub fn class_totals(&self) -> &BTreeMap<&'static str, ClassCost> {
+        &self.totals
+    }
+
+    /// The reconciliation identity: every closed round's event-order
+    /// energy/wasted sums must equal the totals its `round_end`
+    /// reported, **bit for bit** — the event stream and the engine's
+    /// own books are the same numbers in the same order.
+    pub fn verify(&self) -> Result<()> {
+        for r in &self.rounds {
+            if r.energy_j.to_bits() != r.reported_energy_j.to_bits() {
+                return Err(Error::Config(format!(
+                    "round {}: ledger energy {} != reported {}",
+                    r.round, r.energy_j, r.reported_energy_j
+                )));
+            }
+            if r.wasted_j.to_bits() != r.reported_wasted_j.to_bits() {
+                return Err(Error::Config(format!(
+                    "round {}: ledger wasted energy {} != reported {}",
+                    r.round, r.wasted_j, r.reported_wasted_j
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-class whole-run breakdown in the paper's Table-2/3 shape.
+    pub fn to_table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &[
+                "class",
+                "dispatched",
+                "folded",
+                "drop_tau",
+                "drop_churn",
+                "work_s",
+                "idle_s",
+                "MB_down",
+                "MB_up",
+                "energy_J",
+            ],
+        );
+        let mut sum = ClassCost::default();
+        for (class, c) in &self.totals {
+            sum.fold_into(c);
+            t.row(vec![
+                class.to_string(),
+                c.dispatches.to_string(),
+                c.folds.to_string(),
+                c.dropped_deadline.to_string(),
+                c.dropped_churn.to_string(),
+                format!("{:.1}", c.work_s),
+                format!("{:.1}", c.idle_s),
+                format!("{:.2}", c.bytes_down as f64 / 1e6),
+                format!("{:.2}", c.bytes_up as f64 / 1e6),
+                format!("{:.1}", c.energy_j),
+            ]);
+        }
+        t.row(vec![
+            "TOTAL".to_string(),
+            sum.dispatches.to_string(),
+            sum.folds.to_string(),
+            sum.dropped_deadline.to_string(),
+            sum.dropped_churn.to_string(),
+            format!("{:.1}", sum.work_s),
+            format!("{:.1}", sum.idle_s),
+            format!("{:.2}", sum.bytes_down as f64 / 1e6),
+            format!("{:.2}", sum.bytes_up as f64 / 1e6),
+            format!("{:.1}", sum.energy_j),
+        ]);
+        t
+    }
+
+    /// Per-round, per-class CSV (`costs.csv`). Floats use Rust's
+    /// shortest-roundtrip formatting, so the bytes are a deterministic
+    /// function of the event stream.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "round,class,dispatched,folded,dropped_deadline,dropped_churn,\
+             work_s,idle_s,bytes_down,bytes_up,energy_j\n",
+        );
+        for r in &self.rounds {
+            for (class, c) in &r.classes {
+                out.push_str(&format!(
+                    "{},{},{},{},{},{},{},{},{},{},{}\n",
+                    r.round,
+                    class,
+                    c.dispatches,
+                    c.folds,
+                    c.dropped_deadline,
+                    c.dropped_churn,
+                    c.work_s,
+                    c.idle_s,
+                    c.bytes_down,
+                    c.bytes_up,
+                    c.energy_j,
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::event::Fate;
+
+    fn sample_events() -> Vec<Event> {
+        vec![
+            Event::RoundStart { t_s: 0.0, round: 1, available: 3, selected: 2 },
+            Event::Dispatch {
+                t_s: 0.0,
+                device: 0,
+                class: "pixel4",
+                fate: Fate::Fold,
+                work_s: 10.0,
+                energy_j: 5.0,
+                bytes_down: 100,
+            },
+            Event::Dispatch {
+                t_s: 0.0,
+                device: 1,
+                class: "raspberry_pi4",
+                fate: Fate::DropDeadline,
+                work_s: 60.0,
+                energy_j: 30.0,
+                bytes_down: 100,
+            },
+            Event::Fold {
+                t_s: 10.0,
+                device: 0,
+                class: "pixel4",
+                staleness: 0,
+                energy_j: 5.0,
+                bytes_up: 100,
+            },
+            Event::DropDeadline { t_s: 60.0, device: 1, class: "raspberry_pi4", energy_j: 30.0 },
+            Event::Idle { t_s: 60.0, device: 0, class: "pixel4", wait_s: 50.0, energy_j: 2.0 },
+            Event::RoundEnd {
+                t_s: 61.0,
+                round: 1,
+                round_time_s: 61.0,
+                energy_j: 5.0 + 30.0 + 2.0,
+                wasted_j: 30.0,
+                completed: 1,
+                dropped_deadline: 1,
+                dropped_churn: 0,
+                eval_loss: 1.0,
+                accuracy: 0.1,
+            },
+        ]
+    }
+
+    #[test]
+    fn ledger_buckets_per_round_and_class() {
+        let evs = sample_events();
+        let ledger = CostLedger::from_events(&evs);
+        assert_eq!(ledger.rounds().len(), 1);
+        let r = &ledger.rounds()[0];
+        assert_eq!(r.round, 1);
+        assert_eq!(r.bytes_down, 200);
+        assert_eq!(r.bytes_up, 100);
+        assert_eq!(r.energy_j, 37.0);
+        assert_eq!(r.wasted_j, 30.0);
+        let pixel = &r.classes["pixel4"];
+        assert_eq!(pixel.folds, 1);
+        assert_eq!(pixel.energy_j, 7.0);
+        assert_eq!(pixel.idle_s, 50.0);
+        let rpi = &r.classes["raspberry_pi4"];
+        assert_eq!(rpi.dropped_deadline, 1);
+        assert_eq!(rpi.energy_j, 30.0);
+        ledger.verify().unwrap();
+    }
+
+    #[test]
+    fn verify_catches_mismatched_books() {
+        let mut evs = sample_events();
+        if let Event::RoundEnd { energy_j, .. } = &mut evs[6] {
+            *energy_j += 1.0;
+        }
+        let ledger = CostLedger::from_events(&evs);
+        assert!(ledger.verify().is_err());
+    }
+
+    #[test]
+    fn table_and_csv_render() {
+        let ledger = CostLedger::from_events(&sample_events());
+        let table = ledger.to_table("costs");
+        let text = table.render();
+        assert!(text.contains("pixel4"));
+        assert!(text.contains("TOTAL"));
+        let csv = ledger.to_csv();
+        assert!(csv.starts_with("round,class,"));
+        assert_eq!(csv.lines().count(), 3); // header + 2 classes
+    }
+}

@@ -1,0 +1,115 @@
+//! Structured telemetry: typed event stream, metric registry, and the
+//! per-round system-cost ledger.
+//!
+//! The paper's core contribution is *quantifying the system costs* of
+//! on-device FL. This module is that measurement surface, built on
+//! three pillars:
+//!
+//! 1. **Typed event stream** ([`event`], [`sink`]) — every layer emits
+//!    typed [`Event`]s through an [`ObsSink`]. The default
+//!    [`NullSink`] costs one virtual call per event and does nothing;
+//!    a [`JsonlSink`] writes canonical one-line JSON. Simulation paths
+//!    stamp events with **virtual time**, so for a fixed seed the
+//!    stream is byte-identical across runs and across kill/resume —
+//!    it can be golden-locked like the trace CSVs.
+//! 2. **Metric registry** ([`registry`](mod@registry)) — process-wide named
+//!    counters, gauges, and deterministic log-bucketed histograms
+//!    (fixed boundaries, exact counts, mergeable, no sampling) with
+//!    JSON snapshots and Prometheus-text exposition for the live
+//!    server's `/metrics` side listener.
+//! 3. **System-cost ledger** ([`ledger`]) — replays the event stream
+//!    into per-round, per-device-class cost buckets (compute s, bytes
+//!    up/down, energy J) that reconcile **bit-for-bit** with the
+//!    engine's own energy accounting, rendered in the paper's
+//!    Table-2/3 shape.
+//!
+//! Every event and metric name is normatively documented in
+//! `rust/src/obs/METRICS.md` (the normative registry, in the style of
+//! `persist/FORMAT.md`). Instrumentation must never consume randomness,
+//! reorder float accumulation, or read the wall clock on a simulated
+//! path: obs on/off must leave golden CSVs bit-identical.
+
+#![deny(missing_docs)]
+
+pub mod event;
+pub mod ledger;
+pub mod registry;
+pub mod sink;
+
+pub use event::{Event, Fate};
+pub use ledger::{ClassCost, CostLedger, RoundCost};
+pub use registry::{registry, serve_metrics, Counter, Gauge, Histogram, Registry};
+pub use sink::{
+    emit_global, global, install_global, wall_t_s, JsonlSink, NullSink, ObsSink, VecSink,
+};
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Read and schema-validate every event from `<dir>/events.jsonl`.
+pub fn read_events(dir: &Path) -> Result<Vec<Event>> {
+    let path = dir.join("events.jsonl");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+    let mut events = Vec::with_capacity(text.lines().count());
+    for (i, line) in text.lines().enumerate() {
+        let ev = Event::parse_line(line)
+            .map_err(|e| Error::Config(format!("{}:{}: {e}", path.display(), i + 1)))?;
+        events.push(ev);
+    }
+    Ok(events)
+}
+
+/// Replay a per-run event stream into a fresh **local** [`Registry`] —
+/// the deterministic `metrics.json` surface. Run-scoped tooling never
+/// uses the process-global registry, so `metrics.json` is a pure
+/// function of the stream (see `METRICS.md` for every name).
+pub fn replay_registry(events: &[Event]) -> Registry {
+    let reg = Registry::new();
+    for ev in events {
+        match ev {
+            Event::Dispatch { work_s, .. } => {
+                reg.counter("sched_dispatches_total").inc();
+                reg.histogram("sched_dispatch_work_s").record(*work_s);
+            }
+            Event::Fold { staleness, .. } => {
+                reg.counter("sched_folds_total").inc();
+                reg.histogram("sched_fold_staleness").record(*staleness as f64);
+            }
+            Event::DropDeadline { .. } => {
+                reg.counter("sched_drops_deadline_total").inc();
+            }
+            Event::DropChurn { .. } => {
+                reg.counter("sched_drops_churn_total").inc();
+            }
+            Event::Flush { version, .. } => {
+                reg.counter("sched_flushes_total").inc();
+                reg.gauge("sched_model_version").set(*version as f64);
+            }
+            Event::RoundEnd { round_time_s, energy_j, .. } => {
+                reg.counter("sched_rounds_total").inc();
+                reg.histogram("sched_round_time_s").record(*round_time_s);
+                reg.histogram("sched_round_energy_j").record(*energy_j);
+            }
+            _ => {}
+        }
+    }
+    reg
+}
+
+/// Derive `metrics.json` and `costs.csv` from `<dir>/events.jsonl`
+/// (both pure functions of the stream); returns the parsed events so
+/// callers can keep analyzing them.
+pub fn write_derived(dir: &Path) -> Result<Vec<Event>> {
+    let events = read_events(dir)?;
+    let reg = replay_registry(&events);
+    let mpath = dir.join("metrics.json");
+    std::fs::write(&mpath, reg.snapshot().to_string() + "\n")
+        .map_err(|e| Error::Config(format!("cannot write {}: {e}", mpath.display())))?;
+    let ledger = CostLedger::from_events(&events);
+    let cpath = dir.join("costs.csv");
+    std::fs::write(&cpath, ledger.to_csv())
+        .map_err(|e| Error::Config(format!("cannot write {}: {e}", cpath.display())))?;
+    Ok(events)
+}

@@ -1,0 +1,547 @@
+//! Metric registry: named counters, gauges, and deterministic
+//! log-bucketed histograms, with JSON snapshots and Prometheus-text
+//! exposition.
+//!
+//! Histograms use **fixed** bucket boundaries derived from the f64 bit
+//! pattern (4 sub-buckets per power of two, covering `[2^-20, 2^44)`
+//! plus underflow/overflow), so two histograms are always mergeable by
+//! adding counts, counts are exact (no sampling), and quantiles are a
+//! pure function of the counts — identical across platforms and runs.
+//!
+//! The process-wide [`registry()`] serves long-lived layers (transport
+//! framing, the live server). Code that needs run-scoped, reproducible
+//! metrics (the `sched` CLI's `metrics.json`) builds its own
+//! [`Registry`] instead, so unrelated activity in the process cannot
+//! leak into the export.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::Json;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-value-wins gauge (f64 stored as bits).
+#[derive(Debug)]
+pub struct Gauge(AtomicU64);
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge(AtomicU64::new(0f64.to_bits()))
+    }
+}
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Smallest bucketed power of two (values below land in `underflow`).
+const MIN_EXP: i64 = -20;
+/// One past the largest bucketed power of two.
+const MAX_EXP: i64 = 44;
+/// Sub-buckets per octave (top two mantissa bits).
+const SUBS: usize = 4;
+/// underflow + (MAX_EXP - MIN_EXP) octaves × SUBS + overflow.
+const BUCKETS: usize = 1 + ((MAX_EXP - MIN_EXP) as usize) * SUBS + 1;
+
+/// A deterministic log-bucketed histogram with fixed boundaries.
+/// Recording, merging, and quantile queries involve only integer
+/// arithmetic on exact counts — no sampling, no platform-dependent
+/// float transcendentals — so results are bit-stable everywhere.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    /// Running sum of recorded values (f64 bits, CAS loop). Exposition
+    /// only — never used in quantiles, so determinism claims don't rest
+    /// on float-addition order.
+    sum_bits: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+}
+
+impl Histogram {
+    /// New empty histogram (fixed standard boundaries).
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Bucket index for a value: pure bit manipulation on the f64
+    /// representation (exponent + top two mantissa bits).
+    fn index_of(v: f64) -> usize {
+        if v.is_nan() || v >= exp2(MAX_EXP) {
+            return BUCKETS - 1; // overflow
+        }
+        if v < exp2(MIN_EXP) {
+            return 0; // underflow (incl. zero, negatives, denormals)
+        }
+        let bits = v.to_bits();
+        let exp = ((bits >> 52) & 0x7FF) as i64 - 1023;
+        let sub = ((bits >> 50) & 0x3) as usize;
+        (1 + ((exp - MIN_EXP) as usize) * SUBS + sub).min(BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `idx` (the value a quantile
+    /// query reports for ranks landing in that bucket).
+    fn upper_bound(idx: usize) -> f64 {
+        if idx == 0 {
+            return exp2(MIN_EXP);
+        }
+        if idx >= BUCKETS - 1 {
+            return f64::INFINITY;
+        }
+        let i = idx - 1;
+        let exp = MIN_EXP + (i / SUBS) as i64;
+        let sub = i % SUBS;
+        exp2(exp) * (1.0 + (sub as f64 + 1.0) * 0.25)
+    }
+
+    /// Record one observation.
+    pub fn record(&self, v: f64) {
+        self.buckets[Self::index_of(v)].fetch_add(1, Ordering::Relaxed);
+        if v.is_finite() {
+            let mut cur = self.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + v).to_bits();
+                match self.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(actual) => cur = actual,
+                }
+            }
+        }
+    }
+
+    /// Total observations (exact).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Sum of finite observations (exposition only).
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Fold `other` into `self` by adding bucket counts — exact, and
+    /// associative/commutative on the counts by construction.
+    pub fn merge(&self, other: &Histogram) {
+        for (a, b) in self.buckets.iter().zip(&other.buckets) {
+            a.fetch_add(b.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        let ov = other.sum();
+        if ov != 0.0 {
+            let mut cur = self.sum_bits.load(Ordering::Relaxed);
+            loop {
+                let next = (f64::from_bits(cur) + ov).to_bits();
+                match self.sum_bits.compare_exchange_weak(
+                    cur,
+                    next,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(actual) => cur = actual,
+                }
+            }
+        }
+    }
+
+    /// The value at quantile `q` ∈ [0, 1]: the upper bound of the
+    /// bucket containing rank `ceil(q · count)`. `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let count = self.count();
+        if count == 0 {
+            return None;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (idx, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= rank {
+                return Some(Self::upper_bound(idx));
+            }
+        }
+        Some(f64::INFINITY)
+    }
+
+    /// Non-empty buckets as `(upper_bound, count)` pairs, ascending.
+    pub fn nonzero_buckets(&self) -> Vec<(f64, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                (n > 0).then(|| (Self::upper_bound(i), n))
+            })
+            .collect()
+    }
+}
+
+/// Exact power of two for in-range exponents, via the f64 bit layout
+/// (no libm, no platform variance).
+fn exp2(e: i64) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    f64::from_bits(((e + 1023) as u64) << 52)
+}
+
+/// A named collection of metrics. Get-or-create accessors hand out
+/// `Arc`s so hot paths can cache their handles and skip the name lookup.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    /// New empty registry (run-scoped exports; the process-wide one is
+    /// [`registry()`]).
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get or create the counter `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().expect("registry poisoned");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().expect("registry poisoned");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// Get or create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut m = self.histograms.lock().expect("registry poisoned");
+        Arc::clone(m.entry(name.to_string()).or_default())
+    }
+
+    /// JSON export: counters, gauges, and histogram summaries
+    /// (count/sum/p50/p90/p99), all keys sorted — a deterministic
+    /// function of the recorded data.
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .lock()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::Num(c.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .lock()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, g)| (k.clone(), Json::Num(g.get())))
+            .collect();
+        let histograms: BTreeMap<String, Json> = self
+            .histograms
+            .lock()
+            .expect("registry poisoned")
+            .iter()
+            .map(|(k, h)| {
+                let q = |q: f64| Json::Num(h.quantile(q).unwrap_or(0.0));
+                (
+                    k.clone(),
+                    Json::Obj(BTreeMap::from([
+                        ("count".to_string(), Json::Num(h.count() as f64)),
+                        ("sum".to_string(), Json::Num(h.sum())),
+                        ("p50".to_string(), q(0.50)),
+                        ("p90".to_string(), q(0.90)),
+                        ("p99".to_string(), q(0.99)),
+                    ])),
+                )
+            })
+            .collect();
+        Json::Obj(BTreeMap::from([
+            ("counters".to_string(), Json::Obj(counters)),
+            ("gauges".to_string(), Json::Obj(gauges)),
+            ("histograms".to_string(), Json::Obj(histograms)),
+        ]))
+    }
+
+    /// Prometheus text exposition (one `flowrs_`-prefixed family per
+    /// metric; histograms as cumulative `_bucket{le=...}` series).
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().expect("registry poisoned").iter() {
+            let _ = writeln!(out, "# TYPE flowrs_{k} counter");
+            let _ = writeln!(out, "flowrs_{k} {}", c.get());
+        }
+        for (k, g) in self.gauges.lock().expect("registry poisoned").iter() {
+            let _ = writeln!(out, "# TYPE flowrs_{k} gauge");
+            let _ = writeln!(out, "flowrs_{k} {}", g.get());
+        }
+        for (k, h) in self.histograms.lock().expect("registry poisoned").iter() {
+            let _ = writeln!(out, "# TYPE flowrs_{k} histogram");
+            let mut cum = 0u64;
+            for (ub, n) in h.nonzero_buckets() {
+                cum += n;
+                if ub.is_finite() {
+                    let _ = writeln!(out, "flowrs_{k}_bucket{{le=\"{ub}\"}} {cum}");
+                }
+            }
+            let _ = writeln!(out, "flowrs_{k}_bucket{{le=\"+Inf\"}} {}", h.count());
+            let _ = writeln!(out, "flowrs_{k}_sum {}", h.sum());
+            let _ = writeln!(out, "flowrs_{k}_count {}", h.count());
+        }
+        out
+    }
+}
+
+static GLOBAL_REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry (transport counters, live-server metrics,
+/// the `/metrics` endpoint).
+pub fn registry() -> &'static Registry {
+    GLOBAL_REGISTRY.get_or_init(Registry::new)
+}
+
+/// Serve the process-wide registry as Prometheus text over a minimal
+/// HTTP/1.1 line-protocol responder on `listener` (the live
+/// `AsyncServer`'s side listener) until `stop` is set. Any request
+/// (e.g. `GET /metrics`) gets a `200 text/plain` exposition; the
+/// request itself is read best-effort and otherwise ignored.
+pub fn serve_metrics(
+    listener: std::net::TcpListener,
+    stop: Arc<AtomicBool>,
+) -> std::thread::JoinHandle<()> {
+    use std::io::{Read, Write};
+    listener
+        .set_nonblocking(true)
+        .expect("metrics listener: cannot set nonblocking");
+    std::thread::spawn(move || loop {
+        if stop.load(Ordering::Relaxed) {
+            return;
+        }
+        match listener.accept() {
+            Ok((mut conn, _addr)) => {
+                let _ = conn.set_read_timeout(Some(std::time::Duration::from_millis(200)));
+                let mut buf = [0u8; 1024];
+                // Drain the request line best-effort — every request
+                // gets the same exposition, however much arrived.
+                #[allow(clippy::unused_io_amount)]
+                let _ = conn.read(&mut buf);
+                let body = registry().render_prometheus();
+                let resp = format!(
+                    "HTTP/1.1 200 OK\r\ncontent-type: text/plain; version=0.0.4\r\n\
+                     content-length: {}\r\nconnection: close\r\n\r\n{body}",
+                    body.len()
+                );
+                let _ = conn.write_all(resp.as_bytes());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(std::time::Duration::from_millis(25)),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn counters_and_gauges_roundtrip() {
+        let r = Registry::new();
+        r.counter("x_total").add(3);
+        r.counter("x_total").inc();
+        r.gauge("depth").set(2.5);
+        assert_eq!(r.counter("x_total").get(), 4);
+        assert_eq!(r.gauge("depth").get(), 2.5);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("counters").unwrap().get("x_total").unwrap().as_f64().unwrap(),
+            4.0
+        );
+    }
+
+    #[test]
+    fn histogram_buckets_are_log_spaced_and_exact() {
+        let h = Histogram::new();
+        for v in [0.0, -1.0, 1e-30, 0.5, 1.0, 1.1, 3.0, 1000.0, 1e40, f64::NAN] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 10);
+        // quantiles are bucket upper bounds, hence >= the true value
+        let p50 = h.quantile(0.5).unwrap();
+        assert!(p50 >= 0.5, "p50={p50}");
+        assert_eq!(h.quantile(1.0), Some(f64::INFINITY)); // NaN+1e40 overflow
+        assert!(Histogram::new().quantile(0.5).is_none());
+    }
+
+    #[test]
+    fn histogram_upper_bounds_bracket_values() {
+        // every recorded value must satisfy ub(bucket(v)) >= v with the
+        // previous bound < v (tight log bracketing, ~25% resolution)
+        for &v in &[1e-6, 0.1, 0.9, 1.0, 1.5, 2.0, 47.3, 1e9] {
+            let idx = Histogram::index_of(v);
+            let ub = Histogram::upper_bound(idx);
+            assert!(ub >= v, "ub({v})={ub}");
+            if idx > 1 {
+                let prev = Histogram::upper_bound(idx - 1);
+                assert!(prev < v * 1.0000001, "prev({v})={prev}");
+            }
+        }
+    }
+
+    #[test]
+    fn prometheus_rendering_has_families() {
+        let r = Registry::new();
+        r.counter("frames_total").add(2);
+        r.histogram("lat_s").record(0.5);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE flowrs_frames_total counter"));
+        assert!(text.contains("flowrs_frames_total 2"));
+        assert!(text.contains("flowrs_lat_s_count 1"));
+        assert!(text.contains("_bucket{le=\"+Inf\"} 1"));
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_prometheus_text() {
+        use std::io::{Read, Write};
+        registry().counter("obs_test_endpoint_total").add(7);
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = serve_metrics(listener, Arc::clone(&stop));
+        let mut conn = std::net::TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nhost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("flowrs_obs_test_endpoint_total 7"), "{resp}");
+        stop.store(true, Ordering::Relaxed);
+        handle.join().unwrap();
+    }
+
+    /// Random histogram from a seeded RNG: values spanning the bucketed
+    /// range plus out-of-range extremes.
+    fn arb_hist(rng: &mut crate::util::rng::Rng, n: usize) -> (Histogram, Vec<f64>) {
+        let h = Histogram::new();
+        let mut vals = Vec::with_capacity(n);
+        for _ in 0..n {
+            let exp = rng.below(80) as i64 - 30; // [-30, 50): exercises under/overflow
+            let mantissa = 1.0 + rng.f64();
+            let v = mantissa * exp2(exp.clamp(-1000, 1000));
+            h.record(v);
+            vals.push(v);
+        }
+        (h, vals)
+    }
+
+    #[test]
+    fn prop_histogram_count_conservation() {
+        prop::check("histogram count conservation", 64, |rng| {
+            let n = rng.below(200);
+            let (h, vals) = arb_hist(rng, n);
+            prop::assert_eq_prop(&h.count(), &(vals.len() as u64))?;
+            // merging two histograms conserves total count exactly
+            let (h2, vals2) = arb_hist(rng, rng.below(200));
+            h.merge(&h2);
+            prop::assert_eq_prop(&h.count(), &((vals.len() + vals2.len()) as u64))
+        });
+    }
+
+    #[test]
+    fn prop_histogram_merge_associative() {
+        prop::check("histogram merge associativity", 64, |rng| {
+            let (a1, _) = arb_hist(rng, rng.below(100));
+            let (b, _) = arb_hist(rng, rng.below(100));
+            let (c, _) = arb_hist(rng, rng.below(100));
+            // clone a via merge into empties
+            let a2 = Histogram::new();
+            a2.merge(&a1);
+            let bc = Histogram::new();
+            bc.merge(&b);
+            bc.merge(&c);
+            // (a ⊕ b) ⊕ c
+            a1.merge(&b);
+            a1.merge(&c);
+            // a ⊕ (b ⊕ c)
+            a2.merge(&bc);
+            prop::assert_eq_prop(&a1.nonzero_buckets_counts(), &a2.nonzero_buckets_counts())?;
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                prop::assert_eq_prop(&a1.quantile(q), &a2.quantile(q))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_histogram_quantiles_monotone_and_bracketing() {
+        prop::check("histogram quantile monotonicity", 64, |rng| {
+            let (h, vals) = arb_hist(rng, 1 + rng.below(200));
+            let mut last = f64::NEG_INFINITY;
+            for i in 0..=20 {
+                let q = i as f64 / 20.0;
+                let v = h.quantile(q).unwrap();
+                prop::ensure(v >= last, || format!("q={q}: {v} < {last}"))?;
+                last = v;
+            }
+            // p100 dominates every recorded value
+            let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let p100 = h.quantile(1.0).unwrap();
+            prop::ensure(
+                p100 >= max.min(exp2(MAX_EXP)) || p100.is_infinite(),
+                || format!("p100={p100} < max={max}"),
+            )
+        });
+    }
+
+    impl Histogram {
+        /// Test helper: bucket counts keyed by index, for exact equality.
+        fn nonzero_buckets_counts(&self) -> Vec<(usize, u64)> {
+            self.buckets
+                .iter()
+                .enumerate()
+                .filter_map(|(i, b)| {
+                    let n = b.load(Ordering::Relaxed);
+                    (n > 0).then_some((i, n))
+                })
+                .collect()
+        }
+    }
+}

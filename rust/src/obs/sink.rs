@@ -1,0 +1,232 @@
+//! Event sinks: where typed telemetry events go.
+//!
+//! [`NullSink`] is the zero-overhead default — every instrumented layer
+//! holds an `Arc<dyn ObsSink>` that costs one virtual call per event
+//! and does nothing. [`JsonlSink`] buffers canonical JSONL lines to a
+//! file; [`VecSink`] collects events in memory for tests and the
+//! summarize tooling. A process-global sink slot serves the layers that
+//! have no per-run handle (transport framing, checkpoint persistence) —
+//! it is only ever installed on the live server path, so simulation
+//! event streams stay deterministic.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+use super::event::Event;
+
+/// A destination for typed telemetry events. Implementations must be
+/// cheap and infallible on the emit path (IO errors are deferred to
+/// [`ObsSink::flush`]); they must never consume randomness or otherwise
+/// perturb the caller.
+pub trait ObsSink: Send + Sync {
+    /// Record one event.
+    fn emit(&self, ev: &Event);
+    /// Flush any buffered output; report deferred IO errors.
+    fn flush(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// The zero-overhead default sink: drops every event.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullSink;
+
+impl ObsSink for NullSink {
+    fn emit(&self, _ev: &Event) {}
+}
+
+/// Buffered JSONL file sink: one canonical line per event
+/// ([`Event::to_line`]). Writes are buffered; call [`ObsSink::flush`]
+/// (or drop the sink) to force them out. IO errors on the emit path are
+/// remembered and surfaced by the next `flush`.
+pub struct JsonlSink {
+    inner: Mutex<JsonlState>,
+}
+
+struct JsonlState {
+    writer: BufWriter<File>,
+    deferred: Option<String>,
+}
+
+impl JsonlSink {
+    /// Create (truncating) `path` for a fresh event stream.
+    pub fn create(path: impl AsRef<Path>) -> Result<JsonlSink> {
+        let file = File::create(path.as_ref()).map_err(|e| {
+            Error::Config(format!("cannot create {}: {e}", path.as_ref().display()))
+        })?;
+        Ok(JsonlSink::from_file(file))
+    }
+
+    /// Open `path` for appending — the resume path: the restored run's
+    /// events continue the killed run's stream, so the spliced file is
+    /// byte-identical to an uninterrupted run's.
+    pub fn append(path: impl AsRef<Path>) -> Result<JsonlSink> {
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path.as_ref())
+            .map_err(|e| {
+                Error::Config(format!("cannot append to {}: {e}", path.as_ref().display()))
+            })?;
+        Ok(JsonlSink::from_file(file))
+    }
+
+    fn from_file(file: File) -> JsonlSink {
+        JsonlSink {
+            inner: Mutex::new(JsonlState {
+                writer: BufWriter::new(file),
+                deferred: None,
+            }),
+        }
+    }
+}
+
+impl ObsSink for JsonlSink {
+    fn emit(&self, ev: &Event) {
+        let mut line = ev.to_line();
+        line.push('\n');
+        let mut s = self.inner.lock().expect("jsonl sink poisoned");
+        if let Err(e) = s.writer.write_all(line.as_bytes()) {
+            s.deferred.get_or_insert_with(|| e.to_string());
+        }
+    }
+
+    fn flush(&self) -> Result<()> {
+        let mut s = self.inner.lock().expect("jsonl sink poisoned");
+        if let Some(e) = s.deferred.take() {
+            return Err(Error::Config(format!("event sink write failed: {e}")));
+        }
+        s.writer
+            .flush()
+            .map_err(|e| Error::Config(format!("event sink flush failed: {e}")))
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        if let Ok(mut s) = self.inner.lock() {
+            let _ = s.writer.flush();
+        }
+    }
+}
+
+/// In-memory sink collecting every event (tests, summaries).
+#[derive(Default)]
+pub struct VecSink {
+    events: Mutex<Vec<Event>>,
+}
+
+impl VecSink {
+    /// New empty collector.
+    pub fn new() -> VecSink {
+        VecSink::default()
+    }
+
+    /// Snapshot of everything collected so far.
+    pub fn events(&self) -> Vec<Event> {
+        self.events.lock().expect("vec sink poisoned").clone()
+    }
+}
+
+impl ObsSink for VecSink {
+    fn emit(&self, ev: &Event) {
+        self.events.lock().expect("vec sink poisoned").push(ev.clone());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global sink + wall clock
+// ---------------------------------------------------------------------------
+
+static GLOBAL: OnceLock<Arc<dyn ObsSink>> = OnceLock::new();
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Install the process-global sink used by layers without a per-run
+/// handle (transport framing, checkpoint persistence). First install
+/// wins (returns `false` if one was already installed). Only the live
+/// server path should ever call this — the simulation paths keep their
+/// event streams per-run and deterministic.
+pub fn install_global(sink: Arc<dyn ObsSink>) -> bool {
+    GLOBAL.set(sink).is_ok()
+}
+
+/// The process-global sink, if one was installed.
+pub fn global() -> Option<&'static Arc<dyn ObsSink>> {
+    GLOBAL.get()
+}
+
+/// Emit to the process-global sink, if installed (no-op otherwise).
+pub fn emit_global(ev: &Event) {
+    if let Some(sink) = GLOBAL.get() {
+        sink.emit(ev);
+    }
+}
+
+/// Wall-clock seconds since the first call in this process — the
+/// timestamp base for live-path events (the simulation paths stamp
+/// virtual time instead and never call this).
+pub fn wall_t_s() -> f64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jsonl_sink_writes_canonical_lines() {
+        let path = std::env::temp_dir().join(format!(
+            "flowrs-obs-sink-{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let sink = JsonlSink::create(&path).unwrap();
+        let a = Event::FrameSent { t_s: 1.0, bytes: 4 };
+        let b = Event::FrameRecv { t_s: 2.0, bytes: 8 };
+        sink.emit(&a);
+        sink.emit(&b);
+        sink.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(Event::parse_line(lines[0]).unwrap(), a);
+        assert_eq!(Event::parse_line(lines[1]).unwrap(), b);
+
+        // append mode continues the same stream
+        drop(sink);
+        let sink2 = JsonlSink::append(&path).unwrap();
+        sink2.emit(&a);
+        sink2.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn null_sink_accepts_everything() {
+        NullSink.emit(&Event::FrameSent { t_s: 0.0, bytes: 0 });
+        NullSink.flush().unwrap();
+    }
+
+    #[test]
+    fn vec_sink_collects_in_order() {
+        let sink = VecSink::new();
+        sink.emit(&Event::FrameSent { t_s: 0.5, bytes: 1 });
+        sink.emit(&Event::FrameRecv { t_s: 1.0, bytes: 2 });
+        let evs = sink.events();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].t_s(), 0.5);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone() {
+        let a = wall_t_s();
+        let b = wall_t_s();
+        assert!(b >= a);
+    }
+}

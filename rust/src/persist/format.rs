@@ -600,10 +600,24 @@ impl CheckpointStore {
     }
 
     /// Atomically write `writer`'s checkpoint into the store; returns
-    /// the final path.
+    /// the final path. Telemetry goes to the metric registry and the
+    /// **process-global** obs sink only — never a per-run stream:
+    /// checkpoint cadence differs between a full run and a
+    /// kill/resume pair, so a per-run `checkpoint_write` event would
+    /// break the event stream's byte-identity guarantee.
     pub fn save(&self, writer: &CheckpointWriter) -> Result<PathBuf> {
         let path = self.path_for(writer.rounds_completed());
         writer.write_atomic(&path)?;
+        let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+        crate::obs::registry().counter("persist_checkpoints_total").inc();
+        crate::obs::registry()
+            .counter("persist_checkpoint_bytes_total")
+            .add(bytes);
+        crate::obs::emit_global(&crate::obs::Event::CheckpointWrite {
+            t_s: crate::obs::wall_t_s(),
+            version: writer.rounds_completed(),
+            bytes,
+        });
         Ok(path)
     }
 

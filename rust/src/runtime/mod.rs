@@ -455,7 +455,7 @@ mod tests {
             // Stubbed-runtime builds (no `xla` feature) skip; with the
             // real binding, a load failure is a genuine regression.
             Err(e) if !cfg!(feature = "xla") => {
-                eprintln!("skipping: runtime unavailable ({e})");
+                crate::telemetry::log::warn(&format!("skipping: runtime unavailable ({e})"));
                 None
             }
             Err(e) => panic!("runtime failed to load with artifacts present: {e}"),

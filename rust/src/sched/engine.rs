@@ -35,10 +35,12 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 use crate::config::ScheduleConfig;
 use crate::device::{profiles, DeviceProfile};
 use crate::error::{Error, Result};
+use crate::obs::{Event, Fate, NullSink, ObsSink};
 use crate::persist::{CheckpointStore, DeviceState, EngineCheckpoint, InFlightDispatch};
 use crate::telemetry::log;
 use crate::util::rng::Rng;
@@ -556,6 +558,14 @@ pub struct Engine<T: CohortTrainer> {
     /// prepends them so a resumed report splices seamlessly onto the
     /// uninterrupted trace.
     prior_rounds: Vec<PopulationRound>,
+    /// Typed event sink ([`crate::obs`]); [`NullSink`] by default.
+    /// Events are stamped with **virtual time** and emitted in a
+    /// deterministic order (dispatch order, then heap-pop settle
+    /// order), so for a fixed seed the stream is byte-identical across
+    /// runs — and across kill/resume, because `checkpoint` is only
+    /// legal at a flush boundary and resume re-queues in-flight work
+    /// without re-emitting its dispatch events.
+    obs: Arc<dyn ObsSink>,
 }
 
 impl<T: CohortTrainer> Engine<T> {
@@ -602,7 +612,16 @@ impl<T: CohortTrainer> Engine<T> {
             rescans: 0,
             index,
             prior_rounds: Vec::new(),
+            obs: Arc::new(NullSink),
         })
+    }
+
+    /// Attach a typed event sink (see [`crate::obs`]). The default
+    /// [`NullSink`] costs one virtual call per event; instrumentation
+    /// never consumes randomness or perturbs the trajectory, so golden
+    /// traces are bit-identical with obs on or off.
+    pub fn set_obs(&mut self, sink: Arc<dyn ObsSink>) {
+        self.obs = sink;
     }
 
     pub fn population(&self) -> &Population {
@@ -809,6 +828,12 @@ impl<T: CohortTrainer> Engine<T> {
                 avail.len()
             )));
         }
+        self.obs.emit(&Event::RoundStart {
+            t_s: now,
+            round,
+            available: avail.len() as u64,
+            selected: picked.len() as u64,
+        });
         let dispatches: Vec<(usize, f64, f64)> = picked
             .iter()
             .map(|&j| {
@@ -955,6 +980,7 @@ impl<T: CohortTrainer> Engine<T> {
     ) {
         let full_finish_s = now + full_time_s;
         let d = &mut self.pop.devices[i];
+        let class = d.device.name;
         // online at dispatch; the connection survives only to this
         // on-dwell's end
         let first_off_s = d.schedule.on_dwell_end_s(now);
@@ -966,16 +992,30 @@ impl<T: CohortTrainer> Engine<T> {
             (full_finish_s, Outcome::Fold)
         };
         let frac = ((cutoff_s - now) / (full_finish_s - now)).clamp(0.0, 1.0);
+        let energy_j = full_energy_j * frac;
         d.last_selected_round = Some(self.version + 1);
         d.times_selected += 1;
         self.in_flight += 1;
         self.heap.push(Reverse(Completion {
             resolve_s: if resolve_at_cutoff { cutoff_s } else { full_finish_s },
             device_idx: i,
-            energy_j: full_energy_j * frac,
+            energy_j,
             base_version: self.version,
             outcome,
         }));
+        self.obs.emit(&Event::Dispatch {
+            t_s: now,
+            device: i as u64,
+            class,
+            fate: match outcome {
+                Outcome::Fold => Fate::Fold,
+                Outcome::DropDeadline => Fate::DropDeadline,
+                Outcome::DropChurn => Fate::DropChurn,
+            },
+            work_s: cutoff_s - now,
+            energy_j,
+            bytes_down: self.cfg.model_bytes as u64,
+        });
     }
 
     /// Settle one resolution event: account its energy, fold or drop it,
@@ -996,19 +1036,43 @@ impl<T: CohortTrainer> Engine<T> {
         }
         self.in_flight -= 1;
         self.energy_j += ev.energy_j;
+        let class = self.pop.devices[i].device.name;
         match ev.outcome {
-            Outcome::Fold => self.buffer.push(BufferedFold {
-                device_idx: i,
-                staleness: self.version - ev.base_version,
-                resolve_s: ev.resolve_s,
-            }),
+            Outcome::Fold => {
+                let staleness = self.version - ev.base_version;
+                self.buffer.push(BufferedFold {
+                    device_idx: i,
+                    staleness,
+                    resolve_s: ev.resolve_s,
+                });
+                self.obs.emit(&Event::Fold {
+                    t_s: ev.resolve_s,
+                    device: i as u64,
+                    class,
+                    staleness,
+                    energy_j: ev.energy_j,
+                    bytes_up: self.cfg.model_bytes as u64,
+                });
+            }
             Outcome::DropChurn => {
                 self.dropped_churn += 1;
                 self.wasted_j += ev.energy_j;
+                self.obs.emit(&Event::DropChurn {
+                    t_s: ev.resolve_s,
+                    device: i as u64,
+                    class,
+                    energy_j: ev.energy_j,
+                });
             }
             Outcome::DropDeadline => {
                 self.dropped_deadline += 1;
                 self.wasted_j += ev.energy_j;
+                self.obs.emit(&Event::DropDeadline {
+                    t_s: ev.resolve_s,
+                    device: i as u64,
+                    class,
+                    energy_j: ev.energy_j,
+                });
             }
         }
     }
@@ -1064,14 +1128,26 @@ impl<T: CohortTrainer> Engine<T> {
                     Some(_) => slowest_ok,
                     None => self.slowest_all_s,
                 };
-                // idle-while-waiting energy for clients that reported early
+                // idle-while-waiting energy for clients that reported
+                // early (a zero wait charges exactly 0 J — adding it is
+                // an exact identity, so the ledger skips the event)
                 for f in &self.buffer {
                     let wait = (round_end - f.resolve_s).max(0.0);
-                    self.energy_j += self
+                    let idle_j = self
                         .cfg
                         .cost
                         .idle(self.pop.devices[f.device_idx].device, wait)
                         .energy_j;
+                    self.energy_j += idle_j;
+                    if wait > 0.0 {
+                        self.obs.emit(&Event::Idle {
+                            t_s: round_end,
+                            device: f.device_idx as u64,
+                            class: self.pop.devices[f.device_idx].device.name,
+                            wait_s: wait,
+                            energy_j: idle_j,
+                        });
+                    }
                 }
                 // measured from round entry so availability dead air is
                 // charged
@@ -1117,6 +1193,25 @@ impl<T: CohortTrainer> Engine<T> {
             max_staleness,
             in_flight: self.in_flight,
         };
+        self.obs.emit(&Event::Flush {
+            t_s: self.clock_s,
+            version,
+            folded: completed as u64,
+            mean_staleness: rec.mean_staleness,
+            max_staleness,
+        });
+        self.obs.emit(&Event::RoundEnd {
+            t_s: self.clock_s,
+            round: version,
+            round_time_s,
+            energy_j: rec.round_energy_j,
+            wasted_j: rec.wasted_energy_j,
+            completed: completed as u64,
+            dropped_deadline: rec.dropped_deadline as u64,
+            dropped_churn: rec.dropped_churn as u64,
+            eval_loss,
+            accuracy,
+        });
         self.buffer.clear();
         self.dropped_deadline = 0;
         self.dropped_churn = 0;

@@ -53,6 +53,7 @@ use std::time::Duration;
 
 use crate::client::keys;
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::persist::{
     load_server_checkpoint, CheckpointStore, ClientStatRecord, ServerCheckpoint,
 };
@@ -618,14 +619,28 @@ impl ExecCore {
     /// Settle one failure/discard into the accumulator and whole-run
     /// stats (the fold path is mode-specific because its cost accounting
     /// differs). A transport failure also drops the connection, but only
-    /// if it is still this exact proxy that is registered.
-    fn settle_non_fold(&mut self, acc: &mut FitAcc, proxy: &Arc<ClientProxy>, settled: &Settled) {
+    /// if it is still this exact proxy that is registered. `seq` is the
+    /// dispatch sequence number, which stamps the telemetry events.
+    fn settle_non_fold(
+        &mut self,
+        acc: &mut FitAcc,
+        proxy: &Arc<ClientProxy>,
+        settled: &Settled,
+        seq: u64,
+    ) {
         let id = &proxy.handle.id;
         match settled {
             Settled::Fold(_) => unreachable!("fold settlement is mode-specific"),
             Settled::Failure { transport, reason } => {
                 self.stats.failures += 1;
                 acc.failures += 1;
+                obs::registry().counter("exec_failures_total").inc();
+                obs::emit_global(&obs::Event::FitFailed {
+                    t_s: obs::wall_t_s(),
+                    device: seq,
+                    class: proxy.handle.device.name,
+                    transport: *transport,
+                });
                 if *transport {
                     log::warn(&format!(
                         "client {id} fit error: {reason}; dropping its connection"
@@ -643,6 +658,12 @@ impl ExecCore {
             Settled::Discarded => {
                 self.stats.discarded += 1;
                 acc.discarded += 1;
+                obs::registry().counter("exec_discarded_total").inc();
+                obs::emit_global(&obs::Event::Discarded {
+                    t_s: obs::wall_t_s(),
+                    device: seq,
+                    class: proxy.handle.device.name,
+                });
                 log::warn(&format!(
                     "client {id}: in-flight result discarded (deregistered)"
                 ));
@@ -752,14 +773,26 @@ impl ExecCore {
             }
         }
         let timeout = self.config.round_timeout;
-        let tasks: Vec<(usize, usize, JoinHandle<Result<FitRes>>)> = plan
+        let tasks: Vec<(usize, usize, u64, JoinHandle<Result<FitRes>>)> = plan
             .iter()
             .map(|(idx, ins)| {
                 self.stats.dispatched += 1;
+                let seq = self.stats.dispatched;
                 let bytes_down = ins.parameters.byte_len();
+                obs::registry().counter("exec_dispatched_total").inc();
+                obs::emit_global(&obs::Event::Dispatch {
+                    t_s: obs::wall_t_s(),
+                    device: seq,
+                    class: handles[*idx].device.name,
+                    fate: obs::Fate::Pending,
+                    work_s: 0.0,
+                    energy_j: 0.0,
+                    bytes_down: bytes_down as u64,
+                });
                 (
                     *idx,
                     bytes_down,
+                    seq,
                     spawn_fit(Arc::clone(&proxies[*idx]), ins.clone(), timeout),
                 )
             })
@@ -771,7 +804,7 @@ impl ExecCore {
         // and idle-while-waiting energy
         let mut client_times: Vec<(&'static crate::device::DeviceProfile, f64)> = Vec::new();
 
-        for (idx, bytes_down, join) in tasks {
+        for (idx, bytes_down, seq, join) in tasks {
             let outcome = join
                 .join()
                 .unwrap_or_else(|_| Err(Error::Client("fit thread panicked".into())));
@@ -800,10 +833,20 @@ impl ExecCore {
                     );
                     // barrier folds are never stale
                     acc.fold(0, e, bytes_down, bytes_up, steps, loss, truncated);
+                    obs::registry().counter("exec_folded_total").inc();
+                    obs::registry().histogram("exec_fold_staleness").record(0.0);
+                    obs::emit_global(&obs::Event::Fold {
+                        t_s: obs::wall_t_s(),
+                        device: seq,
+                        class: handle.device.name,
+                        staleness: 0,
+                        energy_j: e,
+                        bytes_up: bytes_up as u64,
+                    });
                     client_times.push((handle.device, t));
                     fit_results.push((handle, res));
                 }
-                other => self.settle_non_fold(&mut acc, &proxies[idx], &other),
+                other => self.settle_non_fold(&mut acc, &proxies[idx], &other, seq),
             }
         }
 
@@ -830,6 +873,30 @@ impl ExecCore {
 
         // ---- evaluate phase --------------------------------------------
         let summary = self.run_evaluate(round, params, &proxies, &handles)?;
+
+        let round_time_s = round_fit_time + self.cost.server_overhead_s;
+        obs::registry().counter("exec_flushes_total").inc();
+        obs::registry().histogram("exec_round_time_s").record(round_time_s);
+        obs::registry().gauge("sched_model_version").set(round as f64);
+        obs::emit_global(&obs::Event::Flush {
+            t_s: obs::wall_t_s(),
+            version: round,
+            folded: acc.folded as u64,
+            mean_staleness: acc.mean_staleness(),
+            max_staleness: acc.staleness_max,
+        });
+        obs::emit_global(&obs::Event::RoundEnd {
+            t_s: obs::wall_t_s(),
+            round,
+            round_time_s,
+            energy_j: acc.energy_j,
+            wasted_j: 0.0,
+            completed: acc.folded as u64,
+            dropped_deadline: 0,
+            dropped_churn: 0,
+            eval_loss: summary.loss,
+            accuracy: summary.accuracy,
+        });
 
         Ok(RoundRecord {
             round,
@@ -891,6 +958,17 @@ impl ExecCore {
             InFlight { proxy, base_version: version, finish_s, bytes_down, modeled_energy_j, join },
         );
         self.stats.dispatched += 1;
+        obs::registry().counter("exec_dispatched_total").inc();
+        obs::registry().gauge("exec_in_flight").set(in_flight.len() as f64);
+        obs::emit_global(&obs::Event::Dispatch {
+            t_s: obs::wall_t_s(),
+            device: *seq,
+            class: handle.device.name,
+            fate: obs::Fate::Pending,
+            work_s: finish_s - clock_s,
+            energy_j: modeled_energy_j,
+            bytes_down: bytes_down as u64,
+        });
     }
 
     /// Top up the streaming window from the roster's idle free-list
@@ -1030,6 +1108,7 @@ impl ExecCore {
             let fl = in_flight
                 .remove(&ev.seq)
                 .expect("heap and in-flight map are 1:1");
+            obs::registry().gauge("exec_in_flight").set(in_flight.len() as f64);
             clock_s = clock_s.max(fl.finish_s);
             roster.settle(&fl.proxy);
             let outcome = fl
@@ -1064,6 +1143,18 @@ impl ExecCore {
                         loss,
                         truncated,
                     );
+                    obs::registry().counter("exec_folded_total").inc();
+                    obs::registry()
+                        .histogram("exec_fold_staleness")
+                        .record(staleness as f64);
+                    obs::emit_global(&obs::Event::Fold {
+                        t_s: obs::wall_t_s(),
+                        device: ev.seq,
+                        class: handle.device.name,
+                        staleness,
+                        energy_j: fl.modeled_energy_j,
+                        bytes_up: bytes_up as u64,
+                    });
                     let Brain::Async(strategy) = &mut self.brain else {
                         unreachable!("streaming loop runs an async strategy")
                     };
@@ -1112,6 +1203,36 @@ impl ExecCore {
                             concurrency,
                             fit_discarded: acc.discarded,
                         };
+                        obs::registry().counter("exec_flushes_total").inc();
+                        obs::registry()
+                            .histogram("exec_round_time_s")
+                            .record(record.round_time_s);
+                        obs::registry().gauge("sched_model_version").set(version as f64);
+                        obs::emit_global(&obs::Event::EvalDone {
+                            t_s: obs::wall_t_s(),
+                            version,
+                            loss: eval_loss,
+                            accuracy,
+                        });
+                        obs::emit_global(&obs::Event::Flush {
+                            t_s: obs::wall_t_s(),
+                            version,
+                            folded: acc.folded as u64,
+                            mean_staleness: record.mean_staleness,
+                            max_staleness: record.max_staleness,
+                        });
+                        obs::emit_global(&obs::Event::RoundEnd {
+                            t_s: obs::wall_t_s(),
+                            round: version,
+                            round_time_s: record.round_time_s,
+                            energy_j: record.round_energy_j,
+                            wasted_j: 0.0,
+                            completed: acc.folded as u64,
+                            dropped_deadline: 0,
+                            dropped_churn: 0,
+                            eval_loss,
+                            accuracy,
+                        });
                         clock_s += self.cost.server_overhead_s;
                         last_flush_clock = clock_s;
                         log::info(&format!(
@@ -1147,7 +1268,7 @@ impl ExecCore {
                     if matches!(other, Settled::Failure { .. }) {
                         failures_since_fold += 1;
                     }
-                    self.settle_non_fold(&mut acc, &fl.proxy, &other);
+                    self.settle_non_fold(&mut acc, &fl.proxy, &other, ev.seq);
                 }
             }
             if failures_since_fold > 64 + 8 * self.manager.len() {

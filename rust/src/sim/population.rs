@@ -11,10 +11,12 @@
 //! energy, hit-rate) work in any environment.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use crate::config::ScheduleConfig;
 use crate::data::SyntheticSpec;
 use crate::error::{Error, Result};
+use crate::obs::{self, JsonlSink, ObsSink};
 use crate::persist::load_engine_checkpoint;
 use crate::runtime::Runtime;
 use crate::sched::engine::{
@@ -155,17 +157,52 @@ pub fn run_population(
         Some(path) => Some(load_engine_checkpoint(Path::new(path))?),
         None => None,
     };
-    match runtime {
+    let sink = obs_sink(cfg)?;
+    let report = match runtime {
         Some(rt) => {
             let trainer = RuntimeCohortTrainer::new(rt, cfg)?;
-            match &ckpt {
-                Some(ck) => Engine::resume(cfg, trainer, ck)?.run(),
-                None => Engine::new(cfg, trainer)?.run(),
+            let mut engine = match &ckpt {
+                Some(ck) => Engine::resume(cfg, trainer, ck)?,
+                None => Engine::new(cfg, trainer)?,
+            };
+            if let Some(s) = &sink {
+                engine.set_obs(s.clone());
             }
+            engine.run()?
         }
-        None => match &ckpt {
-            Some(ck) => Engine::resume(cfg, SurrogateTrainer::default(), ck)?.run(),
-            None => Engine::new(cfg, SurrogateTrainer::default())?.run(),
-        },
+        None => {
+            let mut engine = match &ckpt {
+                Some(ck) => Engine::resume(cfg, SurrogateTrainer::default(), ck)?,
+                None => Engine::new(cfg, SurrogateTrainer::default())?,
+            };
+            if let Some(s) = &sink {
+                engine.set_obs(s.clone());
+            }
+            engine.run()?
+        }
+    };
+    if let (Some(s), Some(dir)) = (&sink, &cfg.obs_out) {
+        s.flush()?;
+        obs::write_derived(Path::new(dir))?;
     }
+    Ok(report)
+}
+
+/// Build the per-run event sink for [`ScheduleConfig::obs_out`], if
+/// set: `<dir>/events.jsonl`, truncated for a fresh run and appended
+/// on resume so a kill/resume splice stays byte-identical to an
+/// uninterrupted run's stream.
+fn obs_sink(cfg: &ScheduleConfig) -> Result<Option<Arc<JsonlSink>>> {
+    let Some(dir) = &cfg.obs_out else {
+        return Ok(None);
+    };
+    std::fs::create_dir_all(dir)
+        .map_err(|e| Error::Config(format!("cannot create obs dir {dir}: {e}")))?;
+    let path = Path::new(dir).join("events.jsonl");
+    let sink = if cfg.resume_from.is_some() {
+        JsonlSink::append(&path)?
+    } else {
+        JsonlSink::create(&path)?
+    };
+    Ok(Some(Arc::new(sink)))
 }

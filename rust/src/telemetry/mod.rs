@@ -1,7 +1,8 @@
 //! Minimal leveled logger (offline build — no `tracing`).
 //!
 //! Level is read once from `FLOWRS_LOG` (`error`, `warn`, `info`, `debug`,
-//! `trace`; default `info`). Output goes to stderr so experiment tables on
+//! `trace`; default `info` — an unrecognized value warns once on stderr and
+//! falls back to `info`). Output goes to stderr so experiment tables on
 //! stdout stay machine-readable.
 
 pub mod log {
@@ -32,7 +33,19 @@ pub mod log {
             Ok("warn") => Level::Warn,
             Ok("debug") => Level::Debug,
             Ok("trace") => Level::Trace,
-            _ => Level::Info,
+            Ok("info") | Err(_) => Level::Info,
+            Ok(other) => {
+                // A typo like FLOWRS_LOG=inof silently running at the
+                // default level is a debugging trap — warn once.
+                static WARNED: std::sync::Once = std::sync::Once::new();
+                WARNED.call_once(|| {
+                    eprintln!(
+                        "[flowrs] unrecognized FLOWRS_LOG value {other:?} \
+                         (expected error|warn|info|debug|trace); using info"
+                    );
+                });
+                Level::Info
+            }
         } as u8;
         LEVEL.store(parsed, Ordering::Relaxed);
         parsed

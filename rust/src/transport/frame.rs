@@ -11,6 +11,7 @@
 use std::io::{Read, Write};
 
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::util::bytes::{LeReader, LeWriter};
 
 /// Upper bound on a single frame's payload.
@@ -32,6 +33,13 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     w.write_all(prefix.as_slice())?;
     w.write_all(payload)?;
     w.flush()?;
+    let total = (payload.len() + 4) as u64;
+    obs::registry().counter("transport_frames_sent_total").inc();
+    obs::registry().counter("transport_bytes_sent_total").add(total);
+    obs::emit_global(&obs::Event::FrameSent {
+        t_s: obs::wall_t_s(),
+        bytes: total,
+    });
     Ok(())
 }
 
@@ -59,6 +67,13 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>> {
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)
         .map_err(|e| Error::Transport(format!("truncated frame: {e}")))?;
+    let total = (len + 4) as u64;
+    obs::registry().counter("transport_frames_recv_total").inc();
+    obs::registry().counter("transport_bytes_recv_total").add(total);
+    obs::emit_global(&obs::Event::FrameRecv {
+        t_s: obs::wall_t_s(),
+        bytes: total,
+    });
     Ok(payload)
 }
 

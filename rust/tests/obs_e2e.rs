@@ -1,0 +1,233 @@
+//! Telemetry end-to-end suite: the structured event stream is locked to
+//! the same determinism bar as the engine itself.
+//!
+//! Reuses the `trace_e2e.rs` fixture family (the 24-device
+//! `smalltown.csv` recorded trace and its committed golden CSVs), and
+//! proves four properties the obs subsystem promises:
+//!
+//! * **Determinism** — a seeded `--obs-out` run writes a byte-identical
+//!   `events.jsonl` (and derived `metrics.json` / `costs.csv`) on every
+//!   invocation;
+//! * **Non-perturbation** — running with telemetry on leaves the
+//!   engine's report bit-identical to the committed goldens (telemetry
+//!   never consumes RNG, reorders float math, or reads wall-clock on
+//!   the sim path);
+//! * **Splice identity** — a run killed at round k and resumed appends
+//!   to the same stream and lands byte-identical to an uninterrupted
+//!   run's stream (resume re-queues in-flight work without re-emitting
+//!   its dispatch events);
+//! * **Reconciliation** — the per-round cost ledger folded from the
+//!   events agrees bit-for-bit with the engine's own accounting
+//!   (`round_energy_j` / `wasted_energy_j`) and exactly with the
+//!   fold/drop/byte counts.
+
+use std::path::PathBuf;
+
+use flowrs::config::ScheduleConfig;
+use flowrs::obs::{read_events, replay_registry, CostLedger, Event};
+use flowrs::sim::population::run_population;
+
+const GOLDEN_SYNC: &str = include_str!("fixtures/smalltown_sync.golden.csv");
+const GOLDEN_ASYNC: &str = include_str!("fixtures/smalltown_async.golden.csv");
+
+fn fixture() -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/smalltown.csv")
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("flowrs-obs-e2e-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Keep in sync with `sync_cfg` in `trace_e2e.rs` (and the Python port).
+fn sync_cfg() -> ScheduleConfig {
+    ScheduleConfig::default()
+        .named("smalltown-sync")
+        .population(24)
+        .cohort(8)
+        .rounds(6)
+        .seed(7)
+        .deadline(Some(60.0))
+        .trace_file(&fixture())
+}
+
+/// Keep in sync with `async_cfg` in `trace_e2e.rs`.
+fn async_cfg() -> ScheduleConfig {
+    ScheduleConfig::default()
+        .named("smalltown-async")
+        .population(24)
+        .cohort(8)
+        .rounds(8)
+        .seed(7)
+        .deadline(Some(45.0))
+        .buffered(4)
+        .staleness(0.0)
+        .trace_file(&fixture())
+}
+
+fn read(dir: &std::path::Path, file: &str) -> String {
+    std::fs::read_to_string(dir.join(file))
+        .unwrap_or_else(|e| panic!("cannot read {file} in {}: {e}", dir.display()))
+}
+
+#[test]
+fn obs_stream_is_byte_identical_across_reruns() {
+    let (a, b) = (tmp_dir("rerun-a"), tmp_dir("rerun-b"));
+    run_population(&sync_cfg().obs(a.to_str().unwrap()), None).unwrap();
+    run_population(&sync_cfg().obs(b.to_str().unwrap()), None).unwrap();
+    for file in ["events.jsonl", "metrics.json", "costs.csv"] {
+        assert_eq!(
+            read(&a, file),
+            read(&b, file),
+            "{file} differs between two identically-seeded runs"
+        );
+    }
+    assert!(!read(&a, "events.jsonl").is_empty());
+    std::fs::remove_dir_all(&a).ok();
+    std::fs::remove_dir_all(&b).ok();
+}
+
+#[test]
+fn obs_does_not_perturb_golden_csvs() {
+    // The obs-off cases are locked against the same goldens in
+    // trace_e2e.rs, so equality here proves obs on/off changes nothing.
+    let dir = tmp_dir("perturb");
+    let d = dir.to_str().unwrap();
+    let sync = run_population(&sync_cfg().obs(d), None).unwrap();
+    assert_eq!(sync.to_csv(), GOLDEN_SYNC, "telemetry perturbed the sync golden");
+    let asy = run_population(&async_cfg().obs(d), None).unwrap();
+    assert_eq!(asy.to_csv(), GOLDEN_ASYNC, "telemetry perturbed the async golden");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sync_kill_resume_splices_an_identical_stream() {
+    let full = tmp_dir("sync-full");
+    run_population(&sync_cfg().obs(full.to_str().unwrap()), None).unwrap();
+
+    let spliced = tmp_dir("sync-spliced");
+    let ck = tmp_dir("sync-ck");
+    let (sp, ck_s) = (spliced.to_str().unwrap(), ck.to_str().unwrap().to_string());
+    run_population(&sync_cfg().rounds(3).checkpoints(&ck_s).obs(sp), None).unwrap();
+    run_population(&sync_cfg().resume(&ck_s).obs(sp), None).unwrap();
+
+    for file in ["events.jsonl", "metrics.json", "costs.csv"] {
+        assert_eq!(
+            read(&full, file),
+            read(&spliced, file),
+            "kill/resume {file} diverged from the uninterrupted stream"
+        );
+    }
+    for d in [&full, &spliced, &ck] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn async_kill_resume_splices_an_identical_stream() {
+    // The async variant is the sharp edge: the checkpoint carries an
+    // in-flight manifest, and resume must re-queue it *without*
+    // re-emitting the dispatch events the killed run already wrote.
+    let full = tmp_dir("async-full");
+    run_population(&async_cfg().obs(full.to_str().unwrap()), None).unwrap();
+
+    let spliced = tmp_dir("async-spliced");
+    let ck = tmp_dir("async-ck");
+    let (sp, ck_s) = (spliced.to_str().unwrap(), ck.to_str().unwrap().to_string());
+    run_population(&async_cfg().rounds(4).checkpoints(&ck_s).obs(sp), None).unwrap();
+    run_population(&async_cfg().resume(&ck_s).obs(sp), None).unwrap();
+
+    assert_eq!(
+        read(&full, "events.jsonl"),
+        read(&spliced, "events.jsonl"),
+        "async kill/resume event stream diverged from the uninterrupted one"
+    );
+    for d in [&full, &spliced, &ck] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}
+
+#[test]
+fn ledger_reconciles_with_engine_accounting() {
+    let dir = tmp_dir("ledger");
+    let report = run_population(&async_cfg().obs(dir.to_str().unwrap()), None).unwrap();
+    let events = read_events(&dir).unwrap();
+    let ledger = CostLedger::from_events(&events);
+    // The books balance: per round, energy accumulated event-by-event is
+    // bit-identical to what the engine reported in RoundEnd.
+    ledger.verify().expect("ledger books must reconcile");
+
+    assert_eq!(ledger.rounds().len(), report.rounds.len());
+    let model_bytes = async_cfg().model_bytes as u64;
+    for (lr, rr) in ledger.rounds().iter().zip(&report.rounds) {
+        assert_eq!(lr.round, rr.round);
+        assert_eq!(
+            lr.reported_energy_j.to_bits(),
+            rr.round_energy_j.to_bits(),
+            "round {} energy mismatch vs engine report",
+            rr.round
+        );
+        assert_eq!(
+            lr.reported_wasted_j.to_bits(),
+            rr.wasted_energy_j.to_bits(),
+            "round {} wasted-energy mismatch vs engine report",
+            rr.round
+        );
+        let folds: u64 = lr.classes.values().map(|c| c.folds).sum();
+        let dd: u64 = lr.classes.values().map(|c| c.dropped_deadline).sum();
+        let dc: u64 = lr.classes.values().map(|c| c.dropped_churn).sum();
+        let dispatched: u64 = lr.classes.values().map(|c| c.dispatches).sum();
+        assert_eq!(folds, rr.completed as u64);
+        assert_eq!(dd, rr.dropped_deadline as u64);
+        assert_eq!(dc, rr.dropped_churn as u64);
+        // Byte accounting is exact: every dispatch downloads the model,
+        // every fold uploads it.
+        assert_eq!(lr.bytes_down, dispatched * model_bytes);
+        assert_eq!(lr.bytes_up, folds * model_bytes);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn event_stream_structure_is_well_formed() {
+    let dir = tmp_dir("structure");
+    run_population(&sync_cfg().obs(dir.to_str().unwrap()), None).unwrap();
+    let events = read_events(&dir).unwrap();
+    // A sync trace run is RoundStart/RoundEnd bracketed, stamped with
+    // monotone non-decreasing virtual time, and closes every round.
+    assert!(matches!(events.first(), Some(Event::RoundStart { .. })));
+    assert!(matches!(events.last(), Some(Event::RoundEnd { .. })));
+    let starts = events
+        .iter()
+        .filter(|e| matches!(e, Event::RoundStart { .. }))
+        .count();
+    let ends = events
+        .iter()
+        .filter(|e| matches!(e, Event::RoundEnd { .. }))
+        .count();
+    assert_eq!(starts, ends);
+    assert_eq!(ends, 6, "one RoundEnd per configured round");
+    let mut last = f64::NEG_INFINITY;
+    for ev in &events {
+        assert!(
+            ev.t_s() >= last,
+            "virtual timestamps must be non-decreasing ({} < {last})",
+            ev.t_s()
+        );
+        last = ev.t_s();
+    }
+    // The replayed registry agrees with direct event counts.
+    let reg = replay_registry(&events);
+    let folds = events
+        .iter()
+        .filter(|e| matches!(e, Event::Fold { .. }))
+        .count() as u64;
+    assert_eq!(reg.counter("sched_folds_total").get(), folds);
+    assert_eq!(reg.counter("sched_rounds_total").get(), 6);
+    std::fs::remove_dir_all(&dir).ok();
+}
