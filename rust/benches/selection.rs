@@ -29,6 +29,7 @@ use flowrs::sched::engine::{Engine, Population, SurrogateTrainer};
 use flowrs::sched::policy::{Candidate, SelectionContext};
 use flowrs::sched::ChurnSpec;
 use flowrs::sim::cost::CostModel;
+use flowrs::strategy::aggregate::rust_weighted_average_with_workers;
 use flowrs::util::bench::{results_to_json, Bench};
 
 fn candidates(pop: &Population) -> Vec<Candidate> {
@@ -116,6 +117,54 @@ fn main() {
         let mut churny = Engine::new(&churny_cfg, SurrogateTrainer::default()).unwrap();
         b.bench(&format!("engine_async_version_churn_n{n}"), || {
             churny.run_version().unwrap()
+        });
+    }
+
+    // The parallel weighted-average fold: one model-sized aggregate
+    // (cifar_cnn payload, 136,874 f32 params × 32 cohort results) at
+    // 1 / 4 / 8 fold workers. The chunk grid is a function of the
+    // parameter count alone (FOLD_CHUNK), so every worker count
+    // produces identical bits — these cases measure pure speedup.
+    {
+        let params = 547_496 / 4;
+        let owned: Vec<Vec<f32>> = (0..32)
+            .map(|i| (0..params).map(|j| ((i * 31 + j) % 997) as f32 * 1e-3).collect())
+            .collect();
+        let inputs: Vec<(&[f32], f64)> =
+            owned.iter().map(|v| (v.as_slice(), 64.0)).collect();
+        let total: f64 = inputs.iter().map(|&(_, w)| w).sum();
+        for &p in &[1usize, 4, 8] {
+            b.bench(&format!("aggregate_parallel_p{p}"), || {
+                rust_weighted_average_with_workers(&inputs, total, p)
+            });
+        }
+    }
+
+    // Sharded barrier rounds: the engine_round workload with the engine
+    // sharded over 4 workers (synthesis, availability scan, candidate
+    // build, policy partition all parallel; output bit-identical to
+    // --workers 1). 10M devices is bench-mode only — in CI's --test
+    // smoke the population build alone would dominate the job.
+    let shard_pops: &[usize] = if test_mode {
+        &[100_000]
+    } else {
+        &[100_000, 1_000_000, 10_000_000]
+    };
+    for &n in shard_pops {
+        let cfg = ScheduleConfig::default()
+            .named("bench")
+            .population(n)
+            .cohort(100)
+            .epochs(10)
+            .deadline(Some(250.0))
+            .seed(42)
+            .workers(4)
+            .policy(PolicyConfig::DeadlineAware);
+        let mut engine = Engine::new(&cfg, SurrogateTrainer::default()).unwrap();
+        let mut round = 0u64;
+        b.bench(&format!("engine_sharded_n{n}"), || {
+            round += 1;
+            engine.run_round(round).unwrap()
         });
     }
 
@@ -242,7 +291,14 @@ fn main() {
                     churn cycles of engine_round_n*. obs_overhead_null_sink_n100000 \
                     must stay within noise of engine_async_version_n100000 (the \
                     NullSink default is one no-op virtual call per event); \
-                    obs_overhead_jsonl_n100000 bounds --obs-out serialization cost.";
+                    obs_overhead_jsonl_n100000 bounds --obs-out serialization cost. \
+                    engine_sharded_n* repeats the barrier round with the engine \
+                    sharded over 4 workers (compare against engine_round_n* at the \
+                    same n for the parallel speedup; outputs are bit-identical by \
+                    construction, so any delta is pure wall clock — the 10M case \
+                    only runs outside --test mode). aggregate_parallel_p{1,4,8} \
+                    times one model-sized weighted-average fold at fixed chunk \
+                    grid across fold-worker counts.";
         std::fs::write(&path, results_to_json("selection", note, &results, test_mode))
             .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
         println!("wrote bench baselines to {path}");

@@ -648,6 +648,14 @@ pub struct ScheduleConfig {
     /// instrumentation output. Never affects the trajectory (excluded
     /// from [`ScheduleConfig::fingerprint`]).
     pub obs_out: Option<String>,
+    /// Worker threads for the sharded engine paths (population
+    /// synthesis, the per-round availability scan and candidate build,
+    /// policy partition passes, and the weighted-average fold). Purely
+    /// an execution knob: every sharded path merges in shard order, so
+    /// any value produces byte-identical CSVs, `events.jsonl` and
+    /// checkpoints to `--workers 1` — and is therefore excluded from
+    /// [`ScheduleConfig::fingerprint`].
+    pub workers: usize,
 }
 
 impl Default for ScheduleConfig {
@@ -677,6 +685,7 @@ impl Default for ScheduleConfig {
             checkpoint_every_rounds: 0,
             resume_from: None,
             obs_out: None,
+            workers: 1,
         }
     }
 }
@@ -770,15 +779,29 @@ impl ScheduleConfig {
         self.obs_out = Some(dir.into());
         self
     }
+    /// Worker threads for the sharded engine paths (≥ 1).
+    pub fn workers(mut self, n: usize) -> Self {
+        self.workers = n;
+        self
+    }
 
     /// Stable fingerprint of every knob the engine's *trajectory*
     /// depends on. Excluded: `name`, `rounds`, `target_accuracy` (a
     /// resumed run may legitimately extend or re-target a finished
-    /// one), the checkpoint knobs themselves, and `obs_out`
-    /// (observability must never affect trajectory identity — a resume
-    /// may add or drop instrumentation freely). Resume refuses a
-    /// checkpoint whose fingerprint does not match — a silent config
-    /// drift would otherwise break the bit-identical-replay guarantee.
+    /// one), the checkpoint knobs themselves, `obs_out` (observability
+    /// must never affect trajectory identity — a resume may add or drop
+    /// instrumentation freely), and `workers` (run identity is
+    /// worker-count-invariant: every sharded path merges in shard
+    /// order, so a `--workers 1` checkpoint resumes under `--workers 8`
+    /// and vice versa). Resume refuses a checkpoint whose fingerprint
+    /// does not match — a silent config drift would otherwise break the
+    /// bit-identical-replay guarantee.
+    ///
+    /// The `schedule-v2:` prefix marks the sharded-engine era: the
+    /// normalized Debug shape gained the `workers` field, so v1 strings
+    /// can never equal v2 strings and old checkpoints fail resume with
+    /// an explicit mismatch instead of a silent semantic drift (the
+    /// FORMAT.md fingerprint policy).
     pub fn fingerprint(&self) -> String {
         let mut c = self.clone();
         c.name = String::new();
@@ -788,7 +811,8 @@ impl ScheduleConfig {
         c.checkpoint_every_rounds = 0;
         c.resume_from = None;
         c.obs_out = None;
-        format!("schedule-v1:{c:?}")
+        c.workers = 1;
+        format!("schedule-v2:{c:?}")
     }
 
     /// Async in-flight bound: explicit `max_concurrency`, or the cohort
@@ -881,6 +905,9 @@ impl ScheduleConfig {
             return Err(Error::Config(
                 "staleness_alpha must be finite and >= 0".into(),
             ));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config("workers must be >= 1".into()));
         }
         self.policy.validate()
     }
@@ -977,6 +1004,9 @@ impl ScheduleConfig {
         }
         if let Some(v) = doc.opt("obs_out") {
             cfg.obs_out = Some(v.as_str()?.to_string());
+        }
+        if let Some(v) = doc.opt("workers") {
+            cfg.workers = v.as_usize()?;
         }
         cfg.validate()?;
         Ok(cfg)
@@ -1118,7 +1148,8 @@ mod tests {
                 "churn": {"mean_on_s": 600, "mean_off_s": 300},
                 "seed": 99,
                 "t_step_ref_s": 1.48,
-                "target_accuracy": 0.5
+                "target_accuracy": 0.5,
+                "workers": 4
             }"#,
         )
         .unwrap();
@@ -1139,6 +1170,8 @@ mod tests {
             })
         );
         assert_eq!(cfg.target_accuracy, Some(0.5));
+        assert_eq!(cfg.workers, 4);
+        assert!(ScheduleConfig::from_json(r#"{"workers": 0}"#).is_err());
     }
 
     #[test]
@@ -1235,6 +1268,10 @@ mod tests {
         );
         // observability never changes trajectory identity
         assert_eq!(base.fingerprint(), base.clone().obs("obs-dir").fingerprint());
+        // worker count is an execution knob, not an identity knob
+        assert_eq!(base.fingerprint(), base.clone().workers(8).fingerprint());
+        // the sharded-engine era is a new fingerprint namespace
+        assert!(base.fingerprint().starts_with("schedule-v2:"));
         // everything trajectory-relevant does
         assert_ne!(base.fingerprint(), base.clone().seed(1).fingerprint());
         assert_ne!(base.fingerprint(), base.clone().cohort(7).fingerprint());

@@ -161,6 +161,8 @@ fn print_usage() {
                       (kill/resume replays the uninterrupted trace bit-identically)\n\
                       --obs-out <dir>  (write events.jsonl, metrics.json, costs.csv;\n\
                       deterministic, virtual-time-stamped; spec in rust/src/obs/METRICS.md)\n\
+                      --workers N  (shard synthesis/scans/folds over N threads;\n\
+                      output is byte-identical to --workers 1 for every N)\n\
                       --format table|csv|json  (comparison-table output format)\n\
                       (real PJRT cohort numerics with artifacts, surrogate otherwise)\n\
            server     start a Flower TCP server\n\
@@ -418,6 +420,9 @@ fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
     }
     if let Some(v) = args.get("obs-out") {
         cfg.obs_out = Some(v.into());
+    }
+    if let Some(v) = args.get_parsed("workers")? {
+        cfg.workers = v;
     }
     if let Some(v) = args.get("policy") {
         cfg.policy = PolicyConfig::parse(v)?;

@@ -45,7 +45,7 @@ pub use format::{
 pub use state::{
     decode_population_rounds, decode_round_records, load_engine_checkpoint,
     load_server_checkpoint, resolve_checkpoint, ClientStatRecord, DeviceState, EngineCheckpoint,
-    InFlightDispatch, ParamTensor, ServerCheckpoint,
+    InFlightDispatch, ParamTensor, ServerCheckpoint, ShardSeeds,
 };
 
 pub(crate) use format::{Dec, Enc};

@@ -41,6 +41,7 @@ const SEC_TRAINER: &str = "TRNR";
 const SEC_IN_FLIGHT: &str = "INFL";
 const SEC_INDEX: &str = "INDX";
 const SEC_ENGINE_ROUNDS: &str = "ERND";
+const SEC_SHARDS: &str = "SHRD";
 const SEC_PARAMS: &str = "PARM";
 const SEC_SERVER_META: &str = "SMET";
 const SEC_SERVER_ROUNDS: &str = "SRND";
@@ -83,6 +84,27 @@ pub struct InFlightDispatch {
     pub outcome: u8,
 }
 
+/// The parallel-synthesis audit record (`SHRD` section, optional —
+/// absent in checkpoints written before sharded execution existed).
+///
+/// Population synthesis shards across `workers` threads by
+/// fast-forwarding the *one* canonical RNG stream to each shard's start
+/// device; these are those stream positions. On resume the engine
+/// recomputes them from the config for the recorded worker count and
+/// refuses to run on a mismatch — catching any drift in the
+/// shard-derivation contract (the population a resumed run synthesizes
+/// must be the population the checkpointed run scheduled). The worker
+/// count itself is an execution knob: a checkpoint written under
+/// `--workers 1` resumes under `--workers 8` and vice versa.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardSeeds {
+    /// Worker count the writing run used (recorded for the audit
+    /// recomputation; not an identity constraint).
+    pub workers: u64,
+    /// Canonical synthesis-stream state at each shard's first device.
+    pub starts: Vec<RngState>,
+}
+
 /// A complete [`crate::sched::Engine`] snapshot at a flush boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineCheckpoint {
@@ -116,6 +138,9 @@ pub struct EngineCheckpoint {
     /// these, so a spliced trace is byte-identical to an uninterrupted
     /// run's.
     pub rounds: Vec<PopulationRound>,
+    /// Parallel-synthesis audit record (`None` for pre-`SHRD`
+    /// checkpoints, which resume fine — the audit is then skipped).
+    pub shards: Option<ShardSeeds>,
 }
 
 impl EngineCheckpoint {
@@ -175,6 +200,19 @@ impl EngineCheckpoint {
         }
 
         w.section(SEC_ENGINE_ROUNDS, encode_population_rounds(&self.rounds));
+
+        if let Some(sh) = &self.shards {
+            let mut e = Enc::new();
+            e.u64(sh.workers);
+            e.u64(sh.starts.len() as u64);
+            for s in &sh.starts {
+                for word in s.s {
+                    e.u64(word);
+                }
+                e.opt_f64(s.spare_normal);
+            }
+            w.section(SEC_SHARDS, e.into_bytes());
+        }
         w
     }
 
@@ -243,6 +281,24 @@ impl EngineCheckpoint {
             None => None,
         };
         let rounds = decode_population_rounds(r.section(SEC_ENGINE_ROUNDS)?)?;
+        let shards = match r.opt_section(SEC_SHARDS) {
+            Some(buf) => {
+                let mut d = Dec::new(buf);
+                let workers = d.u64()?;
+                let n = d.count("shard RNG start")?;
+                let mut starts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let mut s = [0u64; 4];
+                    for word in &mut s {
+                        *word = d.u64()?;
+                    }
+                    starts.push(RngState { s, spare_normal: d.opt_f64()? });
+                }
+                d.done()?;
+                Some(ShardSeeds { workers, starts })
+            }
+            None => None,
+        };
         Ok(EngineCheckpoint {
             fingerprint,
             version,
@@ -256,6 +312,7 @@ impl EngineCheckpoint {
             in_flight,
             index,
             rounds,
+            shards,
         })
     }
 }
@@ -742,6 +799,13 @@ mod tests {
                 in_flight: 1,
                 ..Default::default()
             }],
+            shards: Some(ShardSeeds {
+                workers: 4,
+                starts: vec![
+                    RngState { s: [11, 12, 13, 14], spare_normal: None },
+                    RngState { s: [21, 22, 23, 24], spare_normal: Some(0.5) },
+                ],
+            }),
         }
     }
 
@@ -762,6 +826,21 @@ mod tests {
         // f64 fields round-trip bit-exactly
         assert_eq!(back.clock_s.to_bits(), ck.clock_s.to_bits());
         assert_eq!(back.rounds[0].accuracy.to_bits(), ck.rounds[0].accuracy.to_bits());
+        assert_eq!(back.shards, ck.shards);
+        assert_eq!(back, ck);
+    }
+
+    /// The `SHRD` section is optional: a checkpoint written without it
+    /// (any pre-sharding file) still decodes, with `shards: None` — the
+    /// forward-compatible-section policy from FORMAT.md.
+    #[test]
+    fn engine_checkpoint_without_shards_section_decodes() {
+        let mut ck = engine_ckpt();
+        ck.shards = None;
+        let bytes = ck.to_writer().to_bytes();
+        let back =
+            EngineCheckpoint::from_reader(&CheckpointReader::from_bytes(&bytes).unwrap()).unwrap();
+        assert_eq!(back.shards, None);
         assert_eq!(back, ck);
     }
 

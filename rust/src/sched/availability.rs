@@ -32,7 +32,86 @@
 #![deny(missing_docs)]
 
 use crate::error::{Error, Result};
+use crate::util::par;
 use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Sharded availability scans
+// ---------------------------------------------------------------------------
+//
+// The barrier engine's per-round O(population) passes — "who is online
+// now", "when does the next device come online", "build a candidate per
+// online device" — shard across `util::par` worker threads. Each shard
+// owns a contiguous id-ordered slice, and the merge concatenates shard
+// results in shard order, so the output is exactly the sequential scan's:
+// parallelism here is invisible to traces, goldens and checkpoints.
+
+/// Indices (as `u32`) of the items satisfying `pred`, in ascending index
+/// order — the sharded form of the sequential filter-scan. Per-shard
+/// slices are contiguous and merged in shard order, so the result is
+/// identical for every `workers` value.
+pub fn shard_scan_indices<T, F>(items: &[T], workers: usize, pred: F) -> Vec<u32>
+where
+    T: Sync,
+    F: Fn(&T) -> bool + Sync,
+{
+    let ranges = par::shard_ranges(items.len(), workers.min(items.len().max(1)));
+    let shards = par::run_sharded(ranges.len(), |s| {
+        let (lo, hi) = ranges[s];
+        let mut found = Vec::new();
+        for (off, item) in items[lo..hi].iter().enumerate() {
+            if pred(item) {
+                found.push((lo + off) as u32);
+            }
+        }
+        found
+    });
+    let mut out = Vec::with_capacity(shards.iter().map(Vec::len).sum());
+    for shard in shards {
+        out.extend(shard);
+    }
+    out
+}
+
+/// Element-wise map merged in shard order (== input order); the sharded
+/// form of `items.iter().map(f).collect()` for a pure `f`.
+pub fn shard_map<T, U, F>(items: &[T], workers: usize, f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let ranges = par::shard_ranges(items.len(), workers.min(items.len().max(1)));
+    let shards = par::run_sharded(ranges.len(), |s| {
+        let (lo, hi) = ranges[s];
+        items[lo..hi].iter().map(&f).collect::<Vec<U>>()
+    });
+    let mut out = Vec::with_capacity(items.len());
+    for shard in shards {
+        out.extend(shard);
+    }
+    out
+}
+
+/// Minimum of `f(item)` over all items (infinite when empty). The min of
+/// per-shard minima is *exactly* the global minimum — `f64::min` over
+/// values that must not be NaN — so the fold order is immaterial and the
+/// result is bit-identical for every `workers` value.
+pub fn shard_min_by<T, F>(items: &[T], workers: usize, f: F) -> f64
+where
+    T: Sync,
+    F: Fn(&T) -> f64 + Sync,
+{
+    let ranges = par::shard_ranges(items.len(), workers.min(items.len().max(1)));
+    let mins = par::run_sharded(ranges.len(), |s| {
+        let (lo, hi) = ranges[s];
+        items[lo..hi]
+            .iter()
+            .map(&f)
+            .fold(f64::INFINITY, f64::min)
+    });
+    mins.into_iter().fold(f64::INFINITY, f64::min)
+}
 
 /// Churn parameters: mean online / offline dwell times in seconds.
 #[derive(Debug, Clone, PartialEq)]
@@ -906,6 +985,38 @@ mod tests {
 
     fn model() -> ChurnModel {
         ChurnModel::new(ChurnSpec { mean_on_s: 600.0, mean_off_s: 300.0 }, 42)
+    }
+
+    #[test]
+    fn sharded_scans_match_sequential_for_every_worker_count() {
+        let m = model();
+        let cycles: Vec<Cycle> = (0..1_001).map(|d| m.cycle(d)).collect();
+        let t = 5_000.0;
+        let seq_idx: Vec<u32> = cycles
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.is_on(t))
+            .map(|(i, _)| i as u32)
+            .collect();
+        let seq_map: Vec<f64> = cycles.iter().map(|c| c.next_on_delay_s(t)).collect();
+        let seq_min = seq_map.iter().copied().fold(f64::INFINITY, f64::min);
+        for workers in [1usize, 2, 3, 8, 64, 5_000] {
+            let idx = shard_scan_indices(&cycles, workers, |c| c.is_on(t));
+            assert_eq!(idx, seq_idx, "scan diverged at workers={workers}");
+            let mapped = shard_map(&cycles, workers, |c| c.next_on_delay_s(t));
+            assert_eq!(mapped, seq_map, "map diverged at workers={workers}");
+            let min = shard_min_by(&cycles, workers, |c| c.next_on_delay_s(t));
+            assert_eq!(
+                min.to_bits(),
+                seq_min.to_bits(),
+                "min diverged at workers={workers}"
+            );
+        }
+        // empty-slice edges
+        let empty: Vec<Cycle> = Vec::new();
+        assert!(shard_scan_indices(&empty, 4, |_| true).is_empty());
+        assert!(shard_map(&empty, 4, |_| 0.0).is_empty());
+        assert_eq!(shard_min_by(&empty, 4, |_| 0.0), f64::INFINITY);
     }
 
     #[test]

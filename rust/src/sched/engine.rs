@@ -41,10 +41,12 @@ use crate::config::ScheduleConfig;
 use crate::device::{profiles, DeviceProfile};
 use crate::error::{Error, Result};
 use crate::obs::{Event, Fate, NullSink, ObsSink};
-use crate::persist::{CheckpointStore, DeviceState, EngineCheckpoint, InFlightDispatch};
+use crate::persist::{CheckpointStore, DeviceState, EngineCheckpoint, InFlightDispatch, ShardSeeds};
 use crate::telemetry::log;
-use crate::util::rng::Rng;
+use crate::util::par;
+use crate::util::rng::{Rng, RngState};
 
+use super::availability::{shard_map, shard_min_by, shard_scan_indices};
 use super::availability::{AvailabilityIndex, DeviceSchedule};
 use super::policy::{Candidate, SelectionContext, SelectionPolicy};
 use super::trace::AvailabilitySource;
@@ -116,30 +118,34 @@ impl Population {
             return Err(Error::Config("device mix weights must sum > 0".into()));
         }
         let source = AvailabilitySource::from_config(cfg)?;
-        let mut rng = Rng::seed_from(cfg.seed ^ 0x0F0B);
+        let rng = Rng::seed_from(cfg.seed ^ 0x0F0B);
+        // Parallel synthesis is a pure execution detail: shard-start RNG
+        // states are *positions in the one canonical stream* (recorded by
+        // fast-forwarding it), never independently seeded — so the
+        // population is bit-identical to the sequential build for every
+        // worker count, and a checkpoint written under `--workers 1` can
+        // resume under `--workers 8` (and vice versa).
+        let workers = par::workers().min(cfg.population.max(1));
+        let ranges = par::shard_ranges(cfg.population, workers);
+        let starts = synthesis_shard_starts(&rng, &ranges);
+        let shards = par::run_sharded(ranges.len(), |s| {
+            let (lo, hi) = ranges[s];
+            let mut rng = Rng::restore(&starts[s]);
+            let built = synthesize_range(&mix, total_w, &source, &mut rng, lo, hi);
+            (built, rng.state())
+        });
+        // Continuity proof (debug builds): each shard consumed exactly its
+        // slice of the canonical stream, so its end state is the next
+        // shard's recorded start.
+        for (s, (_, end)) in shards.iter().enumerate().take(ranges.len() - 1) {
+            debug_assert_eq!(
+                end.s, starts[s + 1].s,
+                "synthesis shard {s} drifted off the canonical RNG stream"
+            );
+        }
         let mut devices = Vec::with_capacity(cfg.population);
-        for i in 0..cfg.population {
-            let mut r = rng.f64() * total_w;
-            let mut profile = mix[mix.len() - 1].0;
-            for &(p, w) in &mix {
-                if r < w {
-                    profile = p;
-                    break;
-                }
-                r -= w;
-            }
-            if let Some(class) = source.class(i as u64) {
-                profile = class;
-            }
-            devices.push(VirtualDevice {
-                device: profile,
-                num_examples: 64 + rng.below(448) as u64,
-                schedule: source.schedule(i as u64),
-                skew: rng.f64(),
-                last_loss: None,
-                last_selected_round: None,
-                times_selected: 0,
-            });
+        for (shard, _) in shards {
+            devices.extend(shard);
         }
         Ok(Population { devices })
     }
@@ -150,6 +156,82 @@ impl Population {
 
     pub fn is_empty(&self) -> bool {
         self.devices.is_empty()
+    }
+}
+
+/// Record the canonical synthesis stream's state at each shard start by
+/// replaying the exact per-device draw pattern of
+/// [`Population::synthesize`] — profile-mix `f64`, example-count
+/// `below(448)`, skew `f64`. The last shard's range is not replayed
+/// (nobody starts after it), so the single-shard case does no extra work.
+fn synthesis_shard_starts(rng: &Rng, ranges: &[(usize, usize)]) -> Vec<RngState> {
+    let mut rng = Rng::restore(&rng.state());
+    let mut starts = Vec::with_capacity(ranges.len());
+    for (k, &(lo, hi)) in ranges.iter().enumerate() {
+        starts.push(rng.state());
+        if k + 1 == ranges.len() {
+            break;
+        }
+        for _ in lo..hi {
+            rng.f64();
+            rng.below(448);
+            rng.f64();
+        }
+    }
+    starts
+}
+
+/// Synthesize devices `lo..hi` from an RNG positioned at device `lo` of
+/// the canonical stream — the body of the original sequential loop,
+/// range-parameterized so shards can run it concurrently.
+fn synthesize_range(
+    mix: &[(&'static DeviceProfile, f64)],
+    total_w: f64,
+    source: &AvailabilitySource,
+    rng: &mut Rng,
+    lo: usize,
+    hi: usize,
+) -> Vec<VirtualDevice> {
+    let mut devices = Vec::with_capacity(hi - lo);
+    for i in lo..hi {
+        let mut r = rng.f64() * total_w;
+        let mut profile = mix[mix.len() - 1].0;
+        for &(p, w) in mix {
+            if r < w {
+                profile = p;
+                break;
+            }
+            r -= w;
+        }
+        if let Some(class) = source.class(i as u64) {
+            profile = class;
+        }
+        devices.push(VirtualDevice {
+            device: profile,
+            num_examples: 64 + rng.below(448) as u64,
+            schedule: source.schedule(i as u64),
+            skew: rng.f64(),
+            last_loss: None,
+            last_selected_round: None,
+            times_selected: 0,
+        });
+    }
+    devices
+}
+
+/// The parallel-synthesis audit record persisted in checkpoints
+/// ([`ShardSeeds`]): the canonical stream's shard-start states for
+/// `workers` shards of `cfg`'s population. A resume recomputes this for
+/// the checkpoint's recorded worker count and refuses to run if the
+/// states diverge — pinning the "shard streams are fast-forward
+/// positions, not independent seeds" contract across versions.
+pub(crate) fn synthesis_shard_seeds(cfg: &ScheduleConfig, workers: usize) -> ShardSeeds {
+    let workers = workers.max(1).min(cfg.population.max(1));
+    let ranges = par::shard_ranges(cfg.population, workers);
+    let rng = Rng::seed_from(cfg.seed ^ 0x0F0B);
+    ShardSeeds {
+        workers: workers as u64,
+        starts: synthesis_shard_starts(&rng, &ranges),
     }
 }
 
@@ -571,6 +653,13 @@ pub struct Engine<T: CohortTrainer> {
 impl<T: CohortTrainer> Engine<T> {
     pub fn new(cfg: &ScheduleConfig, trainer: T) -> Result<Self> {
         cfg.validate()?;
+        // Worker count is an execution knob, not an identity knob: it is
+        // excluded from the fingerprint, and every sharded path merges in
+        // shard order, so any value reproduces the --workers 1 bytes.
+        par::set_workers(cfg.workers);
+        crate::obs::registry()
+            .gauge("sched_workers")
+            .set(cfg.workers.max(1) as f64);
         let policy = cfg.policy.build(cfg.seed ^ 0x5E1);
         let pop = Population::synthesize(cfg)?;
         let mode = match cfg.async_buffer {
@@ -771,21 +860,21 @@ impl<T: CohortTrainer> Engine<T> {
         let round = self.version + 1;
         let entry = self.clock_s;
 
-        // Availability scan. Under extreme churn an instant can have
-        // zero devices online; the server would simply wait, so the
-        // clock fast-forwards to the next arrival instead of failing
-        // (the dead air still counts toward this round's time).
+        // Availability scan, sharded over `--workers` threads (per-shard
+        // index slices merged in shard order == ascending id order, so
+        // the scan is byte-identical to the sequential one). Under
+        // extreme churn an instant can have zero devices online; the
+        // server would simply wait, so the clock fast-forwards to the
+        // next arrival instead of failing (the dead air still counts
+        // toward this round's time).
+        let workers = par::workers();
         let mut now = entry;
-        let mut avail: Vec<u32> = Vec::new();
         let mut rescans = 0u32;
-        loop {
-            for (i, d) in self.pop.devices.iter().enumerate() {
-                if d.schedule.is_on(now) {
-                    avail.push(i as u32);
-                }
-            }
+        let avail: Vec<u32> = loop {
+            let avail =
+                shard_scan_indices(&self.pop.devices, workers, |d| d.schedule.is_on(now));
             if !avail.is_empty() {
-                break;
+                break avail;
             }
             rescans += 1;
             if rescans > 1_000 {
@@ -793,12 +882,11 @@ impl<T: CohortTrainer> Engine<T> {
                     "round {round}: no devices ever available (t={now:.0}s)"
                 )));
             }
-            let mut dt = f64::INFINITY;
-            for d in &self.pop.devices {
-                // every device is offline here, so the delay is positive
-                // (infinite for a trace that never comes back)
-                dt = dt.min(d.schedule.next_on_delay_s(now));
-            }
+            // every device is offline here, so each delay is positive
+            // (infinite for a trace that never comes back); the min of
+            // per-shard minima is exactly the global min
+            let dt =
+                shard_min_by(&self.pop.devices, workers, |d| d.schedule.next_on_delay_s(now));
             if !dt.is_finite() {
                 return Err(Error::Protocol(format!(
                     "round {round}: no devices ever available (t={now:.0}s)"
@@ -806,13 +894,12 @@ impl<T: CohortTrainer> Engine<T> {
             }
             // epsilon guards float-boundary stalls (pos == period)
             now += dt.max(1e-6);
-        }
+        };
 
-        // Cohort selection over available devices only.
-        let candidates: Vec<Candidate> = avail
-            .iter()
-            .map(|&i| candidate_of(&self.pop, i as usize, round))
-            .collect();
+        // Cohort selection over available devices only (candidate
+        // construction is pure per-device, so it shards the same way).
+        let candidates: Vec<Candidate> =
+            shard_map(&avail, workers, |&i| candidate_of(&self.pop, i as usize, round));
         let ctx = SelectionContext {
             round,
             cost: &self.cfg.cost,
@@ -1336,6 +1423,7 @@ impl<T: CohortTrainer> Engine<T> {
             in_flight,
             index: self.index.as_ref().map(|ix| ix.export_state()),
             rounds: rounds.to_vec(),
+            shards: Some(synthesis_shard_seeds(&self.cfg, self.cfg.workers)),
         })
     }
 
@@ -1361,6 +1449,22 @@ impl<T: CohortTrainer> Engine<T> {
                 ckpt.devices.len(),
                 e.pop.devices.len()
             )));
+        }
+        // Parallel-synthesis audit (absent in pre-SHRD checkpoints):
+        // recompute the shard-start states for the checkpoint's recorded
+        // worker count and require bit-equality — shard streams must be
+        // fast-forward positions in the canonical stream, never
+        // independent seeds, or resuming under a different --workers
+        // would silently synthesize a different population.
+        if let Some(sh) = &ckpt.shards {
+            let expect = synthesis_shard_seeds(cfg, sh.workers as usize);
+            if expect.starts != sh.starts {
+                return Err(Error::Persist(format!(
+                    "checkpoint shard RNG states (workers={}) do not match this \
+                     config's synthesis stream — population would diverge on resume",
+                    sh.workers
+                )));
+            }
         }
         for (d, s) in e.pop.devices.iter_mut().zip(&ckpt.devices) {
             d.last_loss = s.last_loss;
@@ -1527,6 +1631,62 @@ mod tests {
         let a = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
         let b = Engine::new(&c, SurrogateTrainer::default()).unwrap().run().unwrap();
         assert_eq!(a.to_csv(), b.to_csv());
+    }
+
+    #[test]
+    fn synthesized_population_identical_for_every_worker_count() {
+        // ragged population so shard boundaries never align with worker
+        // counts; churn so schedules carry per-device randomness too
+        let c = cfg()
+            .population(1_003)
+            .churn(Some(ChurnSpec { mean_on_s: 300.0, mean_off_s: 150.0 }));
+        let saved = par::workers();
+        par::set_workers(1);
+        let base = Population::synthesize(&c).unwrap();
+        for w in [2usize, 3, 8, 64] {
+            par::set_workers(w);
+            let p = Population::synthesize(&c).unwrap();
+            assert_eq!(p.len(), base.len());
+            for (i, (a, b)) in base.devices.iter().zip(&p.devices).enumerate() {
+                assert!(std::ptr::eq(a.device, b.device), "device {i}: profile differs at workers={w}");
+                assert_eq!(a.num_examples, b.num_examples, "device {i} workers={w}");
+                assert_eq!(a.skew.to_bits(), b.skew.to_bits(), "device {i} workers={w}");
+                assert_eq!(
+                    format!("{:?}", a.schedule),
+                    format!("{:?}", b.schedule),
+                    "device {i} workers={w}"
+                );
+            }
+        }
+        par::set_workers(saved);
+    }
+
+    #[test]
+    fn sharded_engine_matches_single_worker_byte_for_byte() {
+        // sync with churn + deadline (drops, availability re-scans) and
+        // async streaming — the full event surface, per worker count
+        let sync = cfg()
+            .population(600)
+            .cohort(24)
+            .rounds(4)
+            .deadline(Some(60.0))
+            .churn(Some(ChurnSpec { mean_on_s: 400.0, mean_off_s: 200.0 }));
+        let streaming = cfg().population(600).cohort(24).buffered(6).rounds(6);
+        for base_cfg in [sync, streaming] {
+            let baseline = Engine::new(&base_cfg.clone().workers(1), SurrogateTrainer::default())
+                .unwrap()
+                .run()
+                .unwrap()
+                .to_csv();
+            for w in [2usize, 4, 8] {
+                let got = Engine::new(&base_cfg.clone().workers(w), SurrogateTrainer::default())
+                    .unwrap()
+                    .run()
+                    .unwrap()
+                    .to_csv();
+                assert_eq!(got, baseline, "{} diverged at workers={w}", base_cfg.name);
+            }
+        }
     }
 
     #[test]

@@ -18,7 +18,12 @@
 //!   often than its peers.
 //!
 //! All policies are deterministic per seed: same seed + same candidates
-//! → same cohort, which the property tests pin down.
+//! → same cohort, which the property tests pin down. The pure
+//! per-candidate classification pass each policy runs before touching
+//! its RNG (feasible/late, scored/fresh, eligible/capped) is sharded
+//! across [`crate::util::par::workers`] threads via
+//! [`partition_candidates`]; shard outputs merge in shard order, so the
+//! cohort is identical for every worker count.
 //!
 //! Policies that can sample straight off the incremental
 //! [`AvailabilityIndex`] additionally implement
@@ -29,7 +34,44 @@
 use crate::device::DeviceProfile;
 use crate::sched::availability::AvailabilityIndex;
 use crate::sim::cost::CostModel;
+use crate::util::par;
 use crate::util::rng::{Rng, RngState};
+
+/// Shard a pure per-candidate classification across
+/// [`par::workers`] threads. `classify` sorts candidate `i` into the
+/// first bucket (`Ok`) or the second (`Err`); each shard walks a
+/// contiguous index range in order and the per-shard buckets are
+/// concatenated in shard order, so both output vectors are identical to
+/// the sequential loop for every worker count. `classify` must be pure
+/// — every RNG draw a policy makes happens strictly after this pass.
+fn partition_candidates<A, B, F>(candidates: &[Candidate], classify: F) -> (Vec<A>, Vec<B>)
+where
+    A: Send,
+    B: Send,
+    F: Fn(usize, &Candidate) -> Result<A, B> + Sync,
+{
+    let workers = par::workers().min(candidates.len().max(1));
+    let ranges = par::shard_ranges(candidates.len(), workers);
+    let shards = par::run_sharded(ranges.len(), |s| {
+        let (lo, hi) = ranges[s];
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for (off, c) in candidates[lo..hi].iter().enumerate() {
+            match classify(lo + off, c) {
+                Ok(x) => a.push(x),
+                Err(y) => b.push(y),
+            }
+        }
+        (a, b)
+    });
+    let mut a = Vec::new();
+    let mut b = Vec::new();
+    for (sa, sb) in shards {
+        a.extend(sa);
+        b.extend(sb);
+    }
+    (a, b)
+}
 
 /// Everything a policy may consult about the round being scheduled.
 #[derive(Debug, Clone, Copy)]
@@ -195,15 +237,14 @@ impl SelectionPolicy for DeadlineAware {
 
     fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
         let k = ctx.target_cohort.min(candidates.len());
-        let mut feasible: Vec<usize> = Vec::new();
-        let mut late: Vec<(f64, usize)> = Vec::new();
-        for (i, c) in candidates.iter().enumerate() {
-            let t = ctx.modeled_round_time_s(c.device);
-            match ctx.deadline_s {
-                Some(tau) if t > tau => late.push((t, i)),
-                _ => feasible.push(i),
-            }
-        }
+        let (mut feasible, mut late): (Vec<usize>, Vec<(f64, usize)>) =
+            partition_candidates(candidates, |i, c| {
+                let t = ctx.modeled_round_time_s(c.device);
+                match ctx.deadline_s {
+                    Some(tau) if t > tau => Err((t, i)),
+                    _ => Ok(i),
+                }
+            });
         self.rng.shuffle(&mut feasible);
         feasible.truncate(k);
         if feasible.len() < k {
@@ -289,14 +330,12 @@ impl SelectionPolicy for UtilityBased {
 
     fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
         let k = ctx.target_cohort.min(candidates.len());
-        let mut scored: Vec<(f64, usize)> = Vec::new();
-        let mut fresh: Vec<usize> = Vec::new();
-        for (i, c) in candidates.iter().enumerate() {
-            match c.last_loss {
-                Some(loss) => scored.push((self.score(ctx, c, loss), i)),
-                None => fresh.push(i),
-            }
-        }
+        let this: &Self = self;
+        let (mut scored, mut fresh): (Vec<(f64, usize)>, Vec<usize>) =
+            partition_candidates(candidates, |i, c| match c.last_loss {
+                Some(loss) => Ok((this.score(ctx, c, loss), i)),
+                None => Err(i),
+            });
         // Highest utility first; index breaks ties deterministically.
         scored.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
         let explore_n = (k as f64 * self.explore_frac).round() as usize;
@@ -361,15 +400,15 @@ impl SelectionPolicy for FairnessCap {
 
     fn select(&mut self, ctx: &SelectionContext, candidates: &[Candidate]) -> Vec<usize> {
         let k = ctx.target_cohort.min(candidates.len());
-        let mut eligible: Vec<usize> = Vec::new();
-        let mut capped: Vec<(u64, usize)> = Vec::new();
-        for (i, c) in candidates.iter().enumerate() {
-            if c.times_selected < self.max_selections {
-                eligible.push(i);
-            } else {
-                capped.push((c.times_selected, i));
-            }
-        }
+        let cap = self.max_selections;
+        let (mut eligible, mut capped): (Vec<usize>, Vec<(u64, usize)>) =
+            partition_candidates(candidates, |i, c| {
+                if c.times_selected < cap {
+                    Ok(i)
+                } else {
+                    Err((c.times_selected, i))
+                }
+            });
         self.rng.shuffle(&mut eligible);
         eligible.truncate(k);
         if eligible.len() < k {
@@ -596,6 +635,36 @@ mod tests {
             let replay = p.select(&c, &cands);
             assert_eq!(first, replay, "{} did not replay after restore", p.name());
         }
+    }
+
+    #[test]
+    fn selection_identical_for_every_worker_count() {
+        let m = CostModel::default();
+        // ragged pool (11 candidates) so shard boundaries land mid-class
+        let gpu = profiles::by_name("jetson_tx2_gpu").unwrap();
+        let rpi = profiles::by_name("raspberry_pi4").unwrap();
+        let mut cands: Vec<Candidate> = (0..11)
+            .map(|i| candidate(if i % 3 == 0 { rpi } else { gpu }, Some(0.5 + i as f64)))
+            .collect();
+        cands[4].last_loss = None;
+        cands[7].last_loss = None;
+        cands[2].times_selected = 99;
+        cands[9].times_selected = 99;
+        let c = ctx(&m, 5, Some(200.0));
+        let saved = par::workers();
+        par::set_workers(1);
+        let base = (
+            DeadlineAware::new(9).select(&c, &cands),
+            UtilityBased::new(9).select(&c, &cands),
+            FairnessCap::new(9).select(&c, &cands),
+        );
+        for w in [2usize, 3, 8, 64] {
+            par::set_workers(w);
+            assert_eq!(base.0, DeadlineAware::new(9).select(&c, &cands), "workers={w}");
+            assert_eq!(base.1, UtilityBased::new(9).select(&c, &cands), "workers={w}");
+            assert_eq!(base.2, FairnessCap::new(9).select(&c, &cands), "workers={w}");
+        }
+        par::set_workers(saved);
     }
 
     #[test]

@@ -29,6 +29,15 @@
 //! virtual-time order — deterministic regardless of real thread
 //! scheduling, exactly like [`crate::sched::Engine`].
 //!
+//! The numeric fold itself — the weighted average a flush hands to
+//! [`crate::strategy::Aggregator::weighted_average`] — is the chunked
+//! parallel reduction in [`crate::strategy::aggregate`]: the parameter
+//! vector is cut into fixed-size chunks and folded across
+//! [`crate::util::par::workers`] threads with a thread-count-invariant
+//! combine order, so both façades (and the population engine's
+//! `CohortTrainer::train_flush`) get bit-identical aggregates for every
+//! worker count.
+//!
 //! Two cross-cutting facilities live here too:
 //!
 //! * **selection** — both modes accept a

@@ -8,9 +8,17 @@
 //! Both are exercised by tests and compared by `rust/benches/aggregate.rs`;
 //! the PJRT artifact has a fixed slot count, so larger cohorts are folded
 //! in linear chunks (weighted sums are associative).
+//!
+//! The Rust fold parallelizes across `util::par::workers()` threads by
+//! splitting the **parameter (output) dimension** into fixed-size chunks
+//! ([`FOLD_CHUNK`]): every output element is still accumulated over the
+//! inputs in their original order inside one f64 accumulator, so the
+//! result is bit-identical to the sequential loop for every worker count
+//! (there is no cross-thread combine to re-associate).
 
 use crate::error::{Error, Result};
 use crate::runtime::Runtime;
+use crate::util::par;
 
 /// Which backend aggregates parameters.
 #[derive(Clone)]
@@ -62,16 +70,114 @@ impl Aggregator {
     }
 }
 
-fn rust_weighted_average(inputs: &[(&[f32], f64)], total: f64) -> Vec<f32> {
+/// Output-dimension chunk size for the parallel Rust fold. Chunk
+/// boundaries depend only on the parameter count — never on the worker
+/// count — so the work split is deterministic by construction.
+pub const FOLD_CHUNK: usize = 8192;
+
+/// The portable fold with the process-wide worker count
+/// (`util::par::workers()`).
+pub fn rust_weighted_average(inputs: &[(&[f32], f64)], total: f64) -> Vec<f32> {
+    rust_weighted_average_with_workers(inputs, total, par::workers())
+}
+
+/// The portable f64-accumulated weighted average, fanned out over
+/// `workers` threads along the parameter dimension.
+///
+/// Each worker owns a disjoint contiguous run of whole [`FOLD_CHUNK`]
+/// blocks of the output vector and accumulates *all* inputs, in input
+/// order, into its own f64 accumulator. Because every output element's
+/// accumulation chain is the same as in the sequential loop, the result
+/// is **bit-identical for every `workers` value** — pinned by the
+/// differential property test below and relied on by the golden-trace
+/// suite (the engine's folds may not drift when `--workers` changes).
+pub fn rust_weighted_average_with_workers(
+    inputs: &[(&[f32], f64)],
+    total: f64,
+    workers: usize,
+) -> Vec<f32> {
     let p = inputs[0].0.len();
-    let mut acc = vec![0f64; p];
+    let n_chunks = p.div_ceil(FOLD_CHUNK);
+    let threads = workers.max(1).min(n_chunks.max(1));
+    if threads <= 1 {
+        let mut out = vec![0f32; p];
+        fold_range(inputs, total, 0, p, &mut out);
+        return out;
+    }
+    crate::obs::registry()
+        .counter("aggregate_fold_chunks_total")
+        .add(n_chunks as u64);
+    // Contiguous runs of whole chunks per worker; boundaries are a pure
+    // function of (p, threads).
+    let runs: Vec<(usize, usize)> = par::shard_ranges(n_chunks, threads)
+        .into_iter()
+        .map(|(clo, chi)| ((clo * FOLD_CHUNK).min(p), (chi * FOLD_CHUNK).min(p)))
+        .collect();
+    let parts = par::run_sharded(runs.len(), |i| {
+        let (lo, hi) = runs[i];
+        let mut part = vec![0f32; hi - lo];
+        fold_range(inputs, total, lo, hi, &mut part);
+        part
+    });
+    let mut out = Vec::with_capacity(p);
+    for part in parts {
+        out.extend_from_slice(&part);
+    }
+    out
+}
+
+/// Accumulate `out[..] = Σ_i (w_i/total) * inputs_i[lo..hi]` in f64, inputs
+/// in their given order — the same per-element chain as the sequential
+/// fold, restricted to one output range.
+fn fold_range(inputs: &[(&[f32], f64)], total: f64, lo: usize, hi: usize, out: &mut [f32]) {
+    let mut acc = vec![0f64; hi - lo];
     for (v, w) in inputs {
         let wn = w / total;
-        for (a, &x) in acc.iter_mut().zip(v.iter()) {
+        for (a, &x) in acc.iter_mut().zip(v[lo..hi].iter()) {
             *a += wn * x as f64;
         }
     }
-    acc.into_iter().map(|x| x as f32).collect()
+    for (o, a) in out.iter_mut().zip(acc) {
+        *o = a as f32;
+    }
+}
+
+/// Fold `inputs` in chunks of `slots` through `exec`, which computes one
+/// chunk's weighted sum from `(vectors, normalized f32 weights)` — the
+/// shape of [`Runtime::aggregate`]. Extracted from the PJRT path so the
+/// chunked fold logic is testable without loadable AOT artifacts.
+///
+/// The per-chunk weights are already globally normalized (`w / total`), so
+/// each partial is a partial *sum* of the final average; summing the
+/// partials (unit weights over an explicit total of 1.0) is the whole
+/// combine step. An earlier version multiplied that sum by the partial
+/// count to "undo the mean" — but nothing here ever divided by it, so any
+/// cohort larger than `slots` came out `len×` too large. The regression
+/// test below drives >1 chunk and asserts bit-equality with
+/// [`Aggregator::Rust`].
+pub fn chunked_weighted_average<F>(
+    inputs: &[(&[f32], f64)],
+    total: f64,
+    slots: usize,
+    mut exec: F,
+) -> Result<Vec<f32>>
+where
+    F: FnMut(&[&[f32]], &[f32]) -> Result<Vec<f32>>,
+{
+    let slots = slots.max(1);
+    let mut partials: Vec<Vec<f32>> = Vec::new();
+    for chunk in inputs.chunks(slots) {
+        let vectors: Vec<&[f32]> = chunk.iter().map(|(v, _)| *v).collect();
+        let weights: Vec<f32> = chunk.iter().map(|(_, w)| (*w / total) as f32).collect();
+        partials.push(exec(&vectors, &weights)?);
+    }
+    if partials.len() == 1 {
+        return Ok(partials.pop().unwrap());
+    }
+    // Sum the partials: unit weights with total pinned to 1.0 make the
+    // "average" an exact sum.
+    let refs: Vec<(&[f32], f64)> = partials.iter().map(|v| (v.as_slice(), 1.0)).collect();
+    Ok(rust_weighted_average(&refs, 1.0))
 }
 
 fn pjrt_weighted_average(
@@ -81,23 +187,9 @@ fn pjrt_weighted_average(
     total: f64,
 ) -> Result<Vec<f32>> {
     let slots = runtime.manifest().model(model)?.agg_slots;
-    // Fold in chunks of `slots`: weighted sums are associative, so each
-    // chunk contributes its partial sum with normalized weights.
-    let mut partials: Vec<Vec<f32>> = Vec::new();
-    for chunk in inputs.chunks(slots) {
-        let vectors: Vec<&[f32]> = chunk.iter().map(|(v, _)| *v).collect();
-        let weights: Vec<f32> = chunk.iter().map(|(_, w)| (*w / total) as f32).collect();
-        partials.push(runtime.aggregate(model, &vectors, &weights)?);
-    }
-    if partials.len() == 1 {
-        return Ok(partials.pop().unwrap());
-    }
-    // Sum the partials (already correctly scaled).
-    let refs: Vec<(&[f32], f64)> = partials.iter().map(|v| (v.as_slice(), 1.0)).collect();
-    Ok(rust_weighted_average(&refs, 1.0)
-        .into_iter()
-        .map(|x| x * partials.len() as f32) // undo the mean: we want the sum
-        .collect())
+    chunked_weighted_average(inputs, total, slots, |vectors, weights| {
+        runtime.aggregate(model, vectors, weights)
+    })
 }
 
 #[cfg(test)]
@@ -138,6 +230,100 @@ mod tests {
         assert!(Aggregator::Rust
             .weighted_average(&[(&a, f64::NAN)])
             .is_err());
+    }
+
+    /// Chunk-fold regression for the PJRT path's `* partials.len()` bug:
+    /// with >1 chunk the fold must equal `Aggregator::Rust` exactly, not
+    /// `len×` it. The stub runtime can't load artifacts, so the chunk
+    /// executor is a closure computing exactly what `Runtime::aggregate`
+    /// computes for a chunk — an f32 weighted sum in input order. All
+    /// values are dyadic (quarters of small integers), so every
+    /// intermediate is exactly representable in f32 *and* f64 and the
+    /// f32-kernel / f64-fold results are bit-equal, not just close.
+    #[test]
+    fn chunked_fold_matches_rust_aggregator_exactly() {
+        let vs: [Vec<f32>; 4] = [
+            vec![1.0, 2.0, -8.0, 0.5],
+            vec![4.0, -2.0, 0.25, 8.0],
+            vec![-1.0, 16.0, 2.0, -0.5],
+            vec![2.0, 0.0, 4.0, -4.0],
+        ];
+        // unit weights over 4 inputs: wn = 0.25 exactly, in f32 and f64
+        let inputs: Vec<(&[f32], f64)> = vs.iter().map(|v| (v.as_slice(), 1.0)).collect();
+        let total: f64 = 4.0;
+        let want = Aggregator::Rust.weighted_average(&inputs).unwrap();
+
+        let exec = |vectors: &[&[f32]], weights: &[f32]| -> Result<Vec<f32>> {
+            let p = vectors[0].len();
+            let mut out = vec![0f32; p];
+            for (v, w) in vectors.iter().zip(weights) {
+                for (o, &x) in out.iter_mut().zip(v.iter()) {
+                    *o += w * x;
+                }
+            }
+            Ok(out)
+        };
+
+        for slots in [1usize, 2, 3] {
+            // slots < 4 ⇒ >1 chunk (3 gives a ragged tail chunk of 1)
+            let got = chunked_weighted_average(&inputs, total, slots, exec).unwrap();
+            let chunks = inputs.len().div_ceil(slots);
+            assert!(chunks > 1);
+            for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "slots={slots} param {j}: chunked {g} != rust {w} \
+                     (the old code would return {}×)",
+                    chunks
+                );
+            }
+        }
+        // single chunk (slots >= len) stays the passthrough fast path
+        let got = chunked_weighted_average(&inputs, total, 8, exec).unwrap();
+        assert_eq!(got, want);
+    }
+
+    /// The parallel fold is bit-identical to the sequential one for every
+    /// worker count — random input counts, weights, and vector lengths
+    /// both below and above `FOLD_CHUNK`.
+    #[test]
+    fn parallel_fold_bit_identical_across_workers() {
+        use crate::util::prop;
+        // deterministic boundary lengths first
+        let boundary = [1usize, 2, FOLD_CHUNK - 1, FOLD_CHUNK, FOLD_CHUNK + 1];
+        let mut case = 0u64;
+        prop::check("parallel fold == sequential fold", 48, |rng| {
+            let len = if (case as usize) < boundary.len() {
+                boundary[case as usize]
+            } else {
+                1 + rng.below(3 * FOLD_CHUNK)
+            };
+            case += 1;
+            let k = 1 + rng.below(5);
+            let vs: Vec<Vec<f32>> = (0..k)
+                .map(|_| (0..len).map(|_| (rng.f64() * 2.0 - 1.0) as f32).collect())
+                .collect();
+            let ws: Vec<f64> = (0..k).map(|_| 0.1 + rng.f64() * 9.9).collect();
+            let inputs: Vec<(&[f32], f64)> =
+                vs.iter().zip(&ws).map(|(v, &w)| (v.as_slice(), w)).collect();
+            let total: f64 = ws.iter().sum();
+            let seq = rust_weighted_average_with_workers(&inputs, total, 1);
+            for workers in [2usize, 8] {
+                let par = rust_weighted_average_with_workers(&inputs, total, workers);
+                prop::ensure(par.len() == seq.len(), || {
+                    format!("len mismatch at workers={workers}")
+                })?;
+                for (j, (a, b)) in par.iter().zip(&seq).enumerate() {
+                    prop::ensure(a.to_bits() == b.to_bits(), || {
+                        format!(
+                            "workers={workers} len={len} k={k} param {j}: {a} != {b}"
+                        )
+                    })?;
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -14,9 +14,17 @@
 //! The comm-cost model sees the smaller payloads automatically (byte
 //! accounting follows tensor dtype), so the time/energy savings show up
 //! in the history without further plumbing.
+//!
+//! Quantization can fail (e.g. a non-float tensor in the parameter set).
+//! When it does, the wrapper ships the original f32 payload and — for
+//! fit — **omits** the `quantize` config flag, warning through
+//! `telemetry::log`: flag and payload must agree, or clients would
+//! halve their uplink while the cost model books full-size downlinks
+//! that were never compressed.
 
 use crate::client::keys;
 use crate::error::Result;
+use crate::telemetry::log;
 use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
 
 use super::{ClientHandle, EvalSummary, Strategy};
@@ -44,12 +52,21 @@ impl Strategy for QuantizedComm {
         cohort: &[ClientHandle],
     ) -> Vec<(usize, FitIns)> {
         let mut plan = self.inner.configure_fit(round, parameters, cohort);
-        for (_, ins) in &mut plan {
-            if let Ok(q) = ins.parameters.quantize_f16() {
-                ins.parameters = q;
+        for (id, ins) in &mut plan {
+            match ins.parameters.quantize_f16() {
+                Ok(q) => {
+                    ins.parameters = q;
+                    // Flag only what was actually quantized: the flag asks
+                    // the client to f16 its uplink and tells the cost
+                    // model the downlink was halved.
+                    ins.config
+                        .insert(keys::QUANTIZE.into(), Scalar::Str("f16".into()));
+                }
+                Err(e) => log::warn(&format!(
+                    "quantized_comm: fit round {round} client {id}: \
+                     f16 quantization failed ({e}); sending f32 unflagged"
+                )),
             }
-            ins.config
-                .insert(keys::QUANTIZE.into(), Scalar::Str("f16".into()));
         }
         plan
     }
@@ -81,9 +98,13 @@ impl Strategy for QuantizedComm {
         cohort: &[ClientHandle],
     ) -> Vec<(usize, EvaluateIns)> {
         let mut plan = self.inner.configure_evaluate(round, parameters, cohort);
-        for (_, ins) in &mut plan {
-            if let Ok(q) = ins.parameters.quantize_f16() {
-                ins.parameters = q;
+        for (id, ins) in &mut plan {
+            match ins.parameters.quantize_f16() {
+                Ok(q) => ins.parameters = q,
+                Err(e) => log::warn(&format!(
+                    "quantized_comm: evaluate round {round} client {id}: \
+                     f16 quantization failed ({e}); sending f32"
+                )),
             }
         }
         plan
@@ -139,6 +160,40 @@ mod tests {
         let results = vec![(h[0].clone(), mk(q1)), (h[1].clone(), mk(q2))];
         let out = s.aggregate_fit(1, &results, 0).unwrap();
         assert_eq!(out.to_flat().unwrap(), &[2.0, 3.0]);
+    }
+
+    /// Failure path: a parameter set containing a non-float tensor cannot
+    /// be f16-quantized. The wrapper must ship the original payload and —
+    /// crucially — must NOT insert the `quantize=f16` flag: an earlier
+    /// version swallowed the error but flagged anyway, telling clients and
+    /// the byte-accounting cost model the payload was halved when it
+    /// wasn't.
+    #[test]
+    fn quantization_failure_ships_original_without_flag() {
+        let mut s = quantized();
+        let cohort = handles(2);
+        let params = Parameters {
+            tensors: vec![crate::proto::Tensor::i32(vec![3], vec![1, 2, 3]).unwrap()],
+        };
+        let plan = s.configure_fit(1, &params, &cohort);
+        assert_eq!(plan.len(), 2);
+        for (_, ins) in &plan {
+            assert_eq!(ins.parameters, params, "payload must pass through unchanged");
+            assert!(
+                !ins.config.contains_key(keys::QUANTIZE),
+                "flag must not claim a quantization that failed"
+            );
+        }
+        let eplan = s.configure_evaluate(1, &params, &cohort);
+        for (_, ins) in &eplan {
+            assert_eq!(ins.parameters, params);
+        }
+        // and the happy path still flags (guards against over-fixing)
+        let ok = Parameters::from_flat(vec![0.5; 4]);
+        let plan = s.configure_fit(2, &ok, &cohort);
+        for (_, ins) in &plan {
+            assert_eq!(ins.config.get_str(keys::QUANTIZE).unwrap(), "f16");
+        }
     }
 
     #[test]

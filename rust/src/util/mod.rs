@@ -14,10 +14,14 @@
 //!   `rust/benches/*`.
 //! * [`prop`] — a tiny property-testing driver (proptest stand-in) used by
 //!   `rust/tests/proptests.rs`.
+//! * [`par`] — the process-wide `--workers` knob and a deterministic
+//!   scoped fan-out helper (rayon stand-in) used by the engine, the
+//!   selection policies and the aggregation fold.
 
 pub mod bench;
 pub mod bytes;
 pub mod f16;
 pub mod json;
+pub mod par;
 pub mod prop;
 pub mod rng;

@@ -203,10 +203,16 @@ fn fedbuff_beats_sync_fedavg_time_to_accuracy_on_heterogeneous_mix() {
 ///
 /// Ignored by default (it needs a release build to be meaningful); CI
 /// runs it explicitly via
-/// `cargo test --release -q engine_smoke_1m -- --ignored`.
+/// `cargo test --release -q engine_smoke_1m -- --ignored`, once plain
+/// and once with `FLOWRS_SMOKE_WORKERS=4` to hold the same bar on the
+/// sharded synthesis/scan paths.
 #[test]
 #[ignore = "1M-device release-mode smoke; CI runs it via -- --ignored"]
 fn engine_smoke_1m_streaming_stays_flat() {
+    let workers: usize = std::env::var("FLOWRS_SMOKE_WORKERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
     let mut cfg = ScheduleConfig::default()
         .named("smoke-1m")
         .population(1_000_000)
@@ -214,7 +220,8 @@ fn engine_smoke_1m_streaming_stays_flat() {
         .seed(17)
         .buffered(64)
         .concurrency(512)
-        .rounds(50);
+        .rounds(50)
+        .workers(workers);
     cfg.churn = Some(ChurnSpec { mean_on_s: 600.0, mean_off_s: 300.0 });
     let t0 = Instant::now();
     let report = run_population(&cfg, None).unwrap();
