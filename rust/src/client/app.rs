@@ -10,6 +10,10 @@ use crate::transport::Connection;
 
 /// Run a client against an established connection. Returns when the server
 /// sends `Reconnect` (clean shutdown) or the connection drops.
+///
+/// Speaks wire v1 end to end (no `Hello` greeting) — the legacy path
+/// every pre-v2 peer takes. [`run_client_negotiated`] upgrades to the
+/// zero-copy v2 wire when the server supports it.
 pub fn run_client(
     mut conn: Connection,
     client: &mut dyn Client,
@@ -19,9 +23,41 @@ pub fn run_client(
     serve(conn, client)
 }
 
+/// Like [`run_client`], but greets the server with `Hello` first and
+/// serves at the negotiated wire version (see `transport/PROTOCOL.md`):
+/// the server answers `HelloAck` with the highest mutually supported
+/// version, then registration proceeds as usual.
+pub fn run_client_negotiated(
+    mut conn: Connection,
+    client: &mut dyn Client,
+    info: ClientInfo,
+) -> Result<()> {
+    conn.send_client_message(&ClientMessage::Hello {
+        max_version: crate::proto::MAX_WIRE_VERSION,
+    })?;
+    let wire = match conn.recv_server_message()? {
+        // clamp defensively: never speak above what this build knows
+        ServerMessage::HelloAck { version } => crate::proto::negotiate_version(version),
+        other => {
+            return Err(Error::Protocol(format!(
+                "expected HelloAck to the version greeting, got {other:?}"
+            )))
+        }
+    };
+    conn.send_client_message(&ClientMessage::Register(info.clone()))?;
+    serve_wire(conn, client, wire)
+}
+
 /// Serve an already-registered connection (the simulator registers the
-/// proxy directly, so no `Register` message is sent here).
-pub fn serve(mut conn: Connection, client: &mut dyn Client) -> Result<()> {
+/// proxy directly, so no `Register` message is sent here). Wire v1.
+pub fn serve(conn: Connection, client: &mut dyn Client) -> Result<()> {
+    serve_wire(conn, client, crate::proto::codec::VERSION)
+}
+
+/// [`serve`] at an explicit negotiated wire version: responses carrying
+/// tensors (`FitRes`, `GetParametersRes`) are encoded v2 on v2
+/// connections; incoming frames decode on either version transparently.
+pub fn serve_wire(mut conn: Connection, client: &mut dyn Client, wire: u8) -> Result<()> {
     loop {
         let msg = match conn.recv_server_message() {
             Ok(m) => m,
@@ -39,7 +75,7 @@ pub fn serve(mut conn: Connection, client: &mut dyn Client) -> Result<()> {
                         parameters: Default::default(),
                     }
                 });
-                conn.send_client_message(&ClientMessage::GetParametersRes(res))?;
+                conn.send_client_message_v(&ClientMessage::GetParametersRes(res), wire)?;
             }
             ServerMessage::FitIns(ins) => {
                 let res = match client.fit(ins) {
@@ -54,7 +90,7 @@ pub fn serve(mut conn: Connection, client: &mut dyn Client) -> Result<()> {
                         metrics: Default::default(),
                     },
                 };
-                conn.send_client_message(&ClientMessage::FitRes(res))?;
+                conn.send_client_message_v(&ClientMessage::FitRes(res), wire)?;
             }
             ServerMessage::EvaluateIns(ins) => {
                 let res = match client.evaluate(ins) {
@@ -77,6 +113,8 @@ pub fn serve(mut conn: Connection, client: &mut dyn Client) -> Result<()> {
                 });
                 return Ok(());
             }
+            // negotiation is settled before serving; ignore stray acks
+            ServerMessage::HelloAck { .. } => {}
         }
     }
 }
@@ -170,6 +208,70 @@ mod tests {
         }
 
         // goodbye
+        server
+            .send_server_message(&ServerMessage::Reconnect { seconds: 0 })
+            .unwrap();
+        match server.recv_client_message().unwrap() {
+            ClientMessage::Disconnect { .. } => {}
+            other => panic!("expected Disconnect, got {other:?}"),
+        }
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn negotiated_client_upgrades_to_v2() {
+        let (server_end, client_end) = inproc::pair();
+        let mut server = Connection::InProc(server_end);
+
+        let handle = std::thread::spawn(move || {
+            let mut client = EchoClient { params: vec![0.0; 2] };
+            run_client_negotiated(
+                Connection::InProc(client_end),
+                &mut client,
+                ClientInfo {
+                    client_id: "c1".into(),
+                    device: "pixel4".into(),
+                    os: "Android 10".into(),
+                    num_examples: 10,
+                },
+            )
+        });
+
+        // hello greeting precedes registration
+        match server.recv_client_message().unwrap() {
+            ClientMessage::Hello { max_version } => {
+                assert_eq!(max_version, crate::proto::MAX_WIRE_VERSION)
+            }
+            other => panic!("expected Hello, got {other:?}"),
+        }
+        server
+            .send_server_message(&ServerMessage::HelloAck {
+                version: crate::proto::codec::VERSION_V2,
+            })
+            .unwrap();
+        let reg = server.recv_client_message().unwrap();
+        assert!(matches!(reg, ClientMessage::Register(_)));
+
+        // a v2 FitIns decodes on the client, and the FitRes comes back
+        // as a v2 frame (version byte pinned on the raw frame)
+        server
+            .send_server_message_v(
+                &ServerMessage::FitIns(FitIns {
+                    parameters: Parameters::from_flat(vec![1.0, 2.0]),
+                    config: Default::default(),
+                }),
+                crate::proto::codec::VERSION_V2,
+            )
+            .unwrap();
+        let frame = server.recv_frame().unwrap();
+        assert_eq!(frame.as_slice()[2], crate::proto::codec::VERSION_V2);
+        match crate::proto::decode_client_frame(&frame).unwrap() {
+            ClientMessage::FitRes(res) => {
+                assert_eq!(res.parameters.to_flat().unwrap(), &[2.0, 3.0]);
+            }
+            other => panic!("expected FitRes, got {other:?}"),
+        }
+
         server
             .send_server_message(&ServerMessage::Reconnect { seconds: 0 })
             .unwrap();

@@ -41,6 +41,7 @@ pub mod config;
 pub mod data;
 pub mod device;
 pub mod error;
+pub mod loadgen;
 pub mod metrics;
 pub mod obs;
 pub mod persist;

@@ -5,6 +5,8 @@
 //! * `sched`     — population-scale cost-aware scheduling experiments
 //! * `server`    — start a Flower TCP server (cloud side of the paper)
 //! * `client`    — start one on-device TCP client
+//! * `loadgen`   — hold N concurrent TCP clients against a live async
+//!   server and report transport throughput + frame RTT (JSON)
 //! * `devices`   — print the device inventory (paper Table 1)
 //! * `artifacts` — verify the AOT artifact bundle end-to-end
 //! * `ckpt`      — inspect persistent checkpoints (`ckpt inspect <file|dir>`)
@@ -108,6 +110,7 @@ fn run(argv: &[String]) -> Result<()> {
         "sched" => cmd_sched(&args),
         "server" => cmd_server(&args),
         "client" => cmd_client(&args),
+        "loadgen" => cmd_loadgen(&args),
         "devices" => cmd_devices(),
         "artifacts" => cmd_artifacts(&args),
         "ckpt" => cmd_ckpt(&args),
@@ -172,6 +175,14 @@ fn print_usage() {
            client     start one on-device TCP client\n\
                       --addr 127.0.0.1:9092 --model cifar_cnn --device jetson_tx2_gpu\n\
                       --id c0 --train 256 --test 100 --seed 1 --stream 1 --artifacts <dir>\n\
+           loadgen    live-cluster load harness: hold N concurrent TCP\n\
+                      clients (wire v2 negotiated) against a real async\n\
+                      server, bounded by wall clock; prints a JSON report\n\
+                      (throughput, bytes/s, frame RTT p50/p99, accounting)\n\
+                      and exits nonzero on any transport error or a broken\n\
+                      accounting identity\n\
+                      --clients 64 --duration 10 --params 16384 --buffer 32\n\
+                      --max-concurrency 0 --quorum-timeout 120 --out <json>\n\
            devices    print the device inventory (paper Table 1)\n\
            artifacts  verify the AOT bundle: load, compile, smoke-run\n\
            ckpt       inspect persistent checkpoints\n\
@@ -764,6 +775,39 @@ fn cmd_client(args: &Args) -> Result<()> {
     let conn = Connection::Tcp(TcpConnection::connect(&addr)?);
     app::run_client(conn, &mut trainer, info)?;
     log::info("client done");
+    Ok(())
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    if args.has_help() {
+        print_usage();
+        return Ok(());
+    }
+    let duration_s: f64 = args.get_parsed("duration")?.unwrap_or(10.0);
+    if !duration_s.is_finite() || duration_s <= 0.0 {
+        return Err(Error::Config(format!("--duration must be positive, got {duration_s}")));
+    }
+    let cfg = flowrs::loadgen::LoadgenConfig {
+        clients: args.get_parsed("clients")?.unwrap_or(64),
+        duration: Duration::from_secs_f64(duration_s),
+        buffer_k: args.get_parsed("buffer")?.unwrap_or(32),
+        param_count: args.get_parsed("params")?.unwrap_or(16_384),
+        max_concurrency: args.get_parsed("max-concurrency")?.unwrap_or(0),
+        quorum_timeout: Duration::from_secs(args.get_parsed("quorum-timeout")?.unwrap_or(120)),
+    };
+    let report = flowrs::loadgen::run(&cfg)?;
+    let json = report.to_json().to_string();
+    println!("{json}");
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, format!("{json}\n"))?;
+        log::info(&format!("wrote loadgen report to {out}"));
+    }
+    if !report.ok() {
+        return Err(Error::Protocol(format!(
+            "loadgen failed: {} client error(s), {} fit failure(s), identity_ok={}",
+            report.client_errors, report.stats.failures, report.identity_ok,
+        )));
+    }
     Ok(())
 }
 

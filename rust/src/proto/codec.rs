@@ -20,33 +20,85 @@
 //!
 //! Framing (length prefix) is the transport's job — see `transport::frame`.
 //!
+//! **Wire version 2** (negotiated via `Hello`/`HelloAck`, see
+//! `transport/PROTOCOL.md` for the normative spec) moves the four
+//! tensor-bearing messages to a hybrid *header + raw body* layout so
+//! tensor payloads decode **zero-copy** out of the receive buffer:
+//!
+//! ```text
+//! v2 message := magic:u16 version:u8(2) tag:u8 header_len:u32
+//!               header[header_len] pad[0..3](zero) body
+//! manifest   := count:u16 entry[count]
+//! entry      := dtype:u8 rank:u8 dims:u32[rank] byte_off:u32 byte_len:u32
+//! ```
+//!
+//! The header carries the v1 composite fields with `params` replaced by
+//! the manifest; `byte_off` is relative to the body start, every tensor
+//! start is 4-byte aligned (the body itself starts 4-aligned relative
+//! to the message start), and the body is raw little-endian element
+//! bytes. Decoding borrows f32 tensors straight from the shared frame
+//! buffer ([`SharedF32`] / [`TensorView`]); misalignment or a
+//! big-endian host falls back to copying — the *bytes* are identical
+//! either way. All other messages stay v1 on every connection.
+//!
 //! The little-endian primitives live in [`crate::util::bytes`] (shared
 //! with the checkpoint container and transport framing); this module
 //! owns only the protocol's composite encodings. The wire bytes are
 //! pinned by golden vectors and a differential property test against
-//! the pre-refactor hand-rolled encoder (`rust/tests/proptests.rs`).
+//! the pre-refactor hand-rolled encoder (`rust/tests/proptests.rs`),
+//! with the v2 layout pinned in `rust/tests/wire_v2.rs`.
+
+use std::sync::{Arc, OnceLock};
 
 use crate::error::{Error, Result};
-use crate::util::bytes::{LeReader, LeWriter};
+use crate::util::bytes::{FrameBuf, LeReader, LeWriter};
 
 use super::message::*;
 use super::scalar::{ConfigMap, Scalar};
-use super::tensor::{Parameters, Tensor, TensorData};
+use super::tensor::{Parameters, SharedF32, Tensor, TensorData};
 
 pub const MAGIC: u16 = 0xF10E;
 pub const VERSION: u8 = 1;
+/// The zero-copy header+body wire version.
+pub const VERSION_V2: u8 = 2;
+/// Highest wire version this build speaks (what `HelloAck` caps at).
+pub const MAX_WIRE_VERSION: u8 = VERSION_V2;
 
 // Server message tags.
 const TAG_GET_PARAMETERS_INS: u8 = 0x01;
 const TAG_FIT_INS: u8 = 0x02;
 const TAG_EVALUATE_INS: u8 = 0x03;
 const TAG_RECONNECT: u8 = 0x04;
+const TAG_HELLO_ACK: u8 = 0x05;
 // Client message tags.
 const TAG_REGISTER: u8 = 0x81;
 const TAG_GET_PARAMETERS_RES: u8 = 0x82;
 const TAG_FIT_RES: u8 = 0x83;
 const TAG_EVALUATE_RES: u8 = 0x84;
 const TAG_DISCONNECT: u8 = 0x85;
+const TAG_HELLO: u8 = 0x86;
+
+/// The negotiation rule (server side): answer a client's `Hello` with
+/// the highest mutually-supported wire version, never below v1. A v1
+/// peer that skips the `Hello` entirely simply stays on v1.
+pub fn negotiate_version(client_max: u8) -> u8 {
+    client_max.clamp(VERSION, MAX_WIRE_VERSION)
+}
+
+/// Peek the wire version of an encoded message (validates the magic).
+pub fn wire_version(payload: &[u8]) -> Result<u8> {
+    if payload.len() < 4 {
+        return Err(Error::Codec(format!(
+            "message too short for a header: {} bytes",
+            payload.len()
+        )));
+    }
+    let magic = u16::from_le_bytes([payload[0], payload[1]]);
+    if magic != MAGIC {
+        return Err(Error::Codec(format!("bad magic {magic:#06x}")));
+    }
+    Ok(payload[2])
+}
 
 // ---------------------------------------------------------------------------
 // Writer
@@ -100,21 +152,25 @@ impl Writer {
         self.bytes(v.as_bytes());
     }
 
+    fn f32_tensor(&mut self, shape: &[usize], v: &[f32]) {
+        self.u8(0);
+        self.u8(shape.len() as u8);
+        for &d in shape {
+            self.u32(d as u32);
+        }
+        self.u32(v.len() as u32);
+        // bulk copy: f32 LE
+        self.w.reserve(v.len() * 4);
+        for &x in v {
+            self.w.f32(x);
+        }
+    }
+
     fn tensor(&mut self, t: &Tensor) {
         match &t.data {
-            TensorData::F32(v) => {
-                self.u8(0);
-                self.u8(t.shape.len() as u8);
-                for &d in &t.shape {
-                    self.u32(d as u32);
-                }
-                self.u32(v.len() as u32);
-                // bulk copy: f32 LE
-                self.w.reserve(v.len() * 4);
-                for &x in v {
-                    self.w.f32(x);
-                }
-            }
+            TensorData::F32(v) => self.f32_tensor(&t.shape, v),
+            // same logical dtype, same v1 bytes
+            TensorData::F32Shared(v) => self.f32_tensor(&t.shape, v.as_slice()),
             TensorData::I32(v) => {
                 self.u8(1);
                 self.u8(t.shape.len() as u8);
@@ -374,6 +430,11 @@ pub fn encode_server_message(msg: &ServerMessage) -> Vec<u8> {
             w.u64(*seconds);
             w.finish()
         }
+        ServerMessage::HelloAck { version } => {
+            let mut w = Writer::with_header(TAG_HELLO_ACK, 1);
+            w.u8(*version);
+            w.finish()
+        }
     }
 }
 
@@ -394,6 +455,7 @@ pub fn decode_server_message(buf: &[u8]) -> Result<ServerMessage> {
             config: r.config()?,
         }),
         TAG_RECONNECT => ServerMessage::Reconnect { seconds: r.u64()? },
+        TAG_HELLO_ACK => ServerMessage::HelloAck { version: r.u8()? },
         other => return Err(Error::Codec(format!("unknown server message tag {other:#04x}"))),
     };
     r.finish()?;
@@ -403,6 +465,11 @@ pub fn decode_server_message(buf: &[u8]) -> Result<ServerMessage> {
 /// Encode a client→server message to bytes.
 pub fn encode_client_message(msg: &ClientMessage) -> Vec<u8> {
     match msg {
+        ClientMessage::Hello { max_version } => {
+            let mut w = Writer::with_header(TAG_HELLO, 1);
+            w.u8(*max_version);
+            w.finish()
+        }
         ClientMessage::Register(info) => {
             let mut w = Writer::with_header(TAG_REGISTER, 128);
             w.string(&info.client_id);
@@ -469,10 +536,481 @@ pub fn decode_client_message(buf: &[u8]) -> Result<ClientMessage> {
             metrics: r.config()?,
         }),
         TAG_DISCONNECT => ClientMessage::Disconnect { reason: r.string()? },
+        TAG_HELLO => ClientMessage::Hello { max_version: r.u8()? },
         other => return Err(Error::Codec(format!("unknown client message tag {other:#04x}"))),
     };
     r.finish()?;
     Ok(msg)
+}
+
+// ---------------------------------------------------------------------------
+// Wire v2: structured header + raw tensor body (zero-copy decode)
+// ---------------------------------------------------------------------------
+
+fn dtype_code(t: &Tensor) -> u8 {
+    match &t.data {
+        TensorData::F32(_) | TensorData::F32Shared(_) => 0,
+        TensorData::I32(_) => 1,
+        TensorData::F16(_) => 2,
+    }
+}
+
+/// Per-tensor `(byte_off, byte_len)` body layout: tensors packed in
+/// order, every tensor start 4-byte aligned (so a 4-aligned frame
+/// buffer makes every f32 region castable in place). Returns the
+/// layout and the total body length.
+fn body_layout(p: &Parameters) -> (Vec<(u32, u32)>, usize) {
+    let mut layout = Vec::with_capacity(p.tensors.len());
+    let mut off = 0usize;
+    for t in &p.tensors {
+        off = (off + 3) & !3;
+        let len = t.byte_len();
+        layout.push((off as u32, len as u32));
+        off += len;
+    }
+    (layout, off)
+}
+
+#[cfg(target_endian = "little")]
+fn f32_le_bytes(v: &[f32]) -> std::borrow::Cow<'_, [u8]> {
+    // SAFETY: u8 has alignment 1, every byte of an f32 is initialized,
+    // and on a little-endian target the in-memory bytes are exactly the
+    // wire bytes — this is the single bulk write that replaces the v1
+    // per-element encode loop.
+    std::borrow::Cow::Borrowed(unsafe {
+        std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), v.len() * 4)
+    })
+}
+
+#[cfg(target_endian = "big")]
+fn f32_le_bytes(v: &[f32]) -> std::borrow::Cow<'_, [u8]> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    std::borrow::Cow::Owned(out)
+}
+
+fn write_tensor_body(w: &mut LeWriter, t: &Tensor) {
+    match &t.data {
+        TensorData::F32(v) => w.raw(&f32_le_bytes(v)),
+        TensorData::F32Shared(v) => w.raw(&f32_le_bytes(v.as_slice())),
+        TensorData::I32(v) => {
+            w.reserve(v.len() * 4);
+            for x in v {
+                w.raw(&x.to_le_bytes());
+            }
+        }
+        TensorData::F16(v) => {
+            w.reserve(v.len() * 2);
+            for &x in v {
+                w.u16(x);
+            }
+        }
+    }
+}
+
+/// Assemble a v2 message: `pre` writes the header fields that come
+/// before the tensor manifest (e.g. a response status), `post` the ones
+/// after it (configs, counters) — same field order as the v1 body, with
+/// `params` swapped for the manifest.
+fn encode_v2(
+    tag: u8,
+    params: &Parameters,
+    pre: impl FnOnce(&mut Writer),
+    post: impl FnOnce(&mut Writer),
+) -> Vec<u8> {
+    let (layout, body_len) = body_layout(params);
+    let mut h = Writer { w: LeWriter::with_capacity(128) };
+    pre(&mut h);
+    h.u16(params.tensors.len() as u16);
+    for (t, &(off, len)) in params.tensors.iter().zip(&layout) {
+        h.u8(dtype_code(t));
+        h.u8(t.shape.len() as u8);
+        for &d in &t.shape {
+            h.u32(d as u32);
+        }
+        h.u32(off);
+        h.u32(len);
+    }
+    post(&mut h);
+    let header = h.finish();
+
+    let pad = (4 - header.len() % 4) % 4;
+    let mut w = LeWriter::with_capacity(8 + header.len() + pad + body_len);
+    w.u16(MAGIC);
+    w.u8(VERSION_V2);
+    w.u8(tag);
+    w.u32(header.len() as u32);
+    w.raw(&header);
+    w.raw(&[0u8; 3][..pad]);
+    let mut cursor = 0usize;
+    for (t, &(off, _)) in params.tensors.iter().zip(&layout) {
+        w.raw(&[0u8; 3][..off as usize - cursor]);
+        write_tensor_body(&mut w, t);
+        cursor = off as usize + t.byte_len();
+    }
+    w.into_bytes()
+}
+
+/// Encode a server→client message for a negotiated wire version. On v2
+/// connections the tensor-bearing messages (`FitIns`, `EvaluateIns`)
+/// use the header+body layout; everything else — and every message on a
+/// v1 connection — goes through the v1 codec unchanged.
+pub fn encode_server_message_v(msg: &ServerMessage, wire: u8) -> Vec<u8> {
+    if wire >= VERSION_V2 {
+        match msg {
+            ServerMessage::FitIns(ins) => {
+                return encode_v2(TAG_FIT_INS, &ins.parameters, |_| {}, |h| {
+                    h.config(&ins.config)
+                });
+            }
+            ServerMessage::EvaluateIns(ins) => {
+                return encode_v2(TAG_EVALUATE_INS, &ins.parameters, |_| {}, |h| {
+                    h.config(&ins.config)
+                });
+            }
+            _ => {}
+        }
+    }
+    encode_server_message(msg)
+}
+
+/// Client→server counterpart of [`encode_server_message_v`]: `FitRes`
+/// and `GetParametersRes` take the v2 layout on v2 connections.
+pub fn encode_client_message_v(msg: &ClientMessage, wire: u8) -> Vec<u8> {
+    if wire >= VERSION_V2 {
+        match msg {
+            ClientMessage::GetParametersRes(res) => {
+                return encode_v2(
+                    TAG_GET_PARAMETERS_RES,
+                    &res.parameters,
+                    |h| h.status(&res.status),
+                    |_| {},
+                );
+            }
+            ClientMessage::FitRes(res) => {
+                return encode_v2(TAG_FIT_RES, &res.parameters, |h| h.status(&res.status), |h| {
+                    h.u64(res.num_examples);
+                    h.config(&res.metrics);
+                });
+            }
+            _ => {}
+        }
+    }
+    encode_client_message(msg)
+}
+
+struct V2Parts<'a> {
+    tag: u8,
+    header: &'a [u8],
+    body: &'a [u8],
+    /// Absolute byte offset of the body within the message payload.
+    body_off: usize,
+}
+
+fn split_v2(payload: &[u8]) -> Result<V2Parts<'_>> {
+    if payload.len() < 8 {
+        return Err(Error::Codec(format!(
+            "v2 message too short: {} bytes",
+            payload.len()
+        )));
+    }
+    let magic = u16::from_le_bytes([payload[0], payload[1]]);
+    if magic != MAGIC {
+        return Err(Error::Codec(format!("bad magic {magic:#06x}")));
+    }
+    if payload[2] != VERSION_V2 {
+        return Err(Error::Codec(format!(
+            "unsupported protocol version {}",
+            payload[2]
+        )));
+    }
+    let tag = payload[3];
+    let header_len = u32::from_le_bytes(payload[4..8].try_into().unwrap()) as usize;
+    let header_end = 8usize
+        .checked_add(header_len)
+        .filter(|&end| end <= payload.len())
+        .ok_or_else(|| Error::Codec(format!("v2 header ({header_len} bytes) overruns message")))?;
+    let body_off = (header_end + 3) & !3;
+    if body_off > payload.len() {
+        return Err(Error::Codec("v2 body padding overruns message".into()));
+    }
+    if payload[header_end..body_off].iter().any(|&b| b != 0) {
+        return Err(Error::Codec("nonzero v2 header padding".into()));
+    }
+    Ok(V2Parts { tag, header: &payload[8..header_end], body: &payload[body_off..], body_off })
+}
+
+struct ManifestEntry {
+    dtype: u8,
+    shape: Vec<usize>,
+    byte_off: usize,
+    byte_len: usize,
+    count: usize,
+}
+
+/// Parse and validate the tensor manifest against the body bounds:
+/// every region must be in bounds, 4-aligned, an exact multiple of the
+/// element size, and consistent with its declared shape — and the
+/// regions must cover the body exactly (no trailing garbage).
+fn manifest(r: &mut Reader, body_len: usize) -> Result<Vec<ManifestEntry>> {
+    let count = r.u16()? as usize;
+    let mut entries = Vec::with_capacity(count);
+    let mut max_end = 0usize;
+    for _ in 0..count {
+        let dtype = r.u8()?;
+        let rank = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u32()? as usize);
+        }
+        let byte_off = r.u32()? as usize;
+        let byte_len = r.u32()? as usize;
+        let elem = match dtype {
+            0 | 1 => 4,
+            2 => 2,
+            other => return Err(Error::Codec(format!("unknown tensor dtype {other}"))),
+        };
+        if byte_len % elem != 0 {
+            return Err(Error::Codec(format!(
+                "tensor byte length {byte_len} not a multiple of element size {elem}"
+            )));
+        }
+        let n = byte_len / elem;
+        let expect: usize = shape.iter().product();
+        if expect != n {
+            return Err(Error::Codec(format!(
+                "tensor shape {shape:?} wants {expect} elements, manifest says {n}"
+            )));
+        }
+        if byte_off % 4 != 0 {
+            return Err(Error::Codec(format!("misaligned tensor offset {byte_off}")));
+        }
+        let end = byte_off
+            .checked_add(byte_len)
+            .filter(|&end| end <= body_len)
+            .ok_or_else(|| {
+                Error::Codec(format!(
+                    "tensor region {byte_off}+{byte_len} out of body bounds ({body_len} bytes)"
+                ))
+            })?;
+        max_end = max_end.max(end);
+        entries.push(ManifestEntry { dtype, shape, byte_off, byte_len, count: n });
+    }
+    if max_end != body_len {
+        return Err(Error::Codec(format!(
+            "v2 body has {body_len} bytes but the manifest covers {max_end}"
+        )));
+    }
+    Ok(entries)
+}
+
+/// Materialize validated manifest entries into `Parameters`, borrowing
+/// f32 regions straight out of the shared frame buffer (copy fallback
+/// on misalignment or a big-endian host; i32/f16 always copy).
+fn v2_parameters(frame: &FrameBuf, body_off: usize, entries: Vec<ManifestEntry>) -> Parameters {
+    let bytes = frame.as_slice();
+    let tensors = entries
+        .into_iter()
+        .map(|e| {
+            let abs = body_off + e.byte_off;
+            let raw = &bytes[abs..abs + e.byte_len];
+            let data = match e.dtype {
+                0 => match SharedF32::new(frame.shared(), abs, e.count) {
+                    Some(v) => TensorData::F32Shared(v),
+                    None => TensorData::F32(
+                        raw.chunks_exact(4)
+                            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                            .collect(),
+                    ),
+                },
+                1 => TensorData::I32(
+                    raw.chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+                _ => TensorData::F16(
+                    raw.chunks_exact(2)
+                        .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                        .collect(),
+                ),
+            };
+            Tensor { shape: e.shape, data }
+        })
+        .collect();
+    Parameters { tensors }
+}
+
+fn decode_server_message_v2(frame: &FrameBuf) -> Result<ServerMessage> {
+    let parts = split_v2(frame.as_slice())?;
+    let mut r = Reader::new(parts.header);
+    let msg = match parts.tag {
+        TAG_FIT_INS => {
+            let entries = manifest(&mut r, parts.body.len())?;
+            let config = r.config()?;
+            ServerMessage::FitIns(FitIns {
+                parameters: v2_parameters(frame, parts.body_off, entries),
+                config,
+            })
+        }
+        TAG_EVALUATE_INS => {
+            let entries = manifest(&mut r, parts.body.len())?;
+            let config = r.config()?;
+            ServerMessage::EvaluateIns(EvaluateIns {
+                parameters: v2_parameters(frame, parts.body_off, entries),
+                config,
+            })
+        }
+        other => {
+            return Err(Error::Codec(format!(
+                "unexpected v2 server message tag {other:#04x}"
+            )))
+        }
+    };
+    r.r.expect_end("v2 header")?;
+    Ok(msg)
+}
+
+fn decode_client_message_v2(frame: &FrameBuf) -> Result<ClientMessage> {
+    let parts = split_v2(frame.as_slice())?;
+    let mut r = Reader::new(parts.header);
+    let msg = match parts.tag {
+        TAG_GET_PARAMETERS_RES => {
+            let status = r.status()?;
+            let entries = manifest(&mut r, parts.body.len())?;
+            ClientMessage::GetParametersRes(GetParametersRes {
+                status,
+                parameters: v2_parameters(frame, parts.body_off, entries),
+            })
+        }
+        TAG_FIT_RES => {
+            let status = r.status()?;
+            let entries = manifest(&mut r, parts.body.len())?;
+            let num_examples = r.u64()?;
+            let metrics = r.config()?;
+            ClientMessage::FitRes(FitRes {
+                status,
+                parameters: v2_parameters(frame, parts.body_off, entries),
+                num_examples,
+                metrics,
+            })
+        }
+        other => {
+            return Err(Error::Codec(format!(
+                "unexpected v2 client message tag {other:#04x}"
+            )))
+        }
+    };
+    r.r.expect_end("v2 header")?;
+    Ok(msg)
+}
+
+/// Decode a server→client message from a received frame, dispatching on
+/// the wire version byte: v1 frames take the owned decode path, v2
+/// frames decode zero-copy against the shared buffer.
+pub fn decode_server_frame(frame: &FrameBuf) -> Result<ServerMessage> {
+    match wire_version(frame.as_slice())? {
+        VERSION => decode_server_message(frame.as_slice()),
+        VERSION_V2 => decode_server_message_v2(frame),
+        other => Err(Error::Codec(format!("unsupported protocol version {other}"))),
+    }
+}
+
+/// Client→server counterpart of [`decode_server_frame`].
+pub fn decode_client_frame(frame: &FrameBuf) -> Result<ClientMessage> {
+    match wire_version(frame.as_slice())? {
+        VERSION => decode_client_message(frame.as_slice()),
+        VERSION_V2 => decode_client_message_v2(frame),
+        other => Err(Error::Codec(format!("unsupported protocol version {other}"))),
+    }
+}
+
+/// Alignment-checked zero-copy `&[u8]` → `&[f32]` cast. `None` on a
+/// misaligned region, a ragged length, or a big-endian host.
+fn f32_cast(region: &[u8]) -> Option<&[f32]> {
+    if cfg!(target_endian = "big") || region.len() % 4 != 0 {
+        return None;
+    }
+    if region.is_empty() {
+        return Some(&[]);
+    }
+    if region.as_ptr().align_offset(std::mem::align_of::<f32>()) != 0 {
+        return None;
+    }
+    // SAFETY: length, alignment and endianness checked above; f32
+    // accepts every bit pattern; the borrow keeps the bytes alive.
+    Some(unsafe { std::slice::from_raw_parts(region.as_ptr().cast::<f32>(), region.len() / 4) })
+}
+
+/// A borrowed f32 tensor: shape plus a `&[f32]` aliasing the encoded
+/// payload it was parsed from — no allocation, no copy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorView<'a> {
+    /// Tensor dimensions (row-major, like [`Tensor::shape`]).
+    pub shape: Vec<usize>,
+    /// Elements borrowed straight from the encoded payload.
+    pub data: &'a [f32],
+}
+
+/// Borrow every f32 tensor of a v2 tensor-bearing message straight out
+/// of `payload` — the allocation-free fast path used by the benches and
+/// the zero-copy proof tests. Errors on non-f32 entries or when the
+/// cast is impossible (misaligned buffer, big-endian host); real decode
+/// paths use [`decode_client_frame`], which falls back to copying.
+pub fn v2_f32_views(payload: &[u8]) -> Result<Vec<TensorView<'_>>> {
+    let parts = split_v2(payload)?;
+    let mut r = Reader::new(parts.header);
+    if parts.tag == TAG_FIT_RES || parts.tag == TAG_GET_PARAMETERS_RES {
+        let _ = r.status()?;
+    }
+    let entries = manifest(&mut r, parts.body.len())?;
+    entries
+        .into_iter()
+        .map(|e| {
+            if e.dtype != 0 {
+                return Err(Error::Codec(format!(
+                    "v2 view requires f32 tensors, got dtype {}",
+                    e.dtype
+                )));
+            }
+            let raw = &parts.body[e.byte_off..e.byte_off + e.byte_len];
+            let data = f32_cast(raw).ok_or_else(|| {
+                Error::Codec("frame buffer not 4-byte aligned for a zero-copy view".into())
+            })?;
+            Ok(TensorView { shape: e.shape, data })
+        })
+        .collect()
+}
+
+/// A round's broadcast message (the global-parameter `FitIns`) encoded
+/// **once per wire version** and shared across every dispatch as an
+/// `Arc` — the server-side half of the zero-copy story: N clients, one
+/// encode instead of N.
+#[derive(Debug)]
+pub struct BroadcastFrame {
+    msg: ServerMessage,
+    v1: OnceLock<Arc<Vec<u8>>>,
+    v2: OnceLock<Arc<Vec<u8>>>,
+}
+
+impl BroadcastFrame {
+    /// Wrap a message for shared dispatch (nothing is encoded yet).
+    pub fn new(msg: ServerMessage) -> Self {
+        BroadcastFrame { msg, v1: OnceLock::new(), v2: OnceLock::new() }
+    }
+
+    /// The wrapped message.
+    pub fn message(&self) -> &ServerMessage {
+        &self.msg
+    }
+
+    /// Encoded bytes for a negotiated wire version, encoded lazily on
+    /// first use and `Arc`-shared afterwards.
+    pub fn bytes(&self, wire: u8) -> Arc<Vec<u8>> {
+        let cell = if wire >= VERSION_V2 { &self.v2 } else { &self.v1 };
+        Arc::clone(cell.get_or_init(|| Arc::new(encode_server_message_v(&self.msg, wire))))
+    }
 }
 
 #[cfg(test)]
@@ -673,5 +1211,323 @@ mod tests {
         let msg = ClientMessage::Disconnect { reason: "done".into() };
         let buf = encode_client_message(&msg);
         assert!(decode_server_message(&buf).is_err());
+    }
+
+    // -- wire v2 ------------------------------------------------------------
+
+    fn frame(bytes: Vec<u8>) -> FrameBuf {
+        FrameBuf::new(bytes)
+    }
+
+    #[test]
+    fn hello_handshake_roundtrip_and_pinned() {
+        let hello = ClientMessage::Hello { max_version: 2 };
+        let buf = encode_client_message(&hello);
+        // always a v1 frame so any peer can read it
+        assert_eq!(buf, vec![0x0E, 0xF1, 0x01, 0x86, 0x02]);
+        assert_eq!(decode_client_message(&buf).unwrap(), hello);
+
+        let ack = ServerMessage::HelloAck { version: 2 };
+        let buf = encode_server_message(&ack);
+        assert_eq!(buf, vec![0x0E, 0xF1, 0x01, 0x05, 0x02]);
+        assert_eq!(decode_server_message(&buf).unwrap(), ack);
+    }
+
+    #[test]
+    fn negotiation_rule() {
+        assert_eq!(negotiate_version(0), 1); // nonsense greeting → v1
+        assert_eq!(negotiate_version(1), 1);
+        assert_eq!(negotiate_version(2), 2);
+        assert_eq!(negotiate_version(9), 2); // future client capped at ours
+    }
+
+    #[test]
+    fn v2_roundtrips_all_tensor_bearing_messages() {
+        let p = params(257); // odd count exercises inter-field alignment
+        let fit_ins = ServerMessage::FitIns(FitIns {
+            parameters: p.clone(),
+            config: config! { "epochs" => 2i64, "lr" => 0.05f64 },
+        });
+        let eval_ins = ServerMessage::EvaluateIns(EvaluateIns {
+            parameters: p.clone(),
+            config: config! { "batches" => 3i64 },
+        });
+        for msg in [fit_ins, eval_ins] {
+            let buf = encode_server_message_v(&msg, VERSION_V2);
+            assert_eq!(buf[2], VERSION_V2);
+            assert_eq!(decode_server_frame(&frame(buf)).unwrap(), msg);
+        }
+
+        let fit_res = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: p.clone(),
+            num_examples: 320,
+            metrics: config! { "steps" => 80i64, "truncated" => true },
+        });
+        let get_res = ClientMessage::GetParametersRes(GetParametersRes {
+            status: Status { code: StatusCode::FitError, message: "x".into() },
+            parameters: p,
+        });
+        for msg in [fit_res, get_res] {
+            let buf = encode_client_message_v(&msg, VERSION_V2);
+            assert_eq!(buf[2], VERSION_V2);
+            assert_eq!(decode_client_frame(&frame(buf)).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn v2_roundtrips_mixed_dtypes_and_padding() {
+        // f16 tensor with odd byte length forces an alignment gap in the
+        // body; two scalars force nonzero header padding.
+        let parameters = Parameters {
+            tensors: vec![
+                Parameters::from_flat(vec![0.5, -1.0, 2.0])
+                    .quantize_f16()
+                    .unwrap()
+                    .tensors
+                    .remove(0),
+                Tensor::i32(vec![2], vec![7, -8]).unwrap(),
+                Tensor::scalar_f32(1.5),
+                Tensor::scalar_f32(-2.5),
+            ],
+        };
+        let msg = ClientMessage::GetParametersRes(GetParametersRes {
+            status: Status::ok(),
+            parameters,
+        });
+        let buf = encode_client_message_v(&msg, VERSION_V2);
+        assert_eq!(decode_client_frame(&frame(buf)).unwrap(), msg);
+    }
+
+    #[test]
+    fn v2_empty_parameters_roundtrip() {
+        let msg = ClientMessage::GetParametersRes(GetParametersRes {
+            status: Status::ok(),
+            parameters: Parameters::default(),
+        });
+        let buf = encode_client_message_v(&msg, VERSION_V2);
+        assert_eq!(decode_client_frame(&frame(buf)).unwrap(), msg);
+    }
+
+    #[test]
+    fn non_tensor_messages_stay_v1_on_v2_connections() {
+        let reconnect = ServerMessage::Reconnect { seconds: 3 };
+        assert_eq!(
+            encode_server_message_v(&reconnect, VERSION_V2),
+            encode_server_message(&reconnect)
+        );
+        let register = ClientMessage::Register(ClientInfo {
+            client_id: "c".into(),
+            device: "d".into(),
+            os: "o".into(),
+            num_examples: 1,
+        });
+        assert_eq!(
+            encode_client_message_v(&register, VERSION_V2),
+            encode_client_message(&register)
+        );
+        let eval_res = ClientMessage::EvaluateRes(EvaluateRes {
+            status: Status::ok(),
+            loss: 0.5,
+            num_examples: 10,
+            metrics: ConfigMap::new(),
+        });
+        assert_eq!(
+            encode_client_message_v(&eval_res, VERSION_V2),
+            encode_client_message(&eval_res)
+        );
+    }
+
+    #[test]
+    fn v1_wire_version_encodes_v1() {
+        let msg = ServerMessage::FitIns(FitIns {
+            parameters: params(4),
+            config: ConfigMap::new(),
+        });
+        let buf = encode_server_message_v(&msg, VERSION);
+        assert_eq!(buf, encode_server_message(&msg));
+        // and v1 frames still decode through the frame dispatcher
+        assert_eq!(decode_server_frame(&frame(buf)).unwrap(), msg);
+    }
+
+    /// The v2 golden vector: like `wire_bytes_are_pinned`, these exact
+    /// bytes are the protocol (see `transport/PROTOCOL.md`).
+    #[test]
+    fn v2_wire_bytes_are_pinned() {
+        let msg = ServerMessage::FitIns(FitIns {
+            parameters: Parameters::from_flat(vec![1.0]),
+            config: ConfigMap::new(),
+        });
+        let buf = encode_server_message_v(&msg, VERSION_V2);
+        assert_eq!(
+            buf,
+            vec![
+                0x0E, 0xF1, // magic 0xF10E LE
+                0x02, // version 2
+                0x02, // TAG_FIT_INS
+                0x14, 0x00, 0x00, 0x00, // header_len = 20
+                // header: manifest
+                0x01, 0x00, // tensor count u16
+                0x00, // dtype f32
+                0x01, // rank 1
+                0x01, 0x00, 0x00, 0x00, // dim 1
+                0x00, 0x00, 0x00, 0x00, // byte_off 0
+                0x04, 0x00, 0x00, 0x00, // byte_len 4
+                // header: empty config map
+                0x00, 0x00, 0x00, 0x00,
+                // (header_len % 4 == 0 → no padding)
+                // body: raw f32 LE
+                0x00, 0x00, 0x80, 0x3F, // 1.0f32
+            ]
+        );
+    }
+
+    #[test]
+    fn v2_decode_borrows_frame_buffer() {
+        let msg = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: params(64),
+            num_examples: 10,
+            metrics: ConfigMap::new(),
+        });
+        let f = frame(encode_client_message_v(&msg, VERSION_V2));
+        let base = f.as_slice().as_ptr() as usize;
+        let decoded = match decode_client_frame(&f).unwrap() {
+            ClientMessage::FitRes(res) => res,
+            other => panic!("wrong message: {other:?}"),
+        };
+        let view = decoded.parameters.to_flat().unwrap();
+        let addr = view.as_ptr() as usize;
+        // On an aligned buffer (Vec allocations are ≥ 8-aligned in
+        // practice) the decoded slice aliases the frame bytes. If the
+        // allocator ever hands back a misaligned buffer the decoder
+        // copies instead — then this test is vacuous, not wrong.
+        if base % 4 == 0 {
+            assert!(
+                addr >= base && addr + view.len() * 4 <= base + f.len(),
+                "decoded f32 slice must alias the frame buffer"
+            );
+        }
+    }
+
+    #[test]
+    fn v2_views_borrow_payload() {
+        let msg = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: params(32),
+            num_examples: 1,
+            metrics: ConfigMap::new(),
+        });
+        let buf = encode_client_message_v(&msg, VERSION_V2);
+        if buf.as_ptr() as usize % 4 != 0 {
+            return; // misaligned allocation: cast path unavailable
+        }
+        let views = v2_f32_views(&buf).unwrap();
+        assert_eq!(views.len(), 1);
+        assert_eq!(views[0].shape, vec![32]);
+        let expect: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        assert_eq!(views[0].data, expect.as_slice());
+        let base = buf.as_ptr() as usize;
+        let addr = views[0].data.as_ptr() as usize;
+        assert!(addr >= base && addr + 32 * 4 <= base + buf.len());
+    }
+
+    #[test]
+    fn v2_malformed_frames_rejected() {
+        let msg = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: params(8),
+            num_examples: 1,
+            metrics: ConfigMap::new(),
+        });
+        let good = encode_client_message_v(&msg, VERSION_V2);
+        assert!(decode_client_frame(&frame(good.clone())).is_ok());
+
+        // bad version byte
+        let mut b = good.clone();
+        b[2] = 3;
+        assert!(decode_client_frame(&frame(b)).is_err());
+
+        // header_len overruns the message
+        let mut b = good.clone();
+        b[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_client_frame(&frame(b)).is_err());
+
+        // truncation anywhere must fail
+        for cut in 1..good.len() {
+            assert!(
+                decode_client_frame(&frame(good[..cut].to_vec())).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+
+        // trailing body bytes the manifest does not cover
+        let mut b = good.clone();
+        b.extend_from_slice(&[0, 0, 0, 0]);
+        assert!(decode_client_frame(&frame(b)).is_err());
+
+        // manifest region pushed out of body bounds: the status is
+        // "" → status(1B code + 4B len) = 5 bytes, then count u16,
+        // then entry dtype(1) rank(1) dims(4) byte_off at +13..+17.
+        let mut b = good.clone();
+        let off_pos = 8 + 5 + 2 + 1 + 1 + 4;
+        b[off_pos..off_pos + 4].copy_from_slice(&1024u32.to_le_bytes());
+        assert!(decode_client_frame(&frame(b)).is_err());
+
+        // misaligned tensor offset
+        let mut b = good.clone();
+        b[off_pos..off_pos + 4].copy_from_slice(&2u32.to_le_bytes());
+        assert!(decode_client_frame(&frame(b)).is_err());
+
+        // unknown dtype
+        let mut b = good;
+        b[8 + 5 + 2] = 9;
+        assert!(decode_client_frame(&frame(b)).is_err());
+
+        // nonzero header padding: craft a frame with 2 scalar tensors
+        // (header_len = 5 + 2 + 2*10 + 8 + 4 = 39 → 1 pad byte)
+        let two = ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: Parameters {
+                tensors: vec![Tensor::scalar_f32(1.0), Tensor::scalar_f32(2.0)],
+            },
+            num_examples: 1,
+            metrics: ConfigMap::new(),
+        });
+        let buf = encode_client_message_v(&two, VERSION_V2);
+        let header_len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+        let pad = (4 - header_len % 4) % 4;
+        assert!(pad > 0, "test frame must actually have header padding");
+        assert_eq!(decode_client_frame(&frame(buf.clone())).unwrap(), two);
+        let mut b = buf;
+        b[8 + header_len] = 0xFF;
+        assert!(decode_client_frame(&frame(b)).is_err());
+    }
+
+    #[test]
+    fn v2_server_client_tags_disjoint() {
+        let msg = ServerMessage::FitIns(FitIns {
+            parameters: params(4),
+            config: ConfigMap::new(),
+        });
+        let buf = encode_server_message_v(&msg, VERSION_V2);
+        assert!(decode_client_frame(&frame(buf)).is_err());
+    }
+
+    #[test]
+    fn broadcast_frame_encodes_once_per_version() {
+        let msg = ServerMessage::FitIns(FitIns {
+            parameters: params(128),
+            config: config! { "epochs" => 1i64 },
+        });
+        let bc = BroadcastFrame::new(msg.clone());
+        let a = bc.bytes(VERSION_V2);
+        let b = bc.bytes(VERSION_V2);
+        assert!(Arc::ptr_eq(&a, &b), "same Arc, one encode");
+        assert_eq!(*a, encode_server_message_v(&msg, VERSION_V2));
+        let v1 = bc.bytes(VERSION);
+        assert_eq!(*v1, encode_server_message(&msg));
+        assert_eq!(decode_server_frame(&frame((*a).clone())).unwrap(), msg);
+        assert_eq!(bc.message(), &msg);
     }
 }

@@ -105,12 +105,22 @@ pub enum ServerMessage {
     EvaluateIns(EvaluateIns),
     /// Ask the client to disconnect and reconnect after `seconds`.
     Reconnect { seconds: u64 },
+    /// Version-negotiation reply: the highest wire version the server
+    /// and the greeting client mutually support. Always encoded as a
+    /// v1 frame so any peer can read it (see `transport/PROTOCOL.md`).
+    HelloAck { version: u8 },
 }
 
 /// All messages a client can send.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ClientMessage {
-    /// First message on a fresh connection.
+    /// Optional version-negotiation greeting, sent *before* `Register`
+    /// by v2-capable clients: the highest wire version the client
+    /// speaks. Always encoded as a v1 frame. Legacy peers skip straight
+    /// to `Register` and stay on wire v1.
+    Hello { max_version: u8 },
+    /// First message on a fresh connection (after the optional
+    /// `Hello`/`HelloAck` exchange).
     Register(ClientInfo),
     GetParametersRes(GetParametersRes),
     FitRes(FitRes),

@@ -14,9 +14,11 @@ pub mod message;
 pub mod scalar;
 pub mod tensor;
 
-pub use codec::{decode_client_message, decode_server_message, encode_client_message,
-                encode_server_message};
+pub use codec::{decode_client_frame, decode_client_message, decode_server_frame,
+                decode_server_message, encode_client_message, encode_client_message_v,
+                encode_server_message, encode_server_message_v, negotiate_version, v2_f32_views,
+                wire_version, BroadcastFrame, TensorView, MAX_WIRE_VERSION, VERSION_V2};
 pub use message::{ClientInfo, ClientMessage, EvaluateIns, EvaluateRes, FitIns, FitRes,
                   GetParametersIns, GetParametersRes, ServerMessage, Status, StatusCode};
 pub use scalar::{ConfigMap, Scalar};
-pub use tensor::{Parameters, Tensor, TensorData};
+pub use tensor::{Parameters, SharedF32, Tensor, TensorData};

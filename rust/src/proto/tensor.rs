@@ -1,27 +1,116 @@
 //! Shaped tensors and the opaque `Parameters` container shipped between
 //! server and clients.
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
+
+/// An f32 tensor payload *borrowed* out of a shared receive buffer —
+/// the zero-copy wire-protocol-v2 decode form (see
+/// `transport/PROTOCOL.md`).
+///
+/// Invariants, established by [`SharedF32::new`] and relied on by the
+/// unsafe cast in [`SharedF32::as_slice`]:
+/// * the region `[off, off + 4 * count)` is in bounds of `buf`;
+/// * the region's actual address is 4-byte aligned (or `count == 0`);
+/// * the target is little-endian, so the raw LE wire bytes *are* the
+///   in-memory `f32` representation. On big-endian targets `new`
+///   refuses and the decoder falls back to the copying path.
+///
+/// Cloning bumps the `Arc` refcount; the frame allocation lives until
+/// the last view drops.
+#[derive(Debug, Clone)]
+pub struct SharedF32 {
+    buf: Arc<Vec<u8>>,
+    /// Byte offset of the first element within `buf`.
+    off: usize,
+    /// Element count.
+    count: usize,
+}
+
+impl SharedF32 {
+    /// Wrap `count` f32 elements at `byte_off` in `buf`, or `None` when
+    /// the region is out of bounds, misaligned, or the target is
+    /// big-endian (callers then copy instead — correctness never
+    /// depends on taking the zero-copy path).
+    pub fn new(buf: Arc<Vec<u8>>, byte_off: usize, count: usize) -> Option<Self> {
+        if cfg!(target_endian = "big") {
+            return None;
+        }
+        let len_bytes = count.checked_mul(4)?;
+        let end = byte_off.checked_add(len_bytes)?;
+        if end > buf.len() {
+            return None;
+        }
+        if count > 0
+            && buf[byte_off..].as_ptr().align_offset(std::mem::align_of::<f32>()) != 0
+        {
+            return None;
+        }
+        Some(SharedF32 { buf, off: byte_off, count })
+    }
+
+    /// The elements, borrowed straight from the shared buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        if self.count == 0 {
+            return &[];
+        }
+        // SAFETY: bounds, alignment and endianness guaranteed by `new`;
+        // f32 accepts every bit pattern; the Arc'd buffer outlives the
+        // borrow of self.
+        unsafe {
+            std::slice::from_raw_parts(
+                self.buf.as_ptr().add(self.off) as *const f32,
+                self.count,
+            )
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    /// Whether the view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
 
 /// Element storage for a [`Tensor`]. The FL payloads in this system are
 /// f32 parameters and i32 labels; `F16` is the quantized wire form used
 /// by the communication-compression path (half the bytes per round). The
 /// enum keeps the wire format honest about dtypes instead of punning
-/// everything through bytes.
-#[derive(Debug, Clone, PartialEq)]
+/// everything through bytes. `F32Shared` is float32 data borrowed from
+/// a shared receive buffer (the protocol-v2 zero-copy decode form) —
+/// semantically identical to `F32`, so equality compares the two
+/// variants by element values.
+#[derive(Debug, Clone)]
 pub enum TensorData {
     F32(Vec<f32>),
     I32(Vec<i32>),
     /// IEEE binary16 bit patterns (see `util::f16`).
     F16(Vec<u16>),
+    /// float32 elements borrowed from a shared receive buffer.
+    F32Shared(SharedF32),
 }
 
 impl TensorData {
+    /// The float32 view, if this is float32 data in either storage form.
+    fn f32_slice(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            TensorData::F32Shared(v) => Some(v.as_slice()),
+            _ => None,
+        }
+    }
+
     pub fn len(&self) -> usize {
         match self {
             TensorData::F32(v) => v.len(),
             TensorData::I32(v) => v.len(),
             TensorData::F16(v) => v.len(),
+            TensorData::F32Shared(v) => v.len(),
         }
     }
 
@@ -31,7 +120,7 @@ impl TensorData {
 
     pub fn dtype_name(&self) -> &'static str {
         match self {
-            TensorData::F32(_) => "float32",
+            TensorData::F32(_) | TensorData::F32Shared(_) => "float32",
             TensorData::I32(_) => "int32",
             TensorData::F16(_) => "float16",
         }
@@ -40,8 +129,24 @@ impl TensorData {
     /// Bytes per element on the wire.
     pub fn element_bytes(&self) -> usize {
         match self {
-            TensorData::F32(_) | TensorData::I32(_) => 4,
+            TensorData::F32(_) | TensorData::I32(_) | TensorData::F32Shared(_) => 4,
             TensorData::F16(_) => 2,
+        }
+    }
+}
+
+/// `F32` and `F32Shared` are the same logical dtype in two storage
+/// forms, so they compare equal by element values — a v2 zero-copy
+/// decode of an encoded message equals the original owned message.
+impl PartialEq for TensorData {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (TensorData::I32(a), TensorData::I32(b)) => a == b,
+            (TensorData::F16(a), TensorData::F16(b)) => a == b,
+            (a, b) => match (a.f32_slice(), b.f32_slice()) {
+                (Some(x), Some(y)) => x == y,
+                _ => false,
+            },
         }
     }
 }
@@ -100,6 +205,10 @@ impl Tensor {
                 shape: self.shape.clone(),
                 data: TensorData::F16(crate::util::f16::quantize(v)),
             }),
+            TensorData::F32Shared(v) => Ok(Tensor {
+                shape: self.shape.clone(),
+                data: TensorData::F16(crate::util::f16::quantize(v.as_slice())),
+            }),
             TensorData::F16(_) => Ok(self.clone()),
             other => Err(Error::Protocol(format!(
                 "cannot f16-quantize {} tensor",
@@ -112,6 +221,7 @@ impl Tensor {
     pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
         match &self.data {
             TensorData::F32(v) => Ok(v.clone()),
+            TensorData::F32Shared(v) => Ok(v.as_slice().to_vec()),
             TensorData::F16(v) => Ok(crate::util::f16::dequantize(v)),
             other => Err(Error::Protocol(format!(
                 "expected float tensor, got {}",
@@ -120,10 +230,13 @@ impl Tensor {
         }
     }
 
-    /// Borrow the f32 payload or fail with a protocol error.
+    /// Borrow the f32 payload or fail with a protocol error. For
+    /// `F32Shared` tensors the borrow points straight into the shared
+    /// receive buffer — no copy.
     pub fn as_f32(&self) -> Result<&[f32]> {
         match &self.data {
             TensorData::F32(v) => Ok(v),
+            TensorData::F32Shared(v) => Ok(v.as_slice()),
             other => Err(Error::Protocol(format!(
                 "expected float32 tensor, got {}",
                 other.dtype_name()
@@ -143,9 +256,12 @@ impl Tensor {
     }
 
     /// Consume into the f32 payload or fail with a protocol error.
+    /// `F32Shared` tensors materialize here (this is the one owned-exit
+    /// point; the fold path stays on [`Tensor::as_f32`]).
     pub fn into_f32(self) -> Result<Vec<f32>> {
         match self.data {
             TensorData::F32(v) => Ok(v),
+            TensorData::F32Shared(v) => Ok(v.as_slice().to_vec()),
             other => Err(Error::Protocol(format!(
                 "expected float32 tensor, got {}",
                 other.dtype_name()
@@ -275,5 +391,62 @@ mod tests {
         let t = Tensor::i32(vec![2], vec![1, 2]).unwrap();
         assert!(t.quantize_f16().is_err());
         assert!(t.to_f32_vec().is_err());
+    }
+
+    /// LE bytes of `vals` wrapped as a SharedF32 view (skips on the
+    /// unlikely misaligned allocation — the copy-fallback case).
+    fn shared(vals: &[f32]) -> Option<SharedF32> {
+        let mut bytes = Vec::with_capacity(vals.len() * 4);
+        for v in vals {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        SharedF32::new(Arc::new(bytes), 0, vals.len())
+    }
+
+    #[test]
+    fn shared_f32_view_borrows_without_copy() {
+        let Some(s) = shared(&[1.0, -2.5, 3.25]) else { return };
+        assert_eq!(s.as_slice(), &[1.0, -2.5, 3.25]);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+        // the view aliases the buffer, it does not own a copy
+        let c = s.clone();
+        assert_eq!(c.as_slice().as_ptr(), s.as_slice().as_ptr());
+    }
+
+    #[test]
+    fn shared_f32_rejects_bad_regions() {
+        let buf = Arc::new(vec![0u8; 16]);
+        // out of bounds
+        assert!(SharedF32::new(Arc::clone(&buf), 4, 4).is_none());
+        assert!(SharedF32::new(Arc::clone(&buf), usize::MAX, 1).is_none());
+        // count overflow
+        assert!(SharedF32::new(Arc::clone(&buf), 0, usize::MAX / 2).is_none());
+        // empty views are always fine, any offset in bounds
+        let empty = SharedF32::new(Arc::clone(&buf), 16, 0).unwrap();
+        assert_eq!(empty.as_slice(), &[] as &[f32]);
+    }
+
+    #[test]
+    fn owned_and_shared_f32_compare_equal_by_value() {
+        let Some(s) = shared(&[1.0, 2.0]) else { return };
+        let owned = TensorData::F32(vec![1.0, 2.0]);
+        let view = TensorData::F32Shared(s);
+        assert_eq!(owned, view);
+        assert_eq!(view, owned);
+        assert_eq!(view.dtype_name(), "float32");
+        assert_eq!(view.element_bytes(), 4);
+        assert_ne!(TensorData::F32(vec![1.0, 2.5]), view);
+        assert_ne!(TensorData::I32(vec![1, 2]), view);
+        // full-tensor surface: as_f32 / to_f32_vec / into_f32 / quantize
+        let t = Tensor { shape: vec![2], data: view };
+        assert_eq!(t.as_f32().unwrap(), &[1.0, 2.0]);
+        assert_eq!(t.to_f32_vec().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(t.byte_len(), 8);
+        assert!(t.quantize_f16().is_ok());
+        assert_eq!(t.clone().into_f32().unwrap(), vec![1.0, 2.0]);
+        // and the Parameters fold entry point sees the borrowed slice
+        let p = Parameters { tensors: vec![t] };
+        assert_eq!(p.to_flat().unwrap(), &[1.0, 2.0]);
     }
 }

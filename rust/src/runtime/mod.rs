@@ -391,6 +391,9 @@ mod exec {
         // Host-to-device transfer with Rust-side ownership (freed on drop).
         match &t.data {
             TensorData::F32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
+            TensorData::F32Shared(v) => {
+                Ok(client.buffer_from_host_buffer(v.as_slice(), &t.shape, None)?)
+            }
             TensorData::I32(v) => Ok(client.buffer_from_host_buffer(v, &t.shape, None)?),
             TensorData::F16(_) => {
                 // f16 is a wire-compression format only; artifacts take f32.

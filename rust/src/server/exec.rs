@@ -56,6 +56,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -67,7 +68,9 @@ use crate::persist::{
     load_server_checkpoint, CheckpointStore, ClientStatRecord, ServerCheckpoint,
 };
 use crate::proto::scalar::ConfigExt;
-use crate::proto::{EvaluateRes, FitIns, FitRes, Parameters, Scalar};
+use crate::proto::{
+    BroadcastFrame, EvaluateRes, FitIns, FitRes, Parameters, Scalar, ServerMessage,
+};
 use crate::sched::availability::{AvailabilityIndex, Cycle};
 use crate::sched::policy::{Candidate, SelectionContext, SelectionPolicy};
 use crate::sim::cost::CostModel;
@@ -270,6 +273,17 @@ fn spawn_fit(
     std::thread::spawn(move || proxy.fit(ins, timeout))
 }
 
+/// Spawn one fit exchange from a shared pre-encoded broadcast frame:
+/// the `FitIns` serialization cost was paid once per round and wire
+/// version ([`BroadcastFrame::bytes`]), not once per client.
+fn spawn_fit_prepared(
+    proxy: Arc<ClientProxy>,
+    frame: Arc<BroadcastFrame>,
+    timeout: Duration,
+) -> JoinHandle<Result<FitRes>> {
+    std::thread::spawn(move || proxy.fit_prepared(&frame, timeout))
+}
+
 /// Accumulates settled exchanges between two flushes (streaming) or
 /// within one round (barrier), and turns into the per-record stats.
 #[derive(Default)]
@@ -381,6 +395,18 @@ impl ExecCore {
     /// Whole-run accounting (valid after [`ExecCore::run`] returns).
     pub fn stats(&self) -> AsyncStats {
         self.stats
+    }
+
+    /// True when the external stop flag ([`ServerConfig::stop`]) asks
+    /// the loop to wind down. Checked at round boundaries (barrier) and
+    /// event boundaries (streaming), so every stop still runs the drain
+    /// and the accounting identity holds.
+    fn stop_requested(&self) -> bool {
+        self.config
+            .stop
+            .as_ref()
+            .map(|flag| flag.load(Ordering::Relaxed))
+            .unwrap_or(false)
     }
 
     /// Run from `initial` parameters until `config.num_rounds` rounds /
@@ -688,6 +714,10 @@ impl ExecCore {
         // On resume the restored history already covers rounds 1..=k.
         let start = history.rounds.len() as u64;
         for round in (start + 1)..=self.config.num_rounds {
+            if self.stop_requested() {
+                log::info("stop flag set; ending barrier loop");
+                break;
+            }
             let record = self.barrier_round(round, params)?;
             log::info(&format!(
                 "round {round:>3}: acc={:.4} loss={:.4} t={:.1}s (cum {:.1} min) E={:.1} kJ (cum {:.1} kJ){}",
@@ -782,6 +812,14 @@ impl ExecCore {
             }
         }
         let timeout = self.config.round_timeout;
+        // The usual plan is uniform — every client gets the same
+        // parameters and config — so the round's FitIns is encoded once
+        // per wire version and the shared frame is broadcast; a plan
+        // entry that differs from the first falls back to the
+        // per-client encode path.
+        let shared: Option<(&FitIns, Arc<BroadcastFrame>)> = plan.first().map(|(_, ins)| {
+            (ins, Arc::new(BroadcastFrame::new(ServerMessage::FitIns(ins.clone()))))
+        });
         let tasks: Vec<(usize, usize, u64, JoinHandle<Result<FitRes>>)> = plan
             .iter()
             .map(|(idx, ins)| {
@@ -798,12 +836,13 @@ impl ExecCore {
                     energy_j: 0.0,
                     bytes_down: bytes_down as u64,
                 });
-                (
-                    *idx,
-                    bytes_down,
-                    seq,
-                    spawn_fit(Arc::clone(&proxies[*idx]), ins.clone(), timeout),
-                )
+                let join = match &shared {
+                    Some((first, frame)) if ins == *first => {
+                        spawn_fit_prepared(Arc::clone(&proxies[*idx]), Arc::clone(frame), timeout)
+                    }
+                    _ => spawn_fit(Arc::clone(&proxies[*idx]), ins.clone(), timeout),
+                };
+                (*idx, bytes_down, seq, join)
             })
             .collect();
 
@@ -1096,6 +1135,10 @@ impl ExecCore {
         // through to the drain below (keeping the AsyncStats identity)
         // and then to ExecCore::run's shutdown sweep.
         let loop_result: Result<()> = loop {
+            if self.stop_requested() {
+                log::info("stop flag set; ending streaming loop");
+                break Ok(());
+            }
             let Some(Reverse(ev)) = heap.pop() else {
                 // Nothing in flight: new clients may have registered.
                 self.top_up(

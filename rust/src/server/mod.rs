@@ -88,6 +88,10 @@ pub struct ServerConfig {
     /// restarts fresh; the FedBuff buffer is empty at every flush
     /// boundary by construction).
     pub resume_from: Option<std::path::PathBuf>,
+    /// External stop flag: when set, the loop exits cleanly at the next
+    /// round/flush boundary (used by `flowrs loadgen` to bound a run by
+    /// wall-clock duration). `None` = run to `num_rounds`.
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl Default for ServerConfig {
@@ -106,6 +110,7 @@ impl Default for ServerConfig {
             checkpoint_dir: None,
             checkpoint_every_rounds: 0,
             resume_from: None,
+            stop: None,
         }
     }
 }
@@ -167,8 +172,13 @@ impl Server {
 }
 
 /// Serve TCP registrations in a background thread until `stop` is set.
-/// Each accepted connection must open with a `Register` message; the
-/// resulting proxy is added to the manager.
+///
+/// Each accepted connection either opens with a `Hello` (version
+/// negotiation, answered with `HelloAck` carrying the highest mutually
+/// supported wire version — see `transport/PROTOCOL.md`) followed by
+/// `Register`, or — legacy v1 peers — with a bare `Register` and stays
+/// on wire v1. The resulting proxy is added to the manager with its
+/// negotiated version.
 pub fn serve_registrations(
     listener: TcpTransportListener,
     manager: Arc<ClientManager>,
@@ -183,33 +193,46 @@ pub fn serve_registrations(
             }
             match std_listener.accept() {
                 Ok(mut conn) => {
-                    match conn.recv_timeout(Duration::from_secs(5)) {
-                        Ok(frame) => match crate::proto::decode_client_message(&frame) {
-                            Ok(ClientMessage::Register(info)) => {
-                                match crate::device::profiles::by_name(&info.device) {
-                                    Ok(device) => {
-                                        log::info(&format!(
-                                            "registered client {} ({})",
-                                            info.client_id, info.device
-                                        ));
-                                        manager.register(Arc::new(ClientProxy::new(
-                                            ClientHandle {
-                                                id: info.client_id,
-                                                device,
-                                                num_examples: info.num_examples,
-                                            },
-                                            Connection::Tcp(conn),
-                                        )));
-                                    }
-                                    Err(e) => log::warn(&format!("rejecting client: {e}")),
+                    let mut wire = crate::proto::codec::VERSION;
+                    let mut first = conn
+                        .recv_timeout(Duration::from_secs(5))
+                        .and_then(|frame| crate::proto::decode_client_message(&frame));
+                    if let Ok(ClientMessage::Hello { max_version }) = first {
+                        wire = crate::proto::negotiate_version(max_version);
+                        let ack = crate::proto::encode_server_message(
+                            &crate::proto::ServerMessage::HelloAck { version: wire },
+                        );
+                        first = conn.send(&ack).and_then(|()| {
+                            conn.recv_timeout(Duration::from_secs(5)).and_then(|frame| {
+                                crate::proto::decode_client_message(&frame)
+                            })
+                        });
+                    }
+                    match first {
+                        Ok(ClientMessage::Register(info)) => {
+                            match crate::device::profiles::by_name(&info.device) {
+                                Ok(device) => {
+                                    log::info(&format!(
+                                        "registered client {} ({}, wire v{wire})",
+                                        info.client_id, info.device
+                                    ));
+                                    manager.register(Arc::new(ClientProxy::with_wire(
+                                        ClientHandle {
+                                            id: info.client_id,
+                                            device,
+                                            num_examples: info.num_examples,
+                                        },
+                                        Connection::Tcp(conn),
+                                        wire,
+                                    )));
                                 }
+                                Err(e) => log::warn(&format!("rejecting client: {e}")),
                             }
-                            Ok(other) => log::warn(&format!(
-                                "expected Register as first message, got {other:?}"
-                            )),
-                            Err(e) => log::warn(&format!("bad registration frame: {e}")),
-                        },
-                        Err(e) => log::warn(&format!("registration read failed: {e}")),
+                        }
+                        Ok(other) => log::warn(&format!(
+                            "expected Register as first message, got {other:?}"
+                        )),
+                        Err(e) => log::warn(&format!("registration failed: {e}")),
                     }
                 }
                 Err(e) => {
@@ -325,6 +348,9 @@ pub(crate) mod tests {
                                 });
                                 return;
                             }
+                            // negotiation happens before registration;
+                            // a stray ack is ignorable
+                            ServerMessage::HelloAck { .. } => {}
                         }
                     }
                 })

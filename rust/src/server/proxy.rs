@@ -6,12 +6,13 @@
 //! messages").
 
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::error::{Error, Result};
+use crate::obs;
 use crate::proto::{
-    ClientMessage, EvaluateIns, EvaluateRes, FitIns, FitRes, GetParametersIns, GetParametersRes,
-    ServerMessage,
+    BroadcastFrame, ClientMessage, EvaluateIns, EvaluateRes, FitIns, FitRes, GetParametersIns,
+    GetParametersRes, ServerMessage,
 };
 use crate::strategy::ClientHandle;
 use crate::transport::Connection;
@@ -20,11 +21,33 @@ use crate::transport::Connection;
 pub struct ClientProxy {
     pub handle: ClientHandle,
     conn: Mutex<Connection>,
+    /// Negotiated wire version (1 unless the client sent a `Hello`).
+    wire: u8,
 }
 
 impl ClientProxy {
     pub fn new(handle: ClientHandle, conn: Connection) -> Self {
-        ClientProxy { handle, conn: Mutex::new(conn) }
+        Self::with_wire(handle, conn, crate::proto::codec::VERSION)
+    }
+
+    /// Build a proxy speaking a negotiated wire version (see
+    /// `transport/PROTOCOL.md`).
+    pub fn with_wire(handle: ClientHandle, conn: Connection, wire: u8) -> Self {
+        ClientProxy { handle, conn: Mutex::new(conn), wire }
+    }
+
+    /// The negotiated wire version this proxy encodes with.
+    pub fn wire(&self) -> u8 {
+        self.wire
+    }
+
+    /// Record one request/response round trip into the live histogram
+    /// (`transport_rtt_s`); with near-zero client compute this is frame
+    /// RTT, which is what `flowrs loadgen` reports.
+    fn record_rtt(started: Instant) {
+        obs::registry()
+            .histogram("transport_rtt_s")
+            .record(started.elapsed().as_secs_f64());
     }
 
     fn exchange(&self, msg: &ServerMessage, timeout: Duration) -> Result<ClientMessage> {
@@ -32,8 +55,11 @@ impl ClientProxy {
             .conn
             .lock()
             .map_err(|_| Error::Transport("proxy connection poisoned".into()))?;
-        conn.send_server_message(msg)?;
-        conn.recv_client_message_timeout(timeout)
+        let started = Instant::now();
+        conn.send_server_message_v(msg, self.wire)?;
+        let res = conn.recv_client_message_timeout(timeout)?;
+        Self::record_rtt(started);
+        Ok(res)
     }
 
     /// Ask for the client's current parameters.
@@ -54,6 +80,29 @@ impl ClientProxy {
     /// Run a round of local training on the client.
     pub fn fit(&self, ins: FitIns, timeout: Duration) -> Result<FitRes> {
         match self.exchange(&ServerMessage::FitIns(ins), timeout)? {
+            ClientMessage::FitRes(res) => Ok(res),
+            other => Err(Error::Protocol(format!(
+                "client {} answered fit with {other:?}",
+                self.handle.id
+            ))),
+        }
+    }
+
+    /// Run a round of local training from a pre-encoded broadcast
+    /// frame: the `FitIns` encode cost is paid once per round and wire
+    /// version ([`BroadcastFrame::bytes`]), not once per client.
+    pub fn fit_prepared(&self, frame: &BroadcastFrame, timeout: Duration) -> Result<FitRes> {
+        let bytes = frame.bytes(self.wire);
+        let mut conn = self
+            .conn
+            .lock()
+            .map_err(|_| Error::Transport("proxy connection poisoned".into()))?;
+        let started = Instant::now();
+        conn.send(&bytes)?;
+        let res = conn.recv_client_message_timeout(timeout)?;
+        Self::record_rtt(started);
+        drop(conn);
+        match res {
             ClientMessage::FitRes(res) => Ok(res),
             other => Err(Error::Protocol(format!(
                 "client {} answered fit with {other:?}",
@@ -131,6 +180,48 @@ mod tests {
             )
             .unwrap();
         assert_eq!(res.num_examples, 10);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn v2_proxy_fit_prepared_roundtrip() {
+        use crate::proto::codec::VERSION_V2;
+        let (server_end, client_end) = inproc::pair();
+        let handle = ClientHandle {
+            id: "c1".into(),
+            device: profiles::by_name("pixel4").unwrap(),
+            num_examples: 100,
+        };
+        let proxy =
+            ClientProxy::with_wire(handle, Connection::InProc(server_end), VERSION_V2);
+        assert_eq!(proxy.wire(), VERSION_V2);
+        let mut client = Connection::InProc(client_end);
+        let t = std::thread::spawn(move || {
+            // the broadcast frame arrives as a v2 frame and decodes
+            // transparently through the version dispatcher
+            let msg = client.recv_server_message().unwrap();
+            let ServerMessage::FitIns(ins) = msg else {
+                panic!("expected FitIns")
+            };
+            assert_eq!(ins.parameters.to_flat().unwrap(), &[1.0, 2.0]);
+            client
+                .send_client_message_v(
+                    &ClientMessage::FitRes(FitRes {
+                        status: Status::ok(),
+                        parameters: Parameters::from_flat(vec![3.0]),
+                        num_examples: 5,
+                        metrics: Default::default(),
+                    }),
+                    VERSION_V2,
+                )
+                .unwrap();
+        });
+        let frame = BroadcastFrame::new(ServerMessage::FitIns(FitIns {
+            parameters: Parameters::from_flat(vec![1.0, 2.0]),
+            config: Default::default(),
+        }));
+        let res = proxy.fit_prepared(&frame, Duration::from_secs(1)).unwrap();
+        assert_eq!(res.parameters.to_flat().unwrap(), &[3.0]);
         t.join().unwrap();
     }
 

@@ -8,7 +8,7 @@
 //! this system ships (the CIFAR CNN is ~0.5 MiB of f32), but small enough
 //! that a corrupted length prefix cannot OOM the server.
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 
 use crate::error::{Error, Result};
 use crate::obs;
@@ -17,10 +17,38 @@ use crate::util::bytes::{LeReader, LeWriter};
 /// Upper bound on a single frame's payload.
 pub const MAX_FRAME: usize = 256 * 1024 * 1024;
 
-/// Write one frame (length prefix + payload) and flush. The prefix
-/// goes through the shared [`crate::util::bytes`] codec, so all three
-/// byte formats (wire, checkpoint, frame) agree on one little-endian
-/// implementation.
+/// `write_all` over two buffers, coalescing prefix + payload into a
+/// single vectored syscall per iteration (std's `write_all_vectored`
+/// is unstable). In-memory writers (`Vec<u8>`) concatenate the slices,
+/// so the output bytes are identical to two sequential `write_all`s.
+fn write_all_vectored<W: Write>(w: &mut W, mut a: &[u8], mut b: &[u8]) -> std::io::Result<()> {
+    while !a.is_empty() || !b.is_empty() {
+        let n = match w.write_vectored(&[IoSlice::new(a), IoSlice::new(b)]) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "failed to write whole frame",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        if n >= a.len() {
+            b = &b[n - a.len()..];
+            a = &[];
+        } else {
+            a = &a[n..];
+        }
+    }
+    Ok(())
+}
+
+/// Write one frame (length prefix + payload) and flush — one vectored
+/// write instead of two sequential ones, so a whole frame is a single
+/// syscall on an unbuffered socket. The prefix goes through the shared
+/// [`crate::util::bytes`] codec, so all three byte formats (wire,
+/// checkpoint, frame) agree on one little-endian implementation.
 pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     if payload.len() > MAX_FRAME {
         return Err(Error::Transport(format!(
@@ -30,8 +58,7 @@ pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<()> {
     }
     let mut prefix = LeWriter::with_capacity(4);
     prefix.u32(payload.len() as u32);
-    w.write_all(prefix.as_slice())?;
-    w.write_all(payload)?;
+    write_all_vectored(w, prefix.as_slice(), payload)?;
     w.flush()?;
     let total = (payload.len() + 4) as u64;
     obs::registry().counter("transport_frames_sent_total").inc();
@@ -88,6 +115,39 @@ mod tests {
         let mut buf = Vec::new();
         write_frame(&mut buf, b"abc").unwrap();
         assert_eq!(buf, vec![3, 0, 0, 0, b'a', b'b', b'c']);
+    }
+
+    /// A writer that accepts one byte per call: exercises the vectored
+    /// retry loop's resume-mid-prefix and resume-mid-payload paths.
+    struct Dribble(Vec<u8>);
+
+    impl std::io::Write for Dribble {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(1);
+            self.0.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+        fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+            match bufs.iter().find(|b| !b.is_empty()) {
+                Some(b) => {
+                    self.0.push(b[0]);
+                    Ok(1)
+                }
+                None => Ok(0),
+            }
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn partial_vectored_writes_produce_identical_bytes() {
+        let mut whole = Vec::new();
+        write_frame(&mut whole, b"flower").unwrap();
+        let mut dribble = Dribble(Vec::new());
+        write_frame(&mut dribble, b"flower").unwrap();
+        assert_eq!(dribble.0, whole);
     }
 
     #[test]

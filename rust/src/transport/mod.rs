@@ -19,6 +19,7 @@ use std::time::Duration;
 
 use crate::error::Result;
 use crate::proto::{ClientMessage, ServerMessage};
+use crate::util::bytes::FrameBuf;
 
 /// A bidirectional connection, server or client end.
 ///
@@ -54,33 +55,57 @@ impl Connection {
         }
     }
 
-    /// Server side: send a typed server message.
+    /// Receive one whole frame as a shared, `Arc`-backed buffer — the
+    /// zero-copy decode path (wraps the freshly read `Vec` without
+    /// copying it).
+    pub fn recv_frame(&mut self) -> Result<FrameBuf> {
+        Ok(FrameBuf::new(self.recv()?))
+    }
+
+    /// Receive one whole frame as a shared buffer, with a deadline.
+    pub fn recv_frame_deadline(&mut self, timeout: Duration) -> Result<FrameBuf> {
+        Ok(FrameBuf::new(self.recv_deadline(timeout)?))
+    }
+
+    /// Server side: send a typed server message (wire v1).
     pub fn send_server_message(&mut self, msg: &ServerMessage) -> Result<()> {
-        let buf = crate::proto::encode_server_message(msg);
+        self.send_server_message_v(msg, crate::proto::codec::VERSION)
+    }
+
+    /// Server side: send a typed server message at a negotiated wire
+    /// version (v2 connections ship tensor-bearing messages zero-copy).
+    pub fn send_server_message_v(&mut self, msg: &ServerMessage, wire: u8) -> Result<()> {
+        let buf = crate::proto::encode_server_message_v(msg, wire);
         self.send(&buf)
     }
 
-    /// Server side: receive a typed client message.
+    /// Server side: receive a typed client message (any wire version).
     pub fn recv_client_message(&mut self) -> Result<ClientMessage> {
-        let buf = self.recv()?;
-        crate::proto::decode_client_message(&buf)
+        let buf = self.recv_frame()?;
+        crate::proto::decode_client_frame(&buf)
     }
 
     /// Server side: receive a typed client message with a deadline.
     pub fn recv_client_message_timeout(&mut self, timeout: Duration) -> Result<ClientMessage> {
-        let buf = self.recv_deadline(timeout)?;
-        crate::proto::decode_client_message(&buf)
+        let buf = self.recv_frame_deadline(timeout)?;
+        crate::proto::decode_client_frame(&buf)
     }
 
-    /// Client side: send a typed client message.
+    /// Client side: send a typed client message (wire v1).
     pub fn send_client_message(&mut self, msg: &ClientMessage) -> Result<()> {
-        let buf = crate::proto::encode_client_message(msg);
+        self.send_client_message_v(msg, crate::proto::codec::VERSION)
+    }
+
+    /// Client side: send a typed client message at a negotiated wire
+    /// version.
+    pub fn send_client_message_v(&mut self, msg: &ClientMessage, wire: u8) -> Result<()> {
+        let buf = crate::proto::encode_client_message_v(msg, wire);
         self.send(&buf)
     }
 
-    /// Client side: receive a typed server message.
+    /// Client side: receive a typed server message (any wire version).
     pub fn recv_server_message(&mut self) -> Result<ServerMessage> {
-        let buf = self.recv()?;
-        crate::proto::decode_server_message(&buf)
+        let buf = self.recv_frame()?;
+        crate::proto::decode_server_frame(&buf)
     }
 }

@@ -14,6 +14,10 @@ use crate::error::{Error, Result};
 pub struct TcpConnection {
     stream: TcpStream,
     peer: String,
+    /// Cached read deadline, so `recv`/`recv_timeout` only pay the
+    /// `setsockopt` syscall when the deadline actually changes (a fresh
+    /// stream has no timeout, matching `None`).
+    read_timeout: Option<Duration>,
 }
 
 impl TcpConnection {
@@ -23,7 +27,7 @@ impl TcpConnection {
             .peer_addr()
             .map(|a| a.to_string())
             .unwrap_or_else(|_| "<unknown>".into());
-        Ok(TcpConnection { stream, peer })
+        Ok(TcpConnection { stream, peer, read_timeout: None })
     }
 
     /// Dial a Flower server.
@@ -48,17 +52,25 @@ impl TcpConnection {
         write_frame(&mut self.stream, frame)
     }
 
+    fn set_read_timeout(&mut self, t: Option<Duration>) -> Result<()> {
+        if self.read_timeout != t {
+            self.stream.set_read_timeout(t)?;
+            self.read_timeout = t;
+        }
+        Ok(())
+    }
+
     pub fn recv(&mut self) -> Result<Vec<u8>> {
-        self.stream.set_read_timeout(None)?;
+        self.set_read_timeout(None)?;
         read_frame(&mut self.stream)
     }
 
     /// Receive with a deadline; returns `Error::Timeout` when it elapses.
+    /// The deadline stays armed on the socket afterwards (cached) — the
+    /// next `recv` resets it, so callers never observe a stale timeout.
     pub fn recv_timeout(&mut self, timeout: Duration) -> Result<Vec<u8>> {
-        self.stream.set_read_timeout(Some(timeout))?;
-        let r = read_frame(&mut self.stream);
-        let _ = self.stream.set_read_timeout(None);
-        r
+        self.set_read_timeout(Some(timeout))?;
+        read_frame(&mut self.stream)
     }
 }
 
@@ -122,6 +134,53 @@ mod tests {
         assert!(
             matches!(err, Error::Timeout(_)),
             "expected timeout, got {err}"
+        );
+    }
+
+    /// Regression: after a `recv_timeout` (which leaves the deadline
+    /// cached on the socket), a plain `recv` must clear it and block
+    /// until the frame actually arrives.
+    #[test]
+    fn recv_after_timeout_resets_deadline() {
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let client = std::thread::spawn(move || {
+            let mut conn = TcpConnection::connect(addr).unwrap();
+            // arrive well after the server's elapsed 20ms deadline
+            std::thread::sleep(Duration::from_millis(150));
+            conn.send(b"late").unwrap();
+        });
+
+        let mut server_conn = listener.accept().unwrap();
+        let err = server_conn
+            .recv_timeout(Duration::from_millis(20))
+            .unwrap_err();
+        assert!(matches!(err, Error::Timeout(_)), "expected timeout, got {err}");
+        // a stale deadline would time this out too; recv must block
+        assert_eq!(server_conn.recv().unwrap(), b"late");
+        client.join().unwrap();
+    }
+
+    /// Back-to-back deadline receives keep working through the cache
+    /// (only the first one pays the setsockopt).
+    #[test]
+    fn repeated_recv_timeout_uses_cached_deadline() {
+        let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpConnection::connect(addr).unwrap();
+        let mut server_conn = listener.accept().unwrap();
+
+        for _ in 0..3 {
+            let err = server_conn
+                .recv_timeout(Duration::from_millis(10))
+                .unwrap_err();
+            assert!(matches!(err, Error::Timeout(_)));
+        }
+        client.send(b"now").unwrap();
+        assert_eq!(
+            server_conn.recv_timeout(Duration::from_secs(5)).unwrap(),
+            b"now"
         );
     }
 

@@ -23,7 +23,84 @@
 //! the `proto`/`persist` unit tests.
 #![deny(missing_docs)]
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
+
+/// A reference-counted, immutable byte buffer holding one received
+/// frame payload.
+///
+/// The zero-copy wire path ([`crate::proto`] v2 frames) decodes tensor
+/// data as slices *borrowed out of this buffer* instead of copying into
+/// owned `Vec`s, so the buffer must outlive every decoded view — hence
+/// the `Arc`. Cloning a `FrameBuf` is a refcount bump, never a byte
+/// copy.
+///
+/// Alignment contract: `Vec<u8>`'s allocation is not *guaranteed* to be
+/// 4-byte aligned, although every mainstream allocator returns at least
+/// word alignment for heap blocks. Consumers that reinterpret regions
+/// of the buffer as `&[f32]` must therefore go through
+/// [`FrameBuf::f32_region`], which checks the actual pointer alignment
+/// at runtime and reports misalignment so the caller can fall back to a
+/// copying path. Correctness never depends on the allocator's choice;
+/// only the zero-copy fast path does.
+#[derive(Debug, Clone)]
+pub struct FrameBuf {
+    buf: Arc<Vec<u8>>,
+}
+
+impl FrameBuf {
+    /// Wrap an owned payload. The `Vec` is moved, not copied.
+    pub fn new(bytes: Vec<u8>) -> Self {
+        FrameBuf { buf: Arc::new(bytes) }
+    }
+
+    /// The whole payload.
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Payload length in bytes.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// The shared allocation itself (for views that must hold the
+    /// buffer alive past this `FrameBuf` handle).
+    pub fn shared(&self) -> Arc<Vec<u8>> {
+        Arc::clone(&self.buf)
+    }
+
+    /// Reinterpret `len_bytes` bytes at `byte_off` as a `&[f32]`
+    /// without copying.
+    ///
+    /// Returns `None` when the region is out of bounds, its length is
+    /// not a multiple of 4, or the region's *actual address* is not
+    /// 4-byte aligned (the documented copy-fallback trigger). On
+    /// success the cast is sound: the region is in bounds, properly
+    /// aligned, and `f32` has no invalid bit patterns.
+    pub fn f32_region(&self, byte_off: usize, len_bytes: usize) -> Option<&[f32]> {
+        let end = byte_off.checked_add(len_bytes)?;
+        if end > self.buf.len() || len_bytes % 4 != 0 {
+            return None;
+        }
+        let region = &self.buf[byte_off..end];
+        if region.as_ptr().align_offset(std::mem::align_of::<f32>()) != 0 {
+            return None;
+        }
+        // SAFETY: bounds and 4-byte alignment checked above; f32 accepts
+        // every bit pattern; the slice borrows self, so the Arc'd
+        // allocation outlives it.
+        Some(unsafe {
+            std::slice::from_raw_parts(region.as_ptr() as *const f32, len_bytes / 4)
+        })
+    }
+}
 
 /// Append-only little-endian byte sink. A thin, inline-friendly layer
 /// over `Vec<u8>` — the value is that every producer goes through one
@@ -273,6 +350,36 @@ mod tests {
         t.u8().unwrap();
         let err = t.expect_end("frame").unwrap_err();
         assert!(err.to_string().contains("trailing bytes after frame"));
+    }
+
+    #[test]
+    fn frame_buf_f32_region_zero_copy_and_bounds() {
+        // 4 LE f32s at offset 0: the region IS the allocation start,
+        // which every mainstream allocator aligns to >= 4 bytes.
+        let mut w = LeWriter::new();
+        for v in [1.0f32, -2.5, 0.0, 42.0] {
+            w.f32(v);
+        }
+        let fb = FrameBuf::new(w.into_bytes());
+        let base = fb.as_slice().as_ptr() as usize;
+        if base % 4 == 0 {
+            let view = fb.f32_region(0, 16).expect("aligned region");
+            assert_eq!(view, &[1.0, -2.5, 0.0, 42.0]);
+            // genuinely zero-copy: the slice points into the buffer
+            assert_eq!(view.as_ptr() as usize, base);
+            // an offset that breaks 4-alignment must refuse the cast
+            assert!(fb.f32_region(1, 4).is_none());
+        }
+        // out of bounds / ragged lengths are None, never a panic
+        assert!(fb.f32_region(0, 17).is_none());
+        assert!(fb.f32_region(13, 4).is_none());
+        assert!(fb.f32_region(usize::MAX, 4).is_none());
+        assert!(fb.f32_region(0, 15).is_none());
+        // clones share the allocation
+        let c = fb.clone();
+        assert_eq!(c.as_slice().as_ptr(), fb.as_slice().as_ptr());
+        assert_eq!(fb.len(), 16);
+        assert!(!fb.is_empty());
     }
 
     #[test]

@@ -118,6 +118,7 @@ fn spawn_cohort(
                             });
                             return;
                         }
+                        ServerMessage::HelloAck { .. } => {}
                     }
                 }
             })

@@ -227,6 +227,7 @@ fn spawn_fake(
                     });
                     return;
                 }
+                ServerMessage::HelloAck { .. } => {}
             }
         }
     });

@@ -185,7 +185,7 @@ mod ref_wire {
         }
         pub fn tensor(&mut self, t: &Tensor) {
             let (dtype, rank) = match &t.data {
-                TensorData::F32(_) => (0u8, t.shape.len() as u8),
+                TensorData::F32(_) | TensorData::F32Shared(_) => (0u8, t.shape.len() as u8),
                 TensorData::I32(_) => (1, t.shape.len() as u8),
                 TensorData::F16(_) => (2, t.shape.len() as u8),
             };
@@ -196,6 +196,13 @@ mod ref_wire {
             }
             match &t.data {
                 TensorData::F32(v) => {
+                    self.u32(v.len() as u32);
+                    for &x in v {
+                        self.0.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                TensorData::F32Shared(v) => {
+                    let v = v.as_slice();
                     self.u32(v.len() as u32);
                     for &x in v {
                         self.0.extend_from_slice(&x.to_le_bytes());
@@ -287,6 +294,11 @@ mod ref_wire {
                 w.u64(*seconds);
                 w.0
             }
+            ServerMessage::HelloAck { version } => {
+                let mut w = W::header(0x05);
+                w.u8(*version);
+                w.0
+            }
         }
     }
 
@@ -325,6 +337,11 @@ mod ref_wire {
             ClientMessage::Disconnect { reason } => {
                 let mut w = W::header(0x85);
                 w.string(reason);
+                w.0
+            }
+            ClientMessage::Hello { max_version } => {
+                let mut w = W::header(0x86);
+                w.u8(*max_version);
                 w.0
             }
         }

@@ -1,0 +1,364 @@
+//! Integration suite for wire protocol v2 (`transport/PROTOCOL.md`):
+//!
+//! * property tests — v2 encode/decode roundtrips arbitrary
+//!   tensor-bearing messages, and v1/v2 decodes of the same message
+//!   agree;
+//! * differential aggregation — folding client updates out of
+//!   zero-copy v2 frames is **bit-identical** to folding the same
+//!   updates from owned vectors;
+//! * zero-copy proof — a v2 `FitRes` decode borrows its f32 payload
+//!   straight out of the frame allocation (no per-element copy);
+//! * live-TCP negotiation — a `Hello`-greeting v2 client and a legacy
+//!   bare-`Register` v1 client serve the same barrier cohort, through
+//!   the shared-broadcast-frame dispatch path;
+//! * malformed v2 frames surface as codec errors over a real socket.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use flowrs::client::{app, keys, Client};
+use flowrs::proto::codec::{VERSION, VERSION_V2};
+use flowrs::proto::*;
+use flowrs::server::{serve_registrations, ClientManager, Server, ServerConfig};
+use flowrs::sim::cost::CostModel;
+use flowrs::strategy::fedavg::TrainingPlan;
+use flowrs::strategy::{Aggregator, FedAvg};
+use flowrs::transport::tcp::{TcpConnection, TcpTransportListener};
+use flowrs::transport::Connection;
+use flowrs::util::bytes::FrameBuf;
+use flowrs::util::prop::{assert_eq_prop, check, ensure};
+use flowrs::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// generators (tensor-bearing shapes only — the v2 layout is about tensors)
+// ---------------------------------------------------------------------------
+
+fn arb_tensor(rng: &mut Rng) -> Tensor {
+    let rank = rng.below(3);
+    let shape: Vec<usize> = (0..rank).map(|_| 1 + rng.below(8)).collect();
+    let n: usize = shape.iter().product();
+    match rng.below(3) {
+        0 => Tensor::f32(shape, (0..n).map(|_| rng.normal_f32()).collect()).unwrap(),
+        1 => Tensor::i32(shape, (0..n).map(|_| rng.next_u64() as i32).collect()).unwrap(),
+        _ => Tensor::f32(shape, (0..n).map(|_| rng.normal_f32()).collect())
+            .unwrap()
+            .quantize_f16()
+            .unwrap(),
+    }
+}
+
+fn arb_parameters(rng: &mut Rng) -> Parameters {
+    Parameters {
+        tensors: (0..rng.below(4)).map(|_| arb_tensor(rng)).collect(),
+    }
+}
+
+fn arb_config(rng: &mut Rng) -> ConfigMap {
+    let mut m = ConfigMap::new();
+    for i in 0..rng.below(4) {
+        m.insert(format!("k{i}"), Scalar::F64(rng.normal()));
+    }
+    m
+}
+
+fn arb_tensor_server_message(rng: &mut Rng) -> ServerMessage {
+    let parameters = arb_parameters(rng);
+    let config = arb_config(rng);
+    if rng.below(2) == 0 {
+        ServerMessage::FitIns(FitIns { parameters, config })
+    } else {
+        ServerMessage::EvaluateIns(EvaluateIns { parameters, config })
+    }
+}
+
+fn arb_tensor_client_message(rng: &mut Rng) -> ClientMessage {
+    let status = Status::ok();
+    let parameters = arb_parameters(rng);
+    if rng.below(2) == 0 {
+        ClientMessage::GetParametersRes(GetParametersRes { status, parameters })
+    } else {
+        ClientMessage::FitRes(FitRes {
+            status,
+            parameters,
+            num_examples: rng.next_u64(),
+            metrics: arb_config(rng),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// codec properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_v2_server_messages_roundtrip() {
+    check("v2 server message roundtrip", 300, |rng| {
+        let msg = arb_tensor_server_message(rng);
+        let frame = FrameBuf::new(encode_server_message_v(&msg, VERSION_V2));
+        ensure(frame.as_slice()[2] == VERSION_V2, || {
+            "tensor-bearing message must go v2".into()
+        })?;
+        let back = decode_server_frame(&frame).map_err(|e| e.to_string())?;
+        assert_eq_prop(&back, &msg)
+    });
+}
+
+#[test]
+fn prop_v2_client_messages_roundtrip() {
+    check("v2 client message roundtrip", 300, |rng| {
+        let msg = arb_tensor_client_message(rng);
+        let frame = FrameBuf::new(encode_client_message_v(&msg, VERSION_V2));
+        ensure(frame.as_slice()[2] == VERSION_V2, || {
+            "tensor-bearing message must go v2".into()
+        })?;
+        let back = decode_client_frame(&frame).map_err(|e| e.to_string())?;
+        assert_eq_prop(&back, &msg)
+    });
+}
+
+#[test]
+fn prop_v1_and_v2_decodes_agree() {
+    check("decode(encode_v1(m)) == decode(encode_v2(m))", 300, |rng| {
+        let msg = arb_tensor_client_message(rng);
+        let v1 = FrameBuf::new(encode_client_message_v(&msg, VERSION));
+        let v2 = FrameBuf::new(encode_client_message_v(&msg, VERSION_V2));
+        ensure(v1.as_slice()[2] == VERSION, || "v1 frame version byte".into())?;
+        ensure(v2.as_slice()[2] == VERSION_V2, || "v2 frame version byte".into())?;
+        let from_v1 = decode_client_frame(&v1).map_err(|e| e.to_string())?;
+        let from_v2 = decode_client_frame(&v2).map_err(|e| e.to_string())?;
+        assert_eq_prop(&from_v1, &from_v2)
+    });
+}
+
+/// The acceptance lock for the zero-copy fold path: aggregating client
+/// updates decoded out of v2 frames (borrowed `SharedF32` views) is
+/// bit-identical to aggregating the same updates from owned vectors.
+#[test]
+fn prop_fold_from_v2_frames_bit_identical_to_owned() {
+    check("fold(shared v2 views) == fold(owned) bit-for-bit", 120, |rng| {
+        let n = 1 + rng.below(300);
+        let k = 1 + rng.below(4);
+        let updates: Vec<Vec<f32>> = (0..k)
+            .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let weights: Vec<f64> = (0..k).map(|_| 1.0 + rng.below(100) as f64).collect();
+
+        let owned: Vec<(&[f32], f64)> = updates
+            .iter()
+            .zip(&weights)
+            .map(|(u, &w)| (u.as_slice(), w))
+            .collect();
+        let expect = Aggregator::Rust
+            .weighted_average(&owned)
+            .map_err(|e| e.to_string())?;
+
+        // the same updates, through the wire: encode as v2 FitRes,
+        // decode zero-copy, fold from the borrowed views
+        let frames: Vec<FrameBuf> = updates
+            .iter()
+            .map(|u| {
+                FrameBuf::new(encode_client_message_v(
+                    &ClientMessage::FitRes(FitRes {
+                        status: Status::ok(),
+                        parameters: Parameters::from_flat(u.clone()),
+                        num_examples: 1,
+                        metrics: Default::default(),
+                    }),
+                    VERSION_V2,
+                ))
+            })
+            .collect();
+        let decoded: Vec<ClientMessage> = frames
+            .iter()
+            .map(|f| decode_client_frame(f).map_err(|e| e.to_string()))
+            .collect::<Result<_, _>>()?;
+        let shared: Vec<(&[f32], f64)> = decoded
+            .iter()
+            .zip(&weights)
+            .map(|(m, &w)| match m {
+                ClientMessage::FitRes(res) => {
+                    Ok((res.parameters.to_flat().map_err(|e| e.to_string())?, w))
+                }
+                other => Err(format!("expected FitRes, got {other:?}")),
+            })
+            .collect::<Result<_, _>>()?;
+        let got = Aggregator::Rust
+            .weighted_average(&shared)
+            .map_err(|e| e.to_string())?;
+
+        ensure(got.len() == expect.len(), || "length mismatch".into())?;
+        for (i, (a, b)) in got.iter().zip(&expect).enumerate() {
+            ensure(a.to_bits() == b.to_bits(), || {
+                format!("bit mismatch at {i}: {a:?} vs {b:?}")
+            })?;
+        }
+        Ok(())
+    });
+}
+
+/// Zero-copy proof at the integration level: the decoded FitRes
+/// parameter slice points *into* the frame allocation — no
+/// per-element tensor copy happened on the decode path.
+#[test]
+fn v2_fitres_decode_borrows_the_frame_allocation() {
+    let update: Vec<f32> = (0..1024).map(|i| i as f32).collect();
+    let frame = FrameBuf::new(encode_client_message_v(
+        &ClientMessage::FitRes(FitRes {
+            status: Status::ok(),
+            parameters: Parameters::from_flat(update.clone()),
+            num_examples: 7,
+            metrics: Default::default(),
+        }),
+        VERSION_V2,
+    ));
+    let base = frame.as_slice().as_ptr() as usize;
+    // Vec<u8> allocations are not guaranteed 4-aligned; the copy
+    // fallback is correct-by-construction and covered above, so the
+    // pointer-containment assertion only applies on the aligned path
+    // (every allocator in practice).
+    if base % 4 != 0 {
+        return;
+    }
+    let ClientMessage::FitRes(res) = decode_client_frame(&frame).unwrap() else {
+        panic!("expected FitRes");
+    };
+    let slice = res.parameters.to_flat().unwrap();
+    assert_eq!(slice, update.as_slice());
+    let p = slice.as_ptr() as usize;
+    assert!(
+        p >= base && p + slice.len() * 4 <= base + frame.len(),
+        "decoded f32 slice (ptr {p:#x}) must borrow from the frame \
+         allocation [{base:#x}, {:#x})",
+        base + frame.len(),
+    );
+}
+
+// ---------------------------------------------------------------------------
+// live-TCP negotiation
+// ---------------------------------------------------------------------------
+
+/// "Training" adds +1 to every parameter; evaluation reports a fixed
+/// accuracy. Enough to drive real barrier rounds over TCP.
+struct PlusOne;
+
+impl Client for PlusOne {
+    fn get_parameters(&mut self, _: GetParametersIns) -> flowrs::Result<GetParametersRes> {
+        Ok(GetParametersRes { status: Status::ok(), parameters: Parameters::default() })
+    }
+    fn fit(&mut self, ins: FitIns) -> flowrs::Result<FitRes> {
+        let mut p = ins.parameters.to_flat()?.to_vec();
+        for v in &mut p {
+            *v += 1.0;
+        }
+        Ok(FitRes {
+            status: Status::ok(),
+            parameters: Parameters::from_flat(p),
+            num_examples: 16,
+            metrics: Default::default(),
+        })
+    }
+    fn evaluate(&mut self, _: EvaluateIns) -> flowrs::Result<EvaluateRes> {
+        let mut m = ConfigMap::new();
+        m.insert(keys::ACCURACY.into(), Scalar::F64(0.5));
+        Ok(EvaluateRes { status: Status::ok(), loss: 1.0, num_examples: 16, metrics: m })
+    }
+}
+
+fn info(id: &str) -> ClientInfo {
+    ClientInfo {
+        client_id: id.into(),
+        device: "jetson_tx2_gpu".into(),
+        os: "linux".into(),
+        num_examples: 16,
+    }
+}
+
+/// A negotiated v2 client and a legacy v1 client serve the same
+/// barrier cohort over real sockets: the registration path answers the
+/// `Hello` greeting only where one is sent, the round's `FitIns` goes
+/// out as one shared broadcast frame re-encoded per wire version, and
+/// both clients fold in every round.
+#[test]
+fn mixed_v1_v2_cohort_serves_barrier_rounds_over_tcp() {
+    let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let manager = Arc::new(ClientManager::new());
+    let stop = Arc::new(AtomicBool::new(false));
+    let reg_thread = serve_registrations(listener, Arc::clone(&manager), Arc::clone(&stop));
+
+    let t_v2 = std::thread::spawn(move || {
+        let conn = Connection::Tcp(TcpConnection::connect(addr).unwrap());
+        app::run_client_negotiated(conn, &mut PlusOne, info("c-v2"))
+    });
+    let t_v1 = std::thread::spawn(move || {
+        let conn = Connection::Tcp(TcpConnection::connect(addr).unwrap());
+        app::run_client(conn, &mut PlusOne, info("c-v1"))
+    });
+
+    let strategy = FedAvg::new(TrainingPlan { epochs: 1, lr: 0.1 }, Aggregator::Rust);
+    let mut server = Server::new(
+        Arc::clone(&manager),
+        Box::new(strategy),
+        CostModel::default(),
+        ServerConfig {
+            num_rounds: 2,
+            quorum: 2,
+            quorum_timeout: Duration::from_secs(30),
+            ..Default::default()
+        },
+    );
+    let history = server.run(Parameters::from_flat(vec![0.0; 8])).unwrap();
+
+    assert_eq!(history.rounds.len(), 2);
+    for r in &history.rounds {
+        assert_eq!(r.fit_completed, 2, "both wires must fold: {r:?}");
+        assert_eq!(r.fit_failures, 0, "{r:?}");
+    }
+    // one proxy negotiated v2, the other stayed on legacy v1
+    let wires: HashSet<u8> = manager.snapshot().iter().map(|p| p.wire()).collect();
+    assert_eq!(wires, [VERSION, VERSION_V2].into_iter().collect::<HashSet<u8>>());
+
+    t_v2.join().unwrap().unwrap();
+    t_v1.join().unwrap().unwrap();
+    stop.store(true, Ordering::Relaxed);
+    let _ = TcpConnection::connect(addr); // nudge the accept loop
+    let _ = reg_thread.join();
+}
+
+/// A corrupted v2 frame travels the socket fine but must surface as a
+/// codec error from the typed receive — never a panic, never a hang.
+#[test]
+fn corrupt_v2_frame_is_a_codec_error_over_tcp() {
+    let listener = TcpTransportListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let sender = std::thread::spawn(move || {
+        let mut conn = TcpConnection::connect(addr).unwrap();
+        let mut frame = encode_client_message_v(
+            &ClientMessage::FitRes(FitRes {
+                status: Status::ok(),
+                parameters: Parameters::from_flat(vec![1.0, 2.0, 3.0]),
+                num_examples: 3,
+                metrics: Default::default(),
+            }),
+            VERSION_V2,
+        );
+        assert_eq!(frame[2], VERSION_V2);
+        // point the manifest's byte_off outside the body:
+        // header = magic(2) version(1) tag(1) header_len(4), then the
+        // FitRes header: status(1 + 4) count(2) entry{dtype(1) rank(1)
+        // dim(4) byte_off(4) ...} — byte_off sits at absolute offset 21
+        frame[21..25].copy_from_slice(&1024u32.to_le_bytes());
+        conn.send(&frame).unwrap();
+    });
+
+    let mut server_conn = Connection::Tcp(listener.accept().unwrap());
+    let err = server_conn.recv_client_message().unwrap_err();
+    assert!(
+        matches!(err, flowrs::Error::Codec(_)),
+        "expected a codec rejection, got {err:?}"
+    );
+    sender.join().unwrap();
+}
