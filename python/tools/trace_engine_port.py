@@ -130,6 +130,75 @@ SERVER_OVERHEAD_S = 1.0
 MODEL_BYTES = 547_496
 CSV_HEADER = "device,init,class,toggles_s"
 
+# ---------------------------------------------------------------------------
+# strategy/wire.rs mirror — integer arithmetic only, no rounding ambiguity
+# ---------------------------------------------------------------------------
+
+FRAME_PREFIX_BYTES = 4
+V2_MSG_OVERHEAD_BYTES = 8
+SECAGG_PEER_ENTRY_BYTES = 9
+SECAGG_SEED_ENTRY_BYTES = 24
+SECAGG_COMMIT_BYTES = 32
+QFEDAVG_EPS = 1e-10
+
+# Strategies are ("fedavg",) | ("qfedavg", q) | ("fedprox", mu) |
+# ("compressed",) | ("secagg",) — mirroring config::SchedStrategyConfig.
+FEDAVG = ("fedavg",)
+
+
+def wire_model(strategy, group):
+    """WireModel::for_strategy — (bytes_down, bytes_up) per dispatch/fold.
+
+    `group` is the secagg mask-exchange group: the cohort size in sync
+    mode, the flush quorum in async mode; ignored otherwise."""
+    kind = strategy[0]
+    if kind in ("fedavg", "qfedavg", "fedprox"):
+        return MODEL_BYTES, MODEL_BYTES
+    if kind == "compressed":
+        half = (MODEL_BYTES + 1) // 2  # div_ceil(2)
+        return half, half
+    assert kind == "secagg", kind
+    down = (MODEL_BYTES + FRAME_PREFIX_BYTES + V2_MSG_OVERHEAD_BYTES
+            + SECAGG_SEED_ENTRY_BYTES + group * SECAGG_PEER_ENTRY_BYTES)
+    up = (MODEL_BYTES + FRAME_PREFIX_BYTES + V2_MSG_OVERHEAD_BYTES
+          + SECAGG_COMMIT_BYTES)
+    return down, up
+
+
+def fold_weights(strategy, alpha, buffer, pop):
+    """Engine::fold_weights — (device_idx, weight) pairs in buffer order.
+
+    `buffer` rows are (device_idx, staleness, resolve_s). The float-op
+    association mirrors the Rust exactly; the non-trivial powf arms
+    (qfedavg h_i, staleness discount with s > 0) resolve to the same
+    libm `pow` from both CPython and Rust on the Linux/glibc hosts the
+    goldens and CI run on (the fedavg goldens keep the stronger
+    pure-+-*-/ platform independence)."""
+    kind = strategy[0]
+    out = []
+    if kind == "qfedavg":
+        q = strategy[1]
+        hs = []
+        for i, _s, _r in buffer:
+            loss = pop[i].last_loss if pop[i].last_loss is not None else 1.0
+            hs.append((max(loss, 0.0) + QFEDAVG_EPS) ** q)
+        total = sum(hs)  # sequential left fold == Rust iter().sum()
+        n = float(len(buffer))
+        for (i, s, _r), hi in zip(buffer, hs):
+            d = (1.0 + s) ** (-alpha)
+            out.append((i, d * hi * (n / total)))
+        return out
+    for i, s, _r in buffer:
+        d = (1.0 + s) ** (-alpha)
+        if kind == "secagg":
+            w = 1.0  # masked sums cannot be reweighted per client
+        elif kind == "fedprox":
+            w = d / (1.0 + strategy[1])
+        else:  # fedavg, compressed (f16 changes bytes, never weights)
+            w = d
+        out.append((i, w))
+    return out
+
 
 # ---------------------------------------------------------------------------
 # Trace schedules (DeviceSchedule::Trace point queries)
@@ -204,6 +273,7 @@ class Device:
         self.trace = trace
         self.num_examples = num_examples
         self.skew = skew
+        self.last_loss = None  # DeviceState.last_loss (qfedavg h_i input)
 
 
 def synthesize(rows, seed):
@@ -226,17 +296,19 @@ def synthesize(rows, seed):
     return pop
 
 
-def round_time(dev, steps):
-    # CostModel: steps * (t_step_ref * factor) + 2 * (bytes*8 / (bw*1e6))
-    return steps * (T_STEP_REF_S * dev.factor) + 2.0 * (
-        MODEL_BYTES * 8.0 / (dev.bw * 1e6)
-    )
+def round_time(dev, steps, wire_bytes):
+    # SelectionContext::modeled_round_time_s: compute + one link transfer
+    # of (bytes_down + bytes_up). For symmetric full-precision wire this
+    # is bit-identical to the historical 2*comm(MODEL_BYTES): doubling an
+    # IEEE numerator commutes with the division's single rounding step.
+    return steps * (T_STEP_REF_S * dev.factor) + wire_bytes * 8.0 / (dev.bw * 1e6)
 
 
-def round_energy(dev, steps):
+def round_energy(dev, steps, wire_bytes):
+    # SelectionContext::modeled_round_energy_j
     compute_t = steps * (T_STEP_REF_S * dev.factor)
-    link_t = MODEL_BYTES * 8.0 / (dev.bw * 1e6)
-    return dev.train_w * compute_t + 2.0 * (dev.radio_w * link_t)
+    link_t = wire_bytes * 8.0 / (dev.bw * 1e6)
+    return dev.train_w * compute_t + dev.radio_w * link_t
 
 
 class Surrogate:
@@ -265,26 +337,43 @@ class Surrogate:
         return losses, eval_loss, acc
 
 
+def weighted_train_loss(folds, losses):
+    """Fold-weighted mean train loss (engine flush). Unit weights reduce
+    bit-identically to the plain mean — l * 1.0 is exact and the divisor
+    sums to exactly n."""
+    if not losses:
+        return float("nan")
+    num = 0.0
+    for (_, w), l in zip(folds, losses):
+        num += w * l
+    den = 0.0
+    for _, w in folds:
+        den += w
+    return num / den
+
+
 FOLD, DROP_DEADLINE, DROP_CHURN = 0, 1, 2
 
 
 def csv_row(r):
     return (
         "{},{},{},{},{},{},{:.6f},{:.6f},{:.6f},{},{:.3f},{:.3f},{:.3f},{:.3f},"
-        "{:.3f},{},{}\n"
+        "{:.3f},{},{},{},{}\n"
     ).format(
         r["round"], r["available"], r["selected"], r["completed"],
         r["dropped_deadline"], r["dropped_churn"], r["train_loss"],
         r["eval_loss"], r["accuracy"], r["steps"], r["round_time_s"],
         r["cum_time_s"], r["round_energy_j"], r["wasted_energy_j"],
         r["mean_staleness"], r["max_staleness"], r["in_flight"],
+        r["bytes_down"], r["bytes_up"],
     )
 
 
 CSV_COLUMNS = (
     "round,available,selected,completed,dropped_deadline,dropped_churn,"
     "train_loss,eval_loss,accuracy,steps,round_time_s,cum_time_s,"
-    "round_energy_j,wasted_energy_j,mean_staleness,max_staleness,in_flight\n"
+    "round_energy_j,wasted_energy_j,mean_staleness,max_staleness,in_flight,"
+    "bytes_down,bytes_up\n"
 )
 
 
@@ -297,9 +386,12 @@ def report_csv(rows):
 # ---------------------------------------------------------------------------
 
 
-def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5):
+def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5,
+             strategy=FEDAVG):
     policy = Rng(seed ^ 0x5E1)
     trainer = Surrogate()
+    bytes_down, bytes_up = wire_model(strategy, cohort)
+    wire_bytes = bytes_down + bytes_up
     clock = 0.0
     version = 0
     rows = []
@@ -319,7 +411,8 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5):
         dispatches = []
         for j in picked:
             i = avail[j]
-            dispatches.append((i, round_time(pop[i], steps), round_energy(pop[i], steps)))
+            dispatches.append((i, round_time(pop[i], steps, wire_bytes),
+                               round_energy(pop[i], steps, wire_bytes)))
         deadline_abs = now + deadline if deadline is not None else INF
         heap = []
         slowest_all = now
@@ -338,28 +431,34 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5):
         energy = 0.0
         wasted = 0.0
         dd = dc = 0
-        buffer = []  # (device_idx, resolve_s) in settle order
+        down_acc = len(dispatches) * bytes_down  # counted at dispatch
+        up_acc = 0
+        buffer = []  # (device_idx, staleness=0, resolve_s) in settle order
         while heap:
             resolve, i, e, outcome = heapq.heappop(heap)
             slowest_all = max(slowest_all, resolve)
             energy += e
             if outcome == FOLD:
-                buffer.append((i, resolve))
+                buffer.append((i, 0, resolve))
+                up_acc += bytes_up  # a drop never completes its upload
             elif outcome == DROP_CHURN:
                 dc += 1
                 wasted += e
             else:
                 dd += 1
                 wasted += e
-        # flush (weights: staleness_discount(0, alpha) == 1.0 exactly)
+        # flush (sync staleness is 0, so the discount factor is exactly
+        # 1.0 — pow(1, y) == 1; strategy reweighting applies on top)
         version += 1
-        folds = [(i, 1.0) for i, _ in buffer]
+        folds = fold_weights(strategy, alpha, buffer, pop)
         losses, eval_loss, acc = trainer.train_flush(pop, folds, steps)
+        for (i, _s, _r), l in zip(buffer, losses):
+            pop[i].last_loss = l
         completed = len(buffer)
-        train_loss = sum(losses) / len(losses) if losses else float("nan")
+        train_loss = weighted_train_loss(folds, losses)
         drops = dd + dc
         slowest_ok = now
-        for _, resolve in buffer:
+        for _, _, resolve in buffer:
             slowest_ok = max(slowest_ok, resolve)
         if deadline is not None and drops > 0:
             round_end = now + deadline
@@ -367,7 +466,7 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5):
             round_end = slowest_ok
         else:
             round_end = slowest_all
-        for i, resolve in buffer:
+        for i, _, resolve in buffer:
             wait = max(round_end - resolve, 0.0)
             energy += pop[i].idle_w * wait
         round_time_s = (round_end - entry) + SERVER_OVERHEAD_S
@@ -379,6 +478,7 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5):
             steps=completed * steps, round_time_s=round_time_s,
             cum_time_s=clock, round_energy_j=energy, wasted_energy_j=wasted,
             mean_staleness=0.0, max_staleness=0, in_flight=0,
+            bytes_down=down_acc, bytes_up=up_acc,
         ))
     return rows
 
@@ -569,10 +669,13 @@ class Index:
 
 
 def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
-              max_concurrency=0):
+              max_concurrency=0, strategy=FEDAVG):
     policy = Rng(seed ^ 0x5E1)
     trainer = Surrogate()
     window = max(max_concurrency if max_concurrency else cohort, 1)
+    # secagg mask-exchange group in async mode is the flush quorum
+    bytes_down, bytes_up = wire_model(strategy, k_flush)
+    wire_bytes = bytes_down + bytes_up
     index = Index([d.trace for d in pop], 0.0)
     state = dict(now=0.0, avail_count=0, in_flight=0)
     version = 0
@@ -582,6 +685,7 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
     buffer = []  # (device_idx, staleness, resolve_s)
     dd = dc = 0
     wasted = energy = 0.0
+    books = dict(down=0, up=0)  # byte books, reset at each flush
     rescans = 0
     rows = []
 
@@ -596,7 +700,8 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
         want = window - state["in_flight"]
         chosen = index.sample_idle(policy, want)
         dispatches = [
-            (dev, round_time(pop[dev], steps), round_energy(pop[dev], steps))
+            (dev, round_time(pop[dev], steps, wire_bytes),
+             round_energy(pop[dev], steps, wire_bytes))
             for dev in chosen
         ]
         deadline_abs = now + deadline if deadline is not None else INF
@@ -617,6 +722,9 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
                 cutoff, outcome = full_finish, FOLD
             frac = min(max((cutoff - now) / (full_finish - now), 0.0), 1.0)
             state["in_flight"] += 1
+            # downlink is booked at dispatch: in-flight work at flush time
+            # has already been paid for in the current window
+            books["down"] += bytes_down
             # streaming events resolve at the cutoff
             heapq.heappush(heap, (cutoff, i, full_e * frac, version, outcome))
             dispatched += 1
@@ -646,6 +754,7 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
         energy += e
         if outcome == FOLD:
             buffer.append((i, version - base_version, resolve))
+            books["up"] += bytes_up  # uplink is booked on a completed fold
         elif outcome == DROP_CHURN:
             dc += 1
             wasted += e
@@ -654,12 +763,14 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
             wasted += e
         if len(buffer) >= k_flush:
             version += 1
-            folds = [(i, (1.0 + s) ** (-alpha)) for i, s, _ in buffer]
+            folds = fold_weights(strategy, alpha, buffer, pop)
             losses, eval_loss, acc = trainer.train_flush(pop, folds, steps)
+            for (i, _s, _r), l in zip(buffer, losses):
+                pop[i].last_loss = l
             completed = len(buffer)
             stals = [s for _, s, _ in buffer]
             staleness_sum = sum(stals)
-            train_loss = sum(losses) / len(losses) if losses else float("nan")
+            train_loss = weighted_train_loss(folds, losses)
             round_time_s = (state["now"] - last_flush) + SERVER_OVERHEAD_S
             state["now"] += SERVER_OVERHEAD_S
             last_flush = state["now"]
@@ -674,10 +785,12 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
                 mean_staleness=(staleness_sum / completed if completed else 0.0),
                 max_staleness=max(stals) if stals else 0,
                 in_flight=state["in_flight"],
+                bytes_down=books["down"], bytes_up=books["up"],
             ))
             buffer = []
             dd = dc = 0
             wasted = energy = 0.0
+            books = dict(down=0, up=0)
     return rows
 
 
@@ -695,6 +808,25 @@ ASYNC_CFG = dict(population=24, cohort=8, rounds=8, seed=7, deadline=45.0,
 FIXTURE = "smalltown.csv"
 GOLDEN_SYNC = "smalltown_sync.golden.csv"
 GOLDEN_ASYNC = "smalltown_async.golden.csv"
+
+# Strategy golden arms: suffix -> strategy tuple. The empty suffix is the
+# historical fedavg pair above; the rest land as
+# smalltown_{sync,async}_{suffix}.golden.csv. The q/mu values here are
+# pinned by rust/tests/trace_e2e.rs — change them in lockstep.
+STRATEGIES = {
+    "": FEDAVG,
+    "qfedavg": ("qfedavg", 2.0),
+    "fedprox": ("fedprox", 0.5),
+    "compressed": ("compressed",),
+    "secagg": ("secagg",),
+}
+
+
+def golden_names(suffix):
+    if not suffix:
+        return GOLDEN_SYNC, GOLDEN_ASYNC
+    return (f"smalltown_sync_{suffix}.golden.csv",
+            f"smalltown_async_{suffix}.golden.csv")
 
 
 def build_fixture():
@@ -728,37 +860,56 @@ def build_fixture():
 
 
 def compute_goldens():
+    """-> (fixture_text, {filename: (csv_text, rows)}) for every strategy
+    arm in both modes. Each run gets a freshly synthesized population:
+    last_loss carries state between rounds within a run but must not leak
+    across runs."""
     fixture = build_fixture()
     rows = parse_trace_csv(fixture)
     assert len(rows) == SYNC_CFG["population"]
-    pop_sync = synthesize(rows, SYNC_CFG["seed"])
-    sync = run_sync(pop_sync, SYNC_CFG["seed"], SYNC_CFG["cohort"],
-                    SYNC_CFG["rounds"], SYNC_CFG["steps"], SYNC_CFG["deadline"])
-    pop_async = synthesize(rows, ASYNC_CFG["seed"])
-    asy = run_async(pop_async, ASYNC_CFG["seed"], ASYNC_CFG["cohort"],
-                    ASYNC_CFG["rounds"], ASYNC_CFG["steps"],
-                    ASYNC_CFG["k_flush"], ASYNC_CFG["alpha"],
-                    ASYNC_CFG["deadline"])
-    return fixture, report_csv(sync), report_csv(asy), sync, asy
+    out = {}
+    for suffix, strategy in STRATEGIES.items():
+        name_sync, name_async = golden_names(suffix)
+        pop_sync = synthesize(rows, SYNC_CFG["seed"])
+        sync = run_sync(pop_sync, SYNC_CFG["seed"], SYNC_CFG["cohort"],
+                        SYNC_CFG["rounds"], SYNC_CFG["steps"],
+                        SYNC_CFG["deadline"], strategy=strategy)
+        pop_async = synthesize(rows, ASYNC_CFG["seed"])
+        asy = run_async(pop_async, ASYNC_CFG["seed"], ASYNC_CFG["cohort"],
+                        ASYNC_CFG["rounds"], ASYNC_CFG["steps"],
+                        ASYNC_CFG["k_flush"], ASYNC_CFG["alpha"],
+                        ASYNC_CFG["deadline"], strategy=strategy)
+        out[name_sync] = (report_csv(sync), sync)
+        out[name_async] = (report_csv(asy), asy)
+    return fixture, out
 
 
 def main():
-    fixture, sync_csv, async_csv, sync, asy = compute_goldens()
-    drops_sync = sum(r["dropped_deadline"] + r["dropped_churn"] for r in sync)
-    drops_async = sum(r["dropped_deadline"] + r["dropped_churn"] for r in asy)
-    print(f"sync : {len(sync)} rounds, final acc {sync[-1]['accuracy']:.4f}, "
-          f"t {sync[-1]['cum_time_s']:.1f} s, drops {drops_sync}")
-    print(f"async: {len(asy)} versions, final acc {asy[-1]['accuracy']:.4f}, "
-          f"t {asy[-1]['cum_time_s']:.1f} s, drops {drops_async}, "
-          f"max staleness {max(r['max_staleness'] for r in asy)}")
-    assert drops_sync > 0, "sync golden should exercise drops"
-    assert drops_async > 0, "async golden should exercise drops"
+    fixture, goldens = compute_goldens()
+    for name, (_, rows) in goldens.items():
+        drops = sum(r["dropped_deadline"] + r["dropped_churn"] for r in rows)
+        wire_mb = sum(r["bytes_down"] + r["bytes_up"] for r in rows) / 1e6
+        print(f"{name}: {len(rows)} rounds, "
+              f"final acc {rows[-1]['accuracy']:.4f}, "
+              f"t {rows[-1]['cum_time_s']:.1f} s, drops {drops}, "
+              f"wire {wire_mb:.1f} MB")
+        assert drops > 0, f"{name} should exercise drops"
+
+    # the strategy arms must genuinely diverge from the fedavg baseline
+    base_sync = goldens[GOLDEN_SYNC][0]
+    base_async = goldens[GOLDEN_ASYNC][0]
+    for suffix in STRATEGIES:
+        if not suffix:
+            continue
+        name_sync, name_async = golden_names(suffix)
+        assert goldens[name_sync][0] != base_sync, name_sync
+        assert goldens[name_async][0] != base_async, name_async
 
     if len(sys.argv) >= 3 and sys.argv[1] == "--write-fixtures":
         outdir = sys.argv[2]
         os.makedirs(outdir, exist_ok=True)
-        for name, text in [(FIXTURE, fixture), (GOLDEN_SYNC, sync_csv),
-                           (GOLDEN_ASYNC, async_csv)]:
+        for name, text in [(FIXTURE, fixture)] + [
+                (n, csv) for n, (csv, _) in goldens.items()]:
             with open(os.path.join(outdir, name), "w") as f:
                 f.write(text)
             print(f"wrote {os.path.join(outdir, name)}")
@@ -767,8 +918,8 @@ def main():
     # check mode: compare against the committed files
     here = os.path.dirname(os.path.abspath(__file__))
     fixdir = os.path.join(here, "..", "..", "rust", "tests", "fixtures")
-    for name, text in [(FIXTURE, fixture), (GOLDEN_SYNC, sync_csv),
-                       (GOLDEN_ASYNC, async_csv)]:
+    for name, text in [(FIXTURE, fixture)] + [
+            (n, csv) for n, (csv, _) in goldens.items()]:
         path = os.path.join(fixdir, name)
         with open(path) as f:
             committed = f.read()

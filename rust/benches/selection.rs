@@ -70,7 +70,8 @@ fn main() {
             round: 1,
             cost: &cost,
             steps_per_round: 80,
-            model_bytes: cfg.model_bytes,
+            bytes_down: cfg.model_bytes as u64,
+            bytes_up: cfg.model_bytes as u64,
             target_cohort: cfg.cohort_size,
             deadline_s: cfg.deadline_s,
         };

@@ -8,9 +8,26 @@
 //! individual update is statistically noise to the server.
 //!
 //! This implementation is the honest "SecAgg0" core: pairwise masks from
-//! a per-round shared seed, no dropout recovery (all maskers must report,
-//! or the round fails — the full protocol adds secret-shared recovery;
-//! see the doc-test in `strategy::secagg` for how failures surface).
+//! a per-round shared seed, with **server-side residual unmasking** for
+//! dropouts (the server knows the base seed, so it can subtract the
+//! mask terms of any pair whose second half never reported — the
+//! systems-cost stand-in for the full protocol's secret-shared
+//! recovery). Because the server holds the base seed, this core models
+//! the *system cost* of SecAgg (extra bytes, strict aggregation rules),
+//! not its cryptographic guarantee; see `strategy/README.md`.
+//!
+//! ## Exact cancellation
+//!
+//! Masks and masked updates live on the fixed-point grid
+//! `k · 2^-10` ([`MASK_GRID`]): [`mask_update`] first snaps the update
+//! onto the grid (clamped to ±[`MASK_CLAMP`]) and every mask sample is a
+//! grid multiple in `[-8, 8)`. Sums of grid multiples are **exact** in
+//! f32 while partial sums stay below `2^24 · 2^-10 = 16384` — with
+//! clamp 64 and masks < 8 that holds for any summation order over
+//! cohorts of ≤ 64 clients (`64·64 + 8·64²/4·… < 2^14`), so
+//! `Σ masked == Σ quantized-plain` **bit-for-bit over any cohort
+//! permutation**, and subtracting a mask term recovers the exact
+//! pre-mask bits. Property-locked in `rust/tests/strategy_props.rs`.
 
 use crate::client::keys;
 use crate::error::{Error, Result};
@@ -33,19 +50,61 @@ pub fn id_hash(id: &str) -> u64 {
 }
 
 /// The pairwise mask stream seed for (a, b) in a given round. Symmetric
-/// in (a, b) — both ends derive the same stream.
-fn pair_seed(base: u64, round: u64, a: &str, b: &str) -> u64 {
+/// in (a, b) — both ends derive the same stream. Public: the server's
+/// residual unmasking (`strategy::secagg`) must derive the *identical*
+/// stream for arbitrary string ids; it goes through this function, never
+/// a parallel formula.
+pub fn pair_seed(base: u64, round: u64, a: &str, b: &str) -> u64 {
     let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
     base ^ round.wrapping_mul(0x9E3779B97F4A7C15) ^ id_hash(lo).rotate_left(17)
         ^ id_hash(hi).rotate_left(43)
 }
 
-/// Mask scale: large enough that an individual update is useless to an
-/// observer, small enough that f32 cancellation error stays ~1e-3.
-const MASK_SCALE: f32 = 8.0;
+/// Fixed-point grid step for masks and masked updates: 2^-10.
+pub const MASK_GRID: f32 = 1.0 / 1024.0;
+
+/// Updates entering the masked path are clamped to ±this bound (see the
+/// module doc's exactness argument).
+pub const MASK_CLAMP: f32 = 64.0;
+
+/// Snap a value onto the mask grid: clamp to ±[`MASK_CLAMP`], round to
+/// the nearest multiple of [`MASK_GRID`]. Non-finite values collapse to
+/// 0 (a NaN would poison the whole aggregate).
+pub fn quantize_to_grid(x: f32) -> f32 {
+    if !x.is_finite() {
+        return 0.0;
+    }
+    (x.clamp(-MASK_CLAMP, MASK_CLAMP) * 1024.0).round() / 1024.0
+}
+
+/// One mask sample: a grid multiple uniform in `[-8, 8)`.
+fn grid_mask(rng: &mut Rng) -> f32 {
+    (rng.below(16384) as f32 - 8192.0) / 1024.0
+}
+
+/// The signed pairwise mask stream `my_id` applies against `peer`
+/// (sign convention: the lexicographically smaller id adds). `apply`
+/// receives each element's mask term; both [`mask_update`] and the
+/// server's subtraction walk this exact code path.
+pub fn for_each_mask_term(
+    my_id: &str,
+    peer: &str,
+    round: u64,
+    base_seed: u64,
+    len: usize,
+    mut apply: impl FnMut(usize, f32),
+) {
+    let mut rng = Rng::seed_from(pair_seed(base_seed, round, my_id, peer));
+    let sign = if my_id < peer { 1.0f32 } else { -1.0f32 };
+    for i in 0..len {
+        apply(i, sign * grid_mask(&mut rng));
+    }
+}
 
 /// Apply pairwise masks to a flat update. `peers` must include every
-/// cohort member of this round, *including* `my_id`.
+/// cohort member of this round, *including* `my_id`. The update is
+/// first snapped onto the mask grid ([`quantize_to_grid`] — a ≤ 2^-11
+/// perturbation), which is what makes cancellation exact.
 pub fn mask_update(
     params: &mut [f32],
     my_id: &str,
@@ -58,18 +117,39 @@ pub fn mask_update(
             "secagg peer list does not contain self ({my_id})"
         )));
     }
+    for p in params.iter_mut() {
+        *p = quantize_to_grid(*p);
+    }
     for peer in peers {
         if *peer == my_id {
             continue;
         }
-        let mut rng = Rng::seed_from(pair_seed(base_seed, round, my_id, peer));
-        // sign convention: the lexicographically smaller id adds
-        let sign = if my_id < *peer { 1.0f32 } else { -1.0f32 };
-        for p in params.iter_mut() {
-            *p += sign * MASK_SCALE * rng.normal_f32();
-        }
+        for_each_mask_term(my_id, peer, round, base_seed, params.len(), |i, m| {
+            params[i] += m;
+        });
     }
     Ok(())
+}
+
+/// Server-side inverse of one client's masking: subtract every mask
+/// term `my_id` applied against `peers` (self excluded). Exact — the
+/// grid sums round-trip bit-for-bit, so unmasking a masked update
+/// recovers the quantized plain update's exact bits.
+pub fn unmask_update(
+    params: &mut [f32],
+    my_id: &str,
+    peers: &[&str],
+    round: u64,
+    base_seed: u64,
+) {
+    for peer in peers {
+        if *peer == my_id {
+            continue;
+        }
+        for_each_mask_term(my_id, peer, round, base_seed, params.len(), |i, m| {
+            params[i] -= m;
+        });
+    }
 }
 
 /// Client wrapper that masks outgoing fit updates when the server's
@@ -114,11 +194,15 @@ mod tests {
     use super::*;
 
     #[test]
-    fn masks_cancel_over_cohort() {
+    fn masks_cancel_over_cohort_bit_exactly() {
         let peers = ["a", "b", "c", "d"];
         let p = 512;
         let plain: Vec<Vec<f32>> = (0..4)
             .map(|i| (0..p).map(|j| (i * p + j) as f32 * 1e-3).collect())
+            .collect();
+        let quantized: Vec<Vec<f32>> = plain
+            .iter()
+            .map(|v| v.iter().map(|&x| quantize_to_grid(x)).collect())
             .collect();
         let mut masked = plain.clone();
         for (i, id) in peers.iter().enumerate() {
@@ -134,15 +218,29 @@ mod tests {
                 / p as f32;
             assert!(dist > 1.0, "client {i} barely masked: {dist}");
         }
-        // ...but the sums agree to f32 tolerance
+        // ...but the sums equal the quantized-plain sums bit for bit
         for j in 0..p {
-            let sum_plain: f32 = plain.iter().map(|v| v[j]).sum();
+            let sum_plain: f32 = quantized.iter().map(|v| v[j]).sum();
             let sum_masked: f32 = masked.iter().map(|v| v[j]).sum();
-            assert!(
-                (sum_plain - sum_masked).abs() < 1e-3,
+            assert_eq!(
+                sum_plain.to_bits(),
+                sum_masked.to_bits(),
                 "j={j}: {sum_plain} vs {sum_masked}"
             );
         }
+    }
+
+    #[test]
+    fn unmask_recovers_exact_quantized_update() {
+        let peers = ["alpha", "beta-2", "γ node"];
+        let plain: Vec<f32> = (0..64).map(|j| (j as f32 - 32.0) * 0.013).collect();
+        let want: Vec<f32> = plain.iter().map(|&x| quantize_to_grid(x)).collect();
+        let mut v = plain.clone();
+        mask_update(&mut v, "beta-2", &peers, 9, 1234).unwrap();
+        unmask_update(&mut v, "beta-2", &peers, 9, 1234);
+        let got: Vec<u32> = v.iter().map(|x| x.to_bits()).collect();
+        let exp: Vec<u32> = want.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, exp);
     }
 
     #[test]
@@ -165,8 +263,28 @@ mod tests {
     }
 
     #[test]
+    fn quantize_grid_properties() {
+        assert_eq!(quantize_to_grid(0.0), 0.0);
+        assert_eq!(quantize_to_grid(1.0), 1.0); // grid multiples pass through
+        assert_eq!(quantize_to_grid(100.0), MASK_CLAMP);
+        assert_eq!(quantize_to_grid(-100.0), -MASK_CLAMP);
+        assert_eq!(quantize_to_grid(f32::NAN), 0.0);
+        assert_eq!(quantize_to_grid(f32::INFINITY), 0.0);
+        let x = 0.123_456_f32;
+        assert!((quantize_to_grid(x) - x).abs() <= MASK_GRID / 2.0 + f32::EPSILON);
+    }
+
+    #[test]
     fn id_hash_stable_and_distinct() {
         assert_eq!(id_hash("tx2-0"), id_hash("tx2-0"));
         assert_ne!(id_hash("tx2-0"), id_hash("tx2-1"));
+    }
+
+    #[test]
+    fn pair_seed_symmetric_for_arbitrary_string_ids() {
+        for (a, b) in [("pixel4-0", "jetson_tx2_gpu-3"), ("β", "α"), ("a b", "c,d")] {
+            assert_eq!(pair_seed(7, 3, a, b), pair_seed(7, 3, b, a));
+            assert_ne!(pair_seed(7, 3, a, b), pair_seed(7, 4, a, b));
+        }
     }
 }

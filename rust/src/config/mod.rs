@@ -259,34 +259,31 @@ impl ExperimentConfig {
         if !(0.0..1.0).contains(&self.dropout) {
             return Err(Error::Config("dropout must be in [0, 1)".into()));
         }
-        if self.secure_agg && self.dropout > 0.0 {
-            return Err(Error::Config(
-                "secure_agg requires full participation (SecAgg0 has no dropout                  recovery) — set dropout to 0".into(),
-            ));
-        }
         if let Some(k) = self.async_buffer {
             if k == 0 {
                 return Err(Error::Config("async_buffer must be > 0".into()));
             }
-            if self.secure_agg {
-                return Err(Error::Config(
-                    "async_buffer is incompatible with secure_agg (SecAgg0 masks \
-                     cancel only over a fixed synchronous cohort)".into(),
-                ));
+            // FedAvg (→ FedBuff), FedProx (→ FedProxBuff) and QFedAvg
+            // (→ QFedAvgBuff) have buffered-async adapters; secure_agg and
+            // quantize_f16 compose as async wrappers. Cutoff/momentum
+            // remain barrier-only.
+            match self.strategy {
+                StrategyConfig::FedAvg
+                | StrategyConfig::FedProx { .. }
+                | StrategyConfig::QFedAvg { .. } => {}
+                _ => {
+                    return Err(Error::Config(format!(
+                        "async_buffer supports fedavg, fedprox and qfedavg only \
+                         — {:?} has no buffered-async adapter",
+                        self.strategy
+                    )))
+                }
             }
-            if self.quantize_f16 {
+            if self.secure_agg && self.strategy != StrategyConfig::FedAvg {
                 return Err(Error::Config(
-                    "async_buffer is incompatible with quantize_f16 (the wire \
-                     quantizer wraps the synchronous strategy only)".into(),
+                    "secure_agg folds are unweighted (masked updates cannot be \
+                     reweighted) — combine it with the fedavg strategy only".into(),
                 ));
-            }
-            if self.strategy != StrategyConfig::FedAvg {
-                return Err(Error::Config(format!(
-                    "async_buffer replaces the synchronous strategy with FedBuff \
-                     — {:?} would be silently ignored; set strategy to fedavg \
-                     (the default) or drop async_buffer",
-                    self.strategy
-                )));
             }
             if self.fraction_fit != 1.0 {
                 return Err(Error::Config(
@@ -577,12 +574,120 @@ impl PolicyConfig {
     }
 }
 
+/// Which aggregation strategy the population-scale engine (and the
+/// live `ExecCore`) runs. Orthogonal to the sync/async *mode* knob
+/// (`async_buffer`): any strategy composes with either mode, so
+/// `fedbuff` is **not** a variant here — the CLI maps
+/// `--strategy fedbuff[:K]` to `FedAvg` plus `async_buffer = K`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SchedStrategyConfig {
+    /// Plain example-weighted averaging (the engine's historical
+    /// behavior; staleness-discounted in async mode).
+    FedAvg,
+    /// q-fair reweighting: fold weights scale with `loss^q`, steering
+    /// capacity toward badly-served clients. `q = 0` is bit-identical
+    /// to FedAvg.
+    QFedAvg { q: f64 },
+    /// Proximal surrogate term: clients optimize `f_i(w) + mu/2·|w-w_t|²`,
+    /// damping fold aggressiveness by `1/(1+mu)`. `mu = 0` is
+    /// bit-identical to FedAvg.
+    FedProx { mu: f64 },
+    /// f16-quantized payloads both ways — halves bytes-on-wire.
+    Compressed,
+    /// Pairwise-masked secure aggregation: masks cancel exactly in the
+    /// fold; adds mask-exchange wire overhead and forbids per-client
+    /// reweighting after masking (fold weight is 1.0).
+    SecAgg,
+}
+
+/// Default fairness exponent for `--strategy qfedavg`.
+pub const DEFAULT_QFEDAVG_Q: f64 = 1.0;
+/// Default proximal coefficient for `--strategy fedprox`.
+pub const DEFAULT_FEDPROX_MU: f64 = 0.01;
+
+impl SchedStrategyConfig {
+    /// Parse `fedavg` | `qfedavg[:Q]` | `fedprox[:MU]` | `compressed` |
+    /// `secagg`. `fedbuff` is rejected with a hint: it is a *mode*, not
+    /// a strategy (the CLI layer maps it to FedAvg + async).
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "fedavg" => return Ok(SchedStrategyConfig::FedAvg),
+            "qfedavg" => return Ok(SchedStrategyConfig::QFedAvg { q: DEFAULT_QFEDAVG_Q }),
+            "fedprox" => return Ok(SchedStrategyConfig::FedProx { mu: DEFAULT_FEDPROX_MU }),
+            "compressed" => return Ok(SchedStrategyConfig::Compressed),
+            "secagg" => return Ok(SchedStrategyConfig::SecAgg),
+            "fedbuff" => {
+                return Err(Error::Config(
+                    "fedbuff is an engine mode, not an aggregation strategy; use \
+                     --strategy fedbuff[:K] on the CLI (which maps to fedavg + \
+                     async_buffer) or set async_buffer in JSON"
+                        .into(),
+                ))
+            }
+            _ => {}
+        }
+        if let Some(rest) = s.strip_prefix("qfedavg:") {
+            let q: f64 = rest
+                .parse()
+                .map_err(|_| Error::Config(format!("bad q in {s:?}")))?;
+            return Ok(SchedStrategyConfig::QFedAvg { q });
+        }
+        if let Some(rest) = s.strip_prefix("fedprox:") {
+            let mu: f64 = rest
+                .parse()
+                .map_err(|_| Error::Config(format!("bad mu in {s:?}")))?;
+            return Ok(SchedStrategyConfig::FedProx { mu });
+        }
+        Err(Error::Config(format!(
+            "unknown strategy {s:?} (fedavg | qfedavg[:Q] | fedprox[:MU] | compressed | secagg)"
+        )))
+    }
+
+    /// Human-readable label distinguishing variants (comparison-table
+    /// row names).
+    pub fn label(&self) -> String {
+        match self {
+            SchedStrategyConfig::FedAvg => "fedavg".into(),
+            SchedStrategyConfig::QFedAvg { q } => format!("qfedavg:{q}"),
+            SchedStrategyConfig::FedProx { mu } => format!("fedprox:{mu}"),
+            SchedStrategyConfig::Compressed => "compressed".into(),
+            SchedStrategyConfig::SecAgg => "secagg".into(),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        match self {
+            SchedStrategyConfig::QFedAvg { q } => {
+                if *q < 0.0 || !q.is_finite() {
+                    return Err(Error::Config("qfedavg q must be finite and >= 0".into()));
+                }
+            }
+            SchedStrategyConfig::FedProx { mu } => {
+                if *mu < 0.0 || !mu.is_finite() {
+                    return Err(Error::Config("fedprox mu must be finite and >= 0".into()));
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+impl Default for SchedStrategyConfig {
+    fn default() -> Self {
+        SchedStrategyConfig::FedAvg
+    }
+}
+
 /// A population-scale scheduling experiment (the `sched` subcommand and
 /// [`crate::sim::population`]).
 #[derive(Debug, Clone)]
 pub struct ScheduleConfig {
     pub name: String,
     pub policy: PolicyConfig,
+    /// Aggregation strategy the engine folds with (fold weights +
+    /// bytes-on-wire model). Orthogonal to `async_buffer`.
+    pub strategy: SchedStrategyConfig,
     /// Round deadline τ (s): selected clients that have not reported by
     /// τ are dropped and their energy wasted. None = wait for everyone.
     pub deadline_s: Option<f64>,
@@ -663,6 +768,7 @@ impl Default for ScheduleConfig {
         ScheduleConfig {
             name: "sched".into(),
             policy: PolicyConfig::Uniform,
+            strategy: SchedStrategyConfig::FedAvg,
             deadline_s: None,
             cohort_size: 100,
             population: 100_000,
@@ -699,6 +805,10 @@ impl ScheduleConfig {
     }
     pub fn policy(mut self, p: PolicyConfig) -> Self {
         self.policy = p;
+        self
+    }
+    pub fn strategy(mut self, s: SchedStrategyConfig) -> Self {
+        self.strategy = s;
         self
     }
     pub fn deadline(mut self, tau_s: Option<f64>) -> Self {
@@ -797,11 +907,13 @@ impl ScheduleConfig {
     /// does not match — a silent config drift would otherwise break the
     /// bit-identical-replay guarantee.
     ///
-    /// The `schedule-v2:` prefix marks the sharded-engine era: the
-    /// normalized Debug shape gained the `workers` field, so v1 strings
-    /// can never equal v2 strings and old checkpoints fail resume with
-    /// an explicit mismatch instead of a silent semantic drift (the
-    /// FORMAT.md fingerprint policy).
+    /// The version prefix marks fingerprint-era boundaries (the
+    /// FORMAT.md fingerprint policy): `v2` was the sharded-engine era
+    /// (Debug shape gained `workers`); `v3` is the unified-strategy
+    /// era (Debug shape gained `strategy`, and the cost books gained
+    /// bytes-on-wire). Prefixes differ across eras, so old checkpoints
+    /// fail resume with an explicit mismatch instead of a silent
+    /// semantic drift.
     pub fn fingerprint(&self) -> String {
         let mut c = self.clone();
         c.name = String::new();
@@ -812,7 +924,7 @@ impl ScheduleConfig {
         c.resume_from = None;
         c.obs_out = None;
         c.workers = 1;
-        format!("schedule-v2:{c:?}")
+        format!("schedule-v3:{c:?}")
     }
 
     /// Async in-flight bound: explicit `max_concurrency`, or the cohort
@@ -909,6 +1021,7 @@ impl ScheduleConfig {
         if self.workers == 0 {
             return Err(Error::Config("workers must be >= 1".into()));
         }
+        self.strategy.validate()?;
         self.policy.validate()
     }
 
@@ -928,6 +1041,9 @@ impl ScheduleConfig {
         }
         if let Some(v) = doc.opt("policy") {
             cfg.policy = PolicyConfig::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.opt("strategy") {
+            cfg.strategy = SchedStrategyConfig::parse(v.as_str()?)?;
         }
         if let Some(v) = doc.opt("deadline_s") {
             cfg.deadline_s = Some(v.as_f64()?);
@@ -1118,6 +1234,57 @@ mod tests {
     }
 
     #[test]
+    fn sched_strategy_parses_all_forms() {
+        assert_eq!(
+            SchedStrategyConfig::parse("fedavg").unwrap(),
+            SchedStrategyConfig::FedAvg
+        );
+        assert_eq!(
+            SchedStrategyConfig::parse("qfedavg").unwrap(),
+            SchedStrategyConfig::QFedAvg { q: DEFAULT_QFEDAVG_Q }
+        );
+        assert_eq!(
+            SchedStrategyConfig::parse("qfedavg:2.5").unwrap(),
+            SchedStrategyConfig::QFedAvg { q: 2.5 }
+        );
+        assert_eq!(
+            SchedStrategyConfig::parse("fedprox").unwrap(),
+            SchedStrategyConfig::FedProx { mu: DEFAULT_FEDPROX_MU }
+        );
+        assert_eq!(
+            SchedStrategyConfig::parse("fedprox:0.5").unwrap(),
+            SchedStrategyConfig::FedProx { mu: 0.5 }
+        );
+        assert_eq!(
+            SchedStrategyConfig::parse("compressed").unwrap(),
+            SchedStrategyConfig::Compressed
+        );
+        assert_eq!(SchedStrategyConfig::parse("secagg").unwrap(), SchedStrategyConfig::SecAgg);
+        // fedbuff is a mode, not a strategy — rejected with a hint
+        let err = SchedStrategyConfig::parse("fedbuff").unwrap_err().to_string();
+        assert!(err.contains("mode"), "{err}");
+        assert!(SchedStrategyConfig::parse("qfedavg:x").is_err());
+        assert!(SchedStrategyConfig::parse("fedprox:").is_err());
+        assert!(SchedStrategyConfig::parse("dp-sgd").is_err());
+        assert!(SchedStrategyConfig::QFedAvg { q: -1.0 }.validate().is_err());
+        assert!(SchedStrategyConfig::FedProx { mu: f64::NAN }.validate().is_err());
+        // labels round-trip through parse
+        for s in [
+            SchedStrategyConfig::FedAvg,
+            SchedStrategyConfig::QFedAvg { q: 2.5 },
+            SchedStrategyConfig::FedProx { mu: 0.5 },
+            SchedStrategyConfig::Compressed,
+            SchedStrategyConfig::SecAgg,
+        ] {
+            assert_eq!(SchedStrategyConfig::parse(&s.label()).unwrap(), s);
+        }
+        // JSON knob
+        let cfg = ScheduleConfig::from_json(r#"{"strategy": "qfedavg:2"}"#).unwrap();
+        assert_eq!(cfg.strategy, SchedStrategyConfig::QFedAvg { q: 2.0 });
+        assert!(ScheduleConfig::from_json(r#"{"strategy": "fedbuff"}"#).is_err());
+    }
+
+    #[test]
     fn policy_labels_distinguish_variants() {
         let a = PolicyConfig::parse("utility:1.5").unwrap();
         let b = PolicyConfig::parse("utility:3").unwrap();
@@ -1185,19 +1352,31 @@ mod tests {
         assert_eq!(cfg.max_concurrency, 32);
         assert!(ExperimentConfig::from_json(r#"{"async_buffer": 0}"#).is_err());
         assert!(ExperimentConfig::from_json(r#"{"staleness_alpha": -1}"#).is_err());
+        // the async loop now composes secagg/f16/fedprox/qfedavg adapters
+        ExperimentConfig::from_json(r#"{"async_buffer": 4, "secure_agg": true}"#).unwrap();
+        ExperimentConfig::from_json(r#"{"async_buffer": 4, "quantize_f16": true}"#).unwrap();
+        ExperimentConfig::from_json(
+            r#"{"async_buffer": 4, "strategy": {"kind": "fedprox", "mu": 0.1}}"#,
+        )
+        .unwrap();
+        ExperimentConfig::from_json(
+            r#"{"async_buffer": 4, "strategy": {"kind": "qfedavg", "q": 1.0}}"#,
+        )
+        .unwrap();
         assert!(
-            ExperimentConfig::from_json(r#"{"async_buffer": 4, "secure_agg": true}"#).is_err(),
-            "secure aggregation needs a synchronous cohort"
-        );
-        assert!(
-            ExperimentConfig::from_json(r#"{"async_buffer": 4, "quantize_f16": true}"#).is_err()
+            ExperimentConfig::from_json(
+                r#"{"async_buffer": 4, "strategy": {"kind": "fedavgm", "beta": 0.9}}"#
+            )
+            .is_err(),
+            "momentum has no buffered-async adapter"
         );
         assert!(
             ExperimentConfig::from_json(
-                r#"{"async_buffer": 4, "strategy": {"kind": "fedprox", "mu": 0.1}}"#
+                r#"{"async_buffer": 4, "secure_agg": true,
+                    "strategy": {"kind": "fedprox", "mu": 0.1}}"#
             )
             .is_err(),
-            "a non-FedAvg strategy must not be silently replaced by FedBuff"
+            "secagg folds are unweighted — fedavg only"
         );
         assert!(
             ExperimentConfig::from_json(r#"{"async_buffer": 4, "fraction_fit": 0.5}"#).is_err()
@@ -1270,8 +1449,27 @@ mod tests {
         assert_eq!(base.fingerprint(), base.clone().obs("obs-dir").fingerprint());
         // worker count is an execution knob, not an identity knob
         assert_eq!(base.fingerprint(), base.clone().workers(8).fingerprint());
-        // the sharded-engine era is a new fingerprint namespace
-        assert!(base.fingerprint().starts_with("schedule-v2:"));
+        // the unified-strategy era is a new fingerprint namespace
+        assert!(base.fingerprint().starts_with("schedule-v3:"));
+        // the strategy is a trajectory knob (fold weights + wire bytes)
+        assert_ne!(
+            base.fingerprint(),
+            base.clone()
+                .strategy(SchedStrategyConfig::QFedAvg { q: 1.0 })
+                .fingerprint()
+        );
+        assert_ne!(
+            base.clone()
+                .strategy(SchedStrategyConfig::QFedAvg { q: 1.0 })
+                .fingerprint(),
+            base.clone()
+                .strategy(SchedStrategyConfig::QFedAvg { q: 2.0 })
+                .fingerprint()
+        );
+        assert_ne!(
+            base.fingerprint(),
+            base.clone().strategy(SchedStrategyConfig::SecAgg).fingerprint()
+        );
         // everything trajectory-relevant does
         assert_ne!(base.fingerprint(), base.clone().seed(1).fingerprint());
         assert_ne!(base.fingerprint(), base.clone().cohort(7).fingerprint());

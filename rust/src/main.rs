@@ -21,7 +21,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use flowrs::client::{app, BaseModel, DeviceTrainer};
-use flowrs::config::{AggBackend, ExperimentConfig, PolicyConfig, ScheduleConfig, StrategyConfig};
+use flowrs::config::{
+    AggBackend, ExperimentConfig, PolicyConfig, ScheduleConfig, SchedStrategyConfig,
+    StrategyConfig,
+};
 use flowrs::data::{Partitioner, SyntheticSpec};
 use flowrs::device::profiles;
 use flowrs::error::{Error, Result};
@@ -145,6 +148,10 @@ fn print_usage() {
                       --config <file.json> | --population N --cohort K --rounds R\n\
                       --policy uniform|deadline|utility[:ALPHA[:EXPLORE]]|fair[:CAP]\n\
                       (fair = uniform under a per-device selection-count cap)\n\
+                      --strategy fedavg|fedbuff[:K]|qfedavg[:Q]|fedprox[:MU]|\n\
+                      compressed|secagg  (fold rule + bytes-on-wire shape;\n\
+                      fedbuff is sugar for fedavg under --mode async;\n\
+                      composition rules in rust/src/strategy/README.md)\n\
                       --compare p1,p2,.. --deadline TAU_S --churn ON_S,OFF_S\n\
                       --trace <file.csv|json>  (replay recorded availability +\n\
                       device classes; spec in rust/src/sched/TRACES.md;\n\
@@ -438,6 +445,23 @@ fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
     if let Some(v) = args.get("policy") {
         cfg.policy = PolicyConfig::parse(v)?;
     }
+    if let Some(v) = args.get("strategy") {
+        // `fedbuff[:K]` is an execution *mode*, not a fold rule: it maps
+        // to FedAvg folds under the streaming loop, so accept it here as
+        // sugar for `--strategy fedavg --mode async [--async-buffer K]`.
+        if v == "fedbuff" || v.starts_with("fedbuff:") {
+            if let Some(k) = v.strip_prefix("fedbuff:") {
+                cfg.async_buffer = Some(k.parse().map_err(|_| {
+                    Error::Config(format!("bad buffer size in --strategy {v:?}"))
+                })?);
+            } else if cfg.async_buffer.is_none() {
+                cfg.async_buffer = Some(flowrs::strategy::fedbuff::DEFAULT_BUFFER_SIZE);
+            }
+            cfg.strategy = SchedStrategyConfig::FedAvg;
+        } else {
+            cfg.strategy = SchedStrategyConfig::parse(v)?;
+        }
+    }
     if let Some(v) = args.get("trace") {
         cfg.trace_file = Some(v.into());
     }
@@ -551,6 +575,9 @@ fn cmd_sched(args: &Args) -> Result<()> {
                     run_cfg.async_buffer = None;
                     run_cfg.policy.label()
                 };
+                if run_cfg.strategy != SchedStrategyConfig::FedAvg {
+                    label = format!("{label}+{}", run_cfg.strategy.label());
+                }
                 if args.get("compare-scenarios").is_some() {
                     let s = scenario.as_deref().unwrap_or("baseline");
                     label = format!("{s}/{label}");
@@ -597,6 +624,7 @@ fn cmd_sched(args: &Args) -> Result<()> {
             "time (min)",
             "energy (kJ)",
             "wasted (kJ)",
+            "wire (MB)",
             "hit-rate",
             "dropped",
             "mean stal",
@@ -617,6 +645,7 @@ fn cmd_sched(args: &Args) -> Result<()> {
             format!("{:.2}", report.total_time_s() / 60.0),
             format!("{:.2}", report.total_energy_j() / 1e3),
             format!("{:.2}", report.wasted_energy_j() / 1e3),
+            format!("{:.1}", report.total_bytes() as f64 / 1e6),
             format!("{:.3}", report.hit_rate()),
             report.dropped_total().to_string(),
             format!("{:.2}", report.mean_staleness()),

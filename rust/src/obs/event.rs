@@ -174,6 +174,11 @@ pub enum Event {
         eval_loss: f64,
         /// Federated evaluation accuracy after the flush.
         accuracy: f64,
+        /// Downlink wire bytes this round (all dispatches, drops
+        /// included); reconciles bit-exactly with the ledger's book.
+        bytes_down: u64,
+        /// Uplink wire bytes this round (folded results only).
+        bytes_up: u64,
     },
     /// A checkpoint file was atomically written (live/global sink only —
     /// never the per-run stream, so kill/resume splices stay
@@ -341,6 +346,8 @@ impl Event {
                 dropped_churn,
                 eval_loss,
                 accuracy,
+                bytes_down,
+                bytes_up,
                 ..
             } => {
                 num("round", round as f64);
@@ -352,6 +359,8 @@ impl Event {
                 num("dropped_churn", dropped_churn as f64);
                 num("eval_loss", eval_loss);
                 num("accuracy", accuracy);
+                num("bytes_down", bytes_down as f64);
+                num("bytes_up", bytes_up as f64);
             }
             Event::CheckpointWrite { version, bytes, .. } => {
                 num("version", version as f64);
@@ -452,6 +461,8 @@ impl Event {
                 dropped_churn: u("dropped_churn")?,
                 eval_loss: f("eval_loss")?,
                 accuracy: f("accuracy")?,
+                bytes_down: u("bytes_down")?,
+                bytes_up: u("bytes_up")?,
             }),
             "checkpoint_write" => Ok(Event::CheckpointWrite {
                 t_s,
@@ -527,6 +538,8 @@ mod tests {
                 dropped_churn: 1,
                 eval_loss: 1.5,
                 accuracy: 0.25,
+                bytes_down: 4_379_968,
+                bytes_up: 3_284_976,
             },
             Event::CheckpointWrite { t_s: 0.25, version: 3, bytes: 4096 },
             Event::FrameSent { t_s: 0.5, bytes: 128 },

@@ -78,6 +78,10 @@ pub struct RoundCost {
     pub bytes_down: u64,
     /// Parameter bytes folded devices→server this round.
     pub bytes_up: u64,
+    /// `round_end`'s own reported downlink byte book (cross-check).
+    pub reported_bytes_down: u64,
+    /// `round_end`'s own reported uplink byte book (cross-check).
+    pub reported_bytes_up: u64,
     /// Per-hardware-class breakdown.
     pub classes: BTreeMap<&'static str, ClassCost>,
 }
@@ -161,12 +165,23 @@ impl CostLedger {
                 }
                 self.cur.energy_j += energy_j;
             }
-            Event::RoundEnd { round, t_s, round_time_s, energy_j, wasted_j, .. } => {
+            Event::RoundEnd {
+                round,
+                t_s,
+                round_time_s,
+                energy_j,
+                wasted_j,
+                bytes_down,
+                bytes_up,
+                ..
+            } => {
                 self.cur.round = round;
                 self.cur.t_end_s = t_s;
                 self.cur.round_time_s = round_time_s;
                 self.cur.reported_energy_j = energy_j;
                 self.cur.reported_wasted_j = wasted_j;
+                self.cur.reported_bytes_down = bytes_down;
+                self.cur.reported_bytes_up = bytes_up;
                 self.rounds.push(std::mem::take(&mut self.cur));
             }
             // Pure markers / live-path events carry no ledger costs.
@@ -207,6 +222,18 @@ impl CostLedger {
                 return Err(Error::Config(format!(
                     "round {}: ledger wasted energy {} != reported {}",
                     r.round, r.wasted_j, r.reported_wasted_j
+                )));
+            }
+            if r.bytes_down != r.reported_bytes_down {
+                return Err(Error::Config(format!(
+                    "round {}: ledger bytes_down {} != reported {}",
+                    r.round, r.bytes_down, r.reported_bytes_down
+                )));
+            }
+            if r.bytes_up != r.reported_bytes_up {
+                return Err(Error::Config(format!(
+                    "round {}: ledger bytes_up {} != reported {}",
+                    r.round, r.bytes_up, r.reported_bytes_up
                 )));
             }
         }
@@ -338,6 +365,8 @@ mod tests {
                 dropped_churn: 0,
                 eval_loss: 1.0,
                 accuracy: 0.1,
+                bytes_down: 200,
+                bytes_up: 100,
             },
         ]
     }
@@ -371,6 +400,22 @@ mod tests {
         }
         let ledger = CostLedger::from_events(&evs);
         assert!(ledger.verify().is_err());
+    }
+
+    #[test]
+    fn verify_catches_mismatched_byte_books() {
+        for field in ["down", "up"] {
+            let mut evs = sample_events();
+            if let Event::RoundEnd { bytes_down, bytes_up, .. } = &mut evs[6] {
+                match field {
+                    "down" => *bytes_down += 1,
+                    _ => *bytes_up += 1,
+                }
+            }
+            let ledger = CostLedger::from_events(&evs);
+            let err = ledger.verify().unwrap_err().to_string();
+            assert!(err.contains(&format!("bytes_{field}")), "{err}");
+        }
     }
 
     #[test]

@@ -69,12 +69,14 @@ pub fn replay_registry(events: &[Event]) -> Registry {
     let reg = Registry::new();
     for ev in events {
         match ev {
-            Event::Dispatch { work_s, .. } => {
+            Event::Dispatch { work_s, bytes_down, .. } => {
                 reg.counter("sched_dispatches_total").inc();
+                reg.counter("sched_bytes_down_total").add(*bytes_down);
                 reg.histogram("sched_dispatch_work_s").record(*work_s);
             }
-            Event::Fold { staleness, .. } => {
+            Event::Fold { staleness, bytes_up, .. } => {
                 reg.counter("sched_folds_total").inc();
+                reg.counter("sched_bytes_up_total").add(*bytes_up);
                 reg.histogram("sched_fold_staleness").record(*staleness as f64);
             }
             Event::DropDeadline { .. } => {

@@ -41,6 +41,7 @@ const SEC_TRAINER: &str = "TRNR";
 const SEC_IN_FLIGHT: &str = "INFL";
 const SEC_INDEX: &str = "INDX";
 const SEC_ENGINE_ROUNDS: &str = "ERND";
+const SEC_ENGINE_WIRE: &str = "EWIR";
 const SEC_SHARDS: &str = "SHRD";
 const SEC_PARAMS: &str = "PARM";
 const SEC_SERVER_META: &str = "SMET";
@@ -201,6 +202,18 @@ impl EngineCheckpoint {
 
         w.section(SEC_ENGINE_ROUNDS, encode_population_rounds(&self.rounds));
 
+        // Per-round wire-byte books ride in their own section: `ERND`'s
+        // 17-field layout shipped and is frozen (FORMAT.md — extend with
+        // a new tag, never by changing a shipped layout). A pre-`EWIR`
+        // checkpoint decodes with zeroed byte books.
+        let mut wire = Enc::new();
+        wire.u64(self.rounds.len() as u64);
+        for r in &self.rounds {
+            wire.u64(r.bytes_down);
+            wire.u64(r.bytes_up);
+        }
+        w.section(SEC_ENGINE_WIRE, wire.into_bytes());
+
         if let Some(sh) = &self.shards {
             let mut e = Enc::new();
             e.u64(sh.workers);
@@ -280,7 +293,22 @@ impl EngineCheckpoint {
             Some(buf) => Some(decode_index_state(buf)?),
             None => None,
         };
-        let rounds = decode_population_rounds(r.section(SEC_ENGINE_ROUNDS)?)?;
+        let mut rounds = decode_population_rounds(r.section(SEC_ENGINE_ROUNDS)?)?;
+        if let Some(buf) = r.opt_section(SEC_ENGINE_WIRE) {
+            let mut d = Dec::new(buf);
+            let n = d.count("wire-byte round record")?;
+            if n != rounds.len() {
+                return Err(Error::Persist(format!(
+                    "EWIR carries {n} records for {} rounds",
+                    rounds.len()
+                )));
+            }
+            for rec in &mut rounds {
+                rec.bytes_down = d.u64()?;
+                rec.bytes_up = d.u64()?;
+            }
+            d.done()?;
+        }
         let shards = match r.opt_section(SEC_SHARDS) {
             Some(buf) => {
                 let mut d = Dec::new(buf);
@@ -439,6 +467,10 @@ pub fn decode_population_rounds(buf: &[u8]) -> Result<Vec<PopulationRound>> {
             mean_staleness: d.f64()?,
             max_staleness: d.u64()?,
             in_flight: d.u64()? as usize,
+            // Byte books live in the EWIR section (merged by the caller);
+            // a pre-EWIR checkpoint leaves them zeroed.
+            bytes_down: 0,
+            bytes_up: 0,
         });
     }
     d.done()?;
@@ -797,6 +829,8 @@ mod tests {
                 mean_staleness: 0.5,
                 max_staleness: 2,
                 in_flight: 1,
+                bytes_down: 4_379_968,
+                bytes_up: 2_189_984,
                 ..Default::default()
             }],
             shards: Some(ShardSeeds {

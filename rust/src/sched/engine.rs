@@ -406,6 +406,13 @@ pub struct PopulationRound {
     /// Async mode only: dispatches still in flight when this version
     /// flushed.
     pub in_flight: usize,
+    /// Downlink wire bytes this round (every dispatch issued in the
+    /// window, including ones that later drop — the broadcast is spent
+    /// either way), from the strategy's wire model.
+    pub bytes_down: u64,
+    /// Uplink wire bytes this round (folded results only; a dropped
+    /// client never completes its upload).
+    pub bytes_up: u64,
 }
 
 /// A full population-scale experiment.
@@ -478,16 +485,22 @@ impl PopulationReport {
         }
     }
 
+    /// Total downlink + uplink wire bytes across the run.
+    pub fn total_bytes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.bytes_down + r.bytes_up).sum()
+    }
+
     /// CSV export (header + one row per round).
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "round,available,selected,completed,dropped_deadline,dropped_churn,\
              train_loss,eval_loss,accuracy,steps,round_time_s,cum_time_s,\
-             round_energy_j,wasted_energy_j,mean_staleness,max_staleness,in_flight\n",
+             round_energy_j,wasted_energy_j,mean_staleness,max_staleness,in_flight,\
+             bytes_down,bytes_up\n",
         );
         for r in &self.rounds {
             out.push_str(&format!(
-                "{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.3},{:.3},{:.3},{:.3},{},{}\n",
+                "{},{},{},{},{},{},{:.6},{:.6},{:.6},{},{:.3},{:.3},{:.3},{:.3},{:.3},{},{},{},{}\n",
                 r.round,
                 r.available,
                 r.selected,
@@ -505,6 +518,8 @@ impl PopulationReport {
                 r.mean_staleness,
                 r.max_staleness,
                 r.in_flight,
+                r.bytes_down,
+                r.bytes_up,
             ));
         }
         out
@@ -605,6 +620,11 @@ pub struct Engine<T: CohortTrainer> {
     mode: ExecMode,
     /// Modeled local train steps per dispatch.
     steps: u64,
+    /// Per-dispatch wire traffic from the strategy
+    /// ([`crate::strategy::wire::WireModel`]); derived once in
+    /// [`Engine::new`] from the strategy config, the model size, and
+    /// the mask-exchange group (cohort in sync, `k_flush` in async).
+    wire: crate::strategy::wire::WireModel,
     /// Model versions flushed so far (== rounds completed in sync mode).
     version: u64,
     /// Event-loop virtual time.
@@ -627,6 +647,13 @@ pub struct Engine<T: CohortTrainer> {
     dropped_churn: usize,
     wasted_j: f64,
     energy_j: f64,
+    /// Wire-byte books since the last flush: downlink counts at
+    /// dispatch (drops included — the broadcast is spent either way),
+    /// uplink counts at fold (a drop never completes its upload).
+    /// Always zero at a flush boundary, so checkpoints need no extra
+    /// state for them.
+    bytes_down_acc: u64,
+    bytes_up_acc: u64,
     /// Sync: slowest modeled finish over *all* dispatches (with no
     /// deadline the barrier waits even for doomed stragglers).
     slowest_all_s: f64,
@@ -674,6 +701,18 @@ impl<T: CohortTrainer> Engine<T> {
             ExecMode::Sync => None,
         };
         let steps = cfg.epochs.max(0) as u64 * cfg.steps_per_epoch;
+        // The secagg mask-exchange group is whatever cohort folds
+        // together: the full cohort in a barrier round, the flush
+        // quorum in streaming mode.
+        let group = match mode {
+            ExecMode::Sync => cfg.cohort_size as u64,
+            ExecMode::Async { k_flush } => k_flush as u64,
+        };
+        let wire = crate::strategy::wire::WireModel::for_strategy(
+            &cfg.strategy,
+            cfg.model_bytes as u64,
+            group,
+        );
         Ok(Engine {
             cfg: cfg.clone(),
             policy,
@@ -682,6 +721,7 @@ impl<T: CohortTrainer> Engine<T> {
             clock_s: 0.0,
             mode,
             steps,
+            wire,
             version: 0,
             now_s: 0.0,
             entry_s: 0.0,
@@ -695,6 +735,8 @@ impl<T: CohortTrainer> Engine<T> {
             dropped_churn: 0,
             wasted_j: 0.0,
             energy_j: 0.0,
+            bytes_down_acc: 0,
+            bytes_up_acc: 0,
             slowest_all_s: 0.0,
             avail_count: 0,
             events_since_flush: 0,
@@ -904,7 +946,8 @@ impl<T: CohortTrainer> Engine<T> {
             round,
             cost: &self.cfg.cost,
             steps_per_round: self.steps,
-            model_bytes: self.cfg.model_bytes,
+            bytes_down: self.wire.bytes_down,
+            bytes_up: self.wire.bytes_up,
             target_cohort: self.cfg.cohort_size,
             deadline_s: self.cfg.deadline_s,
         };
@@ -985,7 +1028,8 @@ impl<T: CohortTrainer> Engine<T> {
             round: self.version + 1,
             cost: &self.cfg.cost,
             steps_per_round: self.steps,
-            model_bytes: self.cfg.model_bytes,
+            bytes_down: self.wire.bytes_down,
+            bytes_up: self.wire.bytes_up,
             target_cohort: want,
             deadline_s: self.cfg.deadline_s,
         };
@@ -1083,6 +1127,7 @@ impl<T: CohortTrainer> Engine<T> {
         d.last_selected_round = Some(self.version + 1);
         d.times_selected += 1;
         self.in_flight += 1;
+        self.bytes_down_acc += self.wire.bytes_down;
         self.heap.push(Reverse(Completion {
             resolve_s: if resolve_at_cutoff { cutoff_s } else { full_finish_s },
             device_idx: i,
@@ -1101,7 +1146,7 @@ impl<T: CohortTrainer> Engine<T> {
             },
             work_s: cutoff_s - now,
             energy_j,
-            bytes_down: self.cfg.model_bytes as u64,
+            bytes_down: self.wire.bytes_down,
         });
     }
 
@@ -1132,13 +1177,14 @@ impl<T: CohortTrainer> Engine<T> {
                     staleness,
                     resolve_s: ev.resolve_s,
                 });
+                self.bytes_up_acc += self.wire.bytes_up;
                 self.obs.emit(&Event::Fold {
                     t_s: ev.resolve_s,
                     device: i as u64,
                     class,
                     staleness,
                     energy_j: ev.energy_j,
-                    bytes_up: self.cfg.model_bytes as u64,
+                    bytes_up: self.wire.bytes_up,
                 });
             }
             Outcome::DropChurn => {
@@ -1164,24 +1210,70 @@ impl<T: CohortTrainer> Engine<T> {
         }
     }
 
+    /// Per-fold aggregation weights for the buffered results, by
+    /// strategy (the engine-side mirror of the live `AsyncStrategy`
+    /// adapters — see `strategy/README.md` for the composition rules):
+    ///
+    /// - **FedAvg / Compressed** — the staleness discount `(1+s)^-α`
+    ///   (f16 changes bytes, never weights; dequantized folds average
+    ///   exactly like FedAvg's).
+    /// - **FedProx{μ}** — `discount / (1+μ)`: the proximal term damps
+    ///   each client's drift toward its local optimum, so the surrogate
+    ///   fold advances by the same factor. μ = 0 divides by exactly 1.0
+    ///   and is bit-identical to FedAvg.
+    /// - **QFedAvg{q}** — `discount · h_i · (n/Σh)` with
+    ///   `h_i = (loss_i + ε)^q` from the device's last reported loss
+    ///   (1.0 before the first report): q-fair emphasis, renormalized
+    ///   so total fold mass matches FedAvg's. q = 0 makes every
+    ///   `h_i = 1.0` exactly (IEEE `powf(x, 0) = 1` for finite x > 0)
+    ///   and `n/Σh = 1.0` exactly, hence bit-identity with FedAvg.
+    /// - **SecAgg** — exactly 1.0: the server only ever sees the masked
+    ///   *sum*, so per-client reweighting after masking is impossible —
+    ///   the composition rule is "secagg disables the staleness
+    ///   discount", not an approximation of it.
+    fn fold_weights(&self) -> Vec<(usize, f64)> {
+        use crate::config::SchedStrategyConfig as S;
+        let alpha = self.cfg.staleness_alpha;
+        let discount =
+            |f: &BufferedFold| crate::strategy::fedbuff::staleness_discount(f.staleness, alpha);
+        match &self.cfg.strategy {
+            S::FedAvg | S::Compressed => {
+                self.buffer.iter().map(|f| (f.device_idx, discount(f))).collect()
+            }
+            S::SecAgg => self.buffer.iter().map(|f| (f.device_idx, 1.0)).collect(),
+            S::FedProx { mu } => self
+                .buffer
+                .iter()
+                .map(|f| (f.device_idx, discount(f) / (1.0 + mu)))
+                .collect(),
+            S::QFedAvg { q } => {
+                let h: Vec<f64> = self
+                    .buffer
+                    .iter()
+                    .map(|f| {
+                        let loss = self.pop.devices[f.device_idx].last_loss.unwrap_or(1.0);
+                        (loss.max(0.0) + crate::strategy::qfedavg::EPS).powf(*q)
+                    })
+                    .collect();
+                let sum: f64 = h.iter().sum();
+                let n = self.buffer.len() as f64;
+                self.buffer
+                    .iter()
+                    .zip(&h)
+                    .map(|(f, &hi)| (f.device_idx, discount(f) * hi * (n / sum)))
+                    .collect()
+            }
+        }
+    }
+
     /// Flush the buffer into a new model version: train the folds
-    /// (staleness-discounted; weight 1.0 in a barrier round), close the
+    /// (strategy-weighted; see [`Engine::fold_weights`]), close the
     /// books, and emit the round record. Shared by both modes — only the
     /// clock arithmetic differs (barrier close vs. flush-to-flush).
     fn flush(&mut self) -> Result<PopulationRound> {
         self.version += 1;
         let version = self.version;
-        let alpha = self.cfg.staleness_alpha;
-        let folds: Vec<(usize, f64)> = self
-            .buffer
-            .iter()
-            .map(|f| {
-                (
-                    f.device_idx,
-                    crate::strategy::fedbuff::staleness_discount(f.staleness, alpha),
-                )
-            })
-            .collect();
+        let folds = self.fold_weights();
         let (losses, eval_loss, accuracy) =
             self.trainer
                 .train_flush(version, &self.pop, &folds, self.steps)?;
@@ -1195,7 +1287,14 @@ impl<T: CohortTrainer> Engine<T> {
         let train_loss = if losses.is_empty() {
             f64::NAN
         } else {
-            losses.iter().sum::<f64>() / losses.len() as f64
+            // Fold-weighted mean: report the blend the model actually
+            // ingested, so q-fair / proximal reweighting shows up in the
+            // round record. For unit weights every product is exact
+            // (`l * 1.0 == l`) and the divisor sums to exactly `n`, so
+            // this is bit-identical to the plain mean FedAvg reports.
+            let num: f64 = folds.iter().zip(&losses).map(|((_, w), &l)| w * l).sum();
+            let den: f64 = folds.iter().map(|(_, w)| w).sum();
+            num / den
         };
         let overhead = self.cfg.cost.server_overhead_s;
 
@@ -1279,6 +1378,8 @@ impl<T: CohortTrainer> Engine<T> {
             },
             max_staleness,
             in_flight: self.in_flight,
+            bytes_down: self.bytes_down_acc,
+            bytes_up: self.bytes_up_acc,
         };
         self.obs.emit(&Event::Flush {
             t_s: self.clock_s,
@@ -1298,12 +1399,16 @@ impl<T: CohortTrainer> Engine<T> {
             dropped_churn: rec.dropped_churn as u64,
             eval_loss,
             accuracy,
+            bytes_down: rec.bytes_down,
+            bytes_up: rec.bytes_up,
         });
         self.buffer.clear();
         self.dropped_deadline = 0;
         self.dropped_churn = 0;
         self.wasted_j = 0.0;
         self.energy_j = 0.0;
+        self.bytes_down_acc = 0;
+        self.bytes_up_acc = 0;
         self.events_since_flush = 0;
         Ok(rec)
     }

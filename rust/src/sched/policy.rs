@@ -80,8 +80,11 @@ pub struct SelectionContext<'a> {
     pub cost: &'a CostModel,
     /// Modeled local train steps a selected client will run this round.
     pub steps_per_round: u64,
-    /// Parameter payload bytes on the wire, each way.
-    pub model_bytes: usize,
+    /// Downlink payload bytes per dispatch (server → client), from the
+    /// strategy's wire model ([`crate::strategy::wire::WireModel`]).
+    pub bytes_down: u64,
+    /// Uplink payload bytes per fold (client → server).
+    pub bytes_up: u64,
     /// How many clients the round wants.
     pub target_cohort: usize,
     /// Round deadline τ in seconds (modeled download + compute + upload).
@@ -90,15 +93,21 @@ pub struct SelectionContext<'a> {
 
 impl SelectionContext<'_> {
     /// Modeled end-to-end round time for one client on `device`.
+    ///
+    /// Charges one link transfer of `bytes_down + bytes_up`. When the
+    /// two directions are equal (every full-precision strategy) this is
+    /// bit-identical to the historical `2·comm(model_bytes)`: the comm
+    /// model is linear-in-bytes with a single rounding step, and
+    /// doubling an IEEE numerator commutes with that rounding.
     pub fn modeled_round_time_s(&self, device: &DeviceProfile) -> f64 {
-        let link = self.cost.comm(device, self.model_bytes);
-        self.cost.compute(device, self.steps_per_round).time_s + 2.0 * link.time_s
+        let link = self.cost.comm(device, (self.bytes_down + self.bytes_up) as usize);
+        self.cost.compute(device, self.steps_per_round).time_s + link.time_s
     }
 
     /// Modeled end-to-end round energy for one client on `device`.
     pub fn modeled_round_energy_j(&self, device: &DeviceProfile) -> f64 {
-        let link = self.cost.comm(device, self.model_bytes);
-        self.cost.compute(device, self.steps_per_round).energy_j + 2.0 * link.energy_j
+        let link = self.cost.comm(device, (self.bytes_down + self.bytes_up) as usize);
+        self.cost.compute(device, self.steps_per_round).energy_j + link.energy_j
     }
 }
 
@@ -459,7 +468,8 @@ mod tests {
             round: 1,
             cost,
             steps_per_round: 80,
-            model_bytes: 547_496,
+            bytes_down: 547_496,
+            bytes_up: 547_496,
             target_cohort: k,
             deadline_s,
         }

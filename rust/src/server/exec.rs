@@ -586,7 +586,8 @@ impl ExecCore {
                     round,
                     cost: &self.cost,
                     steps_per_round: hints.steps_per_round,
-                    model_bytes: params.byte_len(),
+                    bytes_down: params.byte_len() as u64,
+                    bytes_up: params.byte_len() as u64,
                     target_cohort: hints.target_cohort,
                     deadline_s: hints.deadline_s,
                 };
@@ -944,6 +945,8 @@ impl ExecCore {
             dropped_churn: 0,
             eval_loss: summary.loss,
             accuracy: summary.accuracy,
+            bytes_down: acc.down_bytes as u64,
+            bytes_up: acc.up_bytes as u64,
         });
 
         Ok(RoundRecord {
@@ -1059,7 +1062,8 @@ impl ExecCore {
                     round: version + 1,
                     cost: &self.cost,
                     steps_per_round: hints.steps_per_round,
-                    model_bytes: params.byte_len(),
+                    bytes_down: params.byte_len() as u64,
+                    bytes_up: params.byte_len() as u64,
                     target_cohort: want,
                     deadline_s: hints.deadline_s,
                 };
@@ -1284,6 +1288,8 @@ impl ExecCore {
                             dropped_churn: 0,
                             eval_loss,
                             accuracy,
+                            bytes_down: record.down_bytes as u64,
+                            bytes_up: record.up_bytes as u64,
                         });
                         clock_s += self.cost.server_overhead_s;
                         last_flush_clock = clock_s;

@@ -17,10 +17,14 @@
 use crate::device::DeviceProfile;
 
 /// One cost sample (a compute phase, a transfer, or an idle wait).
+/// `bytes` is the wire traffic the sample accounts for — nonzero only
+/// for [`CostModel::comm`] samples, so time/energy decompositions also
+/// carry their bytes-on-wire book (the paper's third cost axis).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct CostSample {
     pub time_s: f64,
     pub energy_j: f64,
+    pub bytes: u64,
 }
 
 impl CostSample {
@@ -28,6 +32,7 @@ impl CostSample {
         CostSample {
             time_s: self.time_s + other.time_s,
             energy_j: self.energy_j + other.energy_j,
+            bytes: self.bytes + other.bytes,
         }
     }
 }
@@ -62,18 +67,18 @@ impl CostModel {
     /// Cost of `steps` local training steps on `device`.
     pub fn compute(&self, device: &DeviceProfile, steps: u64) -> CostSample {
         let time_s = steps as f64 * self.step_time_s(device);
-        CostSample { time_s, energy_j: device.train_power_w * time_s }
+        CostSample { time_s, energy_j: device.train_power_w * time_s, bytes: 0 }
     }
 
     /// Cost of moving `bytes` over the device's link.
     pub fn comm(&self, device: &DeviceProfile, bytes: usize) -> CostSample {
         let time_s = bytes as f64 * 8.0 / (device.bandwidth_mbps * 1e6);
-        CostSample { time_s, energy_j: device.radio_power_w * time_s }
+        CostSample { time_s, energy_j: device.radio_power_w * time_s, bytes: bytes as u64 }
     }
 
     /// Cost of idling for `time_s` (a fast client waiting for stragglers).
     pub fn idle(&self, device: &DeviceProfile, time_s: f64) -> CostSample {
-        CostSample { time_s, energy_j: device.idle_power_w * time_s }
+        CostSample { time_s, energy_j: device.idle_power_w * time_s, bytes: 0 }
     }
 
     /// How many steps fit inside a τ-cutoff compute budget on `device`.

@@ -98,6 +98,42 @@ pub fn build_strategy(cfg: &ExperimentConfig, runtime: &Runtime) -> Box<dyn Stra
     }
 }
 
+/// Build the buffered-async strategy stack for `async_buffer = k`: a
+/// core adapter (FedBuff / FedProxBuff / QFedAvgBuff, per `strategy`)
+/// wrapped by the f16 quantizer and/or SecAgg like the sync composition
+/// — same knobs, same wrapping order.
+pub fn build_async_strategy(
+    cfg: &ExperimentConfig,
+    runtime: &Runtime,
+    k: usize,
+) -> Box<dyn crate::strategy::AsyncStrategy> {
+    use crate::strategy::{FedProxBuff, QFedAvgBuff, QuantizedCommAsync, SecAggAsync};
+    let plan = TrainingPlan { epochs: cfg.epochs, lr: cfg.lr };
+    let aggregator = build_aggregator(cfg, runtime);
+    let core: Box<dyn crate::strategy::AsyncStrategy> = if cfg.secure_agg {
+        // replaces the weighted core: secagg folds are an unweighted
+        // masked mean (validate() pins the strategy to fedavg here)
+        Box::new(SecAggAsync::new(plan, k, cfg.seed ^ 0x5EC_A66))
+    } else {
+        match &cfg.strategy {
+            StrategyConfig::FedProx { mu } => Box::new(FedProxBuff::new(
+                FedBuff::new(plan, aggregator, k).with_alpha(cfg.staleness_alpha),
+                *mu,
+            )),
+            StrategyConfig::QFedAvg { q } => Box::new(
+                QFedAvgBuff::new(plan, aggregator, k, *q).with_alpha(cfg.staleness_alpha),
+            ),
+            // validate() restricts the rest to FedAvg
+            _ => Box::new(FedBuff::new(plan, aggregator, k).with_alpha(cfg.staleness_alpha)),
+        }
+    };
+    if cfg.quantize_f16 {
+        Box::new(QuantizedCommAsync::new(core))
+    } else {
+        core
+    }
+}
+
 /// Failure injection: wraps a client so each fit fails with probability
 /// `drop_prob` (a phone leaving the farm mid-round, an OOM, a flaky link).
 /// The server's failure path — count it, aggregate without it — is the
@@ -231,19 +267,14 @@ pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimRe
 
     let initial = Parameters::from_flat(runtime.initial_parameters(&cfg.model)?);
     let history = if let Some(k) = cfg.async_buffer {
-        // FedBuff async loop: no round barrier, `rounds` counts model
+        // Buffered async loop: no round barrier, `rounds` counts model
         // versions. Validation already rejected everything the async loop
-        // cannot honor (secure_agg, quantize_f16, non-FedAvg strategies,
-        // fraction_fit < 1), so nothing is silently ignored here.
-        let strategy = FedBuff::new(
-            TrainingPlan { epochs: cfg.epochs, lr: cfg.lr },
-            build_aggregator(cfg, runtime),
-            k,
-        )
-        .with_alpha(cfg.staleness_alpha);
+        // cannot honor (cutoff/momentum strategies, fraction_fit < 1),
+        // so nothing is silently ignored here.
+        let strategy = build_async_strategy(cfg, runtime, k);
         let mut server = AsyncServer::new(
             Arc::clone(&manager),
-            Box::new(strategy),
+            strategy,
             cfg.cost.clone(),
             ServerConfig {
                 num_rounds: cfg.rounds,

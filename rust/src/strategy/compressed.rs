@@ -27,7 +27,7 @@ use crate::error::Result;
 use crate::telemetry::log;
 use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
 
-use super::{ClientHandle, EvalSummary, Strategy};
+use super::{AsyncStrategy, ClientHandle, EvalSummary, Strategy};
 
 /// Wraps a strategy with f16 wire compression in both directions.
 pub struct QuantizedComm {
@@ -119,10 +119,101 @@ impl Strategy for QuantizedComm {
     }
 }
 
+/// f16 wire compression for the buffered-asynchronous loop: wraps any
+/// [`AsyncStrategy`] (FedBuff, the q-fair/proximal adapters, …) with the
+/// same downlink-quantize / uplink-dequantize rules as [`QuantizedComm`],
+/// including the failure-path rule that flag and payload must agree.
+pub struct QuantizedCommAsync {
+    inner: Box<dyn AsyncStrategy>,
+}
+
+impl QuantizedCommAsync {
+    pub fn new(inner: Box<dyn AsyncStrategy>) -> Self {
+        QuantizedCommAsync { inner }
+    }
+}
+
+impl AsyncStrategy for QuantizedCommAsync {
+    fn name(&self) -> &'static str {
+        "quantized_comm_async"
+    }
+
+    fn buffer_size(&self) -> usize {
+        self.inner.buffer_size()
+    }
+
+    fn configure_fit(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        handle: &ClientHandle,
+    ) -> FitIns {
+        let mut ins = self.inner.configure_fit(version, parameters, handle);
+        match ins.parameters.quantize_f16() {
+            Ok(q) => {
+                ins.parameters = q;
+                ins.config
+                    .insert(keys::QUANTIZE.into(), Scalar::Str("f16".into()));
+            }
+            Err(e) => log::warn(&format!(
+                "quantized_comm_async: fit version {version} client {}: \
+                 f16 quantization failed ({e}); sending f32 unflagged",
+                handle.id
+            )),
+        }
+        ins
+    }
+
+    fn on_fit_result(
+        &mut self,
+        handle: &ClientHandle,
+        staleness: u64,
+        res: FitRes,
+    ) -> Result<Option<Parameters>> {
+        // Dequantize the uplink so the inner strategy buffers f32.
+        let mut res = res;
+        if let Ok(flat) = res.parameters.to_flat_vec() {
+            res.parameters = Parameters::from_flat(flat);
+        }
+        self.inner.on_fit_result(handle, staleness, res)
+    }
+
+    fn flush(&mut self) -> Result<Option<Parameters>> {
+        self.inner.flush()
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        let mut plan = self.inner.configure_evaluate(version, parameters, cohort);
+        for (id, ins) in &mut plan {
+            match ins.parameters.quantize_f16() {
+                Ok(q) => ins.parameters = q,
+                Err(e) => log::warn(&format!(
+                    "quantized_comm_async: evaluate version {version} client {id}: \
+                     f16 quantization failed ({e}); sending f32"
+                )),
+            }
+        }
+        plan
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        version: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(version, results)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::testutil::*;
-    use super::super::{fedavg::TrainingPlan, Aggregator, FedAvg};
+    use super::super::{fedavg::TrainingPlan, Aggregator, FedAvg, FedBuff};
     use super::*;
     use crate::proto::scalar::ConfigExt;
 
@@ -203,5 +294,32 @@ mod tests {
         let results = vec![(h[0].clone(), eval_res(1.0, 0.8, 100))];
         let sum = s.aggregate_evaluate(1, &results).unwrap();
         assert!((sum.accuracy - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn async_wrapper_quantizes_downlink_and_dequantizes_uplink() {
+        let mut s = QuantizedCommAsync::new(Box::new(FedBuff::new(
+            TrainingPlan::default(),
+            Aggregator::Rust,
+            2,
+        )));
+        assert_eq!(s.buffer_size(), 2);
+        let h = handles(2);
+        let params = Parameters::from_flat(vec![0.5; 100]);
+        let ins = s.configure_fit(1, &params, &h[0]);
+        assert_eq!(ins.parameters.byte_len(), 200); // half of 400
+        assert_eq!(ins.config.get_str(keys::QUANTIZE).unwrap(), "f16");
+        // uplink arrives f16; flush must aggregate dequantized f32
+        let q1 = Parameters::from_flat(vec![1.0, 2.0]).quantize_f16().unwrap();
+        let q2 = Parameters::from_flat(vec![3.0, 4.0]).quantize_f16().unwrap();
+        let mk = |p: Parameters| FitRes {
+            status: crate::proto::Status::ok(),
+            parameters: p,
+            num_examples: 10,
+            metrics: Default::default(),
+        };
+        assert!(s.on_fit_result(&h[0], 0, mk(q1)).unwrap().is_none());
+        let out = s.on_fit_result(&h[1], 0, mk(q2)).unwrap().unwrap();
+        assert_eq!(out.to_flat().unwrap(), &[2.0, 3.0]);
     }
 }

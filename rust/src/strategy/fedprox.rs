@@ -8,7 +8,7 @@ use crate::client::keys;
 use crate::error::Result;
 use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
 
-use super::{ClientHandle, EvalSummary, FedAvg, Strategy};
+use super::{AsyncStrategy, ClientHandle, EvalSummary, FedAvg, FedBuff, Strategy};
 
 /// FedAvg + proximal local objective (clients use the `*_train_prox`
 /// artifact when `prox_mu > 0`).
@@ -68,6 +68,73 @@ impl Strategy for FedProx {
     }
 }
 
+/// Proximal local objective for the buffered-asynchronous loop: FedBuff
+/// aggregation (a proximal term changes the *client's* objective, not
+/// the server's fold weights) with `prox_mu` riding on every fit
+/// config. At `mu = 0` clients run plain SGD and the flush is
+/// bit-identical to FedBuff.
+pub struct FedProxBuff {
+    pub inner: FedBuff,
+    pub mu: f64,
+}
+
+impl FedProxBuff {
+    pub fn new(inner: FedBuff, mu: f64) -> Self {
+        FedProxBuff { inner, mu }
+    }
+}
+
+impl AsyncStrategy for FedProxBuff {
+    fn name(&self) -> &'static str {
+        "fedprox_async"
+    }
+
+    fn buffer_size(&self) -> usize {
+        self.inner.buffer_size()
+    }
+
+    fn configure_fit(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        handle: &ClientHandle,
+    ) -> FitIns {
+        let mut ins = self.inner.configure_fit(version, parameters, handle);
+        ins.config.insert(keys::PROX_MU.into(), Scalar::F64(self.mu));
+        ins
+    }
+
+    fn on_fit_result(
+        &mut self,
+        handle: &ClientHandle,
+        staleness: u64,
+        res: FitRes,
+    ) -> Result<Option<Parameters>> {
+        self.inner.on_fit_result(handle, staleness, res)
+    }
+
+    fn flush(&mut self) -> Result<Option<Parameters>> {
+        self.inner.flush()
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        self.inner.configure_evaluate(version, parameters, cohort)
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        version: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        self.inner.aggregate_evaluate(version, results)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::testutil::*;
@@ -88,5 +155,26 @@ mod tests {
             assert_eq!(ins.config.get_f64(keys::PROX_MU).unwrap(), 0.01);
             assert_eq!(ins.config.get_i64(keys::ROUND).unwrap(), 2);
         }
+    }
+
+    #[test]
+    fn async_mu_rides_on_config_and_aggregates_like_fedbuff() {
+        let mut s = FedProxBuff::new(
+            FedBuff::new(TrainingPlan::default(), Aggregator::Rust, 2),
+            0.1,
+        );
+        assert_eq!(s.buffer_size(), 2);
+        let h = handles(2);
+        let ins = s.configure_fit(3, &Parameters::from_flat(vec![0.0]), &h[0]);
+        assert_eq!(ins.config.get_f64(keys::PROX_MU).unwrap(), 0.1);
+        assert!(s
+            .on_fit_result(&h[0], 0, fit_res(vec![1.0], 10, 1.0))
+            .unwrap()
+            .is_none());
+        let p = s
+            .on_fit_result(&h[1], 0, fit_res(vec![3.0], 10, 1.0))
+            .unwrap()
+            .unwrap();
+        assert_eq!(p.to_flat().unwrap(), &[2.0]);
     }
 }

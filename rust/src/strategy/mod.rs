@@ -27,16 +27,17 @@ pub mod fedbuff;
 pub mod fedprox;
 pub mod qfedavg;
 pub mod secagg;
+pub mod wire;
 
 pub use aggregate::Aggregator;
-pub use compressed::QuantizedComm;
+pub use compressed::{QuantizedComm, QuantizedCommAsync};
 pub use fedavg::FedAvg;
 pub use fedavg_cutoff::FedAvgCutoff;
 pub use fedavgm::FedAvgM;
 pub use fedbuff::FedBuff;
-pub use fedprox::FedProx;
-pub use qfedavg::QFedAvg;
-pub use secagg::SecAgg;
+pub use fedprox::{FedProx, FedProxBuff};
+pub use qfedavg::{QFedAvg, QFedAvgBuff};
+pub use secagg::{SecAgg, SecAggAsync};
 
 use crate::device::DeviceProfile;
 use crate::error::Result;

@@ -8,7 +8,11 @@ use crate::error::Result;
 use crate::proto::scalar::ConfigExt;
 use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters};
 
-use super::{ClientHandle, EvalSummary, FedAvg, Strategy};
+use super::fedavg::{weighted_parameter_average, TrainingPlan};
+use super::fedbuff::staleness_weight;
+use super::{
+    weighted_eval_summary, Aggregator, AsyncStrategy, ClientHandle, EvalSummary, FedAvg, Strategy,
+};
 
 /// FedAvg with loss-skewed aggregation weights.
 pub struct QFedAvg {
@@ -16,7 +20,11 @@ pub struct QFedAvg {
     pub q: f64,
 }
 
-const EPS: f64 = 1e-10;
+/// Loss floor added before exponentiation so `0^q` never collapses a
+/// client's weight to zero. Public: the population-scale engine's
+/// q-fair fold weights must use the identical constant
+/// (`sched::engine::Engine::fold_weights`).
+pub const EPS: f64 = 1e-10;
 
 impl QFedAvg {
     pub fn new(inner: FedAvg, q: f64) -> Self {
@@ -69,10 +77,135 @@ impl Strategy for QFedAvg {
     }
 }
 
+/// q-fair aggregation for the buffered-asynchronous loop: FedBuff
+/// mechanics (K-buffer, polynomial staleness discount) with each fold's
+/// weight further scaled by `(loss + ε)^q`. At `q = 0` the extra factor
+/// is `powf(_, 0) = 1.0` exactly, so the flush is **bit-identical** to
+/// FedBuff (property-locked in `rust/tests/strategy_props.rs`).
+pub struct QFedAvgBuff {
+    pub plan: TrainingPlan,
+    pub buffer_size: usize,
+    /// Polynomial staleness exponent (0 = no discount).
+    pub alpha: f64,
+    pub q: f64,
+    aggregator: Aggregator,
+    buffer: Vec<(u64, FitRes)>,
+}
+
+impl QFedAvgBuff {
+    pub fn new(plan: TrainingPlan, aggregator: Aggregator, buffer_size: usize, q: f64) -> Self {
+        QFedAvgBuff {
+            plan,
+            buffer_size: buffer_size.max(1),
+            alpha: super::fedbuff::DEFAULT_STALENESS_ALPHA,
+            q,
+            aggregator,
+            buffer: Vec::new(),
+        }
+    }
+
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        self.alpha = alpha;
+        self
+    }
+
+    /// Results currently waiting in the buffer.
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    fn flush_buffer(&mut self) -> Result<Option<Parameters>> {
+        if self.buffer.is_empty() {
+            return Ok(None);
+        }
+        let (alpha, q) = (self.alpha, self.q);
+        let params = weighted_parameter_average(
+            &self.aggregator,
+            self.buffer.iter().map(|(s, r)| {
+                let loss = r.metrics.get_f64_or(keys::TRAIN_LOSS, 1.0).max(0.0);
+                (
+                    r,
+                    staleness_weight(r.num_examples, *s, alpha) * (loss + EPS).powf(q),
+                )
+            }),
+        )?;
+        self.buffer.clear();
+        Ok(Some(params))
+    }
+}
+
+impl AsyncStrategy for QFedAvgBuff {
+    fn name(&self) -> &'static str {
+        "qfedavg_async"
+    }
+
+    fn buffer_size(&self) -> usize {
+        self.buffer_size
+    }
+
+    fn configure_fit(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        _handle: &ClientHandle,
+    ) -> FitIns {
+        FitIns {
+            parameters: parameters.clone(),
+            config: self.plan.to_config(version),
+        }
+    }
+
+    fn on_fit_result(
+        &mut self,
+        _handle: &ClientHandle,
+        staleness: u64,
+        res: FitRes,
+    ) -> Result<Option<Parameters>> {
+        if !res.status.is_ok() || res.num_examples == 0 {
+            return Ok(None);
+        }
+        self.buffer.push((staleness, res));
+        if self.buffer.len() >= self.buffer_size {
+            self.flush_buffer()
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn flush(&mut self) -> Result<Option<Parameters>> {
+        self.flush_buffer()
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        let config = crate::config! { keys::ROUND => version as i64 };
+        (0..cohort.len())
+            .map(|idx| {
+                (
+                    idx,
+                    EvaluateIns { parameters: parameters.clone(), config: config.clone() },
+                )
+            })
+            .collect()
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        _version: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        weighted_eval_summary(results)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::testutil::*;
-    use super::super::{fedavg::TrainingPlan, Aggregator};
+    use super::super::FedBuff;
     use super::*;
 
     #[test]
@@ -88,6 +221,47 @@ mod tests {
         ];
         let p = s.aggregate_fit(1, &results, 0).unwrap();
         assert!((p.to_flat().unwrap()[0] - 0.75).abs() < 1e-6);
+    }
+
+    #[test]
+    fn async_q_zero_matches_fedbuff_bit_exactly() {
+        let mk_results = || {
+            vec![
+                (0u64, fit_res(vec![0.125, 4.0], 100, 5.0)),
+                (2u64, fit_res(vec![1.5, -2.25], 300, 0.1)),
+                (1u64, fit_res(vec![-0.75, 8.5], 50, 2.0)),
+            ]
+        };
+        let h = handles(3);
+        let mut qf = QFedAvgBuff::new(TrainingPlan::default(), Aggregator::Rust, 3, 0.0);
+        let mut fb = FedBuff::new(TrainingPlan::default(), Aggregator::Rust, 3);
+        let (mut got_q, mut got_f) = (None, None);
+        for (i, (s, r)) in mk_results().into_iter().enumerate() {
+            got_q = qf.on_fit_result(&h[i], s, r).unwrap();
+        }
+        for (i, (s, r)) in mk_results().into_iter().enumerate() {
+            got_f = fb.on_fit_result(&h[i], s, r).unwrap();
+        }
+        let (q, f) = (got_q.unwrap(), got_f.unwrap());
+        let (q, f) = (q.to_flat().unwrap(), f.to_flat().unwrap());
+        let qb: Vec<u32> = q.iter().map(|x| x.to_bits()).collect();
+        let fb_: Vec<u32> = f.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(qb, fb_);
+    }
+
+    #[test]
+    fn async_higher_loss_gets_more_weight() {
+        let mut s = QFedAvgBuff::new(TrainingPlan::default(), Aggregator::Rust, 2, 2.0);
+        let h = handles(2);
+        assert!(s
+            .on_fit_result(&h[0], 0, fit_res(vec![0.0], 100, 0.1))
+            .unwrap()
+            .is_none());
+        let p = s
+            .on_fit_result(&h[1], 0, fit_res(vec![1.0], 100, 10.0))
+            .unwrap()
+            .unwrap();
+        assert!(p.to_flat().unwrap()[0] > 0.99);
     }
 
     #[test]

@@ -3,23 +3,47 @@
 //!
 //! The server broadcasts the round's cohort (peer ids) and a shared base
 //! seed; clients return pairwise-masked updates; the *unweighted mean*
-//! over the full cohort cancels every mask. Two protocol consequences,
-//! both enforced here:
+//! over the cohort cancels every mask. Protocol consequences, all
+//! enforced here:
 //!
 //! * aggregation must weight every client equally (weighted means would
 //!   scale masks asymmetrically and leak), so `aggregate_fit` uses the
-//!   plain mean — the classic SecAgg trade-off;
-//! * every masked participant must report (no dropout recovery in this
-//!   SecAgg0 core): missing results leave un-cancelled masks, so the
-//!   round fails loudly instead of aggregating noise.
+//!   plain mean — the classic SecAgg trade-off. The population engine's
+//!   composition rule is the same: secagg folds carry weight exactly
+//!   1.0, staleness discounts disabled (`sched::engine::fold_weights`);
+//! * a dropped masker leaves un-cancelled mask terms in the sum. The
+//!   server recovers by **residual unmasking**: it re-derives the
+//!   dropped pairs' mask streams through the *same*
+//!   [`crate::client::masking::pair_seed`] path the clients used (one
+//!   shared derivation — a parallel server-side formula once disagreed
+//!   with `client::masking::id_hash` for non-numeric ids, which is why
+//!   the derivation now lives in exactly one place) and subtracts them.
+//!   Grid arithmetic makes the recovery exact
+//!   (see `client::masking` module docs);
+//! * because the server holds the base seed, this core is a *systems
+//!   cost model* of SecAgg (bytes, aggregation rules), not a
+//!   cryptographic implementation — see `strategy/README.md`.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::client::keys;
+use crate::client::masking::{for_each_mask_term, unmask_update};
 use crate::error::{Error, Result};
 use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
 
-use super::{ClientHandle, EvalSummary, Strategy};
+use super::fedavg::TrainingPlan;
+use super::{
+    weighted_eval_summary, AsyncStrategy, ClientHandle, EvalSummary, Strategy,
+};
+
+/// Peer lists ride in a comma-separated config value; an id containing a
+/// comma would silently corrupt every peer's mask set.
+fn assert_maskable_id(id: &str) {
+    assert!(
+        !id.contains(','),
+        "secagg client id {id:?} contains a comma — peer lists are CSV-encoded"
+    );
+}
 
 /// Wraps an inner strategy with SecAgg0 masking coordination.
 pub struct SecAgg {
@@ -51,6 +75,7 @@ impl Strategy for SecAgg {
             .iter()
             .map(|(idx, _)| cohort[*idx].id.clone())
             .collect();
+        peer_ids.iter().for_each(|id| assert_maskable_id(id));
         self.current_cohort = peer_ids.iter().cloned().collect();
         let peers_csv = peer_ids.join(",");
         for (_, ins) in &mut plan {
@@ -64,29 +89,32 @@ impl Strategy for SecAgg {
 
     fn aggregate_fit(
         &mut self,
-        _round: u64,
+        round: u64,
         results: &[(ClientHandle, FitRes)],
-        failures: usize,
+        _failures: usize,
     ) -> Result<Parameters> {
-        // every announced masker must have reported successfully
-        let reported: BTreeSet<String> = results
+        let usable: Vec<&(ClientHandle, FitRes)> = results
             .iter()
             .filter(|(_, res)| res.status.is_ok() && !res.parameters.is_empty())
-            .map(|(h, _)| h.id.clone())
             .collect();
-        if reported != self.current_cohort || failures > 0 {
-            let missing: Vec<&String> =
-                self.current_cohort.difference(&reported).collect();
+        let reported: BTreeSet<String> =
+            usable.iter().map(|(h, _)| h.id.clone()).collect();
+        if !reported.is_subset(&self.current_cohort) {
+            let unknown: Vec<&String> =
+                reported.difference(&self.current_cohort).collect();
             return Err(Error::Aggregation(format!(
-                "secagg round incomplete: masks cannot cancel \
-                 (missing {missing:?}, {failures} failures) — SecAgg0 has no \
-                 dropout recovery"
+                "secagg: results from clients outside the announced cohort \
+                 ({unknown:?}) — their masks were never announced"
             )));
         }
-        // unweighted mean: the only aggregation masks survive
+        if usable.is_empty() {
+            return Err(Error::Aggregation("secagg: no results".into()));
+        }
+        // Unweighted sum, accumulated in f64. Every masked value is a
+        // multiple of the 2^-10 mask grid, so the sum is exact and the
+        // mask algebra below is bit-exact (client::masking module docs).
         let mut acc: Vec<f64> = Vec::new();
-        let n = results.len() as f64;
-        for (_, res) in results {
+        for (_, res) in &usable {
             let flat = res.parameters.to_flat_vec()?;
             if acc.is_empty() {
                 acc = vec![0f64; flat.len()];
@@ -95,13 +123,24 @@ impl Strategy for SecAgg {
                 return Err(Error::Aggregation("secagg: parameter size mismatch".into()));
             }
             for (a, x) in acc.iter_mut().zip(&flat) {
-                *a += *x as f64 / n;
+                *a += *x as f64;
             }
         }
-        if acc.is_empty() {
-            return Err(Error::Aggregation("secagg: no results".into()));
+        // Dropout recovery: masks between two reporters cancelled in the
+        // sum above; each (reporter, dropout) pair left one residual term
+        // per element, re-derived and subtracted here.
+        let missing: Vec<&String> = self.current_cohort.difference(&reported).collect();
+        for s in &reported {
+            for d in &missing {
+                for_each_mask_term(s, d, round, self.base_seed, acc.len(), |i, m| {
+                    acc[i] -= m as f64;
+                });
+            }
         }
-        Ok(Parameters::from_flat(acc.into_iter().map(|x| x as f32).collect()))
+        let n = usable.len() as f64;
+        Ok(Parameters::from_flat(
+            acc.into_iter().map(|x| (x / n) as f32).collect(),
+        ))
     }
 
     fn configure_evaluate(
@@ -122,12 +161,168 @@ impl Strategy for SecAgg {
     }
 }
 
+/// SecAgg for the buffered-asynchronous loop.
+///
+/// Async has no synchronous cohort to cancel masks over: clients are
+/// dispatched one at a time and fold in arrival order. Each dispatch
+/// therefore announces the mask group *known so far* (every id this
+/// strategy has ever configured) and stamps the mask round with the
+/// dispatch-time model version; at each K-flush the server fully
+/// unmasks every buffered update through the shared
+/// [`crate::client::masking`] derivation and takes the unweighted mean.
+/// Folds carry weight 1.0 — the engine's secagg composition rule — and
+/// the unmasked individual updates are used for nothing but the mean
+/// (honest-but-curious modeling; the full protocol replaces this with
+/// secret-shared recovery).
+pub struct SecAggAsync {
+    plan: TrainingPlan,
+    buffer_size: usize,
+    base_seed: u64,
+    /// Every id ever dispatched: the announced mask group grows with it.
+    known: BTreeSet<String>,
+    /// Per-client (mask round, announced peers) at its last dispatch —
+    /// exactly what the client masked against, needed to invert it.
+    announced: BTreeMap<String, (u64, Vec<String>)>,
+    buffer: Vec<(String, FitRes)>,
+}
+
+impl SecAggAsync {
+    pub fn new(plan: TrainingPlan, buffer_size: usize, base_seed: u64) -> Self {
+        SecAggAsync {
+            plan,
+            buffer_size: buffer_size.max(1),
+            base_seed,
+            known: BTreeSet::new(),
+            announced: BTreeMap::new(),
+            buffer: Vec::new(),
+        }
+    }
+
+    /// Results currently waiting in the buffer.
+    pub fn buffered(&self) -> usize {
+        self.buffer.len()
+    }
+
+    fn flush_buffer(&mut self) -> Result<Option<Parameters>> {
+        if self.buffer.is_empty() {
+            return Ok(None);
+        }
+        let mut acc: Vec<f64> = Vec::new();
+        for (id, res) in &self.buffer {
+            let (round, peers) = self.announced.get(id).ok_or_else(|| {
+                Error::Aggregation(format!("secagg_async: no announced mask set for {id}"))
+            })?;
+            let peer_refs: Vec<&str> = peers.iter().map(String::as_str).collect();
+            let mut flat = res.parameters.to_flat_vec()?;
+            // Exact inversion of the client's masking (grid arithmetic).
+            unmask_update(&mut flat, id, &peer_refs, *round, self.base_seed);
+            if acc.is_empty() {
+                acc = vec![0f64; flat.len()];
+            }
+            if acc.len() != flat.len() {
+                return Err(Error::Aggregation(
+                    "secagg_async: parameter size mismatch".into(),
+                ));
+            }
+            for (a, x) in acc.iter_mut().zip(&flat) {
+                *a += *x as f64;
+            }
+        }
+        let n = self.buffer.len() as f64;
+        self.buffer.clear();
+        Ok(Some(Parameters::from_flat(
+            acc.into_iter().map(|x| (x / n) as f32).collect(),
+        )))
+    }
+}
+
+impl AsyncStrategy for SecAggAsync {
+    fn name(&self) -> &'static str {
+        "secagg_async"
+    }
+
+    fn buffer_size(&self) -> usize {
+        self.buffer_size
+    }
+
+    fn configure_fit(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        handle: &ClientHandle,
+    ) -> FitIns {
+        assert_maskable_id(&handle.id);
+        self.known.insert(handle.id.clone());
+        let peers: Vec<String> = self.known.iter().cloned().collect();
+        self.announced
+            .insert(handle.id.clone(), (version, peers.clone()));
+        let mut config = self.plan.to_config(version);
+        config.insert(keys::SECAGG_PEERS.into(), Scalar::Str(peers.join(",")));
+        config.insert(keys::SECAGG_SEED.into(), Scalar::I64(self.base_seed as i64));
+        FitIns { parameters: parameters.clone(), config }
+    }
+
+    fn on_fit_result(
+        &mut self,
+        handle: &ClientHandle,
+        _staleness: u64,
+        res: FitRes,
+    ) -> Result<Option<Parameters>> {
+        // Failed/empty results never carry masks (the client errored
+        // before masking); folds are unweighted, so staleness is ignored.
+        if !res.status.is_ok() || res.num_examples == 0 || res.parameters.is_empty() {
+            return Ok(None);
+        }
+        if !self.announced.contains_key(&handle.id) {
+            return Err(Error::Aggregation(format!(
+                "secagg_async: result from {} without a dispatched mask set",
+                handle.id
+            )));
+        }
+        self.buffer.push((handle.id.clone(), res));
+        if self.buffer.len() >= self.buffer_size {
+            self.flush_buffer()
+        } else {
+            Ok(None)
+        }
+    }
+
+    fn flush(&mut self) -> Result<Option<Parameters>> {
+        self.flush_buffer()
+    }
+
+    fn configure_evaluate(
+        &mut self,
+        version: u64,
+        parameters: &Parameters,
+        cohort: &[ClientHandle],
+    ) -> Vec<(usize, EvaluateIns)> {
+        let config = crate::config! { keys::ROUND => version as i64 };
+        (0..cohort.len())
+            .map(|idx| {
+                (
+                    idx,
+                    EvaluateIns { parameters: parameters.clone(), config: config.clone() },
+                )
+            })
+            .collect()
+    }
+
+    fn aggregate_evaluate(
+        &mut self,
+        _version: u64,
+        results: &[(ClientHandle, EvaluateRes)],
+    ) -> Result<EvalSummary> {
+        weighted_eval_summary(results)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::testutil::*;
-    use super::super::{fedavg::TrainingPlan, Aggregator, FedAvg};
+    use super::super::{Aggregator, FedAvg};
     use super::*;
-    use crate::client::masking::mask_update;
+    use crate::client::masking::{mask_update, quantize_to_grid};
     use crate::proto::scalar::ConfigExt;
 
     fn secagg() -> SecAgg {
@@ -135,6 +330,21 @@ mod tests {
             Box::new(FedAvg::new(TrainingPlan::default(), Aggregator::Rust)),
             777,
         )
+    }
+
+    /// The mean the server must reproduce: Σ quantized(update) / n,
+    /// summed in f64 like the aggregator.
+    fn grid_mean(rows: &[Vec<f32>]) -> Vec<f32> {
+        let n = rows.len() as f64;
+        (0..rows[0].len())
+            .map(|j| {
+                (rows
+                    .iter()
+                    .map(|v| quantize_to_grid(v[j]) as f64)
+                    .sum::<f64>()
+                    / n) as f32
+            })
+            .collect()
     }
 
     #[test]
@@ -157,7 +367,7 @@ mod tests {
     }
 
     #[test]
-    fn masked_mean_equals_plain_mean() {
+    fn masked_mean_equals_plain_mean_bit_exactly() {
         let mut s = secagg();
         let cohort = handles(3);
         let plan = s.configure_fit(4, &Parameters::from_flat(vec![0.0; 64]), &cohort);
@@ -175,23 +385,171 @@ mod tests {
             .collect();
         let agg = s.aggregate_fit(4, &results, 0).unwrap();
         let agg = agg.to_flat().unwrap();
+        let want = grid_mean(&plain);
         for j in 0..64 {
-            let want: f32 = plain.iter().map(|v| v[j]).sum::<f32>() / 3.0;
-            assert!((agg[j] - want).abs() < 1e-3, "j={j}: {} vs {want}", agg[j]);
+            assert_eq!(
+                agg[j].to_bits(),
+                want[j].to_bits(),
+                "j={j}: {} vs {}",
+                agg[j],
+                want[j]
+            );
         }
     }
 
     #[test]
-    fn missing_masker_fails_the_round() {
+    fn dropout_recovers_via_residual_unmasking() {
         let mut s = secagg();
         let cohort = handles(3);
+        let _ = s.configure_fit(2, &Parameters::from_flat(vec![0.0; 32]), &cohort);
+        let peers: Vec<&str> = vec!["c0", "c1", "c2"];
+        let plain: Vec<Vec<f32>> = (0..2)
+            .map(|i| (0..32).map(|j| (j as f32 - i as f32) * 0.125).collect())
+            .collect();
+        // c2 was announced but never reports; c0 and c1 masked against it
+        let results: Vec<(ClientHandle, FitRes)> = (0..2)
+            .map(|i| {
+                let mut masked = plain[i].clone();
+                mask_update(&mut masked, &cohort[i].id, &peers, 2, 777).unwrap();
+                (cohort[i].clone(), fit_res(masked, 100, 1.0))
+            })
+            .collect();
+        let agg = s.aggregate_fit(2, &results, 1).unwrap();
+        let agg = agg.to_flat().unwrap();
+        let want = grid_mean(&plain); // mean over the 2 reporters only
+        for j in 0..32 {
+            assert_eq!(agg[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
+    }
+
+    /// Regression: the residual-unmask derivation must match
+    /// `client::masking` for *arbitrary* string ids, not just the dense
+    /// `c0`/`c1` test ids (a parallel server-side hash once diverged).
+    #[test]
+    fn dropout_recovery_with_arbitrary_string_ids() {
+        use crate::device::profiles;
+        let ids = ["edge node-π/7", "client:β", "Ω-unit_42"];
+        let cohort: Vec<ClientHandle> = ids
+            .iter()
+            .map(|id| ClientHandle {
+                id: id.to_string(),
+                device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+                num_examples: 320,
+            })
+            .collect();
+        let mut s = SecAgg::new(
+            Box::new(FedAvg::new(TrainingPlan::default(), Aggregator::Rust)),
+            0xDEAD_BEEF,
+        );
+        let _ = s.configure_fit(5, &Parameters::from_flat(vec![0.0; 16]), &cohort);
+        let peers: Vec<&str> = ids.to_vec();
+        let plain: Vec<Vec<f32>> = (0..2)
+            .map(|i| (0..16).map(|j| (i * 16 + j) as f32 * 0.01).collect())
+            .collect();
+        let results: Vec<(ClientHandle, FitRes)> = (0..2)
+            .map(|i| {
+                let mut masked = plain[i].clone();
+                mask_update(&mut masked, ids[i], &peers, 5, 0xDEAD_BEEF).unwrap();
+                (cohort[i].clone(), fit_res(masked, 100, 1.0))
+            })
+            .collect();
+        let agg = s.aggregate_fit(5, &results, 1).unwrap();
+        let agg = agg.to_flat().unwrap();
+        let want = grid_mean(&plain);
+        for j in 0..16 {
+            assert_eq!(agg[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn unknown_reporter_fails_the_round() {
+        let mut s = secagg();
+        let cohort = handles(3);
+        let _ = s.configure_fit(1, &Parameters::from_flat(vec![0.0; 8]), &cohort[..2]);
+        let results = vec![(cohort[2].clone(), fit_res(vec![0.0; 8], 10, 1.0))];
+        let err = s.aggregate_fit(1, &results, 0).unwrap_err();
+        assert!(err.to_string().contains("outside the announced cohort"), "{err}");
+    }
+
+    #[test]
+    fn empty_round_errors() {
+        let mut s = secagg();
+        let cohort = handles(2);
         let _ = s.configure_fit(1, &Parameters::from_flat(vec![0.0; 8]), &cohort);
-        // only 2 of 3 report
-        let results = vec![
-            (cohort[0].clone(), fit_res(vec![0.0; 8], 10, 1.0)),
-            (cohort[1].clone(), fit_res(vec![0.0; 8], 10, 1.0)),
-        ];
-        let err = s.aggregate_fit(1, &results, 1).unwrap_err();
-        assert!(err.to_string().contains("masks cannot cancel"), "{err}");
+        assert!(s.aggregate_fit(1, &[], 2).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "comma")]
+    fn comma_in_client_id_is_refused() {
+        use crate::device::profiles;
+        let cohort = vec![ClientHandle {
+            id: "a,b".into(),
+            device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+            num_examples: 1,
+        }];
+        let mut s = secagg();
+        let _ = s.configure_fit(1, &Parameters::from_flat(vec![0.0]), &cohort);
+    }
+
+    #[test]
+    fn async_flush_unmasks_and_averages_bit_exactly() {
+        let mut s = SecAggAsync::new(TrainingPlan::default(), 2, 99);
+        let h = handles(3);
+        // dispatch all three (mask group grows as they are seen)
+        let ins: Vec<FitIns> = (0..3)
+            .map(|i| s.configure_fit(i as u64, &Parameters::from_flat(vec![0.0; 24]), &h[i]))
+            .collect();
+        let plain: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..24).map(|j| (i as f32 + 1.0) * 0.25 + j as f32 * 0.01).collect())
+            .collect();
+        // clients mask exactly as MaskedClient would: against the peers
+        // and round each was *told* at dispatch time
+        let masked: Vec<Vec<f32>> = (0..3)
+            .map(|i| {
+                let peers_csv = ins[i].config.get_str(keys::SECAGG_PEERS).unwrap();
+                let peers: Vec<&str> = peers_csv.split(',').collect();
+                let round = ins[i].config.get_i64(keys::ROUND).unwrap() as u64;
+                let seed = ins[i].config.get_i64(keys::SECAGG_SEED).unwrap() as u64;
+                let mut v = plain[i].clone();
+                mask_update(&mut v, &h[i].id, &peers, round, seed).unwrap();
+                v
+            })
+            .collect();
+        assert!(s
+            .on_fit_result(&h[0], 0, fit_res(masked[0].clone(), 10, 1.0))
+            .unwrap()
+            .is_none());
+        let p = s
+            .on_fit_result(&h[1], 1, fit_res(masked[1].clone(), 10, 1.0))
+            .unwrap()
+            .expect("second result fills the K=2 buffer");
+        let got = p.to_flat().unwrap();
+        let want = grid_mean(&plain[..2]);
+        for j in 0..24 {
+            assert_eq!(got[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
+        // the third result starts the next buffer
+        assert!(s
+            .on_fit_result(&h[2], 0, fit_res(masked[2].clone(), 10, 1.0))
+            .unwrap()
+            .is_none());
+        assert_eq!(s.buffered(), 1);
+        let p = s.flush().unwrap().expect("partial buffer force-flushes");
+        let got = p.to_flat().unwrap();
+        let want = grid_mean(&plain[2..]);
+        for j in 0..24 {
+            assert_eq!(got[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
+    }
+
+    #[test]
+    fn async_result_without_dispatch_errors() {
+        let mut s = SecAggAsync::new(TrainingPlan::default(), 2, 1);
+        let h = handles(1);
+        let err = s
+            .on_fit_result(&h[0], 0, fit_res(vec![1.0], 10, 1.0))
+            .unwrap_err();
+        assert!(err.to_string().contains("without a dispatched mask set"), "{err}");
     }
 }

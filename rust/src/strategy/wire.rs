@@ -1,0 +1,154 @@
+//! Bytes-on-wire model for the strategy zoo.
+//!
+//! The engine's cost model charges communication time/energy per
+//! dispatched byte, but *how many* bytes a round moves depends on the
+//! strategy: f16 compression halves the payload, secure aggregation
+//! adds a mask-exchange handshake on top of the model, and the plain
+//! averaging strategies ship the raw f32 tensor both ways. This module
+//! is the single place that mapping lives, so the engine, the live
+//! server, the obs ledger, and the Python differential port all agree
+//! byte-for-byte.
+//!
+//! Framing constants are derived from `transport/PROTOCOL.md` (wire
+//! v2): a frame is a `len:u32` prefix plus payload, and a v2 message
+//! carries `magic:u16 version:u8 tag:u8 header_len:u32` before the
+//! header. The *baseline* strategies deliberately count **payload
+//! bytes only** (`model_bytes` each way) — that keeps the default
+//! cost trajectory bit-identical to the pre-strategy engine and to the
+//! committed golden traces. Only secagg's extra exchange is framed,
+//! because it is genuinely extra traffic that the baseline never sends.
+//!
+//! Everything here is integer arithmetic: no floats, no rounding
+//! ambiguity, trivially mirrored in `python/tools/trace_engine_port.py`.
+
+use crate::config::SchedStrategyConfig;
+
+/// Frame length prefix (`len:u32-LE`), per `transport/PROTOCOL.md`.
+pub const FRAME_PREFIX_BYTES: u64 = 4;
+/// Fixed v2 message overhead: `magic:u16 + version:u8 + tag:u8 + header_len:u32`.
+pub const V2_MSG_OVERHEAD_BYTES: u64 = 8;
+/// One peer entry in the secagg mask-exchange roster: an 8-byte id
+/// hash plus a 1-byte liveness flag.
+pub const SECAGG_PEER_ENTRY_BYTES: u64 = 9;
+/// The per-round seed material the server ships down with the roster:
+/// base seed (8) + round nonce (8) + grid scale (8).
+pub const SECAGG_SEED_ENTRY_BYTES: u64 = 24;
+/// The client's upload commitment (a 32-byte digest of its masked
+/// update, checked server-side before unmasking).
+pub const SECAGG_COMMIT_BYTES: u64 = 32;
+
+/// f16 uplink/downlink payload: exactly half the f32 bytes, rounded up
+/// (an odd f32 byte count cannot happen for whole tensors, but the
+/// model stays total).
+pub fn f16_payload_bytes(model_bytes: u64) -> u64 {
+    model_bytes.div_ceil(2)
+}
+
+/// Extra downlink bytes secagg adds per dispatch: one framed v2
+/// message carrying the seed material and the peer roster for the
+/// mask-exchange group.
+pub fn secagg_down_overhead_bytes(group: u64) -> u64 {
+    FRAME_PREFIX_BYTES + V2_MSG_OVERHEAD_BYTES + SECAGG_SEED_ENTRY_BYTES + group * SECAGG_PEER_ENTRY_BYTES
+}
+
+/// Extra uplink bytes secagg adds per fold: one framed v2 message
+/// carrying the masked-update commitment.
+pub fn secagg_up_overhead_bytes() -> u64 {
+    FRAME_PREFIX_BYTES + V2_MSG_OVERHEAD_BYTES + SECAGG_COMMIT_BYTES
+}
+
+/// Per-dispatch wire traffic for one strategy: bytes the server ships
+/// to a client (`bytes_down`) and bytes the client ships back
+/// (`bytes_up`). Derived once per run from the strategy config, the
+/// model size, and the mask-exchange group size (the sync cohort or
+/// the async flush quorum).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireModel {
+    pub bytes_down: u64,
+    pub bytes_up: u64,
+}
+
+impl WireModel {
+    /// The symmetric f32 baseline (FedAvg/FedBuff/qFedAvg/FedProx):
+    /// the full model down, the full update up.
+    pub fn baseline(model_bytes: u64) -> WireModel {
+        WireModel { bytes_down: model_bytes, bytes_up: model_bytes }
+    }
+
+    /// Wire model for `strategy`. `group` is the number of peers in a
+    /// secagg mask-exchange group — the cohort size in sync mode, the
+    /// flush quorum (`k_flush`) in async mode; ignored by every other
+    /// strategy.
+    pub fn for_strategy(strategy: &SchedStrategyConfig, model_bytes: u64, group: u64) -> WireModel {
+        match strategy {
+            // Reweighting strategies change fold *weights*, not payloads.
+            SchedStrategyConfig::FedAvg
+            | SchedStrategyConfig::QFedAvg { .. }
+            | SchedStrategyConfig::FedProx { .. } => WireModel::baseline(model_bytes),
+            SchedStrategyConfig::Compressed => WireModel {
+                bytes_down: f16_payload_bytes(model_bytes),
+                bytes_up: f16_payload_bytes(model_bytes),
+            },
+            SchedStrategyConfig::SecAgg => WireModel {
+                bytes_down: model_bytes + secagg_down_overhead_bytes(group),
+                bytes_up: model_bytes + secagg_up_overhead_bytes(),
+            },
+        }
+    }
+
+    /// Total round-trip bytes for one dispatch+fold.
+    pub fn round_trip(&self) -> u64 {
+        self.bytes_down + self.bytes_up
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MB: u64 = 547_496; // the paper's 547 KB CIFAR-10 model
+
+    #[test]
+    fn baseline_is_symmetric_full_precision() {
+        for s in [
+            SchedStrategyConfig::FedAvg,
+            SchedStrategyConfig::QFedAvg { q: 1.0 },
+            SchedStrategyConfig::FedProx { mu: 0.01 },
+        ] {
+            let w = WireModel::for_strategy(&s, MB, 8);
+            assert_eq!(w, WireModel::baseline(MB), "{s:?}");
+            assert_eq!(w.round_trip(), 2 * MB);
+        }
+    }
+
+    #[test]
+    fn compressed_halves_both_directions() {
+        let w = WireModel::for_strategy(&SchedStrategyConfig::Compressed, MB, 8);
+        assert_eq!(w.bytes_down, MB / 2);
+        assert_eq!(w.bytes_up, MB / 2);
+        // odd payload rounds up, never truncates
+        let odd = WireModel::for_strategy(&SchedStrategyConfig::Compressed, 7, 8);
+        assert_eq!(odd.bytes_down, 4);
+    }
+
+    #[test]
+    fn secagg_overhead_scales_with_group() {
+        let w8 = WireModel::for_strategy(&SchedStrategyConfig::SecAgg, MB, 8);
+        let w9 = WireModel::for_strategy(&SchedStrategyConfig::SecAgg, MB, 9);
+        assert_eq!(w9.bytes_down - w8.bytes_down, SECAGG_PEER_ENTRY_BYTES);
+        assert_eq!(w8.bytes_up, MB + FRAME_PREFIX_BYTES + V2_MSG_OVERHEAD_BYTES + SECAGG_COMMIT_BYTES);
+        assert_eq!(
+            w8.bytes_down,
+            MB + FRAME_PREFIX_BYTES + V2_MSG_OVERHEAD_BYTES + SECAGG_SEED_ENTRY_BYTES + 8 * SECAGG_PEER_ENTRY_BYTES
+        );
+    }
+
+    #[test]
+    fn constants_match_protocol_doc() {
+        // PROTOCOL.md: frame = len:u32 prefix; v2 msg = magic u16 +
+        // version u8 + tag u8 + header_len u32 = 8 bytes.
+        assert_eq!(FRAME_PREFIX_BYTES, 4);
+        assert_eq!(V2_MSG_OVERHEAD_BYTES, 8);
+        assert_eq!(secagg_up_overhead_bytes(), 44);
+    }
+}

@@ -282,12 +282,13 @@ fn secure_aggregation_matches_plain_mean() {
     assert_eq!(secure.rounds_run, 3);
 }
 
-/// SecAgg + dropout is rejected at config time (SecAgg0 cannot recover
-/// lost masks).
+/// SecAgg + dropout validates: the server recovers lost masks by
+/// residual unmasking (see `strategy::secagg`), so partial cohorts no
+/// longer fail the round.
 #[test]
-fn secure_aggregation_rejects_dropout() {
+fn secure_aggregation_accepts_dropout() {
     let cfg = ExperimentConfig::default().secure(true).dropout(0.2);
-    assert!(cfg.validate().is_err());
+    cfg.validate().unwrap();
 }
 
 /// Failure injection: with dropout the server sees failures, keeps

@@ -194,6 +194,94 @@ fn ledger_reconciles_with_engine_accounting() {
 }
 
 #[test]
+fn strategy_ledgers_reconcile_across_modes_and_splice() {
+    // The bytes-on-wire books hold for every strategy's wire shape, in
+    // both modes, and survive a kill/resume splice: per round, the
+    // ledger's event-folded bytes bit-equal the engine's RoundEnd books
+    // AND the standalone WireModel's dispatch/fold counts, and a
+    // spliced stream is byte-identical to an uninterrupted one.
+    use flowrs::config::SchedStrategyConfig;
+    use flowrs::strategy::wire::WireModel;
+    let strategies = [
+        SchedStrategyConfig::QFedAvg { q: 2.0 },
+        SchedStrategyConfig::FedProx { mu: 0.5 },
+        SchedStrategyConfig::Compressed,
+        SchedStrategyConfig::SecAgg,
+    ];
+    let modes: [(fn() -> ScheduleConfig, u64, u64, &str); 2] = [
+        (sync_cfg, 3, 8, "sync"),   // group = cohort
+        (async_cfg, 4, 4, "async"), // group = flush quorum
+    ];
+    for (mk_cfg, kill_at, group, mode) in modes {
+        for strategy in &strategies {
+            let label = strategy.label().replace(':', "_");
+            let cfg = mk_cfg().strategy(strategy.clone());
+            let wire = WireModel::for_strategy(strategy, cfg.model_bytes as u64, group);
+
+            let full = tmp_dir(&format!("strat-{mode}-{label}-full"));
+            let report =
+                run_population(&cfg.clone().obs(full.to_str().unwrap()), None).unwrap();
+            let events = read_events(&full).unwrap();
+            let ledger = CostLedger::from_events(&events);
+            ledger
+                .verify()
+                .unwrap_or_else(|e| panic!("{mode} {label}: ledger must reconcile: {e}"));
+            assert_eq!(ledger.rounds().len(), report.rounds.len());
+            for (lr, rr) in ledger.rounds().iter().zip(&report.rounds) {
+                assert_eq!(
+                    (lr.bytes_down, lr.bytes_up),
+                    (rr.bytes_down, rr.bytes_up),
+                    "{mode} {label} round {}: ledger books != engine books",
+                    rr.round
+                );
+                let dispatched =
+                    (rr.completed + rr.dropped_deadline + rr.dropped_churn) as u64;
+                assert_eq!(
+                    rr.bytes_down,
+                    dispatched * wire.bytes_down,
+                    "{mode} {label} round {}: downlink != wire model",
+                    rr.round
+                );
+                assert_eq!(
+                    rr.bytes_up,
+                    rr.completed as u64 * wire.bytes_up,
+                    "{mode} {label} round {}: uplink != wire model",
+                    rr.round
+                );
+            }
+
+            // kill at round k, resume, and require the spliced stream to
+            // be byte-identical (books included) and still verifiable
+            let spliced = tmp_dir(&format!("strat-{mode}-{label}-spliced"));
+            let ck = tmp_dir(&format!("strat-{mode}-{label}-ck"));
+            let (sp, ck_s) = (
+                spliced.to_str().unwrap(),
+                ck.to_str().unwrap().to_string(),
+            );
+            run_population(
+                &cfg.clone().rounds(kill_at).checkpoints(&ck_s).obs(sp),
+                None,
+            )
+            .unwrap();
+            run_population(&cfg.clone().resume(&ck_s).obs(sp), None).unwrap();
+            assert_eq!(
+                read(&full, "events.jsonl"),
+                read(&spliced, "events.jsonl"),
+                "{mode} {label}: spliced stream diverged from uninterrupted"
+            );
+            CostLedger::from_events(&read_events(&spliced).unwrap())
+                .verify()
+                .unwrap_or_else(|e| {
+                    panic!("{mode} {label}: spliced ledger must reconcile: {e}")
+                });
+            for d in [&full, &spliced, &ck] {
+                std::fs::remove_dir_all(d).ok();
+            }
+        }
+    }
+}
+
+#[test]
 fn event_stream_structure_is_well_formed() {
     let dir = tmp_dir("structure");
     run_population(&sync_cfg().obs(dir.to_str().unwrap()), None).unwrap();

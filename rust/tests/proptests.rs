@@ -768,7 +768,8 @@ fn prop_policies_deterministic_distinct_and_bounded() {
             round: 1 + rng.below(40) as u64,
             cost: &cost,
             steps_per_round: 1 + rng.below(100) as u64,
-            model_bytes: 1_000 + rng.below(1_000_000),
+            bytes_down: (1_000 + rng.below(1_000_000)) as u64,
+            bytes_up: (1_000 + rng.below(1_000_000)) as u64,
             target_cohort: k,
             deadline_s: if rng.below(2) == 0 {
                 Some(30.0 + rng.f64() * 600.0)
@@ -810,7 +811,8 @@ fn prop_fairness_cap_is_deterministic_and_honors_the_cap() {
             round: 1 + rng.below(40) as u64,
             cost: &cost,
             steps_per_round: 1 + rng.below(100) as u64,
-            model_bytes: 1_000 + rng.below(1_000_000),
+            bytes_down: (1_000 + rng.below(1_000_000)) as u64,
+            bytes_up: (1_000 + rng.below(1_000_000)) as u64,
             target_cohort: k,
             deadline_s: None,
         };
@@ -1040,7 +1042,8 @@ fn prop_deadline_aware_feasibility() {
             round: 1,
             cost: &cost,
             steps_per_round: 1 + rng.below(200) as u64,
-            model_bytes: 1_000 + rng.below(2_000_000),
+            bytes_down: (1_000 + rng.below(2_000_000)) as u64,
+            bytes_up: (1_000 + rng.below(2_000_000)) as u64,
             target_cohort: k,
             deadline_s: Some(deadline),
         };

@@ -1,0 +1,394 @@
+//! Property suite locking the unified strategy zoo's exactness claims
+//! (see `rust/src/strategy/README.md`):
+//!
+//! * secagg pairwise masks cancel **bit-exactly** over any cohort
+//!   permutation, including the dropout / residual-unmask recovery path
+//!   (the grid-arithmetic argument in `client::masking`);
+//! * f16 wire compression has bounded round-trip error and is the exact
+//!   identity on f16-representable values;
+//! * the reweighting strategies degenerate to FedAvg bit-identically at
+//!   their neutral parameters (q = 0, mu = 0), at the population-engine
+//!   level where the goldens live;
+//! * every strategy's engine trajectory is invariant under `--workers`.
+//!
+//! No property-testing crate is vendored, so "any" is exercised the
+//! repo's usual way: a deterministic `util::rng::Rng` sweep over seeds,
+//! cohort shapes, and permutations.
+
+use std::path::PathBuf;
+
+use flowrs::client::masking::{
+    for_each_mask_term, mask_update, quantize_to_grid, unmask_update, MASK_CLAMP,
+};
+use flowrs::config::{SchedStrategyConfig, ScheduleConfig};
+use flowrs::proto::Parameters;
+use flowrs::sim::population::run_population;
+use flowrs::util::rng::Rng;
+
+fn fixture() -> String {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/smalltown.csv")
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// Same shapes as the golden configs in `trace_e2e.rs`, kept small so
+/// the worker sweep stays cheap.
+fn sync_cfg() -> ScheduleConfig {
+    ScheduleConfig::default()
+        .named("props-sync")
+        .population(24)
+        .cohort(8)
+        .rounds(4)
+        .seed(7)
+        .deadline(Some(60.0))
+        .trace_file(&fixture())
+}
+
+fn async_cfg() -> ScheduleConfig {
+    ScheduleConfig::default()
+        .named("props-async")
+        .population(24)
+        .cohort(8)
+        .rounds(5)
+        .seed(7)
+        .deadline(Some(45.0))
+        .buffered(4)
+        .staleness(0.5)
+        .trace_file(&fixture())
+}
+
+/// Awkward-but-legal client ids: unicode, spaces, separators — the ids
+/// that once broke the server-side seed re-derivation.
+fn ids(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| match i % 4 {
+            0 => format!("edge node-π/{i}"),
+            1 => format!("client:β-{i}"),
+            2 => format!("Ω_unit {i}"),
+            _ => format!("dev{i}"),
+        })
+        .collect()
+}
+
+/// A cohort's plain updates: uniform beyond the clamp bound so the
+/// clamp path runs, with one non-finite value injected (quantize must
+/// collapse it to 0, not poison the aggregate).
+fn plain_updates(rng: &mut Rng, n: usize, len: usize) -> Vec<Vec<f32>> {
+    let mut rows: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            (0..len)
+                .map(|_| (rng.f32() - 0.5) * 3.0 * MASK_CLAMP)
+                .collect()
+        })
+        .collect();
+    rows[0][0] = f32::NAN;
+    if n > 1 {
+        rows[1][len - 1] = f32::INFINITY;
+    }
+    rows
+}
+
+/// The masked rows for a cohort (each client runs the real client-side
+/// path against the full peer list).
+fn masked_rows(
+    plain: &[Vec<f32>],
+    ids: &[String],
+    round: u64,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let peers: Vec<&str> = ids.iter().map(String::as_str).collect();
+    plain
+        .iter()
+        .zip(ids)
+        .map(|(row, id)| {
+            let mut v = row.clone();
+            mask_update(&mut v, id, &peers, round, seed).unwrap();
+            v
+        })
+        .collect()
+}
+
+/// f32 column sums taken in the given row order.
+fn column_sums(rows: &[Vec<f32>], order: &[usize]) -> Vec<f32> {
+    let len = rows[0].len();
+    (0..len)
+        .map(|j| order.iter().map(|&i| rows[i][j]).sum())
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// A few structurally different permutations of 0..n: identity,
+/// reverse, rotations, and Fisher–Yates shuffles.
+fn permutations(rng: &mut Rng, n: usize) -> Vec<Vec<usize>> {
+    let identity: Vec<usize> = (0..n).collect();
+    let mut perms = vec![identity.clone()];
+    perms.push(identity.iter().rev().cloned().collect());
+    for k in [1, n / 2] {
+        let mut rot = identity.clone();
+        rot.rotate_left(k.max(1) % n.max(1));
+        perms.push(rot);
+    }
+    for _ in 0..3 {
+        let mut p = identity.clone();
+        rng.shuffle(&mut p);
+        perms.push(p);
+    }
+    perms
+}
+
+#[test]
+fn masks_cancel_bit_exactly_over_any_cohort_permutation() {
+    for (seed, n, len) in [(1u64, 2usize, 96usize), (2, 3, 96), (3, 8, 64), (4, 33, 48)] {
+        let mut rng = Rng::seed_from(seed);
+        let ids = ids(n);
+        let plain = plain_updates(&mut rng, n, len);
+        let masked = masked_rows(&plain, &ids, seed, 0xFEED ^ seed);
+        let quantized: Vec<Vec<f32>> = plain
+            .iter()
+            .map(|v| v.iter().map(|&x| quantize_to_grid(x)).collect())
+            .collect();
+        let identity: Vec<usize> = (0..n).collect();
+        let want = column_sums(&quantized, &identity);
+        for perm in permutations(&mut rng, n) {
+            let got = column_sums(&masked, &perm);
+            assert_eq!(
+                bits(&got),
+                bits(&want),
+                "cohort n={n} seed={seed}: masked sum over {perm:?} is not \
+                 the quantized-plain sum bit-for-bit"
+            );
+            // and the quantized-plain sum itself is permutation-invariant
+            // (grid sums are exact, so association cannot matter)
+            assert_eq!(bits(&column_sums(&quantized, &perm)), bits(&want));
+        }
+    }
+}
+
+#[test]
+fn unmask_round_trips_the_exact_masked_bits() {
+    // unmask(mask(x)) == quantize(x) bit-for-bit, and re-masking the
+    // recovered update reproduces the original masked bits — mask
+    // application is an exact involution on the grid.
+    let mut rng = Rng::seed_from(11);
+    let ids = ids(5);
+    let peers: Vec<&str> = ids.iter().map(String::as_str).collect();
+    let plain = plain_updates(&mut rng, 5, 64);
+    for (row, id) in plain.iter().zip(&ids) {
+        let want: Vec<f32> = row.iter().map(|&x| quantize_to_grid(x)).collect();
+        let mut v = row.clone();
+        mask_update(&mut v, id, &peers, 7, 99).unwrap();
+        let masked_bits = bits(&v);
+        unmask_update(&mut v, id, &peers, 7, 99);
+        assert_eq!(bits(&v), bits(&want), "unmask did not recover {id}");
+        mask_update(&mut v, id, &peers, 7, 99).unwrap();
+        assert_eq!(bits(&v), masked_bits, "re-mask did not reproduce {id}");
+    }
+}
+
+#[test]
+fn dropout_residual_recovery_is_exact_over_permutations() {
+    // The server-side recovery path: every (reporter, dropout) pair
+    // leaves one residual mask term in the sum; re-deriving those terms
+    // through the one shared `for_each_mask_term` path and subtracting
+    // them (in f64, like `SecAgg::aggregate_fit`) recovers the exact
+    // quantized-plain sum of the reporters — no matter which clients
+    // dropped or in which order the server folds.
+    for (seed, n, n_drop) in [(21u64, 5usize, 1usize), (22, 9, 3), (23, 12, 5)] {
+        let mut rng = Rng::seed_from(seed);
+        let ids = ids(n);
+        let len = 48;
+        let plain = plain_updates(&mut rng, n, len);
+        let masked = masked_rows(&plain, &ids, seed, 0xD0D0 ^ seed);
+        // drop a spread of ids including the lexicographic extremes of
+        // the cohort (the sign convention flips around the ordering)
+        let mut by_id: Vec<usize> = (0..n).collect();
+        by_id.sort_by(|&a, &b| ids[a].cmp(&ids[b]));
+        let mut dropped: Vec<usize> = vec![by_id[0], by_id[n - 1]];
+        dropped.extend(by_id.iter().skip(2).step_by(3).cloned());
+        dropped.truncate(n_drop);
+        dropped.sort_unstable();
+        dropped.dedup();
+        let reporters: Vec<usize> =
+            (0..n).filter(|i| !dropped.contains(i)).collect();
+
+        let want: Vec<f64> = (0..len)
+            .map(|j| {
+                reporters
+                    .iter()
+                    .map(|&i| quantize_to_grid(plain[i][j]) as f64)
+                    .sum()
+            })
+            .collect();
+        for perm in permutations(&mut rng, reporters.len()) {
+            let mut acc = vec![0f64; len];
+            for &k in &perm {
+                for (a, x) in acc.iter_mut().zip(&masked[reporters[k]]) {
+                    *a += *x as f64;
+                }
+            }
+            for &r in &reporters {
+                for &d in &dropped {
+                    for_each_mask_term(
+                        &ids[r],
+                        &ids[d],
+                        seed,
+                        0xD0D0 ^ seed,
+                        len,
+                        |j, m| acc[j] -= m as f64,
+                    );
+                }
+            }
+            let got: Vec<u64> = acc.iter().map(|x| x.to_bits()).collect();
+            let exp: Vec<u64> = want.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                got, exp,
+                "n={n} dropped={dropped:?} perm={perm:?}: residual \
+                 recovery is not exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn f16_round_trip_error_is_bounded() {
+    // |dequantize(quantize(x)) - x| <= |x| * 2^-11 + 2^-25: half a ulp
+    // of the 11-bit significand for normals, plus the subnormal floor.
+    let mut rng = Rng::seed_from(31);
+    let mut values: Vec<f32> = Vec::new();
+    for e in -10..=10 {
+        for _ in 0..8 {
+            values.push((rng.f32() + 0.5) * (2.0f32).powi(e));
+            values.push(-(rng.f32() + 0.5) * (2.0f32).powi(e));
+        }
+    }
+    values.extend([0.0, -0.0, 1e-6, -1e-6]);
+    let rt = Parameters::from_flat(values.clone())
+        .quantize_f16()
+        .unwrap()
+        .to_flat_vec()
+        .unwrap();
+    for (x, y) in values.iter().zip(&rt) {
+        let bound = x.abs() * (1.0 / 2048.0) + 3.0e-8;
+        assert!(
+            (x - y).abs() <= bound,
+            "f16 round-trip of {x} drifted to {y} (bound {bound})"
+        );
+    }
+}
+
+#[test]
+fn f16_is_identity_on_exactly_representable_values() {
+    // Grid multiples k·2^-10 with |k| <= 2048 carry at most 11
+    // significant bits — f16 represents them exactly, so the compressed
+    // strategy is a bit-level no-op on them (QuantizedComm == identity).
+    let mut rng = Rng::seed_from(41);
+    let mut values: Vec<f32> = (0..512)
+        .map(|_| (rng.below(4097) as f32 - 2048.0) / 1024.0)
+        .collect();
+    values.extend([0.0, 0.5, -0.5, 1.0, -2.0, 0.125, 2.0, -1.75]);
+    let rt = Parameters::from_flat(values.clone())
+        .quantize_f16()
+        .unwrap()
+        .to_flat_vec()
+        .unwrap();
+    assert_eq!(bits(&rt), bits(&values), "f16 altered f16-exact values");
+}
+
+#[test]
+fn neutral_parameters_are_bit_identical_to_fedavg() {
+    // q = 0 makes every q-fair factor powf(_, 0) == 1.0 exactly and the
+    // renormalizer n/Σh == 1.0 exactly; mu = 0 divides by exactly 1.0.
+    // Locked at the engine level, where the golden CSVs live — the
+    // whole trajectory (weights, weighted train loss, byte books) must
+    // coincide, not just one fold.
+    for (cfg, mode) in [(sync_cfg(), "sync"), (async_cfg(), "async")] {
+        let base = run_population(&cfg, None).unwrap().to_csv();
+        for strategy in [
+            SchedStrategyConfig::QFedAvg { q: 0.0 },
+            SchedStrategyConfig::FedProx { mu: 0.0 },
+        ] {
+            let got = run_population(&cfg.clone().strategy(strategy.clone()), None)
+                .unwrap()
+                .to_csv();
+            assert_eq!(
+                got,
+                base,
+                "{mode} {} is not bit-identical to fedavg",
+                strategy.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn strategies_are_deterministic_across_worker_counts() {
+    // --workers is a pure execution knob for every strategy: the
+    // sharded engine must reproduce the single-worker CSV byte for
+    // byte, sync and async.
+    let strategies = [
+        SchedStrategyConfig::QFedAvg { q: 2.0 },
+        SchedStrategyConfig::FedProx { mu: 0.5 },
+        SchedStrategyConfig::Compressed,
+        SchedStrategyConfig::SecAgg,
+    ];
+    for (cfg, mode) in [(sync_cfg(), "sync"), (async_cfg(), "async")] {
+        for strategy in &strategies {
+            let one = run_population(&cfg.clone().strategy(strategy.clone()), None)
+                .unwrap()
+                .to_csv();
+            let four =
+                run_population(&cfg.clone().strategy(strategy.clone()).workers(4), None)
+                    .unwrap()
+                    .to_csv();
+            assert_eq!(
+                four,
+                one,
+                "{mode} {} diverges between --workers 1 and 4",
+                strategy.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn strategy_byte_books_follow_the_wire_model() {
+    // Per-round books are dispatches × bytes_down and folds × bytes_up
+    // of the strategy's wire shape: compressed halves both directions,
+    // secagg pays framing + per-peer mask-exchange overhead on top of
+    // the model. Cross-checks the engine accounting against the
+    // standalone WireModel (the same split the obs ledger verifies).
+    use flowrs::strategy::wire::WireModel;
+    for (strategy, group) in [
+        (SchedStrategyConfig::FedAvg, 8u64),
+        (SchedStrategyConfig::Compressed, 8),
+        (SchedStrategyConfig::SecAgg, 8),
+    ] {
+        let cfg = sync_cfg().strategy(strategy.clone());
+        let wire = WireModel::for_strategy(&strategy, cfg.model_bytes as u64, group);
+        let report = run_population(&cfg, None).unwrap();
+        for r in &report.rounds {
+            let dispatched =
+                (r.completed + r.dropped_deadline + r.dropped_churn) as u64;
+            assert_eq!(
+                r.bytes_down,
+                dispatched * wire.bytes_down,
+                "{} round {}: downlink book",
+                strategy.label(),
+                r.round
+            );
+            assert_eq!(
+                r.bytes_up,
+                r.completed as u64 * wire.bytes_up,
+                "{} round {}: uplink book",
+                strategy.label(),
+                r.round
+            );
+        }
+        assert!(report.total_bytes() > 0);
+    }
+}
