@@ -39,6 +39,26 @@ use crate::util::rng::Rng;
 
 use super::Client;
 
+/// Encode a peer roster into the single comma-separated config value it
+/// rides in ([`crate::client::keys::SECAGG_PEERS`]). Client ids are
+/// externally supplied and may themselves contain commas, so each entry
+/// is minimally percent-escaped (`%` → `%25`, `,` → `%2C`); the mask
+/// derivation always hashes the *decoded* id, so both ends agree for
+/// any id. Inverse: [`decode_peer_list`].
+pub fn encode_peer_list<S: AsRef<str>>(ids: &[S]) -> String {
+    ids.iter()
+        .map(|id| id.as_ref().replace('%', "%25").replace(',', "%2C"))
+        .collect::<Vec<String>>()
+        .join(",")
+}
+
+/// Decode the roster encoded by [`encode_peer_list`].
+pub fn decode_peer_list(csv: &str) -> Vec<String> {
+    csv.split(',')
+        .map(|s| s.replace("%2C", ",").replace("%25", "%"))
+        .collect()
+}
+
 /// Stable 64-bit FNV-1a over a client id string.
 pub fn id_hash(id: &str) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
@@ -176,7 +196,8 @@ impl<C: Client> Client for MaskedClient<C> {
         let round = ins.config.get_i64_or(keys::ROUND, 0) as u64;
         let mut res = self.inner.fit(ins)?;
         if let (Ok(peers_csv), Ok(seed)) = (peers_csv, seed) {
-            let peers: Vec<&str> = peers_csv.split(',').collect();
+            let decoded = decode_peer_list(&peers_csv);
+            let peers: Vec<&str> = decoded.iter().map(String::as_str).collect();
             let mut flat = res.parameters.to_flat_vec()?;
             mask_update(&mut flat, &self.client_id, &peers, round, seed as u64)?;
             res.parameters = Parameters::from_flat(flat);
@@ -272,6 +293,15 @@ mod tests {
         assert_eq!(quantize_to_grid(f32::INFINITY), 0.0);
         let x = 0.123_456_f32;
         assert!((quantize_to_grid(x) - x).abs() <= MASK_GRID / 2.0 + f32::EPSILON);
+    }
+
+    #[test]
+    fn peer_list_roundtrips_ids_with_commas_and_percents() {
+        let ids = ["plain", "a,b", "50%", "%2C", "x,%,y"];
+        let csv = encode_peer_list(&ids);
+        assert_eq!(decode_peer_list(&csv), ids);
+        // every encoded entry is comma-free, so the CSV framing is safe
+        assert_eq!(csv.split(',').count(), ids.len());
     }
 
     #[test]

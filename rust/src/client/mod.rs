@@ -58,7 +58,10 @@ pub mod keys {
     pub const ROUND: &str = "round";
     /// str: wire compression for the client's reply ("f16"); absent = f32.
     pub const QUANTIZE: &str = "quantize";
-    /// str: comma-separated cohort ids for secure aggregation (incl. self).
+    /// str: comma-separated mask-group ids for secure aggregation
+    /// (incl. self), entries percent-escaped per
+    /// [`crate::client::masking::encode_peer_list`] so ids may contain
+    /// commas.
     pub const SECAGG_PEERS: &str = "secagg_peers";
     /// i64: shared base seed for pairwise SecAgg masks.
     pub const SECAGG_SEED: &str = "secagg_seed";

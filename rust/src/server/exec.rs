@@ -73,6 +73,7 @@ use crate::proto::{
 };
 use crate::sched::availability::{AvailabilityIndex, Cycle};
 use crate::sched::policy::{Candidate, SelectionContext, SelectionPolicy};
+use crate::strategy::wire::WireModel;
 use crate::sim::cost::CostModel;
 use crate::strategy::{AsyncStrategy, ClientHandle, EvalSummary, Strategy};
 use crate::telemetry::log;
@@ -582,12 +583,22 @@ impl ExecCore {
                         }
                     })
                     .collect();
+                // Model per-dispatch traffic with the strategy's wire
+                // profile (f16 halves payloads, secagg adds the
+                // mask-exchange overhead), matching the sched engine's
+                // cost model; the secagg roster group is the announced
+                // cohort, i.e. the selection target.
+                let wire = WireModel::for_strategy(
+                    &self.config.wire,
+                    params.byte_len() as u64,
+                    hints.target_cohort as u64,
+                );
                 let ctx = SelectionContext {
                     round,
                     cost: &self.cost,
                     steps_per_round: hints.steps_per_round,
-                    bytes_down: params.byte_len() as u64,
-                    bytes_up: params.byte_len() as u64,
+                    bytes_down: wire.bytes_down,
+                    bytes_up: wire.bytes_up,
                     target_cohort: hints.target_cohort,
                     deadline_s: hints.deadline_s,
                 };
@@ -1056,14 +1067,21 @@ impl ExecCore {
         if want == 0 {
             return;
         }
+        // Streaming traffic model: the secagg mask-exchange group is the
+        // flush quorum (SecAggAsync bounds its announced roster to it).
+        let wire = WireModel::for_strategy(
+            &self.config.wire,
+            params.byte_len() as u64,
+            self.config.async_buffer.unwrap_or(1) as u64,
+        );
         let chosen: Vec<u32> = match &mut self.selector {
             Some((policy, hints)) => {
                 let ctx = SelectionContext {
                     round: version + 1,
                     cost: &self.cost,
                     steps_per_round: hints.steps_per_round,
-                    bytes_down: params.byte_len() as u64,
-                    bytes_up: params.byte_len() as u64,
+                    bytes_down: wire.bytes_down,
+                    bytes_up: wire.bytes_up,
                     target_cohort: want,
                     deadline_s: hints.deadline_s,
                 };

@@ -92,6 +92,14 @@ pub struct ServerConfig {
     /// round/flush boundary (used by `flowrs loadgen` to bound a run by
     /// wall-clock duration). `None` = run to `num_rounds`.
     pub stop: Option<Arc<AtomicBool>>,
+    /// Wire profile of the configured strategy
+    /// ([`crate::strategy::wire::WireModel`]): the cost-aware selection
+    /// hook models per-dispatch traffic from it, so live modeled round
+    /// time/energy (and deadline-based selection) agree with the sched
+    /// engine for compressed (halved payloads) and secagg (mask-exchange
+    /// overhead) runs. Payload *accounting* still uses actual encoded
+    /// sizes; this only feeds the selection model.
+    pub wire: crate::config::SchedStrategyConfig,
 }
 
 impl Default for ServerConfig {
@@ -111,6 +119,7 @@ impl Default for ServerConfig {
             checkpoint_every_rounds: 0,
             resume_from: None,
             stop: None,
+            wire: crate::config::SchedStrategyConfig::FedAvg,
         }
     }
 }

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use crate::client::app;
 use crate::client::{BaseModel, DeviceTrainer};
-use crate::config::{AggBackend, ExperimentConfig, StrategyConfig};
+use crate::config::{AggBackend, ExperimentConfig, SchedStrategyConfig, StrategyConfig};
 use crate::data::{Dataset, SyntheticSpec};
 use crate::error::{Error, Result};
 use crate::proto::Parameters;
@@ -266,6 +266,17 @@ pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimRe
     }
 
     let initial = Parameters::from_flat(runtime.initial_parameters(&cfg.model)?);
+    // The strategy's wire profile for the server's selection model.
+    // Reweighting strategies (qfedavg/fedprox) are wire-identical to the
+    // FedAvg baseline; secagg dominates f16 when both are enabled (the
+    // wire model has no combined arm).
+    let wire = if cfg.secure_agg {
+        SchedStrategyConfig::SecAgg
+    } else if cfg.quantize_f16 {
+        SchedStrategyConfig::Compressed
+    } else {
+        SchedStrategyConfig::FedAvg
+    };
     let history = if let Some(k) = cfg.async_buffer {
         // Buffered async loop: no round barrier, `rounds` counts model
         // versions. Validation already rejected everything the async loop
@@ -289,6 +300,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimRe
                 checkpoint_dir: cfg.checkpoint_dir.as_ref().map(std::path::PathBuf::from),
                 checkpoint_every_rounds: cfg.checkpoint_every_rounds,
                 resume_from: cfg.resume_from.as_ref().map(std::path::PathBuf::from),
+                wire,
                 ..Default::default()
             },
         );
@@ -307,6 +319,7 @@ pub fn run_experiment(cfg: &ExperimentConfig, runtime: &Runtime) -> Result<SimRe
                 checkpoint_dir: cfg.checkpoint_dir.as_ref().map(std::path::PathBuf::from),
                 checkpoint_every_rounds: cfg.checkpoint_every_rounds,
                 resume_from: cfg.resume_from.as_ref().map(std::path::PathBuf::from),
+                wire,
                 ..Default::default()
             },
         );

@@ -24,10 +24,10 @@
 //!   cost model* of SecAgg (bytes, aggregation rules), not a
 //!   cryptographic implementation — see `strategy/README.md`.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::client::keys;
-use crate::client::masking::{for_each_mask_term, unmask_update};
+use crate::client::masking::{encode_peer_list, for_each_mask_term, unmask_update};
 use crate::error::{Error, Result};
 use crate::proto::{EvaluateIns, EvaluateRes, FitIns, FitRes, Parameters, Scalar};
 
@@ -35,15 +35,6 @@ use super::fedavg::TrainingPlan;
 use super::{
     weighted_eval_summary, AsyncStrategy, ClientHandle, EvalSummary, Strategy,
 };
-
-/// Peer lists ride in a comma-separated config value; an id containing a
-/// comma would silently corrupt every peer's mask set.
-fn assert_maskable_id(id: &str) {
-    assert!(
-        !id.contains(','),
-        "secagg client id {id:?} contains a comma — peer lists are CSV-encoded"
-    );
-}
 
 /// Wraps an inner strategy with SecAgg0 masking coordination.
 pub struct SecAgg {
@@ -75,9 +66,10 @@ impl Strategy for SecAgg {
             .iter()
             .map(|(idx, _)| cohort[*idx].id.clone())
             .collect();
-        peer_ids.iter().for_each(|id| assert_maskable_id(id));
         self.current_cohort = peer_ids.iter().cloned().collect();
-        let peers_csv = peer_ids.join(",");
+        // Roster entries are percent-escaped, so externally-supplied ids
+        // containing commas ride the CSV config value safely.
+        let peers_csv = encode_peer_list(&peer_ids);
         for (_, ins) in &mut plan {
             ins.config
                 .insert(keys::SECAGG_PEERS.into(), Scalar::Str(peers_csv.clone()));
@@ -165,10 +157,15 @@ impl Strategy for SecAgg {
 ///
 /// Async has no synchronous cohort to cancel masks over: clients are
 /// dispatched one at a time and fold in arrival order. Each dispatch
-/// therefore announces the mask group *known so far* (every id this
-/// strategy has ever configured) and stamps the mask round with the
-/// dispatch-time model version; at each K-flush the server fully
-/// unmasks every buffered update through the shared
+/// therefore announces the *active mask group* — the last `K`
+/// (= `buffer_size`, the flush quorum) distinct ids dispatched, self
+/// included — and stamps the mask round with the dispatch-time model
+/// version. Bounding the roster to the flush quorum keeps the live
+/// announcement bytes in lock-step with the wire model's
+/// `group = k_flush` charge ([`crate::strategy::wire`]); during warmup,
+/// before `K` distinct clients have been seen, the roster is smaller
+/// and the model is a slight over-charge. At each K-flush the server
+/// fully unmasks every buffered update through the shared
 /// [`crate::client::masking`] derivation and takes the unweighted mean.
 /// Folds carry weight 1.0 — the engine's secagg composition rule — and
 /// the unmasked individual updates are used for nothing but the mean
@@ -178,12 +175,26 @@ pub struct SecAggAsync {
     plan: TrainingPlan,
     buffer_size: usize,
     base_seed: u64,
-    /// Every id ever dispatched: the announced mask group grows with it.
-    known: BTreeSet<String>,
+    /// The last `buffer_size` distinct dispatched ids, least recent
+    /// first: the mask group announced to the next dispatch.
+    active: VecDeque<String>,
     /// Per-client (mask round, announced peers) at its last dispatch —
     /// exactly what the client masked against, needed to invert it.
     announced: BTreeMap<String, (u64, Vec<String>)>,
-    buffer: Vec<(String, FitRes)>,
+    buffer: Vec<BufferedUpdate>,
+}
+
+/// One buffered masked result, carrying the (round, peers) announcement
+/// snapshot taken when the result arrived. The live `announced` map is
+/// overwritten when the streaming loop re-dispatches the same client
+/// before the flush; unmasking from the snapshot — never the live map —
+/// is what keeps the inversion aligned with the masks the client
+/// actually applied.
+struct BufferedUpdate {
+    id: String,
+    round: u64,
+    peers: Vec<String>,
+    res: FitRes,
 }
 
 impl SecAggAsync {
@@ -192,7 +203,7 @@ impl SecAggAsync {
             plan,
             buffer_size: buffer_size.max(1),
             base_seed,
-            known: BTreeSet::new(),
+            active: VecDeque::new(),
             announced: BTreeMap::new(),
             buffer: Vec::new(),
         }
@@ -208,10 +219,7 @@ impl SecAggAsync {
             return Ok(None);
         }
         let mut acc: Vec<f64> = Vec::new();
-        for (id, res) in &self.buffer {
-            let (round, peers) = self.announced.get(id).ok_or_else(|| {
-                Error::Aggregation(format!("secagg_async: no announced mask set for {id}"))
-            })?;
+        for BufferedUpdate { id, round, peers, res } in &self.buffer {
             let peer_refs: Vec<&str> = peers.iter().map(String::as_str).collect();
             let mut flat = res.parameters.to_flat_vec()?;
             // Exact inversion of the client's masking (grid arithmetic).
@@ -251,13 +259,25 @@ impl AsyncStrategy for SecAggAsync {
         parameters: &Parameters,
         handle: &ClientHandle,
     ) -> FitIns {
-        assert_maskable_id(&handle.id);
-        self.known.insert(handle.id.clone());
-        let peers: Vec<String> = self.known.iter().cloned().collect();
+        // Move-to-back recency update, bounded by the flush quorum
+        // (O(K) — the deque never exceeds `buffer_size` entries).
+        if let Some(pos) = self.active.iter().position(|id| id == &handle.id) {
+            self.active.remove(pos);
+        }
+        self.active.push_back(handle.id.clone());
+        while self.active.len() > self.buffer_size {
+            self.active.pop_front();
+        }
+        // Canonical (sorted) announcement order; the pairwise mask
+        // algebra is order-independent, this just keeps the bytes on
+        // the wire deterministic.
+        let peers: Vec<String> = self.active.iter().cloned().collect::<BTreeSet<_>>()
+            .into_iter()
+            .collect();
         self.announced
             .insert(handle.id.clone(), (version, peers.clone()));
         let mut config = self.plan.to_config(version);
-        config.insert(keys::SECAGG_PEERS.into(), Scalar::Str(peers.join(",")));
+        config.insert(keys::SECAGG_PEERS.into(), Scalar::Str(encode_peer_list(&peers)));
         config.insert(keys::SECAGG_SEED.into(), Scalar::I64(self.base_seed as i64));
         FitIns { parameters: parameters.clone(), config }
     }
@@ -273,13 +293,17 @@ impl AsyncStrategy for SecAggAsync {
         if !res.status.is_ok() || res.num_examples == 0 || res.parameters.is_empty() {
             return Ok(None);
         }
-        if !self.announced.contains_key(&handle.id) {
-            return Err(Error::Aggregation(format!(
+        // Snapshot the announcement *now*: by flush time the streaming
+        // loop may have re-dispatched this client, overwriting the live
+        // `announced` entry with a newer (round, peers) pair.
+        let (round, peers) = self.announced.get(&handle.id).cloned().ok_or_else(|| {
+            Error::Aggregation(format!(
                 "secagg_async: result from {} without a dispatched mask set",
                 handle.id
-            )));
-        }
-        self.buffer.push((handle.id.clone(), res));
+            ))
+        })?;
+        self.buffer
+            .push(BufferedUpdate { id: handle.id.clone(), round, peers, res });
         if self.buffer.len() >= self.buffer_size {
             self.flush_buffer()
         } else {
@@ -479,17 +503,49 @@ mod tests {
         assert!(s.aggregate_fit(1, &[], 2).is_err());
     }
 
+    /// Ids containing commas (or percent signs) are externally supplied
+    /// and must neither crash the server nor corrupt the roster: the
+    /// CSV entries are percent-escaped end to end, and the masked mean
+    /// still reproduces the plain mean bit-exactly through the real
+    /// client-side decode path.
     #[test]
-    #[should_panic(expected = "comma")]
-    fn comma_in_client_id_is_refused() {
+    fn comma_in_client_id_masks_and_aggregates_exactly() {
+        use crate::client::masking::decode_peer_list;
         use crate::device::profiles;
-        let cohort = vec![ClientHandle {
-            id: "a,b".into(),
-            device: profiles::by_name("jetson_tx2_gpu").unwrap(),
-            num_examples: 1,
-        }];
+        let ids = ["a,b", "50%", "plain"];
+        let cohort: Vec<ClientHandle> = ids
+            .iter()
+            .map(|id| ClientHandle {
+                id: id.to_string(),
+                device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+                num_examples: 64,
+            })
+            .collect();
         let mut s = secagg();
-        let _ = s.configure_fit(1, &Parameters::from_flat(vec![0.0]), &cohort);
+        let plan = s.configure_fit(3, &Parameters::from_flat(vec![0.0; 16]), &cohort);
+        assert_eq!(plan.len(), 3);
+        let plain: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..16).map(|j| (i * 16 + j) as f32 * 0.02).collect())
+            .collect();
+        let results: Vec<(ClientHandle, FitRes)> = plan
+            .iter()
+            .map(|(idx, ins)| {
+                // the client decodes the roster exactly as MaskedClient does
+                let decoded =
+                    decode_peer_list(ins.config.get_str(keys::SECAGG_PEERS).unwrap());
+                let peers: Vec<&str> = decoded.iter().map(String::as_str).collect();
+                assert_eq!(peers.len(), 3, "roster must frame comma ids safely");
+                let mut masked = plain[*idx].clone();
+                mask_update(&mut masked, ids[*idx], &peers, 3, 777).unwrap();
+                (cohort[*idx].clone(), fit_res(masked, 100, 1.0))
+            })
+            .collect();
+        let agg = s.aggregate_fit(3, &results, 0).unwrap();
+        let agg = agg.to_flat().unwrap();
+        let want = grid_mean(&plain);
+        for j in 0..16 {
+            assert_eq!(agg[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
     }
 
     #[test]
@@ -540,6 +596,88 @@ mod tests {
         let want = grid_mean(&plain[2..]);
         for j in 0..24 {
             assert_eq!(got[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
+    }
+
+    /// Regression for the stale-announcement bug: a result is buffered,
+    /// then the streaming loop re-dispatches the same client (a later
+    /// round, a different roster) before the flush. Unmasking must use
+    /// the (round, peers) snapshot taken when the result was buffered —
+    /// the live `announced` map now describes masks the buffered update
+    /// never wore.
+    #[test]
+    fn flush_unmasks_buffered_result_despite_redispatch() {
+        let mut s = SecAggAsync::new(TrainingPlan::default(), 2, 41);
+        let h = handles(3);
+        let p0 = Parameters::from_flat(vec![0.0; 24]);
+        let mask_per = |ins: &FitIns, id: &str, plain: &[f32]| -> Vec<f32> {
+            let decoded = crate::client::masking::decode_peer_list(
+                ins.config.get_str(keys::SECAGG_PEERS).unwrap(),
+            );
+            let peers: Vec<&str> = decoded.iter().map(String::as_str).collect();
+            let round = ins.config.get_i64(keys::ROUND).unwrap() as u64;
+            let mut v = plain.to_vec();
+            mask_update(&mut v, id, &peers, round, 41).unwrap();
+            v
+        };
+        let ins0 = s.configure_fit(0, &p0, &h[0]);
+        let ins1 = s.configure_fit(0, &p0, &h[1]); // roster {c0, c1}, round 0
+        let plain: Vec<Vec<f32>> = (0..2)
+            .map(|i| (0..24).map(|j| (i as f32 + 1.0) * 0.5 + j as f32 * 0.01).collect())
+            .collect();
+        // c1's result arrives first and is buffered (1 < K=2)
+        let masked1 = mask_per(&ins1, &h[1].id, &plain[1]);
+        assert!(s.on_fit_result(&h[1], 0, fit_res(masked1, 10, 1.0)).unwrap().is_none());
+        // the loop re-dispatches c1 at a later version, and a new client
+        // rotates the roster: announced[c1] is overwritten with
+        // (round 5, {c1, c2}) — neither matches the buffered masks
+        let _ins2 = s.configure_fit(3, &p0, &h[2]);
+        let ins1b = s.configure_fit(5, &p0, &h[1]);
+        assert_ne!(
+            ins1b.config.get_str(keys::SECAGG_PEERS).unwrap(),
+            ins1.config.get_str(keys::SECAGG_PEERS).unwrap(),
+            "precondition: the re-dispatch must announce a different roster"
+        );
+        // c0's buffered result fills the quorum → flush must be bit-exact
+        let masked0 = mask_per(&ins0, &h[0].id, &plain[0]);
+        let p = s
+            .on_fit_result(&h[0], 5, fit_res(masked0, 10, 1.0))
+            .unwrap()
+            .expect("second result fills the K=2 buffer");
+        let got = p.to_flat().unwrap();
+        let want = grid_mean(&plain);
+        for j in 0..24 {
+            assert_eq!(got[j].to_bits(), want[j].to_bits(), "j={j}");
+        }
+    }
+
+    /// The announced roster is the *active* mask group: bounded by the
+    /// flush quorum K, so live announcement bytes match the wire
+    /// model's `group = k_flush` charge instead of growing with the
+    /// whole population.
+    #[test]
+    fn async_roster_is_bounded_by_flush_quorum() {
+        use crate::device::profiles;
+        let k = 3;
+        let mut s = SecAggAsync::new(TrainingPlan::default(), k, 7);
+        let p0 = Parameters::from_flat(vec![0.0; 4]);
+        for i in 0..20 {
+            let h = ClientHandle {
+                id: format!("dev-{i}"),
+                device: profiles::by_name("jetson_tx2_gpu").unwrap(),
+                num_examples: 32,
+            };
+            let ins = s.configure_fit(i, &p0, &h);
+            let peers = ins.config.get_str(keys::SECAGG_PEERS).unwrap();
+            let n = peers.split(',').count();
+            assert!(n <= k, "dispatch {i}: roster has {n} entries > K={k}");
+            assert!(
+                peers.split(',').any(|p| p == h.id),
+                "dispatch {i}: roster must include self"
+            );
+            if i as usize >= k {
+                assert_eq!(n, k, "steady state announces exactly K entries");
+            }
         }
     }
 

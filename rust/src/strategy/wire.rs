@@ -78,7 +78,13 @@ impl WireModel {
     /// Wire model for `strategy`. `group` is the number of peers in a
     /// secagg mask-exchange group — the cohort size in sync mode, the
     /// flush quorum (`k_flush`) in async mode; ignored by every other
-    /// strategy.
+    /// strategy. The live async protocol keeps these books honest:
+    /// `SecAggAsync` bounds its announced roster to the flush quorum
+    /// (most-recent `k_flush` distinct clients), so the modeled
+    /// `group · SECAGG_PEER_ENTRY_BYTES` downlink charge matches the
+    /// steady-state roster instead of underestimating an ever-growing
+    /// one (during warmup the live roster is smaller; the model is a
+    /// slight over-charge, never an under-charge).
     pub fn for_strategy(strategy: &SchedStrategyConfig, model_bytes: u64, group: u64) -> WireModel {
         match strategy {
             // Reweighting strategies change fold *weights*, not payloads.
