@@ -354,6 +354,28 @@ def weighted_train_loss(folds, losses):
 
 FOLD, DROP_DEADLINE, DROP_CHURN = 0, 1, 2
 
+# Edge↔cloud leg payload (WireModel::edge_leg): always the full f32
+# tensor each way, whatever the device-leg strategy does.
+EDGE_LEG_BYTES = MODEL_BYTES
+
+
+def edge_of(i, edges, assignment, population):
+    """EdgeTier::edge_of — which edge owns device `i` (TOPOLOGY.md).
+
+    "rr" stripes devices round-robin; "skew" carves contiguous blocks
+    where edge e < edges-1 owns population >> (e+1) devices and the last
+    edge absorbs the remainder."""
+    if assignment == "rr":
+        return i % edges
+    assert assignment == "skew", assignment
+    start = 0
+    for e in range(edges - 1):
+        share = population >> (e + 1)
+        if i < start + share:
+            return e
+        start += share
+    return edges - 1
+
 
 def csv_row(r):
     return (
@@ -387,11 +409,15 @@ def report_csv(rows):
 
 
 def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5,
-             strategy=FEDAVG):
+             strategy=FEDAVG, edges=1, edge_assignment="rr", edge_fail=None):
     policy = Rng(seed ^ 0x5E1)
     trainer = Surrogate()
     bytes_down, bytes_up = wire_model(strategy, cohort)
     wire_bytes = bytes_down + bytes_up
+    # two-tier state (EdgeTier; edges == 1 is the flat engine, verbatim)
+    tiered = edges > 1
+    alive = [True] * edges
+    fail = tuple(edge_fail) if edge_fail is not None else None  # (e, t)
     clock = 0.0
     version = 0
     rows = []
@@ -416,6 +442,8 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5,
         deadline_abs = now + deadline if deadline is not None else INF
         heap = []
         slowest_all = now
+        seen_edges = set()  # seen_version mirror: version bumps per round
+        edge_down = 0
         for i, full_t, full_e in dispatches:
             full_finish = now + full_t
             first_off = pop[i].trace.on_dwell_end(now)
@@ -425,13 +453,31 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5,
                 cutoff, outcome = deadline_abs, DROP_DEADLINE
             else:
                 cutoff, outcome = full_finish, FOLD
+            if tiered and outcome == FOLD:
+                # a would-be fold whose edge is dead (or dies before the
+                # upload lands) has nowhere to land: churn at the full
+                # finish with full energy (push_dispatch reclassification)
+                e_id = edge_of(i, edges, edge_assignment, len(pop))
+                doomed = (not alive[e_id]) or (
+                    fail is not None and fail[0] == e_id
+                    and full_finish >= fail[1])
+                if doomed:
+                    cutoff, outcome = full_finish, DROP_CHURN
             frac = min(max((cutoff - now) / (full_finish - now), 0.0), 1.0)
             # sync events resolve at the full modeled finish
             heapq.heappush(heap, (full_finish, i, full_e * frac, outcome))
+            if tiered:
+                # one cloud→edge broadcast per round per alive edge,
+                # booked at the first member dispatch; dead edges pull
+                # nothing (their orphans are served at device-leg cost)
+                e_id = edge_of(i, edges, edge_assignment, len(pop))
+                if alive[e_id] and e_id not in seen_edges:
+                    seen_edges.add(e_id)
+                    edge_down += EDGE_LEG_BYTES
         energy = 0.0
         wasted = 0.0
         dd = dc = 0
-        down_acc = len(dispatches) * bytes_down  # counted at dispatch
+        down_acc = len(dispatches) * bytes_down + edge_down
         up_acc = 0
         buffer = []  # (device_idx, staleness=0, resolve_s) in settle order
         while heap:
@@ -447,6 +493,47 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5,
             else:
                 dd += 1
                 wasted += e
+        # two-tier barrier merge (sync_edge_merge): the round end comes
+        # from the *pre-failure* books (an edge dying mid-round never
+        # moves the barrier), then the failure applies, then the buffer
+        # regroups by edge id (stable: ascending edge, arrival order
+        # within an edge) and each contributing edge ships one dense
+        # model upstream
+        merged_round_end = None
+        if tiered:
+            drops0 = dd + dc
+            slowest_ok0 = now
+            for _, _, resolve in buffer:
+                slowest_ok0 = max(slowest_ok0, resolve)
+            if deadline is not None and drops0 > 0:
+                merged_round_end = now + deadline
+            elif deadline is not None:
+                merged_round_end = slowest_ok0
+            else:
+                merged_round_end = slowest_all
+            if fail is not None and fail[1] <= merged_round_end:
+                e_dead = fail[0]
+                fail = None
+                alive[e_dead] = False
+                survivors = []
+                w = 0.0
+                for f in buffer:
+                    if edge_of(f[0], edges, edge_assignment, len(pop)) \
+                            == e_dead:
+                        dc += 1
+                        # the fold's settle charge, recomputed (fold
+                        # frac is exactly 1.0) and moved to the wasted
+                        # book in arrival order
+                        w += round_energy(pop[f[0]], steps, wire_bytes)
+                    else:
+                        survivors.append(f)
+                buffer = survivors
+                wasted += w
+            buffer.sort(
+                key=lambda f: edge_of(f[0], edges, edge_assignment, len(pop)))
+            up_acc += EDGE_LEG_BYTES * len(
+                {edge_of(f[0], edges, edge_assignment, len(pop))
+                 for f in buffer})
         # flush (sync staleness is 0, so the discount factor is exactly
         # 1.0 — pow(1, y) == 1; strategy reweighting applies on top)
         version += 1
@@ -460,7 +547,9 @@ def run_sync(pop, seed, cohort, rounds, steps, deadline, alpha=0.5,
         slowest_ok = now
         for _, _, resolve in buffer:
             slowest_ok = max(slowest_ok, resolve)
-        if deadline is not None and drops > 0:
+        if merged_round_end is not None:
+            round_end = merged_round_end
+        elif deadline is not None and drops > 0:
             round_end = now + deadline
         elif deadline is not None:
             round_end = slowest_ok
@@ -669,13 +758,21 @@ class Index:
 
 
 def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
-              max_concurrency=0, strategy=FEDAVG):
+              max_concurrency=0, strategy=FEDAVG, edges=1,
+              edge_assignment="rr", edge_fail=None):
     policy = Rng(seed ^ 0x5E1)
     trainer = Surrogate()
     window = max(max_concurrency if max_concurrency else cohort, 1)
     # secagg mask-exchange group in async mode is the flush quorum
     bytes_down, bytes_up = wire_model(strategy, k_flush)
     wire_bytes = bytes_down + bytes_up
+    # two-tier state (EdgeTier; edges == 1 is the flat engine, verbatim)
+    tiered = edges > 1
+    quorum = max(1, -(-k_flush // edges))  # k_flush.div_ceil(edges)
+    alive = [True] * edges
+    parked = [[] for _ in range(edges)]  # (device_idx, base_version, resolve)
+    seen_version = [None] * edges  # None = never pulled (u64::MAX mirror)
+    fail = tuple(edge_fail) if edge_fail is not None else None  # (e, t)
     index = Index([d.trace for d in pop], 0.0)
     state = dict(now=0.0, avail_count=0, in_flight=0)
     version = 0
@@ -720,11 +817,28 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
                 cutoff, outcome = deadline_abs, DROP_DEADLINE
             else:
                 cutoff, outcome = full_finish, FOLD
+            if tiered and outcome == FOLD:
+                # push_dispatch reclassification: a fold for a dead (or
+                # dying-before-it-lands) edge becomes a churn drop at
+                # the full finish with full energy
+                e_id = edge_of(i, edges, edge_assignment, len(pop))
+                doomed = (not alive[e_id]) or (
+                    fail is not None and fail[0] == e_id
+                    and full_finish >= fail[1])
+                if doomed:
+                    cutoff, outcome = full_finish, DROP_CHURN
             frac = min(max((cutoff - now) / (full_finish - now), 0.0), 1.0)
             state["in_flight"] += 1
             # downlink is booked at dispatch: in-flight work at flush time
             # has already been paid for in the current window
             books["down"] += bytes_down
+            if tiered:
+                # one cloud→edge broadcast per model version per alive
+                # edge, booked at the first member dispatch
+                e_id = edge_of(i, edges, edge_assignment, len(pop))
+                if alive[e_id] and seen_version[e_id] != version:
+                    seen_version[e_id] = version
+                    books["down"] += EDGE_LEG_BYTES
             # streaming events resolve at the cutoff
             heapq.heappush(heap, (cutoff, i, full_e * frac, version, outcome))
             dispatched += 1
@@ -750,11 +864,41 @@ def run_async(pop, seed, cohort, rounds, steps, k_flush, alpha, deadline,
         # settle
         state["now"] = max(state["now"], resolve)
         index.mark_idle(i)
+        # a pending edge failure applies at the first settle at or past
+        # its time, before this event is processed (apply_edge_fail_async)
+        if tiered and fail is not None and state["now"] >= fail[1]:
+            e_dead = fail[0]
+            fail = None
+            alive[e_dead] = False
+            entries = parked[e_dead]
+            parked[e_dead] = []
+            dc += len(entries)
+            w = 0.0
+            for di, _bv, _r in entries:
+                # parked folds are lost: their settle charge, recomputed
+                # (fold frac is exactly 1.0), moves to the wasted book
+                # in arrival order
+                w += round_energy(pop[di], steps, wire_bytes)
+            wasted += w
         state["in_flight"] -= 1
         energy += e
         if outcome == FOLD:
-            buffer.append((i, version - base_version, resolve))
-            books["up"] += bytes_up  # uplink is booked on a completed fold
+            if tiered:
+                # the fold parks at its edge; it reaches the cloud
+                # buffer when the ship quorum fills, with its staleness
+                # computed *at ship time* (it ages across cloud flushes)
+                e_id = edge_of(i, edges, edge_assignment, len(pop))
+                assert alive[e_id], "fold settled for a dead edge"
+                parked[e_id].append((i, base_version, resolve))
+                books["up"] += bytes_up
+                if len(parked[e_id]) >= quorum:
+                    for di, bv, r in parked[e_id]:
+                        buffer.append((di, version - bv, r))
+                    parked[e_id] = []
+                    books["up"] += EDGE_LEG_BYTES
+            else:
+                buffer.append((i, version - base_version, resolve))
+                books["up"] += bytes_up  # uplink booked on a completed fold
         elif outcome == DROP_CHURN:
             dc += 1
             wasted += e
@@ -829,6 +973,17 @@ def golden_names(suffix):
             f"smalltown_async_{suffix}.golden.csv")
 
 
+# Two-tier golden arms: fedavg wire, round-robin assignment, the same
+# CFGs as the flat pair — only --edges differs. Pinned by
+# rust/tests/trace_e2e.rs and the ci.yml edge-smoke leg.
+EDGE_ARMS = (2, 4)
+
+
+def edge_golden_names(n):
+    return (f"smalltown_sync_edges{n}.golden.csv",
+            f"smalltown_async_edges{n}.golden.csv")
+
+
 def build_fixture():
     """A small deployment-shaped trace: phone / jetson / tablet / rpi
     classes plus untagged devices, with disconnects spread over ~40 min
@@ -881,6 +1036,19 @@ def compute_goldens():
                         ASYNC_CFG["deadline"], strategy=strategy)
         out[name_sync] = (report_csv(sync), sync)
         out[name_async] = (report_csv(asy), asy)
+    for n in EDGE_ARMS:
+        name_sync, name_async = edge_golden_names(n)
+        pop_sync = synthesize(rows, SYNC_CFG["seed"])
+        sync = run_sync(pop_sync, SYNC_CFG["seed"], SYNC_CFG["cohort"],
+                        SYNC_CFG["rounds"], SYNC_CFG["steps"],
+                        SYNC_CFG["deadline"], edges=n)
+        pop_async = synthesize(rows, ASYNC_CFG["seed"])
+        asy = run_async(pop_async, ASYNC_CFG["seed"], ASYNC_CFG["cohort"],
+                        ASYNC_CFG["rounds"], ASYNC_CFG["steps"],
+                        ASYNC_CFG["k_flush"], ASYNC_CFG["alpha"],
+                        ASYNC_CFG["deadline"], edges=n)
+        out[name_sync] = (report_csv(sync), sync)
+        out[name_async] = (report_csv(asy), asy)
     return fixture, out
 
 
@@ -904,6 +1072,20 @@ def main():
         name_sync, name_async = golden_names(suffix)
         assert goldens[name_sync][0] != base_sync, name_sync
         assert goldens[name_async][0] != base_async, name_async
+
+    # the edge tier must genuinely diverge from the flat baseline (the
+    # cloud↔edge legs book extra bytes even when nothing else moves),
+    # and edges=1 must be the flat engine byte-for-byte
+    for n in EDGE_ARMS:
+        name_sync, name_async = edge_golden_names(n)
+        assert goldens[name_sync][0] != base_sync, name_sync
+        assert goldens[name_async][0] != base_async, name_async
+    rows_fix = parse_trace_csv(fixture)
+    flat_pop = synthesize(rows_fix, SYNC_CFG["seed"])
+    flat_sync = run_sync(flat_pop, SYNC_CFG["seed"], SYNC_CFG["cohort"],
+                         SYNC_CFG["rounds"], SYNC_CFG["steps"],
+                         SYNC_CFG["deadline"], edges=1)
+    assert report_csv(flat_sync) == base_sync, "--edges 1 must be flat"
 
     if len(sys.argv) >= 3 and sys.argv[1] == "--write-fixtures":
         outdir = sys.argv[2]

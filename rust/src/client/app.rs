@@ -48,6 +48,64 @@ pub fn run_client_negotiated(
     serve_wire(conn, client, wire)
 }
 
+/// Bounded reconnect policy for [`run_client_with_retry`]: exponential
+/// backoff with multiplicative jitter, capped per sleep.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total connection attempts, first dial included (min 1 = no retry).
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles each further attempt.
+    pub backoff_base_s: f64,
+    /// Hard cap on any single backoff sleep.
+    pub backoff_cap_s: f64,
+    /// Jitter stream seed (a deterministic backoff schedule for tests).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 5, backoff_base_s: 0.2, backoff_cap_s: 5.0, seed: 0 }
+    }
+}
+
+/// Keep a client serving across transient transport faults: dial,
+/// negotiate, register, serve; on a *non-clean* transport/I-O/timeout
+/// error, sleep a jittered exponential backoff and re-dial from
+/// scratch — registration included, since the server may have dropped
+/// all session state. A clean server goodbye (`Reconnect`, or a
+/// frame-boundary EOF) returns `Ok`; protocol/client faults and an
+/// exhausted retry budget return the real error instead of swallowing
+/// it (the silent-death regression this loop exists to prevent).
+pub fn run_client_with_retry(
+    mut dial: impl FnMut() -> Result<Connection>,
+    client: &mut dyn Client,
+    info: ClientInfo,
+    policy: &RetryPolicy,
+) -> Result<()> {
+    let mut jitter = crate::util::rng::Rng::seed_from(policy.seed);
+    let mut last_err = Error::Transport("retry budget exhausted".into());
+    for attempt in 0..policy.max_attempts.max(1) {
+        if attempt > 0 {
+            let exp = policy.backoff_base_s * f64::powi(2.0, attempt as i32 - 1);
+            // Multiplicative jitter in [0.5, 1.5): desynchronizes a
+            // cohort that all lost the same server at the same moment.
+            let sleep_s = (exp * (0.5 + jitter.f64())).min(policy.backoff_cap_s);
+            if sleep_s > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(sleep_s));
+            }
+        }
+        let served = dial().and_then(|conn| run_client_negotiated(conn, client, info.clone()));
+        match served {
+            Ok(()) => return Ok(()),
+            Err(e @ (Error::Transport(_) | Error::Io(_) | Error::Timeout(_))) => last_err = e,
+            // Protocol/codec/client faults are not transient: redialing
+            // would just replay the same failure against the server.
+            Err(e) => return Err(e),
+        }
+    }
+    Err(last_err)
+}
+
 /// Serve an already-registered connection (the simulator registers the
 /// proxy directly, so no `Register` message is sent here). Wire v1.
 pub fn serve(conn: Connection, client: &mut dyn Client) -> Result<()> {
@@ -61,7 +119,12 @@ pub fn serve_wire(mut conn: Connection, client: &mut dyn Client, wire: u8) -> Re
     loop {
         let msg = match conn.recv_server_message() {
             Ok(m) => m,
-            Err(Error::Transport(_)) => return Ok(()), // server went away
+            // Only a frame-boundary EOF is the server cleanly going
+            // away. A truncated frame, a mid-exchange reset, or any
+            // other transport fault used to land here too and silently
+            // ended the loop with Ok — the client died without anyone
+            // (caller, operator, retry logic) ever seeing an error.
+            Err(e) if e.is_clean_close() => return Ok(()),
             Err(e) => return Err(e),
         };
         match msg {
@@ -216,6 +279,177 @@ mod tests {
             other => panic!("expected Disconnect, got {other:?}"),
         }
         handle.join().unwrap().unwrap();
+    }
+
+    /// Regression for the silent-death bug: a *non-clean* transport
+    /// fault mid-fit used to be swallowed as `Ok(())` by the serve
+    /// loop. Now it surfaces as an error, the retry loop re-dials and
+    /// re-registers, and the second attempt completes the exchange.
+    #[test]
+    fn retry_survives_mid_fit_connection_drop() {
+        use crate::transport::frame::{read_frame, write_frame};
+        use crate::transport::tcp::TcpConnection;
+        use crate::util::bytes::FrameBuf;
+        use std::io::Write;
+
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let server = std::thread::spawn(move || {
+            let wire = crate::proto::codec::VERSION;
+            // Attempt 1: negotiate + register normally, then die
+            // mid-frame while "sending" a FitIns — the length prefix
+            // promises 64 bytes, 3 arrive, the socket drops.
+            {
+                let (mut stream, _) = listener.accept().unwrap();
+                let hello = read_frame(&mut stream).unwrap();
+                assert!(matches!(
+                    crate::proto::decode_client_frame(&FrameBuf::new(hello)).unwrap(),
+                    ClientMessage::Hello { .. }
+                ));
+                write_frame(
+                    &mut stream,
+                    &crate::proto::encode_server_message_v(
+                        &ServerMessage::HelloAck { version: wire },
+                        wire,
+                    ),
+                )
+                .unwrap();
+                let reg = read_frame(&mut stream).unwrap();
+                assert!(matches!(
+                    crate::proto::decode_client_frame(&FrameBuf::new(reg)).unwrap(),
+                    ClientMessage::Register(_)
+                ));
+                stream.write_all(&64u32.to_le_bytes()).unwrap();
+                stream.write_all(&[1, 2, 3]).unwrap();
+                stream.flush().unwrap();
+            }
+            // Attempt 2: the retry loop re-dials; serve the whole
+            // session, re-registration first.
+            let (stream, _) = listener.accept().unwrap();
+            let mut conn = Connection::Tcp(TcpConnection::from_stream(stream).unwrap());
+            assert!(matches!(
+                conn.recv_client_message().unwrap(),
+                ClientMessage::Hello { .. }
+            ));
+            conn.send_server_message(&ServerMessage::HelloAck { version: wire }).unwrap();
+            assert!(matches!(
+                conn.recv_client_message().unwrap(),
+                ClientMessage::Register(_)
+            ));
+            conn.send_server_message(&ServerMessage::FitIns(FitIns {
+                parameters: Parameters::from_flat(vec![1.0, 2.0]),
+                config: Default::default(),
+            }))
+            .unwrap();
+            let fit = match conn.recv_client_message().unwrap() {
+                ClientMessage::FitRes(res) => res.parameters.to_flat().unwrap().to_vec(),
+                other => panic!("expected FitRes, got {other:?}"),
+            };
+            conn.send_server_message(&ServerMessage::Reconnect { seconds: 0 }).unwrap();
+            let _ = conn.recv_client_message(); // Disconnect (best effort)
+            fit
+        });
+
+        let mut client = EchoClient { params: vec![0.0; 2] };
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            backoff_base_s: 0.01,
+            backoff_cap_s: 0.05,
+            seed: 42,
+        };
+        let mut dials = 0u32;
+        run_client_with_retry(
+            || {
+                dials += 1;
+                crate::transport::tcp::TcpConnection::connect(addr).map(Connection::Tcp)
+            },
+            &mut client,
+            ClientInfo {
+                client_id: "c0".into(),
+                device: "pixel4".into(),
+                os: "Android 10".into(),
+                num_examples: 10,
+            },
+            &policy,
+        )
+        .unwrap();
+        assert_eq!(dials, 2, "first dial died mid-fit, second completed");
+        assert_eq!(server.join().unwrap(), vec![2.0, 3.0]);
+    }
+
+    /// An exhausted retry budget surfaces the last real error instead
+    /// of pretending the client exited cleanly.
+    #[test]
+    fn retry_budget_exhaustion_returns_the_error() {
+        let mut client = EchoClient { params: vec![0.0; 2] };
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            backoff_base_s: 0.001,
+            backoff_cap_s: 0.002,
+            seed: 7,
+        };
+        let mut dials = 0u32;
+        let err = run_client_with_retry(
+            || {
+                dials += 1;
+                Err(crate::Error::Transport("connect: refused".into()))
+            },
+            &mut client,
+            ClientInfo {
+                client_id: "c0".into(),
+                device: "pixel4".into(),
+                os: "Android 10".into(),
+                num_examples: 10,
+            },
+            &policy,
+        )
+        .unwrap_err();
+        assert_eq!(dials, 3);
+        assert!(err.to_string().contains("connect: refused"), "{err}");
+    }
+
+    /// A clean frame-boundary EOF (server hangs up between messages)
+    /// still exits `Ok` without consuming any retry attempts.
+    #[test]
+    fn clean_close_is_not_retried() {
+        use crate::transport::inproc;
+        let (server_end, client_end) = inproc::pair();
+        let mut server = Connection::InProc(server_end);
+        let mut ends = vec![client_end];
+        let handle = std::thread::spawn(move || {
+            let mut client = EchoClient { params: vec![0.0; 2] };
+            let mut dials = 0u32;
+            let out = run_client_with_retry(
+                || {
+                    dials += 1;
+                    Ok(Connection::InProc(ends.pop().expect("only one dial")))
+                },
+                &mut client,
+                ClientInfo {
+                    client_id: "c0".into(),
+                    device: "pixel4".into(),
+                    os: "Android 10".into(),
+                    num_examples: 10,
+                },
+                &RetryPolicy::default(),
+            );
+            (out, dials)
+        });
+        match server.recv_client_message().unwrap() {
+            ClientMessage::Hello { .. } => {}
+            other => panic!("expected Hello, got {other:?}"),
+        }
+        server
+            .send_server_message(&ServerMessage::HelloAck {
+                version: crate::proto::codec::VERSION,
+            })
+            .unwrap();
+        assert!(matches!(server.recv_client_message().unwrap(), ClientMessage::Register(_)));
+        drop(server); // frame-boundary EOF: clean
+        let (out, dials) = handle.join().unwrap();
+        out.unwrap();
+        assert_eq!(dials, 1);
     }
 
     #[test]

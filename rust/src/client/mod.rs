@@ -11,6 +11,7 @@ pub mod app;
 pub mod masking;
 pub mod trainer;
 
+pub use app::{run_client_with_retry, RetryPolicy};
 pub use masking::MaskedClient;
 pub use trainer::{BaseModel, DeviceTrainer};
 

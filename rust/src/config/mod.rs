@@ -679,6 +679,63 @@ impl Default for SchedStrategyConfig {
     }
 }
 
+/// Device→edge assignment rule for the two-tier topology
+/// (`rust/src/sched/TOPOLOGY.md`). Pure functions of the device index —
+/// no randomness, so the assignment is trivially mirrored by the Python
+/// differential port and stable across resume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeAssignment {
+    /// Device `i` belongs to edge `i % edges` (balanced shards).
+    RoundRobin,
+    /// Geometric shares: edge `e < edges-1` owns the next
+    /// `population >> (e+1)` devices (contiguous block), the last edge
+    /// absorbs the remainder — a deliberately skewed device→edge map.
+    Skew,
+}
+
+impl EdgeAssignment {
+    /// Stable wire/CLI name.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EdgeAssignment::RoundRobin => "rr",
+            EdgeAssignment::Skew => "skew",
+        }
+    }
+
+    /// Parse a CLI/JSON name.
+    pub fn parse(s: &str) -> Result<EdgeAssignment> {
+        match s {
+            "rr" => Ok(EdgeAssignment::RoundRobin),
+            "skew" => Ok(EdgeAssignment::Skew),
+            other => Err(Error::Config(format!(
+                "unknown edge assignment {other:?} (rr | skew)"
+            ))),
+        }
+    }
+
+    /// Parse the `--edges N[:assignment]` CLI form.
+    pub fn parse_edges(s: &str) -> Result<(usize, EdgeAssignment)> {
+        let (n, asg) = match s.split_once(':') {
+            Some((n, a)) => (n, EdgeAssignment::parse(a)?),
+            None => (s, EdgeAssignment::RoundRobin),
+        };
+        let n: usize = n
+            .parse()
+            .map_err(|_| Error::Config(format!("--edges expects N[:rr|skew], got {s:?}")))?;
+        Ok((n, asg))
+    }
+}
+
+/// Parse the `--edge-fail E@T` CLI form: kill edge `E` at virtual time
+/// `T` seconds.
+pub fn parse_edge_fail(s: &str) -> Result<(u64, f64)> {
+    let err = || Error::Config(format!("--edge-fail expects EDGE@T_SECONDS, got {s:?}"));
+    let (e, t) = s.split_once('@').ok_or_else(err)?;
+    let e: u64 = e.parse().map_err(|_| err())?;
+    let t: f64 = t.parse().map_err(|_| err())?;
+    Ok((e, t))
+}
+
 /// A population-scale scheduling experiment (the `sched` subcommand and
 /// [`crate::sim::population`]).
 #[derive(Debug, Clone)]
@@ -761,6 +818,20 @@ pub struct ScheduleConfig {
     /// checkpoints to `--workers 1` — and is therefore excluded from
     /// [`ScheduleConfig::fingerprint`].
     pub workers: usize,
+    /// Edge-aggregator tier width: the number of edge nodes folding
+    /// device deltas before anything reaches the cloud coordinator.
+    /// `1` (the default) is today's flat shape — the tier machinery is
+    /// bypassed entirely and every output stays byte-identical to the
+    /// pre-topology engine. Normative semantics in
+    /// `rust/src/sched/TOPOLOGY.md`.
+    pub edges: usize,
+    /// Device→edge assignment rule; only meaningful when `edges > 1`.
+    pub edge_assignment: EdgeAssignment,
+    /// Fail edge `.0` at virtual time `.1` s: its buffered deltas drop
+    /// (charged as churn waste), it ships nothing afterwards, and its
+    /// devices degrade to direct-to-cloud dispatch for the rest of the
+    /// run. `None` = no failure injection.
+    pub edge_fail: Option<(u64, f64)>,
 }
 
 impl Default for ScheduleConfig {
@@ -792,6 +863,9 @@ impl Default for ScheduleConfig {
             resume_from: None,
             obs_out: None,
             workers: 1,
+            edges: 1,
+            edge_assignment: EdgeAssignment::RoundRobin,
+            edge_fail: None,
         }
     }
 }
@@ -894,6 +968,21 @@ impl ScheduleConfig {
         self.workers = n;
         self
     }
+    /// Edge-aggregator tier width (1 = flat, no tier).
+    pub fn edges(mut self, n: usize) -> Self {
+        self.edges = n;
+        self
+    }
+    /// Device→edge assignment rule.
+    pub fn edge_assignment(mut self, a: EdgeAssignment) -> Self {
+        self.edge_assignment = a;
+        self
+    }
+    /// Fail edge `edge` at virtual time `t_s`.
+    pub fn edge_fail(mut self, edge: u64, t_s: f64) -> Self {
+        self.edge_fail = Some((edge, t_s));
+        self
+    }
 
     /// Stable fingerprint of every knob the engine's *trajectory*
     /// depends on. Excluded: `name`, `rounds`, `target_accuracy` (a
@@ -911,9 +1000,11 @@ impl ScheduleConfig {
     /// FORMAT.md fingerprint policy): `v2` was the sharded-engine era
     /// (Debug shape gained `workers`); `v3` is the unified-strategy
     /// era (Debug shape gained `strategy`, and the cost books gained
-    /// bytes-on-wire). Prefixes differ across eras, so old checkpoints
-    /// fail resume with an explicit mismatch instead of a silent
-    /// semantic drift.
+    /// bytes-on-wire); `v4` is the two-tier-topology era (Debug shape
+    /// gained `edges` / `edge_assignment` / `edge_fail`, all of which
+    /// are trajectory knobs and stay pinned). Prefixes differ across
+    /// eras, so old checkpoints fail resume with an explicit mismatch
+    /// instead of a silent semantic drift.
     pub fn fingerprint(&self) -> String {
         let mut c = self.clone();
         c.name = String::new();
@@ -924,7 +1015,7 @@ impl ScheduleConfig {
         c.resume_from = None;
         c.obs_out = None;
         c.workers = 1;
-        format!("schedule-v3:{c:?}")
+        format!("schedule-v4:{c:?}")
     }
 
     /// Async in-flight bound: explicit `max_concurrency`, or the cohort
@@ -1020,6 +1111,33 @@ impl ScheduleConfig {
         }
         if self.workers == 0 {
             return Err(Error::Config("workers must be >= 1".into()));
+        }
+        if self.edges == 0 {
+            return Err(Error::Config("edges must be >= 1 (1 = flat, no tier)".into()));
+        }
+        if self.edges > self.population {
+            return Err(Error::Config(format!(
+                "edges {} exceeds population {}",
+                self.edges, self.population
+            )));
+        }
+        if let Some((edge, t_s)) = self.edge_fail {
+            if self.edges <= 1 {
+                return Err(Error::Config(
+                    "edge_fail requires a real tier (edges > 1)".into(),
+                ));
+            }
+            if edge >= self.edges as u64 {
+                return Err(Error::Config(format!(
+                    "edge_fail edge {} out of range (edges = {})",
+                    edge, self.edges
+                )));
+            }
+            if !(t_s >= 0.0) || !t_s.is_finite() {
+                return Err(Error::Config(
+                    "edge_fail time must be finite and >= 0".into(),
+                ));
+            }
         }
         self.strategy.validate()?;
         self.policy.validate()
@@ -1123,6 +1241,15 @@ impl ScheduleConfig {
         }
         if let Some(v) = doc.opt("workers") {
             cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("edges") {
+            cfg.edges = v.as_usize()?;
+        }
+        if let Some(v) = doc.opt("edge_assignment") {
+            cfg.edge_assignment = EdgeAssignment::parse(v.as_str()?)?;
+        }
+        if let Some(v) = doc.opt("edge_fail") {
+            cfg.edge_fail = Some(parse_edge_fail(v.as_str()?)?);
         }
         cfg.validate()?;
         Ok(cfg)
@@ -1449,8 +1576,18 @@ mod tests {
         assert_eq!(base.fingerprint(), base.clone().obs("obs-dir").fingerprint());
         // worker count is an execution knob, not an identity knob
         assert_eq!(base.fingerprint(), base.clone().workers(8).fingerprint());
-        // the unified-strategy era is a new fingerprint namespace
-        assert!(base.fingerprint().starts_with("schedule-v3:"));
+        // the two-tier-topology era is a new fingerprint namespace
+        assert!(base.fingerprint().starts_with("schedule-v4:"));
+        // the topology is a trajectory knob (fold grouping + wire bytes)
+        assert_ne!(base.fingerprint(), base.clone().edges(2).fingerprint());
+        assert_ne!(
+            base.clone().edges(2).fingerprint(),
+            base.clone().edges(2).edge_assignment(EdgeAssignment::Skew).fingerprint()
+        );
+        assert_ne!(
+            base.clone().edges(2).fingerprint(),
+            base.clone().edges(2).edge_fail(0, 100.0).fingerprint()
+        );
         // the strategy is a trajectory knob (fold weights + wire bytes)
         assert_ne!(
             base.fingerprint(),
@@ -1488,6 +1625,42 @@ mod tests {
                 }))
                 .fingerprint()
         );
+    }
+
+    #[test]
+    fn edge_knobs_parse_and_validate() {
+        assert_eq!(
+            EdgeAssignment::parse_edges("4").unwrap(),
+            (4, EdgeAssignment::RoundRobin)
+        );
+        assert_eq!(
+            EdgeAssignment::parse_edges("2:skew").unwrap(),
+            (2, EdgeAssignment::Skew)
+        );
+        assert!(EdgeAssignment::parse_edges("2:zigzag").is_err());
+        assert!(EdgeAssignment::parse_edges("many").is_err());
+        assert_eq!(parse_edge_fail("1@120.5").unwrap(), (1, 120.5));
+        assert!(parse_edge_fail("120.5").is_err());
+        assert!(parse_edge_fail("x@y").is_err());
+
+        let base = ScheduleConfig::default().population(100).cohort(10);
+        base.clone().edges(2).validate().unwrap();
+        base.clone().edges(4).edge_fail(3, 60.0).validate().unwrap();
+        assert!(base.clone().edges(0).validate().is_err());
+        assert!(base.clone().edges(101).validate().is_err());
+        // failing an edge needs a real tier, and an existing edge
+        assert!(base.clone().edge_fail(0, 60.0).validate().is_err());
+        assert!(base.clone().edges(2).edge_fail(2, 60.0).validate().is_err());
+        assert!(base.clone().edges(2).edge_fail(0, f64::NAN).validate().is_err());
+
+        let cfg = ScheduleConfig::from_json(
+            r#"{"population": 24, "cohort_size": 8, "edges": 2,
+                "edge_assignment": "skew", "edge_fail": "0@90"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.edges, 2);
+        assert_eq!(cfg.edge_assignment, EdgeAssignment::Skew);
+        assert_eq!(cfg.edge_fail, Some((0, 90.0)));
     }
 
     #[test]

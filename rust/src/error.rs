@@ -33,6 +33,22 @@ pub enum Error {
     Io(std::io::Error),
 }
 
+impl Error {
+    /// True iff this is the transport's *frame-boundary EOF* — the peer
+    /// hung up cleanly between messages. These are the only two
+    /// messages the transport layer produces for that case
+    /// (`transport::frame` for sockets, `transport::inproc` for
+    /// channels); anything else — mid-frame truncation, connect/bind
+    /// failures, oversized frames — is a real fault and must not be
+    /// treated as a clean shutdown.
+    pub fn is_clean_close(&self) -> bool {
+        matches!(
+            self,
+            Error::Transport(m) if m == "connection closed" || m == "in-proc peer closed"
+        )
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -76,6 +92,17 @@ mod tests {
         assert!(e.to_string().contains("codec"));
         let e = Error::Timeout("fit round 3".into());
         assert!(e.to_string().contains("timeout"));
+    }
+
+    #[test]
+    fn clean_close_matches_only_frame_boundary_eof() {
+        assert!(Error::Transport("connection closed".into()).is_clean_close());
+        assert!(Error::Transport("in-proc peer closed".into()).is_clean_close());
+        // mid-frame truncation, dial failures, and non-transport errors
+        // are real faults, never a clean shutdown
+        assert!(!Error::Transport("truncated frame: unexpected EOF".into()).is_clean_close());
+        assert!(!Error::Transport("connect: refused".into()).is_clean_close());
+        assert!(!Error::Codec("connection closed".into()).is_clean_close());
     }
 
     #[test]

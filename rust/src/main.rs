@@ -22,8 +22,8 @@ use std::time::Duration;
 
 use flowrs::client::{app, BaseModel, DeviceTrainer};
 use flowrs::config::{
-    AggBackend, ExperimentConfig, PolicyConfig, ScheduleConfig, SchedStrategyConfig,
-    StrategyConfig,
+    parse_edge_fail, AggBackend, EdgeAssignment, ExperimentConfig, PolicyConfig, ScheduleConfig,
+    SchedStrategyConfig, StrategyConfig,
 };
 use flowrs::data::{Partitioner, SyntheticSpec};
 use flowrs::device::profiles;
@@ -173,6 +173,12 @@ fn print_usage() {
                       deterministic, virtual-time-stamped; spec in rust/src/obs/METRICS.md)\n\
                       --workers N  (shard synthesis/scans/folds over N threads;\n\
                       output is byte-identical to --workers 1 for every N)\n\
+                      --edges N[:rr|skew]  (two-tier edge aggregation: devices\n\
+                      fold at N edge nodes which ship pre-aggregated deltas\n\
+                      upstream; 1 = flat, byte-identical to the pre-tier\n\
+                      engine; spec in rust/src/sched/TOPOLOGY.md)\n\
+                      --edge-fail E@T  (kill edge E at virtual second T;\n\
+                      the run degrades — parked folds churn — but completes)\n\
                       --format table|csv|json  (comparison-table output format)\n\
                       (real PJRT cohort numerics with artifacts, surrogate otherwise)\n\
            server     start a Flower TCP server\n\
@@ -441,6 +447,14 @@ fn sched_config_from_args(args: &Args) -> Result<ScheduleConfig> {
     }
     if let Some(v) = args.get_parsed("workers")? {
         cfg.workers = v;
+    }
+    if let Some(v) = args.get("edges") {
+        let (n, assignment) = EdgeAssignment::parse_edges(v)?;
+        cfg.edges = n;
+        cfg.edge_assignment = assignment;
+    }
+    if let Some(v) = args.get("edge-fail") {
+        cfg.edge_fail = Some(parse_edge_fail(v)?);
     }
     if let Some(v) = args.get("policy") {
         cfg.policy = PolicyConfig::parse(v)?;

@@ -180,6 +180,46 @@ pub enum Event {
         /// Uplink wire bytes this round (folded results only).
         bytes_up: u64,
     },
+    /// A cloud→edge model broadcast (two-tier topology only): the edge
+    /// pulled the current version once and fans it out to its shard, so
+    /// this books per-version, not per-device. `edge` ids are bounded
+    /// by the `--edges` config, never by population.
+    EdgeDispatch {
+        /// Virtual time of the first dispatch that pulled this version.
+        t_s: f64,
+        /// Edge-aggregator id.
+        edge: u64,
+        /// Parameter bytes moved cloud→edge (full f32 tensor).
+        bytes_down: u64,
+    },
+    /// An edge aggregator shipped its folded shard upstream (two-tier
+    /// topology only): at the barrier merge in sync mode, at the edge's
+    /// ship quorum in async mode.
+    EdgeFlush {
+        /// Virtual time of the ship (barrier close / quorum settle).
+        t_s: f64,
+        /// Edge-aggregator id.
+        edge: u64,
+        /// Device folds pre-aggregated into this shipment.
+        folded: u64,
+        /// Summed staleness over the shipped folds (computed at ship
+        /// time — parked folds age across cloud flushes).
+        staleness_sum: u64,
+        /// Parameter bytes moved edge→cloud (full f32 tensor).
+        bytes_up: u64,
+    },
+    /// An edge aggregator died (`--edge-fail E@T`): its parked folds
+    /// are lost and the run degrades instead of dying.
+    EdgeFail {
+        /// Virtual time the cloud applied the failure.
+        t_s: f64,
+        /// Edge-aggregator id.
+        edge: u64,
+        /// Parked folds dropped with the edge.
+        dropped: u64,
+        /// Energy (J) those folds had charged, now wasted.
+        wasted_j: f64,
+    },
     /// A checkpoint file was atomically written (live/global sink only —
     /// never the per-run stream, so kill/resume splices stay
     /// byte-identical; see `METRICS.md`).
@@ -260,6 +300,9 @@ impl Event {
             Event::Idle { .. } => "idle",
             Event::Flush { .. } => "flush",
             Event::RoundEnd { .. } => "round_end",
+            Event::EdgeDispatch { .. } => "edge_dispatch",
+            Event::EdgeFlush { .. } => "edge_flush",
+            Event::EdgeFail { .. } => "edge_fail",
             Event::CheckpointWrite { .. } => "checkpoint_write",
             Event::FrameSent { .. } => "frame_sent",
             Event::FrameRecv { .. } => "frame_recv",
@@ -280,6 +323,9 @@ impl Event {
             | Event::Idle { t_s, .. }
             | Event::Flush { t_s, .. }
             | Event::RoundEnd { t_s, .. }
+            | Event::EdgeDispatch { t_s, .. }
+            | Event::EdgeFlush { t_s, .. }
+            | Event::EdgeFail { t_s, .. }
             | Event::CheckpointWrite { t_s, .. }
             | Event::FrameSent { t_s, .. }
             | Event::FrameRecv { t_s, .. }
@@ -361,6 +407,21 @@ impl Event {
                 num("accuracy", accuracy);
                 num("bytes_down", bytes_down as f64);
                 num("bytes_up", bytes_up as f64);
+            }
+            Event::EdgeDispatch { edge, bytes_down, .. } => {
+                num("edge", edge as f64);
+                num("bytes_down", bytes_down as f64);
+            }
+            Event::EdgeFlush { edge, folded, staleness_sum, bytes_up, .. } => {
+                num("edge", edge as f64);
+                num("folded", folded as f64);
+                num("staleness_sum", staleness_sum as f64);
+                num("bytes_up", bytes_up as f64);
+            }
+            Event::EdgeFail { edge, dropped, wasted_j, .. } => {
+                num("edge", edge as f64);
+                num("dropped", dropped as f64);
+                num("wasted_j", wasted_j);
             }
             Event::CheckpointWrite { version, bytes, .. } => {
                 num("version", version as f64);
@@ -464,6 +525,24 @@ impl Event {
                 bytes_down: u("bytes_down")?,
                 bytes_up: u("bytes_up")?,
             }),
+            "edge_dispatch" => Ok(Event::EdgeDispatch {
+                t_s,
+                edge: u("edge")?,
+                bytes_down: u("bytes_down")?,
+            }),
+            "edge_flush" => Ok(Event::EdgeFlush {
+                t_s,
+                edge: u("edge")?,
+                folded: u("folded")?,
+                staleness_sum: u("staleness_sum")?,
+                bytes_up: u("bytes_up")?,
+            }),
+            "edge_fail" => Ok(Event::EdgeFail {
+                t_s,
+                edge: u("edge")?,
+                dropped: u("dropped")?,
+                wasted_j: f("wasted_j")?,
+            }),
             "checkpoint_write" => Ok(Event::CheckpointWrite {
                 t_s,
                 version: u("version")?,
@@ -541,6 +620,15 @@ mod tests {
                 bytes_down: 4_379_968,
                 bytes_up: 3_284_976,
             },
+            Event::EdgeDispatch { t_s: 10.0, edge: 1, bytes_down: 547_496 },
+            Event::EdgeFlush {
+                t_s: 61.5,
+                edge: 1,
+                folded: 4,
+                staleness_sum: 3,
+                bytes_up: 547_496,
+            },
+            Event::EdgeFail { t_s: 90.0, edge: 0, dropped: 2, wasted_j: 7.25 },
             Event::CheckpointWrite { t_s: 0.25, version: 3, bytes: 4096 },
             Event::FrameSent { t_s: 0.5, bytes: 128 },
             Event::FrameRecv { t_s: 0.5, bytes: 256 },

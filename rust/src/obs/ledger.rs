@@ -56,6 +56,45 @@ impl ClassCost {
     }
 }
 
+/// Accumulated costs for one edge aggregator (two-tier topology only;
+/// flat runs never produce these buckets). Edge ids are bounded by the
+/// `--edges` config, so this is a legal label dimension (METRICS.md).
+/// Edge bytes are the cloud↔edge *leg* — separate traffic from the
+/// per-class device legs, and included in the engine's round byte books
+/// (so [`CostLedger::verify`] reconciles them too).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EdgeCost {
+    /// Cloud→edge model broadcasts (one per pulled version).
+    pub broadcasts: u64,
+    /// Edge→cloud shipments (barrier merges / quorum ships).
+    pub flushes: u64,
+    /// Device folds pre-aggregated through this edge.
+    pub folded: u64,
+    /// Summed ship-time staleness over those folds.
+    pub staleness_sum: u64,
+    /// Parked folds lost to an edge failure.
+    pub dropped: u64,
+    /// Parameter bytes moved cloud→edge.
+    pub bytes_down: u64,
+    /// Parameter bytes moved edge→cloud.
+    pub bytes_up: u64,
+    /// Energy wasted by folds that died with the edge (J).
+    pub wasted_j: f64,
+}
+
+impl EdgeCost {
+    fn fold_into(&mut self, other: &EdgeCost) {
+        self.broadcasts += other.broadcasts;
+        self.flushes += other.flushes;
+        self.folded += other.folded;
+        self.staleness_sum += other.staleness_sum;
+        self.dropped += other.dropped;
+        self.bytes_down += other.bytes_down;
+        self.bytes_up += other.bytes_up;
+        self.wasted_j += other.wasted_j;
+    }
+}
+
 /// One closed per-round (or per-model-version) cost bucket.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct RoundCost {
@@ -84,6 +123,8 @@ pub struct RoundCost {
     pub reported_bytes_up: u64,
     /// Per-hardware-class breakdown.
     pub classes: BTreeMap<&'static str, ClassCost>,
+    /// Per-edge breakdown (empty for flat runs).
+    pub edges: BTreeMap<u64, EdgeCost>,
 }
 
 /// Event-sourced cost accumulator. Feed it every event in stream order
@@ -96,6 +137,8 @@ pub struct CostLedger {
     cur: RoundCost,
     /// Whole-run per-class totals (includes the open bucket).
     totals: BTreeMap<&'static str, ClassCost>,
+    /// Whole-run per-edge totals (includes the open bucket).
+    edge_totals: BTreeMap<u64, EdgeCost>,
 }
 
 impl CostLedger {
@@ -119,6 +162,14 @@ impl CostLedger {
         [
             self.cur.classes.entry(class).or_default(),
             self.totals.entry(class).or_default(),
+        ]
+    }
+
+    /// Same, for the per-edge buckets.
+    fn edge_cells(&mut self, edge: u64) -> [&mut EdgeCost; 2] {
+        [
+            self.cur.edges.entry(edge).or_default(),
+            self.edge_totals.entry(edge).or_default(),
         ]
     }
 
@@ -184,6 +235,34 @@ impl CostLedger {
                 self.cur.reported_bytes_up = bytes_up;
                 self.rounds.push(std::mem::take(&mut self.cur));
             }
+            Event::EdgeDispatch { edge, bytes_down, .. } => {
+                for c in self.edge_cells(edge) {
+                    c.broadcasts += 1;
+                    c.bytes_down += bytes_down;
+                }
+                self.cur.bytes_down += bytes_down;
+            }
+            Event::EdgeFlush { edge, folded, staleness_sum, bytes_up, .. } => {
+                for c in self.edge_cells(edge) {
+                    c.flushes += 1;
+                    c.folded += folded;
+                    c.staleness_sum += staleness_sum;
+                    c.bytes_up += bytes_up;
+                }
+                self.cur.bytes_up += bytes_up;
+            }
+            // The dead folds' energy was already charged through their
+            // `fold` events; the failure only *moves* it to the wasted
+            // book — so the round's energy sum is untouched here, and
+            // the single pre-summed `wasted_j` keeps the float addition
+            // order identical to the engine's.
+            Event::EdgeFail { edge, dropped, wasted_j, .. } => {
+                for c in self.edge_cells(edge) {
+                    c.dropped += dropped;
+                    c.wasted_j += wasted_j;
+                }
+                self.cur.wasted_j += wasted_j;
+            }
             // Pure markers / live-path events carry no ledger costs.
             Event::RoundStart { .. }
             | Event::Flush { .. }
@@ -204,6 +283,11 @@ impl CostLedger {
     /// Whole-run per-class totals (closed buckets + the open one).
     pub fn class_totals(&self) -> &BTreeMap<&'static str, ClassCost> {
         &self.totals
+    }
+
+    /// Whole-run per-edge totals (empty for flat runs).
+    pub fn edge_totals(&self) -> &BTreeMap<u64, EdgeCost> {
+        &self.edge_totals
     }
 
     /// The reconciliation identity: every closed round's event-order
@@ -285,6 +369,25 @@ impl CostLedger {
             format!("{:.2}", sum.bytes_up as f64 / 1e6),
             format!("{:.1}", sum.energy_j),
         ]);
+        // Edge legs are separate traffic from the device legs above, so
+        // they sit *below* TOTAL rather than inside it. Column reuse:
+        // dispatched = broadcasts, folded = folds shipped through,
+        // drop_churn = folds lost to the edge dying, energy_J = the
+        // wasted energy of those losses (edges themselves charge none).
+        for (edge, c) in &self.edge_totals {
+            t.row(vec![
+                format!("edge{edge}"),
+                c.broadcasts.to_string(),
+                c.folded.to_string(),
+                "0".to_string(),
+                c.dropped.to_string(),
+                "0.0".to_string(),
+                "0.0".to_string(),
+                format!("{:.2}", c.bytes_down as f64 / 1e6),
+                format!("{:.2}", c.bytes_up as f64 / 1e6),
+                format!("{:.1}", c.wasted_j),
+            ]);
+        }
         t
     }
 
@@ -311,6 +414,15 @@ impl CostLedger {
                     c.bytes_down,
                     c.bytes_up,
                     c.energy_j,
+                ));
+            }
+            // Two-tier runs append per-edge rows after the class rows;
+            // flat runs have no edge buckets and the file is unchanged
+            // byte for byte. Same column reuse as `to_table`.
+            for (edge, c) in &r.edges {
+                out.push_str(&format!(
+                    "{},edge{},{},{},0,{},0,0,{},{},{}\n",
+                    r.round, edge, c.broadcasts, c.folded, c.dropped, c.bytes_down, c.bytes_up, c.wasted_j,
                 ));
             }
         }
@@ -390,6 +502,90 @@ mod tests {
         assert_eq!(rpi.dropped_deadline, 1);
         assert_eq!(rpi.energy_j, 30.0);
         ledger.verify().unwrap();
+    }
+
+    /// A two-tier round: both edges pull the model, both park one fold,
+    /// edge 0 ships its fold upstream, edge 1 dies and drops its fold.
+    /// The round-end books carry both legs (device + edge) and the
+    /// wasted energy of the dead fold.
+    fn edge_sample_events() -> Vec<Event> {
+        let dispatch = |device, class| Event::Dispatch {
+            t_s: 0.0,
+            device,
+            class,
+            fate: Fate::Fold,
+            work_s: 10.0,
+            energy_j: if device == 0 { 5.0 } else { 4.0 },
+            bytes_down: 100,
+        };
+        vec![
+            Event::RoundStart { t_s: 0.0, round: 1, available: 2, selected: 2 },
+            dispatch(0, "pixel4"),
+            Event::EdgeDispatch { t_s: 0.0, edge: 0, bytes_down: 500 },
+            dispatch(1, "raspberry_pi4"),
+            Event::EdgeDispatch { t_s: 0.0, edge: 1, bytes_down: 500 },
+            Event::Fold { t_s: 10.0, device: 0, class: "pixel4", staleness: 0, energy_j: 5.0, bytes_up: 100 },
+            Event::Fold { t_s: 12.0, device: 1, class: "raspberry_pi4", staleness: 0, energy_j: 4.0, bytes_up: 100 },
+            Event::EdgeFlush { t_s: 10.0, edge: 0, folded: 1, staleness_sum: 0, bytes_up: 500 },
+            Event::EdgeFail { t_s: 13.0, edge: 1, dropped: 1, wasted_j: 4.0 },
+            Event::RoundEnd {
+                t_s: 14.0,
+                round: 1,
+                round_time_s: 14.0,
+                energy_j: 9.0,
+                wasted_j: 4.0,
+                completed: 1,
+                dropped_deadline: 0,
+                dropped_churn: 1,
+                eval_loss: 1.0,
+                accuracy: 0.1,
+                bytes_down: 1200,
+                bytes_up: 700,
+            },
+        ]
+    }
+
+    #[test]
+    fn edge_events_bucket_and_reconcile() {
+        let ledger = CostLedger::from_events(&edge_sample_events());
+        assert_eq!(ledger.rounds().len(), 1);
+        let r = &ledger.rounds()[0];
+        // Edge legs landed in the round byte books...
+        assert_eq!(r.bytes_down, 1200);
+        assert_eq!(r.bytes_up, 700);
+        // ...the failure moved (not added) energy to the wasted book...
+        assert_eq!(r.energy_j, 9.0);
+        assert_eq!(r.wasted_j, 4.0);
+        // ...and the per-edge buckets split the tier's traffic.
+        let e0 = &r.edges[&0];
+        assert_eq!((e0.broadcasts, e0.flushes, e0.folded, e0.dropped), (1, 1, 1, 0));
+        assert_eq!((e0.bytes_down, e0.bytes_up), (500, 500));
+        assert_eq!(e0.wasted_j, 0.0);
+        let e1 = &r.edges[&1];
+        assert_eq!((e1.broadcasts, e1.flushes, e1.folded, e1.dropped), (1, 0, 0, 1));
+        assert_eq!((e1.bytes_down, e1.bytes_up), (500, 0));
+        assert_eq!(e1.wasted_j, 4.0);
+        // The event stream and the engine's books agree bit for bit.
+        ledger.verify().unwrap();
+        assert_eq!(ledger.edge_totals().len(), 2);
+    }
+
+    #[test]
+    fn edge_rows_render_only_for_tiered_runs() {
+        // Flat stream: no edge rows anywhere — costs.csv byte-shape is
+        // untouched by the tier feature.
+        let flat = CostLedger::from_events(&sample_events());
+        assert!(!flat.to_csv().contains("edge"));
+        assert!(!flat.to_table("costs").render().contains("edge"));
+        // Tiered stream: per-edge rows after the class rows.
+        let tiered = CostLedger::from_events(&edge_sample_events());
+        let csv = tiered.to_csv();
+        assert!(csv.contains("\n1,edge0,1,1,0,0,0,0,500,500,0\n"), "{csv}");
+        assert!(csv.contains("\n1,edge1,1,0,0,1,0,0,500,0,4\n"), "{csv}");
+        assert_eq!(csv.lines().count(), 5); // header + 2 classes + 2 edges
+        let text = tiered.to_table("costs").render();
+        assert!(text.contains("edge0"));
+        assert!(text.contains("edge1"));
     }
 
     #[test]

@@ -37,7 +37,7 @@ pub mod registry;
 pub mod sink;
 
 pub use event::{Event, Fate};
-pub use ledger::{ClassCost, CostLedger, RoundCost};
+pub use ledger::{ClassCost, CostLedger, EdgeCost, RoundCost};
 pub use registry::{registry, serve_metrics, Counter, Gauge, Histogram, Registry};
 pub use sink::{
     emit_global, global, install_global, wall_t_s, JsonlSink, NullSink, ObsSink, VecSink,
@@ -93,6 +93,24 @@ pub fn replay_registry(events: &[Event]) -> Registry {
                 reg.counter("sched_rounds_total").inc();
                 reg.histogram("sched_round_time_s").record(*round_time_s);
                 reg.histogram("sched_round_energy_j").record(*energy_j);
+            }
+            // Two-tier topology: aggregate tier counters plus per-edge
+            // byte counters. Edge ids are bounded by `--edges`, so the
+            // name suffix is a legal label dimension (METRICS.md).
+            Event::EdgeDispatch { edge, bytes_down, .. } => {
+                reg.counter("sched_edge_dispatches_total").inc();
+                reg.counter("sched_edge_bytes_down_total").add(*bytes_down);
+                reg.counter(&format!("sched_edge{edge}_bytes_down_total")).add(*bytes_down);
+            }
+            Event::EdgeFlush { edge, folded, bytes_up, .. } => {
+                reg.counter("sched_edge_flushes_total").inc();
+                reg.counter("sched_edge_bytes_up_total").add(*bytes_up);
+                reg.counter(&format!("sched_edge{edge}_bytes_up_total")).add(*bytes_up);
+                reg.histogram("sched_edge_flush_folded").record(*folded as f64);
+            }
+            Event::EdgeFail { dropped, .. } => {
+                reg.counter("sched_edge_fails_total").inc();
+                reg.counter("sched_edge_dropped_total").add(*dropped);
             }
             _ => {}
         }

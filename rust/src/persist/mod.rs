@@ -44,8 +44,8 @@ pub use format::{
 };
 pub use state::{
     decode_population_rounds, decode_round_records, load_engine_checkpoint,
-    load_server_checkpoint, resolve_checkpoint, ClientStatRecord, DeviceState, EngineCheckpoint,
-    InFlightDispatch, ParamTensor, ServerCheckpoint, ShardSeeds,
+    load_server_checkpoint, resolve_checkpoint, ClientStatRecord, DeviceState, EdgeParkedFold,
+    EdgeTierState, EngineCheckpoint, InFlightDispatch, ParamTensor, ServerCheckpoint, ShardSeeds,
 };
 
 pub(crate) use format::{Dec, Enc};

@@ -43,6 +43,7 @@ const SEC_INDEX: &str = "INDX";
 const SEC_ENGINE_ROUNDS: &str = "ERND";
 const SEC_ENGINE_WIRE: &str = "EWIR";
 const SEC_SHARDS: &str = "SHRD";
+const SEC_EDGE: &str = "EDGE";
 const SEC_PARAMS: &str = "PARM";
 const SEC_SERVER_META: &str = "SMET";
 const SEC_SERVER_ROUNDS: &str = "SRND";
@@ -106,6 +107,37 @@ pub struct ShardSeeds {
     pub starts: Vec<RngState>,
 }
 
+/// One device fold parked at an edge aggregator when the checkpoint was
+/// taken (async two-tier mode: edge buffers may be non-empty at a cloud
+/// flush boundary). Mirrors the engine's in-memory entry verbatim so a
+/// resumed run ships it at exactly the quorum the uninterrupted run
+/// would have.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeParkedFold {
+    /// Index of the device in the synthesized population.
+    pub device: u64,
+    /// Model version the fold was dispatched against (staleness is
+    /// computed at ship time, so the raw base version is what persists).
+    pub base_version: u64,
+    /// Virtual time the fold arrived at its edge.
+    pub resolve_s: f64,
+}
+
+/// Edge-aggregator tier state (`EDGE` section, optional — absent in
+/// flat runs and in checkpoints written before the tier existed). See
+/// `rust/src/sched/TOPOLOGY.md` for the tier semantics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EdgeTierState {
+    /// Edge count the writing run used (sanity-checked on resume; the
+    /// config fingerprint already pins it).
+    pub edges: u64,
+    /// Liveness per edge (`false` = an applied `--edge-fail` — stays
+    /// dead across resume).
+    pub alive: Vec<bool>,
+    /// Parked folds per edge, arrival order.
+    pub buffers: Vec<Vec<EdgeParkedFold>>,
+}
+
 /// A complete [`crate::sched::Engine`] snapshot at a flush boundary.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EngineCheckpoint {
@@ -142,6 +174,9 @@ pub struct EngineCheckpoint {
     /// Parallel-synthesis audit record (`None` for pre-`SHRD`
     /// checkpoints, which resume fine — the audit is then skipped).
     pub shards: Option<ShardSeeds>,
+    /// Edge-aggregator tier state (`None` for flat runs; required by
+    /// resume when the config says `edges > 1`).
+    pub edge: Option<EdgeTierState>,
 }
 
 impl EngineCheckpoint {
@@ -225,6 +260,24 @@ impl EngineCheckpoint {
                 e.opt_f64(s.spare_normal);
             }
             w.section(SEC_SHARDS, e.into_bytes());
+        }
+        if let Some(edge) = &self.edge {
+            let mut e = Enc::new();
+            e.u64(edge.edges);
+            e.u64(edge.alive.len() as u64);
+            for &a in &edge.alive {
+                e.bool(a);
+            }
+            e.u64(edge.buffers.len() as u64);
+            for buf in &edge.buffers {
+                e.u64(buf.len() as u64);
+                for f in buf {
+                    e.u64(f.device);
+                    e.u64(f.base_version);
+                    e.f64(f.resolve_s);
+                }
+            }
+            w.section(SEC_EDGE, e.into_bytes());
         }
         w
     }
@@ -327,6 +380,34 @@ impl EngineCheckpoint {
             }
             None => None,
         };
+        let edge = match r.opt_section(SEC_EDGE) {
+            Some(buf) => {
+                let mut d = Dec::new(buf);
+                let edges = d.u64()?;
+                let n = d.count("edge liveness flag")?;
+                let mut alive = Vec::with_capacity(n);
+                for _ in 0..n {
+                    alive.push(d.bool()?);
+                }
+                let n = d.count("edge buffer")?;
+                let mut buffers = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let m = d.count("edge parked fold")?;
+                    let mut buf = Vec::with_capacity(m);
+                    for _ in 0..m {
+                        buf.push(EdgeParkedFold {
+                            device: d.u64()?,
+                            base_version: d.u64()?,
+                            resolve_s: d.f64()?,
+                        });
+                    }
+                    buffers.push(buf);
+                }
+                d.done()?;
+                Some(EdgeTierState { edges, alive, buffers })
+            }
+            None => None,
+        };
         Ok(EngineCheckpoint {
             fingerprint,
             version,
@@ -341,6 +422,7 @@ impl EngineCheckpoint {
             index,
             rounds,
             shards,
+            edge,
         })
     }
 }
@@ -840,6 +922,14 @@ mod tests {
                     RngState { s: [21, 22, 23, 24], spare_normal: Some(0.5) },
                 ],
             }),
+            edge: Some(EdgeTierState {
+                edges: 2,
+                alive: vec![true, false],
+                buffers: vec![
+                    vec![EdgeParkedFold { device: 0, base_version: 3, resolve_s: 124.5 }],
+                    Vec::new(),
+                ],
+            }),
         }
     }
 
@@ -875,6 +965,19 @@ mod tests {
         let back =
             EngineCheckpoint::from_reader(&CheckpointReader::from_bytes(&bytes).unwrap()).unwrap();
         assert_eq!(back.shards, None);
+        assert_eq!(back, ck);
+    }
+
+    /// The `EDGE` section follows the same forward-compatible policy:
+    /// flat runs (and pre-tier checkpoints) simply omit it.
+    #[test]
+    fn engine_checkpoint_without_edge_section_decodes() {
+        let mut ck = engine_ckpt();
+        ck.edge = None;
+        let bytes = ck.to_writer().to_bytes();
+        let back =
+            EngineCheckpoint::from_reader(&CheckpointReader::from_bytes(&bytes).unwrap()).unwrap();
+        assert_eq!(back.edge, None);
         assert_eq!(back, ck);
     }
 

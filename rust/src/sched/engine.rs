@@ -37,11 +37,14 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-use crate::config::ScheduleConfig;
+use crate::config::{EdgeAssignment, ScheduleConfig};
 use crate::device::{profiles, DeviceProfile};
 use crate::error::{Error, Result};
 use crate::obs::{Event, Fate, NullSink, ObsSink};
-use crate::persist::{CheckpointStore, DeviceState, EngineCheckpoint, InFlightDispatch, ShardSeeds};
+use crate::persist::{
+    CheckpointStore, DeviceState, EdgeParkedFold, EdgeTierState, EngineCheckpoint,
+    InFlightDispatch, ShardSeeds,
+};
 use crate::telemetry::log;
 use crate::util::par;
 use crate::util::rng::{Rng, RngState};
@@ -593,6 +596,89 @@ struct BufferedFold {
     resolve_s: f64,
 }
 
+/// One device fold parked at an edge aggregator (async mode) awaiting
+/// the edge's ship quorum. Staleness is deliberately *not* stored —
+/// it is computed at ship time, so a fold that sits at its edge across
+/// a cloud flush ages (the per-edge staleness the two-tier scenarios
+/// measure).
+#[derive(Debug, Clone, Copy)]
+struct EdgeBuffered {
+    device_idx: usize,
+    base_version: u64,
+    resolve_s: f64,
+}
+
+/// Engine-side state of the edge-aggregator tier (`--edges N`, N > 1).
+/// The engine holds it as an `Option`: `None` is the flat single-tier
+/// shape, and every tier hook lives behind that `Option` — the
+/// structural guarantee that `--edges 1` runs are byte-identical to the
+/// pre-tier engine (CSV, events.jsonl, costs.csv). Normative semantics
+/// live in `rust/src/sched/TOPOLOGY.md`.
+struct EdgeTier {
+    edges: usize,
+    assignment: EdgeAssignment,
+    population: usize,
+    /// Edge↔cloud leg payload, each way: always the full f32 tensor.
+    /// The device-leg strategy (f16, secagg framing) stops at the edge —
+    /// an edge folds its shard locally and ships one dense model
+    /// upstream regardless of how its devices talked to it.
+    leg_bytes: u64,
+    /// Async ship quorum per edge: `max(1, k_flush.div_ceil(edges))`.
+    /// Unused (0) in sync mode, where the barrier is the ship point.
+    quorum: usize,
+    /// Async: folds parked per edge awaiting the ship quorum.
+    buffers: Vec<Vec<EdgeBuffered>>,
+    /// Which model version each edge last pulled (`u64::MAX` = never):
+    /// one cloud→edge broadcast per version per alive edge, booked at
+    /// the first member dispatch. Deliberately *not* checkpointed — at
+    /// a flush boundary every entry is stale relative to the
+    /// just-incremented version, so a resumed engine re-books the next
+    /// broadcast exactly like the uninterrupted one.
+    seen_version: Vec<u64>,
+    alive: Vec<bool>,
+    /// Pending `--edge-fail E@T` injection; cleared once applied (the
+    /// `alive` flag then carries the death permanently, checkpoints
+    /// included).
+    fail: Option<(usize, f64)>,
+}
+
+impl EdgeTier {
+    fn new(cfg: &ScheduleConfig, quorum: usize) -> EdgeTier {
+        EdgeTier {
+            edges: cfg.edges,
+            assignment: cfg.edge_assignment,
+            population: cfg.population,
+            // Symmetric leg; either direction of `edge_leg` is the payload.
+            leg_bytes: crate::strategy::wire::WireModel::edge_leg(cfg.model_bytes as u64).bytes_up,
+            quorum,
+            buffers: vec![Vec::new(); cfg.edges],
+            seen_version: vec![u64::MAX; cfg.edges],
+            alive: vec![true; cfg.edges],
+            fail: cfg.edge_fail.map(|(e, t)| (e as usize, t)),
+        }
+    }
+
+    /// Which edge owns `device_idx` — a pure integer function of the
+    /// index (see [`EdgeAssignment`]), mirrored verbatim by the Python
+    /// differential port.
+    fn edge_of(&self, device_idx: usize) -> usize {
+        match self.assignment {
+            EdgeAssignment::RoundRobin => device_idx % self.edges,
+            EdgeAssignment::Skew => {
+                let mut start = 0usize;
+                for e in 0..self.edges - 1 {
+                    let share = self.population >> (e + 1);
+                    if device_idx < start + share {
+                        return e;
+                    }
+                    start += share;
+                }
+                self.edges - 1
+            }
+        }
+    }
+}
+
 /// The scheduler-visible view of one device when selecting for
 /// round/version `round` — the single construction site for engine
 /// candidates, so policy-facing fields cannot drift between the barrier
@@ -663,6 +749,8 @@ pub struct Engine<T: CohortTrainer> {
     /// Streaming availability membership (async mode only; the barrier
     /// mode's once-per-round scan stays exact and allocation-free).
     index: Option<AvailabilityIndex>,
+    /// Edge-aggregator tier (`--edges N`, N > 1); `None` = flat.
+    tier: Option<EdgeTier>,
     /// Rounds restored from a checkpoint ([`Engine::resume`]); `run`
     /// prepends them so a resumed report splices seamlessly onto the
     /// uninterrupted trace.
@@ -713,6 +801,13 @@ impl<T: CohortTrainer> Engine<T> {
             cfg.model_bytes as u64,
             group,
         );
+        let tier = (cfg.edges > 1).then(|| {
+            let quorum = match mode {
+                ExecMode::Sync => 0,
+                ExecMode::Async { k_flush } => k_flush.div_ceil(cfg.edges).max(1),
+            };
+            EdgeTier::new(cfg, quorum)
+        });
         Ok(Engine {
             cfg: cfg.clone(),
             policy,
@@ -742,6 +837,7 @@ impl<T: CohortTrainer> Engine<T> {
             events_since_flush: 0,
             rescans: 0,
             index,
+            tier,
             prior_rounds: Vec::new(),
             obs: Arc::new(NullSink),
         })
@@ -1122,12 +1218,48 @@ impl<T: CohortTrainer> Engine<T> {
         } else {
             (full_finish_s, Outcome::Fold)
         };
+        // Two-tier reclassification: a would-be fold whose edge is dead
+        // (or will be by the time the upload lands) has nowhere to land —
+        // the device does its full work and the result is lost, so it
+        // becomes a churn drop at the full finish with full energy. The
+        // dispatch event stays honest: the fate is still known at issue
+        // time, because the failure schedule is part of the model.
+        let (cutoff_s, outcome) = match &self.tier {
+            Some(tier) if outcome == Outcome::Fold => {
+                let e = tier.edge_of(i);
+                let doomed = !tier.alive[e]
+                    || matches!(tier.fail, Some((fe, t)) if fe == e && full_finish_s >= t);
+                if doomed {
+                    (full_finish_s, Outcome::DropChurn)
+                } else {
+                    (cutoff_s, outcome)
+                }
+            }
+            _ => (cutoff_s, outcome),
+        };
         let frac = ((cutoff_s - now) / (full_finish_s - now)).clamp(0.0, 1.0);
         let energy_j = full_energy_j * frac;
         d.last_selected_round = Some(self.version + 1);
         d.times_selected += 1;
         self.in_flight += 1;
         self.bytes_down_acc += self.wire.bytes_down;
+        // Edge downlink: the first member dispatch per model version
+        // pulls the current model cloud→edge once; the edge fans it out
+        // to its shard (the per-device leg is booked above for every
+        // dispatch). Dead edges pull nothing — the cloud serves their
+        // orphaned devices directly at the device-leg cost.
+        if let Some(tier) = &mut self.tier {
+            let e = tier.edge_of(i);
+            if tier.alive[e] && tier.seen_version[e] != self.version {
+                tier.seen_version[e] = self.version;
+                self.bytes_down_acc += tier.leg_bytes;
+                self.obs.emit(&Event::EdgeDispatch {
+                    t_s: now,
+                    edge: e as u64,
+                    bytes_down: tier.leg_bytes,
+                });
+            }
+        }
         self.heap.push(Reverse(Completion {
             resolve_s: if resolve_at_cutoff { cutoff_s } else { full_finish_s },
             device_idx: i,
@@ -1166,17 +1298,45 @@ impl<T: CohortTrainer> Engine<T> {
                 self.slowest_all_s = self.slowest_all_s.max(ev.resolve_s);
             }
         }
+        // Streaming: a pending edge failure applies at the first settle
+        // at or past its time, *before* this event is processed — its
+        // parked folds drop and the run degrades instead of dying. (The
+        // barrier mode applies failures at the round merge instead; see
+        // `sync_edge_merge`.)
+        if let ExecMode::Async { .. } = self.mode {
+            self.apply_edge_fail_async();
+        }
         self.in_flight -= 1;
         self.energy_j += ev.energy_j;
         let class = self.pop.devices[i].device.name;
         match ev.outcome {
             Outcome::Fold => {
                 let staleness = self.version - ev.base_version;
-                self.buffer.push(BufferedFold {
-                    device_idx: i,
-                    staleness,
-                    resolve_s: ev.resolve_s,
-                });
+                // Streaming two-tier: the fold parks at its edge and
+                // only reaches the cloud buffer when the edge's ship
+                // quorum fills. Everywhere else (flat, or the barrier
+                // mode where the merge groups by edge at the flush) it
+                // lands in the cloud buffer directly.
+                let parked_at = match (&mut self.tier, self.mode) {
+                    (Some(tier), ExecMode::Async { .. }) => {
+                        let e = tier.edge_of(i);
+                        debug_assert!(tier.alive[e], "fold settled for a dead edge");
+                        tier.buffers[e].push(EdgeBuffered {
+                            device_idx: i,
+                            base_version: ev.base_version,
+                            resolve_s: ev.resolve_s,
+                        });
+                        Some(e)
+                    }
+                    _ => {
+                        self.buffer.push(BufferedFold {
+                            device_idx: i,
+                            staleness,
+                            resolve_s: ev.resolve_s,
+                        });
+                        None
+                    }
+                };
                 self.bytes_up_acc += self.wire.bytes_up;
                 self.obs.emit(&Event::Fold {
                     t_s: ev.resolve_s,
@@ -1186,6 +1346,9 @@ impl<T: CohortTrainer> Engine<T> {
                     energy_j: ev.energy_j,
                     bytes_up: self.wire.bytes_up,
                 });
+                if let Some(e) = parked_at {
+                    self.ship_edge_if_quorum(e);
+                }
             }
             Outcome::DropChurn => {
                 self.dropped_churn += 1;
@@ -1208,6 +1371,171 @@ impl<T: CohortTrainer> Engine<T> {
                 });
             }
         }
+    }
+
+    /// The full modeled round energy for one device — bit-identical to
+    /// the `SelectionContext::modeled_round_energy_j` a fold was charged
+    /// at settle (a fold's proration factor is exactly 1.0), so an edge
+    /// failure can move already-charged energy into the wasted book
+    /// without storing per-fold energy in the buffers.
+    fn full_fold_energy_j(&self, device_idx: usize) -> f64 {
+        let d = self.pop.devices[device_idx].device;
+        let link = self
+            .cfg
+            .cost
+            .comm(d, (self.wire.bytes_down + self.wire.bytes_up) as usize);
+        self.cfg.cost.compute(d, self.steps).energy_j + link.energy_j
+    }
+
+    /// Streaming-mode edge failure: once virtual time reaches the
+    /// injected `--edge-fail` instant, the edge's parked folds are lost
+    /// (counted as churn drops, their settle energy moved to the wasted
+    /// book) and the edge stays dead for the rest of the run — its
+    /// devices keep being dispatched, but their uploads have nowhere to
+    /// land (reclassified at issue time; see `push_dispatch`).
+    fn apply_edge_fail_async(&mut self) {
+        let Some(tier) = &mut self.tier else { return };
+        let Some((e, t_fail)) = tier.fail else { return };
+        if self.now_s < t_fail {
+            return;
+        }
+        tier.fail = None;
+        tier.alive[e] = false;
+        let entries = std::mem::take(&mut tier.buffers[e]);
+        let dropped = entries.len() as u64;
+        let mut wasted = 0.0f64;
+        for b in &entries {
+            wasted += self.full_fold_energy_j(b.device_idx);
+        }
+        self.dropped_churn += dropped as usize;
+        self.wasted_j += wasted;
+        self.obs.emit(&Event::EdgeFail {
+            t_s: self.now_s,
+            edge: e as u64,
+            dropped,
+            wasted_j: wasted,
+        });
+    }
+
+    /// Streaming-mode edge ship: when edge `e`'s parked folds reach the
+    /// ship quorum, the edge folds them locally and ships one dense
+    /// model upstream — the parked entries enter the cloud buffer in
+    /// arrival order with their staleness computed *now* (they age
+    /// across cloud flushes), and the edge→cloud leg books its bytes.
+    fn ship_edge_if_quorum(&mut self, e: usize) {
+        let tier = self.tier.as_mut().expect("tier ship without a tier");
+        if tier.buffers[e].len() < tier.quorum {
+            return;
+        }
+        let entries = std::mem::take(&mut tier.buffers[e]);
+        let shipped = entries.len() as u64;
+        let mut staleness_sum = 0u64;
+        for b in entries {
+            let staleness = self.version - b.base_version;
+            staleness_sum += staleness;
+            self.buffer.push(BufferedFold {
+                device_idx: b.device_idx,
+                staleness,
+                resolve_s: b.resolve_s,
+            });
+        }
+        self.bytes_up_acc += tier.leg_bytes;
+        self.obs.emit(&Event::EdgeFlush {
+            t_s: self.now_s,
+            edge: e as u64,
+            folded: shipped,
+            staleness_sum,
+            bytes_up: tier.leg_bytes,
+        });
+    }
+
+    /// Barrier-mode edge merge, run at the top of a flush when the tier
+    /// is active. Returns the precomputed round end so the flush's clock
+    /// arithmetic matches the flat engine exactly.
+    ///
+    /// Order of operations (normative — `TOPOLOGY.md`):
+    /// 1. The barrier close is computed from the *pre-failure* books —
+    ///    an edge dying mid-round never moves the barrier; the cloud
+    ///    discovers the missing shard at the merge.
+    /// 2. A pending `--edge-fail` with `t ≤ round_end` applies: the dead
+    ///    edge's buffered folds drop (churn; their settle energy moves
+    ///    to the wasted book in arrival order) and the edge stays dead.
+    /// 3. The surviving buffer is stably regrouped by edge id — the
+    ///    deterministic merge order: edges fold in ascending id order,
+    ///    arrival order within an edge.
+    /// 4. Each contributing edge ships one dense model upstream
+    ///    (edge→cloud bytes + an `EdgeFlush` event at the barrier
+    ///    close).
+    fn sync_edge_merge(&mut self) -> f64 {
+        let drops = self.dropped_deadline + self.dropped_churn;
+        let slowest_ok = self
+            .buffer
+            .iter()
+            .map(|f| f.resolve_s)
+            .fold(self.round_now_s, f64::max);
+        let round_end = match self.cfg.deadline_s {
+            Some(tau) if drops > 0 => self.round_now_s + tau,
+            Some(_) => slowest_ok,
+            None => self.slowest_all_s,
+        };
+        {
+            let tier = self.tier.as_mut().expect("sync merge without a tier");
+            if let Some((e, t_fail)) = tier.fail {
+                if t_fail <= round_end {
+                    tier.fail = None;
+                    tier.alive[e] = false;
+                    let mut dropped = 0u64;
+                    let mut wasted = 0.0f64;
+                    let mut survivors = Vec::with_capacity(self.buffer.len());
+                    for f in std::mem::take(&mut self.buffer) {
+                        if tier.edge_of(f.device_idx) == e {
+                            dropped += 1;
+                            let d = self.pop.devices[f.device_idx].device;
+                            let link = self
+                                .cfg
+                                .cost
+                                .comm(d, (self.wire.bytes_down + self.wire.bytes_up) as usize);
+                            wasted += self.cfg.cost.compute(d, self.steps).energy_j + link.energy_j;
+                        } else {
+                            survivors.push(f);
+                        }
+                    }
+                    self.buffer = survivors;
+                    self.dropped_churn += dropped as usize;
+                    self.wasted_j += wasted;
+                    self.obs.emit(&Event::EdgeFail {
+                        t_s: round_end,
+                        edge: e as u64,
+                        dropped,
+                        wasted_j: wasted,
+                    });
+                }
+            }
+        }
+        let tier = self.tier.as_ref().expect("sync merge without a tier");
+        self.buffer.sort_by_key(|f| tier.edge_of(f.device_idx));
+        let mut i = 0;
+        while i < self.buffer.len() {
+            let e = tier.edge_of(self.buffer[i].device_idx);
+            let mut folded = 0u64;
+            let mut staleness_sum = 0u64;
+            let mut j = i;
+            while j < self.buffer.len() && tier.edge_of(self.buffer[j].device_idx) == e {
+                folded += 1;
+                staleness_sum += self.buffer[j].staleness;
+                j += 1;
+            }
+            self.bytes_up_acc += tier.leg_bytes;
+            self.obs.emit(&Event::EdgeFlush {
+                t_s: round_end,
+                edge: e as u64,
+                folded,
+                staleness_sum,
+                bytes_up: tier.leg_bytes,
+            });
+            i = j;
+        }
+        round_end
     }
 
     /// Per-fold aggregation weights for the buffered results, by
@@ -1271,6 +1599,16 @@ impl<T: CohortTrainer> Engine<T> {
     /// books, and emit the round record. Shared by both modes — only the
     /// clock arithmetic differs (barrier close vs. flush-to-flush).
     fn flush(&mut self) -> Result<PopulationRound> {
+        // Barrier-mode two-tier merge: apply any pending edge failure,
+        // regroup the buffer by edge id, and book the edge→cloud ships —
+        // all before the fold weights are computed, so the trainer sees
+        // the deterministic merge order. The round end is precomputed
+        // from the pre-merge books (the flat formula below would see
+        // post-failure drop counts and move the barrier).
+        let merged_round_end = match (&self.tier, self.mode) {
+            (Some(_), ExecMode::Sync) => Some(self.sync_edge_merge()),
+            _ => None,
+        };
         self.version += 1;
         let version = self.version;
         let folds = self.fold_weights();
@@ -1303,16 +1641,21 @@ impl<T: CohortTrainer> Engine<T> {
                 // The round closes at τ if anyone is missing, else at
                 // the slowest reporter (no deadline: the server waits
                 // out every straggler, folded or doomed).
-                let drops = self.dropped_deadline + self.dropped_churn;
-                let slowest_ok = self
-                    .buffer
-                    .iter()
-                    .map(|f| f.resolve_s)
-                    .fold(self.round_now_s, f64::max);
-                let round_end = match self.cfg.deadline_s {
-                    Some(tau) if drops > 0 => self.round_now_s + tau,
-                    Some(_) => slowest_ok,
-                    None => self.slowest_all_s,
+                let round_end = match merged_round_end {
+                    Some(end) => end,
+                    None => {
+                        let drops = self.dropped_deadline + self.dropped_churn;
+                        let slowest_ok = self
+                            .buffer
+                            .iter()
+                            .map(|f| f.resolve_s)
+                            .fold(self.round_now_s, f64::max);
+                        match self.cfg.deadline_s {
+                            Some(tau) if drops > 0 => self.round_now_s + tau,
+                            Some(_) => slowest_ok,
+                            None => self.slowest_all_s,
+                        }
+                    }
                 };
                 // idle-while-waiting energy for clients that reported
                 // early (a zero wait charges exactly 0 J — adding it is
@@ -1529,6 +1872,23 @@ impl<T: CohortTrainer> Engine<T> {
             index: self.index.as_ref().map(|ix| ix.export_state()),
             rounds: rounds.to_vec(),
             shards: Some(synthesis_shard_seeds(&self.cfg, self.cfg.workers)),
+            edge: self.tier.as_ref().map(|t| EdgeTierState {
+                edges: t.edges as u64,
+                alive: t.alive.clone(),
+                buffers: t
+                    .buffers
+                    .iter()
+                    .map(|buf| {
+                        buf.iter()
+                            .map(|f| EdgeParkedFold {
+                                device: f.device_idx as u64,
+                                base_version: f.base_version,
+                                resolve_s: f.resolve_s,
+                            })
+                            .collect()
+                    })
+                    .collect(),
+            }),
         })
     }
 
@@ -1628,6 +1988,54 @@ impl<T: CohortTrainer> Engine<T> {
             }));
         }
         e.in_flight = e.heap.len();
+        match (&mut e.tier, &ckpt.edge) {
+            (Some(tier), Some(state)) => {
+                if state.edges != tier.edges as u64
+                    || state.alive.len() != tier.edges
+                    || state.buffers.len() != tier.edges
+                {
+                    return Err(Error::Persist(format!(
+                        "checkpoint edge tier has {} edges, the config says {}",
+                        state.edges, tier.edges
+                    )));
+                }
+                tier.alive = state.alive.clone();
+                for (buf, parked) in tier.buffers.iter_mut().zip(&state.buffers) {
+                    buf.clear();
+                    for f in parked {
+                        if f.device as usize >= e.pop.devices.len() {
+                            return Err(Error::Persist(format!(
+                                "edge-parked fold for device {} out of range",
+                                f.device
+                            )));
+                        }
+                        buf.push(EdgeBuffered {
+                            device_idx: f.device as usize,
+                            base_version: f.base_version,
+                            resolve_s: f.resolve_s,
+                        });
+                    }
+                }
+                // A dead edge means the configured failure already
+                // applied; don't re-apply it on resume.
+                if let Some((fe, _)) = tier.fail {
+                    if !tier.alive[fe] {
+                        tier.fail = None;
+                    }
+                }
+            }
+            (None, None) => {}
+            (Some(_), None) => {
+                return Err(Error::Persist(
+                    "config has an edge tier but the checkpoint carries no EDGE section".into(),
+                ))
+            }
+            (None, Some(_)) => {
+                return Err(Error::Persist(
+                    "checkpoint carries edge-tier state but the config is flat (--edges 1)".into(),
+                ))
+            }
+        }
         e.prior_rounds = ckpt.rounds.clone();
         Ok(e)
     }

@@ -1,0 +1,333 @@
+//! Live-path edge aggregator (`sched/TOPOLOGY.md`, live tier).
+//!
+//! An [`EdgeNode`] is both sides of the two-tier topology at once: it
+//! *serves* its member devices exactly like the cloud does (each member
+//! is a [`ClientProxy`] over a real [`crate::transport::Connection`]),
+//! and it *registers upstream as an ordinary client* — it implements
+//! [`Client`], so the cloud server needs no new message kinds, no new
+//! registration flow, and no topology awareness at all. One `FitIns`
+//! from the cloud fans out to every member, the member updates fold
+//! into a single example-weighted average locally, and one
+//! pre-aggregated `FitRes` ships upstream. That is the tentpole's
+//! bytes-on-wire claim made literal: the cloud↔edge leg carries one
+//! dense model per direction regardless of the member count (see
+//! [`crate::strategy::wire::WireModel::edge_leg`]).
+//!
+//! Failure semantics mirror the engine's `--edge-fail` model: a member
+//! that errors, times out, or answers with a non-OK status simply drops
+//! out of the fold (the round degrades); only an edge with *zero*
+//! surviving members errors upstream — and even that surfaces as a
+//! `FitRes` with a `FitError` status through the client serve loop, so
+//! the federation keeps running without the dead shard.
+
+use std::time::Duration;
+
+use crate::client::Client;
+use crate::error::{Error, Result};
+use crate::proto::{
+    EvaluateIns, EvaluateRes, FitIns, FitRes, GetParametersIns, GetParametersRes, Parameters,
+    Status,
+};
+use crate::server::ClientProxy;
+use crate::strategy::aggregate::Aggregator;
+
+/// One edge aggregator: downstream member proxies, upstream `Client`.
+pub struct EdgeNode {
+    members: Vec<ClientProxy>,
+    /// Per-member deadline for one fit/evaluate exchange.
+    timeout: Duration,
+    agg: Aggregator,
+}
+
+impl EdgeNode {
+    /// Build an edge over already-registered member connections.
+    pub fn new(members: Vec<ClientProxy>, timeout: Duration) -> EdgeNode {
+        EdgeNode { members, timeout, agg: Aggregator::Rust }
+    }
+
+    /// Number of member devices behind this edge.
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Total examples across members — the upstream fold weight this
+    /// edge reports, so cloud-side FedAvg over edges equals flat FedAvg
+    /// over the union of devices (weighted means compose).
+    pub fn num_examples(&self) -> u64 {
+        self.members.iter().map(|m| m.handle.num_examples).sum()
+    }
+
+    /// Tell every member the experiment is over (best effort).
+    pub fn shutdown(&self) {
+        for m in &self.members {
+            let _ = m.reconnect(0);
+        }
+    }
+}
+
+impl Client for EdgeNode {
+    fn get_parameters(&mut self, ins: GetParametersIns) -> Result<GetParametersRes> {
+        // An edge holds no model of its own: the first member that
+        // answers OK speaks for the shard (all members were initialized
+        // from the same broadcast).
+        let mut last = Error::Client("edge has no members".into());
+        for m in &self.members {
+            match m.get_parameters(ins.clone(), self.timeout) {
+                Ok(res) if res.status.is_ok() => return Ok(res),
+                Ok(res) => last = Error::Client(res.status.message),
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    fn fit(&mut self, ins: FitIns) -> Result<FitRes> {
+        // Fan the same FitIns out to every member, fold the survivors.
+        let mut updates: Vec<(Vec<f32>, u64)> = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            let res = match m.fit(
+                FitIns { parameters: ins.parameters.clone(), config: ins.config.clone() },
+                self.timeout,
+            ) {
+                Ok(res) => res,
+                // Degrade, don't die: a dropped member costs its
+                // contribution, not the edge's round.
+                Err(_) => continue,
+            };
+            if !res.status.is_ok() || res.num_examples == 0 {
+                continue;
+            }
+            updates.push((res.parameters.to_flat()?.to_vec(), res.num_examples));
+        }
+        if updates.is_empty() {
+            return Err(Error::Client("edge: no member survived the fit round".into()));
+        }
+        let inputs: Vec<(&[f32], f64)> =
+            updates.iter().map(|(v, n)| (v.as_slice(), *n as f64)).collect();
+        let folded = self.agg.weighted_average(&inputs)?;
+        let num_examples = updates.iter().map(|(_, n)| n).sum();
+        Ok(FitRes {
+            status: Status::ok(),
+            parameters: Parameters::from_flat(folded),
+            num_examples,
+            metrics: Default::default(),
+        })
+    }
+
+    fn evaluate(&mut self, ins: EvaluateIns) -> Result<EvaluateRes> {
+        // Example-weighted mean loss over the surviving members —
+        // exactly the cloud's own federated-evaluation fold, one tier
+        // down.
+        let mut weighted_loss = 0.0f64;
+        let mut num_examples = 0u64;
+        for m in &self.members {
+            let res = match m.evaluate(
+                EvaluateIns { parameters: ins.parameters.clone(), config: ins.config.clone() },
+                self.timeout,
+            ) {
+                Ok(res) => res,
+                Err(_) => continue,
+            };
+            if !res.status.is_ok() || res.num_examples == 0 || !res.loss.is_finite() {
+                continue;
+            }
+            weighted_loss += res.loss * res.num_examples as f64;
+            num_examples += res.num_examples;
+        }
+        if num_examples == 0 {
+            return Err(Error::Client("edge: no member survived the evaluate round".into()));
+        }
+        Ok(EvaluateRes {
+            status: Status::ok(),
+            loss: weighted_loss / num_examples as f64,
+            num_examples,
+            metrics: Default::default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::app::run_client;
+    use crate::device::profiles;
+    use crate::proto::{ClientInfo, ClientMessage, GetParametersRes, ServerMessage};
+    use crate::strategy::ClientHandle;
+    use crate::transport::{inproc, Connection};
+
+    /// A member device: "trains" by setting every parameter to `value`,
+    /// with `num_examples` as its fold weight.
+    struct MemberClient {
+        value: f32,
+        num_examples: u64,
+    }
+
+    impl Client for MemberClient {
+        fn get_parameters(&mut self, _: GetParametersIns) -> Result<GetParametersRes> {
+            Ok(GetParametersRes {
+                status: Status::ok(),
+                parameters: Parameters::from_flat(vec![self.value; 4]),
+            })
+        }
+        fn fit(&mut self, ins: FitIns) -> Result<FitRes> {
+            let n = ins.parameters.to_flat()?.len();
+            Ok(FitRes {
+                status: Status::ok(),
+                parameters: Parameters::from_flat(vec![self.value; n]),
+                num_examples: self.num_examples,
+                metrics: Default::default(),
+            })
+        }
+        fn evaluate(&mut self, _: EvaluateIns) -> Result<EvaluateRes> {
+            Ok(EvaluateRes {
+                status: Status::ok(),
+                loss: self.value as f64,
+                num_examples: self.num_examples,
+                metrics: Default::default(),
+            })
+        }
+    }
+
+    /// Spawn `specs` member clients over in-proc pairs, return the edge
+    /// plus the serve-thread handles.
+    fn edge_of(
+        specs: &[(f32, u64)],
+    ) -> (EdgeNode, Vec<std::thread::JoinHandle<Result<()>>>) {
+        let mut proxies = Vec::new();
+        let mut handles = Vec::new();
+        for (i, &(value, num_examples)) in specs.iter().enumerate() {
+            let (server_end, client_end) = inproc::pair();
+            handles.push(std::thread::spawn(move || {
+                let mut c = MemberClient { value, num_examples };
+                run_client(
+                    Connection::InProc(client_end),
+                    &mut c,
+                    ClientInfo {
+                        client_id: format!("m{i}"),
+                        device: "pixel4".into(),
+                        os: "linux".into(),
+                        num_examples,
+                    },
+                )
+            }));
+            let mut conn = Connection::InProc(server_end);
+            // consume the member's Register, like a real edge listener
+            assert!(matches!(conn.recv_client_message().unwrap(), ClientMessage::Register(_)));
+            proxies.push(ClientProxy::new(
+                ClientHandle {
+                    id: format!("m{i}"),
+                    device: profiles::by_name("pixel4").unwrap(),
+                    num_examples,
+                },
+                conn,
+            ));
+        }
+        (EdgeNode::new(proxies, Duration::from_secs(2)), handles)
+    }
+
+    #[test]
+    fn edge_fit_folds_members_example_weighted() {
+        // weights 1 and 3 over values 0.0 and 4.0 → (0·1 + 4·3)/4 = 3.0
+        let (mut edge, handles) = edge_of(&[(0.0, 1), (4.0, 3)]);
+        assert_eq!(edge.member_count(), 2);
+        assert_eq!(edge.num_examples(), 4);
+        let res = edge
+            .fit(FitIns {
+                parameters: Parameters::from_flat(vec![9.0, 9.0]),
+                config: Default::default(),
+            })
+            .unwrap();
+        assert_eq!(res.parameters.to_flat().unwrap(), &[3.0, 3.0]);
+        // the upstream fold weight is the member sum: weighted means compose
+        assert_eq!(res.num_examples, 4);
+        let eval = edge
+            .evaluate(EvaluateIns {
+                parameters: Parameters::from_flat(vec![3.0]),
+                config: Default::default(),
+            })
+            .unwrap();
+        assert_eq!(eval.loss, 3.0);
+        edge.shutdown();
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    /// Two edges of two devices each must fold to the same model as one
+    /// flat cohort of all four devices — dyadic values keep the f32/f64
+    /// arithmetic exact, so this is equality, not approximation.
+    #[test]
+    fn two_tier_fold_equals_flat_fold() {
+        let devices = [(1.0f32, 2u64), (2.0, 2), (4.0, 2), (8.0, 2)];
+
+        // flat: one weighted average over all four
+        let flat_updates: Vec<Vec<f32>> =
+            devices.iter().map(|&(v, _)| vec![v; 3]).collect();
+        let flat_inputs: Vec<(&[f32], f64)> = flat_updates
+            .iter()
+            .zip(devices.iter())
+            .map(|(u, &(_, n))| (u.as_slice(), n as f64))
+            .collect();
+        let flat = Aggregator::Rust.weighted_average(&flat_inputs).unwrap();
+
+        // tiered: two edges shard the same devices, the cloud folds the
+        // two pre-aggregated FitRes by their reported num_examples
+        let ins = || FitIns {
+            parameters: Parameters::from_flat(vec![0.0; 3]),
+            config: Default::default(),
+        };
+        let (mut e0, h0) = edge_of(&devices[..2]);
+        let (mut e1, h1) = edge_of(&devices[2..]);
+        let r0 = e0.fit(ins()).unwrap();
+        let r1 = e1.fit(ins()).unwrap();
+        let u0 = r0.parameters.to_flat().unwrap().to_vec();
+        let u1 = r1.parameters.to_flat().unwrap().to_vec();
+        let cloud = Aggregator::Rust
+            .weighted_average(&[
+                (u0.as_slice(), r0.num_examples as f64),
+                (u1.as_slice(), r1.num_examples as f64),
+            ])
+            .unwrap();
+
+        assert_eq!(cloud, flat);
+        e0.shutdown();
+        e1.shutdown();
+        for h in h0.into_iter().chain(h1) {
+            h.join().unwrap().unwrap();
+        }
+    }
+
+    /// A dead member degrades the edge (its weight drops out); a fully
+    /// dead edge errors upstream instead of fabricating a model.
+    #[test]
+    fn edge_degrades_on_member_failure() {
+        let (mut edge, handles) = edge_of(&[(2.0, 1), (6.0, 1)]);
+        // kill member 0 by poisoning its proxy: swap in a dropped conn
+        drop(std::mem::replace(
+            &mut edge.members[0],
+            ClientProxy::new(
+                ClientHandle {
+                    id: "dead".into(),
+                    device: profiles::by_name("pixel4").unwrap(),
+                    num_examples: 1,
+                },
+                Connection::InProc(inproc::pair().0),
+            ),
+        ));
+        let res = edge
+            .fit(FitIns {
+                parameters: Parameters::from_flat(vec![0.0]),
+                config: Default::default(),
+            })
+            .unwrap();
+        // only the surviving member contributes
+        assert_eq!(res.parameters.to_flat().unwrap(), &[6.0]);
+        assert_eq!(res.num_examples, 1);
+        edge.shutdown();
+        // handles[0] serves the *replaced* member conn which we dropped;
+        // it sees a clean in-proc EOF and exits Ok
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+    }
+}

@@ -20,12 +20,14 @@
 
 pub mod async_loop;
 pub mod client_manager;
+pub mod edge;
 pub mod exec;
 pub mod history;
 pub mod proxy;
 
 pub use async_loop::AsyncServer;
 pub use client_manager::ClientManager;
+pub use edge::EdgeNode;
 pub use exec::AsyncStats;
 pub use history::{History, RoundRecord};
 pub use proxy::ClientProxy;

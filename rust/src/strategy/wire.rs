@@ -106,6 +106,17 @@ impl WireModel {
     pub fn round_trip(&self) -> u64 {
         self.bytes_down + self.bytes_up
     }
+
+    /// The cloud↔edge leg of a two-tier topology (`--edges N`): the
+    /// cloud ships the full f32 model to each edge once per version,
+    /// and each edge ships one full f32 pre-aggregated delta upstream
+    /// per merge/quorum ship. Strategy shaping (f16, secagg) applies to
+    /// the *device* leg only — an edge aggregator folds decompressed
+    /// updates and cannot forward masked ones, so its upstream leg is
+    /// always the plain baseline. See `sched/TOPOLOGY.md`.
+    pub fn edge_leg(model_bytes: u64) -> WireModel {
+        WireModel::baseline(model_bytes)
+    }
 }
 
 #[cfg(test)]
@@ -147,6 +158,15 @@ mod tests {
             w8.bytes_down,
             MB + FRAME_PREFIX_BYTES + V2_MSG_OVERHEAD_BYTES + SECAGG_SEED_ENTRY_BYTES + 8 * SECAGG_PEER_ENTRY_BYTES
         );
+    }
+
+    #[test]
+    fn edge_leg_is_strategy_independent() {
+        // The cloud↔edge leg is always the full f32 baseline, even when
+        // the device leg is compressed or masked.
+        assert_eq!(WireModel::edge_leg(MB), WireModel::baseline(MB));
+        let device = WireModel::for_strategy(&SchedStrategyConfig::Compressed, MB, 8);
+        assert!(WireModel::edge_leg(MB).round_trip() > device.round_trip());
     }
 
     #[test]

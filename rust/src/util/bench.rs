@@ -117,11 +117,7 @@ impl Bench {
                 break;
             }
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let median = samples[samples.len() / 2];
-        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
-        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
-        let p95 = samples[p95_idx];
+        let (median, mean, p95) = summarize(&mut samples);
         let stats = Stats {
             name: format!("{}/{}", self.group, name),
             median_ns: median,
@@ -151,6 +147,19 @@ impl Bench {
     pub fn finish(self) -> Vec<Stats> {
         self.results
     }
+}
+
+/// Order statistics over one case's samples: `(median, mean, p95)`.
+/// `total_cmp` keeps the sort total — a NaN sample (a degenerate timer
+/// quotient, or caller-fed data) sorts to the tail instead of
+/// panicking the whole bench run mid-sort, which is what the old
+/// `partial_cmp(..).unwrap()` comparator did.
+fn summarize(samples: &mut [f64]) -> (f64, f64, f64) {
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+    (median, mean, samples[p95_idx])
 }
 
 /// Render bench results as the in-tree JSON baseline format (see
@@ -193,4 +202,32 @@ pub fn results_to_json(group: &str, note: &str, results: &[Stats], test_mode: bo
         ("results".to_string(), Json::Arr(rows)),
     ]))
     .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_orders_samples() {
+        let mut s = vec![3.0, 1.0, 2.0, 5.0, 4.0];
+        let (median, mean, p95) = summarize(&mut s);
+        assert_eq!(median, 3.0);
+        assert_eq!(mean, 3.0);
+        assert_eq!(p95, 5.0);
+    }
+
+    /// Regression: one NaN sample used to panic the whole bench run in
+    /// the `partial_cmp(..).unwrap()` sort comparator. `total_cmp`
+    /// sorts NaN to the tail and the order stats stay finite wherever
+    /// the index lands on a real sample.
+    #[test]
+    fn summarize_survives_nan_samples() {
+        let mut s = vec![2.0, f64::NAN, 1.0, 3.0];
+        let (median, _mean, p95) = summarize(&mut s);
+        assert_eq!(&s[..3], &[1.0, 2.0, 3.0]);
+        assert!(s[3].is_nan());
+        assert_eq!(median, 3.0); // index len/2 = 2 of the sorted tail-NaN array
+        assert!(p95.is_nan()); // the tail index is the NaN itself: visible, not a panic
+    }
 }
